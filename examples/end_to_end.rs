@@ -1,0 +1,157 @@
+//! END-TO-END DRIVER — exercises every layer of the stack on a real
+//! workload, proving they compose (recorded in EXPERIMENTS.md):
+//!
+//!   1. build a transformer *training step* graph (fwd+bwd+Adam) in the
+//!      base dialect and numerically train it with the reference
+//!      interpreter for a few steps (loss curve);
+//!   2. featurize its arguments; score them with the AOT-compiled
+//!      Interaction-Network ranker through PJRT (L2+L1 artifacts built by
+//!      `make artifacts`; falls back to the heuristic ranker when absent);
+//!   3. run MCTS over the top-k worklist, with a memory-pressured TPU-v3;
+//!   4. lower the best solution to SPMD, verify Megatron via collective
+//!      statistics, and report the simulated step time.
+//!
+//!     make artifacts && cargo run --release --offline --example end_to_end
+
+use automap::cost::composite::CostWeights;
+use automap::ir::interp::{eval_all, Tensor};
+use automap::learner::features::featurize;
+use automap::learner::ranker::{top_k_decisions, HeuristicRanker, PjrtRanker, Ranker, TOP_K};
+use automap::models::megatron;
+use automap::models::transformer::{build_transformer, TransformerConfig};
+use automap::partir::mesh::{AxisId, Mesh};
+use automap::partir::program::PartirProgram;
+use automap::search::env::{RewriteEnv, SearchOptions};
+use automap::search::experiment::pressured_device;
+use automap::search::mcts::{search, MctsConfig};
+use automap::sim::device::Device;
+use automap::util::rng::Rng;
+use automap::util::stats::{fmt_bytes, fmt_secs};
+
+fn main() {
+    // ---- 1. model + a short REAL training run (numeric, interpreter) ----
+    let train_cfg = TransformerConfig {
+        layers: 2,
+        d_model: 32,
+        n_heads: 2,
+        d_ff: 128,
+        vocab: 64,
+        seq: 16,
+        batch: 2,
+        training: true,
+    };
+    let tm = build_transformer(&train_cfg);
+    println!(
+        "[1/4] training-step graph: {} args, {} ops — running 5 Adam steps numerically",
+        tm.func.num_args(),
+        tm.func.num_nodes()
+    );
+    let mut rng = Rng::new(123);
+    let mut args: Vec<Tensor> = tm
+        .func
+        .args
+        .iter()
+        .map(|a| {
+            let n = a.ty.num_elements() as usize;
+            match a.name.as_str() {
+                "causal_mask" => {
+                    let s = train_cfg.seq as usize;
+                    let mut d = vec![0.0; s * s];
+                    for i in 0..s {
+                        for j in (i + 1)..s {
+                            d[i * s + j] = -1e9;
+                        }
+                    }
+                    Tensor::new(&a.ty.dims, d)
+                }
+                "tokens" | "targets" => Tensor::new(
+                    &a.ty.dims,
+                    (0..n).map(|_| rng.gen_range(train_cfg.vocab as usize) as f64).collect(),
+                ),
+                _ if a.name.ends_with(".adam_m") || a.name.ends_with(".adam_v") => {
+                    Tensor::new(&a.ty.dims, vec![0.0; n])
+                }
+                _ => Tensor::new(
+                    &a.ty.dims,
+                    (0..n).map(|_| (rng.gen_f64() * 2.0 - 1.0) * 0.05).collect(),
+                ),
+            }
+        })
+        .collect();
+    let mut losses = Vec::new();
+    for step in 0..5 {
+        let vals = eval_all(&tm.func, &args);
+        let loss = vals[tm.loss.index()].data[0];
+        losses.push(loss);
+        println!("      step {step}: loss = {loss:.4}");
+        for (i, &p) in tm.params.iter().enumerate() {
+            args[p.index()] = vals[tm.func.outputs[3 * i].index()].clone();
+            let m_id = tm.func.args.iter().position(|a| {
+                a.name == format!("{}.adam_m", tm.func.args[p.index()].name)
+            });
+            if let Some(mi) = m_id {
+                args[mi] = vals[tm.func.outputs[3 * i + 1].index()].clone();
+                args[mi + 1] = vals[tm.func.outputs[3 * i + 2].index()].clone();
+            }
+        }
+    }
+    assert!(losses.last().unwrap() < losses.first().unwrap(), "loss must decrease");
+    println!("      loss curve OK ({:.4} -> {:.4})", losses[0], losses[4]);
+
+    // ---- 2. featurize + rank through the AOT artifacts -------------------
+    let model = build_transformer(&TransformerConfig::tiny(4));
+    let program = PartirProgram::new(model.func.clone(), Mesh::new(&[("model", 4)]));
+    let graph = featurize(&program.func, &program.mesh);
+    let ranker_path = "artifacts/ranker.hlo.txt";
+    let (worklist, kind) = if std::path::Path::new(ranker_path).exists() {
+        let rt = automap::runtime::pjrt::Runtime::new().expect("pjrt client");
+        let ranker = PjrtRanker::load(&rt, ranker_path).expect("load ranker");
+        let scores = ranker.score(&graph).expect("score");
+        (top_k_decisions(&program.func, &graph, &scores, TOP_K), "learned GNN via PJRT")
+    } else {
+        let ranker = HeuristicRanker { func: &program.func };
+        let scores = ranker.score(&graph).unwrap();
+        (top_k_decisions(&program.func, &graph, &scores, TOP_K), "heuristic (run `make artifacts` for the GNN)")
+    };
+    println!(
+        "[2/4] ranker ({kind}): {} args -> top-{}",
+        program.func.num_args(),
+        worklist.len()
+    );
+
+    // ---- 3. MCTS over the filtered worklist ------------------------------
+    let w = CostWeights::default();
+    let probe = megatron::reference_evaluation(&program, &model, AxisId(0), &Device::tpu_v3(), &w);
+    let device = pressured_device(&probe);
+    let reference = megatron::reference_evaluation(&program, &model, AxisId(0), &device, &w);
+    let env = RewriteEnv::new(&program, device, w, SearchOptions::default(), &worklist);
+    let t0 = std::time::Instant::now();
+    let budget = 1500;
+    let result = search(&env, budget, 2024, MctsConfig::default());
+    println!(
+        "[3/4] MCTS: {budget} episodes in {:.2}s (best at {})",
+        t0.elapsed().as_secs_f64(),
+        result.episodes_to_best
+    );
+
+    // ---- 4. SPMD + verdict + simulated step time --------------------------
+    let verdict = megatron::check(&result.best_eval, &reference);
+    println!(
+        "[4/4] result: peak {} (fits={}), {} AR + {} AG, sim step {} \
+         (megatron ref {}) | megatron={} near={}",
+        fmt_bytes(result.best_eval.memory.peak_bytes as f64),
+        result.best_eval.fits_memory,
+        result.best_eval.collectives.all_reduce_count,
+        result.best_eval.collectives.all_gather_count,
+        fmt_secs(result.best_eval.runtime.total_seconds()),
+        fmt_secs(reference.runtime.total_seconds()),
+        verdict.is_megatron,
+        verdict.near_megatron
+    );
+    assert!(result.best_eval.fits_memory, "end-to-end must fit device memory");
+    assert!(
+        verdict.is_megatron || verdict.near_megatron,
+        "end-to-end should land (near-)Megatron"
+    );
+    println!("END-TO-END OK");
+}

@@ -1,0 +1,71 @@
+//! Discover Megatron sharding on a transformer training step with MCTS,
+//! and verify it with the collective-statistics detector (paper §3).
+//!
+//!     cargo run --release --offline --example transformer_megatron -- [layers] [budget]
+
+use automap::cost::composite::CostWeights;
+use automap::models::megatron;
+use automap::models::transformer::{build_transformer, TransformerConfig};
+use automap::partir::mesh::{AxisId, Mesh};
+use automap::partir::program::PartirProgram;
+use automap::search::env::{RewriteEnv, SearchOptions};
+use automap::search::experiment::pressured_device;
+use automap::search::mcts::{search, MctsConfig};
+use automap::sim::device::Device;
+use automap::util::stats::{fmt_bytes, fmt_secs};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let layers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let budget: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2000);
+
+    let model = build_transformer(&TransformerConfig::tiny(layers));
+    println!(
+        "transformer update fn: {} layers, {} args, {} ops",
+        layers,
+        model.func.num_args(),
+        model.func.num_nodes()
+    );
+    let program = PartirProgram::new(model.func.clone(), Mesh::new(&[("model", 4)]));
+    let w = CostWeights::default();
+
+    // Expert reference (Megatron) and a memory-pressured TPU-v3.
+    let probe = megatron::reference_evaluation(&program, &model, AxisId(0), &Device::tpu_v3(), &w);
+    let device = pressured_device(&probe);
+    let reference = megatron::reference_evaluation(&program, &model, AxisId(0), &device, &w);
+    println!(
+        "device HBM: {} | megatron peak {} / {} all-reduces / sim {}",
+        fmt_bytes(device.hbm_bytes as f64),
+        fmt_bytes(reference.memory.peak_bytes as f64),
+        reference.collectives.all_reduce_count,
+        fmt_secs(reference.runtime.total_seconds())
+    );
+
+    // MCTS search.
+    let worklist = RewriteEnv::default_worklist(&program);
+    let env = RewriteEnv::new(&program, device, w, SearchOptions::default(), &worklist);
+    let t0 = std::time::Instant::now();
+    let result = search(&env, budget, 42, MctsConfig::default());
+    let verdict = megatron::check(&result.best_eval, &reference);
+
+    println!(
+        "search: {budget} episodes in {:.2}s, best found at episode {}",
+        t0.elapsed().as_secs_f64(),
+        result.episodes_to_best
+    );
+    println!(
+        "found: peak {} | {} all-reduces + {} all-gathers ({}) | sim {}",
+        fmt_bytes(result.best_eval.memory.peak_bytes as f64),
+        result.best_eval.collectives.all_reduce_count,
+        result.best_eval.collectives.all_gather_count,
+        fmt_bytes(result.best_eval.collectives.total_bytes() as f64),
+        fmt_secs(result.best_eval.runtime.total_seconds())
+    );
+    println!(
+        "verdict: megatron={} near={} redundant_collectives={}",
+        verdict.is_megatron, verdict.near_megatron, verdict.redundant_collectives
+    );
+    for a in &result.best_state.actions {
+        println!("  decision: {}", a.describe(&program.func, &program.mesh));
+    }
+}

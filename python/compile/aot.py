@@ -1,0 +1,126 @@
+"""AOT compile path: train (or load) the ranker, bake the weights as
+constants, and lower the whole model — Pallas kernels included — to HLO
+TEXT for the rust PJRT runtime.
+
+Emit HLO text, NOT `.serialize()`: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and gen_hlo.py there).
+
+Usage (normally via `make artifacts`):
+    python -m compile.aot --out ../artifacts/ranker.hlo.txt \
+        --dataset ../artifacts/dataset.json [--steps 300]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_ranker(params):
+    """Close over trained params and lower the ranker to HLO text."""
+
+    def fn(nodes, node_mask, senders, receivers, edge_mask):
+        return (M.ranker_apply(params, nodes, node_mask, senders, receivers, edge_mask),)
+
+    specs = (
+        jax.ShapeDtypeStruct((M.MAX_NODES, M.NODE_FEATURES), jnp.float32),
+        jax.ShapeDtypeStruct((M.MAX_NODES,), jnp.float32),
+        jax.ShapeDtypeStruct((M.MAX_EDGES,), jnp.int32),
+        jax.ShapeDtypeStruct((M.MAX_EDGES,), jnp.int32),
+        jax.ShapeDtypeStruct((M.MAX_EDGES,), jnp.float32),
+    )
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/ranker.hlo.txt")
+    ap.add_argument("--dataset", default="../artifacts/dataset.json")
+    ap.add_argument("--weights", default="../artifacts/ranker_weights.npz")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--retrain", action="store_true")
+    args = ap.parse_args()
+
+    recall = None
+    if os.path.exists(args.weights) and not args.retrain:
+        print(f"loading weights from {args.weights}")
+        params = T.load_params(args.weights)
+    elif os.path.exists(args.dataset):
+        print(f"training ranker on {args.dataset}")
+        params, _, recall = T.train(args.dataset, steps=args.steps, seed=args.seed)
+        T.save_params(params, args.weights)
+    else:
+        print(
+            f"WARNING: no dataset at {args.dataset} — emitting an UNTRAINED "
+            "ranker (run `automap gen-dataset` first for the learned filter)"
+        )
+        params = M.init_params(args.seed)
+
+    hlo = lower_ranker(params)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(hlo)
+    print(f"wrote {len(hlo)} chars of HLO to {args.out}")
+
+    # Numeric cross-check data for the rust side (tests/integration).
+    inputs = M.example_inputs(seed=1)
+    expected = np.asarray(M.ranker_apply(params, *inputs))
+    meta = {
+        "node_features": M.NODE_FEATURES,
+        "max_nodes": M.MAX_NODES,
+        "max_edges": M.MAX_EDGES,
+        "hidden": M.HIDDEN,
+        "rounds": M.ROUNDS,
+        "example_seed": 1,
+        "example_n_real": 37,
+        "example_e_real": 64,
+        "expected_scores_head": [float(x) for x in expected[:8]],
+        "trained": os.path.exists(args.dataset) or os.path.exists(args.weights),
+        "topk_recall": recall,
+    }
+    meta_path = os.path.join(os.path.dirname(args.out) or ".", "ranker_meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+
+    # Also dump the example input tensors so rust can reproduce them
+    # without a jax PRNG implementation.
+    ex_path = os.path.join(os.path.dirname(args.out) or ".", "ranker_example.json")
+    nodes, node_mask, senders, receivers, edge_mask = inputs
+    with open(ex_path, "w") as f:
+        json.dump(
+            {
+                "nodes": np.asarray(nodes).ravel().tolist(),
+                "node_mask": np.asarray(node_mask).tolist(),
+                "senders": np.asarray(senders).tolist(),
+                "receivers": np.asarray(receivers).tolist(),
+                "edge_mask": np.asarray(edge_mask).tolist(),
+                "expected_scores": expected.tolist(),
+            },
+            f,
+        )
+    print(f"wrote {ex_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: fused dense layer  y = act(x @ w + b).
+
+TPU mapping (DESIGN.md §6 Hardware adaptation):
+  * grid over row blocks of x; each step holds one [BM, K] x-tile, the
+    full [K, N] weight panel, and the [BM, N] output tile in VMEM —
+    sized so BM=128 keeps the working set well under the ~16 MB VMEM
+    budget for the ranker's K,N <= 2048.
+  * the matmul maps onto the MXU systolic array; bias add + GELU run in
+    the epilogue on the VPU so the activation never round-trips HBM
+    (this fusion is the point of the kernel).
+
+`interpret=True` everywhere in this repo: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the rust
+runtime executes (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activation == "gelu":
+        y = ref.gelu(y)
+    o_ref[...] = y
+
+
+def _pick_block(m, target=128):
+    """Largest divisor of m that is <= target (rows per grid step)."""
+    bm = min(m, target)
+    while m % bm != 0:
+        bm -= 1
+    return bm
+
+
+def _pallas_fused_linear(x, w, b, activation):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm = _pick_block(m)
+    return pl.pallas_call(
+        functools.partial(_kernel, activation=activation),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+# Pallas kernels are forward-only; build-time training differentiates
+# through the ranker, so the backward pass is defined against the
+# (numerically identical) pure-jnp reference.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, activation="gelu"):
+    """y = act(x @ w + b) as a Pallas kernel. x: [M,K], w: [K,N], b: [N]."""
+    return _pallas_fused_linear(x, w, b, activation)
+
+
+def _fl_fwd(x, w, b, activation):
+    return _pallas_fused_linear(x, w, b, activation), (x, w, b)
+
+
+def _fl_bwd(activation, res, g):
+    x, w, b = res
+    _, vjp = jax.vjp(lambda x_, w_, b_: ref.fused_linear_ref(x_, w_, b_, activation), x, w, b)
+    return vjp(g)
+
+
+fused_linear.defvjp(_fl_fwd, _fl_bwd)
+
+
+def vmem_bytes(m, k, n, target=128):
+    """Estimated per-step VMEM footprint (f32), for DESIGN/EXPERIMENTS."""
+    bm = _pick_block(m, target)
+    return 4 * (bm * k + k * n + n + bm * n)

@@ -1,0 +1,34 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package must match its reference here to within
+float32 tolerance; `python/tests/test_kernels.py` sweeps shapes and
+seeds with hypothesis to enforce it.
+"""
+
+import jax.numpy as jnp
+
+
+def gelu(x):
+    """Tanh-approximation GELU (matches the rust IR builder's gelu)."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def fused_linear_ref(x, w, b, activation="gelu"):
+    """y = act(x @ w + b).
+
+    x: [M, K], w: [K, N], b: [N] -> [M, N]
+    """
+    y = x @ w + b[None, :]
+    if activation == "gelu":
+        y = gelu(y)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation}")
+    return y
+
+
+def segment_sum_ref(data, ids, num_segments):
+    """Scatter-add rows of data into segments.
+
+    data: [E, H], ids: int32 [E] -> [num_segments, H]
+    """
+    return jnp.zeros((num_segments, data.shape[1]), data.dtype).at[ids].add(data)

@@ -1,0 +1,87 @@
+"""L2: the learned node ranker — an Interaction-Network-style GNN
+(Battaglia et al. 2016; the paper §3 uses an Interaction Network with
+Jraph) over the featurized program graph produced by
+`rust/src/learner/features.rs`.
+
+Inputs (shapes MUST match the rust featurizer — see `ranker_meta.json`):
+    nodes:      f32 [MAX_NODES, NODE_FEATURES]
+    node_mask:  f32 [MAX_NODES]
+    senders:    i32 [MAX_EDGES]
+    receivers:  i32 [MAX_EDGES]
+    edge_mask:  f32 [MAX_EDGES]
+Output:
+    scores:     f32 [MAX_NODES]   (masked slots get -1e9)
+
+The dense layers and the edge->node aggregation are the L1 Pallas
+kernels (`kernels/fused_linear.py`, `kernels/segment_sum.py`), so the
+whole ranker lowers into one HLO module for the rust runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_linear import fused_linear
+from .kernels.segment_sum import segment_sum
+
+# ---- constants shared with rust/src/learner/features.rs ----
+NODE_FEATURES = 40
+MAX_NODES = 256
+MAX_EDGES = 2048
+# Must equal OpKind::NUM_KINDS; checked in tests.
+NUM_OP_KINDS = 26
+
+HIDDEN = 64
+ROUNDS = 2
+
+
+def init_params(seed: int = 0):
+    """Initialise ranker parameters (dict of f32 arrays)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 8)
+
+    def dense(k, fan_in, fan_out):
+        scale = (2.0 / fan_in) ** 0.5
+        return jax.random.normal(k, (fan_in, fan_out), jnp.float32) * scale
+
+    params = {
+        "w_embed": dense(ks[0], NODE_FEATURES, HIDDEN),
+        "b_embed": jnp.zeros((HIDDEN,), jnp.float32),
+        "w_out": dense(ks[7], HIDDEN, 1),
+        "b_out": jnp.zeros((1,), jnp.float32),
+    }
+    for r in range(ROUNDS):
+        params[f"w_msg_{r}"] = dense(ks[1 + r], HIDDEN, HIDDEN)
+        params[f"b_msg_{r}"] = jnp.zeros((HIDDEN,), jnp.float32)
+        params[f"w_node_{r}"] = dense(ks[4 + r], HIDDEN, HIDDEN)
+        params[f"b_node_{r}"] = jnp.zeros((HIDDEN,), jnp.float32)
+    return params
+
+
+def ranker_apply(params, nodes, node_mask, senders, receivers, edge_mask):
+    """Score every node slot; see module docstring for shapes."""
+    emb = fused_linear(nodes, params["w_embed"], params["b_embed"], "gelu")
+    emb = emb * node_mask[:, None]
+    for r in range(ROUNDS):
+        sent = jnp.take(emb, senders, axis=0)  # [E,H]
+        recv = jnp.take(emb, receivers, axis=0)
+        msg_in = (sent + recv) * edge_mask[:, None]
+        msg = fused_linear(msg_in, params[f"w_msg_{r}"], params[f"b_msg_{r}"], "gelu")
+        msg = msg * edge_mask[:, None]
+        agg = segment_sum(msg, receivers, MAX_NODES)  # [N,H]
+        upd = fused_linear(emb + agg, params[f"w_node_{r}"], params[f"b_node_{r}"], "gelu")
+        emb = (emb + upd) * node_mask[:, None]
+    logits = fused_linear(emb, params["w_out"], params["b_out"], "none")[:, 0]
+    return jnp.where(node_mask > 0, logits, -1e9)
+
+
+def example_inputs(seed: int = 0, n_real: int = 37, e_real: int = 64):
+    """A deterministic example input (used by AOT lowering + smoke tests)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    nodes = jax.random.uniform(k1, (MAX_NODES, NODE_FEATURES), jnp.float32)
+    node_mask = (jnp.arange(MAX_NODES) < n_real).astype(jnp.float32)
+    senders = jax.random.randint(k2, (MAX_EDGES,), 0, n_real).astype(jnp.int32)
+    receivers = jax.random.randint(k3, (MAX_EDGES,), 0, n_real).astype(jnp.int32)
+    edge_mask = (jnp.arange(MAX_EDGES) < e_real).astype(jnp.float32)
+    nodes = nodes * node_mask[:, None]
+    return nodes, node_mask, senders, receivers, edge_mask

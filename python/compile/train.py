@@ -1,0 +1,130 @@
+"""Build-time training of the ranker (paper §3: trained to imitate the
+highest-scoring strategy over a corpus of transformer variants).
+
+Consumes `artifacts/dataset.json` produced by `automap gen-dataset`
+(the rust cost model + greedy exhaustive strategy labeller). Loss is
+masked binary cross-entropy per node; optimiser is a hand-rolled Adam
+(optax is not installed in this image — DESIGN.md §3).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import MAX_EDGES, MAX_NODES, NODE_FEATURES, init_params, ranker_apply
+
+
+def load_dataset(path):
+    """Load the rust-generated dataset into stacked numpy arrays."""
+    with open(path) as f:
+        d = json.load(f)
+    assert d["node_features"] == NODE_FEATURES, "featurizer out of sync"
+    assert d["max_nodes"] == MAX_NODES and d["max_edges"] == MAX_EDGES
+    samples = d["samples"]
+
+    def stack(key, dtype, shape):
+        return np.asarray(
+            [np.asarray(s[key], dtype=dtype).reshape(shape) for s in samples]
+        )
+
+    return {
+        "nodes": stack("nodes", np.float32, (MAX_NODES, NODE_FEATURES)),
+        "node_mask": stack("node_mask", np.float32, (MAX_NODES,)),
+        "senders": stack("senders", np.int32, (MAX_EDGES,)),
+        "receivers": stack("receivers", np.int32, (MAX_EDGES,)),
+        "edge_mask": stack("edge_mask", np.float32, (MAX_EDGES,)),
+        "labels": stack("labels", np.float32, (MAX_NODES,)),
+    }
+
+
+def bce_loss(params, batch):
+    """Masked binary cross-entropy over node slots."""
+    def one(nodes, node_mask, senders, receivers, edge_mask, labels):
+        logits = ranker_apply(params, nodes, node_mask, senders, receivers, edge_mask)
+        z = jnp.clip(logits, -30.0, 30.0)
+        per = jnp.maximum(z, 0.0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z)))
+        return jnp.sum(per * node_mask) / jnp.maximum(jnp.sum(node_mask), 1.0)
+
+    losses = jax.vmap(one)(
+        batch["nodes"],
+        batch["node_mask"],
+        batch["senders"],
+        batch["receivers"],
+        batch["edge_mask"],
+        batch["labels"],
+    )
+    return jnp.mean(losses)
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=3e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), m)
+    vhat = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def topk_recall(params, data, k=25):
+    """Fraction of positive labels captured in the top-k scores (the
+    quantity that matters: does the filter keep the Megatron args?)."""
+    hits, total = 0.0, 0.0
+    for i in range(data["nodes"].shape[0]):
+        scores = np.asarray(
+            ranker_apply(
+                params,
+                data["nodes"][i],
+                data["node_mask"][i],
+                data["senders"][i],
+                data["receivers"][i],
+                data["edge_mask"][i],
+            )
+        )
+        top = set(np.argsort(-scores)[:k].tolist())
+        pos = set(np.nonzero(data["labels"][i] > 0)[0].tolist())
+        if pos:
+            hits += len(pos & top)
+            total += len(pos)
+    return hits / max(total, 1.0)
+
+
+def train(dataset_path, steps=300, batch_size=8, seed=0, lr=3e-3, log_every=50):
+    data = load_dataset(dataset_path)
+    n = data["nodes"].shape[0]
+    params = init_params(seed)
+    state = adam_init(params)
+    loss_grad = jax.jit(jax.value_and_grad(bce_loss))
+    rng = np.random.default_rng(seed)
+    history = []
+    for step in range(steps):
+        idx = rng.integers(0, n, size=min(batch_size, n))
+        batch = {k: v[idx] for k, v in data.items()}
+        loss, grads = loss_grad(params, batch)
+        params, state = adam_step(params, grads, state, lr=lr)
+        history.append(float(loss))
+        if log_every and step % log_every == 0:
+            print(f"train step {step}: loss={float(loss):.4f}")
+    recall = topk_recall(params, data)
+    print(f"final loss={history[-1]:.4f} top-25 recall={recall:.3f}")
+    return params, history, recall
+
+
+def save_params(params, path):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_params(path):
+    loaded = np.load(path)
+    return {k: jnp.asarray(loaded[k]) for k in loaded.files}

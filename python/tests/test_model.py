@@ -1,0 +1,83 @@
+"""L2 correctness: ranker GNN shapes, masking invariants, and agreement
+with a pure-jnp re-implementation (kernels swapped for references)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile.kernels import ref
+
+
+def ranker_apply_ref(params, nodes, node_mask, senders, receivers, edge_mask):
+    """Same network with reference ops instead of Pallas kernels."""
+    emb = ref.fused_linear_ref(nodes, params["w_embed"], params["b_embed"], "gelu")
+    emb = emb * node_mask[:, None]
+    for r in range(M.ROUNDS):
+        sent = jnp.take(emb, senders, axis=0)
+        recv = jnp.take(emb, receivers, axis=0)
+        msg_in = (sent + recv) * edge_mask[:, None]
+        msg = ref.fused_linear_ref(msg_in, params[f"w_msg_{r}"], params[f"b_msg_{r}"], "gelu")
+        msg = msg * edge_mask[:, None]
+        agg = ref.segment_sum_ref(msg, receivers, M.MAX_NODES)
+        upd = ref.fused_linear_ref(emb + agg, params[f"w_node_{r}"], params[f"b_node_{r}"], "gelu")
+        emb = (emb + upd) * node_mask[:, None]
+    logits = ref.fused_linear_ref(emb, params["w_out"], params["b_out"], "none")[:, 0]
+    return jnp.where(node_mask > 0, logits, -1e9)
+
+
+def test_output_shape_and_mask():
+    params = M.init_params(0)
+    inputs = M.example_inputs(seed=0, n_real=37)
+    scores = M.ranker_apply(params, *inputs)
+    assert scores.shape == (M.MAX_NODES,)
+    s = np.asarray(scores)
+    assert np.isfinite(s[:37]).all()
+    assert (s[37:] <= -1e8).all()
+
+
+def test_kernel_and_ref_networks_agree():
+    params = M.init_params(3)
+    inputs = M.example_inputs(seed=5, n_real=50, e_real=200)
+    got = M.ranker_apply(params, *inputs)
+    want = ranker_apply_ref(params, *inputs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_padded_edges_do_not_affect_scores():
+    params = M.init_params(1)
+    nodes, node_mask, senders, receivers, edge_mask = M.example_inputs(seed=2, e_real=32)
+    base = np.asarray(M.ranker_apply(params, nodes, node_mask, senders, receivers, edge_mask))
+    # scramble padded edge endpoints — masked, so scores must not move
+    senders2 = senders.at[32:].set((senders[32:] + 7) % 37)
+    receivers2 = receivers.at[32:].set((receivers[32:] + 3) % 37)
+    out = np.asarray(M.ranker_apply(params, nodes, node_mask, senders2, receivers2, edge_mask))
+    np.testing.assert_allclose(base, out, rtol=1e-5, atol=1e-6)
+
+
+def test_messages_move_information_between_nodes():
+    params = M.init_params(2)
+    nodes, node_mask, senders, receivers, edge_mask = M.example_inputs(seed=3, e_real=64)
+    base = np.asarray(M.ranker_apply(params, nodes, node_mask, senders, receivers, edge_mask))
+    # perturb node 0's features; a neighbour's score should change
+    recv_of_0 = np.asarray(receivers)[:64][np.asarray(senders)[:64] == 0]
+    nodes2 = nodes.at[0].add(1.0)
+    out = np.asarray(M.ranker_apply(params, nodes2, node_mask, senders, receivers, edge_mask))
+    if recv_of_0.size:
+        j = int(recv_of_0[0])
+        assert abs(out[j] - base[j]) > 1e-7, "message passing appears broken"
+
+
+def test_constants_match_rust_featurizer():
+    # These are pinned by rust/src/learner/features.rs; a mismatch breaks AOT.
+    assert M.NODE_FEATURES == 40
+    assert M.MAX_NODES == 256
+    assert M.MAX_EDGES == 2048
+    assert M.NUM_OP_KINDS == 26
+
+
+def test_deterministic_init():
+    a = M.init_params(0)
+    b = M.init_params(0)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))

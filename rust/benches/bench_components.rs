@@ -1,0 +1,118 @@
+//! Component micro-benchmarks for the hot paths identified in
+//! DESIGN.md §8 (propagation sweep, episode step, MCTS episode, SPMD
+//! lowering, liveness, featurization, ranker inference).
+//!
+//!     cargo bench --offline  (hand-rolled harness; criterion is not
+//!     available offline — see DESIGN.md §3)
+
+use automap::cost::composite::{evaluate, CostWeights};
+use automap::cost::liveness::peak_memory;
+use automap::learner::features::featurize;
+use automap::models::transformer::{build_transformer, TransformerConfig};
+use automap::partir::actions::{Action, DecisionState};
+use automap::partir::dist::DistMap;
+use automap::partir::mesh::{AxisId, Mesh};
+use automap::partir::program::PartirProgram;
+use automap::partir::propagate::PropStats;
+use automap::search::env::{EnvAction, RewriteEnv, SearchOptions};
+use automap::search::mcts::{search, MctsConfig};
+use automap::sim::device::Device;
+use automap::spmd::lower::lower;
+use automap::util::bench::{black_box, Bencher};
+
+fn megatron_state(model: &automap::models::transformer::TransformerModel) -> DecisionState {
+    automap::models::megatron::reference_state(model, AxisId(0))
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== automap component benchmarks ==");
+
+    for layers in [4usize, 24] {
+        let model = build_transformer(&TransformerConfig::tiny(layers));
+        let program = PartirProgram::new(model.func.clone(), Mesh::new(&[("model", 4)]));
+        let n_ops = program.func.num_nodes();
+        let st = megatron_state(&model);
+        let (dm_done, _) = program.apply(&st);
+
+        // Propagation: one full forward sweep over the program.
+        let mut dm = DistMap::new(&program.func, &program.mesh);
+        dm.set(model.layers[0].w1.index(), AxisId(0), 1);
+        let mut stats = PropStats::default();
+        b.bench(&format!("forward_sweep/{layers}L({n_ops}ops)"), || {
+            stats.stuck_nodes.clear();
+            program.prop.forward(&program.func, &program.mesh, &mut dm, &mut stats);
+            black_box(&dm);
+        });
+
+        // Full decision replay (what one episode re-application costs).
+        let mut dm2 = DistMap::new(&program.func, &program.mesh);
+        let mut stats2 = PropStats::default();
+        b.bench(&format!("apply_megatron_state/{layers}L"), || {
+            program.apply_into(&st, &mut dm2, &mut stats2);
+            black_box(&dm2);
+        });
+
+        // SPMD lowering + liveness + full evaluation.
+        b.bench(&format!("spmd_lower/{layers}L"), || {
+            black_box(lower(&program.func, &program.mesh, &program.prop, &dm_done).collectives.len());
+        });
+        b.bench(&format!("liveness_peak_memory/{layers}L"), || {
+            black_box(peak_memory(&program.func, &program.mesh, &dm_done).peak_bytes);
+        });
+        b.bench(&format!("evaluate_full/{layers}L"), || {
+            black_box(
+                evaluate(&program, &dm_done, &Device::tpu_v3(), &CostWeights::default()).cost,
+            );
+        });
+
+        // Featurization (learner input).
+        b.bench(&format!("featurize/{layers}L"), || {
+            black_box(featurize(&program.func, &program.mesh).arg_ids.len());
+        });
+    }
+
+    // Episode step + whole MCTS episodes on the fig-6 workload.
+    let model = build_transformer(&TransformerConfig::tiny(4));
+    let program = PartirProgram::new(model.func.clone(), Mesh::new(&[("model", 4)]));
+    let wl = RewriteEnv::default_worklist(&program);
+    let env = RewriteEnv::new(
+        &program,
+        Device::tpu_v3(),
+        CostWeights::default(),
+        SearchOptions::default(),
+        &wl,
+    );
+    let mut ep = env.reset();
+    let acts = env.legal_actions(&ep);
+    let tile = acts[0];
+    b.bench("env_step_tile/4L", || {
+        let mut e = ep.clone();
+        env.step(&mut e, tile);
+        black_box(e.decisions);
+    });
+    env.step(&mut ep, tile);
+    b.bench("env_evaluate_episode/4L", || {
+        black_box(env.reward(&env.evaluate_episode(&ep)));
+    });
+    let mut seed = 0u64;
+    b.bench("mcts_50_episodes/4L", || {
+        seed += 1;
+        black_box(search(&env, 50, seed, MctsConfig::default()).best_reward);
+    });
+
+    // Ranker inference through PJRT (needs `make artifacts`).
+    let g = featurize(&program.func, &program.mesh);
+    if std::path::Path::new("artifacts/ranker.hlo.txt").exists() {
+        use automap::learner::ranker::{PjrtRanker, Ranker};
+        let rt = automap::runtime::pjrt::Runtime::new().unwrap();
+        let ranker = PjrtRanker::load(&rt, "artifacts/ranker.hlo.txt").unwrap();
+        b.bench("pjrt_ranker_score/256nodes", || {
+            black_box(ranker.score(&g).unwrap().len());
+        });
+    } else {
+        println!("(skipping pjrt_ranker_score: run `make artifacts` first)");
+    }
+
+    println!("== {} benchmarks done ==", b.results().len());
+}

@@ -1,0 +1,112 @@
+//! Figure-regeneration benchmark harness: runs a scaled-down version of
+//! every figure in the paper's evaluation (§3) and prints the same
+//! series the paper plots, plus wall-clock per figure. Full-scale
+//! parameters: `automap all-figures --config configs/fig6_paper.json`.
+//!
+//!     cargo bench --offline
+
+use automap::coordinator::figures::{fig6_fig7, fig8, fig9, stats, FigureSetup};
+use automap::models::transformer::TransformerConfig;
+
+fn main() {
+    println!("== figure harnesses (scaled-down; see EXPERIMENTS.md) ==");
+
+    // Setup-statistics "table" (§3 text): paper-scale model, built
+    // structurally (no tensor data).
+    let t0 = std::time::Instant::now();
+    let _ = stats(&TransformerConfig::paper());
+    println!("BENCH figure_stats_paper_scale wall={:.1}s", t0.elapsed().as_secs_f64());
+
+    let setup = FigureSetup {
+        layers: 2,
+        budgets: vec![50, 200, 800],
+        attempts: 8,
+        seed: 42,
+        ranker_path: "artifacts/ranker.hlo.txt".to_string(),
+    };
+    let t0 = std::time::Instant::now();
+    fig6_fig7(&setup, "results").expect("fig6/7");
+    println!("BENCH figure6_7 wall={:.1}s", t0.elapsed().as_secs_f64());
+
+    let setup8 = FigureSetup { layers: 4, seed: 43, ..mk(&setup) };
+    let t0 = std::time::Instant::now();
+    fig8(&setup8, "results").expect("fig8");
+    println!("BENCH figure8 wall={:.1}s", t0.elapsed().as_secs_f64());
+
+    let setup9 = FigureSetup { layers: 4, seed: 44, ..mk(&setup) };
+    let t0 = std::time::Instant::now();
+    let (grouped, ungrouped) = fig9(&setup9, "results").expect("fig9");
+    println!("BENCH figure9 wall={:.1}s", t0.elapsed().as_secs_f64());
+
+    // Shape assertions: the paper's qualitative claims must hold.
+    let g_last = grouped.last().unwrap();
+    let u_last = ungrouped.last().unwrap();
+    assert!(
+        g_last.success_rate > u_last.success_rate,
+        "Fig 9 shape: grouping must dominate without propagation"
+    );
+
+    ablations();
+    println!("== figure harness done (claims hold) ==");
+}
+
+/// Ablation benches for the design choices DESIGN.md calls out:
+/// the infer-rest tactic and the UCT exploration constant.
+fn ablations() {
+    use automap::cost::composite::CostWeights;
+    use automap::models::megatron;
+    use automap::models::transformer::build_transformer;
+    use automap::partir::mesh::{AxisId, Mesh};
+    use automap::partir::program::PartirProgram;
+    use automap::search::env::{RewriteEnv, SearchOptions};
+    use automap::search::experiment::pressured_device;
+    use automap::search::mcts::{search, MctsConfig};
+    use automap::sim::device::Device;
+
+    let model = build_transformer(&TransformerConfig::tiny(2));
+    let program = PartirProgram::new(model.func.clone(), Mesh::new(&[("model", 4)]));
+    let w = CostWeights::default();
+    let probe =
+        megatron::reference_evaluation(&program, &model, AxisId(0), &Device::tpu_v3(), &w);
+    let device = pressured_device(&probe);
+    let reference = megatron::reference_evaluation(&program, &model, AxisId(0), &device, &w);
+    let wl = RewriteEnv::default_worklist(&program);
+
+    let run = |opts: SearchOptions, cfg: MctsConfig| -> f64 {
+        let env = RewriteEnv::new(&program, device.clone(), w.clone(), opts, &wl);
+        let mut hits = 0;
+        let attempts = 10;
+        for s in 0..attempts {
+            let r = search(&env, 200, 900 + s, cfg.clone());
+            if megatron::check(&r.best_eval, &reference).is_megatron {
+                hits += 1;
+            }
+        }
+        hits as f64 / attempts as f64
+    };
+
+    println!("== ablations (budget 200, 10 attempts, tiny(2)) ==");
+    let base = run(SearchOptions::default(), MctsConfig::default());
+    let no_infer = run(
+        SearchOptions { auto_infer_rest: false, ..Default::default() },
+        MctsConfig::default(),
+    );
+    println!("ABLATION infer_rest: on={base:.2} off={no_infer:.2}");
+    for c in [0.3f64, 1.2, 3.0] {
+        let s = run(
+            SearchOptions::default(),
+            MctsConfig { exploration: c, ..Default::default() },
+        );
+        println!("ABLATION uct_exploration c={c}: success={s:.2}");
+    }
+}
+
+fn mk(s: &FigureSetup) -> FigureSetup {
+    FigureSetup {
+        layers: s.layers,
+        budgets: s.budgets.clone(),
+        attempts: s.attempts,
+        seed: s.seed,
+        ranker_path: s.ranker_path.clone(),
+    }
+}

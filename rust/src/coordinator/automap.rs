@@ -1,0 +1,283 @@
+//! The end-user entry point, mirroring the paper's Figure 5 workflow:
+//!
+//! ```text
+//! partitioned_fn, specs = automap(update_fn, mesh={"batch":2,"model":4},
+//!                                 manual_axes=["batch"])
+//! ```
+//!
+//! Given a training-step function and a mesh, `Automap::partition` runs
+//! featurization → (optional) learned top-k filter → MCTS → SPMD
+//! lowering, and returns the partitioning *specification* for every
+//! input/output plus the cost evaluation — "in addition to a partitioned
+//! callable, automap returns a specification of partitioning decisions
+//! for inputs and outputs".
+
+use crate::cost::composite::{evaluate, CostWeights, Evaluation};
+use crate::ir::Func;
+use crate::learner::features::featurize;
+use crate::learner::ranker::{top_k_decisions, HeuristicRanker, PjrtRanker, Ranker, TOP_K};
+use crate::partir::dist::DistMap;
+use crate::partir::mesh::Mesh;
+use crate::partir::program::PartirProgram;
+use crate::partir::propagate::PropStats;
+use crate::search::env::{RewriteEnv, SearchOptions};
+use crate::search::mcts::{search, MctsConfig};
+use crate::sim::device::Device;
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// How the MCTS worklist is filtered.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Filter {
+    /// All arguments (MCTS-only mode of Fig 6).
+    None,
+    /// The learned GNN ranker via PJRT (requires `make artifacts`).
+    Learned { hlo_path: String },
+    /// Deterministic size-based ranker (no artifacts required).
+    Heuristic,
+}
+
+/// Options for one partition call.
+#[derive(Clone)]
+pub struct AutomapOptions {
+    pub device: Device,
+    pub weights: CostWeights,
+    pub search: SearchOptions,
+    pub mcts: MctsConfig,
+    pub budget: usize,
+    pub seed: u64,
+    pub filter: Filter,
+    pub top_k: usize,
+}
+
+impl Default for AutomapOptions {
+    fn default() -> Self {
+        AutomapOptions {
+            device: Device::tpu_v3(),
+            weights: CostWeights::default(),
+            search: SearchOptions::default(),
+            mcts: MctsConfig::default(),
+            budget: 500,
+            seed: 0,
+            filter: Filter::Heuristic,
+            top_k: TOP_K,
+        }
+    }
+}
+
+/// Partitioning decision for one function argument or output.
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    pub name: String,
+    /// `(axis name, tensor dim)` pairs; empty = replicated.
+    pub tilings: Vec<(String, usize)>,
+}
+
+/// The result of a partition call.
+pub struct PartitionReport {
+    pub input_specs: Vec<ShardSpec>,
+    pub output_specs: Vec<ShardSpec>,
+    pub eval: Evaluation,
+    pub dm: DistMap,
+    pub decisions: usize,
+    pub episodes_to_best: usize,
+    pub worklist_size: usize,
+    pub wall_seconds: f64,
+}
+
+impl PartitionReport {
+    /// Summarise as JSON (written by the CLI).
+    pub fn to_json(&self, mesh: &Mesh) -> Json {
+        let specs = |xs: &[ShardSpec]| {
+            Json::Arr(
+                xs.iter()
+                    .filter(|s| !s.tilings.is_empty())
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("name", Json::str(s.name.clone())),
+                            (
+                                "tilings",
+                                Json::Arr(
+                                    s.tilings
+                                        .iter()
+                                        .map(|(a, d)| {
+                                            Json::obj(vec![
+                                                ("axis", Json::str(a.clone())),
+                                                ("dim", Json::num(*d as f64)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            ("mesh", Json::str(mesh.describe())),
+            ("sharded_inputs", specs(&self.input_specs)),
+            ("sharded_outputs", specs(&self.output_specs)),
+            ("peak_memory_bytes", Json::num(self.eval.memory.peak_bytes as f64)),
+            ("fits_memory", Json::Bool(self.eval.fits_memory)),
+            ("all_reduces", Json::num(self.eval.collectives.all_reduce_count as f64)),
+            ("all_gathers", Json::num(self.eval.collectives.all_gather_count as f64)),
+            ("comm_bytes", Json::num(self.eval.collectives.total_bytes() as f64)),
+            ("sim_runtime_seconds", Json::num(self.eval.runtime.total_seconds())),
+            ("decisions", Json::num(self.decisions as f64)),
+            ("episodes_to_best", Json::num(self.episodes_to_best as f64)),
+            ("wall_seconds", Json::num(self.wall_seconds)),
+        ])
+    }
+}
+
+/// The automap session: program + options.
+pub struct Automap {
+    pub program: PartirProgram,
+    pub options: AutomapOptions,
+}
+
+impl Automap {
+    pub fn new(func: Func, mesh: Mesh, options: AutomapOptions) -> Automap {
+        Automap { program: PartirProgram::new(func, mesh), options }
+    }
+
+    /// Build the (possibly filtered) worklist.
+    pub fn worklist(&self) -> Result<Vec<crate::ir::ValueId>> {
+        let full = RewriteEnv::default_worklist(&self.program);
+        match &self.options.filter {
+            Filter::None => Ok(full),
+            Filter::Heuristic => {
+                let g = featurize(&self.program.func, &self.program.mesh);
+                let ranker = HeuristicRanker { func: &self.program.func };
+                let scores = ranker.score(&g)?;
+                Ok(top_k_decisions(&self.program.func, &g, &scores, self.options.top_k))
+            }
+            Filter::Learned { hlo_path } => {
+                let rt = crate::runtime::pjrt::Runtime::new()?;
+                let ranker = PjrtRanker::load(&rt, hlo_path)?;
+                let g = featurize(&self.program.func, &self.program.mesh);
+                let scores = ranker.score(&g)?;
+                Ok(top_k_decisions(&self.program.func, &g, &scores, self.options.top_k))
+            }
+        }
+    }
+
+    /// Run the full pipeline and return the partitioning report.
+    pub fn partition(&self) -> Result<PartitionReport> {
+        let t0 = std::time::Instant::now();
+        let worklist = self.worklist()?;
+        let env = RewriteEnv::new(
+            &self.program,
+            self.options.device.clone(),
+            self.options.weights.clone(),
+            self.options.search.clone(),
+            &worklist,
+        );
+        let result = search(&env, self.options.budget, self.options.seed, self.options.mcts.clone());
+
+        // Materialise the final distribution (with infer-rest closure).
+        let (mut dm, _) = self.program.apply(&result.best_state);
+        if self.options.search.auto_infer_rest {
+            let mut stats = PropStats::default();
+            self.program.prop.infer_rest(
+                &self.program.func,
+                &self.program.mesh,
+                &mut dm,
+                &mut stats,
+            );
+        }
+        let eval = evaluate(&self.program, &dm, &self.options.device, &self.options.weights);
+
+        let f = &self.program.func;
+        let mesh = &self.program.mesh;
+        let spec_for = |v: crate::ir::ValueId, name: String| ShardSpec {
+            name,
+            tilings: dm
+                .tilings(v.index())
+                .into_iter()
+                .map(|(a, d)| (mesh.name(a).to_string(), d))
+                .collect(),
+        };
+        let input_specs = (0..f.num_args())
+            .map(|i| spec_for(crate::ir::ValueId(i as u32), f.args[i].name.clone()))
+            .collect();
+        let output_specs = f
+            .outputs
+            .iter()
+            .enumerate()
+            .map(|(i, &o)| spec_for(o, format!("output_{i}")))
+            .collect();
+
+        Ok(PartitionReport {
+            input_specs,
+            output_specs,
+            eval,
+            dm,
+            decisions: result
+                .best_state
+                .actions
+                .iter()
+                .filter(|a| matches!(a, crate::partir::actions::Action::Tile { .. }))
+                .count(),
+            episodes_to_best: result.episodes_to_best,
+            worklist_size: worklist.len(),
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::mlp::{build_mlp, MlpConfig};
+    use crate::models::transformer::{build_transformer, TransformerConfig};
+
+    #[test]
+    fn partition_mlp_end_to_end_heuristic() {
+        let m = build_mlp(&MlpConfig::small());
+        let mesh = Mesh::new(&[("model", 4)]);
+        // memory-pressured device
+        let prog = PartirProgram::new(m.func.clone(), mesh.clone());
+        let dm0 = DistMap::new(&prog.func, &prog.mesh);
+        let probe = evaluate(&prog, &dm0, &Device::tpu_v3(), &CostWeights::default());
+        let opts = AutomapOptions {
+            device: Device { hbm_bytes: probe.memory.peak_bytes / 2, ..Device::tpu_v3() },
+            budget: 200,
+            seed: 11,
+            ..Default::default()
+        };
+        let am = Automap::new(m.func, mesh, opts);
+        let report = am.partition().unwrap();
+        assert!(report.eval.fits_memory);
+        assert!(report.input_specs.iter().any(|s| !s.tilings.is_empty()));
+        let j = report.to_json(&am.program.mesh);
+        assert!(j.get("fits_memory").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn heuristic_filter_shrinks_worklist() {
+        let m = build_transformer(&TransformerConfig::tiny(4));
+        let mesh = Mesh::new(&[("model", 4)]);
+        let am = Automap::new(m.func, mesh, AutomapOptions::default());
+        let wl = am.worklist().unwrap();
+        assert_eq!(wl.len(), TOP_K);
+        let full = RewriteEnv::default_worklist(&am.program);
+        assert!(full.len() > TOP_K);
+    }
+
+    #[test]
+    fn manual_axes_are_respected() {
+        // "batch" marked manual: search may only use "model".
+        let m = build_mlp(&MlpConfig::small());
+        let mesh = Mesh::new(&[("batch", 2), ("model", 4)]).manual("batch");
+        let opts = AutomapOptions { budget: 100, ..Default::default() };
+        let am = Automap::new(m.func, mesh, opts);
+        let report = am.partition().unwrap();
+        for s in &report.input_specs {
+            for (axis, _) in &s.tilings {
+                assert_ne!(axis, "batch", "search must not assign the manual axis");
+            }
+        }
+    }
+}

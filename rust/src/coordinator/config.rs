@@ -1,0 +1,54 @@
+//! Experiment/config system: JSON config files that override the figure
+//! and partition defaults, so runs are reproducible and scriptable
+//! (`automap fig6 --config configs/fig6_paper.json`).
+
+use crate::coordinator::figures::FigureSetup;
+use crate::util::json::{parse, Json};
+use anyhow::{Context, Result};
+
+/// Load a JSON config file.
+pub fn load(path: &str) -> Result<Json> {
+    let txt = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    parse(&txt).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+}
+
+/// Apply config overrides onto a `FigureSetup`.
+pub fn apply_figure(setup: &mut FigureSetup, cfg: &Json) {
+    if let Some(l) = cfg.get("layers").and_then(|v| v.as_usize()) {
+        setup.layers = l;
+    }
+    if let Some(a) = cfg.get("attempts").and_then(|v| v.as_usize()) {
+        setup.attempts = a;
+    }
+    if let Some(s) = cfg.get("seed").and_then(|v| v.as_f64()) {
+        setup.seed = s as u64;
+    }
+    if let Some(b) = cfg.get("budgets").and_then(|v| v.as_arr()) {
+        setup.budgets = b.iter().filter_map(|x| x.as_usize()).collect();
+    }
+    if let Some(r) = cfg.get("ranker").and_then(|v| v.as_str()) {
+        setup.ranker_path = r.to_string();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_apply() {
+        let mut s = FigureSetup::default();
+        let cfg = parse(r#"{"layers": 8, "budgets": [10, 20], "seed": 7}"#).unwrap();
+        apply_figure(&mut s, &cfg);
+        assert_eq!(s.layers, 8);
+        assert_eq!(s.budgets, vec![10, 20]);
+        assert_eq!(s.seed, 7);
+        // untouched fields keep defaults
+        assert_eq!(s.attempts, FigureSetup::default().attempts);
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(load("/definitely/not/here.json").is_err());
+    }
+}

@@ -1,0 +1,281 @@
+//! Figure harnesses: regenerate every figure in the paper's evaluation
+//! (§3) — printed as the same series the paper plots and written as JSON
+//! under `results/`.
+//!
+//!   Fig 6 — Megatron discovery success rate vs. search budget,
+//!           MCTS-only vs. MCTS + learned filter.
+//!   Fig 7 — TPU-v3 (simulated) runtimes of the solutions found.
+//!   Fig 8 — effect of grouping repeated blocks via compiler hints.
+//!   Fig 9 — grouping when cross-layer shared-dependency propagation is
+//!           unavailable (ungrouped deep models fail).
+
+use crate::learner::features::featurize;
+use crate::learner::ranker::{top_k_decisions, HeuristicRanker, PjrtRanker, Ranker};
+use crate::models::transformer::{build_transformer, TransformerConfig};
+use crate::partir::mesh::{AxisId, Mesh};
+use crate::partir::program::PartirProgram;
+use crate::search::env::SearchOptions;
+use crate::search::experiment::{run_sweep, BudgetRow, ExperimentConfig};
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Shared workload settings for the figure experiments.
+pub struct FigureSetup {
+    pub layers: usize,
+    pub budgets: Vec<usize>,
+    pub attempts: usize,
+    pub seed: u64,
+    /// Path to the AOT ranker; falls back to the heuristic ranker if absent.
+    pub ranker_path: String,
+}
+
+impl Default for FigureSetup {
+    fn default() -> Self {
+        FigureSetup {
+            layers: 4,
+            budgets: vec![50, 100, 250, 500, 1000, 2000],
+            attempts: 20,
+            seed: 42,
+            ranker_path: "artifacts/ranker.hlo.txt".to_string(),
+        }
+    }
+}
+
+fn build(layers: usize) -> (PartirProgram, crate::models::transformer::TransformerModel) {
+    let model = build_transformer(&TransformerConfig::tiny(layers));
+    let program = PartirProgram::new(model.func.clone(), Mesh::new(&[("model", 4)]));
+    (program, model)
+}
+
+/// Resolve the learner filter: PJRT ranker if artifacts exist, else the
+/// heuristic ranker (clearly labelled in the output).
+pub fn learned_worklist(
+    program: &PartirProgram,
+    ranker_path: &str,
+    k: usize,
+) -> Result<(Vec<crate::ir::ValueId>, &'static str)> {
+    let g = featurize(&program.func, &program.mesh);
+    if std::path::Path::new(ranker_path).exists() {
+        let rt = crate::runtime::pjrt::Runtime::new()?;
+        let ranker = PjrtRanker::load(&rt, ranker_path)?;
+        let scores = ranker.score(&g)?;
+        Ok((top_k_decisions(&program.func, &g, &scores, k), "learned(pjrt)"))
+    } else {
+        let ranker = HeuristicRanker { func: &program.func };
+        let scores = ranker.score(&g)?;
+        Ok((top_k_decisions(&program.func, &g, &scores, k), "heuristic(fallback)"))
+    }
+}
+
+fn rows_to_json(rows: &[BudgetRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("budget", Json::num(r.budget as f64)),
+                    ("success_rate", Json::num(r.success_rate)),
+                    ("near_rate", Json::num(r.near_rate)),
+                    ("mean_runtime", Json::num(r.mean_runtime)),
+                    ("megatron_runtime", Json::num(r.megatron_runtime)),
+                    ("mean_decisions", Json::num(r.mean_decisions)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn print_series(name: &str, rows: &[BudgetRow], runtime: bool) {
+    println!("  series: {name}");
+    for r in rows {
+        if runtime {
+            println!(
+                "    budget={:<6} runtime={:<12} (megatron={}) near_rate={:.2}",
+                r.budget,
+                crate::util::stats::fmt_secs(r.mean_runtime),
+                crate::util::stats::fmt_secs(r.megatron_runtime),
+                r.near_rate
+            );
+        } else {
+            println!(
+                "    budget={:<6} success={:.2} near={:.2} decisions={:.1}",
+                r.budget, r.success_rate, r.near_rate, r.mean_decisions
+            );
+        }
+    }
+}
+
+fn write_json(path: &str, j: &Json) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, j.pretty())?;
+    println!("  wrote {path}");
+    Ok(())
+}
+
+/// Figures 6 + 7 share their runs: sweep budgets for MCTS-only and for
+/// MCTS + learned top-k filter; Fig 6 reports success rates, Fig 7 the
+/// simulated runtimes of the best solutions.
+pub fn fig6_fig7(setup: &FigureSetup, out_dir: &str) -> Result<(Vec<BudgetRow>, Vec<BudgetRow>)> {
+    let (program, model) = build(setup.layers);
+    let mk_cfg = || ExperimentConfig {
+        budgets: setup.budgets.clone(),
+        attempts: setup.attempts,
+        seed: setup.seed,
+        options: SearchOptions::default(), // cross-layer tying ON (paper base)
+        ..Default::default()
+    };
+
+    println!("Figure 6: Megatron discovery success rate ({} layers, {} attempts)", setup.layers, setup.attempts);
+    let (mcts_rows, _) = run_sweep(&program, &model, AxisId(0), &mk_cfg(), None);
+    print_series("mcts-only", &mcts_rows, false);
+
+    let (wl, label) = learned_worklist(&program, &setup.ranker_path, crate::learner::TOP_K)?;
+    println!("  (learner filter: {label}, worklist {} -> {})",
+        crate::search::env::RewriteEnv::default_worklist(&program).len(), wl.len());
+    let (learned_rows, _) = run_sweep(&program, &model, AxisId(0), &mk_cfg(), Some(wl));
+    print_series("mcts+learner", &learned_rows, false);
+
+    println!("Figure 7: simulated TPU-v3 runtimes of found solutions");
+    print_series("mcts-only", &mcts_rows, true);
+    print_series("mcts+learner", &learned_rows, true);
+
+    write_json(
+        &format!("{out_dir}/fig6.json"),
+        &Json::obj(vec![
+            ("mcts_only", rows_to_json(&mcts_rows)),
+            ("mcts_learner", rows_to_json(&learned_rows)),
+            ("learner_kind", Json::str(label)),
+            ("layers", Json::num(setup.layers as f64)),
+            ("attempts", Json::num(setup.attempts as f64)),
+        ]),
+    )?;
+    write_json(
+        &format!("{out_dir}/fig7.json"),
+        &Json::obj(vec![
+            ("mcts_only", rows_to_json(&mcts_rows)),
+            ("mcts_learner", rows_to_json(&learned_rows)),
+        ]),
+    )?;
+    Ok((mcts_rows, learned_rows))
+}
+
+/// Figure 8: grouped layer blocks (compiler hints) vs. ungrouped, on a
+/// deeper model. Grouping exposes one decision set per repeated block.
+pub fn fig8(setup: &FigureSetup, out_dir: &str) -> Result<(Vec<BudgetRow>, Vec<BudgetRow>)> {
+    let (program, model) = build(setup.layers);
+    let base = |grouping: bool, tying: bool| ExperimentConfig {
+        budgets: setup.budgets.clone(),
+        attempts: setup.attempts,
+        seed: setup.seed ^ 0x8888,
+        options: SearchOptions { grouping, cross_layer_tying: tying, ..Default::default() },
+        ..Default::default()
+    };
+    println!("Figure 8: grouping via compiler hints ({} layers)", setup.layers);
+    let (grouped, _) = run_sweep(&program, &model, AxisId(0), &base(true, false), None);
+    print_series("grouped", &grouped, false);
+    let (ungrouped, _) = run_sweep(&program, &model, AxisId(0), &base(false, true), None);
+    print_series("ungrouped (shared-dep propagation)", &ungrouped, false);
+    write_json(
+        &format!("{out_dir}/fig8.json"),
+        &Json::obj(vec![
+            ("grouped", rows_to_json(&grouped)),
+            ("ungrouped", rows_to_json(&ungrouped)),
+            ("layers", Json::num(setup.layers as f64)),
+        ]),
+    )?;
+    Ok((grouped, ungrouped))
+}
+
+/// Figure 9: with shared-dependency propagation DISABLED (its brittleness
+/// is the paper's motivation for grouping), grouped search still finds
+/// Megatron while ungrouped deep models do not.
+pub fn fig9(setup: &FigureSetup, out_dir: &str) -> Result<(Vec<BudgetRow>, Vec<BudgetRow>)> {
+    let (program, model) = build(setup.layers);
+    let base = |grouping: bool| ExperimentConfig {
+        budgets: setup.budgets.clone(),
+        attempts: setup.attempts,
+        seed: setup.seed ^ 0x9999,
+        options: SearchOptions {
+            grouping,
+            cross_layer_tying: false, // the Fig 9 ablation
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    println!(
+        "Figure 9: grouping without cross-layer propagation ({} layers)",
+        setup.layers
+    );
+    let (grouped, _) = run_sweep(&program, &model, AxisId(0), &base(true), None);
+    print_series("grouped", &grouped, false);
+    let (ungrouped, _) = run_sweep(&program, &model, AxisId(0), &base(false), None);
+    print_series("ungrouped (no propagation)", &ungrouped, false);
+    write_json(
+        &format!("{out_dir}/fig9.json"),
+        &Json::obj(vec![
+            ("grouped", rows_to_json(&grouped)),
+            ("ungrouped", rows_to_json(&ungrouped)),
+            ("layers", Json::num(setup.layers as f64)),
+        ]),
+    )?;
+    Ok((grouped, ungrouped))
+}
+
+/// Setup-statistics table (§3 text): args / ops / memory of the paper
+/// config vs. what we build.
+pub fn stats(cfg: &TransformerConfig) -> Json {
+    let model = build_transformer(cfg);
+    let mesh = Mesh::new(&[("model", 4)]);
+    let program = PartirProgram::new(model.func.clone(), mesh);
+    let dm = crate::partir::dist::DistMap::new(&program.func, &program.mesh);
+    let mem = crate::cost::liveness::peak_memory(&program.func, &program.mesh, &dm);
+    let j = Json::obj(vec![
+        ("layers", Json::num(cfg.layers as f64)),
+        ("d_model", Json::num(cfg.d_model as f64)),
+        ("params", Json::num(cfg.param_count() as f64)),
+        ("arguments", Json::num(model.func.num_args() as f64)),
+        ("operations", Json::num(model.func.num_nodes() as f64)),
+        ("peak_memory_bytes", Json::num(mem.peak_bytes as f64)),
+        ("paper_arguments", Json::num(1150.0)),
+        ("paper_operations", Json::num(50000.0)),
+        ("paper_memory_gb", Json::num(26.0)),
+    ]);
+    println!(
+        "setup stats: layers={} args={} (paper 1150) ops={} (paper >50k, XLA granularity) peak={} (paper ~26GB)",
+        cfg.layers,
+        model.func.num_args(),
+        model.func.num_nodes(),
+        crate::util::stats::fmt_bytes(mem.peak_bytes as f64)
+    );
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_fig6_run_has_sane_shape() {
+        let setup = FigureSetup {
+            layers: 1,
+            budgets: vec![10, 100],
+            attempts: 3,
+            seed: 5,
+            ranker_path: "/nonexistent".into(),
+        };
+        let dir = std::env::temp_dir().join("automap_figtest");
+        let (m, l) = fig6_fig7(&setup, dir.to_str().unwrap()).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(l.len(), 2);
+        assert!(dir.join("fig6.json").exists());
+        assert!(dir.join("fig7.json").exists());
+    }
+
+    #[test]
+    fn stats_reports_paper_fields() {
+        let j = stats(&TransformerConfig::tiny(2));
+        assert!(j.get("arguments").unwrap().as_usize().unwrap() > 50);
+        assert_eq!(j.get("paper_arguments").unwrap().as_usize().unwrap(), 1150);
+    }
+}

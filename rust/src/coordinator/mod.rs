@@ -1,0 +1,9 @@
+//! L3 coordinator: the public `Automap` API (Fig 5 workflow), the
+//! experiment config system, and the figure harnesses.
+
+pub mod automap;
+pub mod config;
+pub mod figures;
+
+pub use automap::{Automap, AutomapOptions, Filter, PartitionReport, ShardSpec};
+pub use figures::FigureSetup;

@@ -1,0 +1,136 @@
+//! Composite search objective (paper §3: "The search mechanism is guided
+//! by multiple cost statistics. First, a peak liveness analysis exposes
+//! an approximate memory estimate ... Second, we minimise the number of
+//! bytes communicated through reduction operations.")
+//!
+//! Megatron-optimality is *emergent*: it is the minimum-collective
+//! strategy that fits device memory. Nothing here pattern-matches it.
+
+use super::liveness::MemoryEstimate;
+use crate::partir::dist::DistMap;
+use crate::partir::program::PartirProgram;
+use crate::sim::device::Device;
+use crate::sim::exec::{estimate, RuntimeEstimate};
+use crate::spmd::collectives::CollectiveStats;
+use crate::spmd::lower::lower;
+
+/// Weights for the composite objective.
+#[derive(Debug, Clone)]
+pub struct CostWeights {
+    /// Penalty per byte of HBM overflow (dominant term).
+    pub mem_overflow: f64,
+    /// Weight on bytes moved through reduction collectives.
+    pub comm_bytes: f64,
+    /// Weight on estimated runtime seconds.
+    pub runtime: f64,
+    /// Weight on peak memory even when it fits (prefer leaner solutions).
+    pub mem_bytes: f64,
+}
+
+impl Default for CostWeights {
+    fn default() -> Self {
+        CostWeights { mem_overflow: 1e-3, comm_bytes: 1e-9, runtime: 1.0, mem_bytes: 1e-12 }
+    }
+}
+
+/// Full evaluation of one partitioning solution.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    pub memory: MemoryEstimate,
+    pub runtime: RuntimeEstimate,
+    pub collectives: CollectiveStats,
+    pub fits_memory: bool,
+    pub cost: f64,
+}
+
+/// Evaluate a distribution map end to end: lower to SPMD, run the
+/// liveness, communication and runtime models, combine.
+pub fn evaluate(p: &PartirProgram, dm: &DistMap, dev: &Device, w: &CostWeights) -> Evaluation {
+    let sp = lower(&p.func, &p.mesh, &p.prop, dm);
+    let memory =
+        super::liveness::peak_memory_cached(&p.func, &p.mesh, dm, &p.prop.global_bytes);
+    let runtime = estimate(&sp, dev);
+    let collectives = CollectiveStats::from_collectives(&sp.collectives);
+    let overflow = (memory.peak_bytes - dev.hbm_bytes).max(0) as f64;
+    let cost = w.mem_overflow * overflow
+        + w.comm_bytes * collectives.total_bytes() as f64
+        + w.runtime * runtime.total_seconds()
+        + w.mem_bytes * memory.peak_bytes as f64;
+    Evaluation { fits_memory: overflow == 0.0, memory, runtime, collectives, cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ArgKind, GraphBuilder, TensorType, ValueId};
+    use crate::partir::actions::{Action, DecisionState};
+    use crate::partir::mesh::{AxisId, Mesh};
+
+    fn big_prog() -> PartirProgram {
+        // Two big weights so replication overflows a tiny device.
+        let mut b = GraphBuilder::new("big");
+        let x = b.arg("x", TensorType::f32(&[64, 4096]), ArgKind::Input);
+        let w1 = b.arg("w1", TensorType::f32(&[4096, 16384]), ArgKind::Parameter);
+        let w2 = b.arg("w2", TensorType::f32(&[16384, 4096]), ArgKind::Parameter);
+        let h = b.matmul(x, w1);
+        let g = b.gelu(h);
+        let y = b.matmul(g, w2);
+        b.output(y);
+        PartirProgram::new(b.finish(), Mesh::new(&[("model", 4)]))
+    }
+
+    fn tiny_device() -> Device {
+        Device { hbm_bytes: 400 << 20, ..Device::tpu_v3() } // 400 MB
+    }
+
+    #[test]
+    fn replicated_overflows_sharded_fits() {
+        let p = big_prog();
+        let dev = tiny_device();
+        let w = CostWeights::default();
+        let dm0 = crate::partir::dist::DistMap::new(&p.func, &p.mesh);
+        let e0 = evaluate(&p, &dm0, &dev, &w);
+        assert!(!e0.fits_memory);
+
+        let st = DecisionState {
+            actions: vec![
+                Action::Tile { v: ValueId(1), dim: 1, axis: AxisId(0) },
+                Action::Tile { v: ValueId(2), dim: 0, axis: AxisId(0) },
+            ],
+            atomic: vec![],
+        };
+        let (dm, _) = p.apply(&st);
+        let e1 = evaluate(&p, &dm, &dev, &w);
+        assert!(e1.fits_memory, "peak={} limit={}", e1.memory.peak_bytes, dev.hbm_bytes);
+        assert!(e1.cost < e0.cost);
+        assert_eq!(e1.collectives.all_reduce_count, 1);
+    }
+
+    #[test]
+    fn megatron_beats_gather_heavy_solution() {
+        let p = big_prog();
+        let dev = tiny_device();
+        let w = CostWeights::default();
+        // Megatron: col-shard w1, row-shard w2 -> 1 all-reduce.
+        let megatron = DecisionState {
+            actions: vec![
+                Action::Tile { v: ValueId(1), dim: 1, axis: AxisId(0) },
+                Action::Tile { v: ValueId(2), dim: 0, axis: AxisId(0) },
+            ],
+            atomic: vec![],
+        };
+        // Bad: row-shard w1 one-sided (gathers w1) + col-shard w2.
+        let bad = DecisionState {
+            actions: vec![
+                Action::Tile { v: ValueId(1), dim: 0, axis: AxisId(0) },
+                Action::Tile { v: ValueId(2), dim: 1, axis: AxisId(0) },
+            ],
+            atomic: vec![],
+        };
+        let (dm_m, _) = p.apply(&megatron);
+        let (dm_b, _) = p.apply(&bad);
+        let em = evaluate(&p, &dm_m, &dev, &w);
+        let eb = evaluate(&p, &dm_b, &dev, &w);
+        assert!(em.cost < eb.cost, "megatron {} vs bad {}", em.cost, eb.cost);
+    }
+}

@@ -1,0 +1,9 @@
+//! Cost models guiding the search: liveness-based peak memory and the
+//! composite objective (memory-fit, reduction-communication bytes,
+//! simulated runtime).
+
+pub mod composite;
+pub mod liveness;
+
+pub use composite::{evaluate, CostWeights, Evaluation};
+pub use liveness::{peak_memory, MemoryEstimate};

@@ -1,0 +1,524 @@
+//! Reverse-mode automatic differentiation on the base dialect.
+//!
+//! `gradients` extends a function under construction with backward nodes
+//! computing d(loss)/d(wrt_i) for a scalar `loss`. Every op in the dialect
+//! has a total VJP rule here, so the model zoo can emit full training
+//! graphs (the paper partitions the *update* function: params, grads,
+//! optimiser state — 1150 arguments for its 24-layer transformer).
+//!
+//! Backward nodes inherit the named scope of their forward node, which is
+//! what makes layer-grouping (paper Figures 8–9) apply to the backward
+//! pass as well.
+
+use super::builder::GraphBuilder;
+use super::graph::ValueId;
+use super::op::{CmpDir, DotDims, OpKind, ReduceKind};
+
+/// Compute gradients of scalar `loss` w.r.t. each value in `wrt`.
+/// Returns one `Option<ValueId>` per entry (None = loss independent of it).
+pub fn gradients(
+    b: &mut GraphBuilder,
+    loss: ValueId,
+    wrt: &[ValueId],
+) -> Vec<Option<ValueId>> {
+    assert_eq!(b.ty(loss).rank(), 0, "loss must be scalar");
+    let num_fwd_nodes = b.func.num_nodes();
+    let num_fwd_values = b.func.num_values();
+
+    // Cotangent accumulator per forward value.
+    let mut grad: Vec<Option<ValueId>> = vec![None; num_fwd_values];
+    let one = {
+        let ty = b.ty(loss).clone();
+        b.constant(1.0, ty)
+    };
+    grad[loss.index()] = Some(one);
+
+    // Reverse sweep over the forward nodes only.
+    for ni in (0..num_fwd_nodes).rev() {
+        let out_v = b.func.value_of_node(ni);
+        let g = match grad[out_v.index()] {
+            Some(g) => g,
+            None => continue,
+        };
+        let node_op = b.func.nodes[ni].op.clone();
+        let inputs = b.func.nodes[ni].inputs.clone();
+        let scope = b.func.nodes[ni].scope;
+        b.push_scope_id(scope);
+        let input_grads = vjp(b, &node_op, &inputs, out_v, g);
+        b.pop_scope();
+        for (inp, ig) in inputs.iter().zip(input_grads) {
+            if let Some(ig) = ig {
+                accumulate(b, &mut grad, *inp, ig);
+            }
+        }
+    }
+
+    wrt.iter().map(|v| grad[v.index()]).collect()
+}
+
+fn accumulate(b: &mut GraphBuilder, grad: &mut [Option<ValueId>], v: ValueId, g: ValueId) {
+    grad[v.index()] = Some(match grad[v.index()] {
+        None => g,
+        Some(prev) => b.add(prev, g),
+    });
+}
+
+/// Vector-Jacobian product: cotangents for each input of `op` given the
+/// cotangent `g` of its output `out_v`.
+fn vjp(
+    b: &mut GraphBuilder,
+    op: &OpKind,
+    inputs: &[ValueId],
+    out_v: ValueId,
+    g: ValueId,
+) -> Vec<Option<ValueId>> {
+    match op {
+        OpKind::Const { .. } | OpKind::Iota { .. } => vec![],
+        OpKind::Add => vec![Some(g), Some(g)],
+        OpKind::Sub => {
+            let ng = b.neg(g);
+            vec![Some(g), Some(ng)]
+        }
+        OpKind::Mul => {
+            let ga = b.mul(g, inputs[1]);
+            let gb = b.mul(g, inputs[0]);
+            vec![Some(ga), Some(gb)]
+        }
+        OpKind::Div => {
+            // d/da (a/b) = 1/b ; d/db = -a/b^2 = -(a/b)/b = -out/b
+            let ga = b.div(g, inputs[1]);
+            let gy = b.mul(g, out_v);
+            let gyb = b.div(gy, inputs[1]);
+            let gb = b.neg(gyb);
+            vec![Some(ga), Some(gb)]
+        }
+        OpKind::Max | OpKind::Min => {
+            let dir = if matches!(op, OpKind::Max) { CmpDir::Ge } else { CmpDir::Le };
+            let pred = b.compare(dir, inputs[0], inputs[1]);
+            let ty = b.ty(g).clone();
+            let zero = b.constant(0.0, ty);
+            let ga = b.select(pred, g, zero);
+            let gb = b.select(pred, zero, g);
+            vec![Some(ga), Some(gb)]
+        }
+        OpKind::Neg => {
+            let ng = b.neg(g);
+            vec![Some(ng)]
+        }
+        OpKind::Exp => {
+            // y = e^x, dy = y
+            let gx = b.mul(g, out_v);
+            vec![Some(gx)]
+        }
+        OpKind::Log => {
+            let gx = b.div(g, inputs[0]);
+            vec![Some(gx)]
+        }
+        OpKind::Tanh => {
+            // 1 - y^2
+            let y2 = b.mul(out_v, out_v);
+            let ty = b.ty(y2).clone();
+            let one = b.constant(1.0, ty);
+            let d = b.sub(one, y2);
+            let gx = b.mul(g, d);
+            vec![Some(gx)]
+        }
+        OpKind::Rsqrt => {
+            // y = x^{-1/2}; dy/dx = -1/2 x^{-3/2} = -0.5 y^3
+            let y2 = b.mul(out_v, out_v);
+            let y3 = b.mul(y2, out_v);
+            let s = b.scale(y3, -0.5);
+            let gx = b.mul(g, s);
+            vec![Some(gx)]
+        }
+        OpKind::Sqrt => {
+            // dy/dx = 0.5 / y
+            let gy = b.scale(g, 0.5);
+            let gx = b.div(gy, out_v);
+            vec![Some(gx)]
+        }
+        OpKind::Abs => {
+            let ty = b.ty(inputs[0]).clone();
+            let zero = b.constant(0.0, ty.clone());
+            let pred = b.compare(CmpDir::Ge, inputs[0], zero);
+            let ng = b.neg(g);
+            let gx = b.select(pred, g, ng);
+            vec![Some(gx)]
+        }
+        OpKind::Compare { .. } => vec![None, None],
+        OpKind::Select => {
+            let ty = b.ty(g).clone();
+            let zero = b.constant(0.0, ty);
+            let gt = b.select(inputs[0], g, zero);
+            let ge = b.select(inputs[0], zero, g);
+            vec![None, Some(gt), Some(ge)]
+        }
+        OpKind::Convert => {
+            let dtype = b.ty(inputs[0]).dtype;
+            let gx = b.convert(g, dtype);
+            vec![Some(gx)]
+        }
+        OpKind::Dot(d) => vjp_dot(b, d, inputs, g),
+        OpKind::Reduce { kind: ReduceKind::Sum, dims } => {
+            let in_ty = b.ty(inputs[0]).clone();
+            let kept: Vec<usize> = (0..in_ty.rank()).filter(|i| !dims.contains(i)).collect();
+            let gx = b.broadcast(g, kept, in_ty);
+            vec![Some(gx)]
+        }
+        OpKind::Reduce { kind: ReduceKind::Max, dims } => {
+            // indicator(x == broadcast(y)) * broadcast(g)
+            let in_ty = b.ty(inputs[0]).clone();
+            let kept: Vec<usize> = (0..in_ty.rank()).filter(|i| !dims.contains(i)).collect();
+            let yb = b.broadcast(out_v, kept.clone(), in_ty.clone());
+            let gb = b.broadcast(g, kept, in_ty.clone());
+            let pred = b.compare(CmpDir::Eq, inputs[0], yb);
+            let zero = b.constant(0.0, in_ty);
+            let gx = b.select(pred, gb, zero);
+            vec![Some(gx)]
+        }
+        OpKind::Broadcast { dims } => {
+            let in_ty = b.ty(inputs[0]).clone();
+            let out_rank = b.ty(out_v).rank();
+            // Only pure (non size-1-stretching, increasing-dims) broadcasts
+            // are emitted by the builder helpers.
+            debug_assert!(dims.windows(2).all(|w| w[0] < w[1]));
+            for (i, &rd) in dims.iter().enumerate() {
+                debug_assert_eq!(
+                    b.ty(inputs[0]).dims[i],
+                    b.ty(out_v).dims[rd],
+                    "size-1 stretching broadcast has no autodiff rule"
+                );
+            }
+            let reduce_dims: Vec<usize> = (0..out_rank).filter(|d| !dims.contains(d)).collect();
+            let gx = if reduce_dims.is_empty() {
+                g
+            } else {
+                b.reduce_sum(g, reduce_dims)
+            };
+            // After reducing, dims are the kept (mapped) dims in increasing
+            // order == operand dims order.
+            let _ = in_ty;
+            vec![Some(gx)]
+        }
+        OpKind::Reshape => {
+            let in_dims = b.dims(inputs[0]);
+            let gx = b.reshape(g, &in_dims);
+            vec![Some(gx)]
+        }
+        OpKind::Transpose { perm } => {
+            let mut inv = vec![0usize; perm.len()];
+            for (i, &p) in perm.iter().enumerate() {
+                inv[p] = i;
+            }
+            let gx = b.transpose(g, inv);
+            vec![Some(gx)]
+        }
+        OpKind::Gather => {
+            // grad_table[v, ...] = sum over lookups of g rows with index v.
+            let table_ty = b.ty(inputs[0]).clone();
+            let ids_ty = b.ty(inputs[1]).clone();
+            let e_total: i64 = ids_ty.dims.iter().product();
+            let mut flat_g_dims = vec![e_total];
+            flat_g_dims.extend_from_slice(&table_ty.dims[1..]);
+            let gf = b.reshape(g, &flat_g_dims);
+            let ids_flat = b.reshape(inputs[1], &[e_total]);
+            let gt = b.segment_sum(gf, ids_flat, table_ty.dims[0]);
+            vec![Some(gt), None]
+        }
+        OpKind::SegmentSum { .. } => {
+            // grad_data[e, ...] = g[ids[e], ...]
+            let gd = b.gather(g, inputs[1]);
+            vec![Some(gd), None]
+        }
+    }
+}
+
+/// VJP for dot_general. Output canonical layout is
+/// `[batch..., lhs_free..., rhs_free...]`.
+fn vjp_dot(
+    b: &mut GraphBuilder,
+    d: &DotDims,
+    inputs: &[ValueId],
+    g: ValueId,
+) -> Vec<Option<ValueId>> {
+    let lhs = inputs[0];
+    let rhs = inputs[1];
+    let lhs_rank = b.ty(lhs).rank();
+    let rhs_rank = b.ty(rhs).rank();
+    let lhs_free = d.free_dims(lhs_rank, &d.lhs_batch, &d.lhs_contract);
+    let rhs_free = d.free_dims(rhs_rank, &d.rhs_batch, &d.rhs_contract);
+    let nb = d.lhs_batch.len();
+    let nlf = lhs_free.len();
+    let nrf = rhs_free.len();
+
+    // ---- grad lhs: dot(g, rhs) contracting g's rhs_free block with rhs's
+    // free dims; canonical result layout [batch, lhs_free, lhs_contract].
+    let d_l = DotDims {
+        lhs_batch: (0..nb).collect(),
+        rhs_batch: d.rhs_batch.clone(),
+        lhs_contract: (nb + nlf..nb + nlf + nrf).collect(),
+        rhs_contract: rhs_free.clone(),
+    };
+    let gl_canon = b.dot(d_l, g, rhs);
+    // Transpose canonical -> lhs layout: lhs dim `dim` sits at canonical
+    // position pos(dim); transpose result dim i = operand dim perm[i],
+    // we want result dim `dim` = canonical pos(dim).
+    let mut perm_l = vec![0usize; lhs_rank];
+    for (k, &bd) in d.lhs_batch.iter().enumerate() {
+        perm_l[bd] = k;
+    }
+    for (k, &fd) in lhs_free.iter().enumerate() {
+        perm_l[fd] = nb + k;
+    }
+    for (k, &cd) in d.lhs_contract.iter().enumerate() {
+        perm_l[cd] = nb + nlf + k;
+    }
+    let gl = if perm_l.iter().enumerate().all(|(i, &p)| i == p) {
+        gl_canon
+    } else {
+        b.transpose(gl_canon, perm_l)
+    };
+
+    // ---- grad rhs: dot(g, lhs) contracting g's lhs_free block with lhs's
+    // free dims; canonical result layout [batch, rhs_free, rhs_contract].
+    let d_r = DotDims {
+        lhs_batch: (0..nb).collect(),
+        rhs_batch: d.lhs_batch.clone(),
+        lhs_contract: (nb..nb + nlf).collect(),
+        rhs_contract: lhs_free,
+    };
+    let gr_canon = b.dot(d_r, g, lhs);
+    let mut perm_r = vec![0usize; rhs_rank];
+    for (k, &bd) in d.rhs_batch.iter().enumerate() {
+        perm_r[bd] = k;
+    }
+    for (k, &fd) in rhs_free.iter().enumerate() {
+        perm_r[fd] = nb + k;
+    }
+    for (k, &cd) in d.rhs_contract.iter().enumerate() {
+        perm_r[cd] = nb + nrf + k;
+    }
+    let gr = if perm_r.iter().enumerate().all(|(i, &p)| i == p) {
+        gr_canon
+    } else {
+        b.transpose(gr_canon, perm_r)
+    };
+
+    vec![Some(gl), Some(gr)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::graph::ArgKind;
+    use crate::ir::interp::{eval_all, Tensor};
+    use crate::ir::types::TensorType;
+    use crate::ir::verify::verify;
+    use crate::util::rng::Rng;
+
+    /// Check d(loss)/d(args) against central finite differences.
+    fn check_grads(build: impl Fn(&mut GraphBuilder) -> (Vec<ValueId>, ValueId), seed: u64) {
+        let mut b = GraphBuilder::new("grad_test");
+        let (wrt, loss) = build(&mut b);
+        let grads = gradients(&mut b, loss, &wrt);
+        // Output loss and each gradient.
+        b.output(loss);
+        let grad_ids: Vec<ValueId> = grads.iter().map(|g| g.expect("grad missing")).collect();
+        for &g in &grad_ids {
+            b.output(g);
+        }
+        let f = b.finish();
+        verify(&f).unwrap();
+
+        let mut rng = Rng::new(seed);
+        let args: Vec<Tensor> = f
+            .args
+            .iter()
+            .map(|a| {
+                let n = a.ty.num_elements() as usize;
+                Tensor::new(&a.ty.dims, (0..n).map(|_| rng.gen_f64() * 2.0 - 1.0).collect())
+            })
+            .collect();
+        let vals = eval_all(&f, &args);
+        let eps = 1e-5;
+        for (wi, &w) in wrt.iter().enumerate() {
+            let analytic = &vals[grad_ids[wi].index()];
+            let ai = w.index(); // wrt must be args in this harness
+            for e in 0..args[ai].len() {
+                let mut plus = args.clone();
+                plus[ai].data[e] += eps;
+                let mut minus = args.clone();
+                minus[ai].data[e] -= eps;
+                let lp = eval_all(&f, &plus)[loss.index()].data[0];
+                let lm = eval_all(&f, &minus)[loss.index()].data[0];
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = analytic.data[e];
+                assert!(
+                    (fd - an).abs() < 1e-4 * (1.0 + fd.abs().max(an.abs())),
+                    "grad mismatch wrt arg{ai}[{e}]: fd={fd} analytic={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grad_matmul_bias_reduce() {
+        check_grads(
+            |b| {
+                let x = b.arg("x", TensorType::f32(&[3, 4]), ArgKind::Input);
+                let w = b.arg("w", TensorType::f32(&[4, 2]), ArgKind::Parameter);
+                let bias = b.arg("b", TensorType::f32(&[2]), ArgKind::Parameter);
+                let y = b.matmul(x, w);
+                let yty = b.ty(y).clone();
+                let bb = b.broadcast_to(bias, yty);
+                let z = b.add(y, bb);
+                let loss = b.reduce_sum(z, vec![0, 1]);
+                (vec![w, bias], loss)
+            },
+            1,
+        );
+    }
+
+    #[test]
+    fn grad_elementwise_chain() {
+        check_grads(
+            |b| {
+                let x = b.arg("x", TensorType::f32(&[5]), ArgKind::Parameter);
+                let e = b.exp(x);
+                let t = b.tanh(e);
+                let s = b.mul(t, x);
+                let q = b.shift(s, 3.0);
+                let l = b.log(q);
+                let loss = b.reduce_sum(l, vec![0]);
+                (vec![x], loss)
+            },
+            2,
+        );
+    }
+
+    #[test]
+    fn grad_softmax() {
+        check_grads(
+            |b| {
+                let x = b.arg("x", TensorType::f32(&[2, 3]), ArgKind::Parameter);
+                let s = b.softmax_last(x);
+                let s2 = b.mul(s, s);
+                let loss = b.reduce_sum(s2, vec![0, 1]);
+                (vec![x], loss)
+            },
+            3,
+        );
+    }
+
+    #[test]
+    fn grad_gelu_layernorm() {
+        check_grads(
+            |b| {
+                let x = b.arg("x", TensorType::f32(&[2, 4]), ArgKind::Parameter);
+                let gamma = b.arg("gamma", TensorType::f32(&[4]), ArgKind::Parameter);
+                let beta = b.arg("beta", TensorType::f32(&[4]), ArgKind::Parameter);
+                let n = b.layer_norm(x, gamma, beta);
+                let g = b.gelu(n);
+                let loss = b.reduce_sum(g, vec![0, 1]);
+                (vec![x, gamma, beta], loss)
+            },
+            4,
+        );
+    }
+
+    #[test]
+    fn grad_batched_dot_with_transpose() {
+        check_grads(
+            |b| {
+                let q = b.arg("q", TensorType::f32(&[2, 3, 4]), ArgKind::Parameter);
+                let k = b.arg("k", TensorType::f32(&[2, 3, 4]), ArgKind::Parameter);
+                // scores[b,i,j] = sum_d q[b,i,d] k[b,j,d]
+                let d = DotDims {
+                    lhs_batch: vec![0],
+                    rhs_batch: vec![0],
+                    lhs_contract: vec![2],
+                    rhs_contract: vec![2],
+                };
+                let s = b.dot(d, q, k);
+                let sm = b.softmax_last(s);
+                let loss_pre = b.mul(sm, sm);
+                let loss = b.reduce_sum(loss_pre, vec![0, 1, 2]);
+                (vec![q, k], loss)
+            },
+            5,
+        );
+    }
+
+    #[test]
+    fn grad_div_sqrt_rsqrt_abs() {
+        check_grads(
+            |b| {
+                let x = b.arg("x", TensorType::f32(&[4]), ArgKind::Parameter);
+                let shifted = b.shift(x, 3.0); // keep positive-ish
+                let s = b.sqrt(shifted);
+                let r = b.rsqrt(shifted);
+                let a = b.abs(x);
+                let num = b.add(s, a);
+                let q = b.div(num, r);
+                let loss = b.reduce_sum(q, vec![0]);
+                (vec![x], loss)
+            },
+            6,
+        );
+    }
+
+    #[test]
+    fn grad_gather_segment_sum() {
+        // Embedding-style: loss = sum(gather(table, ids)^2)
+        let mut b = GraphBuilder::new("g");
+        let table = b.arg("t", TensorType::f32(&[4, 3]), ArgKind::Parameter);
+        let ids = b.arg("i", TensorType::i32(&[5]), ArgKind::Input);
+        let g = b.gather(table, ids);
+        let g2 = b.mul(g, g);
+        let loss = b.reduce_sum(g2, vec![0, 1]);
+        let grads = gradients(&mut b, loss, &[table]);
+        let gt = grads[0].unwrap();
+        b.output(loss);
+        b.output(gt);
+        let f = b.finish();
+        verify(&f).unwrap();
+
+        let t = Tensor::new(&[4, 3], (0..12).map(|x| x as f64 * 0.1).collect());
+        let i = Tensor::new(&[5], vec![1.0, 3.0, 1.0, 0.0, 2.0]);
+        let vals = eval_all(&f, &[t.clone(), i]);
+        let gt_v = &vals[gt.index()];
+        // grad_table[v] = 2 * t[v] * count(v in ids)
+        let counts = [1.0, 2.0, 1.0, 1.0];
+        for v in 0..4 {
+            for c in 0..3 {
+                let expect = 2.0 * t.data[v * 3 + c] * counts[v];
+                let got = gt_v.data[v * 3 + c];
+                assert!((got - expect).abs() < 1e-12, "v={v} c={c}: {got} vs {expect}");
+            }
+        }
+    }
+
+    #[test]
+    fn grad_max_reduce_and_select() {
+        check_grads(
+            |b| {
+                let x = b.arg("x", TensorType::f32(&[3, 3]), ArgKind::Parameter);
+                let m = b.reduce_max(x, vec![1]);
+                let loss = b.reduce_sum(m, vec![0]);
+                (vec![x], loss)
+            },
+            7,
+        );
+    }
+
+    #[test]
+    fn unused_arg_has_no_grad() {
+        let mut b = GraphBuilder::new("g");
+        let x = b.arg("x", TensorType::f32(&[2]), ArgKind::Parameter);
+        let y = b.arg("y", TensorType::f32(&[2]), ArgKind::Parameter);
+        let s = b.reduce_sum(x, vec![0]);
+        let grads = gradients(&mut b, s, &[x, y]);
+        assert!(grads[0].is_some());
+        assert!(grads[1].is_none());
+    }
+}

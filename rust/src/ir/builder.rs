@@ -1,0 +1,330 @@
+//! Ergonomic graph builder. All shape inference goes through
+//! `verify::infer_type`, so graphs are correct by construction; `verify`
+//! re-checks them in tests.
+
+use super::graph::{Arg, ArgKind, Func, Node, ScopeId, ValueId, ROOT_SCOPE};
+use super::op::{CmpDir, DotDims, OpKind, ReduceKind};
+use super::types::{DType, TensorType};
+use super::verify::infer_type;
+
+/// Builder over a [`Func`] with a current named scope (Haiku-style).
+pub struct GraphBuilder {
+    pub func: Func,
+    scope_stack: Vec<ScopeId>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        GraphBuilder { func: Func::new(name), scope_stack: vec![ROOT_SCOPE] }
+    }
+
+    pub fn current_scope(&self) -> ScopeId {
+        *self.scope_stack.last().unwrap()
+    }
+
+    /// Push a nested named scope (`with_scope("layer_0", |b| ...)` style).
+    pub fn push_scope(&mut self, name: &str) {
+        let parent = self.func.scope_path(self.current_scope()).to_string();
+        let path = if parent.is_empty() { name.to_string() } else { format!("{parent}/{name}") };
+        let id = self.func.intern_scope(&path);
+        self.scope_stack.push(id);
+    }
+
+    pub fn pop_scope(&mut self) {
+        assert!(self.scope_stack.len() > 1, "cannot pop root scope");
+        self.scope_stack.pop();
+    }
+
+    /// Push an already-interned scope id (used by autodiff so backward
+    /// nodes inherit the scope of their forward node).
+    pub fn push_scope_id(&mut self, s: ScopeId) {
+        self.scope_stack.push(s);
+    }
+
+    /// Declare a function argument.
+    pub fn arg(&mut self, name: impl Into<String>, ty: TensorType, kind: ArgKind) -> ValueId {
+        let scope = self.current_scope();
+        self.func.args.push(Arg { name: name.into(), ty, kind, scope });
+        assert!(
+            self.func.nodes.is_empty(),
+            "all arguments must be declared before the first node"
+        );
+        ValueId((self.func.args.len() - 1) as u32)
+    }
+
+    fn push(&mut self, op: OpKind, inputs: Vec<ValueId>, hint: Option<TensorType>) -> ValueId {
+        let in_tys: Vec<&TensorType> = inputs.iter().map(|&v| self.func.value_type(v)).collect();
+        let ty = infer_type(&op, &in_tys, hint.as_ref())
+            .unwrap_or_else(|e| panic!("builder: {e} (op={op:?})"));
+        let scope = self.current_scope();
+        self.func.nodes.push(Node { op, inputs, ty, scope });
+        self.func.value_of_node(self.func.nodes.len() - 1)
+    }
+
+    pub fn output(&mut self, v: ValueId) {
+        self.func.outputs.push(v);
+    }
+
+    pub fn finish(self) -> Func {
+        self.func
+    }
+
+    pub fn ty(&self, v: ValueId) -> &TensorType {
+        self.func.value_type(v)
+    }
+    pub fn dims(&self, v: ValueId) -> Vec<i64> {
+        self.func.value_type(v).dims.clone()
+    }
+
+    // ---- op helpers -----------------------------------------------------
+
+    pub fn constant(&mut self, value: f64, ty: TensorType) -> ValueId {
+        self.push(OpKind::Const { value }, vec![], Some(ty))
+    }
+    pub fn scalar(&mut self, value: f64) -> ValueId {
+        self.constant(value, TensorType::scalar(DType::F32))
+    }
+    pub fn iota(&mut self, dim: usize, ty: TensorType) -> ValueId {
+        self.push(OpKind::Iota { dim }, vec![], Some(ty))
+    }
+
+    pub fn add(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.push(OpKind::Add, vec![a, b], None)
+    }
+    pub fn sub(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.push(OpKind::Sub, vec![a, b], None)
+    }
+    pub fn mul(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.push(OpKind::Mul, vec![a, b], None)
+    }
+    pub fn div(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.push(OpKind::Div, vec![a, b], None)
+    }
+    pub fn max(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.push(OpKind::Max, vec![a, b], None)
+    }
+    pub fn min(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.push(OpKind::Min, vec![a, b], None)
+    }
+    pub fn neg(&mut self, a: ValueId) -> ValueId {
+        self.push(OpKind::Neg, vec![a], None)
+    }
+    pub fn exp(&mut self, a: ValueId) -> ValueId {
+        self.push(OpKind::Exp, vec![a], None)
+    }
+    pub fn log(&mut self, a: ValueId) -> ValueId {
+        self.push(OpKind::Log, vec![a], None)
+    }
+    pub fn tanh(&mut self, a: ValueId) -> ValueId {
+        self.push(OpKind::Tanh, vec![a], None)
+    }
+    pub fn rsqrt(&mut self, a: ValueId) -> ValueId {
+        self.push(OpKind::Rsqrt, vec![a], None)
+    }
+    pub fn sqrt(&mut self, a: ValueId) -> ValueId {
+        self.push(OpKind::Sqrt, vec![a], None)
+    }
+    pub fn abs(&mut self, a: ValueId) -> ValueId {
+        self.push(OpKind::Abs, vec![a], None)
+    }
+    pub fn compare(&mut self, dir: CmpDir, a: ValueId, b: ValueId) -> ValueId {
+        self.push(OpKind::Compare { dir }, vec![a, b], None)
+    }
+    pub fn select(&mut self, pred: ValueId, t: ValueId, f: ValueId) -> ValueId {
+        self.push(OpKind::Select, vec![pred, t, f], None)
+    }
+    pub fn convert(&mut self, a: ValueId, dtype: DType) -> ValueId {
+        let dims = self.dims(a);
+        self.push(OpKind::Convert, vec![a], Some(TensorType::new(dtype, &dims)))
+    }
+
+    pub fn dot(&mut self, d: DotDims, a: ValueId, b: ValueId) -> ValueId {
+        self.push(OpKind::Dot(d), vec![a, b], None)
+    }
+    /// Plain matmul contracting `a`'s last dim with `b`'s first dim.
+    pub fn matmul(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        let d = DotDims::matmul(self.ty(a).rank());
+        self.dot(d, a, b)
+    }
+
+    pub fn reduce_sum(&mut self, a: ValueId, dims: Vec<usize>) -> ValueId {
+        self.push(OpKind::Reduce { kind: ReduceKind::Sum, dims }, vec![a], None)
+    }
+    pub fn reduce_max(&mut self, a: ValueId, dims: Vec<usize>) -> ValueId {
+        self.push(OpKind::Reduce { kind: ReduceKind::Max, dims }, vec![a], None)
+    }
+
+    pub fn broadcast(&mut self, a: ValueId, dims: Vec<usize>, result: TensorType) -> ValueId {
+        self.push(OpKind::Broadcast { dims }, vec![a], Some(result))
+    }
+    /// Broadcast a scalar to `result` shape.
+    pub fn splat(&mut self, a: ValueId, result: TensorType) -> ValueId {
+        assert_eq!(self.ty(a).rank(), 0, "splat needs a scalar operand");
+        self.push(OpKind::Broadcast { dims: vec![] }, vec![a], Some(result))
+    }
+    /// Broadcast `a` (rank r) into `result` aligning `a`'s dims with the
+    /// TRAILING dims of `result` (numpy-style right alignment).
+    pub fn broadcast_to(&mut self, a: ValueId, result: TensorType) -> ValueId {
+        let r_op = self.ty(a).rank();
+        let r_res = result.rank();
+        assert!(r_op <= r_res);
+        let dims: Vec<usize> = (r_res - r_op..r_res).collect();
+        self.push(OpKind::Broadcast { dims }, vec![a], Some(result))
+    }
+
+    pub fn reshape(&mut self, a: ValueId, dims: &[i64]) -> ValueId {
+        let dtype = self.ty(a).dtype;
+        self.push(OpKind::Reshape, vec![a], Some(TensorType::new(dtype, dims)))
+    }
+    pub fn transpose(&mut self, a: ValueId, perm: Vec<usize>) -> ValueId {
+        self.push(OpKind::Transpose { perm }, vec![a], None)
+    }
+    pub fn gather(&mut self, table: ValueId, indices: ValueId) -> ValueId {
+        self.push(OpKind::Gather, vec![table, indices], None)
+    }
+    pub fn segment_sum(&mut self, data: ValueId, ids: ValueId, num: i64) -> ValueId {
+        self.push(OpKind::SegmentSum { num }, vec![data, ids], None)
+    }
+
+    // ---- composite helpers (decomposed, as XLA would see them) ----------
+
+    /// `a * scalar_const` (splat + mul).
+    pub fn scale(&mut self, a: ValueId, c: f64) -> ValueId {
+        let ty = self.ty(a).clone();
+        let k = self.constant(c, ty);
+        self.mul(a, k)
+    }
+
+    /// `a + scalar_const`.
+    pub fn shift(&mut self, a: ValueId, c: f64) -> ValueId {
+        let ty = self.ty(a).clone();
+        let k = self.constant(c, ty);
+        self.add(a, k)
+    }
+
+    /// Numerically-stable softmax along the last dim, decomposed into
+    /// primitive ops (max, sub, exp, sum, div) as a compiler would see it.
+    pub fn softmax_last(&mut self, a: ValueId) -> ValueId {
+        let dims = self.dims(a);
+        let last = dims.len() - 1;
+        let m = self.reduce_max(a, vec![last]);
+        let ty = self.ty(a).clone();
+        let bcast_dims: Vec<usize> = (0..last).collect();
+        let mb = self.broadcast(m, bcast_dims.clone(), ty.clone());
+        let centered = self.sub(a, mb);
+        let e = self.exp(centered);
+        let s = self.reduce_sum(e, vec![last]);
+        let sb = self.broadcast(s, bcast_dims, ty);
+        self.div(e, sb)
+    }
+
+    /// GELU via the tanh approximation, fully decomposed.
+    pub fn gelu(&mut self, x: ValueId) -> ValueId {
+        // 0.5 * x * (1 + tanh(sqrt(2/pi) * (x + 0.044715 x^3)))
+        let x2 = self.mul(x, x);
+        let x3 = self.mul(x2, x);
+        let inner_c = self.scale(x3, 0.044715);
+        let inner = self.add(x, inner_c);
+        let scaled = self.scale(inner, 0.7978845608028654);
+        let t = self.tanh(scaled);
+        let one_plus = self.shift(t, 1.0);
+        let half_x = self.scale(x, 0.5);
+        self.mul(half_x, one_plus)
+    }
+
+    /// Layer norm over the last dim (mean/var decomposition); `gamma`,
+    /// `beta` are rank-1 of the last-dim size.
+    pub fn layer_norm(&mut self, x: ValueId, gamma: ValueId, beta: ValueId) -> ValueId {
+        let dims = self.dims(x);
+        let last = dims.len() - 1;
+        let n = dims[last] as f64;
+        let ty = self.ty(x).clone();
+        let bcast_dims: Vec<usize> = (0..last).collect();
+
+        let s = self.reduce_sum(x, vec![last]);
+        let mean = self.scale(s, 1.0 / n);
+        let mean_b = self.broadcast(mean, bcast_dims.clone(), ty.clone());
+        let centered = self.sub(x, mean_b);
+        let sq = self.mul(centered, centered);
+        let var_s = self.reduce_sum(sq, vec![last]);
+        let var = self.scale(var_s, 1.0 / n);
+        let var_eps = self.shift(var, 1e-5);
+        let rstd = self.rsqrt(var_eps);
+        let rstd_b = self.broadcast(rstd, bcast_dims, ty.clone());
+        let normed = self.mul(centered, rstd_b);
+        let gamma_b = self.broadcast_to(gamma, ty.clone());
+        let beta_b = self.broadcast_to(beta, ty);
+        let scaled = self.mul(normed, gamma_b);
+        self.add(scaled, beta_b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verify::verify;
+
+    #[test]
+    fn linear_layer_builds_and_verifies() {
+        let mut b = GraphBuilder::new("linear");
+        let x = b.arg("x", TensorType::f32(&[8, 16]), ArgKind::Input);
+        let w = b.arg("w", TensorType::f32(&[16, 64]), ArgKind::Parameter);
+        let bias = b.arg("b", TensorType::f32(&[64]), ArgKind::Parameter);
+        let y = b.matmul(x, w);
+        let yty = b.ty(y).clone();
+        let bb = b.broadcast_to(bias, yty);
+        let out = b.add(y, bb);
+        b.output(out);
+        let f = b.finish();
+        assert_eq!(f.value_type(out).dims, vec![8, 64]);
+        verify(&f).unwrap();
+    }
+
+    #[test]
+    fn softmax_and_gelu_verify() {
+        let mut b = GraphBuilder::new("sm");
+        let x = b.arg("x", TensorType::f32(&[2, 4, 8]), ArgKind::Input);
+        let s = b.softmax_last(x);
+        let g = b.gelu(s);
+        b.output(g);
+        let f = b.finish();
+        verify(&f).unwrap();
+        assert_eq!(f.value_type(g).dims, vec![2, 4, 8]);
+    }
+
+    #[test]
+    fn layer_norm_verifies() {
+        let mut b = GraphBuilder::new("ln");
+        let x = b.arg("x", TensorType::f32(&[4, 32]), ArgKind::Input);
+        let g = b.arg("gamma", TensorType::f32(&[32]), ArgKind::Parameter);
+        let be = b.arg("beta", TensorType::f32(&[32]), ArgKind::Parameter);
+        let y = b.layer_norm(x, g, be);
+        b.output(y);
+        verify(&b.finish()).unwrap();
+        let _ = y;
+    }
+
+    #[test]
+    fn scopes_propagate_to_nodes() {
+        let mut b = GraphBuilder::new("s");
+        let x = b.arg("x", TensorType::f32(&[2]), ArgKind::Input);
+        b.push_scope("layer_0");
+        b.push_scope("attn");
+        let y = b.neg(x);
+        b.pop_scope();
+        b.pop_scope();
+        b.output(y);
+        let f = b.finish();
+        let n = f.node_of(y).unwrap();
+        assert_eq!(f.scope_path(f.nodes[n].scope), "layer_0/attn");
+    }
+
+    #[test]
+    #[should_panic(expected = "builder:")]
+    fn bad_shapes_panic_at_build_time() {
+        let mut b = GraphBuilder::new("bad");
+        let x = b.arg("x", TensorType::f32(&[2]), ArgKind::Input);
+        let y = b.arg("y", TensorType::f32(&[3]), ArgKind::Input);
+        b.add(x, y);
+    }
+}

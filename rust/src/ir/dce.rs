@@ -1,0 +1,86 @@
+//! Dead-code elimination: drop nodes not reachable from the outputs and
+//! compact value ids. Model builders run this before handing graphs to
+//! the partitioner so op counts reported in EXPERIMENTS.md are honest.
+
+use super::graph::{Func, Node, ValueId};
+
+/// Returns a new function with dead nodes removed, plus the value remap
+/// (old id -> new id; None if removed). Arguments are always kept (they
+/// are the partitioner's decision points even when unused).
+pub fn dce(f: &Func) -> (Func, Vec<Option<ValueId>>) {
+    let live = f.live_nodes();
+    let mut remap: Vec<Option<ValueId>> = vec![None; f.num_values()];
+    for i in 0..f.num_args() {
+        remap[i] = Some(ValueId(i as u32));
+    }
+    let mut new_nodes: Vec<Node> = Vec::with_capacity(f.num_nodes());
+    for (ni, node) in f.nodes.iter().enumerate() {
+        if !live[ni] {
+            continue;
+        }
+        let new_inputs: Vec<ValueId> = node
+            .inputs
+            .iter()
+            .map(|&v| remap[v.index()].expect("live node uses dead value"))
+            .collect();
+        new_nodes.push(Node {
+            op: node.op.clone(),
+            inputs: new_inputs,
+            ty: node.ty.clone(),
+            scope: node.scope,
+        });
+        remap[f.value_of_node(ni).index()] =
+            Some(ValueId((f.num_args() + new_nodes.len() - 1) as u32));
+    }
+    let out = Func {
+        name: f.name.clone(),
+        args: f.args.clone(),
+        nodes: new_nodes,
+        outputs: f.outputs.iter().map(|&o| remap[o.index()].unwrap()).collect(),
+        scopes: f.scopes.clone(),
+    };
+    (out, remap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+    use crate::ir::graph::ArgKind;
+    use crate::ir::interp::{eval, Tensor};
+    use crate::ir::types::TensorType;
+    use crate::ir::verify::verify;
+
+    #[test]
+    fn removes_dead_nodes_and_preserves_semantics() {
+        let mut b = GraphBuilder::new("d");
+        let x = b.arg("x", TensorType::f32(&[3]), ArgKind::Input);
+        let live1 = b.neg(x);
+        let _dead1 = b.exp(x);
+        let _dead2 = b.tanh(x);
+        let out = b.mul(live1, x);
+        b.output(out);
+        let f = b.finish();
+        assert_eq!(f.num_nodes(), 4);
+
+        let (g, remap) = dce(&f);
+        verify(&g).unwrap();
+        assert_eq!(g.num_nodes(), 2);
+        assert!(remap[f.node_of(out).unwrap() + f.num_args()].is_some());
+
+        let xs = Tensor::new(&[3], vec![1.0, -2.0, 0.5]);
+        assert_eq!(eval(&f, &[xs.clone()]), eval(&g, &[xs]));
+    }
+
+    #[test]
+    fn keeps_unused_args() {
+        let mut b = GraphBuilder::new("d");
+        let x = b.arg("x", TensorType::f32(&[2]), ArgKind::Input);
+        let _unused = b.arg("u", TensorType::f32(&[2]), ArgKind::Parameter);
+        let y = b.neg(x);
+        b.output(y);
+        let (g, _) = dce(&b.finish());
+        assert_eq!(g.num_args(), 2);
+        verify(&g).unwrap();
+    }
+}

@@ -1,0 +1,267 @@
+//! SSA graph representation of a function in the base tensor dialect.
+//!
+//! Values are densely numbered: ids `0..num_args` are function arguments,
+//! ids `num_args..` are node results (one result per node). Nodes are
+//! stored in topological order by construction (the builder only lets a
+//! node reference already-created values), which lets every analysis be a
+//! single forward or backward sweep.
+
+use super::op::OpKind;
+use super::types::TensorType;
+
+/// Dense value id: argument or node result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ValueId(pub u32);
+
+impl ValueId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Interned named-scope id (Haiku-style module paths, e.g.
+/// `"transformer/layer_3/attn"`). Scope 0 is the root `""`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ScopeId(pub u32);
+
+pub const ROOT_SCOPE: ScopeId = ScopeId(0);
+
+/// What role a function argument plays — the worklist and the featurizer
+/// both key off this (paper §2.3: "weights and biases, optimiser state,
+/// and model inputs").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArgKind {
+    /// Trainable parameter.
+    Parameter,
+    /// Optimiser state (Adam moments, step counter).
+    OptState,
+    /// Model input (tokens, targets, graph features...).
+    Input,
+    /// Non-trainable constant passed in (masks, scales).
+    Constant,
+}
+
+impl ArgKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArgKind::Parameter => "param",
+            ArgKind::OptState => "opt_state",
+            ArgKind::Input => "input",
+            ArgKind::Constant => "const",
+        }
+    }
+    pub fn kind_id(&self) -> usize {
+        match self {
+            ArgKind::Parameter => 0,
+            ArgKind::OptState => 1,
+            ArgKind::Input => 2,
+            ArgKind::Constant => 3,
+        }
+    }
+    pub const NUM_KINDS: usize = 4;
+}
+
+/// A function argument.
+#[derive(Debug, Clone)]
+pub struct Arg {
+    pub name: String,
+    pub ty: TensorType,
+    pub kind: ArgKind,
+    pub scope: ScopeId,
+}
+
+/// A node: one operation producing one value.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: OpKind,
+    pub inputs: Vec<ValueId>,
+    pub ty: TensorType,
+    pub scope: ScopeId,
+}
+
+/// A function: the unit the partitioner operates on (the paper partitions
+/// the whole training-update function).
+#[derive(Debug, Clone)]
+pub struct Func {
+    pub name: String,
+    pub args: Vec<Arg>,
+    pub nodes: Vec<Node>,
+    pub outputs: Vec<ValueId>,
+    /// Interned scope path strings; index = ScopeId.0.
+    pub scopes: Vec<String>,
+}
+
+impl Func {
+    pub fn new(name: impl Into<String>) -> Func {
+        Func {
+            name: name.into(),
+            args: Vec::new(),
+            nodes: Vec::new(),
+            outputs: Vec::new(),
+            scopes: vec![String::new()],
+        }
+    }
+
+    pub fn num_args(&self) -> usize {
+        self.args.len()
+    }
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+    pub fn num_values(&self) -> usize {
+        self.args.len() + self.nodes.len()
+    }
+
+    pub fn is_arg(&self, v: ValueId) -> bool {
+        v.index() < self.args.len()
+    }
+
+    /// Node index for a node-result value (None for arguments).
+    pub fn node_of(&self, v: ValueId) -> Option<usize> {
+        v.index().checked_sub(self.args.len())
+    }
+
+    pub fn value_of_node(&self, node_idx: usize) -> ValueId {
+        ValueId((self.args.len() + node_idx) as u32)
+    }
+
+    pub fn value_type(&self, v: ValueId) -> &TensorType {
+        match self.node_of(v) {
+            None => &self.args[v.index()].ty,
+            Some(n) => &self.nodes[n].ty,
+        }
+    }
+
+    pub fn value_scope(&self, v: ValueId) -> ScopeId {
+        match self.node_of(v) {
+            None => self.args[v.index()].scope,
+            Some(n) => self.nodes[n].scope,
+        }
+    }
+
+    /// Human-readable name for a value (`%argN:name` or `%N`).
+    pub fn value_name(&self, v: ValueId) -> String {
+        match self.node_of(v) {
+            None => format!("%arg{}:{}", v.index(), self.args[v.index()].name),
+            Some(n) => format!("%{n}"),
+        }
+    }
+
+    /// Intern a scope path string.
+    pub fn intern_scope(&mut self, path: &str) -> ScopeId {
+        if let Some(i) = self.scopes.iter().position(|s| s == path) {
+            return ScopeId(i as u32);
+        }
+        self.scopes.push(path.to_string());
+        ScopeId((self.scopes.len() - 1) as u32)
+    }
+
+    pub fn scope_path(&self, s: ScopeId) -> &str {
+        &self.scopes[s.0 as usize]
+    }
+
+    /// Use lists: for every value, indices of the nodes consuming it
+    /// (duplicates kept if a node uses a value twice).
+    pub fn users(&self) -> Vec<Vec<usize>> {
+        let mut users = vec![Vec::new(); self.num_values()];
+        for (ni, node) in self.nodes.iter().enumerate() {
+            for &inp in &node.inputs {
+                users[inp.index()].push(ni);
+            }
+        }
+        users
+    }
+
+    /// Total bytes of all argument tensors (one replicated copy each).
+    pub fn arg_bytes(&self) -> i64 {
+        self.args.iter().map(|a| a.ty.byte_size()).sum()
+    }
+
+    /// Count arguments by kind.
+    pub fn count_args(&self, kind: ArgKind) -> usize {
+        self.args.iter().filter(|a| a.kind == kind).count()
+    }
+
+    /// Node indices reachable backwards from the outputs (live set).
+    pub fn live_nodes(&self) -> Vec<bool> {
+        let mut live = vec![false; self.num_nodes()];
+        let mut stack: Vec<usize> =
+            self.outputs.iter().filter_map(|&o| self.node_of(o)).collect();
+        while let Some(n) = stack.pop() {
+            if live[n] {
+                continue;
+            }
+            live[n] = true;
+            for &inp in &self.nodes[n].inputs {
+                if let Some(m) = self.node_of(inp) {
+                    if !live[m] {
+                        stack.push(m);
+                    }
+                }
+            }
+        }
+        live
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::types::DType;
+
+    fn tiny() -> Func {
+        let mut f = Func::new("t");
+        f.args.push(Arg {
+            name: "x".into(),
+            ty: TensorType::f32(&[4]),
+            kind: ArgKind::Input,
+            scope: ROOT_SCOPE,
+        });
+        f.nodes.push(Node {
+            op: OpKind::Neg,
+            inputs: vec![ValueId(0)],
+            ty: TensorType::f32(&[4]),
+            scope: ROOT_SCOPE,
+        });
+        f.outputs.push(ValueId(1));
+        f
+    }
+
+    #[test]
+    fn value_indexing() {
+        let f = tiny();
+        assert!(f.is_arg(ValueId(0)));
+        assert!(!f.is_arg(ValueId(1)));
+        assert_eq!(f.node_of(ValueId(1)), Some(0));
+        assert_eq!(f.value_of_node(0), ValueId(1));
+        assert_eq!(f.value_type(ValueId(1)).dims, vec![4]);
+        assert_eq!(f.num_values(), 2);
+    }
+
+    #[test]
+    fn users_and_liveness() {
+        let f = tiny();
+        let users = f.users();
+        assert_eq!(users[0], vec![0]);
+        assert!(users[1].is_empty());
+        assert_eq!(f.live_nodes(), vec![true]);
+    }
+
+    #[test]
+    fn scope_interning() {
+        let mut f = Func::new("t");
+        let a = f.intern_scope("layer_0/attn");
+        let b = f.intern_scope("layer_0/attn");
+        let c = f.intern_scope("layer_1/attn");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(f.scope_path(a), "layer_0/attn");
+        assert_eq!(f.scope_path(ROOT_SCOPE), "");
+    }
+
+    #[test]
+    fn arg_kinds() {
+        assert_eq!(ArgKind::Parameter.kind_id(), 0);
+        assert_eq!(DType::F32.bytes(), 4);
+    }
+}

@@ -1,0 +1,444 @@
+//! Reference interpreter for the base dialect, over f64 storage.
+//!
+//! This is NOT on any hot path: it exists so transformations
+//! (autodiff, DCE) and the SPMD lowering can be validated numerically
+//! in tests (e.g. autodiff vs. finite differences; SPMD per-shard
+//! execution vs. the unpartitioned program).
+
+use super::graph::{Func, ValueId};
+use super::op::{CmpDir, DotDims, OpKind, ReduceKind};
+use super::types::TensorType;
+
+/// A dense row-major tensor with f64 storage (bools are 0.0/1.0,
+/// integers are exact up to 2^53 — plenty for index arithmetic).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<i64>,
+    pub data: Vec<f64>,
+}
+
+impl Tensor {
+    pub fn new(dims: &[i64], data: Vec<f64>) -> Tensor {
+        assert_eq!(dims.iter().product::<i64>() as usize, data.len());
+        Tensor { dims: dims.to_vec(), data }
+    }
+    pub fn splat(dims: &[i64], v: f64) -> Tensor {
+        Tensor { dims: dims.to_vec(), data: vec![v; dims.iter().product::<i64>() as usize] }
+    }
+    pub fn scalar(v: f64) -> Tensor {
+        Tensor { dims: vec![], data: vec![v] }
+    }
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.rank()];
+        for i in (0..self.rank().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.dims[i + 1] as usize;
+        }
+        s
+    }
+
+    fn map2(&self, other: &Tensor, f: impl Fn(f64, f64) -> f64) -> Tensor {
+        assert_eq!(self.dims, other.dims);
+        Tensor {
+            dims: self.dims.clone(),
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+    fn map1(&self, f: impl Fn(f64) -> f64) -> Tensor {
+        Tensor { dims: self.dims.clone(), data: self.data.iter().map(|&a| f(a)).collect() }
+    }
+}
+
+/// Iterate multi-indices of `dims` in row-major order, calling `f(idx)`.
+fn for_each_index(dims: &[i64], mut f: impl FnMut(&[i64])) {
+    let rank = dims.len();
+    let mut idx = vec![0i64; rank];
+    let total: i64 = dims.iter().product();
+    for _ in 0..total {
+        f(&idx);
+        for d in (0..rank).rev() {
+            idx[d] += 1;
+            if idx[d] < dims[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    if rank == 0 {
+        // total == 1 handled above (product of empty = 1), nothing more.
+    }
+}
+
+fn flat_index(idx: &[i64], strides: &[usize]) -> usize {
+    idx.iter().zip(strides).map(|(&i, &s)| i as usize * s).sum()
+}
+
+/// Evaluate `f` on the given argument tensors; returns values for ALL
+/// value ids (args + nodes) so tests can inspect intermediates.
+pub fn eval_all(f: &Func, args: &[Tensor]) -> Vec<Tensor> {
+    assert_eq!(args.len(), f.num_args(), "wrong number of argument tensors");
+    for (i, (a, spec)) in args.iter().zip(&f.args).enumerate() {
+        assert_eq!(a.dims, spec.ty.dims, "arg {i} ({}) shape mismatch", spec.name);
+    }
+    let mut vals: Vec<Tensor> = args.to_vec();
+    for node in &f.nodes {
+        let get = |v: ValueId| &vals[v.index()];
+        let out = eval_node(&node.op, &node.ty, &node.inputs.iter().map(|&v| v).collect::<Vec<_>>(), &get);
+        vals.push(out);
+    }
+    vals
+}
+
+/// Evaluate `f`, returning only its outputs.
+pub fn eval(f: &Func, args: &[Tensor]) -> Vec<Tensor> {
+    let vals = eval_all(f, args);
+    f.outputs.iter().map(|&o| vals[o.index()].clone()).collect()
+}
+
+fn eval_node<'a>(
+    op: &OpKind,
+    out_ty: &TensorType,
+    inputs: &[ValueId],
+    get: &impl Fn(ValueId) -> &'a Tensor,
+) -> Tensor {
+    match op {
+        OpKind::Const { value } => Tensor::splat(&out_ty.dims, *value),
+        OpKind::Iota { dim } => {
+            let mut t = Tensor::splat(&out_ty.dims, 0.0);
+            let strides = t.strides();
+            let dims = t.dims.clone();
+            let mut data = std::mem::take(&mut t.data);
+            for_each_index(&dims, |idx| {
+                data[flat_index(idx, &strides)] = idx[*dim] as f64;
+            });
+            t.data = data;
+            t
+        }
+        OpKind::Add => get(inputs[0]).map2(get(inputs[1]), |a, b| a + b),
+        OpKind::Sub => get(inputs[0]).map2(get(inputs[1]), |a, b| a - b),
+        OpKind::Mul => get(inputs[0]).map2(get(inputs[1]), |a, b| a * b),
+        OpKind::Div => get(inputs[0]).map2(get(inputs[1]), |a, b| a / b),
+        OpKind::Max => get(inputs[0]).map2(get(inputs[1]), f64::max),
+        OpKind::Min => get(inputs[0]).map2(get(inputs[1]), f64::min),
+        OpKind::Neg => get(inputs[0]).map1(|a| -a),
+        OpKind::Exp => get(inputs[0]).map1(f64::exp),
+        OpKind::Log => get(inputs[0]).map1(f64::ln),
+        OpKind::Tanh => get(inputs[0]).map1(f64::tanh),
+        OpKind::Rsqrt => get(inputs[0]).map1(|a| 1.0 / a.sqrt()),
+        OpKind::Sqrt => get(inputs[0]).map1(f64::sqrt),
+        OpKind::Abs => get(inputs[0]).map1(f64::abs),
+        OpKind::Compare { dir } => {
+            let f = |a: f64, b: f64| -> f64 {
+                let r = match dir {
+                    CmpDir::Lt => a < b,
+                    CmpDir::Le => a <= b,
+                    CmpDir::Gt => a > b,
+                    CmpDir::Ge => a >= b,
+                    CmpDir::Eq => a == b,
+                    CmpDir::Ne => a != b,
+                };
+                if r {
+                    1.0
+                } else {
+                    0.0
+                }
+            };
+            get(inputs[0]).map2(get(inputs[1]), f)
+        }
+        OpKind::Select => {
+            let p = get(inputs[0]);
+            let t = get(inputs[1]);
+            let e = get(inputs[2]);
+            assert_eq!(p.dims, t.dims);
+            let data = p
+                .data
+                .iter()
+                .zip(t.data.iter().zip(&e.data))
+                .map(|(&p, (&t, &e))| if p != 0.0 { t } else { e })
+                .collect();
+            Tensor { dims: t.dims.clone(), data }
+        }
+        OpKind::Convert => get(inputs[0]).clone(),
+        OpKind::Dot(d) => eval_dot(d, get(inputs[0]), get(inputs[1]), out_ty),
+        OpKind::Reduce { kind, dims } => eval_reduce(*kind, dims, get(inputs[0]), out_ty),
+        OpKind::Broadcast { dims } => eval_broadcast(dims, get(inputs[0]), out_ty),
+        OpKind::Reshape => Tensor { dims: out_ty.dims.clone(), data: get(inputs[0]).data.clone() },
+        OpKind::Transpose { perm } => eval_transpose(perm, get(inputs[0])),
+        OpKind::Gather => eval_gather(get(inputs[0]), get(inputs[1])),
+        OpKind::SegmentSum { num } => eval_segment_sum(*num, get(inputs[0]), get(inputs[1])),
+    }
+}
+
+fn eval_dot(d: &DotDims, lhs: &Tensor, rhs: &Tensor, out_ty: &TensorType) -> Tensor {
+    let lhs_free = d.free_dims(lhs.rank(), &d.lhs_batch, &d.lhs_contract);
+    let rhs_free = d.free_dims(rhs.rank(), &d.rhs_batch, &d.rhs_contract);
+    let batch_dims: Vec<i64> = d.lhs_batch.iter().map(|&b| lhs.dims[b]).collect();
+    let lf_dims: Vec<i64> = lhs_free.iter().map(|&f| lhs.dims[f]).collect();
+    let rf_dims: Vec<i64> = rhs_free.iter().map(|&f| rhs.dims[f]).collect();
+    let c_dims: Vec<i64> = d.lhs_contract.iter().map(|&c| lhs.dims[c]).collect();
+
+    let ls = lhs.strides();
+    let rs = rhs.strides();
+    let mut out = Tensor::splat(&out_ty.dims, 0.0);
+    let os = out.strides();
+    let mut out_data = std::mem::take(&mut out.data);
+
+    // Iterate batch x lhs_free x rhs_free x contract.
+    let mut loop_dims = batch_dims.clone();
+    loop_dims.extend(&lf_dims);
+    loop_dims.extend(&rf_dims);
+    loop_dims.extend(&c_dims);
+    let nb = batch_dims.len();
+    let nlf = lf_dims.len();
+    let nrf = rf_dims.len();
+
+    let mut lidx = vec![0i64; lhs.rank()];
+    let mut ridx = vec![0i64; rhs.rank()];
+    let mut oidx = vec![0i64; out_ty.dims.len()];
+    for_each_index(&loop_dims, |idx| {
+        let (b, rest) = idx.split_at(nb);
+        let (lf, rest2) = rest.split_at(nlf);
+        let (rf, c) = rest2.split_at(nrf);
+        for (k, &bd) in d.lhs_batch.iter().enumerate() {
+            lidx[bd] = b[k];
+        }
+        for (k, &bd) in d.rhs_batch.iter().enumerate() {
+            ridx[bd] = b[k];
+        }
+        for (k, &fd) in lhs_free.iter().enumerate() {
+            lidx[fd] = lf[k];
+        }
+        for (k, &fd) in rhs_free.iter().enumerate() {
+            ridx[fd] = rf[k];
+        }
+        for (k, &cd) in d.lhs_contract.iter().enumerate() {
+            lidx[cd] = c[k];
+        }
+        for (k, &cd) in d.rhs_contract.iter().enumerate() {
+            ridx[cd] = c[k];
+        }
+        for (k, &v) in b.iter().enumerate() {
+            oidx[k] = v;
+        }
+        for (k, &v) in lf.iter().enumerate() {
+            oidx[nb + k] = v;
+        }
+        for (k, &v) in rf.iter().enumerate() {
+            oidx[nb + nlf + k] = v;
+        }
+        out_data[flat_index(&oidx, &os)] +=
+            lhs.data[flat_index(&lidx, &ls)] * rhs.data[flat_index(&ridx, &rs)];
+    });
+    out.data = out_data;
+    out
+}
+
+fn eval_reduce(kind: ReduceKind, rdims: &[usize], x: &Tensor, out_ty: &TensorType) -> Tensor {
+    let init = match kind {
+        ReduceKind::Sum => 0.0,
+        ReduceKind::Max => f64::NEG_INFINITY,
+    };
+    let mut out = Tensor::splat(&out_ty.dims, init);
+    let os = out.strides();
+    let xs = x.strides();
+    let keep: Vec<usize> = (0..x.rank()).filter(|d| !rdims.contains(d)).collect();
+    let mut out_data = std::mem::take(&mut out.data);
+    let mut oidx = vec![0i64; keep.len()];
+    for_each_index(&x.dims, |idx| {
+        for (k, &d) in keep.iter().enumerate() {
+            oidx[k] = idx[d];
+        }
+        let o = flat_index(&oidx, &os);
+        let v = x.data[flat_index(idx, &xs)];
+        out_data[o] = match kind {
+            ReduceKind::Sum => out_data[o] + v,
+            ReduceKind::Max => out_data[o].max(v),
+        };
+    });
+    out.data = out_data;
+    out
+}
+
+fn eval_broadcast(bdims: &[usize], x: &Tensor, out_ty: &TensorType) -> Tensor {
+    let mut out = Tensor::splat(&out_ty.dims, 0.0);
+    let os = out.strides();
+    let xs = x.strides();
+    let mut out_data = std::mem::take(&mut out.data);
+    let mut xidx = vec![0i64; x.rank()];
+    for_each_index(&out_ty.dims, |idx| {
+        for (i, &rd) in bdims.iter().enumerate() {
+            xidx[i] = if x.dims[i] == 1 { 0 } else { idx[rd] };
+        }
+        out_data[flat_index(idx, &os)] = x.data[flat_index(&xidx, &xs)];
+    });
+    out.data = out_data;
+    out
+}
+
+fn eval_transpose(perm: &[usize], x: &Tensor) -> Tensor {
+    let out_dims: Vec<i64> = perm.iter().map(|&p| x.dims[p]).collect();
+    let mut out = Tensor::splat(&out_dims, 0.0);
+    let os = out.strides();
+    let xs = x.strides();
+    let mut out_data = std::mem::take(&mut out.data);
+    let mut xidx = vec![0i64; x.rank()];
+    for_each_index(&out_dims, |idx| {
+        for (i, &p) in perm.iter().enumerate() {
+            xidx[p] = idx[i];
+        }
+        out_data[flat_index(idx, &os)] = x.data[flat_index(&xidx, &xs)];
+    });
+    out.data = out_data;
+    out
+}
+
+fn eval_gather(table: &Tensor, indices: &Tensor) -> Tensor {
+    let row: usize = table.dims[1..].iter().product::<i64>() as usize;
+    let mut out_dims = indices.dims.clone();
+    out_dims.extend_from_slice(&table.dims[1..]);
+    let mut data = Vec::with_capacity(indices.len() * row);
+    for &i in &indices.data {
+        let i = i as usize;
+        assert!(i < table.dims[0] as usize, "gather index out of range");
+        data.extend_from_slice(&table.data[i * row..(i + 1) * row]);
+    }
+    Tensor::new(&out_dims, data)
+}
+
+fn eval_segment_sum(num: i64, data: &Tensor, ids: &Tensor) -> Tensor {
+    let row: usize = data.dims[1..].iter().product::<i64>() as usize;
+    let mut out_dims = data.dims.clone();
+    out_dims[0] = num;
+    let mut out = Tensor::splat(&out_dims, 0.0);
+    for (e, &seg) in ids.data.iter().enumerate() {
+        let s = seg as usize;
+        assert!(s < num as usize, "segment id out of range");
+        for j in 0..row {
+            out.data[s * row + j] += data.data[e * row + j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+    use crate::ir::graph::ArgKind;
+    use crate::ir::op::DotDims;
+    use crate::ir::types::{DType, TensorType};
+
+    #[test]
+    fn matmul_plus_bias() {
+        let mut b = GraphBuilder::new("f");
+        let x = b.arg("x", TensorType::f32(&[2, 2]), ArgKind::Input);
+        let w = b.arg("w", TensorType::f32(&[2, 2]), ArgKind::Parameter);
+        let y = b.matmul(x, w);
+        let y2 = b.shift(y, 2.0);
+        b.output(y2);
+        let f = b.finish();
+        let out = eval(
+            &f,
+            &[
+                Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+                Tensor::new(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]),
+            ],
+        );
+        // same numbers as /opt/xla-example/load_hlo.rs
+        assert_eq!(out[0].data, vec![5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn batched_dot() {
+        // [B=2, S=2, D=2] x [B=2, D=2, T=2] contracting D with batch B.
+        let mut b = GraphBuilder::new("f");
+        let q = b.arg("q", TensorType::f32(&[2, 2, 2]), ArgKind::Input);
+        let k = b.arg("k", TensorType::f32(&[2, 2, 2]), ArgKind::Input);
+        let d = DotDims {
+            lhs_batch: vec![0],
+            rhs_batch: vec![0],
+            lhs_contract: vec![2],
+            rhs_contract: vec![1],
+        };
+        let s = b.dot(d, q, k);
+        b.output(s);
+        let f = b.finish();
+        let q = Tensor::new(&[2, 2, 2], (1..=8).map(|x| x as f64).collect());
+        let k = Tensor::new(&[2, 2, 2], vec![1.0; 8]);
+        let out = eval(&f, &[q, k]);
+        assert_eq!(out[0].dims, vec![2, 2, 2]);
+        // batch 0: [[1,2],[3,4]] @ ones = [[3,3],[7,7]]
+        assert_eq!(&out[0].data[0..4], &[3.0, 3.0, 7.0, 7.0]);
+        // batch 1: [[5,6],[7,8]] @ ones = [[11,11],[15,15]]
+        assert_eq!(&out[0].data[4..8], &[11.0, 11.0, 15.0, 15.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut b = GraphBuilder::new("f");
+        let x = b.arg("x", TensorType::f32(&[3, 5]), ArgKind::Input);
+        let s = b.softmax_last(x);
+        b.output(s);
+        let f = b.finish();
+        let xs = Tensor::new(&[3, 5], (0..15).map(|i| (i as f64) * 0.3 - 2.0).collect());
+        let out = eval(&f, &[xs]);
+        for r in 0..3 {
+            let row: f64 = out[0].data[r * 5..(r + 1) * 5].iter().sum();
+            assert!((row - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_and_reshape() {
+        let mut b = GraphBuilder::new("f");
+        let x = b.arg("x", TensorType::f32(&[2, 3]), ArgKind::Input);
+        let t = b.transpose(x, vec![1, 0]);
+        let r = b.reshape(t, &[6]);
+        b.output(r);
+        let f = b.finish();
+        let out = eval(&f, &[Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.])]);
+        assert_eq!(out[0].data, vec![1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn gather_segment_sum_roundtrip() {
+        let mut b = GraphBuilder::new("f");
+        let table = b.arg("t", TensorType::f32(&[4, 2]), ArgKind::Parameter);
+        let ids = b.arg("i", TensorType::new(DType::I32, &[3]), ArgKind::Input);
+        let g = b.gather(table, ids);
+        let s = b.segment_sum(g, ids, 4);
+        b.output(s);
+        let f = b.finish();
+        let t = Tensor::new(&[4, 2], (0..8).map(|x| x as f64).collect());
+        let i = Tensor::new(&[3], vec![2.0, 0.0, 2.0]);
+        let out = eval(&f, &[t, i]);
+        // row 0 gathered once -> [0,1]; row 2 gathered twice -> [8,10]
+        assert_eq!(out[0].data, vec![0., 1., 0., 0., 8., 10., 0., 0.]);
+    }
+
+    #[test]
+    fn iota_and_compare_select() {
+        let mut b = GraphBuilder::new("f");
+        let ty = TensorType::f32(&[4]);
+        let i = b.iota(0, ty.clone());
+        let two = b.constant(2.0, ty.clone());
+        let p = b.compare(crate::ir::op::CmpDir::Lt, i, two);
+        let ones = b.constant(1.0, ty.clone());
+        let zeros = b.constant(0.0, ty);
+        let s = b.select(p, ones, zeros);
+        b.output(s);
+        let f = b.finish();
+        let out = eval(&f, &[]);
+        assert_eq!(out[0].data, vec![1.0, 1.0, 0.0, 0.0]);
+    }
+}

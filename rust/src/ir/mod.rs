@@ -1,0 +1,18 @@
+//! Base tensor dialect: the statically-shaped, MHLO-like IR that the
+//! PartIR layer (paper §2.1) is layered on. Includes a builder, verifier,
+//! reference interpreter, reverse-mode autodiff, DCE, and a printer.
+
+pub mod autodiff;
+pub mod builder;
+pub mod dce;
+pub mod graph;
+pub mod interp;
+pub mod op;
+pub mod printer;
+pub mod types;
+pub mod verify;
+
+pub use builder::GraphBuilder;
+pub use graph::{Arg, ArgKind, Func, Node, ScopeId, ValueId, ROOT_SCOPE};
+pub use op::{CmpDir, DotDims, OpKind, ReduceKind};
+pub use types::{DType, TensorType};

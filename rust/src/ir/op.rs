@@ -1,0 +1,261 @@
+//! Operator set of the base tensor dialect. This is the subset of
+//! HLO/MHLO needed to express full training graphs (fwd + bwd + Adam) for
+//! the paper's evaluation models (transformer, MLP, GraphNet), chosen so
+//! that every op has a total VJP rule in `autodiff.rs` and a declarative
+//! partitioning rule in `partir::registry`.
+
+use std::fmt;
+
+/// Comparison direction for `Compare`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CmpDir {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+/// Reduction kind for `Reduce`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReduceKind {
+    Sum,
+    Max,
+}
+
+/// Dimension numbers for a general dot product (dot_general).
+/// Result dims are ordered: batch dims, then lhs free dims, then rhs free dims.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct DotDims {
+    pub lhs_batch: Vec<usize>,
+    pub rhs_batch: Vec<usize>,
+    pub lhs_contract: Vec<usize>,
+    pub rhs_contract: Vec<usize>,
+}
+
+impl DotDims {
+    /// Plain matmul: contract last dim of lhs with first dim of rhs.
+    pub fn matmul(lhs_rank: usize) -> DotDims {
+        DotDims {
+            lhs_batch: vec![],
+            rhs_batch: vec![],
+            lhs_contract: vec![lhs_rank - 1],
+            rhs_contract: vec![0],
+        }
+    }
+    pub fn free_dims(&self, rank: usize, batch: &[usize], contract: &[usize]) -> Vec<usize> {
+        (0..rank).filter(|d| !batch.contains(d) && !contract.contains(d)).collect()
+    }
+}
+
+/// Operator kind (with attributes inlined).
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Splat constant of the node's type.
+    Const { value: f64 },
+    /// `iota` along `dim` (i32 or f32 output).
+    Iota { dim: usize },
+
+    // Elementwise binary (operands must have identical shapes).
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+
+    // Elementwise unary.
+    Neg,
+    Exp,
+    Log,
+    Tanh,
+    Rsqrt,
+    Sqrt,
+    Abs,
+
+    /// Elementwise comparison; Bool output.
+    Compare { dir: CmpDir },
+    /// `(pred: bool, on_true, on_false)`.
+    Select,
+    /// Elementwise dtype cast to the node's type.
+    Convert,
+
+    /// General dot product.
+    Dot(DotDims),
+    /// Reduction over `dims` (kept dims removed from the shape).
+    Reduce { kind: ReduceKind, dims: Vec<usize> },
+    /// `broadcast_in_dim`: operand dim `i` maps to result dim `dims[i]`.
+    Broadcast { dims: Vec<usize> },
+    /// Reshape to the node's type (same element count).
+    Reshape,
+    /// Transpose with permutation `perm` (result dim i = operand dim perm[i]).
+    Transpose { perm: Vec<usize> },
+
+    /// `(table [V, ...], indices i32 [..I])` → `[..I, ...]`: row lookup
+    /// along table dim 0 (embedding lookup).
+    Gather,
+    /// `(data [E, ...], ids i32 [E])` → `[num, ...]`: scatter-add rows of
+    /// `data` into `num` segments (embedding grad / GraphNet aggregation).
+    SegmentSum { num: i64 },
+}
+
+impl OpKind {
+    /// Mnemonic used by printers and featurization.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Const { .. } => "const",
+            OpKind::Iota { .. } => "iota",
+            OpKind::Add => "add",
+            OpKind::Sub => "sub",
+            OpKind::Mul => "mul",
+            OpKind::Div => "div",
+            OpKind::Max => "max",
+            OpKind::Min => "min",
+            OpKind::Neg => "neg",
+            OpKind::Exp => "exp",
+            OpKind::Log => "log",
+            OpKind::Tanh => "tanh",
+            OpKind::Rsqrt => "rsqrt",
+            OpKind::Sqrt => "sqrt",
+            OpKind::Abs => "abs",
+            OpKind::Compare { .. } => "compare",
+            OpKind::Select => "select",
+            OpKind::Convert => "convert",
+            OpKind::Dot(_) => "dot",
+            OpKind::Reduce { kind: ReduceKind::Sum, .. } => "reduce_sum",
+            OpKind::Reduce { kind: ReduceKind::Max, .. } => "reduce_max",
+            OpKind::Broadcast { .. } => "broadcast_in_dim",
+            OpKind::Reshape => "reshape",
+            OpKind::Transpose { .. } => "transpose",
+            OpKind::Gather => "gather",
+            OpKind::SegmentSum { .. } => "segment_sum",
+        }
+    }
+
+    /// Stable small integer id per op kind — used by the featurizer
+    /// (learner) and must stay in sync with `python/compile/model.py`'s
+    /// `NUM_OP_KINDS`.
+    pub fn kind_id(&self) -> usize {
+        match self {
+            OpKind::Const { .. } => 0,
+            OpKind::Iota { .. } => 1,
+            OpKind::Add => 2,
+            OpKind::Sub => 3,
+            OpKind::Mul => 4,
+            OpKind::Div => 5,
+            OpKind::Max => 6,
+            OpKind::Min => 7,
+            OpKind::Neg => 8,
+            OpKind::Exp => 9,
+            OpKind::Log => 10,
+            OpKind::Tanh => 11,
+            OpKind::Rsqrt => 12,
+            OpKind::Sqrt => 13,
+            OpKind::Abs => 14,
+            OpKind::Compare { .. } => 15,
+            OpKind::Select => 16,
+            OpKind::Convert => 17,
+            OpKind::Dot(_) => 18,
+            OpKind::Reduce { kind: ReduceKind::Sum, .. } => 19,
+            OpKind::Reduce { kind: ReduceKind::Max, .. } => 20,
+            OpKind::Broadcast { .. } => 21,
+            OpKind::Reshape => 22,
+            OpKind::Transpose { .. } => 23,
+            OpKind::Gather => 24,
+            OpKind::SegmentSum { .. } => 25,
+        }
+    }
+
+    pub const NUM_KINDS: usize = 26;
+
+    pub fn is_elementwise(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Add
+                | OpKind::Sub
+                | OpKind::Mul
+                | OpKind::Div
+                | OpKind::Max
+                | OpKind::Min
+                | OpKind::Neg
+                | OpKind::Exp
+                | OpKind::Log
+                | OpKind::Tanh
+                | OpKind::Rsqrt
+                | OpKind::Sqrt
+                | OpKind::Abs
+                | OpKind::Compare { .. }
+                | OpKind::Select
+                | OpKind::Convert
+        )
+    }
+
+    /// Approximate FLOPs per output element (runtime model input).
+    pub fn flops_per_output(&self) -> f64 {
+        match self {
+            OpKind::Exp | OpKind::Log | OpKind::Tanh | OpKind::Rsqrt | OpKind::Sqrt => 8.0,
+            OpKind::Dot(_) => 0.0, // handled specially (2*K per output)
+            _ => 1.0,
+        }
+    }
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_ids_are_unique_and_dense() {
+        let ops: Vec<OpKind> = vec![
+            OpKind::Const { value: 0.0 },
+            OpKind::Iota { dim: 0 },
+            OpKind::Add,
+            OpKind::Sub,
+            OpKind::Mul,
+            OpKind::Div,
+            OpKind::Max,
+            OpKind::Min,
+            OpKind::Neg,
+            OpKind::Exp,
+            OpKind::Log,
+            OpKind::Tanh,
+            OpKind::Rsqrt,
+            OpKind::Sqrt,
+            OpKind::Abs,
+            OpKind::Compare { dir: CmpDir::Lt },
+            OpKind::Select,
+            OpKind::Convert,
+            OpKind::Dot(DotDims::default()),
+            OpKind::Reduce { kind: ReduceKind::Sum, dims: vec![] },
+            OpKind::Reduce { kind: ReduceKind::Max, dims: vec![] },
+            OpKind::Broadcast { dims: vec![] },
+            OpKind::Reshape,
+            OpKind::Transpose { perm: vec![] },
+            OpKind::Gather,
+            OpKind::SegmentSum { num: 1 },
+        ];
+        let mut seen = vec![false; OpKind::NUM_KINDS];
+        for op in &ops {
+            let id = op.kind_id();
+            assert!(id < OpKind::NUM_KINDS);
+            assert!(!seen[id], "duplicate kind_id {id}");
+            seen[id] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "kind ids not dense");
+    }
+
+    #[test]
+    fn matmul_dims() {
+        let d = DotDims::matmul(2);
+        assert_eq!(d.lhs_contract, vec![1]);
+        assert_eq!(d.rhs_contract, vec![0]);
+        assert_eq!(d.free_dims(2, &d.lhs_batch, &d.lhs_contract), vec![0]);
+    }
+}

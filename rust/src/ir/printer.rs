@@ -1,0 +1,93 @@
+//! Textual printer for the base dialect, in an MLIR-flavoured notation
+//! close to the paper's Figure 2 (top).
+
+use super::graph::{Func, ValueId};
+use super::op::OpKind;
+use std::fmt::Write;
+
+/// Print the whole function.
+pub fn print_func(f: &Func) -> String {
+    let mut s = String::new();
+    write!(s, "func @{}(", f.name).unwrap();
+    for (i, a) in f.args.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        write!(s, "%arg{i}: {} {{{}}}", a.ty, a.kind.name()).unwrap();
+    }
+    s.push_str(")\n");
+    let out_tys: Vec<String> =
+        f.outputs.iter().map(|&o| f.value_type(o).to_string()).collect();
+    writeln!(s, "    -> ({}) {{", out_tys.join(", ")).unwrap();
+    for (ni, node) in f.nodes.iter().enumerate() {
+        let ins: Vec<String> = node.inputs.iter().map(|&v| ref_name(f, v)).collect();
+        let attrs = op_attrs(&node.op);
+        let scope = f.scope_path(node.scope);
+        let scope_str = if scope.is_empty() { String::new() } else { format!("  // {scope}") };
+        writeln!(
+            s,
+            "  %{ni} = {} {}{} : {}{}",
+            node.op.name(),
+            ins.join(", "),
+            attrs,
+            node.ty,
+            scope_str
+        )
+        .unwrap();
+    }
+    let outs: Vec<String> = f.outputs.iter().map(|&o| ref_name(f, o)).collect();
+    writeln!(s, "  return {}", outs.join(", ")).unwrap();
+    s.push_str("}\n");
+    s
+}
+
+fn ref_name(f: &Func, v: ValueId) -> String {
+    match f.node_of(v) {
+        None => format!("%arg{}", v.index()),
+        Some(n) => format!("%{n}"),
+    }
+}
+
+fn op_attrs(op: &OpKind) -> String {
+    match op {
+        OpKind::Const { value } => format!(" {{value = {value}}}"),
+        OpKind::Iota { dim } => format!(" {{dim = {dim}}}"),
+        OpKind::Compare { dir } => format!(" {{dir = {dir:?}}}"),
+        OpKind::Dot(d) => format!(
+            " {{batch = {:?}x{:?}, contract = {:?}x{:?}}}",
+            d.lhs_batch, d.rhs_batch, d.lhs_contract, d.rhs_contract
+        ),
+        OpKind::Reduce { dims, .. } => format!(" {{dims = {dims:?}}}"),
+        OpKind::Broadcast { dims } => format!(" {{broadcast_dims = {dims:?}}}"),
+        OpKind::Transpose { perm } => format!(" {{perm = {perm:?}}}"),
+        OpKind::SegmentSum { num } => format!(" {{num = {num}}}"),
+        _ => String::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::ir::builder::GraphBuilder;
+    use crate::ir::graph::ArgKind;
+    use crate::ir::types::TensorType;
+
+    #[test]
+    fn prints_figure2_style_program() {
+        // The paper's Figure 2 (top): one linear layer.
+        let mut b = GraphBuilder::new("main");
+        let x = b.arg("x", TensorType::f32(&[8, 16]), ArgKind::Input);
+        let w = b.arg("w", TensorType::f32(&[16, 64]), ArgKind::Parameter);
+        let bias = b.arg("b", TensorType::f32(&[64]), ArgKind::Parameter);
+        let dot = b.matmul(x, w);
+        let ty = b.ty(dot).clone();
+        let bb = b.broadcast_to(bias, ty);
+        let out = b.add(dot, bb);
+        b.output(out);
+        let s = super::print_func(&b.finish());
+        assert!(s.contains("func @main"));
+        assert!(s.contains("dot %arg0, %arg1"));
+        assert!(s.contains("broadcast_in_dim %arg2 {broadcast_dims = [1]}"));
+        assert!(s.contains("tensor<8x64xf32>"));
+        assert!(s.contains("return %2"));
+    }
+}

@@ -1,0 +1,101 @@
+//! Statically-shaped tensor types for the base IR (the "MHLO-like"
+//! dialect PartIR is layered on, per paper §2.1).
+
+use std::fmt;
+
+/// Element type. The partitioner itself only needs byte widths, but the
+/// interpreter and printers use the full tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    BF16,
+    I32,
+    Bool,
+}
+
+impl DType {
+    pub fn bytes(&self) -> i64 {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::BF16 => 2,
+            DType::Bool => 1,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::BF16 => "bf16",
+            DType::I32 => "i32",
+            DType::Bool => "i1",
+        }
+    }
+    pub fn is_float(&self) -> bool {
+        matches!(self, DType::F32 | DType::BF16)
+    }
+}
+
+/// A statically-shaped tensor type: `tensor<8x16xf32>`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorType {
+    pub dtype: DType,
+    pub dims: Vec<i64>,
+}
+
+impl TensorType {
+    pub fn new(dtype: DType, dims: &[i64]) -> Self {
+        debug_assert!(dims.iter().all(|&d| d > 0), "dims must be positive: {dims:?}");
+        TensorType { dtype, dims: dims.to_vec() }
+    }
+    pub fn f32(dims: &[i64]) -> Self {
+        Self::new(DType::F32, dims)
+    }
+    pub fn i32(dims: &[i64]) -> Self {
+        Self::new(DType::I32, dims)
+    }
+    pub fn scalar(dtype: DType) -> Self {
+        TensorType { dtype, dims: vec![] }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+    pub fn num_elements(&self) -> i64 {
+        self.dims.iter().product()
+    }
+    /// Size in bytes of one (replicated) copy of this tensor.
+    pub fn byte_size(&self) -> i64 {
+        self.num_elements() * self.dtype.bytes()
+    }
+    pub fn with_dims(&self, dims: Vec<i64>) -> TensorType {
+        TensorType { dtype: self.dtype, dims }
+    }
+}
+
+impl fmt::Display for TensorType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "tensor<")?;
+        for d in &self.dims {
+            write!(f, "{d}x")?;
+        }
+        write!(f, "{}>", self.dtype.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_sizes() {
+        assert_eq!(TensorType::f32(&[8, 16]).byte_size(), 8 * 16 * 4);
+        assert_eq!(TensorType::new(DType::BF16, &[4]).byte_size(), 8);
+        assert_eq!(TensorType::scalar(DType::F32).byte_size(), 4);
+        assert_eq!(TensorType::scalar(DType::F32).num_elements(), 1);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(TensorType::f32(&[8, 64]).to_string(), "tensor<8x64xf32>");
+        assert_eq!(TensorType::scalar(DType::I32).to_string(), "tensor<i32>");
+    }
+}

@@ -1,0 +1,355 @@
+//! Shape/type inference and graph verification. `infer_type` is the single
+//! source of truth for operator result types — the builder uses it to
+//! construct nodes and the verifier re-checks every node against it, so a
+//! malformed graph cannot silently enter the partitioner.
+
+use super::graph::{Func, ValueId};
+use super::op::{DotDims, OpKind};
+use super::types::{DType, TensorType};
+
+#[derive(Debug, thiserror::Error)]
+pub enum IrError {
+    #[error("shape error in {op}: {msg}")]
+    Shape { op: String, msg: String },
+    #[error("verification failed at node {node}: {msg}")]
+    Verify { node: usize, msg: String },
+}
+
+fn err<T>(op: &OpKind, msg: impl Into<String>) -> Result<T, IrError> {
+    Err(IrError::Shape { op: op.name().to_string(), msg: msg.into() })
+}
+
+/// Infer the result type of `op` applied to operands of types `ins`.
+/// `hint` carries attributes that live in the result type (Reshape target
+/// shape, Convert target dtype, Const/Iota type).
+pub fn infer_type(
+    op: &OpKind,
+    ins: &[&TensorType],
+    hint: Option<&TensorType>,
+) -> Result<TensorType, IrError> {
+    let arity_ok = |n: usize| -> Result<(), IrError> {
+        if ins.len() == n {
+            Ok(())
+        } else {
+            Err(IrError::Shape {
+                op: op.name().to_string(),
+                msg: format!("expected {n} operands, got {}", ins.len()),
+            })
+        }
+    };
+    match op {
+        OpKind::Const { .. } | OpKind::Iota { .. } => {
+            arity_ok(0)?;
+            let t = hint.ok_or_else(|| IrError::Shape {
+                op: op.name().into(),
+                msg: "const/iota needs a type hint".into(),
+            })?;
+            if let OpKind::Iota { dim } = op {
+                if *dim >= t.rank() {
+                    return err(op, format!("iota dim {dim} out of range for {t}"));
+                }
+            }
+            Ok(t.clone())
+        }
+        OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div | OpKind::Max | OpKind::Min => {
+            arity_ok(2)?;
+            if ins[0] != ins[1] {
+                return err(op, format!("operand mismatch: {} vs {}", ins[0], ins[1]));
+            }
+            Ok(ins[0].clone())
+        }
+        OpKind::Neg
+        | OpKind::Exp
+        | OpKind::Log
+        | OpKind::Tanh
+        | OpKind::Rsqrt
+        | OpKind::Sqrt
+        | OpKind::Abs => {
+            arity_ok(1)?;
+            Ok(ins[0].clone())
+        }
+        OpKind::Compare { .. } => {
+            arity_ok(2)?;
+            if ins[0].dims != ins[1].dims {
+                return err(op, format!("operand mismatch: {} vs {}", ins[0], ins[1]));
+            }
+            Ok(TensorType::new(DType::Bool, &ins[0].dims))
+        }
+        OpKind::Select => {
+            arity_ok(3)?;
+            if ins[0].dtype != DType::Bool {
+                return err(op, "predicate must be bool");
+            }
+            if ins[0].dims != ins[1].dims || ins[1] != ins[2] {
+                return err(op, "select operands must agree in shape");
+            }
+            Ok(ins[1].clone())
+        }
+        OpKind::Convert => {
+            arity_ok(1)?;
+            let t = hint.ok_or_else(|| IrError::Shape {
+                op: "convert".into(),
+                msg: "convert needs a target-dtype hint".into(),
+            })?;
+            if t.dims != ins[0].dims {
+                return err(op, "convert cannot change shape");
+            }
+            Ok(t.clone())
+        }
+        OpKind::Dot(d) => {
+            arity_ok(2)?;
+            infer_dot(op, d, ins[0], ins[1])
+        }
+        OpKind::Reduce { dims, .. } => {
+            arity_ok(1)?;
+            let r = ins[0].rank();
+            for &d in dims {
+                if d >= r {
+                    return err(op, format!("reduce dim {d} out of range (rank {r})"));
+                }
+            }
+            let out: Vec<i64> = (0..r).filter(|i| !dims.contains(i)).map(|i| ins[0].dims[i]).collect();
+            Ok(ins[0].with_dims(out))
+        }
+        OpKind::Broadcast { dims } => {
+            arity_ok(1)?;
+            let t = hint.ok_or_else(|| IrError::Shape {
+                op: "broadcast_in_dim".into(),
+                msg: "broadcast needs a result-shape hint".into(),
+            })?;
+            if dims.len() != ins[0].rank() {
+                return err(op, "broadcast dims must map every operand dim");
+            }
+            for (i, &rd) in dims.iter().enumerate() {
+                if rd >= t.rank() {
+                    return err(op, format!("broadcast target dim {rd} out of range"));
+                }
+                if ins[0].dims[i] != t.dims[rd] && ins[0].dims[i] != 1 {
+                    return err(
+                        op,
+                        format!(
+                            "operand dim {i} (={}) incompatible with result dim {rd} (={})",
+                            ins[0].dims[i], t.dims[rd]
+                        ),
+                    );
+                }
+            }
+            if t.dtype != ins[0].dtype {
+                return err(op, "broadcast cannot change dtype");
+            }
+            Ok(t.clone())
+        }
+        OpKind::Reshape => {
+            arity_ok(1)?;
+            let t = hint.ok_or_else(|| IrError::Shape {
+                op: "reshape".into(),
+                msg: "reshape needs a result-shape hint".into(),
+            })?;
+            if t.num_elements() != ins[0].num_elements() || t.dtype != ins[0].dtype {
+                return err(op, format!("cannot reshape {} to {}", ins[0], t));
+            }
+            Ok(t.clone())
+        }
+        OpKind::Transpose { perm } => {
+            arity_ok(1)?;
+            let r = ins[0].rank();
+            let mut seen = vec![false; r];
+            if perm.len() != r {
+                return err(op, "perm length must equal rank");
+            }
+            for &p in perm {
+                if p >= r || seen[p] {
+                    return err(op, format!("bad permutation {perm:?}"));
+                }
+                seen[p] = true;
+            }
+            let out: Vec<i64> = perm.iter().map(|&p| ins[0].dims[p]).collect();
+            Ok(ins[0].with_dims(out))
+        }
+        OpKind::Gather => {
+            arity_ok(2)?;
+            if ins[1].dtype != DType::I32 {
+                return err(op, "gather indices must be i32");
+            }
+            if ins[0].rank() == 0 {
+                return err(op, "gather table must have rank >= 1");
+            }
+            let mut out = ins[1].dims.clone();
+            out.extend_from_slice(&ins[0].dims[1..]);
+            Ok(ins[0].with_dims(out))
+        }
+        OpKind::SegmentSum { num } => {
+            arity_ok(2)?;
+            if ins[1].dtype != DType::I32 || ins[1].rank() != 1 {
+                return err(op, "segment ids must be i32 of rank 1");
+            }
+            if ins[0].rank() == 0 || ins[0].dims[0] != ins[1].dims[0] {
+                return err(op, "data dim 0 must equal number of ids");
+            }
+            let mut out = ins[0].dims.clone();
+            out[0] = *num;
+            Ok(ins[0].with_dims(out))
+        }
+    }
+}
+
+fn infer_dot(
+    op: &OpKind,
+    d: &DotDims,
+    lhs: &TensorType,
+    rhs: &TensorType,
+) -> Result<TensorType, IrError> {
+    if d.lhs_batch.len() != d.rhs_batch.len() || d.lhs_contract.len() != d.rhs_contract.len() {
+        return err(op, "batch/contract dim counts must match");
+    }
+    for (&lb, &rb) in d.lhs_batch.iter().zip(&d.rhs_batch) {
+        if lhs.dims.get(lb) != rhs.dims.get(rb) {
+            return err(op, format!("batch dims differ: lhs[{lb}] vs rhs[{rb}]"));
+        }
+    }
+    for (&lc, &rc) in d.lhs_contract.iter().zip(&d.rhs_contract) {
+        if lhs.dims.get(lc) != rhs.dims.get(rc) {
+            return err(
+                op,
+                format!(
+                    "contract dims differ: lhs[{lc}]={:?} vs rhs[{rc}]={:?}",
+                    lhs.dims.get(lc),
+                    rhs.dims.get(rc)
+                ),
+            );
+        }
+    }
+    let lhs_free = d.free_dims(lhs.rank(), &d.lhs_batch, &d.lhs_contract);
+    let rhs_free = d.free_dims(rhs.rank(), &d.rhs_batch, &d.rhs_contract);
+    let mut out: Vec<i64> = d.lhs_batch.iter().map(|&b| lhs.dims[b]).collect();
+    out.extend(lhs_free.iter().map(|&f| lhs.dims[f]));
+    out.extend(rhs_free.iter().map(|&f| rhs.dims[f]));
+    Ok(lhs.with_dims(out))
+}
+
+/// Verify the whole function: operand ids in range and topologically
+/// earlier than their users, node types matching `infer_type`, and output
+/// ids valid.
+pub fn verify(f: &Func) -> Result<(), IrError> {
+    for (ni, node) in f.nodes.iter().enumerate() {
+        let own_value = f.value_of_node(ni);
+        for &inp in &node.inputs {
+            if inp.index() >= f.num_values() {
+                return Err(IrError::Verify { node: ni, msg: format!("input {inp:?} out of range") });
+            }
+            if inp >= own_value {
+                return Err(IrError::Verify {
+                    node: ni,
+                    msg: format!("input {inp:?} not topologically earlier"),
+                });
+            }
+        }
+        let in_tys: Vec<&TensorType> = node.inputs.iter().map(|&v| f.value_type(v)).collect();
+        let inferred = infer_type(&node.op, &in_tys, Some(&node.ty))
+            .map_err(|e| IrError::Verify { node: ni, msg: e.to_string() })?;
+        if inferred != node.ty {
+            return Err(IrError::Verify {
+                node: ni,
+                msg: format!("stored type {} != inferred {}", node.ty, inferred),
+            });
+        }
+        if node.scope.0 as usize >= f.scopes.len() {
+            return Err(IrError::Verify { node: ni, msg: "bad scope id".into() });
+        }
+    }
+    for &o in &f.outputs {
+        if o.index() >= f.num_values() {
+            return Err(IrError::Verify { node: usize::MAX, msg: format!("output {o:?} out of range") });
+        }
+    }
+    Ok(())
+}
+
+#[allow(dead_code)]
+fn value_in_range(f: &Func, v: ValueId) -> bool {
+    v.index() < f.num_values()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_shapes_must_match() {
+        let a = TensorType::f32(&[2, 3]);
+        let b = TensorType::f32(&[2, 4]);
+        assert!(infer_type(&OpKind::Add, &[&a, &a], None).is_ok());
+        assert!(infer_type(&OpKind::Add, &[&a, &b], None).is_err());
+    }
+
+    #[test]
+    fn dot_matmul() {
+        let a = TensorType::f32(&[8, 16]);
+        let b = TensorType::f32(&[16, 64]);
+        let t = infer_type(&OpKind::Dot(DotDims::matmul(2)), &[&a, &b], None).unwrap();
+        assert_eq!(t.dims, vec![8, 64]);
+    }
+
+    #[test]
+    fn dot_batched() {
+        // attention scores: [B,H,S,D] x [B,H,S,D] contracting D -> [B,H,S,S]
+        let q = TensorType::f32(&[2, 4, 16, 8]);
+        let k = TensorType::f32(&[2, 4, 16, 8]);
+        let d = DotDims {
+            lhs_batch: vec![0, 1],
+            rhs_batch: vec![0, 1],
+            lhs_contract: vec![3],
+            rhs_contract: vec![3],
+        };
+        let t = infer_type(&OpKind::Dot(d), &[&q, &k], None).unwrap();
+        assert_eq!(t.dims, vec![2, 4, 16, 16]);
+    }
+
+    #[test]
+    fn reduce_and_broadcast() {
+        let a = TensorType::f32(&[2, 3, 4]);
+        let t = infer_type(
+            &OpKind::Reduce { kind: super::super::op::ReduceKind::Sum, dims: vec![1] },
+            &[&a],
+            None,
+        )
+        .unwrap();
+        assert_eq!(t.dims, vec![2, 4]);
+
+        let v = TensorType::f32(&[4]);
+        let target = TensorType::f32(&[2, 4]);
+        let t = infer_type(&OpKind::Broadcast { dims: vec![1] }, &[&v], Some(&target)).unwrap();
+        assert_eq!(t.dims, vec![2, 4]);
+        // bad mapping
+        let bad = infer_type(&OpKind::Broadcast { dims: vec![0] }, &[&v], Some(&target));
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn gather_and_segment_sum() {
+        let table = TensorType::f32(&[100, 8]);
+        let ids = TensorType::i32(&[2, 5]);
+        let t = infer_type(&OpKind::Gather, &[&table, &ids], None).unwrap();
+        assert_eq!(t.dims, vec![2, 5, 8]);
+
+        let data = TensorType::f32(&[10, 8]);
+        let sid = TensorType::i32(&[10]);
+        let t = infer_type(&OpKind::SegmentSum { num: 4 }, &[&data, &sid], None).unwrap();
+        assert_eq!(t.dims, vec![4, 8]);
+    }
+
+    #[test]
+    fn transpose_checks_perm() {
+        let a = TensorType::f32(&[2, 3, 4]);
+        let t = infer_type(&OpKind::Transpose { perm: vec![2, 0, 1] }, &[&a], None).unwrap();
+        assert_eq!(t.dims, vec![4, 2, 3]);
+        assert!(infer_type(&OpKind::Transpose { perm: vec![0, 0, 1] }, &[&a], None).is_err());
+    }
+
+    #[test]
+    fn reshape_preserves_elements() {
+        let a = TensorType::f32(&[2, 6]);
+        assert!(infer_type(&OpKind::Reshape, &[&a], Some(&TensorType::f32(&[3, 4]))).is_ok());
+        assert!(infer_type(&OpKind::Reshape, &[&a], Some(&TensorType::f32(&[5]))).is_err());
+    }
+}

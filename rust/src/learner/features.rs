@@ -1,0 +1,188 @@
+//! Program-graph featurization for the learned node ranker (paper §2.3:
+//! "Our compiler featurises operation nodes as a concatenation of
+//! operation type, operand shapes, and existing partitioned axes. Edges
+//! encode program dataflow and MLIR program structure.")
+//!
+//! Arguments are the ranked entities (the paper ranks "each input to the
+//! MLIR program"). Features and padding sizes MUST stay in sync with
+//! `python/compile/model.py` (checked by `artifacts/ranker_meta.json`).
+
+use crate::ir::{Func, OpKind, ValueId};
+use crate::partir::mesh::Mesh;
+
+/// Feature vector length per node.
+pub const NODE_FEATURES: usize = 40;
+/// Padded node count of the ranker input.
+pub const MAX_NODES: usize = 256;
+/// Padded edge count.
+pub const MAX_EDGES: usize = 2048;
+
+/// Featurized program graph, padded to fixed shapes for the AOT ranker.
+#[derive(Debug, Clone)]
+pub struct FeatureGraph {
+    /// `[MAX_NODES * NODE_FEATURES]`, row-major.
+    pub nodes: Vec<f32>,
+    /// `[MAX_NODES]` 1.0 for real nodes.
+    pub node_mask: Vec<f32>,
+    /// `[MAX_EDGES]` sender node index (0 when padded).
+    pub senders: Vec<i32>,
+    /// `[MAX_EDGES]` receiver node index.
+    pub receivers: Vec<i32>,
+    /// `[MAX_EDGES]` 1.0 for real edges.
+    pub edge_mask: Vec<f32>,
+    /// Which arg each node row corresponds to.
+    pub arg_ids: Vec<ValueId>,
+}
+
+/// Featurize the arguments of `f` (kept in arg order, truncated to
+/// `MAX_NODES` by descending byte size if necessary).
+pub fn featurize(f: &Func, mesh: &Mesh) -> FeatureGraph {
+    // Select up to MAX_NODES args (all, or the largest by bytes).
+    let mut arg_ids: Vec<ValueId> = (0..f.num_args() as u32).map(ValueId).collect();
+    if arg_ids.len() > MAX_NODES {
+        arg_ids.sort_by_key(|&v| -f.value_type(v).byte_size());
+        arg_ids.truncate(MAX_NODES);
+        arg_ids.sort(); // restore program order
+    }
+    let slot_of: std::collections::HashMap<u32, usize> =
+        arg_ids.iter().enumerate().map(|(i, v)| (v.0, i)).collect();
+
+    let users = f.users();
+    let mut nodes = vec![0f32; MAX_NODES * NODE_FEATURES];
+    let mut node_mask = vec![0f32; MAX_NODES];
+    for (slot, &v) in arg_ids.iter().enumerate() {
+        node_mask[slot] = 1.0;
+        let a = &f.args[v.index()];
+        let row = &mut nodes[slot * NODE_FEATURES..(slot + 1) * NODE_FEATURES];
+        // [0..4) arg-kind one-hot
+        row[a.kind.kind_id()] = 1.0;
+        // [4] rank / 4
+        row[4] = a.ty.rank() as f32 / 4.0;
+        // [5..9) log2(dim)/16, first 4 dims
+        for (i, &d) in a.ty.dims.iter().take(4).enumerate() {
+            row[5 + i] = (d as f32).log2() / 16.0;
+        }
+        // [9] log2(total elements)/32
+        row[9] = (a.ty.num_elements().max(1) as f32).log2() / 32.0;
+        // [10] float flag
+        row[10] = if a.ty.dtype.is_float() { 1.0 } else { 0.0 };
+        // [11] log2(1+fanout)/8
+        row[11] = (1.0 + users[v.index()].len() as f32).log2() / 8.0;
+        // [12] fraction of dims divisible by every searchable axis size
+        let axes = mesh.searchable_axes();
+        if a.ty.rank() > 0 && !axes.is_empty() {
+            let div = a
+                .ty
+                .dims
+                .iter()
+                .filter(|&&d| axes.iter().all(|&ax| d % mesh.size(ax) == 0))
+                .count();
+            row[12] = div as f32 / a.ty.rank() as f32;
+        }
+        // [13] square-matrix flag (attention projections)
+        if a.ty.rank() == 2 && a.ty.dims[0] == a.ty.dims[1] {
+            row[13] = 1.0;
+        }
+        // [14..40) consumer op-kind histogram (normalised)
+        let mut hist = [0f32; OpKind::NUM_KINDS];
+        for &ni in &users[v.index()] {
+            hist[f.nodes[ni].op.kind_id()] += 1.0;
+        }
+        let total: f32 = hist.iter().sum();
+        if total > 0.0 {
+            for (i, h) in hist.iter().enumerate() {
+                row[14 + i] = h / total;
+            }
+        }
+    }
+
+    // Edges: co-consumption (two args feeding the same node), both
+    // directions, deduplicated, capped at MAX_EDGES.
+    let mut senders = vec![0i32; MAX_EDGES];
+    let mut receivers = vec![0i32; MAX_EDGES];
+    let mut edge_mask = vec![0f32; MAX_EDGES];
+    let mut seen = std::collections::HashSet::new();
+    let mut ne = 0usize;
+    'outer: for node in &f.nodes {
+        let arg_inputs: Vec<usize> = node
+            .inputs
+            .iter()
+            .filter_map(|&x| slot_of.get(&x.0).copied())
+            .collect();
+        for (ia, &sa) in arg_inputs.iter().enumerate() {
+            for &sb in arg_inputs.iter().skip(ia + 1) {
+                for (s, r) in [(sa, sb), (sb, sa)] {
+                    if s != r && seen.insert((s, r)) {
+                        if ne >= MAX_EDGES {
+                            break 'outer;
+                        }
+                        senders[ne] = s as i32;
+                        receivers[ne] = r as i32;
+                        edge_mask[ne] = 1.0;
+                        ne += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    FeatureGraph { nodes, node_mask, senders, receivers, edge_mask, arg_ids }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::transformer::{build_transformer, TransformerConfig};
+    use crate::partir::mesh::Mesh;
+
+    #[test]
+    fn featurizes_tiny_transformer() {
+        let m = build_transformer(&TransformerConfig::tiny(2));
+        let mesh = Mesh::new(&[("model", 4)]);
+        let g = featurize(&m.func, &mesh);
+        let n_args = m.func.num_args().min(MAX_NODES);
+        assert_eq!(g.arg_ids.len(), n_args);
+        assert_eq!(g.node_mask.iter().filter(|&&x| x == 1.0).count(), n_args);
+        assert_eq!(g.nodes.len(), MAX_NODES * NODE_FEATURES);
+        // wq is a square matrix: flag set
+        let wq_slot = g
+            .arg_ids
+            .iter()
+            .position(|&v| m.func.args[v.index()].name.ends_with("attn/wq"))
+            .unwrap();
+        assert_eq!(g.nodes[wq_slot * NODE_FEATURES + 13], 1.0);
+        // some real edges exist and indices are in range
+        let ne = g.edge_mask.iter().filter(|&&x| x == 1.0).count();
+        assert!(ne > 0);
+        for e in 0..ne {
+            assert!((g.senders[e] as usize) < n_args);
+            assert!((g.receivers[e] as usize) < n_args);
+        }
+    }
+
+    #[test]
+    fn truncates_to_largest_args_at_paper_scale() {
+        // 1150+ args -> top 256 by size, params dominate.
+        let m = build_transformer(&TransformerConfig::tiny(40)); // 40*48+9 args
+        let mesh = Mesh::new(&[("model", 4)]);
+        let g = featurize(&m.func, &mesh);
+        assert_eq!(g.arg_ids.len(), MAX_NODES);
+        // every kept node is at least as large as the dropped scalar-ish ones
+        let kept_min = g
+            .arg_ids
+            .iter()
+            .map(|&v| m.func.value_type(v).byte_size())
+            .min()
+            .unwrap();
+        assert!(kept_min >= 4);
+    }
+
+    #[test]
+    fn features_are_bounded() {
+        let m = build_transformer(&TransformerConfig::tiny(1));
+        let g = featurize(&m.func, &Mesh::new(&[("model", 4)]));
+        for &x in &g.nodes {
+            assert!(x.is_finite() && (-1.0..=4.0).contains(&x), "feature {x} out of range");
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! The learned component (paper §2.3): program featurization, training
+//! dataset generation (best-strategy imitation), and node rankers
+//! (PJRT-backed GNN + heuristic fallback) that filter the MCTS worklist
+//! to the top-k most relevant arguments.
+
+pub mod dataset;
+pub mod features;
+pub mod ranker;
+
+pub use features::{featurize, FeatureGraph, MAX_EDGES, MAX_NODES, NODE_FEATURES};
+pub use ranker::{top_k, HeuristicRanker, PjrtRanker, Ranker, TOP_K};

@@ -1,0 +1,144 @@
+//! Node ranking (paper §2.3): "a learned model predicts for each input
+//! to the MLIR program a ranking corresponding to the importance of this
+//! node to be partitioned, and the top-k (k = 25) most relevant nodes are
+//! then passed to MCTS".
+//!
+//! Two implementations:
+//!   * [`PjrtRanker`] — the real learned model: the Interaction-Network
+//!     GNN trained at build time in JAX (with Pallas kernels), AOT-lowered
+//!     to `artifacts/ranker.hlo.txt`, executed here through PJRT.
+//!   * [`HeuristicRanker`] — deterministic fallback used when artifacts
+//!     are absent (tests, cold builds): ranks by parameter size.
+
+use super::features::{FeatureGraph, MAX_EDGES, MAX_NODES, NODE_FEATURES};
+use crate::ir::ValueId;
+use crate::runtime::pjrt::{Executable, Input, Runtime};
+use anyhow::Result;
+
+/// k in the paper.
+pub const TOP_K: usize = 25;
+
+pub trait Ranker {
+    /// One relevance score per node slot in the feature graph.
+    fn score(&self, graph: &FeatureGraph) -> Result<Vec<f32>>;
+}
+
+/// Select the top-k arg ids by score (ties broken by program order).
+pub fn top_k(graph: &FeatureGraph, scores: &[f32], k: usize) -> Vec<ValueId> {
+    let n = graph.arg_ids.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx.into_iter().take(k).map(|i| graph.arg_ids[i]).collect()
+}
+
+/// Top-k restricted to decision targets (optimiser state is excluded —
+/// it follows its parameter through infer-rest and never appears on the
+/// search worklist).
+pub fn top_k_decisions(
+    func: &crate::ir::Func,
+    graph: &FeatureGraph,
+    scores: &[f32],
+    k: usize,
+) -> Vec<ValueId> {
+    let n = graph.arg_ids.len();
+    let mut idx: Vec<usize> = (0..n)
+        .filter(|&i| func.args[graph.arg_ids[i].index()].kind != crate::ir::ArgKind::OptState)
+        .collect();
+    idx.sort_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx.into_iter().take(k).map(|i| graph.arg_ids[i]).collect()
+}
+
+/// The learned ranker, backed by the AOT-compiled GNN.
+pub struct PjrtRanker {
+    exe: Executable,
+}
+
+impl PjrtRanker {
+    /// Load `artifacts/ranker.hlo.txt` (or a custom path).
+    pub fn load(rt: &Runtime, path: &str) -> Result<PjrtRanker> {
+        Ok(PjrtRanker { exe: rt.load_hlo_text(path)? })
+    }
+}
+
+impl Ranker for PjrtRanker {
+    fn score(&self, g: &FeatureGraph) -> Result<Vec<f32>> {
+        debug_assert_eq!(g.nodes.len(), MAX_NODES * NODE_FEATURES);
+        let outs = self.exe.run_f32(&[
+            Input::F32(g.nodes.clone(), vec![MAX_NODES as i64, NODE_FEATURES as i64]),
+            Input::F32(g.node_mask.clone(), vec![MAX_NODES as i64]),
+            Input::I32(g.senders.clone(), vec![MAX_EDGES as i64]),
+            Input::I32(g.receivers.clone(), vec![MAX_EDGES as i64]),
+            Input::F32(g.edge_mask.clone(), vec![MAX_EDGES as i64]),
+        ])?;
+        Ok(outs.into_iter().next().expect("ranker returns one output"))
+    }
+}
+
+/// Size-based fallback ranker (no learning): big multi-dim parameters
+/// first — roughly what a practitioner would eyeball.
+pub struct HeuristicRanker<'f> {
+    pub func: &'f crate::ir::Func,
+}
+
+impl<'f> Ranker for HeuristicRanker<'f> {
+    fn score(&self, g: &FeatureGraph) -> Result<Vec<f32>> {
+        let mut s = vec![0f32; MAX_NODES];
+        for (i, &v) in g.arg_ids.iter().enumerate() {
+            let a = &self.func.args[v.index()];
+            let size = (a.ty.num_elements() as f32).log2();
+            let rank_bonus = if a.ty.rank() >= 2 { 8.0 } else { 0.0 };
+            let kind_bonus = match a.kind {
+                crate::ir::ArgKind::Parameter => 4.0,
+                _ => 0.0,
+            };
+            s[i] = size + rank_bonus + kind_bonus;
+        }
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learner::features::featurize;
+    use crate::models::transformer::{build_transformer, TransformerConfig};
+    use crate::partir::mesh::Mesh;
+
+    #[test]
+    fn heuristic_ranks_weights_over_biases() {
+        let m = build_transformer(&TransformerConfig::tiny(2));
+        let mesh = Mesh::new(&[("model", 4)]);
+        let g = featurize(&m.func, &mesh);
+        let ranker = HeuristicRanker { func: &m.func };
+        let scores = ranker.score(&g).unwrap();
+        let top = top_k(&g, &scores, TOP_K);
+        assert_eq!(top.len(), TOP_K);
+        let top_names: Vec<&str> =
+            top.iter().map(|v| m.func.args[v.index()].name.as_str()).collect();
+        // all the megatron-relevant matrices of both layers fit in top-25
+        for suffix in ["attn/wq", "attn/wo", "mlp/w1", "mlp/w2"] {
+            for l in 0..2 {
+                let want = format!("layer_{l}/{suffix}");
+                assert!(
+                    top_names.iter().any(|n| *n == want),
+                    "{want} missing from top-k: {top_names:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_is_stable_under_ties() {
+        let m = build_transformer(&TransformerConfig::tiny(1));
+        let g = featurize(&m.func, &Mesh::new(&[("model", 4)]));
+        let scores = vec![1.0f32; MAX_NODES];
+        let a = top_k(&g, &scores, 5);
+        let b = top_k(&g, &scores, 5);
+        assert_eq!(a, b);
+        assert_eq!(a[0], g.arg_ids[0]);
+    }
+}

@@ -1,0 +1,23 @@
+//! # automap — reproduction of "Automap: Towards Ergonomic Automated
+//! # Parallelism for ML Models" (Schaarschmidt et al., 2021)
+//!
+//! An automated SPMD partitioner: a PartIR-style rewriting layer over a
+//! base tensor dialect, inductive propagation tactics, MCTS search, and a
+//! learned node-ranking filter, evaluated on transformer / GraphNet
+//! training graphs with collective-statistics Megatron detection and an
+//! analytical TPU-v3 runtime model.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod ir;
+pub mod coordinator;
+pub mod cost;
+pub mod learner;
+pub mod models;
+pub mod partir;
+pub mod runtime;
+pub mod search;
+pub mod sim;
+pub mod spmd;
+pub mod util;

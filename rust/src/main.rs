@@ -1,0 +1,182 @@
+//! `automap` CLI — leader entrypoint for the reproduction.
+//!
+//! Subcommands:
+//!   stats        model-scale statistics vs. the paper's setup (§3)
+//!   gen-dataset  generate the ranker training set (best-strategy labels)
+//!   partition    run automap on a model and print the sharding report
+//!   fig6 / fig7 / fig8 / fig9   regenerate the paper's figures
+//!   all-figures  run every figure harness
+//!
+//! Common flags: --layers N --budgets a,b,c --attempts N --seed S
+//!               --config path.json --out-dir results
+
+use automap::coordinator::automap::{Automap, AutomapOptions, Filter};
+use automap::coordinator::config as cfgfile;
+use automap::coordinator::figures::{self, FigureSetup};
+use automap::models::graphnet::{build_graphnet, GraphNetConfig};
+use automap::models::mlp::{build_mlp, MlpConfig};
+use automap::models::transformer::{build_transformer, TransformerConfig};
+use automap::partir::mesh::Mesh;
+use automap::util::cli::Args;
+
+const VALUE_FLAGS: &[&str] = &[
+    "layers", "budgets", "attempts", "seed", "out", "out-dir", "count", "axis", "model",
+    "budget", "filter", "ranker", "config", "d-model", "mesh",
+];
+const BOOL_FLAGS: &[&str] = &["paper", "grouping", "no-tying", "help"];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+        return;
+    }
+    let cmd = argv[0].clone();
+    let args = match Args::parse(&argv[1..], VALUE_FLAGS, BOOL_FLAGS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.get_bool("help") {
+        usage();
+        return;
+    }
+    let r = match cmd.as_str() {
+        "stats" => cmd_stats(&args),
+        "gen-dataset" => cmd_gen_dataset(&args),
+        "partition" => cmd_partition(&args),
+        "fig6" | "fig7" => figure_cmd(&args, |s, d| figures::fig6_fig7(s, d).map(|_| ())),
+        "fig8" => figure_cmd(&args, |s, d| figures::fig8(s, d).map(|_| ())),
+        "fig9" => figure_cmd(&args, |s, d| figures::fig9(s, d).map(|_| ())),
+        "all-figures" => figure_cmd(&args, |s, d| {
+            figures::fig6_fig7(s, d)?;
+            figures::fig8(s, d)?;
+            figures::fig9(s, d)?;
+            Ok(())
+        }),
+        _ => {
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "automap — reproduction of 'Automap: Towards Ergonomic Automated Parallelism'\n\
+         usage: automap <stats|gen-dataset|partition|fig6|fig7|fig8|fig9|all-figures> [flags]\n\
+         flags: --layers N --budgets a,b,c --attempts N --seed S --paper\n\
+                --model mlp|transformer|graphnet --budget N --filter none|heuristic|learned\n\
+                --mesh model=4[,batch=2] --ranker artifacts/ranker.hlo.txt\n\
+                --config cfg.json --out-dir results --count N (gen-dataset)"
+    );
+}
+
+fn cmd_stats(args: &Args) -> anyhow::Result<()> {
+    let cfg = if args.get_bool("paper") {
+        TransformerConfig::paper()
+    } else {
+        TransformerConfig::tiny(args.get_usize("layers", 24)?)
+    };
+    let j = figures::stats(&cfg);
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, j.pretty())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_gen_dataset(args: &Args) -> anyhow::Result<()> {
+    let count = args.get_usize("count", 64)?;
+    let seed = args.get_u64("seed", 7)?;
+    let out = args.get_str("out", "artifacts/dataset.json");
+    let t0 = std::time::Instant::now();
+    println!("generating {count} labelled transformer variants (greedy best-strategy)...");
+    let j = automap::learner::dataset::generate_dataset(count, seed, 4);
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, j.to_string())?;
+    println!("wrote {out} in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn parse_mesh(spec: &str) -> anyhow::Result<Mesh> {
+    let mut axes = Vec::new();
+    for part in spec.split(',') {
+        let (name, size) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("bad mesh spec '{part}' (want name=size)"))?;
+        axes.push((name, size.parse::<i64>()?));
+    }
+    let named: Vec<(&str, i64)> = axes.iter().map(|(n, s)| (*n, *s)).collect();
+    Ok(Mesh::new(&named))
+}
+
+fn cmd_partition(args: &Args) -> anyhow::Result<()> {
+    let model_kind = args.get_str("model", "transformer");
+    let mesh = parse_mesh(&args.get_str("mesh", "model=4"))?;
+    let filter = match args.get_str("filter", "heuristic").as_str() {
+        "none" => Filter::None,
+        "heuristic" => Filter::Heuristic,
+        "learned" => Filter::Learned {
+            hlo_path: args.get_str("ranker", "artifacts/ranker.hlo.txt"),
+        },
+        other => anyhow::bail!("unknown filter '{other}'"),
+    };
+    let func = match model_kind.as_str() {
+        "mlp" => build_mlp(&MlpConfig::small()).func,
+        "graphnet" => build_graphnet(&GraphNetConfig::small()).func,
+        "transformer" => {
+            build_transformer(&TransformerConfig::tiny(args.get_usize("layers", 4)?)).func
+        }
+        other => anyhow::bail!("unknown model '{other}'"),
+    };
+    println!(
+        "partitioning {model_kind}: {} args, {} ops, mesh {}",
+        func.num_args(),
+        func.num_nodes(),
+        mesh.describe()
+    );
+    let opts = AutomapOptions {
+        budget: args.get_usize("budget", 500)?,
+        seed: args.get_u64("seed", 0)?,
+        filter,
+        ..Default::default()
+    };
+    let am = Automap::new(func, mesh, opts);
+    let report = am.partition()?;
+    println!("{}", report.to_json(&am.program.mesh).pretty());
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json(&am.program.mesh).pretty())?;
+    }
+    Ok(())
+}
+
+fn figure_cmd(
+    args: &Args,
+    run: impl Fn(&FigureSetup, &str) -> anyhow::Result<()>,
+) -> anyhow::Result<()> {
+    let mut setup = FigureSetup {
+        layers: args.get_usize("layers", 4)?,
+        budgets: args.get_usize_list("budgets", &[50, 100, 250, 500, 1000, 2000])?,
+        attempts: args.get_usize("attempts", 20)?,
+        seed: args.get_u64("seed", 42)?,
+        ranker_path: args.get_str("ranker", "artifacts/ranker.hlo.txt"),
+    };
+    if let Some(path) = args.get("config") {
+        let cfg = cfgfile::load(path)?;
+        cfgfile::apply_figure(&mut setup, &cfg);
+    }
+    let out_dir = args.get_str("out-dir", "results");
+    let t0 = std::time::Instant::now();
+    run(&setup, &out_dir)?;
+    println!("done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! Model zoo: the paper's evaluation workloads built directly in the
+//! base dialect — GPT-style transformer (with full training step), MLP,
+//! Interaction-Network GraphNet — plus the Megatron reference strategy
+//! and its collective-statistics detector.
+
+pub mod graphnet;
+pub mod megatron;
+pub mod mlp;
+pub mod transformer;
+
+pub use graphnet::{build_graphnet, GraphNetConfig, GraphNetModel};
+pub use megatron::{check, reference_evaluation, reference_state, MegatronVerdict};
+pub use mlp::{build_mlp, MlpConfig, MlpModel};
+pub use transformer::{build_transformer, TransformerConfig, TransformerModel};

@@ -1,0 +1,166 @@
+//! Rewrite actions exposed to the automated partitioner (paper §2.2):
+//! tiling a value's dimension along a mesh axis, declaring a value atomic
+//! (keep replicated), the global infer-rest pass, and stopping.
+//!
+//! Rewrites preserve semantics by construction — a `Tile` only records a
+//! distribution choice; the SPMD lowering inserts whatever collectives
+//! make it correct. This decouples search policy from correctness.
+
+use super::dist::DistMap;
+use super::mesh::{AxisId, Mesh};
+use crate::ir::{Func, ValueId};
+
+/// One rewrite decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Action {
+    /// Express value `v` as a tiling loop over `axis` on tensor dim `dim`
+    /// (paper Fig. 2 middle: `partir.tile`).
+    Tile { v: ValueId, dim: usize, axis: AxisId },
+    /// Declare `v` atomic: it stays replicated and no later action may
+    /// tile it (paper Fig. 2 bottom: `partir.atomic`).
+    Atomic { v: ValueId },
+    /// Global pass inferring tilings of remaining values from decided ones.
+    InferRest,
+    /// Terminate the episode.
+    Stop,
+}
+
+impl Action {
+    pub fn describe(&self, f: &Func, mesh: &Mesh) -> String {
+        match self {
+            Action::Tile { v, dim, axis } => {
+                format!("tile {} dim {} on \"{}\"", f.value_name(*v), dim, mesh.name(*axis))
+            }
+            Action::Atomic { v } => format!("atomic {}", f.value_name(*v)),
+            Action::InferRest => "infer-rest".to_string(),
+            Action::Stop => "stop".to_string(),
+        }
+    }
+}
+
+/// The decision state of one search episode: explicit actions taken plus
+/// the atomic set. The derived `DistMap` is recomputed by the env.
+#[derive(Debug, Clone, Default)]
+pub struct DecisionState {
+    pub actions: Vec<Action>,
+    pub atomic: Vec<ValueId>,
+}
+
+impl DecisionState {
+    pub fn is_atomic(&self, v: ValueId) -> bool {
+        self.atomic.contains(&v)
+    }
+}
+
+/// Is `action` applicable given the current distribution map?
+pub fn action_valid(
+    f: &Func,
+    mesh: &Mesh,
+    dm: &DistMap,
+    state: &DecisionState,
+    action: &Action,
+) -> bool {
+    match action {
+        Action::Tile { v, dim, axis } => {
+            if state.is_atomic(*v) {
+                return false;
+            }
+            let ty = f.value_type(*v);
+            if *dim >= ty.rank() {
+                return false;
+            }
+            if ty.dims[*dim] % mesh.size(*axis) != 0 {
+                return false;
+            }
+            if dm.get(v.index(), *axis).is_some() {
+                return false; // already tiled on this axis
+            }
+            if dm.dim_taken(v.index(), *axis, *dim) {
+                return false; // dim already owned by another axis
+            }
+            true
+        }
+        Action::Atomic { v } => !state.is_atomic(*v) && !dm.is_tiled(v.index()),
+        Action::InferRest | Action::Stop => true,
+    }
+}
+
+/// Enumerate all valid `Tile` actions for a value on the searchable axes.
+pub fn tile_actions_for(
+    f: &Func,
+    mesh: &Mesh,
+    dm: &DistMap,
+    state: &DecisionState,
+    v: ValueId,
+) -> Vec<Action> {
+    let mut out = Vec::new();
+    let rank = f.value_type(v).rank();
+    for axis in mesh.searchable_axes() {
+        for dim in 0..rank {
+            let a = Action::Tile { v, dim, axis };
+            if action_valid(f, mesh, dm, state, &a) {
+                out.push(a);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ArgKind, GraphBuilder, TensorType};
+
+    fn setup() -> (Func, Mesh) {
+        let mut b = GraphBuilder::new("t");
+        let _w = b.arg("w", TensorType::f32(&[16, 64]), ArgKind::Parameter);
+        let _o = b.arg("odd", TensorType::f32(&[3, 5]), ArgKind::Parameter);
+        let x = b.arg("x", TensorType::f32(&[16]), ArgKind::Input);
+        let y = b.neg(x);
+        b.output(y);
+        (b.finish(), Mesh::new(&[("batch", 2), ("model", 4)]))
+    }
+
+    #[test]
+    fn tile_validity_checks_divisibility() {
+        let (f, mesh) = setup();
+        let dm = DistMap::new(&f, &mesh);
+        let st = DecisionState::default();
+        let model = mesh.axis_by_name("model").unwrap();
+        assert!(action_valid(&f, &mesh, &dm, &st, &Action::Tile { v: ValueId(0), dim: 1, axis: model }));
+        // 3 and 5 are not divisible by 2 or 4
+        assert!(tile_actions_for(&f, &mesh, &dm, &st, ValueId(1)).is_empty());
+    }
+
+    #[test]
+    fn atomic_blocks_tiling() {
+        let (f, mesh) = setup();
+        let dm = DistMap::new(&f, &mesh);
+        let mut st = DecisionState::default();
+        st.atomic.push(ValueId(0));
+        let model = mesh.axis_by_name("model").unwrap();
+        assert!(!action_valid(&f, &mesh, &dm, &st, &Action::Tile { v: ValueId(0), dim: 0, axis: model }));
+    }
+
+    #[test]
+    fn same_axis_twice_invalid_other_axis_other_dim_ok() {
+        let (f, mesh) = setup();
+        let mut dm = DistMap::new(&f, &mesh);
+        let st = DecisionState::default();
+        let model = mesh.axis_by_name("model").unwrap();
+        let batch = mesh.axis_by_name("batch").unwrap();
+        dm.set(0, model, 1);
+        assert!(!action_valid(&f, &mesh, &dm, &st, &Action::Tile { v: ValueId(0), dim: 0, axis: model }));
+        assert!(!action_valid(&f, &mesh, &dm, &st, &Action::Tile { v: ValueId(0), dim: 1, axis: batch }));
+        assert!(action_valid(&f, &mesh, &dm, &st, &Action::Tile { v: ValueId(0), dim: 0, axis: batch }));
+    }
+
+    #[test]
+    fn enumerates_expected_action_count() {
+        let (f, mesh) = setup();
+        let dm = DistMap::new(&f, &mesh);
+        let st = DecisionState::default();
+        // w is 16x64: both dims divisible by both axes -> 2 axes * 2 dims.
+        assert_eq!(tile_actions_for(&f, &mesh, &dm, &st, ValueId(0)).len(), 4);
+    }
+}

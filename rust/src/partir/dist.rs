@@ -1,0 +1,171 @@
+//! Per-value distribution state: for every mesh axis, whether a value is
+//! (so far) replicated or tiled along one of its tensor dimensions.
+//!
+//! Stored as a fixed-width byte array per value (`MAX_AXES`), so the
+//! whole distribution map of a 50k-op program is a few hundred KB and a
+//! propagation sweep stays cache-friendly — this map is rebuilt after
+//! every MCTS action (hot path, see DESIGN.md §8).
+
+use super::mesh::{AxisId, Mesh, MAX_AXES};
+use crate::ir::Func;
+
+/// Distribution of one value along one axis.
+/// Encoded as u8: `UNKNOWN` = not tiled (lowered as replicated), else the
+/// tensor dimension index tiled by that axis.
+pub const UNKNOWN: u8 = 0xFF;
+
+/// Distribution state for every value in a function.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DistMap {
+    /// `d[v][a]` = dim tiled by axis `a` for value `v`, or `UNKNOWN`.
+    pub d: Vec<[u8; MAX_AXES]>,
+    pub num_axes: usize,
+}
+
+impl DistMap {
+    pub fn new(f: &Func, mesh: &Mesh) -> DistMap {
+        DistMap { d: vec![[UNKNOWN; MAX_AXES]; f.num_values()], num_axes: mesh.num_axes() }
+    }
+
+    #[inline]
+    pub fn get(&self, v: usize, a: AxisId) -> Option<usize> {
+        let x = self.d[v][a.0];
+        if x == UNKNOWN {
+            None
+        } else {
+            Some(x as usize)
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, v: usize, a: AxisId, dim: usize) {
+        debug_assert!(dim < UNKNOWN as usize);
+        self.d[v][a.0] = dim as u8;
+    }
+
+    #[inline]
+    pub fn clear(&mut self, v: usize, a: AxisId) {
+        self.d[v][a.0] = UNKNOWN;
+    }
+
+    /// Is the value tiled along any axis?
+    pub fn is_tiled(&self, v: usize) -> bool {
+        self.d[v][..self.num_axes].iter().any(|&x| x != UNKNOWN)
+    }
+
+    /// Tensor dims used by this value's tiling, per axis.
+    pub fn tilings(&self, v: usize) -> Vec<(AxisId, usize)> {
+        (0..self.num_axes)
+            .filter_map(|a| self.get(v, AxisId(a)).map(|d| (AxisId(a), d)))
+            .collect()
+    }
+
+    /// Would tiling value `v` on `axis` at `dim` clash with an existing
+    /// tiling of the same tensor dim by another axis?
+    pub fn dim_taken(&self, v: usize, axis: AxisId, dim: usize) -> bool {
+        (0..self.num_axes)
+            .any(|a| a != axis.0 && self.d[v][a] == dim as u8)
+    }
+
+    /// The per-device (local) dims of value `v` given global dims.
+    pub fn local_dims(&self, v: usize, global: &[i64], mesh: &Mesh) -> Vec<i64> {
+        let mut dims = global.to_vec();
+        for a in 0..self.num_axes {
+            if let Some(d) = self.get(v, AxisId(a)) {
+                debug_assert_eq!(dims[d] % mesh.size(AxisId(a)), 0);
+                dims[d] /= mesh.size(AxisId(a));
+            }
+        }
+        dims
+    }
+
+    /// Per-device byte size of value `v`.
+    pub fn local_bytes(&self, v: usize, global_bytes: i64, mesh: &Mesh) -> i64 {
+        let mut b = global_bytes;
+        for a in 0..self.num_axes {
+            if self.d[v][a] != UNKNOWN {
+                b /= mesh.size(AxisId(a));
+            }
+        }
+        b
+    }
+
+    /// Render a type like the paper's Fig. 3: `f32[16,64{"model"}]`.
+    pub fn render_type(&self, v: usize, global: &[i64], mesh: &Mesh, dtype: &str) -> String {
+        let mut parts = Vec::with_capacity(global.len());
+        for (dim, &size) in global.iter().enumerate() {
+            let mut axes = Vec::new();
+            for a in 0..self.num_axes {
+                if self.d[v][a] == dim as u8 {
+                    axes.push(format!("\"{}\"", mesh.name(AxisId(a))));
+                }
+            }
+            if axes.is_empty() {
+                parts.push(format!("{size}"));
+            } else {
+                parts.push(format!("{size}{{{}}}", axes.join(",")));
+            }
+        }
+        format!("{dtype}[{}]", parts.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ArgKind, GraphBuilder, TensorType};
+
+    fn setup() -> (Func, Mesh) {
+        let mut b = GraphBuilder::new("t");
+        let x = b.arg("x", TensorType::f32(&[16, 64]), ArgKind::Parameter);
+        let _ = b.neg(x);
+        (b.finish(), Mesh::new(&[("batch", 2), ("model", 4)]))
+    }
+
+    #[test]
+    fn set_get_clear() {
+        let (f, mesh) = setup();
+        let mut dm = DistMap::new(&f, &mesh);
+        let model = mesh.axis_by_name("model").unwrap();
+        assert_eq!(dm.get(0, model), None);
+        dm.set(0, model, 1);
+        assert_eq!(dm.get(0, model), Some(1));
+        assert!(dm.is_tiled(0));
+        dm.clear(0, model);
+        assert!(!dm.is_tiled(0));
+    }
+
+    #[test]
+    fn local_shape_and_bytes() {
+        let (f, mesh) = setup();
+        let mut dm = DistMap::new(&f, &mesh);
+        let model = mesh.axis_by_name("model").unwrap();
+        let batch = mesh.axis_by_name("batch").unwrap();
+        dm.set(0, model, 1);
+        assert_eq!(dm.local_dims(0, &[16, 64], &mesh), vec![16, 16]);
+        dm.set(0, batch, 0);
+        assert_eq!(dm.local_dims(0, &[16, 64], &mesh), vec![8, 16]);
+        assert_eq!(dm.local_bytes(0, 16 * 64 * 4, &mesh), 16 * 64 * 4 / 8);
+    }
+
+    #[test]
+    fn dim_taken_detects_cross_axis_clash() {
+        let (f, mesh) = setup();
+        let mut dm = DistMap::new(&f, &mesh);
+        let model = mesh.axis_by_name("model").unwrap();
+        let batch = mesh.axis_by_name("batch").unwrap();
+        dm.set(0, model, 1);
+        assert!(dm.dim_taken(0, batch, 1));
+        assert!(!dm.dim_taken(0, batch, 0));
+        assert!(!dm.dim_taken(0, model, 1)); // same axis is not a clash
+    }
+
+    #[test]
+    fn renders_distributed_type() {
+        let (f, mesh) = setup();
+        let mut dm = DistMap::new(&f, &mesh);
+        let model = mesh.axis_by_name("model").unwrap();
+        dm.set(0, model, 1);
+        assert_eq!(dm.render_type(0, &[16, 64], &mesh, "f32"), "f32[16, 64{\"model\"}]");
+    }
+}

@@ -1,0 +1,106 @@
+//! Logical device meshes (paper §2.2): users declare named axes with
+//! fixed sizes, e.g. `{("batch", 2), ("model", 4)}` for 8 devices, and
+//! the partitioner only searches over axes it is instructed to use.
+
+/// Index of an axis within a [`Mesh`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AxisId(pub usize);
+
+/// Maximum number of mesh axes supported (dist maps are fixed-width
+/// arrays for speed; 4 covers batch/model/pipeline/expert layouts).
+pub const MAX_AXES: usize = 4;
+
+#[derive(Debug, Clone)]
+pub struct Axis {
+    pub name: String,
+    pub size: i64,
+    /// Whether the automated partitioner may assign this axis (paper:
+    /// users keep manual control of e.g. the data-parallel axis).
+    pub searchable: bool,
+}
+
+/// A rectangular logical device mesh.
+#[derive(Debug, Clone)]
+pub struct Mesh {
+    pub axes: Vec<Axis>,
+}
+
+impl Mesh {
+    pub fn new(axes: &[(&str, i64)]) -> Mesh {
+        assert!(axes.len() <= MAX_AXES, "at most {MAX_AXES} mesh axes supported");
+        assert!(!axes.is_empty(), "mesh needs at least one axis");
+        Mesh {
+            axes: axes
+                .iter()
+                .map(|(n, s)| {
+                    assert!(*s >= 1, "axis size must be >= 1");
+                    Axis { name: n.to_string(), size: *s, searchable: true }
+                })
+                .collect(),
+        }
+    }
+
+    /// Mark an axis as manually managed (excluded from search).
+    pub fn manual(mut self, name: &str) -> Mesh {
+        let ax = self.axis_by_name(name).expect("no such axis");
+        self.axes[ax.0].searchable = false;
+        self
+    }
+
+    pub fn num_axes(&self) -> usize {
+        self.axes.len()
+    }
+
+    pub fn axis_by_name(&self, name: &str) -> Option<AxisId> {
+        self.axes.iter().position(|a| a.name == name).map(AxisId)
+    }
+
+    pub fn size(&self, a: AxisId) -> i64 {
+        self.axes[a.0].size
+    }
+
+    pub fn name(&self, a: AxisId) -> &str {
+        &self.axes[a.0].name
+    }
+
+    /// Total device count (product of axis sizes).
+    pub fn num_devices(&self) -> i64 {
+        self.axes.iter().map(|a| a.size).product()
+    }
+
+    pub fn searchable_axes(&self) -> Vec<AxisId> {
+        (0..self.axes.len()).map(AxisId).filter(|&a| self.axes[a.0].searchable).collect()
+    }
+
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> =
+            self.axes.iter().map(|a| format!("\"{}\"={}", a.name, a.size)).collect();
+        format!("#partir.mesh<{}>", parts.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_basics() {
+        let m = Mesh::new(&[("batch", 2), ("model", 4)]);
+        assert_eq!(m.num_devices(), 8);
+        assert_eq!(m.axis_by_name("model"), Some(AxisId(1)));
+        assert_eq!(m.size(AxisId(1)), 4);
+        assert_eq!(m.describe(), "#partir.mesh<\"batch\"=2, \"model\"=4>");
+    }
+
+    #[test]
+    fn manual_axes_excluded_from_search() {
+        let m = Mesh::new(&[("batch", 2), ("model", 4)]).manual("batch");
+        assert_eq!(m.searchable_axes(), vec![AxisId(1)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_axes_rejected() {
+        Mesh::new(&[("a", 2), ("b", 2), ("c", 2), ("d", 2), ("e", 2)]);
+    }
+}

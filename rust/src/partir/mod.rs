@@ -1,0 +1,17 @@
+//! PartIR layer (paper §2.1–2.2): meshes, per-value distribution state,
+//! the declarative per-op partitioning registry, the propagation engine,
+//! rewrite actions, and the Fig-2-style printer.
+
+pub mod actions;
+pub mod dist;
+pub mod mesh;
+pub mod printer;
+pub mod program;
+pub mod propagate;
+pub mod registry;
+
+pub use actions::{Action, DecisionState};
+pub use dist::DistMap;
+pub use mesh::{Axis, AxisId, Mesh, MAX_AXES};
+pub use program::PartirProgram;
+pub use propagate::{PropStats, Propagator};

@@ -1,0 +1,135 @@
+//! `PartirProgram`: a base-dialect function paired with a mesh and the
+//! precomputed propagation rules — the immutable context shared by all
+//! search episodes. Applying a [`DecisionState`] yields a [`DistMap`]
+//! (the PartIR view of the program) plus propagation statistics.
+
+use super::actions::{action_valid, Action, DecisionState};
+use super::dist::DistMap;
+use super::mesh::Mesh;
+use super::propagate::{PropStats, Propagator};
+use crate::ir::{ArgKind, Func, ValueId};
+
+pub struct PartirProgram {
+    pub func: Func,
+    pub mesh: Mesh,
+    pub prop: Propagator,
+}
+
+impl PartirProgram {
+    pub fn new(func: Func, mesh: Mesh) -> PartirProgram {
+        let prop = Propagator::new(&func);
+        PartirProgram { func, mesh, prop }
+    }
+
+    /// The initial worklist of "interesting operation nodes" (paper §2.3):
+    /// function arguments — weights, biases, optimiser state, model inputs.
+    pub fn initial_worklist(&self) -> Vec<ValueId> {
+        (0..self.func.num_args() as u32).map(ValueId).collect()
+    }
+
+    /// Interesting *parameter-like* args (params + optimiser state):
+    /// what the learner ranks.
+    pub fn decision_args(&self) -> Vec<ValueId> {
+        (0..self.func.num_args())
+            .filter(|&i| {
+                matches!(self.func.args[i].kind, ArgKind::Parameter | ArgKind::OptState)
+            })
+            .map(|i| ValueId(i as u32))
+            .collect()
+    }
+
+    /// Apply a decision sequence: replay explicit actions with forward
+    /// propagation after each, exactly as the search env does.
+    pub fn apply(&self, state: &DecisionState) -> (DistMap, PropStats) {
+        let mut dm = DistMap::new(&self.func, &self.mesh);
+        let mut stats = PropStats::default();
+        self.apply_into(state, &mut dm, &mut stats);
+        (dm, stats)
+    }
+
+    /// Same as [`apply`] but reusing caller-provided buffers (hot path).
+    pub fn apply_into(&self, state: &DecisionState, dm: &mut DistMap, stats: &mut PropStats) {
+        dm.d.iter_mut().for_each(|x| *x = [super::dist::UNKNOWN; super::mesh::MAX_AXES]);
+        stats.stuck_nodes.clear();
+        stats.assigned = 0;
+        let mut replay = DecisionState::default();
+        for action in &state.actions {
+            match action {
+                Action::Tile { v, dim, axis } => {
+                    if action_valid(&self.func, &self.mesh, dm, &replay, action) {
+                        dm.set(v.index(), *axis, *dim);
+                        stats.stuck_nodes.clear();
+                        self.prop.forward(&self.func, &self.mesh, dm, stats);
+                    }
+                }
+                Action::Atomic { v } => replay.atomic.push(*v),
+                Action::InferRest => {
+                    stats.stuck_nodes.clear();
+                    self.prop.infer_rest(&self.func, &self.mesh, dm, stats);
+                }
+                Action::Stop => break,
+            }
+            replay.actions.push(*action);
+        }
+        stats.stuck_nodes.sort_unstable();
+        stats.stuck_nodes.dedup();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ArgKind, GraphBuilder, TensorType};
+    use crate::partir::mesh::AxisId;
+
+    fn linear() -> PartirProgram {
+        let mut b = GraphBuilder::new("main");
+        let x = b.arg("x", TensorType::f32(&[8, 16]), ArgKind::Input);
+        let w = b.arg("w", TensorType::f32(&[16, 64]), ArgKind::Parameter);
+        let bias = b.arg("b", TensorType::f32(&[64]), ArgKind::Parameter);
+        let dot = b.matmul(x, w);
+        let ty = b.ty(dot).clone();
+        let bb = b.broadcast_to(bias, ty);
+        let out = b.add(dot, bb);
+        b.output(out);
+        PartirProgram::new(b.finish(), Mesh::new(&[("shard", 2)]))
+    }
+
+    #[test]
+    fn apply_replays_actions_with_propagation() {
+        let p = linear();
+        let st = DecisionState {
+            actions: vec![
+                Action::Tile { v: ValueId(1), dim: 1, axis: AxisId(0) },
+                Action::InferRest,
+            ],
+            atomic: vec![],
+        };
+        let (dm, stats) = p.apply(&st);
+        assert_eq!(dm.get(1, AxisId(0)), Some(1));
+        assert_eq!(dm.get(2, AxisId(0)), Some(0)); // bias inferred
+        assert!(stats.assigned > 0);
+    }
+
+    #[test]
+    fn invalid_actions_in_replay_are_skipped() {
+        let p = linear();
+        let st = DecisionState {
+            actions: vec![
+                Action::Tile { v: ValueId(1), dim: 1, axis: AxisId(0) },
+                // second tile of same value+axis is invalid -> skipped
+                Action::Tile { v: ValueId(1), dim: 0, axis: AxisId(0) },
+            ],
+            atomic: vec![],
+        };
+        let (dm, _) = p.apply(&st);
+        assert_eq!(dm.get(1, AxisId(0)), Some(1));
+    }
+
+    #[test]
+    fn worklists() {
+        let p = linear();
+        assert_eq!(p.initial_worklist().len(), 3);
+        assert_eq!(p.decision_args(), vec![ValueId(1), ValueId(2)]);
+    }
+}

@@ -1,0 +1,368 @@
+//! Propagation engine (paper §2.1/§2.3): pushes tiling decisions through
+//! the program using the per-op rule registry.
+//!
+//! Three tactics, mirroring the paper:
+//!   * `forward`  — operands → results (run after every rewrite action);
+//!   * `infer_rest` — results → operands as well ("a pass that infers the
+//!     tiling of the rest of the arguments from only some of them");
+//!   * stuck-node detection — nodes where information conflicts or hits
+//!     an unmapped dim "resurface back to our worklist".
+//!
+//! This is the single hottest code path in the system: it runs after
+//! every MCTS action over programs with up to ~100k values. Rules are
+//! precomputed per node; the sweep itself is allocation-free.
+
+use super::dist::{DistMap, UNKNOWN};
+use super::mesh::{AxisId, Mesh};
+use super::registry::{rule_for, OpRule};
+use crate::ir::{Func, TensorType, ValueId};
+
+/// Precomputed propagation context for one program (immutable during search).
+pub struct Propagator {
+    pub rules: Vec<OpRule>,
+    /// Global dims per value (flattened copy for cache-friendly access).
+    dims: Vec<Vec<i64>>,
+    /// Global byte size per value (perf: liveness/runtime models read this
+    /// instead of re-walking dim vectors — EXPERIMENTS.md §Perf opt 1).
+    pub global_bytes: Vec<i64>,
+    /// Global element count per value.
+    pub global_elems: Vec<i64>,
+}
+
+/// Result of a propagation sweep.
+#[derive(Debug, Default, Clone)]
+pub struct PropStats {
+    /// Node indices where propagation got stuck (conflict / unmapped dim).
+    pub stuck_nodes: Vec<u32>,
+    /// Number of value-axis assignments made.
+    pub assigned: usize,
+}
+
+impl Propagator {
+    pub fn new(f: &Func) -> Propagator {
+        let rules = f
+            .nodes
+            .iter()
+            .map(|n| {
+                let ins: Vec<&TensorType> =
+                    n.inputs.iter().map(|&v| f.value_type(v)).collect();
+                rule_for(&n.op, &ins, &n.ty)
+            })
+            .collect();
+        let dims: Vec<Vec<i64>> = (0..f.num_values())
+            .map(|v| f.value_type(ValueId(v as u32)).dims.clone())
+            .collect();
+        let global_bytes = (0..f.num_values())
+            .map(|v| f.value_type(ValueId(v as u32)).byte_size())
+            .collect();
+        let global_elems = (0..f.num_values())
+            .map(|v| f.value_type(ValueId(v as u32)).num_elements())
+            .collect();
+        Propagator { rules, dims, global_bytes, global_elems }
+    }
+
+    /// Global dims of a value (borrowed; avoids re-walking the Func).
+    #[inline]
+    pub fn dims_of(&self, v: usize) -> &[i64] {
+        &self.dims[v]
+    }
+
+    #[inline]
+    fn divisible(&self, v: usize, dim: usize, size: i64) -> bool {
+        self.dims[v][dim] % size == 0
+    }
+
+    /// Forward sweep: one pass in topological order, all axes at once.
+    /// Pre-assigned output dists (explicit actions on internal nodes) are
+    /// never overwritten.
+    pub fn forward(&self, f: &Func, mesh: &Mesh, dm: &mut DistMap, stats: &mut PropStats) {
+        let num_axes = mesh.num_axes();
+        for (ni, node) in f.nodes.iter().enumerate() {
+            let rule = &self.rules[ni];
+            let out_v = f.num_args() + ni;
+            for a in 0..num_axes {
+                let axis = AxisId(a);
+                let asize = mesh.size(axis);
+                if asize == 1 {
+                    continue;
+                }
+                // Reduced-tie hit on this axis?
+                let mut reduced_hit = false;
+                let mut reduced_conflict = false;
+                for group in &rule.reduced_ties {
+                    let mut any = false;
+                    let mut all = true;
+                    for &(oi, od) in group {
+                        let iv = node.inputs[oi].index();
+                        if dm.d[iv][a] == od as u8 {
+                            any = true;
+                        } else {
+                            all = false;
+                        }
+                    }
+                    if any {
+                        reduced_hit = true;
+                        if !all && group.len() > 1 {
+                            // only one side of a contraction is tiled:
+                            // lowering must slice/gather — mark stuck.
+                            reduced_conflict = true;
+                        }
+                    }
+                }
+                // Output-dim candidate from operand tilings.
+                let mut cand: Option<usize> = None;
+                let mut conflict = false;
+                for (od, ties) in rule.out_ties.iter().enumerate() {
+                    for &(oi, idim) in ties {
+                        let iv = node.inputs[oi].index();
+                        if dm.d[iv][a] == idim as u8 {
+                            match cand {
+                                None => cand = Some(od),
+                                Some(c) if c != od => conflict = true,
+                                _ => {}
+                            }
+                        }
+                    }
+                }
+                let pre_set = dm.d[out_v][a] != UNKNOWN;
+                match (cand, reduced_hit) {
+                    (Some(od), rh) => {
+                        if !pre_set
+                            && self.divisible(out_v, od, asize)
+                            && !dm.dim_taken(out_v, axis, od)
+                        {
+                            dm.set(out_v, axis, od);
+                            stats.assigned += 1;
+                        } else if !pre_set {
+                            conflict = true;
+                        }
+                        if rh || conflict || reduced_conflict {
+                            stats.stuck_nodes.push(ni as u32);
+                        }
+                    }
+                    (None, true) => {
+                        // Pure contraction tiling: output replicated on this
+                        // axis, all-reduce inserted at lowering.
+                        if reduced_conflict {
+                            stats.stuck_nodes.push(ni as u32);
+                        }
+                    }
+                    (None, false) => {
+                        if conflict {
+                            stats.stuck_nodes.push(ni as u32);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Backward sweep: infer operand tilings from tiled results. Only
+    /// assigns to values that are still Unknown. Returns assignments made.
+    pub fn backward(&self, f: &Func, mesh: &Mesh, dm: &mut DistMap) -> usize {
+        let num_axes = mesh.num_axes();
+        let mut assigned = 0;
+        for ni in (0..f.num_nodes()).rev() {
+            let node = &f.nodes[ni];
+            let rule = &self.rules[ni];
+            let out_v = f.num_args() + ni;
+            for a in 0..num_axes {
+                let axis = AxisId(a);
+                let asize = mesh.size(axis);
+                if asize == 1 {
+                    continue;
+                }
+                let od = match dm.get(out_v, axis) {
+                    Some(od) => od,
+                    None => continue,
+                };
+                if od >= rule.out_ties.len() {
+                    continue;
+                }
+                for &(oi, idim) in &rule.out_ties[od] {
+                    let iv = node.inputs[oi].index();
+                    if dm.d[iv][a] == UNKNOWN
+                        && self.divisible(iv, idim, asize)
+                        && !dm.dim_taken(iv, axis, idim)
+                    {
+                        dm.set(iv, axis, idim);
+                        assigned += 1;
+                    }
+                }
+            }
+        }
+        assigned
+    }
+
+    /// The paper's "infer the tiling of the rest of the arguments" global
+    /// pass: alternate backward/forward sweeps to a bounded fixpoint.
+    pub fn infer_rest(&self, f: &Func, mesh: &Mesh, dm: &mut DistMap, stats: &mut PropStats) {
+        for _ in 0..3 {
+            let n = self.backward(f, mesh, dm);
+            self.forward(f, mesh, dm, stats);
+            if n == 0 {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ArgKind, GraphBuilder, TensorType};
+
+    /// Paper Figure 2: linear layer, tile %arg1 (weights) on dim 1.
+    fn fig2() -> (Func, Mesh) {
+        let mut b = GraphBuilder::new("main");
+        let x = b.arg("x", TensorType::f32(&[8, 16]), ArgKind::Input);
+        let w = b.arg("w", TensorType::f32(&[16, 64]), ArgKind::Parameter);
+        let bias = b.arg("b", TensorType::f32(&[64]), ArgKind::Parameter);
+        let dot = b.matmul(x, w);
+        let ty = b.ty(dot).clone();
+        let bb = b.broadcast_to(bias, ty);
+        let out = b.add(dot, bb);
+        b.output(out);
+        (b.finish(), Mesh::new(&[("shard", 2)]))
+    }
+
+    #[test]
+    fn figure2_column_sharding_propagates() {
+        let (f, mesh) = fig2();
+        let p = Propagator::new(&f);
+        let mut dm = DistMap::new(&f, &mesh);
+        let ax = AxisId(0);
+        dm.set(1, ax, 1); // tile w on dim 1
+        let mut st = PropStats::default();
+        p.forward(&f, &mesh, &mut dm, &mut st);
+        // dot result tiled dim 1, add result tiled dim 1
+        let dot_v = f.num_args(); // node 0
+        let out_v = f.num_args() + 2;
+        assert_eq!(dm.get(dot_v, ax), Some(1));
+        assert_eq!(dm.get(out_v, ax), Some(1));
+        assert!(st.stuck_nodes.is_empty());
+        // x (arg0) untouched — stays replicated ("atomic" in Fig 2).
+        assert_eq!(dm.get(0, ax), None);
+    }
+
+    #[test]
+    fn figure2_backward_infers_bias() {
+        let (f, mesh) = fig2();
+        let p = Propagator::new(&f);
+        let mut dm = DistMap::new(&f, &mesh);
+        let ax = AxisId(0);
+        dm.set(1, ax, 1);
+        let mut st = PropStats::default();
+        p.forward(&f, &mesh, &mut dm, &mut st);
+        p.infer_rest(&f, &mesh, &mut dm, &mut st);
+        // bias (arg2) inferred tiled dim 0 via broadcast tie.
+        assert_eq!(dm.get(2, ax), Some(0));
+    }
+
+    #[test]
+    fn contraction_tiling_makes_output_replicated() {
+        // Megatron row-sharding: tile w on its CONTRACTING dim.
+        let (f, mesh) = fig2();
+        let p = Propagator::new(&f);
+        let mut dm = DistMap::new(&f, &mesh);
+        let ax = AxisId(0);
+        dm.set(1, ax, 0); // w dim 0 = contraction
+        let mut st = PropStats::default();
+        p.forward(&f, &mesh, &mut dm, &mut st);
+        let dot_v = f.num_args();
+        assert_eq!(dm.get(dot_v, ax), None); // partial sum -> replicated
+        // one-sided contraction: x not tiled on dim 1 -> stuck node reported
+        assert_eq!(st.stuck_nodes, vec![0]);
+    }
+
+    #[test]
+    fn two_sided_contraction_is_not_stuck() {
+        let (f, mesh) = fig2();
+        let p = Propagator::new(&f);
+        let mut dm = DistMap::new(&f, &mesh);
+        let ax = AxisId(0);
+        dm.set(0, ax, 1); // x dim 1 (contract)
+        dm.set(1, ax, 0); // w dim 0 (contract)
+        let mut st = PropStats::default();
+        p.forward(&f, &mesh, &mut dm, &mut st);
+        assert!(st.stuck_nodes.is_empty());
+        assert_eq!(dm.get(f.num_args(), ax), None);
+    }
+
+    #[test]
+    fn conflicting_tilings_get_stuck() {
+        let mut b = GraphBuilder::new("c");
+        let x = b.arg("x", TensorType::f32(&[4, 4]), ArgKind::Input);
+        let y = b.arg("y", TensorType::f32(&[4, 4]), ArgKind::Input);
+        let s = b.add(x, y);
+        b.output(s);
+        let f = b.finish();
+        let mesh = Mesh::new(&[("shard", 2)]);
+        let p = Propagator::new(&f);
+        let mut dm = DistMap::new(&f, &mesh);
+        dm.set(0, AxisId(0), 0);
+        dm.set(1, AxisId(0), 1); // conflicting dims
+        let mut st = PropStats::default();
+        p.forward(&f, &mesh, &mut dm, &mut st);
+        assert_eq!(st.stuck_nodes, vec![0]);
+        // first-wins: output tiled at dim 0
+        assert_eq!(dm.get(2, AxisId(0)), Some(0));
+    }
+
+    #[test]
+    fn indivisible_dims_not_tiled() {
+        let mut b = GraphBuilder::new("c");
+        let x = b.arg("x", TensorType::f32(&[3, 4]), ArgKind::Input);
+        let n = b.neg(x);
+        b.output(n);
+        let f = b.finish();
+        let mesh = Mesh::new(&[("shard", 2)]);
+        let p = Propagator::new(&f);
+        let mut dm = DistMap::new(&f, &mesh);
+        dm.set(0, AxisId(0), 0); // dim of size 3, axis of size 2
+        let mut st = PropStats::default();
+        p.forward(&f, &mesh, &mut dm, &mut st);
+        assert_eq!(dm.get(1, AxisId(0)), None);
+        assert_eq!(st.stuck_nodes, vec![0]);
+    }
+
+    #[test]
+    fn reshape_merge_propagates_head_tiling() {
+        // [B,S,H,Dh] -> [B,S,D] with H tiled: merged dim stays tiled.
+        let mut b = GraphBuilder::new("r");
+        let x = b.arg("x", TensorType::f32(&[2, 8, 4, 16]), ArgKind::Input);
+        let r = b.reshape(x, &[2, 8, 64]);
+        b.output(r);
+        let f = b.finish();
+        let mesh = Mesh::new(&[("model", 4)]);
+        let p = Propagator::new(&f);
+        let mut dm = DistMap::new(&f, &mesh);
+        dm.set(0, AxisId(0), 2); // tile H
+        let mut st = PropStats::default();
+        p.forward(&f, &mesh, &mut dm, &mut st);
+        assert_eq!(dm.get(1, AxisId(0)), Some(2)); // merged dim tiled
+        assert!(st.stuck_nodes.is_empty());
+    }
+
+    #[test]
+    fn multi_axis_propagation_is_independent() {
+        let (f, mesh) = {
+            let mut b = GraphBuilder::new("m");
+            let x = b.arg("x", TensorType::f32(&[8, 16]), ArgKind::Input);
+            let w = b.arg("w", TensorType::f32(&[16, 64]), ArgKind::Parameter);
+            let y = b.matmul(x, w);
+            b.output(y);
+            (b.finish(), Mesh::new(&[("batch", 2), ("model", 4)]))
+        };
+        let p = Propagator::new(&f);
+        let mut dm = DistMap::new(&f, &mesh);
+        dm.set(0, AxisId(0), 0); // batch-tile x rows
+        dm.set(1, AxisId(1), 1); // model-tile w cols
+        let mut st = PropStats::default();
+        p.forward(&f, &mesh, &mut dm, &mut st);
+        let y = f.num_args();
+        assert_eq!(dm.get(y, AxisId(0)), Some(0));
+        assert_eq!(dm.get(y, AxisId(1)), Some(1));
+        assert!(st.stuck_nodes.is_empty());
+    }
+}

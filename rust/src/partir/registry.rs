@@ -1,0 +1,249 @@
+//! Declarative per-operator partitioning rules (paper §2.1: "a *registry*
+//! containing a declarative specification of this behaviour for each
+//! operator in the underlying tensor dialect").
+//!
+//! A rule relates tensor dimensions of an op's operands and result:
+//!   - `out_ties[od]` — (operand, operand_dim) pairs tied to output dim
+//!     `od`: tiling any member implies the output may be tiled at `od`
+//!     (and vice versa for backward propagation).
+//!   - `reduced_ties` — operand dim groups that are summed away (dot
+//!     contraction dims, reduce dims, segment/gather source rows): tiling
+//!     one makes the result a partial sum, lowered to an all-reduce.
+//!
+//! Dims not appearing in any tie are "unmapped": propagation cannot move
+//! information through them, and a tiling that reaches one gets *stuck*
+//! (resurfacing the node to the search worklist, §2.3).
+
+use crate::ir::{OpKind, TensorType};
+
+/// Dimension-relation rule for one node. Precomputed once per program.
+#[derive(Debug, Clone, Default)]
+pub struct OpRule {
+    /// Per output dim: tied (operand_index, operand_dim) pairs.
+    pub out_ties: Vec<Vec<(usize, usize)>>,
+    /// Summed-away operand dim groups.
+    pub reduced_ties: Vec<Vec<(usize, usize)>>,
+}
+
+/// Build the rule for `op` given operand and result types.
+pub fn rule_for(op: &OpKind, ins: &[&TensorType], out: &TensorType) -> OpRule {
+    let out_rank = out.rank();
+    let mut r = OpRule { out_ties: vec![Vec::new(); out_rank], reduced_ties: Vec::new() };
+    match op {
+        // Output dims freely tileable, nothing to tie (a shard of a splat
+        // constant or iota can always be materialised locally).
+        OpKind::Const { .. } | OpKind::Iota { .. } => {}
+
+        // Elementwise: dim d of every operand ties to output dim d.
+        _ if op.is_elementwise() => {
+            for od in 0..out_rank {
+                for (i, t) in ins.iter().enumerate() {
+                    if t.rank() == out_rank {
+                        r.out_ties[od].push((i, od));
+                    }
+                }
+            }
+        }
+
+        OpKind::Dot(d) => {
+            let lhs_free = d.free_dims(ins[0].rank(), &d.lhs_batch, &d.lhs_contract);
+            let rhs_free = d.free_dims(ins[1].rank(), &d.rhs_batch, &d.rhs_contract);
+            let nb = d.lhs_batch.len();
+            for (k, (&lb, &rb)) in d.lhs_batch.iter().zip(&d.rhs_batch).enumerate() {
+                r.out_ties[k].push((0, lb));
+                r.out_ties[k].push((1, rb));
+            }
+            for (k, &f) in lhs_free.iter().enumerate() {
+                r.out_ties[nb + k].push((0, f));
+            }
+            for (k, &f) in rhs_free.iter().enumerate() {
+                r.out_ties[nb + lhs_free.len() + k].push((1, f));
+            }
+            for (&lc, &rc) in d.lhs_contract.iter().zip(&d.rhs_contract) {
+                r.reduced_ties.push(vec![(0, lc), (1, rc)]);
+            }
+        }
+
+        OpKind::Reduce { dims, .. } => {
+            let kept: Vec<usize> = (0..ins[0].rank()).filter(|i| !dims.contains(i)).collect();
+            for (od, &id) in kept.iter().enumerate() {
+                r.out_ties[od].push((0, id));
+            }
+            for &d in dims {
+                r.reduced_ties.push(vec![(0, d)]);
+            }
+        }
+
+        OpKind::Broadcast { dims } => {
+            for (id, &od) in dims.iter().enumerate() {
+                // A size-1 stretched dim cannot carry a tiling.
+                if ins[0].dims[id] == out.dims[od] {
+                    r.out_ties[od].push((0, id));
+                }
+            }
+        }
+
+        OpKind::Reshape => {
+            for (id, od) in reshape_ties(&ins[0].dims, &out.dims) {
+                r.out_ties[od].push((0, id));
+            }
+        }
+
+        OpKind::Transpose { perm } => {
+            for (od, &id) in perm.iter().enumerate() {
+                r.out_ties[od].push((0, id));
+            }
+        }
+
+        OpKind::Gather => {
+            // output dims = indices dims ++ table dims[1..].
+            let n_idx = ins[1].rank();
+            for od in 0..n_idx {
+                r.out_ties[od].push((1, od));
+            }
+            for t in 1..ins[0].rank() {
+                r.out_ties[n_idx + t - 1].push((0, t));
+            }
+            // table dim 0 (vocab) is unmapped: tiling it gets stuck.
+        }
+
+        OpKind::SegmentSum { .. } => {
+            for t in 1..ins[0].rank() {
+                r.out_ties[t].push((0, t));
+            }
+            // Edge rows of data and ids are summed away into segments.
+            r.reduced_ties.push(vec![(0, 0), (1, 0)]);
+            // output dim 0 (segments) is unmapped.
+        }
+
+        // Covered by the elementwise arm above; kept for exhaustiveness.
+        _ => {}
+    }
+    r
+}
+
+/// Dimension ties across a reshape, by row-major chunk matching.
+///
+/// Walk both shapes accumulating products until they agree — that closes
+/// a "chunk". Within a chunk, the FIRST input dim ties to the FIRST
+/// output dim (valid for row-major data: sharding the outermost dim of a
+/// merged group equals sharding the merged dim, provided sizes divide —
+/// divisibility is checked at propagation time). Inner dims of a chunk
+/// stay unmapped, so tilings reaching them get stuck — exactly the
+/// paper's "propagation can get stuck in internal nodes".
+pub fn reshape_ties(in_dims: &[i64], out_dims: &[i64]) -> Vec<(usize, usize)> {
+    let mut ties = Vec::new();
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < in_dims.len() && j < out_dims.len() {
+        let (ci, cj) = (i, j);
+        let mut pi = in_dims[i];
+        let mut pj = out_dims[j];
+        while pi != pj {
+            if pi < pj {
+                i += 1;
+                if i >= in_dims.len() {
+                    return ties;
+                }
+                pi *= in_dims[i];
+            } else {
+                j += 1;
+                if j >= out_dims.len() {
+                    return ties;
+                }
+                pj *= out_dims[j];
+            }
+        }
+        // chunk = in_dims[ci..=i] <-> out_dims[cj..=j]
+        ties.push((ci, cj));
+        i += 1;
+        j += 1;
+    }
+    ties
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DotDims, ReduceKind};
+
+    #[test]
+    fn elementwise_ties_all_dims() {
+        let t = TensorType::f32(&[2, 3]);
+        let r = rule_for(&OpKind::Add, &[&t, &t], &t);
+        assert_eq!(r.out_ties[0], vec![(0, 0), (1, 0)]);
+        assert_eq!(r.out_ties[1], vec![(0, 1), (1, 1)]);
+        assert!(r.reduced_ties.is_empty());
+    }
+
+    #[test]
+    fn dot_ties_and_contract() {
+        let a = TensorType::f32(&[8, 16]);
+        let b = TensorType::f32(&[16, 64]);
+        let o = TensorType::f32(&[8, 64]);
+        let r = rule_for(&OpKind::Dot(DotDims::matmul(2)), &[&a, &b], &o);
+        assert_eq!(r.out_ties[0], vec![(0, 0)]);
+        assert_eq!(r.out_ties[1], vec![(1, 1)]);
+        assert_eq!(r.reduced_ties, vec![vec![(0, 1), (1, 0)]]);
+    }
+
+    #[test]
+    fn batched_dot_ties_batch_dims_to_both() {
+        let q = TensorType::f32(&[2, 4, 8, 16]);
+        let k = TensorType::f32(&[2, 4, 8, 16]);
+        let o = TensorType::f32(&[2, 4, 8, 8]);
+        let d = DotDims {
+            lhs_batch: vec![0, 1],
+            rhs_batch: vec![0, 1],
+            lhs_contract: vec![3],
+            rhs_contract: vec![3],
+        };
+        let r = rule_for(&OpKind::Dot(d), &[&q, &k], &o);
+        assert_eq!(r.out_ties[1], vec![(0, 1), (1, 1)]);
+        assert_eq!(r.out_ties[2], vec![(0, 2)]);
+        assert_eq!(r.out_ties[3], vec![(1, 2)]);
+    }
+
+    #[test]
+    fn reduce_marks_contracted_dims() {
+        let x = TensorType::f32(&[2, 3, 4]);
+        let o = TensorType::f32(&[2, 4]);
+        let r = rule_for(&OpKind::Reduce { kind: ReduceKind::Sum, dims: vec![1] }, &[&x], &o);
+        assert_eq!(r.out_ties[0], vec![(0, 0)]);
+        assert_eq!(r.out_ties[1], vec![(0, 2)]);
+        assert_eq!(r.reduced_ties, vec![vec![(0, 1)]]);
+    }
+
+    #[test]
+    fn reshape_chunks() {
+        // [B,S,H,D] -> [B,S,H*D]: B<->B, S<->S, H<->(H*D)
+        assert_eq!(reshape_ties(&[2, 8, 4, 16], &[2, 8, 64]), vec![(0, 0), (1, 1), (2, 2)]);
+        // split back
+        assert_eq!(reshape_ties(&[2, 8, 64], &[2, 8, 4, 16]), vec![(0, 0), (1, 1), (2, 2)]);
+        // total flatten
+        assert_eq!(reshape_ties(&[4, 5], &[20]), vec![(0, 0)]);
+        // identity
+        assert_eq!(reshape_ties(&[3, 7], &[3, 7]), vec![(0, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn broadcast_skips_stretched_dims() {
+        let v = TensorType::f32(&[1, 4]);
+        let o = TensorType::f32(&[8, 4]);
+        let r = rule_for(&OpKind::Broadcast { dims: vec![0, 1] }, &[&v], &o);
+        assert!(r.out_ties[0].is_empty()); // size-1 stretch not tied
+        assert_eq!(r.out_ties[1], vec![(0, 1)]);
+    }
+
+    #[test]
+    fn gather_vocab_dim_unmapped() {
+        let table = TensorType::f32(&[100, 8]);
+        let ids = TensorType::i32(&[2, 5]);
+        let o = TensorType::f32(&[2, 5, 8]);
+        let r = rule_for(&OpKind::Gather, &[&table, &ids], &o);
+        assert_eq!(r.out_ties[0], vec![(1, 0)]);
+        assert_eq!(r.out_ties[1], vec![(1, 1)]);
+        assert_eq!(r.out_ties[2], vec![(0, 1)]);
+        // no tie mentions table dim 0
+        assert!(!r.out_ties.iter().flatten().any(|&(i, d)| i == 0 && d == 0));
+    }
+}

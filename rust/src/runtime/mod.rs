@@ -1,0 +1,6 @@
+//! PJRT runtime wrapper around the `xla` crate: load AOT artifacts
+//! (HLO text) and execute them from the rust hot path.
+
+pub mod pjrt;
+
+pub use pjrt::{Executable, Input, Runtime};

@@ -1,0 +1,84 @@
+//! PJRT runtime: loads AOT-compiled HLO text (produced by
+//! `python/compile/aot.py`) and executes it on the CPU PJRT client via
+//! the `xla` crate. This is the ONLY place python-authored computation
+//! enters the rust system — python itself never runs at search time.
+//!
+//! Interchange is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+
+/// A PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// An input tensor for execution.
+pub enum Input {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text module from `path`.
+    pub fn load_hlo_text(&self, path: &str) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("compiling HLO")?;
+        Ok(Executable { exe })
+    }
+}
+
+fn to_literal(i: &Input) -> Result<xla::Literal> {
+    Ok(match i {
+        Input::F32(data, dims) => xla::Literal::vec1(data).reshape(dims)?,
+        Input::I32(data, dims) => xla::Literal::vec1(data).reshape(dims)?,
+    })
+}
+
+impl Executable {
+    /// Execute with the given inputs; the module must return a tuple
+    /// (aot.py lowers with `return_tuple=True`). Returns each tuple
+    /// element flattened to f32.
+    pub fn run_f32(&self, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let mut result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let elems = result.decompose_tuple().context("decomposing result tuple")?;
+        elems
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need artifacts live in rust/tests/; here we only
+    // check client construction (always available on CPU).
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::new().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+}

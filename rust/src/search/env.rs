@@ -1,0 +1,350 @@
+//! Rewriting environment exposed to the automated partitioner (paper
+//! §2.2): a worklist of interesting values, group-level tile actions,
+//! the infer-rest tactic, and cost-model evaluation of episodes.
+//!
+//! Two structure-exploitation mechanisms from the paper are modelled:
+//!   * `cross_layer_tying` — emulates propagation "through subtly shared
+//!     constants and other computations across layers" (§3): a decision
+//!     on one layer's argument spreads to the same role in every layer.
+//!     The paper calls this sharing brittle; Figure 9 disables it.
+//!   * `grouping` — the robust replacement (Figure 8): named-scope layer
+//!     groups expose a single decision set per repeated block, shrinking
+//!     the action space itself.
+
+use crate::cost::composite::{evaluate, CostWeights, Evaluation};
+use crate::ir::{ArgKind, ValueId};
+use crate::partir::actions::{action_valid, Action, DecisionState};
+use crate::partir::dist::DistMap;
+use crate::partir::mesh::AxisId;
+use crate::partir::program::PartirProgram;
+use crate::partir::propagate::PropStats;
+use crate::sim::device::Device;
+
+/// Search options.
+#[derive(Debug, Clone)]
+pub struct SearchOptions {
+    /// Maximum explicit decisions per episode (paper: solutions needed
+    /// 2–20 decisions).
+    pub max_decisions: usize,
+    /// Group repeated layers via named scopes (Fig 8).
+    pub grouping: bool,
+    /// Emulated cross-layer shared-dependency propagation (Fig 9 ablation).
+    pub cross_layer_tying: bool,
+    /// Run infer-rest before evaluating a terminal state (shards
+    /// optimiser state / biases to match decided params).
+    pub auto_infer_rest: bool,
+}
+
+impl Default for SearchOptions {
+    fn default() -> Self {
+        SearchOptions {
+            max_decisions: 10,
+            grouping: false,
+            cross_layer_tying: true,
+            auto_infer_rest: true,
+        }
+    }
+}
+
+/// A decision target: one worklist entry — either a single value or a
+/// layer group of same-role values.
+#[derive(Debug, Clone)]
+pub struct Target {
+    pub key: String,
+    pub values: Vec<ValueId>,
+}
+
+/// Environment-level action (indices into the target list).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EnvAction {
+    Tile { target: u32, dim: u8, axis: u8 },
+    InferRest,
+    Stop,
+}
+
+/// Strip per-layer indices from a scope-qualified argument name so that
+/// `layer_3/attn/wq` and `layer_17/attn/wq` share the key
+/// `layer_*/attn/wq` (Haiku-style named scopes, paper §3 "Scaling with
+/// compiler hints").
+pub fn role_key(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    let bytes = name.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        // Replace any digit run that follows '_' with '*'.
+        if bytes[i] == b'_' && i + 1 < bytes.len() && bytes[i + 1].is_ascii_digit() {
+            out.push('_');
+            out.push('*');
+            i += 1;
+            while i < bytes.len() && bytes[i].is_ascii_digit() {
+                i += 1;
+            }
+        } else {
+            out.push(bytes[i] as char);
+            i += 1;
+        }
+    }
+    out
+}
+
+/// One search episode's mutable state.
+#[derive(Clone)]
+pub struct Episode {
+    pub state: DecisionState,
+    pub dm: DistMap,
+    pub stats: PropStats,
+    pub decisions: usize,
+    pub done: bool,
+}
+
+pub struct RewriteEnv<'a> {
+    pub program: &'a PartirProgram,
+    pub device: Device,
+    pub weights: CostWeights,
+    pub options: SearchOptions,
+    /// Decision targets (worklist entries / groups).
+    pub targets: Vec<Target>,
+    /// Baseline (fully replicated) cost for reward normalisation.
+    pub base_cost: f64,
+}
+
+impl<'a> RewriteEnv<'a> {
+    /// Build the environment. `worklist` is the candidate value list
+    /// (typically all non-OptState args, or the learner's top-k).
+    pub fn new(
+        program: &'a PartirProgram,
+        device: Device,
+        weights: CostWeights,
+        options: SearchOptions,
+        worklist: &[ValueId],
+    ) -> RewriteEnv<'a> {
+        let mut targets: Vec<Target> = Vec::new();
+        let tie = options.grouping || options.cross_layer_tying;
+        for &v in worklist {
+            let name = &program.func.args[v.index()].name;
+            let key = if tie { role_key(name) } else { name.clone() };
+            if options.grouping {
+                // one target per key, holding every member value
+                if let Some(t) = targets.iter_mut().find(|t| t.key == key) {
+                    t.values.push(v);
+                    continue;
+                }
+                targets.push(Target { key, values: vec![v] });
+            } else {
+                targets.push(Target { key, values: vec![v] });
+            }
+        }
+        let dm0 = DistMap::new(&program.func, &program.mesh);
+        let base = evaluate(program, &dm0, &device, &weights);
+        RewriteEnv { program, device, weights, options, targets, base_cost: base.cost }
+    }
+
+    /// Default worklist: every function argument except optimiser state
+    /// (which follows its parameter through infer-rest), exactly the
+    /// paper's "weights and biases ... and model inputs".
+    pub fn default_worklist(program: &PartirProgram) -> Vec<ValueId> {
+        (0..program.func.num_args())
+            .filter(|&i| program.func.args[i].kind != ArgKind::OptState)
+            .map(|i| ValueId(i as u32))
+            .collect()
+    }
+
+    pub fn reset(&self) -> Episode {
+        Episode {
+            state: DecisionState::default(),
+            dm: DistMap::new(&self.program.func, &self.program.mesh),
+            stats: PropStats::default(),
+            decisions: 0,
+            done: false,
+        }
+    }
+
+    /// The values affected by acting on `target` (group + tying expansion).
+    fn expand_target(&self, target: u32) -> Vec<ValueId> {
+        let t = &self.targets[target as usize];
+        if self.options.grouping {
+            return t.values.clone();
+        }
+        if self.options.cross_layer_tying {
+            // spread to every arg sharing the role key
+            let f = &self.program.func;
+            return (0..f.num_args())
+                .filter(|&i| {
+                    f.args[i].kind != ArgKind::OptState && role_key(&f.args[i].name) == t.key
+                })
+                .map(|i| ValueId(i as u32))
+                .collect();
+        }
+        t.values.clone()
+    }
+
+    /// Legal actions in `ep`'s current state.
+    pub fn legal_actions(&self, ep: &Episode) -> Vec<EnvAction> {
+        let mut out = Vec::new();
+        if ep.done || ep.decisions >= self.options.max_decisions {
+            return out;
+        }
+        let f = &self.program.func;
+        let mesh = &self.program.mesh;
+        for (ti, t) in self.targets.iter().enumerate() {
+            let v = t.values[0];
+            let rank = f.value_type(v).rank();
+            for axis in mesh.searchable_axes() {
+                for dim in 0..rank {
+                    let a = Action::Tile { v, dim, axis };
+                    if action_valid(f, mesh, &ep.dm, &ep.state, &a) {
+                        out.push(EnvAction::Tile {
+                            target: ti as u32,
+                            dim: dim as u8,
+                            axis: axis.0 as u8,
+                        });
+                    }
+                }
+            }
+        }
+        out.push(EnvAction::InferRest);
+        out.push(EnvAction::Stop);
+        out
+    }
+
+    /// Apply an action in place (incremental propagation).
+    pub fn step(&self, ep: &mut Episode, a: EnvAction) {
+        let f = &self.program.func;
+        let mesh = &self.program.mesh;
+        match a {
+            EnvAction::Tile { target, dim, axis } => {
+                let axis = AxisId(axis as usize);
+                for v in self.expand_target(target) {
+                    let act = Action::Tile { v, dim: dim as usize, axis };
+                    if action_valid(f, mesh, &ep.dm, &ep.state, &act) {
+                        ep.dm.set(v.index(), axis, dim as usize);
+                        ep.state.actions.push(act);
+                    }
+                }
+                ep.stats.stuck_nodes.clear();
+                self.program.prop.forward(f, mesh, &mut ep.dm, &mut ep.stats);
+                ep.decisions += 1;
+            }
+            EnvAction::InferRest => {
+                ep.stats.stuck_nodes.clear();
+                self.program.prop.infer_rest(f, mesh, &mut ep.dm, &mut ep.stats);
+                ep.state.actions.push(Action::InferRest);
+                ep.decisions += 1;
+            }
+            EnvAction::Stop => {
+                ep.done = true;
+            }
+        }
+        if ep.decisions >= self.options.max_decisions {
+            ep.done = true;
+        }
+    }
+
+    /// Evaluate a terminal episode (applies auto infer-rest if enabled).
+    pub fn evaluate_episode(&self, ep: &Episode) -> Evaluation {
+        if self.options.auto_infer_rest {
+            let mut dm = ep.dm.clone();
+            let mut stats = PropStats::default();
+            self.program.prop.infer_rest(&self.program.func, &self.program.mesh, &mut dm, &mut stats);
+            evaluate(self.program, &dm, &self.device, &self.weights)
+        } else {
+            evaluate(self.program, &ep.dm, &self.device, &self.weights)
+        }
+    }
+
+    /// Normalised reward: improvement over the replicated baseline.
+    pub fn reward(&self, eval: &Evaluation) -> f64 {
+        ((self.base_cost - eval.cost) / self.base_cost.abs().max(1e-12)).clamp(-1.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::transformer::{build_transformer, TransformerConfig};
+    use crate::partir::mesh::Mesh;
+
+    fn env_for(layers: usize, opts: SearchOptions) -> (PartirProgram, Device) {
+        let model = build_transformer(&TransformerConfig::tiny(layers));
+        let program = PartirProgram::new(model.func.clone(), Mesh::new(&[("model", 4)]));
+        let _ = opts;
+        (program, Device::tpu_v3())
+    }
+
+    #[test]
+    fn role_key_strips_layer_indices() {
+        assert_eq!(role_key("layer_3/attn/wq"), "layer_*/attn/wq");
+        assert_eq!(role_key("layer_17/mlp/w1"), "layer_*/mlp/w1");
+        assert_eq!(role_key("embed"), "embed");
+        assert_eq!(role_key("round_2/edge_mlp/w1"), "round_*/edge_mlp/w1");
+    }
+
+    #[test]
+    fn grouping_collapses_targets_across_layers() {
+        let (program, device) = env_for(4, SearchOptions::default());
+        let wl = RewriteEnv::default_worklist(&program);
+        let ungrouped = RewriteEnv::new(
+            &program,
+            device.clone(),
+            CostWeights::default(),
+            SearchOptions { grouping: false, cross_layer_tying: false, ..Default::default() },
+            &wl,
+        );
+        let grouped = RewriteEnv::new(
+            &program,
+            device,
+            CostWeights::default(),
+            SearchOptions { grouping: true, ..Default::default() },
+            &wl,
+        );
+        assert!(grouped.targets.len() < ungrouped.targets.len() / 2);
+        // grouped: 16 per-layer roles + embed/pos/lnf_g/lnf_b + mask/tokens/targets
+        assert_eq!(grouped.targets.len(), 16 + 4 + 3);
+    }
+
+    #[test]
+    fn step_tile_propagates_and_counts_decisions() {
+        let (program, device) = env_for(2, SearchOptions::default());
+        let wl = RewriteEnv::default_worklist(&program);
+        let env = RewriteEnv::new(
+            &program,
+            device,
+            CostWeights::default(),
+            SearchOptions::default(),
+            &wl,
+        );
+        let mut ep = env.reset();
+        let acts = env.legal_actions(&ep);
+        assert!(acts.len() > 10);
+        // find the wq target and tile dim 1
+        let ti = env
+            .targets
+            .iter()
+            .position(|t| t.key.ends_with("attn/wq"))
+            .unwrap();
+        env.step(&mut ep, EnvAction::Tile { target: ti as u32, dim: 1, axis: 0 });
+        assert_eq!(ep.decisions, 1);
+        // cross-layer tying: BOTH layers' wq tiled
+        let tiled_wqs = (0..program.func.num_args())
+            .filter(|&i| {
+                program.func.args[i].name.ends_with("wq") && ep.dm.is_tiled(i)
+            })
+            .count();
+        assert_eq!(tiled_wqs, 2);
+    }
+
+    #[test]
+    fn stop_ends_episode_and_reward_is_normalised() {
+        let (program, device) = env_for(1, SearchOptions::default());
+        let wl = RewriteEnv::default_worklist(&program);
+        let env =
+            RewriteEnv::new(&program, device, CostWeights::default(), SearchOptions::default(), &wl);
+        let mut ep = env.reset();
+        env.step(&mut ep, EnvAction::Stop);
+        assert!(ep.done);
+        assert!(env.legal_actions(&ep).is_empty());
+        let eval = env.evaluate_episode(&ep);
+        let r = env.reward(&eval);
+        assert!((-1.0..=1.0).contains(&r));
+    }
+}

@@ -1,0 +1,10 @@
+//! Automated search (paper §2.3): the rewrite environment, MCTS with
+//! UCT, and the multi-attempt experiment harness behind Figures 6–9.
+
+pub mod env;
+pub mod experiment;
+pub mod mcts;
+
+pub use env::{EnvAction, Episode, RewriteEnv, SearchOptions};
+pub use experiment::{run_sweep, BudgetRow, ExperimentConfig};
+pub use mcts::{search, MctsConfig, SearchResult};

@@ -1,0 +1,62 @@
+//! Analytical accelerator model. The paper evaluates on TPU v3 (16 GB
+//! HBM per device, §3); with no TPUs available here, Figure 7's runtimes
+//! are reproduced with a roofline + α-β model over the same lowered SPMD
+//! programs (DESIGN.md §3 — the figure's claim is *relative*:
+//! near-Megatron ≈ Megatron, which an analytical model preserves).
+
+/// Device characteristics.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: &'static str,
+    /// Peak matmul FLOP/s (MXU).
+    pub flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// Inter-chip interconnect (ICI) link bandwidth, bytes/s.
+    pub ici_bw: f64,
+    /// Per-hop collective latency, seconds.
+    pub alpha: f64,
+    /// HBM capacity, bytes.
+    pub hbm_bytes: i64,
+}
+
+impl Device {
+    /// TPU v3 core: 16 GB HBM (paper §3), ~52.5 TFLOP/s bf16 MXU peak
+    /// (420 TFLOP/s per 4-chip board / 8 cores), ~450 GB/s HBM per core,
+    /// ~70 GB/s ICI link.
+    pub fn tpu_v3() -> Device {
+        Device {
+            name: "TPUv3",
+            flops: 52.5e12,
+            hbm_bw: 450e9,
+            ici_bw: 70e9,
+            alpha: 1e-6,
+            hbm_bytes: 16 * (1 << 30),
+        }
+    }
+
+    /// A smaller device for memory-pressure experiments ("partitioning
+    /// models to fit onto older accelerators with less memory", §1).
+    pub fn tpu_v2() -> Device {
+        Device {
+            name: "TPUv2",
+            flops: 22.5e12,
+            hbm_bw: 300e9,
+            ici_bw: 50e9,
+            alpha: 1.5e-6,
+            hbm_bytes: 8 * (1 << 30),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tpu_v3_matches_paper_memory() {
+        let d = Device::tpu_v3();
+        assert_eq!(d.hbm_bytes, 17_179_869_184); // 16 GiB
+        assert!(d.flops > 1e13);
+    }
+}

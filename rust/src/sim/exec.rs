@@ -1,0 +1,195 @@
+//! Roofline execution-time estimator for lowered SPMD programs: each op
+//! costs `max(flops/peak_flops, bytes/hbm_bw)`, collectives cost their
+//! α-β ring time, and the device-local program is assumed serialised
+//! (conservative, like the paper's compiler-internal cost models that
+//! "estimate peak memory, runtime, and communication", §2).
+
+use super::device::Device;
+use crate::ir::{Func, OpKind};
+use crate::partir::dist::DistMap;
+use crate::partir::mesh::Mesh;
+use crate::spmd::collectives::collective_seconds;
+use crate::spmd::lower::SpmdProgram;
+
+#[derive(Debug, Clone, Default)]
+pub struct RuntimeEstimate {
+    pub compute_seconds: f64,
+    pub memory_seconds: f64,
+    /// max(compute, memory) accumulated per op.
+    pub op_seconds: f64,
+    pub collective_seconds: f64,
+    pub total_flops: f64,
+}
+
+impl RuntimeEstimate {
+    pub fn total_seconds(&self) -> f64 {
+        self.op_seconds + self.collective_seconds
+    }
+}
+
+/// Per-device FLOPs of one node under distribution `dm`.
+pub fn node_flops(f: &Func, mesh: &Mesh, dm: &DistMap, ni: usize) -> f64 {
+    let node = &f.nodes[ni];
+    let out_v = f.num_args() + ni;
+    let local_out: f64 = dm.local_dims(out_v, &node.ty.dims, mesh).iter().product::<i64>() as f64;
+    match &node.op {
+        OpKind::Dot(d) => {
+            // 2 * output elements * contracted extent (local on lhs).
+            let lhs = node.inputs[0].index();
+            let lhs_dims = dm.local_dims(lhs, &f.value_type(node.inputs[0]).dims, mesh);
+            let k: f64 = d.lhs_contract.iter().map(|&c| lhs_dims[c] as f64).product();
+            2.0 * local_out * k
+        }
+        OpKind::Reduce { .. } => {
+            let inp = node.inputs[0].index();
+            dm.local_dims(inp, &f.value_type(node.inputs[0]).dims, mesh)
+                .iter()
+                .product::<i64>() as f64
+        }
+        op => local_out * op.flops_per_output(),
+    }
+}
+
+/// Per-device HBM traffic of one node (read operands + write result).
+pub fn node_bytes(f: &Func, mesh: &Mesh, dm: &DistMap, ni: usize) -> f64 {
+    let node = &f.nodes[ni];
+    let out_v = f.num_args() + ni;
+    let mut b = dm.local_bytes(out_v, node.ty.byte_size(), mesh) as f64;
+    for &inp in &node.inputs {
+        b += dm.local_bytes(inp.index(), f.value_type(inp).byte_size(), mesh) as f64;
+    }
+    b
+}
+
+/// Estimate the per-step runtime of a lowered SPMD program.
+///
+/// Allocation-free hot path (EXPERIMENTS.md §Perf opt 2): local element
+/// counts come from the Propagator's precomputed global tables divided by
+/// the tiled axis sizes, instead of materialising local dim vectors.
+pub fn estimate(p: &SpmdProgram, dev: &Device) -> RuntimeEstimate {
+    let mut est = RuntimeEstimate::default();
+    let prop = p.prop;
+    let num_args = p.func.num_args();
+    // local element count without allocating
+    let local_elems = |v: usize| -> f64 {
+        let mut e = prop.global_elems[v] as f64;
+        for a in 0..p.dm.num_axes {
+            if p.dm.d[v][a] != crate::partir::dist::UNKNOWN {
+                e /= p.mesh.size(crate::partir::mesh::AxisId(a)) as f64;
+            }
+        }
+        e
+    };
+    let local_bytes_of = |v: usize| -> f64 {
+        p.dm.local_bytes(v, prop.global_bytes[v], p.mesh) as f64
+    };
+    for (ni, node) in p.func.nodes.iter().enumerate() {
+        let out_v = num_args + ni;
+        let fl = match &node.op {
+            OpKind::Dot(d) => {
+                let lhs = node.inputs[0].index();
+                let mut k = 1f64;
+                for &c in &d.lhs_contract {
+                    let mut extent = prop.dims_of(lhs)[c] as f64;
+                    for a in 0..p.dm.num_axes {
+                        if p.dm.d[lhs][a] == c as u8 {
+                            extent /= p.mesh.size(crate::partir::mesh::AxisId(a)) as f64;
+                        }
+                    }
+                    k *= extent;
+                }
+                2.0 * local_elems(out_v) * k
+            }
+            OpKind::Reduce { .. } => local_elems(node.inputs[0].index()),
+            op => local_elems(out_v) * op.flops_per_output(),
+        };
+        let mut by = local_bytes_of(out_v);
+        for &inp in &node.inputs {
+            by += local_bytes_of(inp.index());
+        }
+        let tc = fl / dev.flops;
+        let tm = by / dev.hbm_bw;
+        est.compute_seconds += tc;
+        est.memory_seconds += tm;
+        est.op_seconds += tc.max(tm);
+        est.total_flops += fl;
+    }
+    for c in &p.collectives {
+        est.collective_seconds += collective_seconds(c, p.mesh, dev.ici_bw, dev.alpha);
+    }
+    est
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ArgKind, GraphBuilder, TensorType, ValueId};
+    use crate::partir::actions::{Action, DecisionState};
+    use crate::partir::mesh::AxisId;
+    use crate::partir::program::PartirProgram;
+    use crate::spmd::lower::lower;
+
+    fn matmul_prog(mesh: Mesh) -> PartirProgram {
+        let mut b = GraphBuilder::new("mm");
+        let x = b.arg("x", TensorType::f32(&[512, 512]), ArgKind::Input);
+        let w = b.arg("w", TensorType::f32(&[512, 512]), ArgKind::Parameter);
+        let y = b.matmul(x, w);
+        b.output(y);
+        PartirProgram::new(b.finish(), mesh)
+    }
+
+    #[test]
+    fn flops_match_matmul() {
+        let p = matmul_prog(Mesh::new(&[("s", 1)]));
+        let dm = DistMap::new(&p.func, &p.mesh);
+        assert_eq!(node_flops(&p.func, &p.mesh, &dm, 0), 2.0 * 512.0 * 512.0 * 512.0);
+    }
+
+    #[test]
+    fn sharding_divides_flops_and_adds_no_comm_for_colsplit() {
+        let p = matmul_prog(Mesh::new(&[("model", 4)]));
+        let st = DecisionState {
+            actions: vec![Action::Tile { v: ValueId(1), dim: 1, axis: AxisId(0) }],
+            atomic: vec![],
+        };
+        let (dm, _) = p.apply(&st);
+        assert_eq!(node_flops(&p.func, &p.mesh, &dm, 0), 2.0 * 512.0 * 512.0 * 512.0 / 4.0);
+        let sp = lower(&p.func, &p.mesh, &p.prop, &dm);
+        let est = estimate(&sp, &Device::tpu_v3());
+        assert_eq!(est.collective_seconds, 0.0);
+        assert!(est.total_seconds() > 0.0);
+    }
+
+    #[test]
+    fn partial_sum_pays_all_reduce_time() {
+        let p = matmul_prog(Mesh::new(&[("model", 4)]));
+        let st = DecisionState {
+            actions: vec![
+                Action::Tile { v: ValueId(0), dim: 1, axis: AxisId(0) },
+                Action::Tile { v: ValueId(1), dim: 0, axis: AxisId(0) },
+            ],
+            atomic: vec![],
+        };
+        let (dm, _) = p.apply(&st);
+        let sp = lower(&p.func, &p.mesh, &p.prop, &dm);
+        let est = estimate(&sp, &Device::tpu_v3());
+        assert!(est.collective_seconds > 0.0);
+    }
+
+    #[test]
+    fn sharded_runtime_beats_replicated() {
+        let p = matmul_prog(Mesh::new(&[("model", 4)]));
+        let dm0 = DistMap::new(&p.func, &p.mesh);
+        let sp0 = lower(&p.func, &p.mesh, &p.prop, &dm0);
+        let t0 = estimate(&sp0, &Device::tpu_v3()).total_seconds();
+
+        let st = DecisionState {
+            actions: vec![Action::Tile { v: ValueId(1), dim: 1, axis: AxisId(0) }],
+            atomic: vec![],
+        };
+        let (dm, _) = p.apply(&st);
+        let sp = lower(&p.func, &p.mesh, &p.prop, &dm);
+        let t1 = estimate(&sp, &Device::tpu_v3()).total_seconds();
+        assert!(t1 < t0, "sharded {t1} should beat replicated {t0}");
+    }
+}

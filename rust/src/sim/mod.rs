@@ -1,0 +1,8 @@
+//! Analytical device simulation: accelerator models (TPU v2/v3) and the
+//! roofline + α-β runtime estimator used to reproduce Figure 7.
+
+pub mod device;
+pub mod exec;
+
+pub use device::Device;
+pub use exec::{estimate, RuntimeEstimate};

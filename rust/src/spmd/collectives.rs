@@ -1,0 +1,113 @@
+//! Collective operations inserted by the SPMD lowering, and aggregate
+//! statistics over them. The paper measures "achieving Megatron ...
+//! through gathering statistics on collectives in the partitioned model"
+//! (§3) — these stats are exactly that measurement.
+
+use crate::partir::mesh::{AxisId, Mesh};
+
+/// Kind of collective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    /// Sum partial results across an axis (from tiled contractions).
+    AllReduce,
+    /// Replicate a tiled value across an axis (distribution mismatch).
+    AllGather,
+}
+
+/// One collective in the lowered SPMD program.
+#[derive(Debug, Clone)]
+pub struct Collective {
+    pub kind: CollectiveKind,
+    pub axis: AxisId,
+    /// Node index in the base program this collective is attached to.
+    pub node: usize,
+    /// Per-device payload bytes (local shard size involved).
+    pub bytes: i64,
+}
+
+/// Aggregate collective statistics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CollectiveStats {
+    pub all_reduce_count: usize,
+    pub all_reduce_bytes: i64,
+    pub all_gather_count: usize,
+    pub all_gather_bytes: i64,
+}
+
+impl CollectiveStats {
+    pub fn from_collectives(cs: &[Collective]) -> CollectiveStats {
+        let mut s = CollectiveStats::default();
+        for c in cs {
+            match c.kind {
+                CollectiveKind::AllReduce => {
+                    s.all_reduce_count += 1;
+                    s.all_reduce_bytes += c.bytes;
+                }
+                CollectiveKind::AllGather => {
+                    s.all_gather_count += 1;
+                    s.all_gather_bytes += c.bytes;
+                }
+            }
+        }
+        s
+    }
+
+    pub fn total_count(&self) -> usize {
+        self.all_reduce_count + self.all_gather_count
+    }
+    pub fn total_bytes(&self) -> i64 {
+        self.all_reduce_bytes + self.all_gather_bytes
+    }
+}
+
+/// α-β ring cost of one collective on `mesh` (seconds).
+pub fn collective_seconds(c: &Collective, mesh: &Mesh, link_bw: f64, alpha: f64) -> f64 {
+    let n = mesh.size(c.axis) as f64;
+    if n <= 1.0 {
+        return 0.0;
+    }
+    let bytes = c.bytes as f64;
+    match c.kind {
+        // ring all-reduce: 2(n-1)/n * payload over the link + latency hops
+        CollectiveKind::AllReduce => 2.0 * (n - 1.0) / n * bytes / link_bw + (n - 1.0) * alpha,
+        // ring all-gather: (n-1)/n * full payload
+        CollectiveKind::AllGather => (n - 1.0) / n * bytes / link_bw + (n - 1.0) * alpha,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_aggregate() {
+        let cs = vec![
+            Collective { kind: CollectiveKind::AllReduce, axis: AxisId(0), node: 0, bytes: 100 },
+            Collective { kind: CollectiveKind::AllReduce, axis: AxisId(0), node: 1, bytes: 50 },
+            Collective { kind: CollectiveKind::AllGather, axis: AxisId(0), node: 2, bytes: 10 },
+        ];
+        let s = CollectiveStats::from_collectives(&cs);
+        assert_eq!(s.all_reduce_count, 2);
+        assert_eq!(s.all_reduce_bytes, 150);
+        assert_eq!(s.all_gather_count, 1);
+        assert_eq!(s.total_count(), 3);
+        assert_eq!(s.total_bytes(), 160);
+    }
+
+    #[test]
+    fn ring_cost_scales_with_axis_size() {
+        let mesh = Mesh::new(&[("m", 4)]);
+        let c = Collective {
+            kind: CollectiveKind::AllReduce,
+            axis: AxisId(0),
+            node: 0,
+            bytes: 1_000_000_000,
+        };
+        let t = collective_seconds(&c, &mesh, 70e9, 1e-6);
+        // 2 * 3/4 * 1GB / 70GB/s ~ 21.4ms
+        assert!((t - (1.5 * 1e9 / 70e9 + 3e-6)).abs() < 1e-9);
+        let mesh1 = Mesh::new(&[("m", 1)]);
+        let c1 = Collective { axis: AxisId(0), ..c };
+        assert_eq!(collective_seconds(&c1, &mesh1, 70e9, 1e-6), 0.0);
+    }
+}

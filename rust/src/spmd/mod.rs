@@ -1,0 +1,9 @@
+//! SPMD lowering of PartIR views: distributed types, collective
+//! insertion, collective statistics, and the Fig-3-style printer.
+
+pub mod collectives;
+pub mod lower;
+pub mod printer;
+
+pub use collectives::{Collective, CollectiveKind, CollectiveStats};
+pub use lower::{lower, SpmdProgram};

@@ -1,0 +1,155 @@
+//! Micro-benchmark harness — substrate replacing `criterion`
+//! (registry unavailable offline; DESIGN.md §3).
+//!
+//! Measures wall-clock per iteration with warmup, reports median /
+//! mean / p10 / p90 over sample batches, and prints one machine-greppable
+//! line per benchmark (`BENCH <name> median=...`). Used by
+//! `rust/benches/*.rs` with `harness = false`.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "BENCH {:<44} median={} mean={} p10={} p90={} iters={}",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+            self.iters
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner. `target_time` bounds total measurement time per bench.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub target_time: Duration,
+    pub samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            target_time: Duration::from_secs(2),
+            samples: 20,
+            results: Vec::new(),
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding the benchmarked computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick profile for smoke runs (CI): short warmup, few samples.
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            target_time: Duration::from_millis(400),
+            samples: 8,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` repeatedly; `f` should perform ONE unit of work per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + estimate per-iteration time.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64;
+
+        // Choose batch size so a sample takes ~target_time/samples.
+        let sample_ns = self.target_time.as_nanos() as f64 / self.samples as f64;
+        let batch = ((sample_ns / per_iter.max(1.0)).ceil() as u64).max(1);
+
+        let mut sample_times: Vec<f64> = Vec::with_capacity(self.samples);
+        let mut total_iters = 0u64;
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            sample_times.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+        }
+        sample_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            let idx = (p * (sample_times.len() - 1) as f64).round() as usize;
+            sample_times[idx]
+        };
+        let mean = sample_times.iter().sum::<f64>() / sample_times.len() as f64;
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            median_ns: q(0.5),
+            mean_ns: mean,
+            p10_ns: q(0.1),
+            p90_ns: q(0.9),
+        };
+        r.print();
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            target_time: Duration::from_millis(20),
+            samples: 4,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        let r = b.bench("noop_add", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.p10_ns <= r.p90_ns);
+    }
+}

@@ -1,0 +1,171 @@
+//! Tiny command-line flag parser — substrate replacing `clap`
+//! (registry unavailable offline; DESIGN.md §3).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments. Unknown flags are an error so typos surface.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    pub positional: Vec<String>,
+    known: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse `argv` given the set of value-taking flags and boolean flags
+    /// (names without the leading `--`).
+    pub fn parse(
+        argv: &[String],
+        value_flags: &[&str],
+        bool_flags: &[&str],
+    ) -> Result<Args, CliError> {
+        let mut a = Args {
+            flags: BTreeMap::new(),
+            bools: Vec::new(),
+            positional: Vec::new(),
+            known: value_flags
+                .iter()
+                .chain(bool_flags.iter())
+                .map(|s| s.to_string())
+                .collect(),
+        };
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if bool_flags.contains(&name.as_str()) {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("--{name} takes no value")));
+                    }
+                    a.bools.push(name);
+                } else if value_flags.contains(&name.as_str()) {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                        }
+                    };
+                    a.flags.insert(name, val);
+                } else {
+                    return Err(CliError(format!(
+                        "unknown flag --{name} (known: {})",
+                        a.known.join(", ")
+                    )));
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| CliError(format!("--{name}: bad integer '{s}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| CliError(format!("--{name}: bad integer '{s}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| CliError(format!("--{name}: bad float '{s}'"))),
+        }
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Parse a comma-separated list of usizes, e.g. `--budgets 100,500,1000`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|_| CliError(format!("--{name}: bad integer '{t}'")))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_bools() {
+        let a = Args::parse(
+            &argv(&["--layers", "24", "--verbose", "--name=gpt", "pos1"]),
+            &["layers", "name"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.get_usize("layers", 0).unwrap(), 24);
+        assert_eq!(a.get("name"), Some("gpt"));
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(Args::parse(&argv(&["--nope"]), &["x"], &[]).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv(&["--layers"]), &["layers"], &[]).is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::parse(&argv(&["--budgets", "10, 20,30"]), &["budgets"], &[]).unwrap();
+        assert_eq!(a.get_usize_list("budgets", &[]).unwrap(), vec![10, 20, 30]);
+        let b = Args::parse(&argv(&[]), &["budgets"], &[]).unwrap();
+        assert_eq!(b.get_usize_list("budgets", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+}

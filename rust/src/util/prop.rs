@@ -1,0 +1,76 @@
+//! Small property-testing driver — substrate replacing `proptest`
+//! (registry unavailable offline; DESIGN.md §3).
+//!
+//! A property is a closure from a seeded [`Rng`](super::rng::Rng) to
+//! `Result<(), String>`. The driver runs N cases with derived seeds and,
+//! on failure, reports the failing seed so the case is reproducible with
+//! `check_one`.
+
+use super::rng::Rng;
+
+/// Run `cases` random cases of `prop`; panic with the failing seed on error.
+pub fn check<F>(name: &str, cases: usize, base_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {i} (seed={seed:#x}):\n  {msg}\n\
+                 reproduce with util::prop::check_one(\"{name}\", {seed:#x}, prop)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn check_one<F>(name: &str, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed (seed={seed:#x}): {msg}");
+    }
+}
+
+/// Helper: assert approximate equality of floats inside a property.
+pub fn approx_eq(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol={tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add_commutes", 50, 1, |rng| {
+            let a = rng.gen_range(1000) as i64;
+            let b = rng.gen_range(1000) as i64;
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always_fails", 3, 2, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn approx_eq_tolerance() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(approx_eq(1.0, 1.1, 1e-9).is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! Small descriptive-statistics helpers shared by the figure harnesses
+//! and the bench harness.
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// p-th quantile (0..=1) by nearest-rank on a copy.
+pub fn quantile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = (p.clamp(0.0, 1.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx]
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Fraction of values satisfying a predicate — used for success rates.
+pub fn rate<T, F: Fn(&T) -> bool>(xs: &[T], pred: F) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().filter(|x| pred(x)).count() as f64 / xs.len() as f64
+}
+
+/// Format a byte count human-readably.
+pub fn fmt_bytes(b: f64) -> String {
+    if b < 1e3 {
+        format!("{b:.0}B")
+    } else if b < 1e6 {
+        format!("{:.1}KB", b / 1e3)
+    } else if b < 1e9 {
+        format!("{:.1}MB", b / 1e6)
+    } else {
+        format!("{:.2}GB", b / 1e9)
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(mean(&xs), 3.0);
+        assert_eq!(median(&xs), 3.0);
+        assert!((std_dev(&xs) - (2.0f64).sqrt()).abs() < 1e-12);
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+    }
+
+    #[test]
+    fn rate_counts_predicate() {
+        let xs = [1, 2, 3, 4];
+        assert_eq!(rate(&xs, |x| *x % 2 == 0), 0.5);
+        let empty: [i32; 0] = [];
+        assert_eq!(rate(&empty, |_| true), 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(2.6e10), "26.00GB");
+        assert_eq!(fmt_secs(0.0025), "2.50ms");
+    }
+}

@@ -1,0 +1,94 @@
+//! PJRT runtime integration: load the AOT ranker artifacts and verify
+//! the rust-side execution matches the jax-side numerics recorded by
+//! `python/compile/aot.py`. Requires `make artifacts`; tests skip (with a
+//! loud message) when artifacts are absent so `cargo test` works on a
+//! cold checkout.
+
+use automap::learner::features::{MAX_EDGES, MAX_NODES, NODE_FEATURES};
+use automap::runtime::pjrt::{Input, Runtime};
+use automap::util::json::parse;
+
+const HLO: &str = "artifacts/ranker.hlo.txt";
+const EXAMPLE: &str = "artifacts/ranker_example.json";
+
+fn artifacts_present() -> bool {
+    std::path::Path::new(HLO).exists() && std::path::Path::new(EXAMPLE).exists()
+}
+
+#[test]
+fn ranker_hlo_executes_and_matches_jax_numerics() {
+    if !artifacts_present() {
+        eprintln!("SKIP: run `make artifacts` to enable PJRT integration tests");
+        return;
+    }
+    let rt = Runtime::new().unwrap();
+    let exe = rt.load_hlo_text(HLO).unwrap();
+
+    let ex = parse(&std::fs::read_to_string(EXAMPLE).unwrap()).unwrap();
+    let f32s = |k: &str| -> Vec<f32> {
+        ex.get(k).unwrap().as_arr().unwrap().iter().map(|x| x.as_f64().unwrap() as f32).collect()
+    };
+    let i32s = |k: &str| -> Vec<i32> {
+        ex.get(k).unwrap().as_arr().unwrap().iter().map(|x| x.as_f64().unwrap() as i32).collect()
+    };
+    let nodes = f32s("nodes");
+    let node_mask = f32s("node_mask");
+    let senders = i32s("senders");
+    let receivers = i32s("receivers");
+    let edge_mask = f32s("edge_mask");
+    let expected = f32s("expected_scores");
+    assert_eq!(nodes.len(), MAX_NODES * NODE_FEATURES);
+    assert_eq!(senders.len(), MAX_EDGES);
+
+    let outs = exe
+        .run_f32(&[
+            Input::F32(nodes, vec![MAX_NODES as i64, NODE_FEATURES as i64]),
+            Input::F32(node_mask.clone(), vec![MAX_NODES as i64]),
+            Input::I32(senders, vec![MAX_EDGES as i64]),
+            Input::I32(receivers, vec![MAX_EDGES as i64]),
+            Input::F32(edge_mask, vec![MAX_EDGES as i64]),
+        ])
+        .unwrap();
+    let scores = &outs[0];
+    assert_eq!(scores.len(), MAX_NODES);
+    let mut max_err = 0f32;
+    for (i, (&got, &want)) in scores.iter().zip(&expected).enumerate() {
+        if node_mask[i] > 0.0 {
+            max_err = max_err.max((got - want).abs() / (1.0 + want.abs()));
+        }
+    }
+    assert!(
+        max_err < 1e-4,
+        "rust PJRT execution must match jax numerics (max rel err {max_err})"
+    );
+    println!("ranker PJRT numerics OK (max rel err {max_err:.2e})");
+}
+
+#[test]
+fn learned_filter_keeps_megatron_weights_in_topk() {
+    if !artifacts_present() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    use automap::learner::features::featurize;
+    use automap::learner::ranker::{top_k_decisions, PjrtRanker, Ranker, TOP_K};
+    use automap::models::transformer::{build_transformer, TransformerConfig};
+    use automap::partir::mesh::Mesh;
+    use automap::partir::program::PartirProgram;
+
+    let model = build_transformer(&TransformerConfig::tiny(2));
+    let program = PartirProgram::new(model.func.clone(), Mesh::new(&[("model", 4)]));
+    let g = featurize(&program.func, &program.mesh);
+    let rt = Runtime::new().unwrap();
+    let ranker = PjrtRanker::load(&rt, HLO).unwrap();
+    let scores = ranker.score(&g).unwrap();
+    let top = top_k_decisions(&model.func, &g, &scores, TOP_K);
+    let names: Vec<&str> = top.iter().map(|v| model.func.args[v.index()].name.as_str()).collect();
+    // The trained ranker must keep the large layer matrices in the top-k
+    // (the property that makes Fig 6's learner curve beat MCTS-only).
+    let hits = ["mlp/w1", "mlp/w2", "attn/wq", "attn/wo"]
+        .iter()
+        .filter(|suf| names.iter().any(|n| n.ends_with(*suf)))
+        .count();
+    assert!(hits >= 3, "trained ranker lost the Megatron weights: {names:?}");
+}

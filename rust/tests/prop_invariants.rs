@@ -1,0 +1,257 @@
+//! Property-based tests over randomly generated programs and decision
+//! sequences (hand-rolled driver in `util::prop`; proptest unavailable
+//! offline — DESIGN.md §3).
+//!
+//! Invariants checked:
+//!   * propagation is deterministic and produces only divisible tilings;
+//!   * episode-incremental propagation == full replay (the search-env
+//!     fast path is exact);
+//!   * SPMD lowering never emits collectives for a fully replicated
+//!     program; collective payloads are positive;
+//!   * sharded peak memory never exceeds replicated peak memory;
+//!   * DCE preserves interpreter semantics on random elementwise graphs;
+//!   * autodiff matches finite differences on random scalar chains.
+
+use automap::cost::liveness::peak_memory;
+use automap::ir::autodiff::gradients;
+use automap::ir::interp::{eval, eval_all, Tensor};
+use automap::ir::{ArgKind, GraphBuilder, TensorType, ValueId};
+use automap::partir::actions::{Action, DecisionState};
+use automap::partir::dist::DistMap;
+use automap::partir::mesh::{AxisId, Mesh};
+use automap::partir::program::PartirProgram;
+use automap::search::env::{RewriteEnv, SearchOptions};
+use automap::spmd::lower::lower;
+use automap::util::prop::check;
+use automap::util::rng::Rng;
+
+/// Random small elementwise/matmul DAG with args of divisible sizes.
+fn random_program(rng: &mut Rng) -> automap::ir::Func {
+    let dims = [4i64, 8, 16];
+    let mut b = GraphBuilder::new("rand");
+    let n_args = 2 + rng.gen_range(3);
+    let mut mats = Vec::new();
+    for i in 0..n_args {
+        let r = *rng.choose(&dims);
+        let c = *rng.choose(&dims);
+        mats.push(b.arg(
+            format!("a{i}"),
+            TensorType::f32(&[r, c]),
+            if i == 0 { ArgKind::Input } else { ArgKind::Parameter },
+        ));
+    }
+    let mut vals: Vec<ValueId> = mats.clone();
+    for _ in 0..(3 + rng.gen_range(8)) {
+        let x = *rng.choose(&vals);
+        let (xr, xc) = {
+            let d = &b.ty(x).dims;
+            (d[0], d[1])
+        };
+        match rng.gen_range(4) {
+            0 => {
+                // find a shape-compatible rhs for matmul
+                let rhs = vals
+                    .iter()
+                    .copied()
+                    .find(|&v| b.ty(v).dims[0] == xc);
+                if let Some(rhs) = rhs {
+                    vals.push(b.matmul(x, rhs));
+                }
+            }
+            1 => {
+                let same = vals.iter().copied().find(|&v| b.ty(v).dims == vec![xr, xc]);
+                if let Some(y) = same {
+                    vals.push(b.add(x, y));
+                }
+            }
+            2 => vals.push(b.tanh(x)),
+            _ => vals.push(b.transpose(x, vec![1, 0])),
+        }
+    }
+    let last = *vals.last().unwrap();
+    b.output(last);
+    b.finish()
+}
+
+#[test]
+fn prop_propagation_tilings_always_divisible() {
+    check("divisible_tilings", 60, 0xA1, |rng| {
+        let f = random_program(rng);
+        let mesh = Mesh::new(&[("m", 4)]);
+        let program = PartirProgram::new(f, mesh);
+        // random decision sequence
+        let mut st = DecisionState::default();
+        for _ in 0..3 {
+            let v = ValueId(rng.gen_range(program.func.num_args()) as u32);
+            let dim = rng.gen_range(2);
+            st.actions.push(Action::Tile { v, dim, axis: AxisId(0) });
+        }
+        st.actions.push(Action::InferRest);
+        let (dm, _) = program.apply(&st);
+        for v in 0..program.func.num_values() {
+            for (axis, dim) in dm.tilings(v) {
+                let size = program.func.value_type(ValueId(v as u32)).dims[dim];
+                if size % program.mesh.size(axis) != 0 {
+                    return Err(format!("value {v} tiled dim {dim} size {size} not divisible"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_propagation_is_deterministic() {
+    check("deterministic_propagation", 40, 0xB2, |rng| {
+        let f = random_program(rng);
+        let program = PartirProgram::new(f, Mesh::new(&[("m", 2)]));
+        let mut st = DecisionState::default();
+        for _ in 0..2 {
+            let v = ValueId(rng.gen_range(program.func.num_args()) as u32);
+            st.actions.push(Action::Tile { v, dim: rng.gen_range(2), axis: AxisId(0) });
+        }
+        let (a, _) = program.apply(&st);
+        let (b, _) = program.apply(&st);
+        if a != b {
+            return Err("same decisions -> different DistMaps".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_incremental_episode_equals_replay() {
+    check("incremental_equals_replay", 40, 0xC3, |rng| {
+        let f = random_program(rng);
+        let program = PartirProgram::new(f, Mesh::new(&[("m", 4)]));
+        let wl = RewriteEnv::default_worklist(&program);
+        let env = RewriteEnv::new(
+            &program,
+            automap::sim::device::Device::tpu_v3(),
+            automap::cost::composite::CostWeights::default(),
+            SearchOptions { cross_layer_tying: false, ..Default::default() },
+            &wl,
+        );
+        let mut ep = env.reset();
+        for _ in 0..4 {
+            let acts = env.legal_actions(&ep);
+            if acts.is_empty() {
+                break;
+            }
+            let a = *rng.choose(&acts);
+            env.step(&mut ep, a);
+            if ep.done {
+                break;
+            }
+        }
+        let (replayed, _) = program.apply(&ep.state);
+        if replayed != ep.dm {
+            return Err("incremental episode dm != full replay dm".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_replicated_program_has_no_collectives_and_max_memory() {
+    check("replicated_baseline", 40, 0xD4, |rng| {
+        let f = random_program(rng);
+        let program = PartirProgram::new(f, Mesh::new(&[("m", 4)]));
+        let dm0 = DistMap::new(&program.func, &program.mesh);
+        let sp = lower(&program.func, &program.mesh, &program.prop, &dm0);
+        if !sp.collectives.is_empty() {
+            return Err(format!("replicated program emitted {} collectives", sp.collectives.len()));
+        }
+        let m0 = peak_memory(&program.func, &program.mesh, &dm0);
+
+        // any decision state must not increase per-device peak memory
+        let mut st = DecisionState::default();
+        let v = ValueId(rng.gen_range(program.func.num_args()) as u32);
+        st.actions.push(Action::Tile { v, dim: rng.gen_range(2), axis: AxisId(0) });
+        st.actions.push(Action::InferRest);
+        let (dm, _) = program.apply(&st);
+        let m1 = peak_memory(&program.func, &program.mesh, &dm);
+        if m1.peak_bytes > m0.peak_bytes {
+            return Err(format!("sharding increased memory {} -> {}", m0.peak_bytes, m1.peak_bytes));
+        }
+        let sp1 = lower(&program.func, &program.mesh, &program.prop, &dm);
+        for c in &sp1.collectives {
+            if c.bytes <= 0 {
+                return Err("collective with non-positive payload".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dce_preserves_semantics() {
+    check("dce_semantics", 25, 0xE5, |rng| {
+        let f = random_program(rng);
+        let (g, _) = automap::ir::dce::dce(&f);
+        automap::ir::verify::verify(&g).map_err(|e| e.to_string())?;
+        let args: Vec<Tensor> = f
+            .args
+            .iter()
+            .map(|a| {
+                let n = a.ty.num_elements() as usize;
+                Tensor::new(&a.ty.dims, (0..n).map(|_| rng.gen_f64() - 0.5).collect())
+            })
+            .collect();
+        let ya = eval(&f, &args);
+        let yb = eval(&g, &args);
+        if ya != yb {
+            return Err("DCE changed program outputs".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_autodiff_matches_finite_differences() {
+    check("autodiff_fd", 15, 0xF6, |rng| {
+        // random chain of differentiable unary/binary ops on a vector
+        let mut b = GraphBuilder::new("adchain");
+        let x = b.arg("x", TensorType::f32(&[5]), ArgKind::Parameter);
+        let mut cur = x;
+        for _ in 0..(2 + rng.gen_range(4)) {
+            cur = match rng.gen_range(5) {
+                0 => b.tanh(cur),
+                1 => b.exp(cur),
+                2 => {
+                    let s = b.shift(cur, 2.5);
+                    b.log(s)
+                }
+                3 => b.mul(cur, x),
+                _ => {
+                    let c = b.scale(cur, 0.7);
+                    b.add(c, x)
+                }
+            };
+        }
+        let loss = b.reduce_sum(cur, vec![0]);
+        let grads = gradients(&mut b, loss, &[x]);
+        let g = grads[0].ok_or("missing grad")?;
+        b.output(loss);
+        b.output(g);
+        let f = b.finish();
+        let xs = Tensor::new(&[5], (0..5).map(|_| rng.gen_f64() * 0.8 - 0.4).collect());
+        let vals = eval_all(&f, &[xs.clone()]);
+        let analytic = &vals[g.index()];
+        let eps = 1e-6;
+        for e in 0..5 {
+            let mut plus = xs.clone();
+            plus.data[e] += eps;
+            let mut minus = xs.clone();
+            minus.data[e] -= eps;
+            let lp = eval_all(&f, &[plus])[loss.index()].data[0];
+            let lm = eval_all(&f, &[minus])[loss.index()].data[0];
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = analytic.data[e];
+            if (fd - an).abs() > 1e-3 * (1.0 + fd.abs().max(an.abs())) {
+                return Err(format!("grad[{e}]: fd={fd} analytic={an}"));
+            }
+        }
+        Ok(())
+    });
+}
