@@ -4,26 +4,23 @@
 //!   1. build a transformer *training step* graph (fwd+bwd+Adam) in the
 //!      base dialect and numerically train it with the reference
 //!      interpreter for a few steps (loss curve);
-//!   2. featurize its arguments; score them with the AOT-compiled
-//!      Interaction-Network ranker through PJRT (L2+L1 artifacts built by
-//!      `make artifacts`; falls back to the heuristic ranker when absent);
-//!   3. run MCTS over the top-k worklist, with a memory-pressured TPU-v3;
-//!   4. lower the best solution to SPMD, verify Megatron via collective
-//!      statistics, and report the simulated step time.
+//!   2-4. run the Session tactic pipeline — Filter (AOT-compiled
+//!      Interaction-Network ranker through PJRT when artifacts + the
+//!      `pjrt` feature are present, heuristic fallback otherwise) →
+//!      Search on a memory-pressured TPU-v3 → InferRest → Lower — and
+//!      verify Megatron via collective statistics.
 //!
 //!     make artifacts && cargo run --release --offline --example end_to_end
 
 use automap::cost::composite::CostWeights;
 use automap::ir::interp::{eval_all, Tensor};
-use automap::learner::features::featurize;
-use automap::learner::ranker::{top_k_decisions, HeuristicRanker, PjrtRanker, Ranker, TOP_K};
 use automap::models::megatron;
 use automap::models::transformer::{build_transformer, TransformerConfig};
 use automap::partir::mesh::{AxisId, Mesh};
 use automap::partir::program::PartirProgram;
-use automap::search::env::{RewriteEnv, SearchOptions};
+use automap::search::env::SearchOptions;
 use automap::search::experiment::pressured_device;
-use automap::search::mcts::{search, MctsConfig};
+use automap::session::{RankerSpec, Session, Tactic};
 use automap::sim::device::Device;
 use automap::util::rng::Rng;
 use automap::util::stats::{fmt_bytes, fmt_secs};
@@ -98,57 +95,66 @@ fn main() {
     assert!(losses.last().unwrap() < losses.first().unwrap(), "loss must decrease");
     println!("      loss curve OK ({:.4} -> {:.4})", losses[0], losses[4]);
 
-    // ---- 2. featurize + rank through the AOT artifacts -------------------
+    // ---- 2. Session pipeline: filter through the AOT artifacts -----------
     let model = build_transformer(&TransformerConfig::tiny(4));
-    let program = PartirProgram::new(model.func.clone(), Mesh::new(&[("model", 4)]));
-    let graph = featurize(&program.func, &program.mesh);
+    let mesh = Mesh::new(&[("model", 4)]);
+    let program = PartirProgram::new(model.func.clone(), mesh.clone());
     let ranker_path = "artifacts/ranker.hlo.txt";
-    let (worklist, kind) = if std::path::Path::new(ranker_path).exists() {
-        let rt = automap::runtime::pjrt::Runtime::new().expect("pjrt client");
-        let ranker = PjrtRanker::load(&rt, ranker_path).expect("load ranker");
-        let scores = ranker.score(&graph).expect("score");
-        (top_k_decisions(&program.func, &graph, &scores, TOP_K), "learned GNN via PJRT")
-    } else {
-        let ranker = HeuristicRanker { func: &program.func };
-        let scores = ranker.score(&graph).unwrap();
-        (top_k_decisions(&program.func, &graph, &scores, TOP_K), "heuristic (run `make artifacts` for the GNN)")
-    };
-    println!(
-        "[2/4] ranker ({kind}): {} args -> top-{}",
-        program.func.num_args(),
-        worklist.len()
-    );
 
-    // ---- 3. MCTS over the filtered worklist ------------------------------
     let w = CostWeights::default();
     let probe = megatron::reference_evaluation(&program, &model, AxisId(0), &Device::tpu_v3(), &w);
     let device = pressured_device(&probe);
     let reference = megatron::reference_evaluation(&program, &model, AxisId(0), &device, &w);
-    let env = RewriteEnv::new(&program, device, w, SearchOptions::default(), &worklist);
+
+    let mut session = Session::with_options(
+        model.func.clone(),
+        mesh,
+        device,
+        w,
+        SearchOptions::default(),
+    );
+
+    // ---- 3. MCTS over the filtered worklist ------------------------------
     let t0 = std::time::Instant::now();
     let budget = 1500;
-    let result = search(&env, budget, 2024, MctsConfig::default());
+    let plan = session
+        .run(&[
+            Tactic::filter(RankerSpec::Auto { hlo_path: ranker_path.to_string() }),
+            Tactic::search(budget, 2024),
+            Tactic::InferRest,
+            Tactic::Lower,
+        ])
+        .expect("pipeline");
+    println!(
+        "[2/4] ranker: {} args -> top-{} (see trace; run `make artifacts` + \
+         `--features pjrt` for the learned GNN)",
+        session.program.func.num_args(),
+        plan.worklist_size
+    );
     println!(
         "[3/4] MCTS: {budget} episodes in {:.2}s (best at {})",
         t0.elapsed().as_secs_f64(),
-        result.episodes_to_best
+        plan.episodes_to_best
     );
 
     // ---- 4. SPMD + verdict + simulated step time --------------------------
-    let verdict = megatron::check(&result.best_eval, &reference);
+    let verdict = megatron::check(&plan.eval, &reference);
     println!(
         "[4/4] result: peak {} (fits={}), {} AR + {} AG, sim step {} \
          (megatron ref {}) | megatron={} near={}",
-        fmt_bytes(result.best_eval.memory.peak_bytes as f64),
-        result.best_eval.fits_memory,
-        result.best_eval.collectives.all_reduce_count,
-        result.best_eval.collectives.all_gather_count,
-        fmt_secs(result.best_eval.runtime.total_seconds()),
+        fmt_bytes(plan.eval.memory.peak_bytes as f64),
+        plan.eval.fits_memory,
+        plan.eval.collectives.all_reduce_count,
+        plan.eval.collectives.all_gather_count,
+        fmt_secs(plan.eval.runtime.total_seconds()),
         fmt_secs(reference.runtime.total_seconds()),
         verdict.is_megatron,
         verdict.near_megatron
     );
-    assert!(result.best_eval.fits_memory, "end-to-end must fit device memory");
+    for line in &plan.trace {
+        println!("      {line}");
+    }
+    assert!(plan.eval.fits_memory, "end-to-end must fit device memory");
     assert!(
         verdict.is_megatron || verdict.near_megatron,
         "end-to-end should land (near-)Megatron"

@@ -1,14 +1,15 @@
-//! GraphNet partitioning (paper §3 "Other models"): automap discovers
-//! input-edge sharding for an Interaction-Network training step.
+//! GraphNet partitioning (paper §3 "Other models"): the Session pipeline
+//! discovers input-edge sharding for an Interaction-Network training step.
 //!
 //!     cargo run --release --offline --example graphnet_sharding
 
-use automap::coordinator::automap::{Automap, AutomapOptions, Filter};
 use automap::cost::composite::{evaluate, CostWeights};
 use automap::models::graphnet::{build_graphnet, GraphNetConfig};
 use automap::partir::dist::DistMap;
 use automap::partir::mesh::Mesh;
 use automap::partir::program::PartirProgram;
+use automap::search::env::SearchOptions;
+use automap::session::{RankerSpec, Session, Tactic};
 use automap::sim::device::Device;
 use automap::util::stats::fmt_bytes;
 
@@ -45,33 +46,41 @@ fn main() {
         fmt_bytes(device.hbm_bytes as f64)
     );
 
-    let opts = AutomapOptions {
+    let mut session = Session::with_options(
+        m.func,
+        mesh,
         device,
-        budget: 1500,
-        seed: 7,
-        filter: Filter::None,
-        ..Default::default()
-    };
-    let am = Automap::new(m.func, mesh, opts);
-    let report = am.partition().expect("partition");
+        CostWeights::default(),
+        SearchOptions::default(),
+    );
+    let plan = session
+        .run(&[
+            Tactic::filter(RankerSpec::None), // MCTS-only: full worklist
+            Tactic::search(1500, 7),
+            Tactic::InferRest,
+            Tactic::Lower,
+        ])
+        .expect("pipeline");
 
     println!("sharded inputs:");
-    for s in report.input_specs.iter().filter(|s| !s.tilings.is_empty()) {
+    for s in plan.sharded_inputs() {
         println!("  {} -> {:?}", s.name, s.tilings);
     }
     println!(
         "peak {} (fits={}), {} all-reduces, sim runtime {:.3}ms",
-        fmt_bytes(report.eval.memory.peak_bytes as f64),
-        report.eval.fits_memory,
-        report.eval.collectives.all_reduce_count,
-        report.eval.runtime.total_seconds() * 1e3
+        fmt_bytes(plan.eval.memory.peak_bytes as f64),
+        plan.eval.fits_memory,
+        plan.eval.collectives.all_reduce_count,
+        plan.eval.runtime.total_seconds() * 1e3
     );
 
     // The practitioner strategy the paper mentions: edge tensors sharded.
-    let edge_sharded = report
+    let edge_sharded = plan
         .input_specs
         .iter()
-        .any(|s| (s.name == "edges" || s.name == "senders" || s.name == "receivers")
-            && !s.tilings.is_empty());
+        .any(|s| {
+            (s.name == "edges" || s.name == "senders" || s.name == "receivers")
+                && !s.replicated()
+        });
     println!("discovered input-edge sharding: {edge_sharded}");
 }

@@ -1,31 +1,44 @@
 //! Compiler hints via named-scope grouping (paper Figs 8–9): one set of
 //! decisions per repeated block collapses the search space, making deep
-//! transformers solvable without brittle cross-layer propagation.
+//! transformers solvable without brittle cross-layer propagation. Runs
+//! through the Session pipeline with grouping toggled in the options.
 //!
 //!     cargo run --release --offline --example grouping_hints -- [layers]
 
-use automap::cost::composite::CostWeights;
+use automap::cost::composite::{CostWeights, Evaluation};
 use automap::models::megatron;
 use automap::models::transformer::{build_transformer, TransformerConfig};
 use automap::partir::mesh::{AxisId, Mesh};
 use automap::partir::program::PartirProgram;
-use automap::search::env::{RewriteEnv, SearchOptions};
+use automap::search::env::SearchOptions;
 use automap::search::experiment::pressured_device;
-use automap::search::mcts::{search, MctsConfig};
+use automap::session::{Session, Tactic};
 use automap::sim::device::Device;
 
-fn run(program: &PartirProgram, reference: &automap::cost::composite::Evaluation,
-       device: &Device, grouping: bool, budget: usize) -> (bool, usize, usize) {
+fn run(
+    func: &automap::ir::Func,
+    reference: &Evaluation,
+    device: &Device,
+    grouping: bool,
+    budget: usize,
+) -> (bool, usize, usize) {
     let opts = SearchOptions {
         grouping,
         cross_layer_tying: false, // no shared-dependency propagation (Fig 9)
         ..Default::default()
     };
-    let worklist = RewriteEnv::default_worklist(program);
-    let env = RewriteEnv::new(program, device.clone(), CostWeights::default(), opts, &worklist);
-    let res = search(&env, budget, 11, MctsConfig::default());
-    let verdict = megatron::check(&res.best_eval, reference);
-    (verdict.is_megatron, env.targets.len(), res.episodes_to_best)
+    let mut session = Session::with_options(
+        func.clone(),
+        Mesh::new(&[("model", 4)]),
+        device.clone(),
+        CostWeights::default(),
+        opts,
+    );
+    let plan = session
+        .run(&[Tactic::search(budget, 11), Tactic::InferRest, Tactic::Lower])
+        .expect("pipeline");
+    let verdict = megatron::check(&plan.eval, reference);
+    (verdict.is_megatron, plan.targets, plan.episodes_to_best)
 }
 
 fn main() {
@@ -40,8 +53,8 @@ fn main() {
 
     println!("{layers}-layer transformer, no cross-layer propagation:");
     for budget in [250usize, 1000] {
-        let (hit_g, targets_g, ep_g) = run(&program, &reference, &device, true, budget);
-        let (hit_u, targets_u, _) = run(&program, &reference, &device, false, budget);
+        let (hit_g, targets_g, ep_g) = run(&model.func, &reference, &device, true, budget);
+        let (hit_u, targets_u, _) = run(&model.func, &reference, &device, false, budget);
         println!(
             "  budget {budget:>5}: grouped({targets_g} targets) megatron={hit_g} (ep {ep_g}) | \
              ungrouped({targets_u} targets) megatron={hit_u}"

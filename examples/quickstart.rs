@@ -1,55 +1,79 @@
-//! Quickstart: the paper's Figure 2/3 walkthrough on a single dense
-//! layer — base IR, a tiling decision, propagation, and SPMD lowering.
+//! Quickstart: the paper's Figure 5 workflow on a small MLP training
+//! step — a `Session` running a composable tactic pipeline with a
+//! `Manual` tactic pinning the data-parallel axis, then search over the
+//! remaining "model" axis, plus the Figure 2/3 PartIR/SPMD views.
 //!
 //!     cargo run --release --offline --example quickstart
 
-use automap::ir::{ArgKind, GraphBuilder, TensorType, ValueId};
-use automap::partir::actions::{Action, DecisionState};
-use automap::partir::mesh::{AxisId, Mesh};
+use automap::models::mlp::{build_mlp, MlpConfig};
+use automap::partir::mesh::Mesh;
 use automap::partir::printer::print_partir;
-use automap::partir::program::PartirProgram;
+use automap::session::{Session, ShardingConstraint, Tactic};
 use automap::spmd::lower::lower;
 use automap::spmd::printer::print_spmd;
 
 fn main() {
-    // Figure 2 (top): a linear layer  y = x @ w + b.
-    let mut b = GraphBuilder::new("main");
-    let _x = b.arg("x", TensorType::f32(&[8, 16]), ArgKind::Input);
-    let w = b.arg("w", TensorType::f32(&[16, 64]), ArgKind::Parameter);
-    let bias = b.arg("b", TensorType::f32(&[64]), ArgKind::Parameter);
-    let dot = b.matmul(ValueId(0), w);
-    let ty = b.ty(dot).clone();
-    let bb = b.broadcast_to(bias, ty);
-    let out = b.add(dot, bb);
-    b.output(out);
-    let func = b.finish();
+    // Figure 5:  automap(update_fn, mesh={"batch":2,"model":4},
+    //                    manual_axes=["batch"])
+    let model = build_mlp(&MlpConfig::small());
+    let mesh = Mesh::new(&[("batch", 2), ("model", 4)]);
+    let mut session = Session::new(model.func, mesh);
 
-    println!("=== base dialect (Fig 2 top) ===");
-    println!("{}", automap::ir::printer::print_func(&func));
+    let plan = session
+        .run(&[
+            // User constraints: "batch" stays manually managed (the user
+            // runs data parallelism), and the inputs are pre-sharded on
+            // it — exactly the pmap-style starting point of Fig 5.
+            Tactic::Manual {
+                constraints: vec![
+                    ShardingConstraint::new("x", 0, "batch"),
+                    ShardingConstraint::new("target", 0, "batch"),
+                ],
+                manual_axes: vec!["batch".to_string()],
+            },
+            // Automated half: search the "model" axis, close over the
+            // rest, lower to SPMD with a cost evaluation.
+            Tactic::search(400, 0),
+            Tactic::InferRest,
+            Tactic::Lower,
+        ])
+        .expect("pipeline");
 
-    // Declare a 1-D mesh {"shard": 2} and tile w on dim 1.
-    let mesh = Mesh::new(&[("shard", 2)]);
-    let program = PartirProgram::new(func, mesh);
-    let state = DecisionState {
-        actions: vec![
-            Action::Tile { v: ValueId(1), dim: 1, axis: AxisId(0) },
-            Action::InferRest,
-        ],
-        atomic: vec![ValueId(0)], // x stays replicated (Fig 2 bottom: atomic)
-    };
-    let (dm, stats) = program.apply(&state);
+    println!("=== PartIR view after the pipeline (Fig 2) ===");
+    println!(
+        "{}",
+        print_partir(
+            &session.program.func,
+            &session.program.mesh,
+            session.dist_map(),
+            &session.state().atomic,
+        )
+    );
 
-    println!("=== PartIR view after tiling + propagation (Fig 2 bottom) ===");
-    println!("{}", print_partir(&program.func, &program.mesh, &dm, &state.atomic));
-    println!("(propagation assigned {} value-axis tilings)", stats.assigned);
-
-    // Lower to SPMD (Fig 3).
-    let spmd = lower(&program.func, &program.mesh, &program.prop, &dm);
+    let spmd = lower(
+        &session.program.func,
+        &session.program.mesh,
+        &session.program.prop,
+        session.dist_map(),
+    );
     println!("=== SPMD dialect (Fig 3) ===");
     println!("{}", print_spmd(&spmd));
-    println!(
-        "collectives: {} (column sharding of a dense layer needs none)",
-        spmd.collectives.len()
-    );
-    assert!(spmd.collectives.is_empty());
+
+    println!("=== decision trace ===");
+    for line in plan.trace.iter() {
+        println!("  {line}");
+    }
+    println!("=== partition plan ===");
+    println!("{}", plan.to_json().pretty());
+
+    // The manual axis is the user's: search must never assign it to a
+    // parameter, while the pinned input sharding survives the pipeline.
+    let x = plan.input_specs.iter().find(|s| s.name == "x").expect("x spec");
+    assert!(x.tiled_on("batch"));
+    for s in &plan.input_specs {
+        if s.name.ends_with("/w") || s.name.ends_with("/b") {
+            assert!(!s.tiled_on("batch"), "search assigned the manual axis to {}", s.name);
+        }
+    }
+    println!("quickstart OK: batch stayed manual, pinned shardings survived");
 }

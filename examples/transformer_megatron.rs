@@ -1,5 +1,6 @@
-//! Discover Megatron sharding on a transformer training step with MCTS,
-//! and verify it with the collective-statistics detector (paper §3).
+//! Discover Megatron sharding on a transformer training step with the
+//! Session pipeline, and verify it with the collective-statistics
+//! detector (paper §3).
 //!
 //!     cargo run --release --offline --example transformer_megatron -- [layers] [budget]
 
@@ -8,9 +9,9 @@ use automap::models::megatron;
 use automap::models::transformer::{build_transformer, TransformerConfig};
 use automap::partir::mesh::{AxisId, Mesh};
 use automap::partir::program::PartirProgram;
-use automap::search::env::{RewriteEnv, SearchOptions};
+use automap::search::env::SearchOptions;
 use automap::search::experiment::pressured_device;
-use automap::search::mcts::{search, MctsConfig};
+use automap::session::{Session, Tactic};
 use automap::sim::device::Device;
 use automap::util::stats::{fmt_bytes, fmt_secs};
 
@@ -26,7 +27,8 @@ fn main() {
         model.func.num_args(),
         model.func.num_nodes()
     );
-    let program = PartirProgram::new(model.func.clone(), Mesh::new(&[("model", 4)]));
+    let mesh = Mesh::new(&[("model", 4)]);
+    let program = PartirProgram::new(model.func.clone(), mesh.clone());
     let w = CostWeights::default();
 
     // Expert reference (Megatron) and a memory-pressured TPU-v3.
@@ -41,31 +43,38 @@ fn main() {
         fmt_secs(reference.runtime.total_seconds())
     );
 
-    // MCTS search.
-    let worklist = RewriteEnv::default_worklist(&program);
-    let env = RewriteEnv::new(&program, device, w, SearchOptions::default(), &worklist);
+    // Session pipeline: unfiltered search + infer-rest + lower.
+    let mut session = Session::with_options(
+        model.func.clone(),
+        mesh,
+        device,
+        w,
+        SearchOptions::default(),
+    );
     let t0 = std::time::Instant::now();
-    let result = search(&env, budget, 42, MctsConfig::default());
-    let verdict = megatron::check(&result.best_eval, &reference);
+    let plan = session
+        .run(&[Tactic::search(budget, 42), Tactic::InferRest, Tactic::Lower])
+        .expect("pipeline");
+    let verdict = megatron::check(&plan.eval, &reference);
 
     println!(
         "search: {budget} episodes in {:.2}s, best found at episode {}",
         t0.elapsed().as_secs_f64(),
-        result.episodes_to_best
+        plan.episodes_to_best
     );
     println!(
         "found: peak {} | {} all-reduces + {} all-gathers ({}) | sim {}",
-        fmt_bytes(result.best_eval.memory.peak_bytes as f64),
-        result.best_eval.collectives.all_reduce_count,
-        result.best_eval.collectives.all_gather_count,
-        fmt_bytes(result.best_eval.collectives.total_bytes() as f64),
-        fmt_secs(result.best_eval.runtime.total_seconds())
+        fmt_bytes(plan.eval.memory.peak_bytes as f64),
+        plan.eval.collectives.all_reduce_count,
+        plan.eval.collectives.all_gather_count,
+        fmt_bytes(plan.eval.collectives.total_bytes() as f64),
+        fmt_secs(plan.eval.runtime.total_seconds())
     );
     println!(
         "verdict: megatron={} near={} redundant_collectives={}",
         verdict.is_megatron, verdict.near_megatron, verdict.redundant_collectives
     );
-    for a in &result.best_state.actions {
-        println!("  decision: {}", a.describe(&program.func, &program.mesh));
+    for line in &plan.trace {
+        println!("  {line}");
     }
 }

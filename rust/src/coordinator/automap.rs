@@ -1,32 +1,39 @@
-//! The end-user entry point, mirroring the paper's Figure 5 workflow:
+//! Compatibility shim over the [`crate::session`] API, kept for callers
+//! written against the original one-shot entry point.
 //!
-//! ```text
-//! partitioned_fn, specs = automap(update_fn, mesh={"batch":2,"model":4},
-//!                                 manual_axes=["batch"])
+//! `Automap::partition` is now a fixed tactic pipeline executed by a
+//! [`Session`] — filter → search → infer-rest → lower — equivalent to:
+//!
+//! ```ignore
+//! let mut s = Session::with_options(func, mesh, device, weights, search);
+//! let plan = s.run(&[
+//!     Tactic::Filter { ranker, top_k },
+//!     Tactic::Search { budget, seed, mcts },
+//!     Tactic::InferRest,   // when auto_infer_rest
+//!     Tactic::Lower,
+//! ])?;
 //! ```
 //!
-//! Given a training-step function and a mesh, `Automap::partition` runs
-//! featurization → (optional) learned top-k filter → MCTS → SPMD
-//! lowering, and returns the partitioning *specification* for every
-//! input/output plus the cost evaluation — "in addition to a partitioned
-//! callable, automap returns a specification of partitioning decisions
-//! for inputs and outputs".
+//! New code should use [`Session`] directly: it additionally supports
+//! `Manual` constraints (pinned axes and `(name, dim, axis)` shardings,
+//! paper Fig 5), stage reordering, and serialisable [`PartitionPlan`]s.
 
-use crate::cost::composite::{evaluate, CostWeights, Evaluation};
+use crate::cost::composite::{CostWeights, Evaluation};
 use crate::ir::Func;
-use crate::learner::features::featurize;
-use crate::learner::ranker::{top_k_decisions, HeuristicRanker, PjrtRanker, Ranker, TOP_K};
+use crate::learner::ranker::TOP_K;
 use crate::partir::dist::DistMap;
 use crate::partir::mesh::Mesh;
 use crate::partir::program::PartirProgram;
-use crate::partir::propagate::PropStats;
-use crate::search::env::{RewriteEnv, SearchOptions};
-use crate::search::mcts::{search, MctsConfig};
+use crate::search::env::SearchOptions;
+use crate::search::mcts::MctsConfig;
+use crate::session::{resolve_worklist, PartitionPlan, RankerSpec, Session, Tactic};
 use crate::sim::device::Device;
 use crate::util::json::Json;
 use anyhow::Result;
 
-/// How the MCTS worklist is filtered.
+pub use crate::session::plan::ShardSpec;
+
+/// How the MCTS worklist is filtered (legacy spelling of [`RankerSpec`]).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Filter {
     /// All arguments (MCTS-only mode of Fig 6).
@@ -35,6 +42,16 @@ pub enum Filter {
     Learned { hlo_path: String },
     /// Deterministic size-based ranker (no artifacts required).
     Heuristic,
+}
+
+impl Filter {
+    pub fn to_ranker_spec(&self) -> RankerSpec {
+        match self {
+            Filter::None => RankerSpec::None,
+            Filter::Heuristic => RankerSpec::Heuristic,
+            Filter::Learned { hlo_path } => RankerSpec::Learned { hlo_path: hlo_path.clone() },
+        }
+    }
 }
 
 /// Options for one partition call.
@@ -65,15 +82,7 @@ impl Default for AutomapOptions {
     }
 }
 
-/// Partitioning decision for one function argument or output.
-#[derive(Debug, Clone)]
-pub struct ShardSpec {
-    pub name: String,
-    /// `(axis name, tensor dim)` pairs; empty = replicated.
-    pub tilings: Vec<(String, usize)>,
-}
-
-/// The result of a partition call.
+/// The result of a partition call (legacy shape of [`PartitionPlan`]).
 pub struct PartitionReport {
     pub input_specs: Vec<ShardSpec>,
     pub output_specs: Vec<ShardSpec>,
@@ -86,33 +95,23 @@ pub struct PartitionReport {
 }
 
 impl PartitionReport {
+    fn from_plan(plan: PartitionPlan, dm: DistMap) -> PartitionReport {
+        PartitionReport {
+            input_specs: plan.input_specs,
+            output_specs: plan.output_specs,
+            eval: plan.eval,
+            dm,
+            decisions: plan.decisions,
+            episodes_to_best: plan.episodes_to_best,
+            worklist_size: plan.worklist_size,
+            wall_seconds: plan.wall_seconds,
+        }
+    }
+
     /// Summarise as JSON (written by the CLI).
     pub fn to_json(&self, mesh: &Mesh) -> Json {
         let specs = |xs: &[ShardSpec]| {
-            Json::Arr(
-                xs.iter()
-                    .filter(|s| !s.tilings.is_empty())
-                    .map(|s| {
-                        Json::obj(vec![
-                            ("name", Json::str(s.name.clone())),
-                            (
-                                "tilings",
-                                Json::Arr(
-                                    s.tilings
-                                        .iter()
-                                        .map(|(a, d)| {
-                                            Json::obj(vec![
-                                                ("axis", Json::str(a.clone())),
-                                                ("dim", Json::num(*d as f64)),
-                                            ])
-                                        })
-                                        .collect(),
-                                ),
-                            ),
-                        ])
-                    })
-                    .collect(),
-            )
+            Json::Arr(xs.iter().filter(|s| !s.replicated()).map(|s| s.to_json()).collect())
         };
         Json::obj(vec![
             ("mesh", Json::str(mesh.describe())),
@@ -131,7 +130,7 @@ impl PartitionReport {
     }
 }
 
-/// The automap session: program + options.
+/// The legacy one-shot entry point: program + options.
 pub struct Automap {
     pub program: PartirProgram,
     pub options: AutomapOptions,
@@ -144,94 +143,48 @@ impl Automap {
 
     /// Build the (possibly filtered) worklist.
     pub fn worklist(&self) -> Result<Vec<crate::ir::ValueId>> {
-        let full = RewriteEnv::default_worklist(&self.program);
-        match &self.options.filter {
-            Filter::None => Ok(full),
-            Filter::Heuristic => {
-                let g = featurize(&self.program.func, &self.program.mesh);
-                let ranker = HeuristicRanker { func: &self.program.func };
-                let scores = ranker.score(&g)?;
-                Ok(top_k_decisions(&self.program.func, &g, &scores, self.options.top_k))
-            }
-            Filter::Learned { hlo_path } => {
-                let rt = crate::runtime::pjrt::Runtime::new()?;
-                let ranker = PjrtRanker::load(&rt, hlo_path)?;
-                let g = featurize(&self.program.func, &self.program.mesh);
-                let scores = ranker.score(&g)?;
-                Ok(top_k_decisions(&self.program.func, &g, &scores, self.options.top_k))
-            }
-        }
+        let (wl, _) =
+            resolve_worklist(&self.program, &self.options.filter.to_ranker_spec(), self.options.top_k)?;
+        Ok(wl)
     }
 
-    /// Run the full pipeline and return the partitioning report.
+    /// Run the fixed pipeline through a [`Session`] and return the report.
     pub fn partition(&self) -> Result<PartitionReport> {
-        let t0 = std::time::Instant::now();
-        let worklist = self.worklist()?;
-        let env = RewriteEnv::new(
-            &self.program,
+        let mut session = Session::with_options(
+            self.program.func.clone(),
+            self.program.mesh.clone(),
             self.options.device.clone(),
             self.options.weights.clone(),
             self.options.search.clone(),
-            &worklist,
         );
-        let result = search(&env, self.options.budget, self.options.seed, self.options.mcts.clone());
-
-        // Materialise the final distribution (with infer-rest closure).
-        let (mut dm, _) = self.program.apply(&result.best_state);
+        let mut tactics = vec![
+            Tactic::Filter {
+                ranker: self.options.filter.to_ranker_spec(),
+                top_k: self.options.top_k,
+            },
+            Tactic::Search {
+                budget: self.options.budget,
+                seed: self.options.seed,
+                mcts: self.options.mcts.clone(),
+            },
+        ];
         if self.options.search.auto_infer_rest {
-            let mut stats = PropStats::default();
-            self.program.prop.infer_rest(
-                &self.program.func,
-                &self.program.mesh,
-                &mut dm,
-                &mut stats,
-            );
+            tactics.push(Tactic::InferRest);
         }
-        let eval = evaluate(&self.program, &dm, &self.options.device, &self.options.weights);
-
-        let f = &self.program.func;
-        let mesh = &self.program.mesh;
-        let spec_for = |v: crate::ir::ValueId, name: String| ShardSpec {
-            name,
-            tilings: dm
-                .tilings(v.index())
-                .into_iter()
-                .map(|(a, d)| (mesh.name(a).to_string(), d))
-                .collect(),
-        };
-        let input_specs = (0..f.num_args())
-            .map(|i| spec_for(crate::ir::ValueId(i as u32), f.args[i].name.clone()))
-            .collect();
-        let output_specs = f
-            .outputs
-            .iter()
-            .enumerate()
-            .map(|(i, &o)| spec_for(o, format!("output_{i}")))
-            .collect();
-
-        Ok(PartitionReport {
-            input_specs,
-            output_specs,
-            eval,
-            dm,
-            decisions: result
-                .best_state
-                .actions
-                .iter()
-                .filter(|a| matches!(a, crate::partir::actions::Action::Tile { .. }))
-                .count(),
-            episodes_to_best: result.episodes_to_best,
-            worklist_size: worklist.len(),
-            wall_seconds: t0.elapsed().as_secs_f64(),
-        })
+        tactics.push(Tactic::Lower);
+        let plan = session.run(&tactics)?;
+        let dm = session.dist_map().clone();
+        Ok(PartitionReport::from_plan(plan, dm))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cost::composite::evaluate;
     use crate::models::mlp::{build_mlp, MlpConfig};
     use crate::models::transformer::{build_transformer, TransformerConfig};
+    use crate::search::env::RewriteEnv;
 
     #[test]
     fn partition_mlp_end_to_end_heuristic() {

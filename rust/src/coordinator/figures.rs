@@ -9,8 +9,6 @@
 //!   Fig 9 — grouping when cross-layer shared-dependency propagation is
 //!           unavailable (ungrouped deep models fail).
 
-use crate::learner::features::featurize;
-use crate::learner::ranker::{top_k_decisions, HeuristicRanker, PjrtRanker, Ranker};
 use crate::models::transformer::{build_transformer, TransformerConfig};
 use crate::partir::mesh::{AxisId, Mesh};
 use crate::partir::program::PartirProgram;
@@ -47,24 +45,19 @@ fn build(layers: usize) -> (PartirProgram, crate::models::transformer::Transform
     (program, model)
 }
 
-/// Resolve the learner filter: PJRT ranker if artifacts exist, else the
-/// heuristic ranker (clearly labelled in the output).
+/// Resolve the learner filter through the session Filter tactic's
+/// resolver: PJRT ranker if artifacts exist (and the `pjrt` feature is
+/// built in), else the heuristic ranker (clearly labelled in output).
 pub fn learned_worklist(
     program: &PartirProgram,
     ranker_path: &str,
     k: usize,
 ) -> Result<(Vec<crate::ir::ValueId>, &'static str)> {
-    let g = featurize(&program.func, &program.mesh);
-    if std::path::Path::new(ranker_path).exists() {
-        let rt = crate::runtime::pjrt::Runtime::new()?;
-        let ranker = PjrtRanker::load(&rt, ranker_path)?;
-        let scores = ranker.score(&g)?;
-        Ok((top_k_decisions(&program.func, &g, &scores, k), "learned(pjrt)"))
-    } else {
-        let ranker = HeuristicRanker { func: &program.func };
-        let scores = ranker.score(&g)?;
-        Ok((top_k_decisions(&program.func, &g, &scores, k), "heuristic(fallback)"))
-    }
+    crate::session::resolve_worklist(
+        program,
+        &crate::session::RankerSpec::Auto { hlo_path: ranker_path.to_string() },
+        k,
+    )
 }
 
 fn rows_to_json(rows: &[BudgetRow]) -> Json {

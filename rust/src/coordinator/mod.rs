@@ -1,5 +1,6 @@
-//! L3 coordinator: the public `Automap` API (Fig 5 workflow), the
-//! experiment config system, and the figure harnesses.
+//! L3 coordinator: the legacy `Automap` one-shot API (now a shim over
+//! [`crate::session::Session`]), the experiment config system, and the
+//! figure harnesses.
 
 pub mod automap;
 pub mod config;

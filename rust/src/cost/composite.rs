@@ -97,7 +97,7 @@ mod tests {
                 Action::Tile { v: ValueId(1), dim: 1, axis: AxisId(0) },
                 Action::Tile { v: ValueId(2), dim: 0, axis: AxisId(0) },
             ],
-            atomic: vec![],
+            atomic: Default::default(),
         };
         let (dm, _) = p.apply(&st);
         let e1 = evaluate(&p, &dm, &dev, &w);
@@ -117,7 +117,7 @@ mod tests {
                 Action::Tile { v: ValueId(1), dim: 1, axis: AxisId(0) },
                 Action::Tile { v: ValueId(2), dim: 0, axis: AxisId(0) },
             ],
-            atomic: vec![],
+            atomic: Default::default(),
         };
         // Bad: row-shard w1 one-sided (gathers w1) + col-shard w2.
         let bad = DecisionState {
@@ -125,7 +125,7 @@ mod tests {
                 Action::Tile { v: ValueId(1), dim: 0, axis: AxisId(0) },
                 Action::Tile { v: ValueId(2), dim: 1, axis: AxisId(0) },
             ],
-            atomic: vec![],
+            atomic: Default::default(),
         };
         let (dm_m, _) = p.apply(&megatron);
         let (dm_b, _) = p.apply(&bad);

@@ -111,7 +111,7 @@ mod tests {
         let p = chain();
         let st = DecisionState {
             actions: vec![Action::Tile { v: ValueId(0), dim: 0, axis: AxisId(0) }],
-            atomic: vec![],
+            atomic: Default::default(),
         };
         let (dm, _) = p.apply(&st);
         let m = peak_memory(&p.func, &p.mesh, &dm);

@@ -7,8 +7,10 @@
 //! training graphs with collective-statistics Megatron detection and an
 //! analytical TPU-v3 runtime model.
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! The user-facing entry point is [`session::Session`], which executes
+//! composable [`session::Tactic`] pipelines (manual constraints →
+//! filter → search → infer-rest → lower) and returns a serialisable
+//! [`session::PartitionPlan`]. See README.md for the quickstart.
 
 pub mod ir;
 pub mod coordinator;
@@ -18,6 +20,7 @@ pub mod models;
 pub mod partir;
 pub mod runtime;
 pub mod search;
+pub mod session;
 pub mod sim;
 pub mod spmd;
 pub mod util;

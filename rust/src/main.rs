@@ -3,25 +3,29 @@
 //! Subcommands:
 //!   stats        model-scale statistics vs. the paper's setup (§3)
 //!   gen-dataset  generate the ranker training set (best-strategy labels)
-//!   partition    run automap on a model and print the sharding report
+//!   partition    run a Session tactic pipeline on a model and print the
+//!                partition plan (supports --pin / --shard constraints)
 //!   fig6 / fig7 / fig8 / fig9   regenerate the paper's figures
 //!   all-figures  run every figure harness
 //!
 //! Common flags: --layers N --budgets a,b,c --attempts N --seed S
 //!               --config path.json --out-dir results
+//! Partition flags: --pin axis[,axis]  --shard name:dim:axis[,...]
 
-use automap::coordinator::automap::{Automap, AutomapOptions, Filter};
 use automap::coordinator::config as cfgfile;
 use automap::coordinator::figures::{self, FigureSetup};
+use automap::learner::ranker::TOP_K;
 use automap::models::graphnet::{build_graphnet, GraphNetConfig};
 use automap::models::mlp::{build_mlp, MlpConfig};
 use automap::models::transformer::{build_transformer, TransformerConfig};
 use automap::partir::mesh::Mesh;
+use automap::search::mcts::MctsConfig;
+use automap::session::{RankerSpec, Session, ShardingConstraint, Tactic};
 use automap::util::cli::Args;
 
 const VALUE_FLAGS: &[&str] = &[
     "layers", "budgets", "attempts", "seed", "out", "out-dir", "count", "axis", "model",
-    "budget", "filter", "ranker", "config", "d-model", "mesh",
+    "budget", "filter", "ranker", "config", "d-model", "mesh", "pin", "shard",
 ];
 const BOOL_FLAGS: &[&str] = &["paper", "grouping", "no-tying", "help"];
 
@@ -74,7 +78,11 @@ fn usage() {
          flags: --layers N --budgets a,b,c --attempts N --seed S --paper\n\
                 --model mlp|transformer|graphnet --budget N --filter none|heuristic|learned\n\
                 --mesh model=4[,batch=2] --ranker artifacts/ranker.hlo.txt\n\
-                --config cfg.json --out-dir results --count N (gen-dataset)"
+                --config cfg.json --out-dir results --count N (gen-dataset)\n\
+         partition constraints (paper Fig 5):\n\
+                --pin axis[,axis]          mark mesh axes manual (excluded from search)\n\
+                --shard name:dim:axis[,..] pre-shard arguments before search,\n\
+                                           e.g. --shard x:0:batch,dense_0/w:1:model"
     );
 }
 
@@ -122,10 +130,10 @@ fn parse_mesh(spec: &str) -> anyhow::Result<Mesh> {
 fn cmd_partition(args: &Args) -> anyhow::Result<()> {
     let model_kind = args.get_str("model", "transformer");
     let mesh = parse_mesh(&args.get_str("mesh", "model=4"))?;
-    let filter = match args.get_str("filter", "heuristic").as_str() {
-        "none" => Filter::None,
-        "heuristic" => Filter::Heuristic,
-        "learned" => Filter::Learned {
+    let ranker = match args.get_str("filter", "heuristic").as_str() {
+        "none" => RankerSpec::None,
+        "heuristic" => RankerSpec::Heuristic,
+        "learned" => RankerSpec::Learned {
             hlo_path: args.get_str("ranker", "artifacts/ranker.hlo.txt"),
         },
         other => anyhow::bail!("unknown filter '{other}'"),
@@ -144,17 +152,40 @@ fn cmd_partition(args: &Args) -> anyhow::Result<()> {
         func.num_nodes(),
         mesh.describe()
     );
-    let opts = AutomapOptions {
+
+    // Paper Fig 5 constraints: --pin batch --shard tokens:0:batch
+    let manual_axes: Vec<String> = args
+        .get("pin")
+        .map(|s| s.split(',').map(|a| a.trim().to_string()).filter(|a| !a.is_empty()).collect())
+        .unwrap_or_default();
+    let constraints: Vec<ShardingConstraint> = match args.get("shard") {
+        None => Vec::new(),
+        Some(s) => s
+            .split(',')
+            .filter(|p| !p.trim().is_empty())
+            .map(ShardingConstraint::parse)
+            .collect::<anyhow::Result<_>>()?,
+    };
+
+    let mut tactics = Vec::new();
+    if !manual_axes.is_empty() || !constraints.is_empty() {
+        tactics.push(Tactic::Manual { constraints, manual_axes });
+    }
+    tactics.push(Tactic::Filter { ranker, top_k: TOP_K });
+    tactics.push(Tactic::Search {
         budget: args.get_usize("budget", 500)?,
         seed: args.get_u64("seed", 0)?,
-        filter,
-        ..Default::default()
-    };
-    let am = Automap::new(func, mesh, opts);
-    let report = am.partition()?;
-    println!("{}", report.to_json(&am.program.mesh).pretty());
+        mcts: MctsConfig::default(),
+    });
+    tactics.push(Tactic::InferRest);
+    tactics.push(Tactic::Lower);
+
+    let mut session = Session::new(func, mesh);
+    let plan = session.run(&tactics)?;
+    println!("{}", plan.to_json().pretty());
     if let Some(out) = args.get("out") {
-        std::fs::write(out, report.to_json(&am.program.mesh).pretty())?;
+        std::fs::write(out, plan.to_json().pretty())?;
+        println!("wrote {out}");
     }
     Ok(())
 }

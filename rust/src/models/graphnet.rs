@@ -154,7 +154,7 @@ mod tests {
                 Action::Tile { v: crate::ir::ValueId(2), dim: 0, axis: ax }, // senders
                 Action::Tile { v: crate::ir::ValueId(3), dim: 0, axis: ax }, // receivers
             ],
-            atomic: vec![],
+            atomic: Default::default(),
         };
         let (dm, _) = p.apply(&st);
         let sp = lower(&p.func, &p.mesh, &p.prop, &dm);

@@ -30,7 +30,7 @@ pub fn reference_state(model: &TransformerModel, axis: AxisId) -> DecisionState 
     }
     // Shard the matching biases / optimiser state for free memory savings.
     actions.push(Action::InferRest);
-    DecisionState { actions, atomic: vec![] }
+    DecisionState { actions, atomic: Default::default() }
 }
 
 /// Reference evaluation (collective profile + runtime) of Megatron.

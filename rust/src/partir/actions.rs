@@ -38,17 +38,96 @@ impl Action {
     }
 }
 
+/// Membership set over [`ValueId`]s, stored as a bitset so the episode
+/// hot path (`is_atomic` inside `action_valid`, called for every
+/// candidate action of every MCTS step) is O(1) instead of the O(n)
+/// `Vec::contains` scan it replaced.
+#[derive(Debug, Clone, Default)]
+pub struct AtomicSet {
+    bits: Vec<u64>,
+}
+
+/// Equality is by membership: trailing zero words (from pre-sizing via
+/// [`AtomicSet::with_capacity`]) are ignored.
+impl PartialEq for AtomicSet {
+    fn eq(&self, other: &AtomicSet) -> bool {
+        let (short, long) =
+            if self.bits.len() <= other.bits.len() { (self, other) } else { (other, self) };
+        short.bits == long.bits[..short.bits.len()]
+            && long.bits[short.bits.len()..].iter().all(|&w| w == 0)
+    }
+}
+
+impl Eq for AtomicSet {}
+
+impl AtomicSet {
+    /// Pre-size for a program with `num_values` values so inserts on the
+    /// hot path never reallocate.
+    pub fn with_capacity(num_values: usize) -> AtomicSet {
+        AtomicSet { bits: vec![0; (num_values + 63) / 64] }
+    }
+
+    #[inline]
+    pub fn insert(&mut self, v: ValueId) {
+        let (word, bit) = (v.index() / 64, v.index() % 64);
+        if word >= self.bits.len() {
+            self.bits.resize(word + 1, 0);
+        }
+        self.bits[word] |= 1u64 << bit;
+    }
+
+    #[inline]
+    pub fn contains(&self, v: ValueId) -> bool {
+        self.bits
+            .get(v.index() / 64)
+            .map_or(false, |w| (w >> (v.index() % 64)) & 1 == 1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.iter().all(|&w| w == 0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.bits.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Iterate members in increasing `ValueId` order.
+    pub fn iter(&self) -> impl Iterator<Item = ValueId> + '_ {
+        self.bits.iter().enumerate().flat_map(|(wi, &w)| {
+            (0..64usize)
+                .filter(move |&b| (w >> b) & 1 == 1)
+                .map(move |b| ValueId((wi * 64 + b) as u32))
+        })
+    }
+}
+
+impl From<&[ValueId]> for AtomicSet {
+    fn from(vs: &[ValueId]) -> AtomicSet {
+        let mut s = AtomicSet::default();
+        for &v in vs {
+            s.insert(v);
+        }
+        s
+    }
+}
+
 /// The decision state of one search episode: explicit actions taken plus
 /// the atomic set. The derived `DistMap` is recomputed by the env.
 #[derive(Debug, Clone, Default)]
 pub struct DecisionState {
     pub actions: Vec<Action>,
-    pub atomic: Vec<ValueId>,
+    pub atomic: AtomicSet,
 }
 
 impl DecisionState {
+    /// A state that replays `actions` with an empty atomic set.
+    pub fn with_actions(actions: Vec<Action>) -> DecisionState {
+        DecisionState { actions, atomic: AtomicSet::default() }
+    }
+
+    #[inline]
     pub fn is_atomic(&self, v: ValueId) -> bool {
-        self.atomic.contains(&v)
+        self.atomic.contains(v)
     }
 }
 
@@ -137,7 +216,7 @@ mod tests {
         let (f, mesh) = setup();
         let dm = DistMap::new(&f, &mesh);
         let mut st = DecisionState::default();
-        st.atomic.push(ValueId(0));
+        st.atomic.insert(ValueId(0));
         let model = mesh.axis_by_name("model").unwrap();
         assert!(!action_valid(&f, &mesh, &dm, &st, &Action::Tile { v: ValueId(0), dim: 0, axis: model }));
     }
@@ -153,6 +232,35 @@ mod tests {
         assert!(!action_valid(&f, &mesh, &dm, &st, &Action::Tile { v: ValueId(0), dim: 0, axis: model }));
         assert!(!action_valid(&f, &mesh, &dm, &st, &Action::Tile { v: ValueId(0), dim: 1, axis: batch }));
         assert!(action_valid(&f, &mesh, &dm, &st, &Action::Tile { v: ValueId(0), dim: 0, axis: batch }));
+    }
+
+    #[test]
+    fn atomic_set_bitset_semantics() {
+        let mut s = AtomicSet::with_capacity(100);
+        assert!(s.is_empty());
+        for i in [0u32, 63, 64, 99] {
+            s.insert(ValueId(i));
+        }
+        assert_eq!(s.len(), 4);
+        assert!(s.contains(ValueId(63)));
+        assert!(s.contains(ValueId(64)));
+        assert!(!s.contains(ValueId(65)));
+        // out-of-range queries are false, not a panic
+        assert!(!s.contains(ValueId(100_000)));
+        // growth past the pre-sized capacity
+        s.insert(ValueId(1000));
+        assert!(s.contains(ValueId(1000)));
+        let members: Vec<u32> = s.iter().map(|v| v.0).collect();
+        assert_eq!(members, vec![0, 63, 64, 99, 1000]);
+        assert_eq!(AtomicSet::from(&[ValueId(7)][..]).len(), 1);
+        // equality is by membership, regardless of pre-sized capacity
+        assert_eq!(AtomicSet::with_capacity(100), AtomicSet::default());
+        let mut a = AtomicSet::with_capacity(1000);
+        a.insert(ValueId(7));
+        assert_eq!(a, AtomicSet::from(&[ValueId(7)][..]));
+        let mut b = AtomicSet::default();
+        b.insert(ValueId(8));
+        assert_ne!(a, b);
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub mod program;
 pub mod propagate;
 pub mod registry;
 
-pub use actions::{Action, DecisionState};
+pub use actions::{Action, AtomicSet, DecisionState};
 pub use dist::DistMap;
 pub use mesh::{Axis, AxisId, Mesh, MAX_AXES};
 pub use program::PartirProgram;

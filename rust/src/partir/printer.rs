@@ -3,13 +3,14 @@
 //! loops for tiled values, `partir.slice` for operands sliced inside a
 //! tiling loop, and `partir.atomic` for explicitly replicated values.
 
+use super::actions::AtomicSet;
 use super::dist::DistMap;
 use super::mesh::{AxisId, Mesh};
 use crate::ir::{Func, ValueId};
 use std::fmt::Write;
 
 /// Render the PartIR view of `f` under distribution `dm`.
-pub fn print_partir(f: &Func, mesh: &Mesh, dm: &DistMap, atomic: &[ValueId]) -> String {
+pub fn print_partir(f: &Func, mesh: &Mesh, dm: &DistMap, atomic: &AtomicSet) -> String {
     let mut s = String::new();
     write!(s, "func @{}(", f.name).unwrap();
     for (i, a) in f.args.iter().enumerate() {
@@ -24,7 +25,7 @@ pub fn print_partir(f: &Func, mesh: &Mesh, dm: &DistMap, atomic: &[ValueId]) -> 
     // Argument distribution block.
     for (i, a) in f.args.iter().enumerate() {
         let tilings = dm.tilings(i);
-        if atomic.contains(&ValueId(i as u32)) {
+        if atomic.contains(ValueId(i as u32)) {
             writeln!(s, "  // %arg{i} ({}): partir.atomic {{ replicated }}", a.name).unwrap();
         } else if !tilings.is_empty() {
             for (axis, dim) in tilings {
@@ -101,7 +102,7 @@ mod tests {
         let p = PartirProgram::new(b.finish(), Mesh::new(&[("shard", 2)]));
         let st = DecisionState {
             actions: vec![Action::Tile { v: ValueId(1), dim: 1, axis: AxisId(0) }],
-            atomic: vec![ValueId(0)],
+            atomic: AtomicSet::from(&[ValueId(0)][..]),
         };
         let (dm, _) = p.apply(&st);
         let txt = print_partir(&p.func, &p.mesh, &dm, &st.atomic);

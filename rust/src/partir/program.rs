@@ -62,7 +62,7 @@ impl PartirProgram {
                         self.prop.forward(&self.func, &self.mesh, dm, stats);
                     }
                 }
-                Action::Atomic { v } => replay.atomic.push(*v),
+                Action::Atomic { v } => replay.atomic.insert(*v),
                 Action::InferRest => {
                     stats.stuck_nodes.clear();
                     self.prop.infer_rest(&self.func, &self.mesh, dm, stats);
@@ -103,7 +103,7 @@ mod tests {
                 Action::Tile { v: ValueId(1), dim: 1, axis: AxisId(0) },
                 Action::InferRest,
             ],
-            atomic: vec![],
+            atomic: Default::default(),
         };
         let (dm, stats) = p.apply(&st);
         assert_eq!(dm.get(1, AxisId(0)), Some(1));
@@ -120,7 +120,7 @@ mod tests {
                 // second tile of same value+axis is invalid -> skipped
                 Action::Tile { v: ValueId(1), dim: 0, axis: AxisId(0) },
             ],
-            atomic: vec![],
+            atomic: Default::default(),
         };
         let (dm, _) = p.apply(&st);
         assert_eq!(dm.get(1, AxisId(0)), Some(1));

@@ -1,6 +1,7 @@
 //! PJRT runtime wrapper around the `xla` crate: load AOT artifacts
-//! (HLO text) and execute them from the rust hot path.
+//! (HLO text) and execute them from the rust hot path. Compiles as an
+//! erroring stub unless the `pjrt` cargo feature is enabled.
 
 pub mod pjrt;
 
-pub use pjrt::{Executable, Input, Runtime};
+pub use pjrt::{pjrt_available, Executable, Input, Runtime};

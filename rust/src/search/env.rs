@@ -104,7 +104,15 @@ pub struct RewriteEnv<'a> {
     pub options: SearchOptions,
     /// Decision targets (worklist entries / groups).
     pub targets: Vec<Target>,
-    /// Baseline (fully replicated) cost for reward normalisation.
+    /// Decisions every episode starts from (user constraints pinned by a
+    /// `Session`'s `Manual` tactic; empty for an unconstrained search).
+    pub seed: DecisionState,
+    /// The seed replayed once with propagation; cloned into every
+    /// episode so `reset` is a flat memcpy, not a re-propagation.
+    seed_dm: DistMap,
+    seed_stats: PropStats,
+    /// Baseline cost for reward normalisation: the seed state's cost
+    /// (fully replicated when the seed is empty).
     pub base_cost: f64,
 }
 
@@ -117,6 +125,21 @@ impl<'a> RewriteEnv<'a> {
         weights: CostWeights,
         options: SearchOptions,
         worklist: &[ValueId],
+    ) -> RewriteEnv<'a> {
+        Self::with_seed(program, device, weights, options, worklist, DecisionState::default())
+    }
+
+    /// Like [`RewriteEnv::new`], but every episode starts from `seed`
+    /// (already-taken decisions replayed with propagation), and rewards
+    /// are normalised against the seed state's cost. This is how a
+    /// `Session`'s `Manual` tactic constrains the search stage.
+    pub fn with_seed(
+        program: &'a PartirProgram,
+        device: Device,
+        weights: CostWeights,
+        options: SearchOptions,
+        worklist: &[ValueId],
+        seed: DecisionState,
     ) -> RewriteEnv<'a> {
         let mut targets: Vec<Target> = Vec::new();
         let tie = options.grouping || options.cross_layer_tying;
@@ -134,9 +157,19 @@ impl<'a> RewriteEnv<'a> {
                 targets.push(Target { key, values: vec![v] });
             }
         }
-        let dm0 = DistMap::new(&program.func, &program.mesh);
-        let base = evaluate(program, &dm0, &device, &weights);
-        RewriteEnv { program, device, weights, options, targets, base_cost: base.cost }
+        let (seed_dm, seed_stats) = program.apply(&seed);
+        let base = evaluate(program, &seed_dm, &device, &weights);
+        RewriteEnv {
+            program,
+            device,
+            weights,
+            options,
+            targets,
+            seed,
+            seed_dm,
+            seed_stats,
+            base_cost: base.cost,
+        }
     }
 
     /// Default worklist: every function argument except optimiser state
@@ -150,10 +183,17 @@ impl<'a> RewriteEnv<'a> {
     }
 
     pub fn reset(&self) -> Episode {
+        let mut state = self.seed.clone();
+        if state.atomic.is_empty() {
+            // pre-size so hot-path inserts never reallocate
+            state.atomic = crate::partir::actions::AtomicSet::with_capacity(
+                self.program.func.num_values(),
+            );
+        }
         Episode {
-            state: DecisionState::default(),
-            dm: DistMap::new(&self.program.func, &self.program.mesh),
-            stats: PropStats::default(),
+            state,
+            dm: self.seed_dm.clone(),
+            stats: self.seed_stats.clone(),
             decisions: 0,
             done: false,
         }
@@ -277,6 +317,37 @@ mod tests {
         assert_eq!(role_key("layer_17/mlp/w1"), "layer_*/mlp/w1");
         assert_eq!(role_key("embed"), "embed");
         assert_eq!(role_key("round_2/edge_mlp/w1"), "round_*/edge_mlp/w1");
+    }
+
+    #[test]
+    fn role_key_edge_cases() {
+        // Trailing digit runs after '_' collapse, even at end of name.
+        assert_eq!(role_key("dense_0"), "dense_*");
+        assert_eq!(role_key("dense_12"), "dense_*");
+        assert_eq!(role_key("w_007"), "w_*");
+        // Multi-digit indices deep in a scope path.
+        assert_eq!(role_key("layer_17/attn/wq"), "layer_*/attn/wq");
+        assert_eq!(role_key("block_3/layer_12/mlp/w2"), "block_*/layer_*/mlp/w2");
+        // Names with no scope separator at all.
+        assert_eq!(role_key("pos"), "pos");
+        assert_eq!(role_key("lnf_g"), "lnf_g");
+        // Digits NOT preceded by '_' are structural, not indices.
+        assert_eq!(role_key("fc1"), "fc1");
+        assert_eq!(role_key("conv2d/w"), "conv2d/w");
+        // Digit run followed by more name: only the run collapses.
+        assert_eq!(role_key("a_1b/c_2"), "a_*b/c_*");
+        // Multiple underscore-digit runs in one segment.
+        assert_eq!(role_key("x_1_2"), "x_*_*");
+        // Trailing underscore and bare underscore-digit names.
+        assert_eq!(role_key("x_"), "x_");
+        assert_eq!(role_key("_5"), "_*");
+        // Adam optimiser-state suffixes keep their role distinct.
+        assert_eq!(role_key("layer_3/mlp/w1.adam_m"), "layer_*/mlp/w1.adam_m");
+        // Empty string is a no-op.
+        assert_eq!(role_key(""), "");
+        // Same role across layers maps to the same key; different roles don't.
+        assert_eq!(role_key("layer_0/attn/wq"), role_key("layer_31/attn/wq"));
+        assert_ne!(role_key("layer_0/attn/wq"), role_key("layer_0/attn/wk"));
     }
 
     #[test]

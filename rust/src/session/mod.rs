@@ -1,0 +1,40 @@
+//! The user-facing partitioning API (paper Fig 5):
+//!
+//! ```text
+//! partitioned_fn, specs = automap(update_fn, mesh={"batch":2,"model":4},
+//!                                 manual_axes=["batch"])
+//! ```
+//!
+//! is expressed here as a [`Session`] that owns the program and runs a
+//! composable pipeline of [`Tactic`]s:
+//!
+//! ```ignore
+//! let mut session = Session::new(update_fn, mesh);
+//! let plan = session.run(&[
+//!     Tactic::Manual {
+//!         constraints: vec![ShardingConstraint::new("tokens", 0, "batch")],
+//!         manual_axes: vec!["batch".into()],
+//!     },
+//!     Tactic::filter(RankerSpec::Heuristic),
+//!     Tactic::search(1000, 0),
+//!     Tactic::InferRest,
+//!     Tactic::Lower,
+//! ])?;
+//! ```
+//!
+//! Each stage is a first-class value, so callers can pin axes and seed
+//! decisions (`Manual`, the user-constraint half of GSPMD-style
+//! annotation+propagation), shrink the worklist (`Filter`), search
+//! (`Search`), close over the remaining values (`InferRest`), and lower
+//! to SPMD with a cost evaluation (`Lower`) — in any order, repeatedly,
+//! PartIR-tactic style. The result is a serialisable [`PartitionPlan`].
+//!
+//! `coordinator::automap` is a thin compatibility shim over this module.
+
+pub mod plan;
+pub mod session;
+pub mod tactic;
+
+pub use plan::{PartitionPlan, ShardSpec};
+pub use session::{resolve_worklist, Session};
+pub use tactic::{RankerSpec, ShardingConstraint, Tactic};

@@ -1,0 +1,319 @@
+//! The unified result of a partitioning pipeline: per-argument
+//! [`ShardSpec`]s, the cost [`Evaluation`], a collectives summary, and
+//! the decision trace — serialisable to/from JSON via `util::json` so
+//! plans can be cached, diffed, and shipped between tools.
+
+use crate::cost::composite::Evaluation;
+use crate::cost::liveness::MemoryEstimate;
+use crate::sim::exec::RuntimeEstimate;
+use crate::spmd::collectives::CollectiveStats;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+
+/// Partitioning decision for one function argument or output:
+/// `(axis name, tensor dim)` pairs; empty = replicated.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub name: String,
+    pub tilings: Vec<(String, usize)>,
+}
+
+impl ShardSpec {
+    pub fn replicated(&self) -> bool {
+        self.tilings.is_empty()
+    }
+
+    /// Is this value tiled along the named mesh axis?
+    pub fn tiled_on(&self, axis: &str) -> bool {
+        self.tilings.iter().any(|(a, _)| a == axis)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "tilings",
+                Json::Arr(
+                    self.tilings
+                        .iter()
+                        .map(|(a, d)| {
+                            Json::obj(vec![
+                                ("axis", Json::str(a.clone())),
+                                ("dim", Json::num(*d as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ShardSpec> {
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .context("spec missing 'name'")?
+            .to_string();
+        let mut tilings = Vec::new();
+        for t in j.get("tilings").and_then(|v| v.as_arr()).context("spec missing 'tilings'")? {
+            let axis = t.get("axis").and_then(|v| v.as_str()).context("tiling missing 'axis'")?;
+            let dim = t.get("dim").and_then(|v| v.as_usize()).context("tiling missing 'dim'")?;
+            tilings.push((axis.to_string(), dim));
+        }
+        Ok(ShardSpec { name, tilings })
+    }
+}
+
+/// The unified output of [`crate::session::Session::run`].
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    /// Mesh axes as `(name, size)`, in mesh order.
+    pub mesh_axes: Vec<(String, i64)>,
+    pub input_specs: Vec<ShardSpec>,
+    pub output_specs: Vec<ShardSpec>,
+    pub eval: Evaluation,
+    /// Explicit tile decisions (manual + search).
+    pub decisions: usize,
+    /// Episode at which search found its best solution (0 = no search).
+    pub episodes_to_best: usize,
+    /// Worklist size the search stage saw.
+    pub worklist_size: usize,
+    /// Decision targets after grouping (== worklist size when ungrouped).
+    pub targets: usize,
+    pub wall_seconds: f64,
+    /// Human-readable record of every pipeline stage and decision.
+    pub trace: Vec<String>,
+}
+
+impl PartitionPlan {
+    /// Specs that actually shard something (convenience for reports).
+    pub fn sharded_inputs(&self) -> impl Iterator<Item = &ShardSpec> {
+        self.input_specs.iter().filter(|s| !s.replicated())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let specs = |xs: &[ShardSpec]| Json::Arr(xs.iter().map(|s| s.to_json()).collect());
+        let c = &self.eval.collectives;
+        let r = &self.eval.runtime;
+        Json::obj(vec![
+            (
+                "mesh",
+                Json::Arr(
+                    self.mesh_axes
+                        .iter()
+                        .map(|(n, s)| {
+                            Json::obj(vec![
+                                ("axis", Json::str(n.clone())),
+                                ("size", Json::num(*s as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("inputs", specs(&self.input_specs)),
+            ("outputs", specs(&self.output_specs)),
+            (
+                "eval",
+                Json::obj(vec![
+                    ("peak_memory_bytes", Json::num(self.eval.memory.peak_bytes as f64)),
+                    ("arg_bytes", Json::num(self.eval.memory.arg_bytes as f64)),
+                    ("peak_node", Json::num(self.eval.memory.peak_node as f64)),
+                    ("fits_memory", Json::Bool(self.eval.fits_memory)),
+                    ("cost", Json::Num(self.eval.cost)),
+                    ("all_reduces", Json::num(c.all_reduce_count as f64)),
+                    ("all_reduce_bytes", Json::num(c.all_reduce_bytes as f64)),
+                    ("all_gathers", Json::num(c.all_gather_count as f64)),
+                    ("all_gather_bytes", Json::num(c.all_gather_bytes as f64)),
+                    ("compute_seconds", Json::Num(r.compute_seconds)),
+                    ("memory_seconds", Json::Num(r.memory_seconds)),
+                    ("op_seconds", Json::Num(r.op_seconds)),
+                    ("collective_seconds", Json::Num(r.collective_seconds)),
+                    ("total_flops", Json::Num(r.total_flops)),
+                ]),
+            ),
+            ("decisions", Json::num(self.decisions as f64)),
+            ("episodes_to_best", Json::num(self.episodes_to_best as f64)),
+            ("worklist_size", Json::num(self.worklist_size as f64)),
+            ("targets", Json::num(self.targets as f64)),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+            ("trace", Json::Arr(self.trace.iter().map(|t| Json::str(t.clone())).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<PartitionPlan> {
+        let specs = |key: &str| -> Result<Vec<ShardSpec>> {
+            j.get(key)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("plan missing '{key}'"))?
+                .iter()
+                .map(ShardSpec::from_json)
+                .collect()
+        };
+        let num = |obj: &Json, key: &str| -> Result<f64> {
+            obj.get(key).and_then(|v| v.as_f64()).ok_or_else(|| anyhow!("plan missing '{key}'"))
+        };
+        let e = j.get("eval").ok_or_else(|| anyhow!("plan missing 'eval'"))?;
+        let eval = Evaluation {
+            memory: MemoryEstimate {
+                peak_bytes: num(e, "peak_memory_bytes")? as i64,
+                arg_bytes: num(e, "arg_bytes")? as i64,
+                peak_node: num(e, "peak_node")? as usize,
+            },
+            runtime: RuntimeEstimate {
+                compute_seconds: num(e, "compute_seconds")?,
+                memory_seconds: num(e, "memory_seconds")?,
+                op_seconds: num(e, "op_seconds")?,
+                collective_seconds: num(e, "collective_seconds")?,
+                total_flops: num(e, "total_flops")?,
+            },
+            collectives: CollectiveStats {
+                all_reduce_count: num(e, "all_reduces")? as usize,
+                all_reduce_bytes: num(e, "all_reduce_bytes")? as i64,
+                all_gather_count: num(e, "all_gathers")? as usize,
+                all_gather_bytes: num(e, "all_gather_bytes")? as i64,
+            },
+            fits_memory: e
+                .get("fits_memory")
+                .and_then(|v| v.as_bool())
+                .ok_or_else(|| anyhow!("plan missing 'fits_memory'"))?,
+            cost: num(e, "cost")?,
+        };
+        let mut mesh_axes = Vec::new();
+        for m in j.get("mesh").and_then(|v| v.as_arr()).ok_or_else(|| anyhow!("plan missing 'mesh'"))? {
+            let name = m.get("axis").and_then(|v| v.as_str()).context("mesh axis missing name")?;
+            let size = m.get("size").and_then(|v| v.as_f64()).context("mesh axis missing size")?;
+            mesh_axes.push((name.to_string(), size as i64));
+        }
+        let trace = j
+            .get("trace")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|t| t.as_str().map(str::to_string)).collect())
+            .unwrap_or_default();
+        Ok(PartitionPlan {
+            mesh_axes,
+            input_specs: specs("inputs")?,
+            output_specs: specs("outputs")?,
+            eval,
+            decisions: num(j, "decisions")? as usize,
+            episodes_to_best: num(j, "episodes_to_best")? as usize,
+            worklist_size: num(j, "worklist_size")? as usize,
+            targets: num(j, "targets")? as usize,
+            wall_seconds: num(j, "wall_seconds")?,
+            trace,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn sample_plan() -> PartitionPlan {
+        PartitionPlan {
+            mesh_axes: vec![("batch".into(), 2), ("model".into(), 4)],
+            input_specs: vec![
+                ShardSpec {
+                    name: "tokens".into(),
+                    tilings: vec![("batch".into(), 0)],
+                },
+                ShardSpec { name: "causal_mask".into(), tilings: vec![] },
+                ShardSpec {
+                    name: "layer_0/mlp/w1".into(),
+                    tilings: vec![("model".into(), 1)],
+                },
+            ],
+            output_specs: vec![ShardSpec {
+                name: "output_0".into(),
+                tilings: vec![("batch".into(), 0)],
+            }],
+            eval: Evaluation {
+                memory: MemoryEstimate { peak_bytes: 123456789, arg_bytes: 1024, peak_node: 17 },
+                runtime: RuntimeEstimate {
+                    compute_seconds: 0.001,
+                    memory_seconds: 0.0025,
+                    op_seconds: 0.0025,
+                    collective_seconds: 0.0005,
+                    total_flops: 1.5e9,
+                },
+                collectives: CollectiveStats {
+                    all_reduce_count: 8,
+                    all_reduce_bytes: 4096,
+                    all_gather_count: 1,
+                    all_gather_bytes: 512,
+                },
+                fits_memory: true,
+                cost: 0.0030000001,
+            },
+            decisions: 7,
+            episodes_to_best: 42,
+            worklist_size: 25,
+            targets: 23,
+            wall_seconds: 1.25,
+            trace: vec![
+                "manual: axis \"batch\" excluded from search".into(),
+                "search: tile layer_0/mlp/w1 dim 1 on \"model\"".into(),
+            ],
+        }
+    }
+
+    #[test]
+    fn plan_json_round_trips_exactly() {
+        let plan = sample_plan();
+        let j = plan.to_json();
+        // through the compact AND the pretty printer
+        for text in [j.to_string(), j.pretty()] {
+            let back = PartitionPlan::from_json(&parse(&text).unwrap()).unwrap();
+            assert_eq!(back.mesh_axes, plan.mesh_axes);
+            assert_eq!(back.input_specs, plan.input_specs);
+            assert_eq!(back.output_specs, plan.output_specs);
+            assert_eq!(back.decisions, plan.decisions);
+            assert_eq!(back.episodes_to_best, plan.episodes_to_best);
+            assert_eq!(back.worklist_size, plan.worklist_size);
+            assert_eq!(back.targets, plan.targets);
+            assert_eq!(back.wall_seconds, plan.wall_seconds);
+            assert_eq!(back.trace, plan.trace);
+            assert_eq!(back.eval.memory.peak_bytes, plan.eval.memory.peak_bytes);
+            assert_eq!(back.eval.memory.arg_bytes, plan.eval.memory.arg_bytes);
+            assert_eq!(back.eval.memory.peak_node, plan.eval.memory.peak_node);
+            assert_eq!(back.eval.fits_memory, plan.eval.fits_memory);
+            assert_eq!(back.eval.cost, plan.eval.cost);
+            assert_eq!(back.eval.collectives, plan.eval.collectives);
+            assert_eq!(back.eval.runtime.compute_seconds, plan.eval.runtime.compute_seconds);
+            assert_eq!(back.eval.runtime.op_seconds, plan.eval.runtime.op_seconds);
+            assert_eq!(
+                back.eval.runtime.collective_seconds,
+                plan.eval.runtime.collective_seconds
+            );
+            assert_eq!(back.eval.runtime.total_flops, plan.eval.runtime.total_flops);
+        }
+    }
+
+    #[test]
+    fn shard_spec_round_trips_and_queries() {
+        let s = ShardSpec {
+            name: "layer_3/attn/wq".into(),
+            tilings: vec![("model".into(), 1), ("batch".into(), 0)],
+        };
+        let back = ShardSpec::from_json(&parse(&s.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, s);
+        assert!(s.tiled_on("model"));
+        assert!(!s.tiled_on("expert"));
+        assert!(!s.replicated());
+        let r = ShardSpec { name: "mask".into(), tilings: vec![] };
+        assert!(r.replicated());
+        assert_eq!(ShardSpec::from_json(&parse(&r.to_json().to_string()).unwrap()).unwrap(), r);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_plans() {
+        assert!(PartitionPlan::from_json(&parse("{}").unwrap()).is_err());
+        let j = sample_plan().to_json();
+        let mut m = match j {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.remove("eval");
+        assert!(PartitionPlan::from_json(&Json::Obj(m)).is_err());
+    }
+}

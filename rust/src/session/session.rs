@@ -1,0 +1,477 @@
+//! [`Session`]: owns the [`PartirProgram`], the cached [`Propagator`]
+//! (inside the program), and reusable [`DistMap`]/[`PropStats`] buffers,
+//! and executes composable [`Tactic`] pipelines over them.
+
+use super::plan::{PartitionPlan, ShardSpec};
+use super::tactic::{RankerSpec, ShardingConstraint, Tactic};
+use crate::cost::composite::{evaluate, CostWeights, Evaluation};
+use crate::ir::{Func, ValueId};
+use crate::learner::features::featurize;
+use crate::learner::ranker::{top_k_decisions, HeuristicRanker, PjrtRanker, Ranker};
+use crate::partir::actions::{action_valid, Action, DecisionState};
+use crate::partir::dist::DistMap;
+use crate::partir::mesh::Mesh;
+use crate::partir::program::PartirProgram;
+use crate::partir::propagate::PropStats;
+use crate::search::env::{RewriteEnv, SearchOptions};
+use crate::search::mcts::{search, MctsConfig};
+use crate::sim::device::Device;
+use crate::util::stats::fmt_bytes;
+use anyhow::{anyhow, bail, Result};
+
+/// Resolve a worklist according to a [`RankerSpec`]. Returns the list
+/// plus a label describing which ranker actually ran (the `Auto` spec
+/// falls back to the heuristic when artifacts or PJRT are absent).
+pub fn resolve_worklist(
+    program: &PartirProgram,
+    ranker: &RankerSpec,
+    k: usize,
+) -> Result<(Vec<ValueId>, &'static str)> {
+    match ranker {
+        RankerSpec::None => Ok((RewriteEnv::default_worklist(program), "none")),
+        RankerSpec::Heuristic => {
+            let g = featurize(&program.func, &program.mesh);
+            let r = HeuristicRanker { func: &program.func };
+            let scores = r.score(&g)?;
+            Ok((top_k_decisions(&program.func, &g, &scores, k), "heuristic"))
+        }
+        RankerSpec::Learned { hlo_path } => {
+            let rt = crate::runtime::pjrt::Runtime::new()?;
+            let r = PjrtRanker::load(&rt, hlo_path)?;
+            let g = featurize(&program.func, &program.mesh);
+            let scores = r.score(&g)?;
+            Ok((top_k_decisions(&program.func, &g, &scores, k), "learned(pjrt)"))
+        }
+        RankerSpec::Auto { hlo_path } => {
+            if crate::runtime::pjrt::pjrt_available() && std::path::Path::new(hlo_path).exists() {
+                resolve_worklist(program, &RankerSpec::Learned { hlo_path: hlo_path.clone() }, k)
+            } else {
+                let (wl, _) = resolve_worklist(program, &RankerSpec::Heuristic, k)?;
+                Ok((wl, "heuristic(fallback)"))
+            }
+        }
+    }
+}
+
+/// A partitioning session: one program + mesh, driven by tactics.
+pub struct Session {
+    pub program: PartirProgram,
+    pub device: Device,
+    pub weights: CostWeights,
+    pub options: SearchOptions,
+    // Reusable buffers (hot path: every stage replays into these).
+    dm: DistMap,
+    stats: PropStats,
+    // Pipeline state.
+    state: DecisionState,
+    /// `searchable` flag per mesh axis at construction, so `reset` can
+    /// undo `Manual` tactics' manual-axis markings.
+    initial_searchable: Vec<bool>,
+    worklist: Option<Vec<ValueId>>,
+    trace: Vec<String>,
+    decisions: usize,
+    episodes_to_best: usize,
+    worklist_size: usize,
+    targets: usize,
+    last_eval: Option<Evaluation>,
+}
+
+impl Session {
+    /// Paper Fig 5 entry point: a session with default device (TPU v3),
+    /// cost weights, and search options.
+    pub fn new(func: Func, mesh: Mesh) -> Session {
+        Session::with_options(
+            func,
+            mesh,
+            Device::tpu_v3(),
+            CostWeights::default(),
+            SearchOptions::default(),
+        )
+    }
+
+    pub fn with_options(
+        func: Func,
+        mesh: Mesh,
+        device: Device,
+        weights: CostWeights,
+        options: SearchOptions,
+    ) -> Session {
+        let program = PartirProgram::new(func, mesh);
+        let dm = DistMap::new(&program.func, &program.mesh);
+        let num_values = program.func.num_values();
+        let initial_searchable = program.mesh.axes.iter().map(|a| a.searchable).collect();
+        Session {
+            program,
+            device,
+            weights,
+            options,
+            dm,
+            stats: PropStats::default(),
+            state: DecisionState {
+                actions: Vec::new(),
+                atomic: crate::partir::actions::AtomicSet::with_capacity(num_values),
+            },
+            initial_searchable,
+            worklist: None,
+            trace: Vec::new(),
+            decisions: 0,
+            episodes_to_best: 0,
+            worklist_size: 0,
+            targets: 0,
+            last_eval: None,
+        }
+    }
+
+    pub fn mesh(&self) -> &Mesh {
+        &self.program.mesh
+    }
+
+    /// The decisions accumulated so far (manual pins + search results).
+    pub fn state(&self) -> &DecisionState {
+        &self.state
+    }
+
+    /// The current distribution map.
+    pub fn dist_map(&self) -> &DistMap {
+        &self.dm
+    }
+
+    /// The stage/decision trace accumulated so far.
+    pub fn trace(&self) -> &[String] {
+        &self.trace
+    }
+
+    /// Drop all decisions and pipeline state — including manual-axis
+    /// markings applied by `Manual` tactics — keeping the program and
+    /// cached propagator (sessions are reusable across pipelines).
+    pub fn reset(&mut self) {
+        let num_values = self.program.func.num_values();
+        for (axis, &searchable) in
+            self.program.mesh.axes.iter_mut().zip(&self.initial_searchable)
+        {
+            axis.searchable = searchable;
+        }
+        self.dm = DistMap::new(&self.program.func, &self.program.mesh);
+        self.stats = PropStats::default();
+        self.state = DecisionState {
+            actions: Vec::new(),
+            atomic: crate::partir::actions::AtomicSet::with_capacity(num_values),
+        };
+        self.worklist = None;
+        self.trace.clear();
+        self.decisions = 0;
+        self.episodes_to_best = 0;
+        self.worklist_size = 0;
+        self.targets = 0;
+        self.last_eval = None;
+    }
+
+    /// Execute a tactic pipeline and return the resulting plan. Stages
+    /// compose: decisions taken by earlier tactics constrain later ones,
+    /// and repeated `run` calls continue from the session's state (call
+    /// [`Session::reset`] for a fresh start).
+    pub fn run(&mut self, tactics: &[Tactic]) -> Result<PartitionPlan> {
+        let t0 = std::time::Instant::now();
+        for t in tactics {
+            self.apply(t)?;
+        }
+        Ok(self.plan(t0.elapsed().as_secs_f64()))
+    }
+
+    /// Execute one pipeline stage.
+    pub fn apply(&mut self, tactic: &Tactic) -> Result<()> {
+        match tactic {
+            Tactic::Manual { constraints, manual_axes } => {
+                self.apply_manual(constraints, manual_axes)
+            }
+            Tactic::Filter { ranker, top_k } => self.apply_filter(ranker, *top_k),
+            Tactic::Search { budget, seed, mcts } => self.apply_search(*budget, *seed, mcts),
+            Tactic::InferRest => {
+                self.apply_infer_rest();
+                Ok(())
+            }
+            Tactic::Lower => {
+                self.apply_lower();
+                Ok(())
+            }
+        }
+    }
+
+    fn resolve_axis(&self, name: &str) -> Result<crate::partir::mesh::AxisId> {
+        self.program.mesh.axis_by_name(name).ok_or_else(|| {
+            anyhow!("\"{name}\" is not a mesh axis (mesh is {})", self.program.mesh.describe())
+        })
+    }
+
+    fn resolve_arg(&self, name: &str) -> Result<ValueId> {
+        self.program
+            .func
+            .args
+            .iter()
+            .position(|a| a.name == name)
+            .map(|i| ValueId(i as u32))
+            .ok_or_else(|| {
+                anyhow!(
+                    "\"{name}\" is not a function argument ({} args, e.g. \"{}\")",
+                    self.program.func.num_args(),
+                    self.program.func.args.first().map(|a| a.name.as_str()).unwrap_or("")
+                )
+            })
+    }
+
+    fn apply_manual(
+        &mut self,
+        constraints: &[ShardingConstraint],
+        manual_axes: &[String],
+    ) -> Result<()> {
+        for axis_name in manual_axes {
+            let ax = self.resolve_axis(axis_name)?;
+            self.program.mesh.axes[ax.0].searchable = false;
+            self.trace.push(format!("manual: axis \"{axis_name}\" excluded from search"));
+        }
+        for c in constraints {
+            let v = self.resolve_arg(&c.name)?;
+            let axis = self.resolve_axis(&c.axis)?;
+            let action = Action::Tile { v, dim: c.dim, axis };
+            if !action_valid(&self.program.func, &self.program.mesh, &self.dm, &self.state, &action)
+            {
+                bail!(
+                    "manual constraint {}:{}:{} is not applicable \
+                     (dim out of range, size not divisible by the axis, or already tiled)",
+                    c.name,
+                    c.dim,
+                    c.axis
+                );
+            }
+            self.dm.set(v.index(), axis, c.dim);
+            self.state.actions.push(action);
+            self.decisions += 1;
+            self.stats.stuck_nodes.clear();
+            self.program.prop.forward(
+                &self.program.func,
+                &self.program.mesh,
+                &mut self.dm,
+                &mut self.stats,
+            );
+            let line =
+                format!("manual: {}", action.describe(&self.program.func, &self.program.mesh));
+            self.trace.push(line);
+            self.last_eval = None;
+        }
+        Ok(())
+    }
+
+    fn apply_filter(&mut self, ranker: &RankerSpec, top_k: usize) -> Result<()> {
+        let full = RewriteEnv::default_worklist(&self.program).len();
+        let (wl, label) = resolve_worklist(&self.program, ranker, top_k)?;
+        self.trace.push(format!("filter({label}): worklist {} -> {}", full, wl.len()));
+        self.worklist_size = wl.len();
+        self.worklist = Some(wl);
+        Ok(())
+    }
+
+    fn apply_search(&mut self, budget: usize, seed: u64, mcts: &MctsConfig) -> Result<()> {
+        let worklist = match &self.worklist {
+            Some(wl) => wl.clone(),
+            None => RewriteEnv::default_worklist(&self.program),
+        };
+        self.worklist_size = worklist.len();
+        let prior_actions = self.state.actions.len();
+        let result = {
+            let env = RewriteEnv::with_seed(
+                &self.program,
+                self.device.clone(),
+                self.weights.clone(),
+                self.options.clone(),
+                &worklist,
+                self.state.clone(),
+            );
+            self.targets = env.targets.len();
+            search(&env, budget, seed, mcts.clone())
+        };
+        self.episodes_to_best = result.episodes_to_best;
+        for a in result.best_state.actions.iter().skip(prior_actions) {
+            if matches!(a, Action::Tile { .. }) {
+                self.decisions += 1;
+            }
+            let line = format!("search: {}", a.describe(&self.program.func, &self.program.mesh));
+            self.trace.push(line);
+        }
+        self.state = result.best_state;
+        self.program.apply_into(&self.state, &mut self.dm, &mut self.stats);
+        self.trace.push(format!(
+            "search: {budget} episodes over {} targets, best at episode {}",
+            self.targets, result.episodes_to_best
+        ));
+        self.last_eval = None;
+        Ok(())
+    }
+
+    fn apply_infer_rest(&mut self) {
+        self.stats.stuck_nodes.clear();
+        self.program.prop.infer_rest(
+            &self.program.func,
+            &self.program.mesh,
+            &mut self.dm,
+            &mut self.stats,
+        );
+        self.state.actions.push(Action::InferRest);
+        self.trace.push(format!(
+            "infer-rest: {} assignments, {} stuck nodes",
+            self.stats.assigned,
+            self.stats.stuck_nodes.len()
+        ));
+        self.last_eval = None;
+    }
+
+    fn apply_lower(&mut self) {
+        let eval = evaluate(&self.program, &self.dm, &self.device, &self.weights);
+        self.trace.push(format!(
+            "lower: {} all-reduces + {} all-gathers ({} moved), peak {} (fits={})",
+            eval.collectives.all_reduce_count,
+            eval.collectives.all_gather_count,
+            fmt_bytes(eval.collectives.total_bytes() as f64),
+            fmt_bytes(eval.memory.peak_bytes as f64),
+            eval.fits_memory
+        ));
+        self.last_eval = Some(eval);
+    }
+
+    /// Materialise the plan for the current session state.
+    fn plan(&mut self, wall_seconds: f64) -> PartitionPlan {
+        let eval = match self.last_eval.clone() {
+            Some(e) => e,
+            None => evaluate(&self.program, &self.dm, &self.device, &self.weights),
+        };
+        let f = &self.program.func;
+        let mesh = &self.program.mesh;
+        let dm = &self.dm;
+        let spec_for = |v: ValueId, name: String| ShardSpec {
+            name,
+            tilings: dm
+                .tilings(v.index())
+                .into_iter()
+                .map(|(a, d)| (mesh.name(a).to_string(), d))
+                .collect(),
+        };
+        let input_specs = (0..f.num_args())
+            .map(|i| spec_for(ValueId(i as u32), f.args[i].name.clone()))
+            .collect();
+        let output_specs = f
+            .outputs
+            .iter()
+            .enumerate()
+            .map(|(i, &o)| spec_for(o, format!("output_{i}")))
+            .collect();
+        PartitionPlan {
+            mesh_axes: mesh.axes.iter().map(|a| (a.name.clone(), a.size)).collect(),
+            input_specs,
+            output_specs,
+            eval,
+            decisions: self.decisions,
+            episodes_to_best: self.episodes_to_best,
+            worklist_size: self.worklist_size,
+            targets: self.targets,
+            wall_seconds,
+            trace: self.trace.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::mlp::{build_mlp, MlpConfig};
+
+    fn batch_model_session() -> Session {
+        let m = build_mlp(&MlpConfig::small());
+        Session::new(m.func, Mesh::new(&[("batch", 2), ("model", 4)]))
+    }
+
+    #[test]
+    fn manual_tactic_pins_axis_and_sharding() {
+        let mut s = batch_model_session();
+        s.run(&[Tactic::Manual {
+            constraints: vec![ShardingConstraint::new("x", 0, "batch")],
+            manual_axes: vec!["batch".to_string()],
+        }])
+        .unwrap();
+        assert!(!s.mesh().axes[0].searchable, "batch must be manual");
+        let batch = s.mesh().axis_by_name("batch").unwrap();
+        assert_eq!(s.dist_map().get(0, batch), Some(0), "x pinned on batch");
+        assert_eq!(s.state().actions.len(), 1);
+        assert!(s.trace().iter().any(|t| t.contains("excluded from search")));
+    }
+
+    #[test]
+    fn manual_rejects_unknown_names_and_bad_dims() {
+        let mut s = batch_model_session();
+        assert!(s.run(&[Tactic::manual_axes(&["expert"])]).is_err());
+        assert!(s.run(&[Tactic::pin("nope", 0, "batch")]).is_err());
+        // dim out of range
+        assert!(s.run(&[Tactic::pin("x", 9, "batch")]).is_err());
+    }
+
+    #[test]
+    fn search_after_manual_respects_manual_axis() {
+        let mut s = batch_model_session();
+        let plan = s
+            .run(&[
+                Tactic::Manual {
+                    constraints: vec![ShardingConstraint::new("x", 0, "batch")],
+                    manual_axes: vec!["batch".to_string()],
+                },
+                Tactic::search(150, 7),
+                Tactic::InferRest,
+                Tactic::Lower,
+            ])
+            .unwrap();
+        // the pin survives search
+        let x = plan.input_specs.iter().find(|sp| sp.name == "x").unwrap();
+        assert!(x.tiled_on("batch"));
+        // parameters never land on the manual axis
+        for sp in &plan.input_specs {
+            if sp.name.ends_with("/w") || sp.name.ends_with("/b") {
+                assert!(!sp.tiled_on("batch"), "{} tiled on manual axis", sp.name);
+            }
+        }
+        assert!(plan.decisions >= 1);
+        assert!(plan.trace.iter().any(|t| t.starts_with("manual:")));
+        assert!(plan.trace.iter().any(|t| t.starts_with("search:")));
+    }
+
+    #[test]
+    fn pipeline_produces_serialisable_plan() {
+        let mut s = batch_model_session();
+        let plan = s.run(&Tactic::default_pipeline(100, 3)).unwrap();
+        let j = plan.to_json();
+        let back =
+            PartitionPlan::from_json(&crate::util::json::parse(&j.pretty()).unwrap()).unwrap();
+        assert_eq!(back.input_specs, plan.input_specs);
+        assert_eq!(back.eval.collectives, plan.eval.collectives);
+        assert_eq!(back.decisions, plan.decisions);
+    }
+
+    #[test]
+    fn sessions_are_reusable_after_reset() {
+        let mut s = batch_model_session();
+        let _ = s
+            .run(&[
+                Tactic::Manual {
+                    constraints: vec![ShardingConstraint::new("x", 0, "batch")],
+                    manual_axes: vec!["batch".to_string()],
+                },
+                Tactic::InferRest,
+            ])
+            .unwrap();
+        assert!(!s.state().actions.is_empty());
+        assert!(!s.mesh().axes[0].searchable);
+        s.reset();
+        assert!(s.state().actions.is_empty());
+        assert!(s.trace().is_empty());
+        assert!(s.mesh().axes[0].searchable, "reset must undo manual-axis markings");
+        let plan = s.run(&[Tactic::Lower]).unwrap();
+        assert_eq!(plan.decisions, 0);
+        assert!(plan.input_specs.iter().all(|sp| sp.replicated()));
+    }
+}

@@ -1,0 +1,138 @@
+//! Pipeline stages ([`Tactic`]) and user sharding constraints.
+//!
+//! A partitioning run is a sequence of tactics, mirroring PartIR's
+//! "composable sequence of tactics" and the paper's Figure 5 workflow:
+//! user-supplied constraints first, then inductive/search tactics.
+
+use crate::learner::ranker::TOP_K;
+use crate::search::mcts::MctsConfig;
+use anyhow::{anyhow, Result};
+
+/// A user-supplied sharding constraint: tile argument `name`'s tensor
+/// dimension `dim` along mesh axis `axis` before any search runs — the
+/// GSPMD-style per-tensor annotation that propagation then spreads.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardingConstraint {
+    pub name: String,
+    pub dim: usize,
+    pub axis: String,
+}
+
+impl ShardingConstraint {
+    pub fn new(name: &str, dim: usize, axis: &str) -> ShardingConstraint {
+        ShardingConstraint { name: name.to_string(), dim, axis: axis.to_string() }
+    }
+
+    /// Parse the CLI syntax `name:dim:axis`, e.g. `tokens:0:batch`.
+    pub fn parse(spec: &str) -> Result<ShardingConstraint> {
+        let parts: Vec<&str> = spec.trim().split(':').collect();
+        if parts.len() != 3 {
+            return Err(anyhow!("bad shard spec '{spec}' (want name:dim:axis)"));
+        }
+        let dim: usize = parts[1]
+            .parse()
+            .map_err(|_| anyhow!("bad shard spec '{spec}': dim '{}' is not an integer", parts[1]))?;
+        Ok(ShardingConstraint::new(parts[0], dim, parts[2]))
+    }
+}
+
+/// How the `Filter` tactic ranks the decision worklist (paper §2.3's
+/// learned top-k node filter, plus fallbacks).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RankerSpec {
+    /// No filtering: the full default worklist (MCTS-only mode, Fig 6).
+    None,
+    /// Deterministic size-based ranker (no artifacts required).
+    Heuristic,
+    /// The learned GNN ranker via PJRT; errors if unavailable.
+    Learned { hlo_path: String },
+    /// `Learned` when the artifact file exists and PJRT is built in,
+    /// `Heuristic` otherwise (the figure-harness default).
+    Auto { hlo_path: String },
+}
+
+/// One stage of a partitioning pipeline.
+#[derive(Debug, Clone)]
+pub enum Tactic {
+    /// User constraints applied before search (paper Fig 5): pin whole
+    /// mesh axes as manually managed (excluded from search) and/or seed
+    /// explicit `(name, dim, axis)` shardings that every later stage
+    /// builds on.
+    Manual { constraints: Vec<ShardingConstraint>, manual_axes: Vec<String> },
+    /// Rank decision candidates and keep the top-k (paper §2.3).
+    Filter { ranker: RankerSpec, top_k: usize },
+    /// MCTS over the (possibly filtered) worklist, seeded with every
+    /// decision taken so far.
+    Search { budget: usize, seed: u64, mcts: MctsConfig },
+    /// Infer tilings of the remaining values from the decided ones.
+    InferRest,
+    /// Lower to SPMD and record the cost evaluation + collective summary.
+    Lower,
+}
+
+impl Tactic {
+    /// `Manual` with only manual axes (no explicit shardings).
+    pub fn manual_axes(axes: &[&str]) -> Tactic {
+        Tactic::Manual {
+            constraints: Vec::new(),
+            manual_axes: axes.iter().map(|a| a.to_string()).collect(),
+        }
+    }
+
+    /// `Manual` pinning one sharding: `pin("tokens", 0, "batch")`.
+    pub fn pin(name: &str, dim: usize, axis: &str) -> Tactic {
+        Tactic::Manual {
+            constraints: vec![ShardingConstraint::new(name, dim, axis)],
+            manual_axes: Vec::new(),
+        }
+    }
+
+    /// `Filter` with the paper's default k.
+    pub fn filter(ranker: RankerSpec) -> Tactic {
+        Tactic::Filter { ranker, top_k: TOP_K }
+    }
+
+    /// `Search` with default MCTS hyperparameters.
+    pub fn search(budget: usize, seed: u64) -> Tactic {
+        Tactic::Search { budget, seed, mcts: MctsConfig::default() }
+    }
+
+    /// The standard pipeline: heuristic filter → search → infer-rest →
+    /// lower. Prepend a `Manual` tactic to constrain it.
+    pub fn default_pipeline(budget: usize, seed: u64) -> Vec<Tactic> {
+        vec![
+            Tactic::filter(RankerSpec::Heuristic),
+            Tactic::search(budget, seed),
+            Tactic::InferRest,
+            Tactic::Lower,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_shard_specs() {
+        let c = ShardingConstraint::parse("tokens:0:batch").unwrap();
+        assert_eq!(c, ShardingConstraint::new("tokens", 0, "batch"));
+        let c = ShardingConstraint::parse(" layer_0/attn/wq:1:model ").unwrap();
+        assert_eq!(c.name, "layer_0/attn/wq");
+        assert_eq!(c.dim, 1);
+        assert!(ShardingConstraint::parse("tokens:batch").is_err());
+        assert!(ShardingConstraint::parse("tokens:x:batch").is_err());
+    }
+
+    #[test]
+    fn constructors_build_expected_tactics() {
+        match Tactic::manual_axes(&["batch"]) {
+            Tactic::Manual { constraints, manual_axes } => {
+                assert!(constraints.is_empty());
+                assert_eq!(manual_axes, vec!["batch"]);
+            }
+            _ => panic!("wrong tactic"),
+        }
+        assert_eq!(Tactic::default_pipeline(10, 0).len(), 4);
+    }
+}

@@ -150,7 +150,7 @@ mod tests {
         let p = matmul_prog(Mesh::new(&[("model", 4)]));
         let st = DecisionState {
             actions: vec![Action::Tile { v: ValueId(1), dim: 1, axis: AxisId(0) }],
-            atomic: vec![],
+            atomic: Default::default(),
         };
         let (dm, _) = p.apply(&st);
         assert_eq!(node_flops(&p.func, &p.mesh, &dm, 0), 2.0 * 512.0 * 512.0 * 512.0 / 4.0);
@@ -168,7 +168,7 @@ mod tests {
                 Action::Tile { v: ValueId(0), dim: 1, axis: AxisId(0) },
                 Action::Tile { v: ValueId(1), dim: 0, axis: AxisId(0) },
             ],
-            atomic: vec![],
+            atomic: Default::default(),
         };
         let (dm, _) = p.apply(&st);
         let sp = lower(&p.func, &p.mesh, &p.prop, &dm);
@@ -185,7 +185,7 @@ mod tests {
 
         let st = DecisionState {
             actions: vec![Action::Tile { v: ValueId(1), dim: 1, axis: AxisId(0) }],
-            atomic: vec![],
+            atomic: Default::default(),
         };
         let (dm, _) = p.apply(&st);
         let sp = lower(&p.func, &p.mesh, &p.prop, &dm);

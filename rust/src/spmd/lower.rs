@@ -145,7 +145,7 @@ mod tests {
     }
 
     fn stats_for(p: &PartirProgram, actions: Vec<Action>) -> CollectiveStats {
-        let st = DecisionState { actions, atomic: vec![] };
+        let st = DecisionState { actions, atomic: Default::default() };
         let (dm, _) = p.apply(&st);
         let s = lower(&p.func, &p.mesh, &p.prop, &dm);
         CollectiveStats::from_collectives(&s.collectives)

@@ -70,7 +70,7 @@ mod tests {
                 Action::Tile { v: ValueId(0), dim: 1, axis: AxisId(0) },
                 Action::Tile { v: ValueId(1), dim: 0, axis: AxisId(0) },
             ],
-            atomic: vec![],
+            atomic: Default::default(),
         };
         let (dm, _) = p.apply(&st);
         let sp = lower(&p.func, &p.mesh, &p.prop, &dm);

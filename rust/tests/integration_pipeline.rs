@@ -120,7 +120,7 @@ fn search_beats_random_rollouts_at_equal_budget() {
 
 #[test]
 fn atomic_decision_keeps_value_replicated_through_search() {
-    use automap::partir::actions::{Action, DecisionState};
+    use automap::partir::actions::{Action, AtomicSet, DecisionState};
     let model = build_transformer(&TransformerConfig::tiny(1));
     let program = PartirProgram::new(model.func.clone(), Mesh::new(&[("model", 4)]));
     let wq = model.layers[0].wq;
@@ -130,7 +130,7 @@ fn atomic_decision_keeps_value_replicated_through_search() {
             Action::Tile { v: wq, dim: 1, axis: AxisId(0) }, // must be ignored
             Action::InferRest,
         ],
-        atomic: vec![wq],
+        atomic: AtomicSet::from(&[wq][..]),
     };
     let (dm, _) = program.apply(&st);
     assert!(!dm.is_tiled(wq.index()), "atomic value must stay replicated");

@@ -1,0 +1,146 @@
+//! Golden test for the Session/Tactic API (paper §3 headline + Fig 5):
+//! a `Manual` tactic pinning the batch axis (user-managed data
+//! parallelism, inputs pre-sharded) composed with `Search` still
+//! recovers Megatron column/row sharding on the model axis, measured —
+//! like the paper — through collective statistics.
+
+use automap::cost::composite::{evaluate, CostWeights};
+use automap::ir::ValueId;
+use automap::models::megatron;
+use automap::models::transformer::{build_transformer, TransformerConfig};
+use automap::partir::actions::{Action, DecisionState};
+use automap::partir::mesh::Mesh;
+use automap::partir::program::PartirProgram;
+use automap::search::env::SearchOptions;
+use automap::session::{PartitionPlan, Session, ShardingConstraint, Tactic};
+use automap::sim::device::Device;
+
+fn arg_id(program: &PartirProgram, name: &str) -> ValueId {
+    ValueId(
+        program.func.args.iter().position(|a| a.name == name).expect("arg exists") as u32,
+    )
+}
+
+#[test]
+fn manual_batch_axis_plus_search_recovers_megatron() {
+    let model = build_transformer(&TransformerConfig::tiny(2));
+    let mesh = Mesh::new(&[("batch", 2), ("model", 4)]);
+    let program = PartirProgram::new(model.func.clone(), mesh.clone());
+    let w = CostWeights::default();
+    let batch_ax = mesh.axis_by_name("batch").unwrap();
+    let model_ax = mesh.axis_by_name("model").unwrap();
+
+    // --- deterministic golden references ------------------------------
+    let batch_pins = vec![
+        Action::Tile { v: arg_id(&program, "tokens"), dim: 0, axis: batch_ax },
+        Action::Tile { v: arg_id(&program, "targets"), dim: 0, axis: batch_ax },
+    ];
+    let batch_only = DecisionState::with_actions(
+        batch_pins.iter().cloned().chain([Action::InferRest]).collect(),
+    );
+    let model_only = megatron::reference_state(&model, model_ax);
+    let combined = DecisionState::with_actions(
+        batch_pins.iter().cloned().chain(model_only.actions.iter().cloned()).collect(),
+    );
+
+    let dev0 = Device::tpu_v3();
+    let (dm_b, _) = program.apply(&batch_only);
+    let (dm_m, _) = program.apply(&model_only);
+    let (dm_c, _) = program.apply(&combined);
+    let e_batch = evaluate(&program, &dm_b, &dev0, &w);
+    let e_model = evaluate(&program, &dm_m, &dev0, &w);
+    let e_comb = evaluate(&program, &dm_c, &dev0, &w);
+
+    // Golden collective counts: Megatron has zero all-gathers, batch
+    // parallelism is gather-free, and because the axes tile disjoint
+    // tensor dims their all-reduce counts compose additively.
+    assert_eq!(e_model.collectives.all_gather_count, 0, "{:?}", e_model.collectives);
+    assert_eq!(e_batch.collectives.all_gather_count, 0, "{:?}", e_batch.collectives);
+    assert_eq!(e_comb.collectives.all_gather_count, 0, "{:?}", e_comb.collectives);
+    assert!(e_model.collectives.all_reduce_count >= 4, "{:?}", e_model.collectives);
+    assert!(
+        e_batch.collectives.all_reduce_count > 0,
+        "data parallelism must all-reduce gradients: {:?}",
+        e_batch.collectives
+    );
+    assert_eq!(
+        e_comb.collectives.all_reduce_count,
+        e_batch.collectives.all_reduce_count + e_model.collectives.all_reduce_count,
+        "batch + model collectives must compose additively"
+    );
+
+    // --- the paper's memory pressure ----------------------------------
+    let device = Device {
+        hbm_bytes: (e_comb.memory.peak_bytes as f64 * 1.3) as i64,
+        ..Device::tpu_v3()
+    };
+    let reference = evaluate(&program, &dm_c, &device, &w);
+
+    // --- Fig 5 pipeline: Manual(batch) + Search(model) ----------------
+    let mut session = Session::with_options(
+        model.func.clone(),
+        mesh,
+        device,
+        w,
+        SearchOptions::default(),
+    );
+    let plan = session
+        .run(&[
+            Tactic::Manual {
+                constraints: vec![
+                    ShardingConstraint::new("tokens", 0, "batch"),
+                    ShardingConstraint::new("targets", 0, "batch"),
+                ],
+                manual_axes: vec!["batch".to_string()],
+            },
+            Tactic::search(3000, 3),
+            Tactic::InferRest,
+            Tactic::Lower,
+        ])
+        .expect("pipeline");
+
+    let verdict = megatron::check(&plan.eval, &reference);
+    assert!(
+        verdict.is_megatron || verdict.near_megatron,
+        "expected (near-)Megatron under manual batch axis: found={:?} ref={:?}",
+        plan.eval.collectives,
+        reference.collectives
+    );
+
+    // The manual axis stayed the user's: pinned inputs are batch-sharded,
+    // parameters never are.
+    let tokens = plan.input_specs.iter().find(|s| s.name == "tokens").unwrap();
+    assert!(tokens.tiled_on("batch"), "pinned sharding must survive search");
+    for spec in &plan.input_specs {
+        let is_param = spec.name.contains("/w")
+            || spec.name == "embed"
+            || spec.name.contains("ln")
+            || spec.name.contains(".adam_");
+        if is_param {
+            assert!(
+                !spec.tiled_on("batch"),
+                "search/propagation assigned the manual batch axis to {}",
+                spec.name
+            );
+        }
+    }
+    // And search did place model-axis shardings on layer weights.
+    assert!(
+        plan.input_specs
+            .iter()
+            .any(|s| s.name.contains("/attn/") || s.name.contains("/mlp/"))
+            && plan
+                .input_specs
+                .iter()
+                .filter(|s| s.name.contains("/w") || s.name.contains("/attn/"))
+                .any(|s| s.tiled_on("model")),
+        "expected model-axis shardings on layer weights"
+    );
+
+    // The plan serialises and round-trips through util::json.
+    let text = plan.to_json().pretty();
+    let back = PartitionPlan::from_json(&automap::util::json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.input_specs, plan.input_specs);
+    assert_eq!(back.eval.collectives, plan.eval.collectives);
+    assert_eq!(back.trace, plan.trace);
+}
