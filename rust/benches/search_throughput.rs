@@ -1,0 +1,31 @@
+//! Service search-throughput benchmark (DESIGN.md §9): single-thread vs
+//! K-thread root-parallel executor episodes/sec, plus plan-cache hit
+//! latency. Writes `BENCH_search.json` at the repo root.
+//!
+//!     cargo bench --bench search_throughput --offline
+//!
+//! The tier-1 smoke test (`rust/tests/service_bench_smoke.rs`) runs the
+//! same measurement with a quick profile, so the JSON exists after every
+//! test run; this bench refreshes it with fuller numbers.
+
+use automap::service::throughput::{measure, write_report, ThroughputConfig};
+
+fn main() {
+    println!("== automap search throughput ==");
+    let cfg = ThroughputConfig::full();
+    let report = measure(&cfg).expect("throughput measurement failed");
+    println!(
+        "BENCH search_throughput/single    episodes_per_sec={:.0}",
+        report.single_episodes_per_sec
+    );
+    println!(
+        "BENCH search_throughput/workers{}  episodes_per_sec={:.0} speedup={:.2}x",
+        report.workers, report.multi_episodes_per_sec, report.speedup
+    );
+    println!(
+        "BENCH search_throughput/cache_hit median_ns={:.0} probes={}",
+        report.cache_hit_median_ns, report.cache_probes
+    );
+    let path = write_report(&report).expect("writing BENCH_search.json failed");
+    println!("wrote {}", path.display());
+}

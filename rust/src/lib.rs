@@ -10,7 +10,10 @@
 //! The user-facing entry point is [`session::Session`], which executes
 //! composable [`session::Tactic`] pipelines (manual constraints →
 //! filter → search → infer-rest → lower) and returns a serialisable
-//! [`session::PartitionPlan`]. See README.md for the quickstart.
+//! [`session::PartitionPlan`]. The [`service`] layer turns sessions into
+//! a concurrent planning service: fingerprint-keyed plan cache,
+//! root-parallel search executor, and a JSONL serve/batch front-end.
+//! See README.md for the quickstart.
 
 pub mod ir;
 pub mod coordinator;
@@ -20,6 +23,7 @@ pub mod models;
 pub mod partir;
 pub mod runtime;
 pub mod search;
+pub mod service;
 pub mod session;
 pub mod sim;
 pub mod spmd;

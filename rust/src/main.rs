@@ -5,12 +5,16 @@
 //!   gen-dataset  generate the ranker training set (best-strategy labels)
 //!   partition    run a Session tactic pipeline on a model and print the
 //!                partition plan (supports --pin / --shard constraints)
+//!   serve        read JSONL partition requests from stdin, answer on
+//!                stdout through the plan service (--stdin-jsonl)
+//!   batch        answer a JSONL request file through the plan service
 //!   fig6 / fig7 / fig8 / fig9   regenerate the paper's figures
 //!   all-figures  run every figure harness
 //!
 //! Common flags: --layers N --budgets a,b,c --attempts N --seed S
 //!               --config path.json --out-dir results
 //! Partition flags: --pin axis[,axis]  --shard name:dim:axis[,...]
+//! Service flags:   --pool N --cache-mb N --out responses.jsonl
 
 use automap::coordinator::config as cfgfile;
 use automap::coordinator::figures::{self, FigureSetup};
@@ -20,14 +24,16 @@ use automap::models::mlp::{build_mlp, MlpConfig};
 use automap::models::transformer::{build_transformer, TransformerConfig};
 use automap::partir::mesh::Mesh;
 use automap::search::mcts::MctsConfig;
+use automap::service::{run_batch, serve_jsonl, PartitionRequest, PlanService, ServiceConfig};
 use automap::session::{RankerSpec, Session, ShardingConstraint, Tactic};
 use automap::util::cli::Args;
 
 const VALUE_FLAGS: &[&str] = &[
     "layers", "budgets", "attempts", "seed", "out", "out-dir", "count", "axis", "model",
-    "budget", "filter", "ranker", "config", "d-model", "mesh", "pin", "shard",
+    "budget", "filter", "ranker", "config", "d-model", "mesh", "pin", "shard", "pool",
+    "cache-mb",
 ];
-const BOOL_FLAGS: &[&str] = &["paper", "grouping", "no-tying", "help"];
+const BOOL_FLAGS: &[&str] = &["paper", "grouping", "no-tying", "help", "stdin-jsonl"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -51,6 +57,8 @@ fn main() {
         "stats" => cmd_stats(&args),
         "gen-dataset" => cmd_gen_dataset(&args),
         "partition" => cmd_partition(&args),
+        "serve" => cmd_serve(&args),
+        "batch" => cmd_batch(&args),
         "fig6" | "fig7" => figure_cmd(&args, |s, d| figures::fig6_fig7(s, d).map(|_| ())),
         "fig8" => figure_cmd(&args, |s, d| figures::fig8(s, d).map(|_| ())),
         "fig9" => figure_cmd(&args, |s, d| figures::fig9(s, d).map(|_| ())),
@@ -74,7 +82,7 @@ fn main() {
 fn usage() {
     println!(
         "automap — reproduction of 'Automap: Towards Ergonomic Automated Parallelism'\n\
-         usage: automap <stats|gen-dataset|partition|fig6|fig7|fig8|fig9|all-figures> [flags]\n\
+         usage: automap <stats|gen-dataset|partition|serve|batch|fig6|fig7|fig8|fig9|all-figures> [flags]\n\
          flags: --layers N --budgets a,b,c --attempts N --seed S --paper\n\
                 --model mlp|transformer|graphnet --budget N --filter none|heuristic|learned\n\
                 --mesh model=4[,batch=2] --ranker artifacts/ranker.hlo.txt\n\
@@ -82,7 +90,10 @@ fn usage() {
          partition constraints (paper Fig 5):\n\
                 --pin axis[,axis]          mark mesh axes manual (excluded from search)\n\
                 --shard name:dim:axis[,..] pre-shard arguments before search,\n\
-                                           e.g. --shard x:0:batch,dense_0/w:1:model"
+                                           e.g. --shard x:0:batch,dense_0/w:1:model\n\
+         plan service (one JSON request per line; see README 'Serving partition plans'):\n\
+                serve --stdin-jsonl [--pool N] [--cache-mb N]\n\
+                batch requests.jsonl [--pool N] [--cache-mb N] [--out responses.jsonl]"
     );
 }
 
@@ -115,21 +126,67 @@ fn cmd_gen_dataset(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn parse_mesh(spec: &str) -> anyhow::Result<Mesh> {
-    let mut axes = Vec::new();
-    for part in spec.split(',') {
-        let (name, size) = part
-            .split_once('=')
-            .ok_or_else(|| anyhow::anyhow!("bad mesh spec '{part}' (want name=size)"))?;
-        axes.push((name, size.parse::<i64>()?));
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if !args.get_bool("stdin-jsonl") {
+        anyhow::bail!("serve reads JSONL requests from stdin; pass --stdin-jsonl to confirm");
     }
-    let named: Vec<(&str, i64)> = axes.iter().map(|(n, s)| (*n, *s)).collect();
-    Ok(Mesh::new(&named))
+    let pool = args.get_usize("pool", 2)?;
+    let svc = PlanService::new(ServiceConfig {
+        cache_bytes: args.get_usize("cache-mb", 64)? << 20,
+        ..ServiceConfig::default()
+    });
+    let stdout = std::sync::Mutex::new(std::io::stdout());
+    let stdin = std::io::stdin();
+    let summary = serve_jsonl(&svc, stdin.lock(), &stdout, pool)?;
+    eprintln!("serve: {}", summary.describe());
+    Ok(())
+}
+
+fn cmd_batch(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("batch needs a requests.jsonl path"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let mut requests = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = PartitionRequest::parse_line(line)
+            .map_err(|e| anyhow::anyhow!("{path}:{}: {e:#}", ln + 1))?;
+        requests.push(req);
+    }
+    let pool = args.get_usize("pool", 2)?;
+    let svc = PlanService::new(ServiceConfig {
+        cache_bytes: args.get_usize("cache-mb", 64)? << 20,
+        ..ServiceConfig::default()
+    });
+    let (responses, summary) = run_batch(&svc, &requests, pool, 2 * pool.max(1));
+    let mut out = String::new();
+    for r in &responses {
+        out.push_str(&r.to_json_line());
+        out.push('\n');
+    }
+    match args.get("out") {
+        Some(p) => {
+            std::fs::write(p, &out)?;
+            println!("wrote {p}");
+        }
+        None => print!("{out}"),
+    }
+    println!("batch: {}", summary.describe());
+    if summary.errors > 0 {
+        anyhow::bail!("{} of {} requests failed", summary.errors, summary.requests);
+    }
+    Ok(())
 }
 
 fn cmd_partition(args: &Args) -> anyhow::Result<()> {
     let model_kind = args.get_str("model", "transformer");
-    let mesh = parse_mesh(&args.get_str("mesh", "model=4"))?;
+    let mesh = Mesh::parse(&args.get_str("mesh", "model=4"))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
     let ranker = match args.get_str("filter", "heuristic").as_str() {
         "none" => RankerSpec::None,
         "heuristic" => RankerSpec::Heuristic,

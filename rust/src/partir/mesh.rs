@@ -40,6 +40,44 @@ impl Mesh {
         }
     }
 
+    /// Parse the CLI/request syntax `name=size[,name=size]`, e.g.
+    /// `"batch=2,model=4"`. Axis order in the spec is mesh order.
+    pub fn parse(spec: &str) -> Result<Mesh, String> {
+        let mut axes: Vec<(String, i64)> = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, size) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad mesh spec '{part}' (want name=size)"))?;
+            let size: i64 = size
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad mesh spec '{part}': size is not an integer"))?;
+            if size < 1 {
+                return Err(format!("bad mesh spec '{part}': size must be >= 1"));
+            }
+            let name = name.trim().to_string();
+            // Duplicate names would make axis_by_name silently resolve
+            // only the first, so a --pin/manual_axes on the duplicate
+            // would leave its twin searchable.
+            if axes.iter().any(|(n, _)| *n == name) {
+                return Err(format!("bad mesh spec '{spec}': duplicate axis \"{name}\""));
+            }
+            axes.push((name, size));
+        }
+        if axes.is_empty() {
+            return Err(format!("empty mesh spec '{spec}'"));
+        }
+        if axes.len() > MAX_AXES {
+            return Err(format!("mesh spec '{spec}': at most {MAX_AXES} axes supported"));
+        }
+        let named: Vec<(&str, i64)> = axes.iter().map(|(n, s)| (n.as_str(), *s)).collect();
+        Ok(Mesh::new(&named))
+    }
+
     /// Mark an axis as manually managed (excluded from search).
     pub fn manual(mut self, name: &str) -> Mesh {
         let ax = self.axis_by_name(name).expect("no such axis");
@@ -102,5 +140,19 @@ mod tests {
     #[should_panic]
     fn too_many_axes_rejected() {
         Mesh::new(&[("a", 2), ("b", 2), ("c", 2), ("d", 2), ("e", 2)]);
+    }
+
+    #[test]
+    fn parse_mesh_specs() {
+        let m = Mesh::parse("batch=2, model=4").unwrap();
+        assert_eq!(m.num_axes(), 2);
+        assert_eq!(m.axis_by_name("batch"), Some(AxisId(0)));
+        assert_eq!(m.size(AxisId(1)), 4);
+        assert!(Mesh::parse("").is_err());
+        assert!(Mesh::parse("batch").is_err());
+        assert!(Mesh::parse("batch=x").is_err());
+        assert!(Mesh::parse("batch=0").is_err());
+        assert!(Mesh::parse("a=2,b=2,c=2,d=2,e=2").is_err());
+        assert!(Mesh::parse("model=2,model=4").is_err(), "duplicate axis names rejected");
     }
 }

@@ -87,6 +87,33 @@ pub fn role_key(name: &str) -> String {
     out
 }
 
+/// Per-search-run memo of terminal-state evaluations, keyed by
+/// [`RewriteEnv::state_fingerprint`]. Scoped to one search run (one
+/// program + mesh + device + weights), so entries never need
+/// invalidation; size is bounded by the episode budget.
+#[derive(Debug, Default)]
+pub struct EvalMemo {
+    map: std::collections::HashMap<u64, Evaluation>,
+    /// Total evaluation requests routed through the memo.
+    pub lookups: usize,
+    /// Requests answered from the memo (full cost pipeline skipped).
+    pub hits: usize,
+}
+
+impl EvalMemo {
+    pub fn new() -> EvalMemo {
+        EvalMemo::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
 /// One search episode's mutable state.
 #[derive(Clone)]
 pub struct Episode {
@@ -280,6 +307,35 @@ impl<'a> RewriteEnv<'a> {
         }
     }
 
+    /// Canonical fingerprint of an episode's decision state: a stable
+    /// hash of the distribution map it induced. Two episodes that reached
+    /// the same per-value tiling assignment (regardless of action order)
+    /// get the same key, and evaluation is a pure function of the map —
+    /// which is what makes [`EvalMemo`] sound.
+    pub fn state_fingerprint(&self, ep: &Episode) -> u64 {
+        let mut h = crate::util::hash::Fnv64::new();
+        h.usize(ep.dm.num_axes);
+        for row in &ep.dm.d {
+            h.bytes(row);
+        }
+        h.finish()
+    }
+
+    /// Like [`RewriteEnv::evaluate_episode`], but consults `memo` first:
+    /// MCTS revisits of an identical terminal distribution skip the
+    /// lower + liveness + roofline pipeline entirely.
+    pub fn evaluate_episode_memo(&self, ep: &Episode, memo: &mut EvalMemo) -> Evaluation {
+        let key = self.state_fingerprint(ep);
+        memo.lookups += 1;
+        if let Some(e) = memo.map.get(&key) {
+            memo.hits += 1;
+            return e.clone();
+        }
+        let e = self.evaluate_episode(ep);
+        memo.map.insert(key, e.clone());
+        e
+    }
+
     /// Evaluate a terminal episode (applies auto infer-rest if enabled).
     pub fn evaluate_episode(&self, ep: &Episode) -> Evaluation {
         if self.options.auto_infer_rest {
@@ -402,6 +458,48 @@ mod tests {
             })
             .count();
         assert_eq!(tiled_wqs, 2);
+    }
+
+    #[test]
+    fn eval_memo_skips_repeat_terminal_states() {
+        let (program, device) = env_for(1, SearchOptions::default());
+        let wl = RewriteEnv::default_worklist(&program);
+        let env =
+            RewriteEnv::new(&program, device, CostWeights::default(), SearchOptions::default(), &wl);
+        let mut memo = EvalMemo::new();
+
+        // Two episodes that stop immediately share a terminal state.
+        let mut ep1 = env.reset();
+        env.step(&mut ep1, EnvAction::Stop);
+        let mut ep2 = env.reset();
+        env.step(&mut ep2, EnvAction::Stop);
+        assert_eq!(env.state_fingerprint(&ep1), env.state_fingerprint(&ep2));
+
+        let e1 = env.evaluate_episode_memo(&ep1, &mut memo);
+        let e2 = env.evaluate_episode_memo(&ep2, &mut memo);
+        assert_eq!(memo.lookups, 2);
+        assert_eq!(memo.hits, 1);
+        assert_eq!(memo.len(), 1);
+        assert_eq!(e1.cost, e2.cost);
+        // The memoized answer matches a fresh evaluation exactly.
+        let fresh = env.evaluate_episode(&ep2);
+        assert_eq!(e2.cost, fresh.cost);
+        assert_eq!(e2.collectives, fresh.collectives);
+
+        // A different terminal state is a different key.
+        let mut ep3 = env.reset();
+        let acts = env.legal_actions(&ep3);
+        let tile = acts
+            .iter()
+            .find(|a| matches!(a, EnvAction::Tile { .. }))
+            .copied()
+            .expect("some tile action must be legal");
+        env.step(&mut ep3, tile);
+        env.step(&mut ep3, EnvAction::Stop);
+        assert_ne!(env.state_fingerprint(&ep3), env.state_fingerprint(&ep1));
+        let _ = env.evaluate_episode_memo(&ep3, &mut memo);
+        assert_eq!(memo.hits, 1);
+        assert_eq!(memo.len(), 2);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! → backprop). The search returns the best terminal solution seen across
 //! all episodes, which is what Figures 6–9 score.
 
-use super::env::{Episode, EnvAction, RewriteEnv};
+use super::env::{Episode, EnvAction, EvalMemo, RewriteEnv};
 use crate::cost::composite::Evaluation;
 use crate::partir::actions::DecisionState;
 use crate::util::rng::Rng;
@@ -30,6 +30,10 @@ pub struct SearchResult {
     /// Episode index (1-based) at which the best solution was found.
     pub episodes_to_best: usize,
     pub episodes_run: usize,
+    /// Terminal-state evaluations requested during the run.
+    pub eval_lookups: usize,
+    /// Evaluations served from the per-run memo (cost pipeline skipped).
+    pub eval_memo_hits: usize,
 }
 
 /// MCTS hyperparameters.
@@ -94,6 +98,7 @@ impl<'e, 'p> Mcts<'e, 'p> {
     /// Run `budget` episodes; return the best solution found.
     pub fn run(&mut self, budget: usize, seed: u64) -> SearchResult {
         let mut rng = Rng::new(seed);
+        let mut memo = EvalMemo::new();
         let root_ep = self.env.reset();
         let root = self.make_node(&root_ep, &mut rng);
 
@@ -144,8 +149,9 @@ impl<'e, 'p> Mcts<'e, 'p> {
                 self.env.step(&mut ep, a);
             }
 
-            // Evaluate + backprop.
-            let eval = self.env.evaluate_episode(&ep);
+            // Evaluate + backprop. Revisited terminal states hit the memo
+            // and skip the lower + liveness + roofline pipeline.
+            let eval = self.env.evaluate_episode_memo(&ep, &mut memo);
             let reward = self.env.reward(&eval);
             for &nid in &path {
                 let n = &mut self.nodes[nid as usize];
@@ -164,11 +170,15 @@ impl<'e, 'p> Mcts<'e, 'p> {
                     best_reward: reward,
                     episodes_to_best: episode,
                     episodes_run: episode,
+                    eval_lookups: 0,
+                    eval_memo_hits: 0,
                 });
             }
         }
         let mut r = best.expect("budget must be >= 1");
         r.episodes_run = budget;
+        r.eval_lookups = memo.lookups;
+        r.eval_memo_hits = memo.hits;
         r
     }
 }
@@ -229,6 +239,28 @@ mod tests {
         let b = search(&env, 50, 7, MctsConfig::default());
         assert_eq!(a.best_reward, b.best_reward);
         assert_eq!(a.episodes_to_best, b.episodes_to_best);
+        assert_eq!(a.eval_memo_hits, b.eval_memo_hits);
+    }
+
+    #[test]
+    fn memo_counts_repeat_terminal_states_without_changing_results() {
+        let program = mlp_env_program();
+        let wl = RewriteEnv::default_worklist(&program);
+        let env = RewriteEnv::new(
+            &program,
+            Device::tpu_v3(),
+            CostWeights::default(),
+            SearchOptions::default(),
+            &wl,
+        );
+        let res = search(&env, 300, 11, MctsConfig::default());
+        // Every episode routes one evaluation through the memo…
+        assert_eq!(res.eval_lookups, 300);
+        // …and random rollouts revisit identical terminal states often
+        // enough that some evaluations are served from it. (The env-level
+        // test proves a memoized answer equals a fresh evaluation.)
+        assert!(res.eval_memo_hits > 0, "expected memo hits in 300 episodes");
+        assert!(res.eval_memo_hits < res.eval_lookups);
     }
 
     #[test]

@@ -1,10 +1,48 @@
 //! Automated search (paper §2.3): the rewrite environment, MCTS with
 //! UCT, and the multi-attempt experiment harness behind Figures 6–9.
+//!
+//! The search entry points are thread-safe in the sense the service
+//! executor (DESIGN.md §9) needs: [`search`] takes the environment by
+//! shared reference and owns all mutable state, so root-parallel callers
+//! run one search per worker thread with seeds derived by
+//! [`worker_seed`] — distinct, reproducible streams per `(seed, worker)`.
 
 pub mod env;
 pub mod experiment;
 pub mod mcts;
 
-pub use env::{EnvAction, Episode, RewriteEnv, SearchOptions};
+pub use env::{EnvAction, Episode, EvalMemo, RewriteEnv, SearchOptions};
 pub use experiment::{run_sweep, BudgetRow, ExperimentConfig};
 pub use mcts::{search, MctsConfig, SearchResult};
+
+/// Derive worker `w`'s RNG seed from a request seed. Uses two rounds of
+/// splitmix-style mixing so consecutive workers get uncorrelated streams,
+/// and `worker_seed(s, 0) != s` so a single-worker executor run is still
+/// distinguishable from a bare `search(env, budget, s, ..)` call.
+pub fn worker_seed(seed: u64, worker: usize) -> u64 {
+    let mut z = seed
+        .wrapping_add(0x9E3779B97F4A7C15)
+        .wrapping_add((worker as u64).wrapping_mul(0xBF58476D1CE4E5B9));
+    for _ in 0..2 {
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^= z >> 31;
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::worker_seed;
+
+    #[test]
+    fn worker_seeds_are_distinct_and_deterministic() {
+        let mut seen = std::collections::HashSet::new();
+        for w in 0..64 {
+            assert!(seen.insert(worker_seed(42, w)), "collision at worker {w}");
+            assert_eq!(worker_seed(42, w), worker_seed(42, w));
+        }
+        assert_ne!(worker_seed(42, 0), worker_seed(43, 0));
+        assert_ne!(worker_seed(42, 0), 42);
+    }
+}

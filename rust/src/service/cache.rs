@@ -1,0 +1,283 @@
+//! Sharded, lock-striped LRU plan cache (DESIGN.md §9).
+//!
+//! Plans are stored as their serialised JSON strings keyed by request
+//! [`Fingerprint`], so a cache hit returns the *byte-identical* document
+//! the original search produced — important for clients that diff or
+//! checksum plans. The map is split into `N` shards, each behind its own
+//! mutex, so concurrent front-end threads only contend when they touch
+//! the same shard. Eviction is byte-budgeted LRU per shard, backed by a
+//! tick-ordered index so each eviction is O(log n): inserts that push a
+//! shard over `byte_budget / N` evict least-recently-used entries first,
+//! and an entry larger than a whole shard's budget is refused outright
+//! (it would otherwise churn every resident entry out on its way to
+//! being evicted itself). Hit/miss/eviction counters are lock-free
+//! atomics; `misses` counts missed [`PlanCache::get`] probes only — the
+//! service's double-check probe is uncounted, so one request records at
+//! most one miss.
+
+use super::fingerprint::Fingerprint;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Fixed per-entry bookkeeping charge (key + tick + map overhead),
+/// added to the JSON length when accounting against the byte budget.
+const ENTRY_OVERHEAD: usize = 64;
+
+struct Entry {
+    plan_json: String,
+    /// Shard-local logical clock value at last touch (insert or hit);
+    /// also this entry's key in the shard's `lru` index.
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<u64, Entry>,
+    /// LRU index: `last_used` tick -> fingerprint. Ticks are unique per
+    /// shard (monotonic under the shard lock), so the first key is
+    /// always the least-recently-used entry.
+    lru: BTreeMap<u64, u64>,
+    tick: u64,
+    bytes: usize,
+}
+
+impl Shard {
+    fn touch(&mut self, key: u64) -> Option<String> {
+        self.tick += 1;
+        let tick = self.tick;
+        let e = self.map.get_mut(&key)?;
+        self.lru.remove(&e.last_used);
+        e.last_used = tick;
+        self.lru.insert(tick, key);
+        Some(e.plan_json.clone())
+    }
+
+    /// Evict LRU entries until `bytes <= budget`. Returns evictions.
+    fn evict_to(&mut self, budget: usize) -> u64 {
+        let mut evicted = 0;
+        while self.bytes > budget && !self.map.is_empty() {
+            let (&tick, &victim) = self.lru.iter().next().expect("lru index in sync with map");
+            self.lru.remove(&tick);
+            let e = self.map.remove(&victim).expect("victim present");
+            self.bytes -= e.plan_json.len() + ENTRY_OVERHEAD;
+            evicted += 1;
+        }
+        evicted
+    }
+}
+
+/// Aggregate cache statistics (counters are monotonic).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub bytes: usize,
+}
+
+pub struct PlanCache {
+    shards: Vec<Mutex<Shard>>,
+    shard_budget: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PlanCache {
+    /// `num_shards` lock stripes sharing `byte_budget` bytes of plan
+    /// JSON (split evenly across shards).
+    pub fn new(num_shards: usize, byte_budget: usize) -> PlanCache {
+        let n = num_shards.max(1);
+        PlanCache {
+            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
+            shard_budget: byte_budget / n,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, fp: Fingerprint) -> &Mutex<Shard> {
+        // The fingerprint is already well-mixed; low bits pick the stripe.
+        &self.shards[(fp.0 % self.shards.len() as u64) as usize]
+    }
+
+    /// Look up a plan; a hit refreshes the entry's LRU position.
+    pub fn get(&self, fp: Fingerprint) -> Option<String> {
+        let got = self.shard(fp).lock().expect("cache shard poisoned").touch(fp.0);
+        match &got {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        got
+    }
+
+    /// Like [`PlanCache::get`], but a miss is not counted. Used for the
+    /// service's double-check under the in-flight lock, so a request
+    /// that probes twice before searching still records one miss.
+    pub fn probe(&self, fp: Fingerprint) -> Option<String> {
+        let got = self.shard(fp).lock().expect("cache shard poisoned").touch(fp.0);
+        if got.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        got
+    }
+
+    /// Insert (or replace) a plan, then evict LRU entries while the
+    /// shard exceeds its byte budget. An entry larger than the whole
+    /// shard budget is refused without touching resident entries
+    /// (counted as an eviction).
+    pub fn put(&self, fp: Fingerprint, plan_json: String) {
+        let cost = plan_json.len() + ENTRY_OVERHEAD;
+        if cost > self.shard_budget {
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let mut shard = self.shard(fp).lock().expect("cache shard poisoned");
+        shard.tick += 1;
+        let tick = shard.tick;
+        if let Some(old) = shard.map.insert(fp.0, Entry { plan_json, last_used: tick }) {
+            shard.bytes -= old.plan_json.len() + ENTRY_OVERHEAD;
+            shard.lru.remove(&old.last_used);
+        }
+        shard.lru.insert(tick, fp.0);
+        shard.bytes += cost;
+        let evicted = shard.evict_to(self.shard_budget);
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut entries = 0;
+        let mut bytes = 0;
+        for s in &self.shards {
+            let s = s.lock().expect("cache shard poisoned");
+            debug_assert_eq!(s.map.len(), s.lru.len(), "lru index out of sync");
+            entries += s.map.len();
+            bytes += s.bytes;
+        }
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries,
+            bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp(x: u64) -> Fingerprint {
+        Fingerprint(x)
+    }
+
+    #[test]
+    fn get_put_roundtrip_and_counters() {
+        let c = PlanCache::new(4, 1 << 20);
+        assert_eq!(c.get(fp(1)), None);
+        c.put(fp(1), "{\"plan\":1}".to_string());
+        assert_eq!(c.get(fp(1)).as_deref(), Some("{\"plan\":1}"));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!(s.bytes > 0);
+    }
+
+    #[test]
+    fn probe_counts_hits_but_not_misses() {
+        let c = PlanCache::new(2, 1 << 20);
+        assert_eq!(c.probe(fp(1)), None);
+        assert_eq!(c.stats().misses, 0, "probe misses are uncounted");
+        c.put(fp(1), "{}".to_string());
+        assert!(c.probe(fp(1)).is_some());
+        assert_eq!(c.stats().hits, 1);
+    }
+
+    #[test]
+    fn lru_eviction_under_tiny_budget() {
+        // One shard so insertion order fully determines eviction order.
+        // Budget fits two small entries but not three.
+        let entry = "x".repeat(100);
+        let c = PlanCache::new(1, 2 * (100 + ENTRY_OVERHEAD));
+        c.put(fp(1), entry.clone());
+        c.put(fp(2), entry.clone());
+        assert_eq!(c.stats().evictions, 0);
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(c.get(fp(1)).is_some());
+        c.put(fp(3), entry.clone());
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+        assert!(c.get(fp(2)).is_none(), "LRU entry must have been evicted");
+        assert!(c.get(fp(1)).is_some());
+        assert!(c.get(fp(3)).is_some());
+    }
+
+    #[test]
+    fn oversized_entry_is_refused_without_evicting_residents() {
+        let small = "s".repeat(32);
+        let c = PlanCache::new(1, 2 * (100 + ENTRY_OVERHEAD));
+        c.put(fp(1), small.clone());
+        c.put(fp(9), "y".repeat(4096));
+        let s = c.stats();
+        assert_eq!(s.entries, 1, "resident entry must survive an oversized put");
+        assert_eq!(s.evictions, 1, "the refusal is counted");
+        assert!(c.get(fp(9)).is_none());
+        assert!(c.get(fp(1)).is_some());
+    }
+
+    #[test]
+    fn replacing_an_entry_does_not_leak_bytes() {
+        let c = PlanCache::new(1, 1 << 20);
+        c.put(fp(5), "a".repeat(500));
+        let b1 = c.stats().bytes;
+        c.put(fp(5), "b".repeat(500));
+        assert_eq!(c.stats().bytes, b1);
+        assert_eq!(c.stats().entries, 1);
+        assert_eq!(c.get(fp(5)).unwrap().as_bytes()[0], b'b');
+    }
+
+    #[test]
+    fn eviction_order_follows_touch_order_under_pressure() {
+        let entry = "e".repeat(100);
+        let per = 100 + ENTRY_OVERHEAD;
+        let c = PlanCache::new(1, 4 * per);
+        for i in 0..4 {
+            c.put(fp(i), entry.clone());
+        }
+        // Refresh 0 and 2; inserting two more must evict 1 then 3.
+        assert!(c.get(fp(0)).is_some());
+        assert!(c.get(fp(2)).is_some());
+        c.put(fp(10), entry.clone());
+        c.put(fp(11), entry.clone());
+        assert!(c.get(fp(1)).is_none());
+        assert!(c.get(fp(3)).is_none());
+        for k in [0, 2, 10, 11] {
+            assert!(c.get(fp(k)).is_some(), "key {k} should be resident");
+        }
+        assert_eq!(c.stats().evictions, 2);
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        let c = std::sync::Arc::new(PlanCache::new(8, 1 << 20));
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for i in 0..200u64 {
+                        let k = fp(t * 1000 + i);
+                        c.put(k, format!("{{\"v\":{i}}}"));
+                        assert!(c.get(k).is_some());
+                    }
+                });
+            }
+        });
+        assert_eq!(c.stats().entries, 800);
+    }
+}

@@ -1,0 +1,213 @@
+//! Root-parallel MCTS executor (DESIGN.md §9): one partition request
+//! fans out to `K` worker threads, each running an independent seeded
+//! search over its own session, and the best evaluation wins.
+//!
+//! Root parallelism (independent trees, merged at the end) was chosen
+//! over tree parallelism (one shared tree) because episodes are cheap
+//! and the tree is tiny — sharing it would serialise on a lock for no
+//! statistical gain, whereas independent trees with distinct RNG streams
+//! explore *more* of the space per wall-clock second.
+//!
+//! Determinism: worker `w` searches with [`worker_seed`]`(seed, w)`, the
+//! merge compares costs with a strict `<` so the lowest-indexed worker
+//! wins ties, and the winning plan's `wall_seconds` is zeroed (wall time
+//! is reported separately on [`ExecutorReport`]). A fixed `(seed, K)`
+//! therefore reproduces the same best plan — byte-identical JSON — on
+//! every run.
+
+use crate::cost::composite::CostWeights;
+use crate::ir::Func;
+use crate::partir::mesh::Mesh;
+use crate::search::env::SearchOptions;
+use crate::search::mcts::MctsConfig;
+use crate::search::worker_seed;
+use crate::service::fingerprint::{request_fingerprint, Fingerprint};
+use crate::session::{PartitionPlan, Session, Tactic};
+use crate::sim::device::Device;
+use anyhow::{anyhow, Result};
+
+/// One fully-resolved unit of work: everything a worker needs to run a
+/// search, plus the executor fan-out configuration.
+#[derive(Clone)]
+pub struct PlanJob {
+    pub func: Func,
+    pub mesh: Mesh,
+    pub device: Device,
+    pub weights: CostWeights,
+    pub options: SearchOptions,
+    /// Stages run before the search on every worker (Manual / Filter).
+    pub pre_tactics: Vec<Tactic>,
+    pub budget: usize,
+    pub seed: u64,
+    /// Worker thread count `K` (clamped to >= 1).
+    pub workers: usize,
+    pub mcts: MctsConfig,
+}
+
+/// Result of one root-parallel execution.
+pub struct ExecutorReport {
+    /// The winning plan (its `wall_seconds` is zeroed for determinism;
+    /// see `wall_seconds` here for the measured time).
+    pub plan: PartitionPlan,
+    /// Index of the worker whose plan won.
+    pub winner: usize,
+    /// Final cost per worker, in worker order.
+    pub worker_costs: Vec<f64>,
+    /// Total episodes run across all workers (`K * budget`).
+    pub episodes_total: usize,
+    /// Measured wall time of the whole fan-out.
+    pub wall_seconds: f64,
+}
+
+impl PlanJob {
+    /// The cache key covering everything that can change the plan.
+    pub fn fingerprint(&self) -> Fingerprint {
+        request_fingerprint(
+            &self.func,
+            &self.mesh,
+            &self.device,
+            &self.weights,
+            &self.options,
+            &self.pre_tactics,
+            self.budget,
+            self.seed,
+            self.workers,
+            &self.mcts,
+        )
+    }
+
+    /// The tactic pipeline worker `w` runs.
+    fn worker_tactics(&self, w: usize) -> Vec<Tactic> {
+        let mut tactics = self.pre_tactics.clone();
+        tactics.push(Tactic::Search {
+            budget: self.budget,
+            seed: worker_seed(self.seed, w),
+            mcts: self.mcts.clone(),
+        });
+        tactics.push(Tactic::InferRest);
+        tactics.push(Tactic::Lower);
+        tactics
+    }
+
+    /// Run the job: `K` scoped worker threads, each with a fresh session
+    /// (own program, propagator, and RNG stream), merged by best cost.
+    pub fn run(&self) -> Result<ExecutorReport> {
+        let t0 = std::time::Instant::now();
+        let k = self.workers.max(1);
+        let mut slots: Vec<Option<Result<PartitionPlan>>> = Vec::new();
+        slots.resize_with(k, || None);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..k)
+                .map(|w| {
+                    let job = &*self;
+                    scope.spawn(move || {
+                        let tactics = job.worker_tactics(w);
+                        Session::plan_for(
+                            job.func.clone(),
+                            job.mesh.clone(),
+                            job.device.clone(),
+                            job.weights.clone(),
+                            job.options.clone(),
+                            &tactics,
+                        )
+                    })
+                })
+                .collect();
+            for (w, h) in handles.into_iter().enumerate() {
+                slots[w] = Some(
+                    h.join().unwrap_or_else(|_| Err(anyhow!("search worker {w} panicked"))),
+                );
+            }
+        });
+
+        let mut worker_costs = Vec::with_capacity(k);
+        let mut best: Option<(usize, PartitionPlan)> = None;
+        for (w, slot) in slots.into_iter().enumerate() {
+            let plan = slot.expect("worker slot filled")?;
+            worker_costs.push(plan.eval.cost);
+            let better = match &best {
+                None => true,
+                // Strict `<`: ties go to the lowest worker index, which
+                // keeps the merge deterministic.
+                Some((_, b)) => plan.eval.cost < b.eval.cost,
+            };
+            if better {
+                best = Some((w, plan));
+            }
+        }
+        let (winner, mut plan) = best.expect("k >= 1 workers");
+        plan.wall_seconds = 0.0;
+        Ok(ExecutorReport {
+            plan,
+            winner,
+            worker_costs,
+            episodes_total: k * self.budget,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::mlp::{build_mlp, MlpConfig};
+    use crate::session::ShardingConstraint;
+
+    fn job(workers: usize, seed: u64) -> PlanJob {
+        PlanJob {
+            func: build_mlp(&MlpConfig::small()).func,
+            mesh: Mesh::new(&[("batch", 2), ("model", 4)]),
+            device: Device::tpu_v3(),
+            weights: CostWeights::default(),
+            options: SearchOptions::default(),
+            pre_tactics: vec![Tactic::Manual {
+                constraints: vec![ShardingConstraint::new("x", 0, "batch")],
+                manual_axes: vec!["batch".to_string()],
+            }],
+            budget: 60,
+            seed,
+            workers,
+            mcts: MctsConfig::default(),
+        }
+    }
+
+    #[test]
+    fn fixed_seed_and_k_reproduce_the_same_plan() {
+        let j = job(4, 7);
+        let a = j.run().unwrap();
+        let b = j.run().unwrap();
+        assert_eq!(a.winner, b.winner);
+        assert_eq!(a.worker_costs, b.worker_costs);
+        assert_eq!(
+            a.plan.to_json().to_string(),
+            b.plan.to_json().to_string(),
+            "root-parallel executor must be deterministic for fixed (seed, K)"
+        );
+        assert_eq!(a.episodes_total, 4 * 60);
+    }
+
+    #[test]
+    fn winner_has_the_minimum_cost() {
+        let r = job(4, 3).run().unwrap();
+        let min = r.worker_costs.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert_eq!(r.worker_costs[r.winner], min);
+        assert_eq!(r.plan.eval.cost, min);
+        assert_eq!(r.plan.wall_seconds, 0.0, "plan wall time is zeroed for determinism");
+        assert!(r.wall_seconds > 0.0);
+    }
+
+    #[test]
+    fn manual_constraints_survive_every_worker() {
+        let r = job(3, 5).run().unwrap();
+        let x = r.plan.input_specs.iter().find(|s| s.name == "x").unwrap();
+        assert!(x.tiled_on("batch"), "pre-tactic pin must survive the fan-out");
+    }
+
+    #[test]
+    fn different_seeds_change_the_fingerprint_not_determinism() {
+        let a = job(2, 1);
+        let b = job(2, 2);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.fingerprint(), job(2, 1).fingerprint());
+    }
+}

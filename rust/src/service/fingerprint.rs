@@ -1,0 +1,291 @@
+//! Canonical structural fingerprints for partition requests (DESIGN.md
+//! §9): a Merkle-style DAG hash of the program combined with the mesh,
+//! target device, user constraints, cost weights, and search
+//! configuration.
+//!
+//! The hash is *structural*, not positional: every value's hash is
+//! derived from its own content plus the hashes of its operands, never
+//! from raw `ValueId` numbering. Two builds of the same program whose
+//! independent nodes were created in a different order — and therefore
+//! carry different value ids — produce the same fingerprint, so
+//! semantically identical requests hit the same cache line. Dead nodes
+//! (unreachable from the outputs) do not contribute, making the
+//! fingerprint DCE-invariant as well.
+
+use crate::cost::composite::CostWeights;
+use crate::ir::Func;
+use crate::partir::mesh::Mesh;
+use crate::search::env::SearchOptions;
+use crate::search::mcts::MctsConfig;
+use crate::session::{RankerSpec, Tactic};
+use crate::sim::device::Device;
+use crate::util::hash::Fnv64;
+
+/// A 64-bit request fingerprint (the plan-cache key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Fingerprint(pub u64);
+
+impl Fingerprint {
+    /// Fixed-width lowercase hex, the wire form used in responses.
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+impl std::fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.hex())
+    }
+}
+
+/// Structural hash of a function: per-value Merkle hashes folded over
+/// the argument list (in signature order) and the output list.
+pub fn func_fingerprint(f: &Func) -> u64 {
+    let mut vh = vec![0u64; f.num_values()];
+    for (i, arg) in f.args.iter().enumerate() {
+        let mut h = Fnv64::new();
+        h.str("arg");
+        h.str(&arg.name);
+        h.str(arg.kind.name());
+        h.str(arg.ty.dtype.name());
+        for &d in &arg.ty.dims {
+            h.i64(d);
+        }
+        h.str(f.scope_path(arg.scope));
+        vh[i] = h.finish();
+    }
+    for (ni, node) in f.nodes.iter().enumerate() {
+        let mut h = Fnv64::new();
+        h.str("node");
+        // Debug form covers the op kind AND its attributes (dot dims,
+        // reduce dims, permutations, const values, ...), which `name()`
+        // alone would not.
+        h.str(&format!("{:?}", node.op));
+        h.str(node.ty.dtype.name());
+        for &d in &node.ty.dims {
+            h.i64(d);
+        }
+        for &inp in &node.inputs {
+            h.u64(vh[inp.index()]);
+        }
+        h.str(f.scope_path(node.scope));
+        vh[f.num_args() + ni] = h.finish();
+    }
+    let mut h = Fnv64::new();
+    h.str("func");
+    h.usize(f.num_args());
+    for i in 0..f.num_args() {
+        h.u64(vh[i]);
+    }
+    h.usize(f.outputs.len());
+    for &o in &f.outputs {
+        h.u64(vh[o.index()]);
+    }
+    h.finish()
+}
+
+fn hash_mesh(h: &mut Fnv64, mesh: &Mesh) {
+    h.str("mesh");
+    h.usize(mesh.num_axes());
+    for axis in &mesh.axes {
+        h.str(&axis.name);
+        h.i64(axis.size);
+        h.bool(axis.searchable);
+    }
+}
+
+fn hash_device(h: &mut Fnv64, d: &Device) {
+    h.str("device");
+    h.str(d.name);
+    h.f64(d.flops);
+    h.f64(d.hbm_bw);
+    h.f64(d.ici_bw);
+    h.f64(d.alpha);
+    h.i64(d.hbm_bytes);
+}
+
+fn hash_weights(h: &mut Fnv64, w: &CostWeights) {
+    h.str("weights");
+    h.f64(w.mem_overflow);
+    h.f64(w.comm_bytes);
+    h.f64(w.runtime);
+    h.f64(w.mem_bytes);
+}
+
+fn hash_options(h: &mut Fnv64, o: &SearchOptions) {
+    h.str("options");
+    h.usize(o.max_decisions);
+    h.bool(o.grouping);
+    h.bool(o.cross_layer_tying);
+    h.bool(o.auto_infer_rest);
+}
+
+fn hash_mcts(h: &mut Fnv64, m: &MctsConfig) {
+    h.str("mcts");
+    h.f64(m.exploration);
+    h.f64(m.rollout_stop_prob);
+}
+
+fn hash_ranker(h: &mut Fnv64, r: &RankerSpec) {
+    match r {
+        RankerSpec::None => {
+            h.str("ranker:none");
+        }
+        RankerSpec::Heuristic => {
+            h.str("ranker:heuristic");
+        }
+        RankerSpec::Learned { hlo_path } => {
+            h.str("ranker:learned");
+            h.str(hlo_path);
+        }
+        RankerSpec::Auto { hlo_path } => {
+            h.str("ranker:auto");
+            h.str(hlo_path);
+        }
+    }
+}
+
+fn hash_tactic(h: &mut Fnv64, t: &Tactic) {
+    match t {
+        Tactic::Manual { constraints, manual_axes } => {
+            h.str("manual");
+            h.usize(constraints.len());
+            for c in constraints {
+                h.str(&c.name);
+                h.usize(c.dim);
+                h.str(&c.axis);
+            }
+            h.usize(manual_axes.len());
+            for a in manual_axes {
+                h.str(a);
+            }
+        }
+        Tactic::Filter { ranker, top_k } => {
+            h.str("filter");
+            hash_ranker(h, ranker);
+            h.usize(*top_k);
+        }
+        Tactic::Search { budget, seed, mcts } => {
+            h.str("search");
+            h.usize(*budget);
+            h.u64(*seed);
+            hash_mcts(h, mcts);
+        }
+        Tactic::InferRest => {
+            h.str("infer-rest");
+        }
+        Tactic::Lower => {
+            h.str("lower");
+        }
+    }
+}
+
+/// Fingerprint of a full partition request: program structure, mesh,
+/// target device, pre-search tactics (manual constraints + filter),
+/// cost weights, search options, and the executor configuration.
+/// Everything that can change the returned plan is folded in — the
+/// device included, so replicas configured for different hardware never
+/// share a cache line — and a cache hit is always safe to serve.
+#[allow(clippy::too_many_arguments)]
+pub fn request_fingerprint(
+    func: &Func,
+    mesh: &Mesh,
+    device: &Device,
+    weights: &CostWeights,
+    options: &SearchOptions,
+    pre_tactics: &[Tactic],
+    budget: usize,
+    seed: u64,
+    workers: usize,
+    mcts: &MctsConfig,
+) -> Fingerprint {
+    let mut h = Fnv64::new();
+    h.str("automap-plan-request-v1");
+    h.u64(func_fingerprint(func));
+    hash_mesh(&mut h, mesh);
+    hash_device(&mut h, device);
+    hash_weights(&mut h, weights);
+    hash_options(&mut h, options);
+    h.usize(pre_tactics.len());
+    for t in pre_tactics {
+        hash_tactic(&mut h, t);
+    }
+    h.usize(budget);
+    h.u64(seed);
+    h.usize(workers);
+    hash_mcts(&mut h, mcts);
+    Fingerprint(h.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ArgKind, GraphBuilder, TensorType};
+    use crate::models::mlp::{build_mlp, MlpConfig};
+    use crate::session::ShardingConstraint;
+
+    /// Two builds of the same two-chain program with the independent
+    /// middle nodes created in opposite orders: node ids differ, the
+    /// structure does not.
+    fn two_chain(neg_first: bool) -> Func {
+        let mut b = GraphBuilder::new("two_chain");
+        let x = b.arg("x", TensorType::f32(&[8, 8]), ArgKind::Input);
+        let y = b.arg("y", TensorType::f32(&[8, 8]), ArgKind::Input);
+        let (a, c) = if neg_first {
+            let a = b.neg(x);
+            let c = b.abs(y);
+            (a, c)
+        } else {
+            let c = b.abs(y);
+            let a = b.neg(x);
+            (a, c)
+        };
+        b.output(a);
+        b.output(c);
+        b.finish()
+    }
+
+    #[test]
+    fn stable_across_value_id_renumbering() {
+        let f1 = two_chain(true);
+        let f2 = two_chain(false);
+        // The interleaved builds really do number the nodes differently…
+        assert_ne!(format!("{:?}", f1.nodes[0].op), format!("{:?}", f2.nodes[0].op));
+        // …yet the structural fingerprint is identical.
+        assert_eq!(func_fingerprint(&f1), func_fingerprint(&f2));
+    }
+
+    #[test]
+    fn distinguishes_programs_meshes_and_configs() {
+        let f = build_mlp(&MlpConfig::small()).func;
+        let f_other = two_chain(true);
+        assert_ne!(func_fingerprint(&f), func_fingerprint(&f_other));
+
+        let mesh_a = Mesh::new(&[("model", 4)]);
+        let mesh_b = Mesh::new(&[("model", 8)]);
+        let v3 = Device::tpu_v3();
+        let v2 = Device::tpu_v2();
+        let w = CostWeights::default();
+        let o = SearchOptions::default();
+        let m = MctsConfig::default();
+        let base = request_fingerprint(&f, &mesh_a, &v3, &w, &o, &[], 100, 0, 4, &m);
+        assert_eq!(base, request_fingerprint(&f, &mesh_a, &v3, &w, &o, &[], 100, 0, 4, &m));
+        assert_ne!(base, request_fingerprint(&f, &mesh_b, &v3, &w, &o, &[], 100, 0, 4, &m));
+        assert_ne!(base, request_fingerprint(&f, &mesh_a, &v2, &w, &o, &[], 100, 0, 4, &m));
+        assert_ne!(base, request_fingerprint(&f, &mesh_a, &v3, &w, &o, &[], 200, 0, 4, &m));
+        assert_ne!(base, request_fingerprint(&f, &mesh_a, &v3, &w, &o, &[], 100, 1, 4, &m));
+        assert_ne!(base, request_fingerprint(&f, &mesh_a, &v3, &w, &o, &[], 100, 0, 2, &m));
+
+        let pinned = [Tactic::Manual {
+            constraints: vec![ShardingConstraint::new("x", 0, "model")],
+            manual_axes: vec![],
+        }];
+        assert_ne!(base, request_fingerprint(&f, &mesh_a, &v3, &w, &o, &pinned, 100, 0, 4, &m));
+    }
+
+    #[test]
+    fn hex_form_is_fixed_width() {
+        assert_eq!(Fingerprint(0xab).hex(), "00000000000000ab");
+        assert_eq!(Fingerprint(u64::MAX).hex(), "ffffffffffffffff");
+    }
+}

@@ -1,0 +1,36 @@
+//! Partition-plan service (DESIGN.md §9): the layer that turns the
+//! one-shot [`Session`](crate::session::Session) pipeline into a
+//! reusable, concurrent planning service.
+//!
+//! The paper positions automap as infrastructure that "seamlessly
+//! integrates into existing compilers and existing user workflows" —
+//! compiler-adjacent serving, not a one-shot CLI. Users re-submit
+//! identical models constantly (Alpa's `@parallelize` workflow), so the
+//! service is built around a content fingerprint:
+//!
+//! * [`fingerprint`] — canonical structural hash of
+//!   `(Func, Mesh, constraints, cost weights, search config)`, stable
+//!   across value-id renumbering;
+//! * [`cache`] — sharded, lock-striped, byte-budgeted LRU of serialised
+//!   plans keyed by fingerprint;
+//! * [`executor`] — root-parallel MCTS fan-out (`K` workers, derived
+//!   seeds, deterministic best-cost merge);
+//! * [`request`] / [`server`] — JSONL request/response schema, in-flight
+//!   dedup of identical concurrent searches, and a bounded work queue
+//!   over a thread pool (`automap serve --stdin-jsonl`, `automap batch`);
+//! * [`throughput`] — the episodes/sec + cache-latency measurement
+//!   behind `BENCH_search.json`.
+
+pub mod cache;
+pub mod executor;
+pub mod fingerprint;
+pub mod request;
+pub mod server;
+pub mod throughput;
+
+pub use cache::{CacheStats, PlanCache};
+pub use executor::{ExecutorReport, PlanJob};
+pub use fingerprint::{func_fingerprint, request_fingerprint, Fingerprint};
+pub use request::{JobDefaults, PartitionRequest, PlanResponse};
+pub use server::{run_batch, serve_jsonl, PlanService, ServeSummary, ServiceConfig};
+pub use throughput::{measure, ThroughputConfig, ThroughputReport};

@@ -1,0 +1,379 @@
+//! Request/response wire schema for the partition-plan service
+//! (DESIGN.md §9), one JSON document per line (JSONL).
+//!
+//! Request:
+//!
+//! ```json
+//! {"id": "r1", "model": "mlp", "mesh": "batch=2,model=4",
+//!  "pin": ["batch"], "shard": ["x:0:batch"],
+//!  "budget": 300, "seed": 7, "workers": 4,
+//!  "filter": "heuristic", "top_k": 25, "layers": 4}
+//! ```
+//!
+//! Only `id` is required; everything else has defaults. Response:
+//!
+//! ```json
+//! {"id": "r1", "fingerprint": "89ab...", "cached": false,
+//!  "dedup": false, "plan": { ... PartitionPlan ... }}
+//! ```
+//!
+//! or `{"id": "r1", "error": "..."}` when the request is malformed or
+//! the pipeline fails. `plan` is the exact serialised [`PartitionPlan`];
+//! cache hits return it byte-identically.
+
+use super::executor::PlanJob;
+use crate::cost::composite::CostWeights;
+use crate::ir::Func;
+use crate::models::graphnet::{build_graphnet, GraphNetConfig};
+use crate::models::mlp::{build_mlp, MlpConfig};
+use crate::models::transformer::{build_transformer, TransformerConfig};
+use crate::partir::mesh::Mesh;
+use crate::search::env::SearchOptions;
+use crate::search::mcts::MctsConfig;
+use crate::session::{RankerSpec, ShardingConstraint, Tactic};
+use crate::sim::device::Device;
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One partition request, as parsed off the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionRequest {
+    pub id: String,
+    /// `mlp` | `transformer` | `graphnet`.
+    pub model: String,
+    /// Transformer depth (ignored by the other models).
+    pub layers: usize,
+    /// Mesh spec, `"name=size[,name=size]"`.
+    pub mesh: String,
+    /// Mesh axes excluded from search (paper Fig 5 `manual_axes`).
+    pub pin: Vec<String>,
+    /// Pre-shardings in CLI syntax `name:dim:axis`.
+    pub shard: Vec<String>,
+    /// Worklist filter: `none` | `heuristic`.
+    pub filter: String,
+    pub top_k: usize,
+    pub budget: usize,
+    pub seed: u64,
+    pub workers: usize,
+}
+
+impl Default for PartitionRequest {
+    fn default() -> Self {
+        PartitionRequest {
+            id: String::new(),
+            model: "transformer".to_string(),
+            layers: 2,
+            mesh: "model=4".to_string(),
+            pin: Vec::new(),
+            shard: Vec::new(),
+            filter: "none".to_string(),
+            top_k: crate::learner::ranker::TOP_K,
+            budget: 300,
+            seed: 0,
+            workers: 2,
+        }
+    }
+}
+
+fn str_list(j: &Json, key: &str) -> Result<Vec<String>> {
+    match j.get(key) {
+        None => Ok(Vec::new()),
+        Some(v) => v
+            .as_arr()
+            .with_context(|| format!("'{key}' must be an array of strings"))?
+            .iter()
+            .map(|s| {
+                s.as_str()
+                    .map(str::to_string)
+                    .with_context(|| format!("'{key}' must contain only strings"))
+            })
+            .collect(),
+    }
+}
+
+impl PartitionRequest {
+    pub fn from_json(j: &Json) -> Result<PartitionRequest> {
+        let d = PartitionRequest::default();
+        let id = j
+            .get("id")
+            .and_then(|v| v.as_str())
+            .context("request missing required string 'id'")?
+            .to_string();
+        // Absent fields default; present fields of the wrong type or
+        // value are hard errors (a silently-defaulted or truncated seed
+        // or worker count would change the fingerprint — and the plan —
+        // without warning). The JSON substrate carries numbers as f64,
+        // so exact integers are bounded by 2^53.
+        let get_str = |key: &str, def: &str| -> Result<String> {
+            match j.get(key) {
+                None => Ok(def.to_string()),
+                Some(v) => v
+                    .as_str()
+                    .map(str::to_string)
+                    .with_context(|| format!("'{key}' must be a string")),
+            }
+        };
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+        let get_uint = |key: &str, def: u64| -> Result<u64> {
+            match j.get(key) {
+                None => Ok(def),
+                Some(v) => {
+                    let x =
+                        v.as_f64().with_context(|| format!("'{key}' must be a number"))?;
+                    if !(0.0..=MAX_EXACT).contains(&x) || x.fract() != 0.0 {
+                        bail!("'{key}' must be a non-negative integer <= 2^53, got {x}");
+                    }
+                    Ok(x as u64)
+                }
+            }
+        };
+        let get_usize =
+            |key: &str, def: usize| -> Result<usize> { get_uint(key, def as u64).map(|x| x as usize) };
+        let seed = get_uint("seed", d.seed)?;
+        Ok(PartitionRequest {
+            id,
+            model: get_str("model", &d.model)?,
+            layers: get_usize("layers", d.layers)?,
+            mesh: get_str("mesh", &d.mesh)?,
+            pin: str_list(j, "pin")?,
+            shard: str_list(j, "shard")?,
+            filter: get_str("filter", &d.filter)?,
+            top_k: get_usize("top_k", d.top_k)?,
+            budget: get_usize("budget", d.budget)?.max(1),
+            seed,
+            workers: get_usize("workers", d.workers)?.max(1),
+        })
+    }
+
+    /// Parse one JSONL line.
+    pub fn parse_line(line: &str) -> Result<PartitionRequest> {
+        let j = parse(line.trim()).map_err(|e| anyhow!("bad request json: {e}"))?;
+        PartitionRequest::from_json(&j)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let strs = |xs: &[String]| Json::Arr(xs.iter().map(|s| Json::str(s.clone())).collect());
+        Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("model", Json::str(self.model.clone())),
+            ("layers", Json::num(self.layers as f64)),
+            ("mesh", Json::str(self.mesh.clone())),
+            ("pin", strs(&self.pin)),
+            ("shard", strs(&self.shard)),
+            ("filter", Json::str(self.filter.clone())),
+            ("top_k", Json::num(self.top_k as f64)),
+            ("budget", Json::num(self.budget as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("workers", Json::num(self.workers as f64)),
+        ])
+    }
+
+    fn build_func(&self) -> Result<Func> {
+        Ok(match self.model.as_str() {
+            "mlp" => build_mlp(&MlpConfig::small()).func,
+            "graphnet" => build_graphnet(&GraphNetConfig::small()).func,
+            "transformer" => build_transformer(&TransformerConfig::tiny(self.layers.max(1))).func,
+            other => bail!("unknown model '{other}' (want mlp|transformer|graphnet)"),
+        })
+    }
+
+    /// Resolve the request into a runnable [`PlanJob`] under the
+    /// service's device/cost/search configuration.
+    pub fn build_job(&self, defaults: &JobDefaults) -> Result<PlanJob> {
+        let func = self.build_func()?;
+        let mesh = Mesh::parse(&self.mesh).map_err(|e| anyhow!("{e}"))?;
+        let mut pre_tactics = Vec::new();
+        if !self.pin.is_empty() || !self.shard.is_empty() {
+            let constraints = self
+                .shard
+                .iter()
+                .map(|s| ShardingConstraint::parse(s))
+                .collect::<Result<Vec<_>>>()?;
+            pre_tactics.push(Tactic::Manual { constraints, manual_axes: self.pin.clone() });
+        }
+        match self.filter.as_str() {
+            "none" => {}
+            "heuristic" => pre_tactics
+                .push(Tactic::Filter { ranker: RankerSpec::Heuristic, top_k: self.top_k }),
+            other => bail!("unknown filter '{other}' (want none|heuristic)"),
+        }
+        Ok(PlanJob {
+            func,
+            mesh,
+            device: defaults.device.clone(),
+            weights: defaults.weights.clone(),
+            options: defaults.options.clone(),
+            pre_tactics,
+            budget: self.budget,
+            seed: self.seed,
+            workers: self.workers,
+            mcts: defaults.mcts.clone(),
+        })
+    }
+}
+
+/// Service-level configuration shared by every request: the device and
+/// cost model plans are evaluated against, plus search hyperparameters.
+#[derive(Clone)]
+pub struct JobDefaults {
+    pub device: Device,
+    pub weights: CostWeights,
+    pub options: SearchOptions,
+    pub mcts: MctsConfig,
+}
+
+impl Default for JobDefaults {
+    fn default() -> Self {
+        JobDefaults {
+            device: Device::tpu_v3(),
+            weights: CostWeights::default(),
+            options: SearchOptions::default(),
+            mcts: MctsConfig::default(),
+        }
+    }
+}
+
+/// One response line. Exactly one of `plan_json` / `error` is set.
+#[derive(Debug, Clone)]
+pub struct PlanResponse {
+    pub id: String,
+    /// Hex request fingerprint (empty on parse errors).
+    pub fingerprint: String,
+    /// Served without running a search (plan cache or in-flight dedup).
+    pub cached: bool,
+    /// Served by waiting on another request's in-flight search.
+    pub dedup: bool,
+    /// The serialised `PartitionPlan` (byte-identical across cache hits).
+    pub plan_json: Option<String>,
+    pub error: Option<String>,
+}
+
+impl PlanResponse {
+    pub fn error(id: &str, fingerprint: &str, msg: String) -> PlanResponse {
+        PlanResponse {
+            id: id.to_string(),
+            fingerprint: fingerprint.to_string(),
+            cached: false,
+            dedup: false,
+            plan_json: None,
+            error: Some(msg),
+        }
+    }
+
+    /// Serialise as one compact JSONL line. The plan document is
+    /// spliced in verbatim — it is already compact serialised JSON —
+    /// so a cache hit pays no re-parse/re-print and stays
+    /// byte-identical by construction.
+    pub fn to_json_line(&self) -> String {
+        let mut fields = vec![("id", Json::str(self.id.clone()))];
+        if !self.fingerprint.is_empty() {
+            fields.push(("fingerprint", Json::str(self.fingerprint.clone())));
+        }
+        match (&self.plan_json, &self.error) {
+            (Some(p), _) => {
+                fields.push(("cached", Json::Bool(self.cached)));
+                fields.push(("dedup", Json::Bool(self.dedup)));
+                let mut line = Json::obj(fields).to_string();
+                debug_assert!(line.ends_with('}'), "compact object form");
+                line.pop();
+                line.push_str(",\"plan\":");
+                line.push_str(p);
+                line.push('}');
+                line
+            }
+            (None, Some(e)) => {
+                fields.push(("error", Json::str(e.clone())));
+                Json::obj(fields).to_string()
+            }
+            (None, None) => {
+                fields.push(("error", Json::str("internal: empty response")));
+                Json::obj(fields).to_string()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_minimal_request_with_defaults() {
+        let r = PartitionRequest::parse_line("{\"id\":\"r1\"}").unwrap();
+        assert_eq!(r.id, "r1");
+        assert_eq!(r.model, "transformer");
+        assert_eq!(r.workers, 2);
+        assert!(r.pin.is_empty());
+    }
+
+    #[test]
+    fn parses_a_full_request_and_round_trips() {
+        let line = "{\"id\":\"a\",\"model\":\"mlp\",\"mesh\":\"batch=2,model=4\",\
+                    \"pin\":[\"batch\"],\"shard\":[\"x:0:batch\"],\"budget\":50,\
+                    \"seed\":9,\"workers\":3,\"filter\":\"heuristic\",\"top_k\":10}";
+        let r = PartitionRequest::parse_line(line).unwrap();
+        assert_eq!(r.mesh, "batch=2,model=4");
+        assert_eq!(r.pin, vec!["batch"]);
+        assert_eq!(r.shard, vec!["x:0:batch"]);
+        assert_eq!((r.budget, r.seed, r.workers, r.top_k), (50, 9, 3, 10));
+        let back = PartitionRequest::from_json(&parse(&r.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(PartitionRequest::parse_line("not json").is_err());
+        assert!(PartitionRequest::parse_line("{}").is_err(), "id is required");
+        assert!(PartitionRequest::parse_line("{\"id\":\"x\",\"pin\":\"batch\"}").is_err());
+        // Wrong-typed or wrong-valued fields must error, not silently
+        // default/truncate (that would change the plan unnoticed).
+        assert!(PartitionRequest::parse_line("{\"id\":\"x\",\"seed\":\"7\"}").is_err());
+        assert!(PartitionRequest::parse_line("{\"id\":\"x\",\"workers\":\"8\"}").is_err());
+        assert!(PartitionRequest::parse_line("{\"id\":\"x\",\"model\":3}").is_err());
+        assert!(PartitionRequest::parse_line("{\"id\":\"x\",\"seed\":-1}").is_err());
+        assert!(PartitionRequest::parse_line("{\"id\":\"x\",\"budget\":2.7}").is_err());
+        assert!(PartitionRequest::parse_line("{\"id\":\"x\",\"seed\":1e17}").is_err());
+        assert!(PartitionRequest::parse_line("{\"id\":\"x\",\"seed\":9007199254740992}").is_ok());
+    }
+
+    #[test]
+    fn build_job_resolves_models_and_tactics() {
+        let r = PartitionRequest {
+            id: "j".into(),
+            model: "mlp".into(),
+            mesh: "batch=2,model=4".into(),
+            pin: vec!["batch".into()],
+            shard: vec!["x:0:batch".into()],
+            filter: "heuristic".into(),
+            ..Default::default()
+        };
+        let job = r.build_job(&JobDefaults::default()).unwrap();
+        assert_eq!(job.mesh.num_axes(), 2);
+        assert_eq!(job.pre_tactics.len(), 2, "manual + filter");
+        let bad = PartitionRequest { model: "resnet".into(), ..r.clone() };
+        assert!(bad.build_job(&JobDefaults::default()).is_err());
+        let bad_mesh = PartitionRequest { mesh: "nope".into(), ..r };
+        assert!(bad_mesh.build_job(&JobDefaults::default()).is_err());
+    }
+
+    #[test]
+    fn response_lines_render_plan_or_error() {
+        let ok = PlanResponse {
+            id: "r".into(),
+            fingerprint: "00ff".into(),
+            cached: true,
+            dedup: false,
+            plan_json: Some("{\"decisions\":3}".into()),
+            error: None,
+        };
+        let line = ok.to_json_line();
+        let j = parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_str(), Some("r"));
+        assert_eq!(j.get("cached").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("plan").unwrap().get("decisions").unwrap().as_usize(), Some(3));
+        let err = PlanResponse::error("e", "", "boom".into());
+        let j = parse(&err.to_json_line()).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("boom"));
+        assert!(j.get("fingerprint").is_none());
+    }
+}

@@ -1,0 +1,523 @@
+//! Concurrent serving front-end (DESIGN.md §9): the [`PlanService`]
+//! answers partition requests through the fingerprint cache, deduplicates
+//! identical in-flight searches, and drains batches through a bounded
+//! work queue over a thread pool.
+//!
+//! Request lifecycle:
+//!
+//! 1. resolve the request into a [`PlanJob`](super::executor::PlanJob)
+//!    and fingerprint it;
+//! 2. probe the plan cache — a hit is served immediately;
+//! 3. probe the in-flight table — if an identical search is already
+//!    running, wait for its result instead of starting another
+//!    (two concurrent duplicate requests run ONE search);
+//! 4. otherwise become the leader: run the root-parallel executor,
+//!    publish the plan to the cache, wake all waiters.
+//!
+//! The leader publishes to the cache *before* clearing the in-flight
+//! entry, and would-be leaders re-probe the cache while holding the
+//! in-flight lock, so a fingerprint can never run two searches — the
+//! `searches` counter is exact, which the batch acceptance test pins.
+
+use super::cache::{CacheStats, PlanCache};
+use super::request::{JobDefaults, PartitionRequest, PlanResponse};
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Result slot one in-flight search publishes to its waiters.
+struct Inflight {
+    slot: Mutex<Option<Result<String, String>>>,
+    cv: Condvar,
+}
+
+impl Inflight {
+    fn new() -> Inflight {
+        Inflight { slot: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn publish(&self, r: Result<String, String>) {
+        *self.slot.lock().expect("inflight slot poisoned") = Some(r);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> Result<String, String> {
+        let mut g = self.slot.lock().expect("inflight slot poisoned");
+        while g.is_none() {
+            g = self.cv.wait(g).expect("inflight slot poisoned");
+        }
+        g.clone().expect("checked Some")
+    }
+}
+
+/// Service configuration.
+#[derive(Clone)]
+pub struct ServiceConfig {
+    pub defaults: JobDefaults,
+    /// Lock stripes in the plan cache.
+    pub cache_shards: usize,
+    /// Total cache byte budget across all shards.
+    pub cache_bytes: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            defaults: JobDefaults::default(),
+            cache_shards: 8,
+            cache_bytes: 64 << 20,
+        }
+    }
+}
+
+/// The partition-plan service: cache + in-flight dedup + executor.
+/// Shared by reference across front-end threads.
+pub struct PlanService {
+    pub cache: PlanCache,
+    defaults: JobDefaults,
+    inflight: Mutex<HashMap<u64, Arc<Inflight>>>,
+    searches: AtomicU64,
+    dedup_served: AtomicU64,
+}
+
+impl PlanService {
+    pub fn new(cfg: ServiceConfig) -> PlanService {
+        PlanService {
+            cache: PlanCache::new(cfg.cache_shards, cfg.cache_bytes),
+            defaults: cfg.defaults,
+            inflight: Mutex::new(HashMap::new()),
+            searches: AtomicU64::new(0),
+            dedup_served: AtomicU64::new(0),
+        }
+    }
+
+    /// Searches actually executed (exact: dedup + double-check make
+    /// duplicate fingerprints share one run).
+    pub fn searches_run(&self) -> u64 {
+        self.searches.load(Ordering::Relaxed)
+    }
+
+    /// Requests served by waiting on another request's in-flight search.
+    pub fn dedup_served(&self) -> u64 {
+        self.dedup_served.load(Ordering::Relaxed)
+    }
+
+    /// Requests served without running a search (plan-cache hits plus
+    /// in-flight dedup waits).
+    pub fn served_without_search(&self) -> u64 {
+        self.cache.stats().hits + self.dedup_served()
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Handle one parsed request end to end.
+    pub fn handle(&self, req: &PartitionRequest) -> PlanResponse {
+        let job = match req.build_job(&self.defaults) {
+            Ok(j) => j,
+            Err(e) => return PlanResponse::error(&req.id, "", format!("{e:#}")),
+        };
+        let fp = job.fingerprint();
+        let hex = fp.hex();
+
+        if let Some(plan_json) = self.cache.get(fp) {
+            return PlanResponse {
+                id: req.id.clone(),
+                fingerprint: hex,
+                cached: true,
+                dedup: false,
+                plan_json: Some(plan_json),
+                error: None,
+            };
+        }
+
+        // Join an identical in-flight search, or become its leader. The
+        // cache re-probe under the lock closes the window between the
+        // miss above and a concurrent leader's publish.
+        let (entry, leader) = {
+            let mut table = self.inflight.lock().expect("inflight table poisoned");
+            if let Some(existing) = table.get(&fp.0) {
+                (existing.clone(), false)
+            } else if let Some(plan_json) = self.cache.probe(fp) {
+                return PlanResponse {
+                    id: req.id.clone(),
+                    fingerprint: hex,
+                    cached: true,
+                    dedup: false,
+                    plan_json: Some(plan_json),
+                    error: None,
+                };
+            } else {
+                let fresh = Arc::new(Inflight::new());
+                table.insert(fp.0, fresh.clone());
+                (fresh, true)
+            }
+        };
+
+        if !leader {
+            return match entry.wait() {
+                Ok(plan_json) => {
+                    // Counted only on success, so served_without_search
+                    // never includes requests that came back as errors.
+                    self.dedup_served.fetch_add(1, Ordering::Relaxed);
+                    PlanResponse {
+                        id: req.id.clone(),
+                        fingerprint: hex,
+                        cached: true,
+                        dedup: true,
+                        plan_json: Some(plan_json),
+                        error: None,
+                    }
+                }
+                Err(e) => {
+                    let mut resp = PlanResponse::error(&req.id, &hex, e);
+                    resp.dedup = true;
+                    resp
+                }
+            };
+        }
+
+        self.searches.fetch_add(1, Ordering::Relaxed);
+        let outcome = match job.run() {
+            Ok(report) => {
+                let plan_json = report.plan.to_json().to_string();
+                self.cache.put(fp, plan_json.clone());
+                Ok(plan_json)
+            }
+            Err(e) => Err(format!("{e:#}")),
+        };
+        // Publish order: cache first (above), then clear the in-flight
+        // entry, then wake waiters — latecomers either find the entry
+        // (and wait) or re-probe the cache and hit.
+        self.inflight.lock().expect("inflight table poisoned").remove(&fp.0);
+        entry.publish(outcome.clone());
+
+        match outcome {
+            Ok(plan_json) => PlanResponse {
+                id: req.id.clone(),
+                fingerprint: hex,
+                cached: false,
+                dedup: false,
+                plan_json: Some(plan_json),
+                error: None,
+            },
+            Err(e) => PlanResponse::error(&req.id, &hex, e),
+        }
+    }
+
+    /// Parse and handle one JSONL line.
+    pub fn handle_line(&self, line: &str) -> PlanResponse {
+        match PartitionRequest::parse_line(line) {
+            Ok(req) => self.handle(&req),
+            Err(e) => PlanResponse::error("", "", format!("{e:#}")),
+        }
+    }
+}
+
+/// Bounded MPMC work queue: producers block when full, workers block
+/// when empty, `close` drains and releases everyone.
+struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    bound: usize,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    fn new(bound: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            bound: bound.max(1),
+        }
+    }
+
+    fn push(&self, item: T) {
+        let mut st = self.state.lock().expect("queue poisoned");
+        while st.items.len() >= self.bound && !st.closed {
+            st = self.not_full.wait(st).expect("queue poisoned");
+        }
+        st.items.push_back(item);
+        self.not_empty.notify_one();
+    }
+
+    fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().expect("queue poisoned");
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).expect("queue poisoned");
+        }
+    }
+
+    fn close(&self) {
+        self.state.lock().expect("queue poisoned").closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// Summary of a batch/serve run.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub requests: usize,
+    pub errors: usize,
+    pub searches: u64,
+    pub cache_hits: u64,
+    pub dedup_served: u64,
+    pub wall_seconds: f64,
+}
+
+impl ServeSummary {
+    pub fn describe(&self) -> String {
+        format!(
+            "{} requests: {} searches, {} cache hits, {} in-flight dedups, {} errors in {:.2}s",
+            self.requests,
+            self.searches,
+            self.cache_hits,
+            self.dedup_served,
+            self.errors,
+            self.wall_seconds
+        )
+    }
+}
+
+/// Run a batch of requests through `pool` worker threads over a bounded
+/// queue, preserving input order in the returned responses.
+pub fn run_batch(
+    service: &PlanService,
+    requests: &[PartitionRequest],
+    pool: usize,
+    queue_bound: usize,
+) -> (Vec<PlanResponse>, ServeSummary) {
+    let t0 = std::time::Instant::now();
+    let searches0 = service.searches_run();
+    let hits0 = service.cache.stats().hits;
+    let dedup0 = service.dedup_served();
+
+    let queue: BoundedQueue<usize> = BoundedQueue::new(queue_bound);
+    let results: Mutex<Vec<Option<PlanResponse>>> = Mutex::new(vec![None; requests.len()]);
+    std::thread::scope(|scope| {
+        for _ in 0..pool.max(1) {
+            scope.spawn(|| {
+                while let Some(i) = queue.pop() {
+                    let resp = service.handle(&requests[i]);
+                    results.lock().expect("results poisoned")[i] = Some(resp);
+                }
+            });
+        }
+        for i in 0..requests.len() {
+            queue.push(i);
+        }
+        queue.close();
+    });
+
+    let responses: Vec<PlanResponse> = results
+        .into_inner()
+        .expect("results poisoned")
+        .into_iter()
+        .map(|r| r.expect("every request handled"))
+        .collect();
+    let summary = ServeSummary {
+        requests: responses.len(),
+        errors: responses.iter().filter(|r| r.error.is_some()).count(),
+        searches: service.searches_run() - searches0,
+        cache_hits: service.cache.stats().hits - hits0,
+        dedup_served: service.dedup_served() - dedup0,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    };
+    (responses, summary)
+}
+
+/// Stream JSONL requests from `input`, writing one response line per
+/// request to `out` as each completes (use the `id` field to correlate;
+/// completion order is not input order). Returns the run summary.
+pub fn serve_jsonl<R: BufRead, W: Write + Send>(
+    service: &PlanService,
+    input: R,
+    out: &Mutex<W>,
+    pool: usize,
+) -> std::io::Result<ServeSummary> {
+    let t0 = std::time::Instant::now();
+    let searches0 = service.searches_run();
+    let hits0 = service.cache.stats().hits;
+    let dedup0 = service.dedup_served();
+    let requests = std::sync::atomic::AtomicU64::new(0);
+    let errors = std::sync::atomic::AtomicU64::new(0);
+
+    let queue: BoundedQueue<String> = BoundedQueue::new(2 * pool.max(1));
+    let io_err: Mutex<Option<std::io::Error>> = Mutex::new(None);
+    std::thread::scope(|scope| -> std::io::Result<()> {
+        for _ in 0..pool.max(1) {
+            scope.spawn(|| {
+                while let Some(line) = queue.pop() {
+                    let resp = service.handle_line(&line);
+                    requests.fetch_add(1, Ordering::Relaxed);
+                    if resp.error.is_some() {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let mut w = out.lock().expect("output poisoned");
+                    if let Err(e) = writeln!(w, "{}", resp.to_json_line()) {
+                        let mut slot = io_err.lock().expect("io_err poisoned");
+                        if slot.is_none() {
+                            *slot = Some(e);
+                        }
+                    }
+                }
+            });
+        }
+        for line in input.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(e) => {
+                    queue.close();
+                    return Err(e);
+                }
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            queue.push(line);
+        }
+        queue.close();
+        Ok(())
+    })?;
+    if let Some(e) = io_err.into_inner().expect("io_err poisoned") {
+        return Err(e);
+    }
+    Ok(ServeSummary {
+        requests: requests.load(Ordering::Relaxed) as usize,
+        errors: errors.load(Ordering::Relaxed) as usize,
+        searches: service.searches_run() - searches0,
+        cache_hits: service.cache.stats().hits - hits0,
+        dedup_served: service.dedup_served() - dedup0,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: &str, seed: u64) -> PartitionRequest {
+        PartitionRequest {
+            id: id.to_string(),
+            model: "mlp".to_string(),
+            mesh: "model=4".to_string(),
+            budget: 40,
+            seed,
+            workers: 2,
+            ..Default::default()
+        }
+    }
+
+    fn tiny_service() -> PlanService {
+        PlanService::new(ServiceConfig::default())
+    }
+
+    #[test]
+    fn first_request_searches_second_hits_cache_byte_identically() {
+        let svc = tiny_service();
+        let a = svc.handle(&req("a", 1));
+        assert!(a.error.is_none(), "{:?}", a.error);
+        assert!(!a.cached);
+        let b = svc.handle(&req("b", 1));
+        assert!(b.cached);
+        assert!(!b.dedup);
+        assert_eq!(svc.searches_run(), 1);
+        assert_eq!(a.plan_json, b.plan_json, "cache hit must be byte-identical");
+        assert_eq!(a.fingerprint, b.fingerprint);
+    }
+
+    #[test]
+    fn concurrent_identical_requests_share_one_search() {
+        let svc = tiny_service();
+        let r = req("c", 2);
+        std::thread::scope(|s| {
+            let h1 = s.spawn(|| svc.handle(&r));
+            let h2 = s.spawn(|| svc.handle(&r));
+            let (a, b) = (h1.join().unwrap(), h2.join().unwrap());
+            assert!(a.error.is_none() && b.error.is_none());
+            assert_eq!(a.plan_json, b.plan_json);
+        });
+        assert_eq!(svc.searches_run(), 1, "in-flight dedup must collapse duplicates");
+    }
+
+    #[test]
+    fn malformed_requests_become_error_responses() {
+        let svc = tiny_service();
+        let resp = svc.handle_line("{\"id\":\"x\",\"model\":\"resnet\"}");
+        assert!(resp.error.is_some());
+        assert!(resp.plan_json.is_none());
+        assert_eq!(svc.searches_run(), 0);
+        let resp = svc.handle_line("garbage");
+        assert!(resp.error.is_some());
+    }
+
+    #[test]
+    fn batch_preserves_order_and_counts() {
+        let svc = tiny_service();
+        let reqs: Vec<PartitionRequest> =
+            (0..6).map(|i| req(&format!("r{i}"), (i % 2) as u64)).collect();
+        let (responses, summary) = run_batch(&svc, &reqs, 3, 4);
+        assert_eq!(responses.len(), 6);
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, format!("r{i}"), "input order preserved");
+            assert!(r.error.is_none());
+        }
+        assert_eq!(summary.searches, 2, "two unique fingerprints");
+        assert_eq!(summary.cache_hits + summary.dedup_served, 4);
+        assert_eq!(summary.errors, 0);
+    }
+
+    #[test]
+    fn serve_jsonl_streams_responses() {
+        let svc = tiny_service();
+        let input = "{\"id\":\"a\",\"model\":\"mlp\",\"budget\":30,\"workers\":1}\n\
+                     \n\
+                     {\"id\":\"b\",\"model\":\"mlp\",\"budget\":30,\"workers\":1}\n\
+                     bad json\n";
+        let out = Mutex::new(Vec::<u8>::new());
+        let summary =
+            serve_jsonl(&svc, std::io::BufReader::new(input.as_bytes()), &out, 2).unwrap();
+        assert_eq!(summary.requests, 3, "blank lines are skipped");
+        assert_eq!(summary.errors, 1);
+        let text = String::from_utf8(out.into_inner().unwrap()).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        for line in text.lines() {
+            assert!(crate::util::json::parse(line).is_ok(), "bad response line: {line}");
+        }
+    }
+
+    #[test]
+    fn bounded_queue_backpressure_and_close() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..100 {
+                    q.push(i);
+                }
+                q.close();
+            });
+            let mut got = Vec::new();
+            while let Some(x) = q.pop() {
+                got.push(x);
+            }
+            assert_eq!(got.len(), 100);
+        });
+        assert!(q.pop().is_none(), "closed queue drains to None");
+    }
+}

@@ -1,0 +1,162 @@
+//! Search-throughput measurement shared by `benches/search_throughput.rs`
+//! and the tier-1 smoke test, so `BENCH_search.json` at the repo root is
+//! produced by whichever ran last with the same schema.
+//!
+//! Two numbers matter for the service (DESIGN.md §9):
+//!   * root-parallel scaling — episodes/sec with `K` workers vs one;
+//!   * cache-hit latency — how fast a repeat request is served.
+
+use super::executor::PlanJob;
+use super::request::{JobDefaults, PartitionRequest};
+use super::server::{PlanService, ServiceConfig};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// Measurement configuration.
+#[derive(Debug, Clone)]
+pub struct ThroughputConfig {
+    /// Episodes per worker per run.
+    pub budget: usize,
+    /// Multi-worker fan-out `K`.
+    pub workers: usize,
+    /// Timed repetitions per variant (best run wins, to shed scheduler
+    /// noise).
+    pub reps: usize,
+    /// Repeat requests timed against the cache.
+    pub cache_probes: usize,
+}
+
+impl ThroughputConfig {
+    /// Quick profile for the tier-1 smoke test (a few seconds).
+    pub fn quick() -> ThroughputConfig {
+        ThroughputConfig { budget: 800, workers: 4, reps: 3, cache_probes: 50 }
+    }
+
+    /// Fuller profile for `cargo bench`.
+    pub fn full() -> ThroughputConfig {
+        ThroughputConfig { budget: 2000, workers: 4, reps: 5, cache_probes: 500 }
+    }
+}
+
+/// Measured throughput numbers.
+#[derive(Debug, Clone)]
+pub struct ThroughputReport {
+    pub budget: usize,
+    pub workers: usize,
+    pub single_episodes_per_sec: f64,
+    pub multi_episodes_per_sec: f64,
+    /// `multi / single` episodes-per-second ratio.
+    pub speedup: f64,
+    pub cache_hit_median_ns: f64,
+    pub cache_probes: usize,
+}
+
+fn bench_job(workers: usize, budget: usize) -> PlanJob {
+    // The standard request the service benchmarks against: a small
+    // transformer, heavy enough that propagation dominates thread
+    // bookkeeping.
+    let req = PartitionRequest {
+        id: "bench".to_string(),
+        model: "transformer".to_string(),
+        layers: 2,
+        mesh: "model=4".to_string(),
+        budget,
+        seed: 42,
+        workers,
+        ..Default::default()
+    };
+    req.build_job(&JobDefaults::default()).expect("bench request is well-formed")
+}
+
+/// Best-of-`reps` episodes/sec for a `workers`-way executor run.
+fn episodes_per_sec(workers: usize, budget: usize, reps: usize) -> Result<f64> {
+    let job = bench_job(workers, budget);
+    let mut best = 0.0f64;
+    for _ in 0..reps.max(1) {
+        let report = job.run()?;
+        let eps = report.episodes_total as f64 / report.wall_seconds.max(1e-9);
+        best = best.max(eps);
+    }
+    Ok(best)
+}
+
+/// Run the full measurement.
+pub fn measure(cfg: &ThroughputConfig) -> Result<ThroughputReport> {
+    let single = episodes_per_sec(1, cfg.budget, cfg.reps)?;
+    let multi = episodes_per_sec(cfg.workers, cfg.budget, cfg.reps)?;
+
+    // Cache-hit latency: prime the service with one search, then time
+    // repeat requests (all hits).
+    let svc = PlanService::new(ServiceConfig::default());
+    let req = PartitionRequest {
+        id: "probe".to_string(),
+        model: "mlp".to_string(),
+        mesh: "model=4".to_string(),
+        budget: 60,
+        seed: 7,
+        workers: 1,
+        ..Default::default()
+    };
+    let primed = svc.handle(&req);
+    if let Some(e) = primed.error {
+        anyhow::bail!("cache priming failed: {e}");
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(cfg.cache_probes.max(1));
+    for _ in 0..cfg.cache_probes.max(1) {
+        let t0 = Instant::now();
+        let r = svc.handle(&req);
+        let dt = t0.elapsed().as_nanos() as f64;
+        assert!(r.cached, "probe request must be a cache hit");
+        samples.push(dt);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("no NaN timings"));
+    let cache_hit_median_ns = samples[samples.len() / 2];
+
+    Ok(ThroughputReport {
+        budget: cfg.budget,
+        workers: cfg.workers,
+        single_episodes_per_sec: single,
+        multi_episodes_per_sec: multi,
+        speedup: multi / single.max(1e-9),
+        cache_hit_median_ns,
+        cache_probes: cfg.cache_probes,
+    })
+}
+
+impl ThroughputReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("search_throughput")),
+            ("budget_per_worker", Json::num(self.budget as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("single_episodes_per_sec", Json::Num(self.single_episodes_per_sec)),
+            ("multi_episodes_per_sec", Json::Num(self.multi_episodes_per_sec)),
+            ("speedup", Json::Num(self.speedup)),
+            ("cache_hit_median_ns", Json::Num(self.cache_hit_median_ns)),
+            ("cache_probes", Json::num(self.cache_probes as f64)),
+        ])
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "single {:.0} eps/s | {} workers {:.0} eps/s ({:.2}x) | cache hit median {:.1}us",
+            self.single_episodes_per_sec,
+            self.workers,
+            self.multi_episodes_per_sec,
+            self.speedup,
+            self.cache_hit_median_ns / 1e3
+        )
+    }
+}
+
+/// Write the report to `BENCH_search.json` at the repo root (one level
+/// above the crate manifest), returning the path written.
+pub fn write_report(report: &ThroughputReport) -> Result<std::path::PathBuf> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .context("crate dir has a parent")?
+        .join("BENCH_search.json");
+    std::fs::write(&path, report.to_json().pretty()).context("writing BENCH_search.json")?;
+    Ok(path)
+}

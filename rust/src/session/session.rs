@@ -122,6 +122,21 @@ impl Session {
         }
     }
 
+    /// One-shot entry point for service workers (DESIGN.md §9): build a
+    /// session, run a tactic pipeline, return the plan. Each executor
+    /// worker thread calls this with its own cloned `Func`/`Mesh`, so no
+    /// session state is ever shared across threads.
+    pub fn plan_for(
+        func: Func,
+        mesh: Mesh,
+        device: Device,
+        weights: CostWeights,
+        options: SearchOptions,
+        tactics: &[Tactic],
+    ) -> Result<PartitionPlan> {
+        Session::with_options(func, mesh, device, weights, options).run(tactics)
+    }
+
     pub fn mesh(&self) -> &Mesh {
         &self.program.mesh
     }

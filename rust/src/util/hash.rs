@@ -1,0 +1,125 @@
+//! Stable structural hashing — substrate replacing `fxhash`/`siphasher`
+//! (registry unavailable offline; DESIGN.md §3).
+//!
+//! `std::hash::DefaultHasher` makes no cross-version stability promise,
+//! but service fingerprints (DESIGN.md §9) are compared across processes
+//! and potentially persisted, so the plan cache needs a hash whose value
+//! is pinned by this crate: FNV-1a with explicit 64-bit folding.
+
+/// FNV-1a 64-bit incremental hasher. Deterministic across platforms,
+/// processes, and releases; not cryptographic (cache keys only).
+#[derive(Debug, Clone)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64 { state: FNV_OFFSET }
+    }
+
+    #[inline]
+    pub fn byte(&mut self, b: u8) -> &mut Self {
+        self.state ^= b as u64;
+        self.state = self.state.wrapping_mul(FNV_PRIME);
+        self
+    }
+
+    #[inline]
+    pub fn bytes(&mut self, bs: &[u8]) -> &mut Self {
+        for &b in bs {
+            self.byte(b);
+        }
+        self
+    }
+
+    /// Hash a u64 as 8 little-endian bytes.
+    #[inline]
+    pub fn u64(&mut self, x: u64) -> &mut Self {
+        self.bytes(&x.to_le_bytes())
+    }
+
+    #[inline]
+    pub fn i64(&mut self, x: i64) -> &mut Self {
+        self.u64(x as u64)
+    }
+
+    #[inline]
+    pub fn usize(&mut self, x: usize) -> &mut Self {
+        self.u64(x as u64)
+    }
+
+    /// Hash an f64 by its bit pattern (distinguishes -0.0 from 0.0,
+    /// which is fine for cache keys — equal inputs hash equal).
+    #[inline]
+    pub fn f64(&mut self, x: f64) -> &mut Self {
+        self.u64(x.to_bits())
+    }
+
+    #[inline]
+    pub fn bool(&mut self, x: bool) -> &mut Self {
+        self.byte(x as u8)
+    }
+
+    /// Hash a string length-prefixed, so `("ab","c")` and `("a","bc")`
+    /// fold differently.
+    #[inline]
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes())
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// One-shot convenience: hash a byte slice.
+pub fn fnv64(bs: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.bytes(bs);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Reference FNV-1a 64 values.
+        assert_eq!(fnv64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn deterministic_and_order_sensitive() {
+        let mut a = Fnv64::new();
+        a.str("x").u64(7).f64(1.5);
+        let mut b = Fnv64::new();
+        b.str("x").u64(7).f64(1.5);
+        assert_eq!(a.finish(), b.finish());
+        let mut c = Fnv64::new();
+        c.u64(7).str("x").f64(1.5);
+        assert_ne!(a.finish(), c.finish());
+    }
+
+    #[test]
+    fn length_prefix_disambiguates_strings() {
+        let mut a = Fnv64::new();
+        a.str("ab").str("c");
+        let mut b = Fnv64::new();
+        b.str("a").str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+}

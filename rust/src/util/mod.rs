@@ -1,10 +1,12 @@
 //! Infrastructure substrates built from scratch because the crate
 //! registry is unreachable in this environment (DESIGN.md §3):
 //! PRNG (`rng`), JSON (`json`), CLI flags (`cli`), bench harness
-//! (`bench`), property testing (`prop`), and descriptive stats (`stats`).
+//! (`bench`), stable hashing (`hash`), property testing (`prop`), and
+//! descriptive stats (`stats`).
 
 pub mod bench;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;

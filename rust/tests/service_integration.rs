@@ -1,0 +1,130 @@
+//! End-to-end tests for the partition-plan service: the ISSUE acceptance
+//! batch (8 requests, 2 unique fingerprints → exactly 2 searches), fixed
+//! seed root-parallel determinism, byte-identical cache hits, and
+//! in-flight dedup.
+
+use automap::service::{
+    run_batch, PartitionRequest, PlanService, ServiceConfig,
+};
+use automap::util::json::parse;
+
+fn mlp_request(id: &str, seed: u64, workers: usize) -> PartitionRequest {
+    PartitionRequest {
+        id: id.to_string(),
+        model: "mlp".to_string(),
+        mesh: "batch=2,model=4".to_string(),
+        pin: vec!["batch".to_string()],
+        shard: vec!["x:0:batch".to_string()],
+        budget: 60,
+        seed,
+        workers,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn acceptance_batch_8_requests_2_fingerprints() {
+    // 8 requests alternating over 2 unique fingerprints (seed 0 / seed 1;
+    // ids differ but ids are not part of the fingerprint).
+    let requests: Vec<PartitionRequest> =
+        (0..8).map(|i| mlp_request(&format!("r{i}"), (i % 2) as u64, 2)).collect();
+    let svc = PlanService::new(ServiceConfig::default());
+    let (responses, summary) = run_batch(&svc, &requests, 2, 4);
+
+    assert_eq!(summary.requests, 8);
+    assert_eq!(summary.errors, 0);
+    assert_eq!(summary.searches, 2, "exactly one search per unique fingerprint");
+    assert_eq!(
+        summary.cache_hits + summary.dedup_served,
+        6,
+        "the other six must be served without a search"
+    );
+
+    // Responses come back in input order, and every response for the
+    // same fingerprint carries the byte-identical plan document.
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, format!("r{i}"));
+        assert!(r.error.is_none(), "r{i}: {:?}", r.error);
+    }
+    for parity in 0..2usize {
+        let group: Vec<_> = responses.iter().skip(parity).step_by(2).collect();
+        let first = group[0].plan_json.as_ref().unwrap();
+        for r in &group[1..] {
+            assert_eq!(r.plan_json.as_ref().unwrap(), first, "plans must be byte-identical");
+            assert_eq!(r.fingerprint, group[0].fingerprint);
+        }
+    }
+    assert_ne!(responses[0].fingerprint, responses[1].fingerprint);
+}
+
+#[test]
+fn fixed_seed_k4_executor_reproduces_the_same_plan() {
+    let req = mlp_request("det", 7, 4);
+    let svc_a = PlanService::new(ServiceConfig::default());
+    let svc_b = PlanService::new(ServiceConfig::default());
+    let a = svc_a.handle(&req);
+    let b = svc_b.handle(&req);
+    assert!(a.error.is_none() && b.error.is_none());
+    assert!(!a.cached && !b.cached, "fresh services, both runs searched");
+    assert_eq!(
+        a.plan_json, b.plan_json,
+        "fixed (seed, K) must reproduce the identical best plan"
+    );
+}
+
+#[test]
+fn cache_hit_returns_byte_identical_plan_json() {
+    let svc = PlanService::new(ServiceConfig::default());
+    let first = svc.handle(&mlp_request("a", 3, 2));
+    let second = svc.handle(&mlp_request("b", 3, 2));
+    assert!(!first.cached);
+    assert!(second.cached);
+    assert_eq!(first.plan_json, second.plan_json);
+    // The document parses and round-trips as a PartitionPlan.
+    let j = parse(first.plan_json.as_ref().unwrap()).unwrap();
+    let plan = automap::session::PartitionPlan::from_json(&j).unwrap();
+    assert!(plan.input_specs.iter().any(|s| s.name == "x" && s.tiled_on("batch")));
+    assert_eq!(plan.wall_seconds, 0.0, "service plans zero wall time for determinism");
+}
+
+#[test]
+fn concurrent_duplicates_run_one_search() {
+    let svc = PlanService::new(ServiceConfig::default());
+    let req = mlp_request("dup", 11, 2);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4).map(|_| s.spawn(|| svc.handle(&req))).collect();
+        let responses: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let first = responses[0].plan_json.as_ref().unwrap();
+        for r in &responses {
+            assert!(r.error.is_none());
+            assert_eq!(r.plan_json.as_ref().unwrap(), first);
+        }
+    });
+    assert_eq!(svc.searches_run(), 1, "four concurrent duplicates, one search");
+    assert_eq!(svc.served_without_search(), 3);
+}
+
+#[test]
+fn distinct_configurations_do_not_share_cache_lines() {
+    let svc = PlanService::new(ServiceConfig::default());
+    let base = svc.handle(&mlp_request("base", 5, 2));
+    // Different seed, budget, workers, mesh, or constraints → new search.
+    let variants = vec![
+        PartitionRequest { seed: 6, ..mlp_request("v1", 5, 2) },
+        PartitionRequest { budget: 61, ..mlp_request("v2", 5, 2) },
+        PartitionRequest { workers: 3, ..mlp_request("v3", 5, 2) },
+        PartitionRequest { mesh: "batch=2,model=2".to_string(), ..mlp_request("v4", 5, 2) },
+        PartitionRequest { pin: vec![], ..mlp_request("v5", 5, 2) },
+    ];
+    let mut fingerprints = vec![base.fingerprint.clone()];
+    for v in &variants {
+        let r = svc.handle(v);
+        assert!(r.error.is_none(), "{:?}: {:?}", v.id, r.error);
+        assert!(!r.cached, "{} must not hit another config's cache line", v.id);
+        fingerprints.push(r.fingerprint.clone());
+    }
+    fingerprints.sort();
+    fingerprints.dedup();
+    assert_eq!(fingerprints.len(), 6, "all six configurations are distinct");
+    assert_eq!(svc.searches_run(), 6);
+}
