@@ -1,0 +1,31 @@
+func @all_ops(%arg0: tensor<4x8xf32> {input, name = "x"}, %arg1: tensor<4x8xf32> {input, name = "y"}, %arg2: tensor<10x8xf32> {param, name = "table"}, %arg3: tensor<6xi32> {input, name = "ids"}, %arg4: tensor<6x8xf32> {input, name = "data"})
+    -> (tensor<40xf32>, tensor<10x4xf32>, tensor<6x8xf32>, tensor<5x8xf32>, tensor<10xf32>) {
+  %0 = const {value = 1.5} : tensor<4x8xf32>
+  %1 = iota {dim = 1} : tensor<4x8xf32>
+  %2 = add %arg0, %arg1 : tensor<4x8xf32>
+  %3 = sub %2, %0 : tensor<4x8xf32>
+  %4 = mul %3, %1 : tensor<4x8xf32>
+  %5 = div %4, %0 : tensor<4x8xf32>
+  %6 = max %5, %arg0 : tensor<4x8xf32>
+  %7 = min %6, %arg1 : tensor<4x8xf32>
+  %8 = neg %7 : tensor<4x8xf32>
+  %9 = exp %8 : tensor<4x8xf32>
+  %10 = log %9 : tensor<4x8xf32>
+  %11 = tanh %10 : tensor<4x8xf32>
+  %12 = abs %11 : tensor<4x8xf32>
+  %13 = sqrt %12 : tensor<4x8xf32>
+  %14 = rsqrt %12 : tensor<4x8xf32>
+  %15 = compare %13, %14 {dir = Lt} : tensor<4x8xi1>
+  %16 = select %15, %13, %14 : tensor<4x8xf32>
+  %17 = convert %16 : tensor<4x8xbf16>
+  %18 = convert %17 : tensor<4x8xf32>
+  %19 = dot %18, %arg2 {batch = []x[], contract = [1]x[1]} : tensor<4x10xf32>
+  %20 = reduce_sum %19 {dims = [1]} : tensor<4xf32>
+  %21 = reduce_max %19 {dims = [0]} : tensor<10xf32>
+  %22 = broadcast_in_dim %20 {broadcast_dims = [0]} : tensor<4x10xf32>
+  %23 = reshape %22 : tensor<40xf32>
+  %24 = transpose %19 {perm = [1, 0]} : tensor<10x4xf32>
+  %25 = gather %arg2, %arg3 : tensor<6x8xf32>
+  %26 = segment_sum %arg4, %arg3 {num = 5} : tensor<5x8xf32>
+  return %23, %24, %25, %26, %21
+}

@@ -1,0 +1,7 @@
+func @linear(%arg0: tensor<8x16xf32> {input, name = "x"}, %arg1: tensor<16x64xf32> {param, name = "w"}, %arg2: tensor<64xf32> {param, name = "b"})
+    -> (tensor<8x64xf32>) {
+  %0 = dot %arg0, %arg1 {batch = []x[], contract = [1]x[0]} : tensor<8x64xf32>
+  %1 = broadcast_in_dim %arg2 {broadcast_dims = [1]} : tensor<8x64xf32>
+  %2 = add %0, %1 : tensor<8x64xf32>
+  return %2
+}

@@ -1,0 +1,7 @@
+func @scalars(%arg0: tensor<f32> {input, name = "s"}, %arg1: tensor<2x3xi32> {const, name = "m"}, %arg2: tensor<2x3xf32> {opt_state, name = "adam.m"})
+    -> (tensor<6xi32>, tensor<2x3xf32>) {
+  %0 = broadcast_in_dim %arg0 {broadcast_dims = []} : tensor<2x3xf32>
+  %1 = reshape %arg1 : tensor<6xi32>
+  %2 = mul %0, %arg2 : tensor<2x3xf32>
+  return %1, %2
+}

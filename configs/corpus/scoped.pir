@@ -1,0 +1,8 @@
+func @scoped(%arg0: tensor<4x8xf32> {input, name = "x"}, %arg1: tensor<8x8xf32> {param, name = "enc/dense_0/w", scope = "enc/dense_0"}, %arg2: tensor<8xf32> {param, name = "enc/dense_0/b", scope = "enc/dense_0"})
+    -> (tensor<4x8xf32>) {
+  %0 = dot %arg0, %arg1 {batch = []x[], contract = [1]x[0]} : tensor<4x8xf32>  // enc/dense_0
+  %1 = broadcast_in_dim %arg2 {broadcast_dims = [1]} : tensor<4x8xf32>  // enc/dense_0
+  %2 = add %0, %1 : tensor<4x8xf32>  // enc/dense_0
+  %3 = tanh %2 : tensor<4x8xf32>  // enc/act
+  return %3
+}

@@ -1,0 +1,7 @@
+func @zero_arg()
+    -> (tensor<4xf32>, tensor<4xf32>) {
+  %0 = const {value = 2.5} : tensor<4xf32>
+  %1 = iota {dim = 0} : tensor<4xf32>
+  %2 = add %0, %1 : tensor<4xf32>
+  return %2, %0
+}

@@ -55,7 +55,8 @@ fn main() {
 
         // SPMD lowering + liveness + full evaluation.
         b.bench(&format!("spmd_lower/{layers}L"), || {
-            black_box(lower(&program.func, &program.mesh, &program.prop, &dm_done).collectives.len());
+            let sp = lower(&program.func, &program.mesh, &program.prop, &dm_done);
+            black_box(sp.collectives.len());
         });
         b.bench(&format!("liveness_peak_memory/{layers}L"), || {
             black_box(peak_memory(&program.func, &program.mesh, &dm_done).peak_bytes);

@@ -143,8 +143,11 @@ impl Automap {
 
     /// Build the (possibly filtered) worklist.
     pub fn worklist(&self) -> Result<Vec<crate::ir::ValueId>> {
-        let (wl, _) =
-            resolve_worklist(&self.program, &self.options.filter.to_ranker_spec(), self.options.top_k)?;
+        let (wl, _) = resolve_worklist(
+            &self.program,
+            &self.options.filter.to_ranker_spec(),
+            self.options.top_k,
+        )?;
         Ok(wl)
     }
 

@@ -119,7 +119,10 @@ pub fn fig6_fig7(setup: &FigureSetup, out_dir: &str) -> Result<(Vec<BudgetRow>, 
         ..Default::default()
     };
 
-    println!("Figure 6: Megatron discovery success rate ({} layers, {} attempts)", setup.layers, setup.attempts);
+    println!(
+        "Figure 6: Megatron discovery success rate ({} layers, {} attempts)",
+        setup.layers, setup.attempts
+    );
     let (mcts_rows, _) = run_sweep(&program, &model, AxisId(0), &mk_cfg(), None);
     print_series("mcts-only", &mcts_rows, false);
 
@@ -235,7 +238,8 @@ pub fn stats(cfg: &TransformerConfig) -> Json {
         ("paper_memory_gb", Json::num(26.0)),
     ]);
     println!(
-        "setup stats: layers={} args={} (paper 1150) ops={} (paper >50k, XLA granularity) peak={} (paper ~26GB)",
+        "setup stats: layers={} args={} (paper 1150) ops={} (paper >50k, XLA granularity) \
+         peak={} (paper ~26GB)",
         cfg.layers,
         model.func.num_args(),
         model.func.num_nodes(),

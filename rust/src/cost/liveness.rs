@@ -24,8 +24,9 @@ pub struct MemoryEstimate {
 
 /// Compute the peak per-device memory of `f` under distribution `dm`.
 pub fn peak_memory(f: &Func, mesh: &Mesh, dm: &DistMap) -> MemoryEstimate {
-    let bytes: Vec<i64> =
-        (0..f.num_values()).map(|v| f.value_type(crate::ir::ValueId(v as u32)).byte_size()).collect();
+    let bytes: Vec<i64> = (0..f.num_values())
+        .map(|v| f.value_type(crate::ir::ValueId(v as u32)).byte_size())
+        .collect();
     peak_memory_cached(f, mesh, dm, &bytes)
 }
 

@@ -91,6 +91,48 @@ pub struct Func {
     pub scopes: Vec<String>,
 }
 
+/// Structural equality: two functions are equal when they have the same
+/// name, arguments (name, type, kind, scope *path*), nodes (op, inputs,
+/// type, scope *path*), and outputs. The scope intern tables themselves
+/// are representation detail — interning order and unreferenced entries
+/// do not affect equality — which is what makes `parse(print(f)) == f`
+/// well-defined for the textual round-trip (`ir::parser`).
+///
+/// `Const` values compare by bit pattern with all NaNs identified
+/// (float `==` would make any NaN-bearing program unequal to itself,
+/// breaking the round-trip contract; the printer collapses NaN payloads
+/// to the canonical `NaN` anyway). `-0.0` and `0.0` stay distinct, as
+/// they do textually.
+fn op_eq(a: &OpKind, b: &OpKind) -> bool {
+    match (a, b) {
+        (OpKind::Const { value: x }, OpKind::Const { value: y }) => {
+            x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan())
+        }
+        _ => a == b,
+    }
+}
+
+impl PartialEq for Func {
+    fn eq(&self, other: &Func) -> bool {
+        self.name == other.name
+            && self.outputs == other.outputs
+            && self.args.len() == other.args.len()
+            && self.args.iter().zip(&other.args).all(|(a, b)| {
+                a.name == b.name
+                    && a.ty == b.ty
+                    && a.kind == b.kind
+                    && self.scope_path(a.scope) == other.scope_path(b.scope)
+            })
+            && self.nodes.len() == other.nodes.len()
+            && self.nodes.iter().zip(&other.nodes).all(|(a, b)| {
+                op_eq(&a.op, &b.op)
+                    && a.inputs == b.inputs
+                    && a.ty == b.ty
+                    && self.scope_path(a.scope) == other.scope_path(b.scope)
+            })
+    }
+}
+
 impl Func {
     pub fn new(name: impl Into<String>) -> Func {
         Func {
@@ -263,5 +305,29 @@ mod tests {
     fn arg_kinds() {
         assert_eq!(ArgKind::Parameter.kind_id(), 0);
         assert_eq!(DType::F32.bytes(), 4);
+    }
+
+    #[test]
+    fn structural_equality_ignores_scope_interning_order() {
+        let mut a = tiny();
+        let mut b = tiny();
+        // Interning extra (unreferenced) scopes, or the same referenced
+        // path at different table indices, must not break equality.
+        a.intern_scope("unused/extra");
+        a.intern_scope("unused/extra2");
+        let sa = a.intern_scope("layer_0");
+        b.intern_scope("layer_0/other_first");
+        let sb = b.intern_scope("layer_0");
+        a.nodes[0].scope = sa;
+        b.nodes[0].scope = sb;
+        assert_ne!(a.nodes[0].scope, b.nodes[0].scope, "intern ids really differ");
+        assert_eq!(a, b, "equality is over scope paths, not intern ids");
+        // ...while a genuinely different path does break it.
+        b.nodes[0].scope = ROOT_SCOPE;
+        assert_ne!(a, b);
+        // And so does any structural difference.
+        let mut c = tiny();
+        c.name = "other".into();
+        assert_ne!(tiny(), c);
     }
 }

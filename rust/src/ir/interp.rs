@@ -93,7 +93,7 @@ pub fn eval_all(f: &Func, args: &[Tensor]) -> Vec<Tensor> {
     let mut vals: Vec<Tensor> = args.to_vec();
     for node in &f.nodes {
         let get = |v: ValueId| &vals[v.index()];
-        let out = eval_node(&node.op, &node.ty, &node.inputs.iter().map(|&v| v).collect::<Vec<_>>(), &get);
+        let out = eval_node(&node.op, &node.ty, &node.inputs, &get);
         vals.push(out);
     }
     vals

@@ -1,6 +1,7 @@
 //! Base tensor dialect: the statically-shaped, MHLO-like IR that the
 //! PartIR layer (paper §2.1) is layered on. Includes a builder, verifier,
-//! reference interpreter, reverse-mode autodiff, DCE, and a printer.
+//! reference interpreter, reverse-mode autodiff, DCE, and a textual
+//! printer/parser pair that round-trips exactly (DESIGN.md §10).
 
 pub mod autodiff;
 pub mod builder;
@@ -8,6 +9,7 @@ pub mod dce;
 pub mod graph;
 pub mod interp;
 pub mod op;
+pub mod parser;
 pub mod printer;
 pub mod types;
 pub mod verify;
@@ -15,4 +17,6 @@ pub mod verify;
 pub use builder::GraphBuilder;
 pub use graph::{Arg, ArgKind, Func, Node, ScopeId, ValueId, ROOT_SCOPE};
 pub use op::{CmpDir, DotDims, OpKind, ReduceKind};
+pub use parser::{parse_func, ParseError};
+pub use printer::print_func;
 pub use types::{DType, TensorType};

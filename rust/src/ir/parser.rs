@@ -1,0 +1,1004 @@
+//! Parser for the textual IR emitted by [`super::printer::print_func`]
+//! (DESIGN.md §10). The grammar is the MLIR-flavoured notation of the
+//! paper's Figure 2: a `func` header with typed `%argN {kind}` arguments,
+//! a declared result-type list, numbered `%N = op ...` nodes with
+//! per-op attributes and optional `// scope/path` trailers, and a final
+//! `return`.
+//!
+//! The parser is strict and total: every accepted program is verified
+//! (`verify::verify`) before it is returned, declared result types are
+//! checked against the returned values, and every rejection carries a
+//! 1-based line/column position with an expected/found message. For any
+//! function `f` within DESIGN.md §10's printed-raw-field restrictions
+//! (identifier function name; no newline / edge-whitespace scope
+//! paths), `parse_func(print_func(&f))` reconstructs `f` exactly
+//! (structural equality; see `Func`'s `PartialEq`), which is pinned by
+//! the corpus round-trip CI wall and the property tests.
+
+use super::graph::{Arg, ArgKind, Func, Node, ScopeId, ValueId, ROOT_SCOPE};
+use super::op::{CmpDir, DotDims, OpKind, ReduceKind};
+use super::types::{DType, TensorType};
+use super::verify::verify;
+
+/// A parse (or post-parse verification) failure, positioned in the
+/// source text. `line`/`col` are 1-based.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub col: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "parse error at line {}, column {}: {}", self.line, self.col, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parse one textual function into a verified [`Func`].
+pub fn parse_func(src: &str) -> Result<Func, ParseError> {
+    Parser::new(src).parse()
+}
+
+struct Parser<'a> {
+    src: &'a str,
+    pos: usize,
+    line: usize,
+    col: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(src: &'a str) -> Parser<'a> {
+        Parser { src, pos: 0, line: 1, col: 1 }
+    }
+
+    // ---- cursor primitives ----------------------------------------------
+
+    fn rest(&self) -> &'a str {
+        &self.src[self.pos..]
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.rest().chars().next()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek()?;
+        self.pos += c.len_utf8();
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn err(&self, msg: impl Into<String>) -> ParseError {
+        ParseError { line: self.line, col: self.col, msg: msg.into() }
+    }
+
+    fn err_at(&self, line: usize, col: usize, msg: impl Into<String>) -> ParseError {
+        ParseError { line, col, msg: msg.into() }
+    }
+
+    /// Human description of what sits at the cursor, for "found ..."
+    /// halves of diagnostics.
+    fn found(&self) -> String {
+        match self.peek() {
+            None => "end of input".to_string(),
+            Some('\n') => "end of line".to_string(),
+            Some(_) => {
+                let tok: String = self
+                    .rest()
+                    .chars()
+                    .take_while(|c| !c.is_whitespace())
+                    .take(12)
+                    .collect();
+                if tok.is_empty() {
+                    "whitespace".to_string()
+                } else {
+                    format!("'{tok}'")
+                }
+            }
+        }
+    }
+
+    /// Skip spaces, tabs, and newlines.
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(' ') | Some('\t') | Some('\n') | Some('\r')) {
+            self.bump();
+        }
+    }
+
+    /// Skip spaces and tabs only (stay on the current line).
+    fn skip_inline_ws(&mut self) {
+        while matches!(self.peek(), Some(' ') | Some('\t')) {
+            self.bump();
+        }
+    }
+
+    fn eat(&mut self, c: char) -> bool {
+        if self.peek() == Some(c) {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, c: char) -> Result<(), ParseError> {
+        if self.eat(c) {
+            Ok(())
+        } else {
+            Err(self.err(format!("expected '{c}', found {}", self.found())))
+        }
+    }
+
+    /// Consume `s` if it sits at the cursor verbatim (no boundary check;
+    /// used for `arg` in `%arg0`, where a digit follows).
+    fn eat_str(&mut self, s: &str) -> bool {
+        if !self.rest().starts_with(s) {
+            return false;
+        }
+        for _ in 0..s.chars().count() {
+            self.bump();
+        }
+        true
+    }
+
+    /// True if the keyword sits at the cursor with a word boundary after
+    /// it; consumes it when it does.
+    fn eat_kw(&mut self, kw: &str) -> bool {
+        if !self.rest().starts_with(kw) {
+            return false;
+        }
+        let after = self.rest()[kw.len()..].chars().next();
+        if matches!(after, Some(c) if c.is_ascii_alphanumeric() || c == '_') {
+            return false;
+        }
+        for _ in 0..kw.len() {
+            self.bump();
+        }
+        true
+    }
+
+    fn expect_kw(&mut self, kw: &str) -> Result<(), ParseError> {
+        if self.eat_kw(kw) {
+            Ok(())
+        } else {
+            Err(self.err(format!("expected '{kw}', found {}", self.found())))
+        }
+    }
+
+    /// Identifier: `[A-Za-z_][A-Za-z0-9_./-]*` (covers func names, op
+    /// mnemonics, attribute keys, and arg-kind names).
+    fn ident(&mut self) -> Result<String, ParseError> {
+        match self.peek() {
+            Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+            _ => return Err(self.err(format!("expected identifier, found {}", self.found()))),
+        }
+        let mut s = String::new();
+        while let Some(c) = self.peek() {
+            if c.is_ascii_alphanumeric() || matches!(c, '_' | '.' | '/' | '-') {
+                s.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        Ok(s)
+    }
+
+    fn uint(&mut self) -> Result<usize, ParseError> {
+        if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            return Err(self.err(format!("expected integer, found {}", self.found())));
+        }
+        let mut n: usize = 0;
+        while let Some(c) = self.peek() {
+            if let Some(d) = c.to_digit(10) {
+                n = n
+                    .checked_mul(10)
+                    .and_then(|n| n.checked_add(d as usize))
+                    .ok_or_else(|| self.err("integer literal overflows"))?;
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        Ok(n)
+    }
+
+    fn int(&mut self) -> Result<i64, ParseError> {
+        let (line, col) = (self.line, self.col);
+        let neg = self.eat('-');
+        let n = self.uint()?;
+        // Bounds-checked: `-(n as i64)` would overflow for i64::MIN's
+        // magnitude, and larger literals must be rejected, not wrapped.
+        let limit = (i64::MAX as usize) + usize::from(neg);
+        if n > limit {
+            return Err(self.err_at(line, col, "integer literal overflows i64"));
+        }
+        if neg {
+            Ok((n as u64).wrapping_neg() as i64)
+        } else {
+            Ok(n as i64)
+        }
+    }
+
+    /// Float literal in the form `f64`'s `Display`/`FromStr` round-trip
+    /// uses (plain decimal, `inf`, `-inf`, `NaN`, scientific accepted).
+    fn float(&mut self) -> Result<f64, ParseError> {
+        let (line, col) = (self.line, self.col);
+        let mut s = String::new();
+        while let Some(c) = self.peek() {
+            if c.is_ascii_alphanumeric() || matches!(c, '+' | '-' | '.') {
+                s.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        s.parse::<f64>()
+            .map_err(|_| self.err_at(line, col, format!("expected float literal, found '{s}'")))
+    }
+
+    /// Quoted string with `\"`, `\\`, `\n`, `\t`, and `\r` escapes
+    /// (the exact set `printer::quote` emits).
+    fn quoted(&mut self) -> Result<String, ParseError> {
+        self.expect('"')?;
+        let mut s = String::new();
+        loop {
+            match self.bump() {
+                None | Some('\n') => {
+                    return Err(self.err("unterminated string literal"));
+                }
+                Some('"') => return Ok(s),
+                Some('\\') => match self.bump() {
+                    Some('"') => s.push('"'),
+                    Some('\\') => s.push('\\'),
+                    Some('n') => s.push('\n'),
+                    Some('t') => s.push('\t'),
+                    Some('r') => s.push('\r'),
+                    _ => {
+                        return Err(
+                            self.err("bad escape (\\\" \\\\ \\n \\t \\r are the valid escapes)")
+                        )
+                    }
+                },
+                Some(c) => s.push(c),
+            }
+        }
+    }
+
+    /// `[a, b, c]` of unsigned integers (the `{:?}` form of `Vec<usize>`).
+    fn uint_list(&mut self) -> Result<Vec<usize>, ParseError> {
+        self.expect('[')?;
+        let mut xs = Vec::new();
+        self.skip_inline_ws();
+        if self.eat(']') {
+            return Ok(xs);
+        }
+        loop {
+            xs.push(self.uint()?);
+            self.skip_inline_ws();
+            if self.eat(',') {
+                self.skip_inline_ws();
+            } else {
+                self.expect(']')?;
+                return Ok(xs);
+            }
+        }
+    }
+
+    // ---- grammar --------------------------------------------------------
+
+    /// `tensor<8x16xf32>` / `tensor<f32>`. Dtypes: f32, bf16, i32, i1.
+    fn tensor_type(&mut self) -> Result<TensorType, ParseError> {
+        let (line, col) = (self.line, self.col);
+        self.expect_kw("tensor")
+            .map_err(|_| self.err(format!("expected tensor type, found {}", self.found())))?;
+        self.expect('<')?;
+        let mut body = String::new();
+        loop {
+            match self.peek() {
+                None | Some('\n') => {
+                    return Err(self.err_at(line, col, "unterminated tensor type"));
+                }
+                Some('>') => {
+                    self.bump();
+                    break;
+                }
+                Some(c) => {
+                    body.push(c);
+                    self.bump();
+                }
+            }
+        }
+        let bad = |msg: String| self.err_at(line, col, msg);
+        let pieces: Vec<&str> = body.split('x').collect();
+        let (dims_s, dtype_s) = pieces.split_at(pieces.len() - 1);
+        let dtype = match dtype_s[0] {
+            "f32" => DType::F32,
+            "bf16" => DType::BF16,
+            "i32" => DType::I32,
+            "i1" => DType::Bool,
+            other => {
+                return Err(bad(format!(
+                    "bad tensor type 'tensor<{body}>': \
+                     expected dtype f32|bf16|i32|i1, found '{other}'"
+                )))
+            }
+        };
+        let mut dims = Vec::with_capacity(dims_s.len());
+        for d in dims_s {
+            let n: i64 = d.parse().map_err(|_| {
+                bad(format!("bad tensor type 'tensor<{body}>': bad dimension '{d}'"))
+            })?;
+            if n <= 0 {
+                return Err(bad(format!(
+                    "bad tensor type 'tensor<{body}>': dimensions must be positive"
+                )));
+            }
+            dims.push(n);
+        }
+        Ok(TensorType { dtype, dims })
+    }
+
+    /// `%argN` or `%N`, resolved against what has been parsed so far.
+    fn value_ref(&mut self, func: &Func) -> Result<ValueId, ParseError> {
+        let (line, col) = (self.line, self.col);
+        self.expect('%')?;
+        if matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            let n = self.uint()?;
+            if n >= func.num_nodes() {
+                return Err(self.err_at(
+                    line,
+                    col,
+                    format!(
+                        "%{n} referenced before its definition (next node is %{})",
+                        func.num_nodes()
+                    ),
+                ));
+            }
+            return Ok(func.value_of_node(n));
+        }
+        if !self.eat_str("arg") {
+            return Err(self.err(format!("expected value id %N or %argN, found {}", self.found())));
+        }
+        let n = self.uint()?;
+        if n >= func.num_args() {
+            return Err(self.err_at(
+                line,
+                col,
+                format!("%arg{n} out of range (function has {} arguments)", func.num_args()),
+            ));
+        }
+        Ok(ValueId(n as u32))
+    }
+
+    /// `%argN: type {kind[, name = "..."][, scope = "..."]}`.
+    fn arg(&mut self, func: &mut Func) -> Result<(), ParseError> {
+        let (line, col) = (self.line, self.col);
+        self.expect('%')?;
+        if !self.eat_str("arg") {
+            return Err(self.err(format!("expected %argN, found {}", self.found())));
+        }
+        let n = self.uint()?;
+        if n != func.num_args() {
+            return Err(self.err_at(
+                line,
+                col,
+                format!(
+                    "arguments must be numbered in order: expected %arg{}, found %arg{n}",
+                    func.num_args()
+                ),
+            ));
+        }
+        self.skip_inline_ws();
+        self.expect(':')?;
+        self.skip_inline_ws();
+        let ty = self.tensor_type()?;
+        self.skip_inline_ws();
+        self.expect('{')?;
+        self.skip_inline_ws();
+        let (kline, kcol) = (self.line, self.col);
+        let kind_name = self.ident()?;
+        let kind = match kind_name.as_str() {
+            "param" => ArgKind::Parameter,
+            "opt_state" => ArgKind::OptState,
+            "input" => ArgKind::Input,
+            "const" => ArgKind::Constant,
+            other => {
+                return Err(self.err_at(
+                    kline,
+                    kcol,
+                    format!("expected arg kind param|opt_state|input|const, found '{other}'"),
+                ))
+            }
+        };
+        let mut name: Option<String> = None;
+        let mut scope: Option<String> = None;
+        self.skip_inline_ws();
+        while self.eat(',') {
+            self.skip_inline_ws();
+            let (aline, acol) = (self.line, self.col);
+            let key = self.ident()?;
+            self.skip_inline_ws();
+            self.expect('=')?;
+            self.skip_inline_ws();
+            let val = self.quoted()?;
+            match key.as_str() {
+                "name" if name.is_none() => name = Some(val),
+                "scope" if scope.is_none() => scope = Some(val),
+                "name" | "scope" => {
+                    return Err(self.err_at(aline, acol, format!("duplicate '{key}' attribute")))
+                }
+                other => {
+                    return Err(self.err_at(
+                        aline,
+                        acol,
+                        format!("expected 'name' or 'scope' attribute, found '{other}'"),
+                    ))
+                }
+            }
+            self.skip_inline_ws();
+        }
+        self.expect('}')?;
+        let scope = match scope {
+            None => ROOT_SCOPE,
+            Some(path) => func.intern_scope(&path),
+        };
+        let name = name.unwrap_or_else(|| format!("arg{n}"));
+        func.args.push(Arg { name, ty, kind, scope });
+        Ok(())
+    }
+
+    /// Attributes for `opname`, consuming the `{...}` block when the op
+    /// requires one. Ops without attributes reject a block outright.
+    fn op_with_attrs(
+        &mut self,
+        opname: &str,
+        oline: usize,
+        ocol: usize,
+    ) -> Result<OpKind, ParseError> {
+        // Ops without attributes: map the mnemonic, then reject a block.
+        let simple = match opname {
+            "add" => Some(OpKind::Add),
+            "sub" => Some(OpKind::Sub),
+            "mul" => Some(OpKind::Mul),
+            "div" => Some(OpKind::Div),
+            "max" => Some(OpKind::Max),
+            "min" => Some(OpKind::Min),
+            "neg" => Some(OpKind::Neg),
+            "exp" => Some(OpKind::Exp),
+            "log" => Some(OpKind::Log),
+            "tanh" => Some(OpKind::Tanh),
+            "rsqrt" => Some(OpKind::Rsqrt),
+            "sqrt" => Some(OpKind::Sqrt),
+            "abs" => Some(OpKind::Abs),
+            "select" => Some(OpKind::Select),
+            "convert" => Some(OpKind::Convert),
+            "reshape" => Some(OpKind::Reshape),
+            "gather" => Some(OpKind::Gather),
+            _ => None,
+        };
+        if let Some(op) = simple {
+            if self.peek() == Some('{') {
+                return Err(self.err(format!("op '{opname}' takes no attributes")));
+            }
+            return Ok(op);
+        }
+        match opname {
+            "const" => {
+                self.attr_open("value")?;
+                let value = self.float()?;
+                self.attr_close()?;
+                Ok(OpKind::Const { value })
+            }
+            "iota" => {
+                self.attr_open("dim")?;
+                let dim = self.uint()?;
+                self.attr_close()?;
+                Ok(OpKind::Iota { dim })
+            }
+            "compare" => {
+                self.attr_open("dir")?;
+                let (dline, dcol) = (self.line, self.col);
+                let dir_name = self.ident()?;
+                let dir = match dir_name.as_str() {
+                    "Lt" => CmpDir::Lt,
+                    "Le" => CmpDir::Le,
+                    "Gt" => CmpDir::Gt,
+                    "Ge" => CmpDir::Ge,
+                    "Eq" => CmpDir::Eq,
+                    "Ne" => CmpDir::Ne,
+                    other => {
+                        return Err(self.err_at(
+                            dline,
+                            dcol,
+                            format!("expected dir Lt|Le|Gt|Ge|Eq|Ne, found '{other}'"),
+                        ))
+                    }
+                };
+                self.attr_close()?;
+                Ok(OpKind::Compare { dir })
+            }
+            "dot" => {
+                self.attr_open("batch")?;
+                let lhs_batch = self.uint_list()?;
+                self.expect('x')?;
+                let rhs_batch = self.uint_list()?;
+                self.skip_inline_ws();
+                self.expect(',')?;
+                self.skip_inline_ws();
+                self.expect_kw("contract")?;
+                self.skip_inline_ws();
+                self.expect('=')?;
+                self.skip_inline_ws();
+                let lhs_contract = self.uint_list()?;
+                self.expect('x')?;
+                let rhs_contract = self.uint_list()?;
+                self.attr_close()?;
+                Ok(OpKind::Dot(DotDims { lhs_batch, rhs_batch, lhs_contract, rhs_contract }))
+            }
+            "reduce_sum" | "reduce_max" => {
+                self.attr_open("dims")?;
+                let dims = self.uint_list()?;
+                self.attr_close()?;
+                let kind = if opname == "reduce_sum" { ReduceKind::Sum } else { ReduceKind::Max };
+                Ok(OpKind::Reduce { kind, dims })
+            }
+            "broadcast_in_dim" => {
+                self.attr_open("broadcast_dims")?;
+                let dims = self.uint_list()?;
+                self.attr_close()?;
+                Ok(OpKind::Broadcast { dims })
+            }
+            "transpose" => {
+                self.attr_open("perm")?;
+                let perm = self.uint_list()?;
+                self.attr_close()?;
+                Ok(OpKind::Transpose { perm })
+            }
+            "segment_sum" => {
+                self.attr_open("num")?;
+                let num = self.int()?;
+                self.attr_close()?;
+                Ok(OpKind::SegmentSum { num })
+            }
+            other => Err(self.err_at(oline, ocol, format!("unknown op '{other}'"))),
+        }
+    }
+
+    /// `{key = ` of a required attribute block.
+    fn attr_open(&mut self, key: &str) -> Result<(), ParseError> {
+        self.skip_inline_ws();
+        if !self.eat('{') {
+            return Err(
+                self.err(format!("expected attributes '{{{key} = ...}}', found {}", self.found()))
+            );
+        }
+        self.skip_inline_ws();
+        self.expect_kw(key)?;
+        self.skip_inline_ws();
+        self.expect('=')?;
+        self.skip_inline_ws();
+        Ok(())
+    }
+
+    fn attr_close(&mut self) -> Result<(), ParseError> {
+        self.skip_inline_ws();
+        self.expect('}')
+    }
+
+    /// `%N = op [operands] [attrs] : type [// scope]`.
+    fn node(&mut self, func: &mut Func) -> Result<(usize, usize), ParseError> {
+        let (line, col) = (self.line, self.col);
+        self.expect('%')?;
+        let n = self.uint()?;
+        if n != func.num_nodes() {
+            return Err(self.err_at(
+                line,
+                col,
+                format!(
+                    "nodes must be numbered in order: expected %{}, found %{n}",
+                    func.num_nodes()
+                ),
+            ));
+        }
+        self.skip_inline_ws();
+        self.expect('=')?;
+        self.skip_inline_ws();
+        let (oline, ocol) = (self.line, self.col);
+        let opname = self.ident()?;
+        let mut inputs = Vec::new();
+        self.skip_inline_ws();
+        while self.peek() == Some('%') {
+            inputs.push(self.value_ref(func)?);
+            self.skip_inline_ws();
+            if self.eat(',') {
+                self.skip_inline_ws();
+                if self.peek() != Some('%') {
+                    return Err(self.err(format!(
+                        "expected value id after ',', found {}",
+                        self.found()
+                    )));
+                }
+            } else {
+                break;
+            }
+        }
+        let op = self.op_with_attrs(&opname, oline, ocol)?;
+        self.skip_inline_ws();
+        self.expect(':')?;
+        self.skip_inline_ws();
+        let ty = self.tensor_type()?;
+        let scope = self.line_scope(func)?;
+        func.nodes.push(Node { op, inputs, ty, scope });
+        Ok((line, col))
+    }
+
+    /// Optional `// scope/path` trailer, up to end of line.
+    fn line_scope(&mut self, func: &mut Func) -> Result<ScopeId, ParseError> {
+        self.skip_inline_ws();
+        if !self.rest().starts_with("//") {
+            return Ok(ROOT_SCOPE);
+        }
+        self.bump();
+        self.bump();
+        self.skip_inline_ws();
+        let mut path = String::new();
+        while let Some(c) = self.peek() {
+            if c == '\n' {
+                break;
+            }
+            path.push(c);
+            self.bump();
+        }
+        let path = path.trim_end().to_string();
+        if path.is_empty() {
+            return Err(self.err("empty scope path after '//'"));
+        }
+        Ok(func.intern_scope(&path))
+    }
+
+    fn parse(&mut self) -> Result<Func, ParseError> {
+        self.skip_ws();
+        self.expect_kw("func")?;
+        self.skip_inline_ws();
+        self.expect('@')?;
+        let name = self.ident()?;
+        let mut func = Func::new(name);
+        self.skip_inline_ws();
+        self.expect('(')?;
+        self.skip_ws();
+        if self.peek() != Some(')') {
+            loop {
+                self.arg(&mut func)?;
+                self.skip_ws();
+                if self.eat(',') {
+                    self.skip_ws();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.expect(')')?;
+        self.skip_ws();
+        self.expect_kw("->")?;
+        self.skip_ws();
+        self.expect('(')?;
+        let mut out_tys: Vec<(TensorType, usize, usize)> = Vec::new();
+        self.skip_ws();
+        if self.peek() != Some(')') {
+            loop {
+                let (line, col) = (self.line, self.col);
+                out_tys.push((self.tensor_type()?, line, col));
+                self.skip_ws();
+                if self.eat(',') {
+                    self.skip_ws();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.expect(')')?;
+        self.skip_ws();
+        self.expect('{')?;
+        let mut node_pos: Vec<(usize, usize)> = Vec::new();
+        let (rline, rcol) = loop {
+            self.skip_ws();
+            let (line, col) = (self.line, self.col);
+            if self.eat_kw("return") {
+                break (line, col);
+            }
+            if self.peek() == Some('%') {
+                node_pos.push(self.node(&mut func)?);
+            } else {
+                return Err(self.err(format!(
+                    "expected '%N = op ...' or 'return', found {}",
+                    self.found()
+                )));
+            }
+        };
+        self.skip_inline_ws();
+        while self.peek() == Some('%') {
+            let v = self.value_ref(&func)?;
+            func.outputs.push(v);
+            self.skip_inline_ws();
+            if self.eat(',') {
+                self.skip_inline_ws();
+                if self.peek() != Some('%') {
+                    return Err(self.err(format!(
+                        "expected value id after ',', found {}",
+                        self.found()
+                    )));
+                }
+            } else {
+                break;
+            }
+        }
+        self.skip_ws();
+        self.expect('}')?;
+        self.skip_ws();
+        if self.peek().is_some() {
+            return Err(self.err(format!("unexpected input after '}}': {}", self.found())));
+        }
+
+        // Declared result types must match the returned values.
+        if out_tys.len() != func.outputs.len() {
+            return Err(self.err_at(
+                rline,
+                rcol,
+                format!(
+                    "return has {} values but the header declares {} result types",
+                    func.outputs.len(),
+                    out_tys.len()
+                ),
+            ));
+        }
+        for ((ty, tline, tcol), &o) in out_tys.iter().zip(&func.outputs) {
+            let actual = func.value_type(o);
+            if actual != ty {
+                return Err(self.err_at(
+                    *tline,
+                    *tcol,
+                    format!(
+                        "declared result type {ty} does not match returned value's type {actual}"
+                    ),
+                ));
+            }
+        }
+
+        // Full verification, mapped back to source positions.
+        verify(&func).map_err(|e| match &e {
+            super::verify::IrError::Verify { node, .. } if *node < node_pos.len() => {
+                let (line, col) = node_pos[*node];
+                self.err_at(line, col, e.to_string())
+            }
+            _ => self.err_at(rline, rcol, e.to_string()),
+        })?;
+        Ok(func)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::GraphBuilder;
+    use crate::ir::printer::print_func;
+
+    fn roundtrip(f: &Func) -> Func {
+        let text = print_func(f);
+        match parse_func(&text) {
+            Ok(g) => g,
+            Err(e) => panic!("{e}\nsource:\n{text}"),
+        }
+    }
+
+    #[test]
+    fn round_trips_a_linear_layer() {
+        let mut b = GraphBuilder::new("main");
+        let x = b.arg("x", TensorType::f32(&[8, 16]), ArgKind::Input);
+        let w = b.arg("w", TensorType::f32(&[16, 64]), ArgKind::Parameter);
+        let bias = b.arg("b", TensorType::f32(&[64]), ArgKind::Parameter);
+        let dot = b.matmul(x, w);
+        let ty = b.ty(dot).clone();
+        let bb = b.broadcast_to(bias, ty);
+        let out = b.add(dot, bb);
+        b.output(out);
+        let f = b.finish();
+        assert_eq!(roundtrip(&f), f);
+    }
+
+    #[test]
+    fn round_trips_scoped_args_and_nodes() {
+        let mut b = GraphBuilder::new("scoped");
+        b.push_scope("enc");
+        b.push_scope("dense_0");
+        let w = b.arg("enc/dense_0/w", TensorType::f32(&[4, 4]), ArgKind::Parameter);
+        b.pop_scope();
+        b.pop_scope();
+        let x = b.arg("x", TensorType::f32(&[4, 4]), ArgKind::Input);
+        b.push_scope("enc");
+        let y = b.matmul(x, w);
+        b.push_scope("act");
+        let z = b.tanh(y);
+        b.pop_scope();
+        b.pop_scope();
+        b.output(z);
+        let f = b.finish();
+        let g = roundtrip(&f);
+        assert_eq!(g, f);
+        let zn = g.node_of(ValueId(g.num_args() as u32 + 1)).unwrap();
+        assert_eq!(g.scope_path(g.nodes[zn].scope), "enc/act");
+        assert_eq!(g.scope_path(g.args[0].scope), "enc/dense_0");
+        assert_eq!(g.args[0].name, "enc/dense_0/w");
+    }
+
+    #[test]
+    fn round_trips_zero_arg_and_multi_output_functions() {
+        let mut b = GraphBuilder::new("zero_arg");
+        let c = b.constant(2.5, TensorType::f32(&[4]));
+        let i = b.iota(0, TensorType::f32(&[4]));
+        let s = b.add(c, i);
+        b.output(s);
+        b.output(c);
+        let f = b.finish();
+        assert_eq!(roundtrip(&f), f);
+    }
+
+    #[test]
+    fn parses_hand_written_text_with_defaults() {
+        let f = parse_func(
+            "func @t(%arg0: tensor<4xf32> {input})\n    -> (tensor<4xf32>) {\n  \
+             %0 = neg %arg0 : tensor<4xf32>\n  return %0\n}\n",
+        )
+        .unwrap();
+        assert_eq!(f.args[0].name, "arg0", "missing name attr defaults to argN");
+        assert_eq!(f.num_nodes(), 1);
+    }
+
+    #[test]
+    fn diagnostics_carry_line_and_column() {
+        // Unknown op on line 3.
+        let e = parse_func(
+            "func @t(%arg0: tensor<4xf32> {input})\n    -> (tensor<4xf32>) {\n  \
+             %0 = wiggle %arg0 : tensor<4xf32>\n  return %0\n}\n",
+        )
+        .unwrap_err();
+        assert_eq!((e.line, e.col), (3, 8), "{e}");
+        assert!(e.msg.contains("unknown op 'wiggle'"), "{e}");
+
+        // Forward reference.
+        let e = parse_func(
+            "func @t(%arg0: tensor<4xf32> {input})\n    -> (tensor<4xf32>) {\n  \
+             %0 = add %arg0, %1 : tensor<4xf32>\n  return %0\n}\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.line, 3, "{e}");
+        assert!(e.msg.contains("referenced before its definition"), "{e}");
+
+        // Type error found by the verifier maps to the node's line.
+        let e = parse_func(
+            "func @t(%arg0: tensor<4xf32> {input})\n    -> (tensor<8xf32>) {\n  \
+             %0 = neg %arg0 : tensor<8xf32>\n  return %0\n}\n",
+        )
+        .unwrap_err();
+        assert_eq!((e.line, e.col), (3, 3), "{e}");
+        assert!(e.msg.contains("stored type"), "{e}");
+
+        // Declared result type mismatch points at the declaration.
+        let e = parse_func(
+            "func @t(%arg0: tensor<4xf32> {input})\n    -> (tensor<8xf32>) {\n  \
+             %0 = neg %arg0 : tensor<4xf32>\n  return %0\n}\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.line, 2, "{e}");
+        assert!(e.msg.contains("declared result type"), "{e}");
+
+        // Malformed header.
+        let e = parse_func("func main()").unwrap_err();
+        assert_eq!((e.line, e.col), (1, 6), "{e}");
+        assert!(e.msg.contains("expected '@'"), "{e}");
+
+        // Bad arg kind.
+        let e = parse_func(
+            "func @t(%arg0: tensor<4xf32> {weight})\n    -> () {\n  return\n}\n",
+        )
+        .unwrap_err();
+        assert_eq!((e.line, e.col), (1, 31), "{e}");
+        assert!(e.msg.contains("param|opt_state|input|const"), "{e}");
+
+        // Bad dtype.
+        let e = parse_func(
+            "func @t(%arg0: tensor<4xf64> {input})\n    -> () {\n  return\n}\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.line, 1, "{e}");
+        assert!(e.msg.contains("f32|bf16|i32|i1"), "{e}");
+    }
+
+    #[test]
+    fn rejects_out_of_order_numbering_and_trailing_garbage() {
+        let e = parse_func(
+            "func @t(%arg0: tensor<4xf32> {input})\n    -> (tensor<4xf32>) {\n  \
+             %1 = neg %arg0 : tensor<4xf32>\n  return %1\n}\n",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("expected %0"), "{e}");
+
+        let e = parse_func(
+            "func @t(%arg1: tensor<4xf32> {input})\n    -> () {\n  return\n}\n",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("expected %arg0"), "{e}");
+
+        let e = parse_func(
+            "func @t(%arg0: tensor<4xf32> {input})\n    -> () {\n  return\n}\ntrailing\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.line, 5, "{e}");
+        assert!(e.msg.contains("unexpected input"), "{e}");
+    }
+
+    #[test]
+    fn return_arity_must_match_declared_types() {
+        let e = parse_func(
+            "func @t(%arg0: tensor<4xf32> {input})\n    -> (tensor<4xf32>) {\n  return\n}\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.line, 3, "{e}");
+        assert!(e.msg.contains("declares 1 result type"), "{e}");
+    }
+
+    #[test]
+    fn pathological_names_round_trip_and_big_ints_are_rejected() {
+        // Quotes, backslashes, and line/tab whitespace in an argument
+        // name all survive the escape round-trip.
+        let mut b = GraphBuilder::new("q");
+        let x = b.arg("a\nb\t\"c\\d", TensorType::f32(&[2]), ArgKind::Input);
+        let y = b.neg(x);
+        b.output(y);
+        let f = b.finish();
+        assert_eq!(roundtrip(&f), f);
+
+        // Integer attributes overflow to an error, never a wrap/panic.
+        let src = "func @t(%arg0: tensor<4x8xf32> {input}, %arg1: tensor<4xi32> {input})\n    \
+                   -> () {\n  \
+                   %0 = segment_sum %arg0, %arg1 {num = 18446744073709551615} : \
+                   tensor<2x8xf32>\n  return\n}\n";
+        let e = parse_func(src).unwrap_err();
+        assert!(e.msg.contains("overflows i64"), "{e}");
+    }
+
+    #[test]
+    fn const_values_round_trip_exactly() {
+        // NaN and -0.0 included: Func equality compares Const values by
+        // bit pattern with NaNs identified, so the round-trip contract
+        // holds for every value the printer can emit.
+        let values = [
+            0.0,
+            -0.0,
+            -0.5,
+            1e-5,
+            0.044715,
+            0.7978845608028654,
+            123456789.25,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+        ];
+        for v in values {
+            let mut b = GraphBuilder::new("c");
+            let c = b.constant(v, TensorType::f32(&[2]));
+            b.output(c);
+            let f = b.finish();
+            let g = roundtrip(&f);
+            assert_eq!(g, f, "const {v} failed to round-trip");
+        }
+    }
+}

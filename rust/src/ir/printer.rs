@@ -1,7 +1,12 @@
 //! Textual printer for the base dialect, in an MLIR-flavoured notation
-//! close to the paper's Figure 2 (top).
+//! close to the paper's Figure 2 (top). The emitted form is the
+//! interchange format of DESIGN.md §10: it is lossless (argument names
+//! and scope paths included), and [`crate::ir::parser::parse_func`]
+//! reconstructs the exact [`Func`] — `parse(print(f)) == f`, within
+//! §10's restrictions on the two printed-raw fields (identifier
+//! function names; scope paths without newlines or edge whitespace).
 
-use super::graph::{Func, ValueId};
+use super::graph::{Func, ValueId, ROOT_SCOPE};
 use super::op::OpKind;
 use std::fmt::Write;
 
@@ -13,7 +18,11 @@ pub fn print_func(f: &Func) -> String {
         if i > 0 {
             s.push_str(", ");
         }
-        write!(s, "%arg{i}: {} {{{}}}", a.ty, a.kind.name()).unwrap();
+        write!(s, "%arg{i}: {} {{{}, name = {}", a.ty, a.kind.name(), quote(&a.name)).unwrap();
+        if a.scope != ROOT_SCOPE {
+            write!(s, ", scope = {}", quote(f.scope_path(a.scope))).unwrap();
+        }
+        s.push('}');
     }
     s.push_str(")\n");
     let out_tys: Vec<String> =
@@ -39,6 +48,27 @@ pub fn print_func(f: &Func) -> String {
     writeln!(s, "  return {}", outs.join(", ")).unwrap();
     s.push_str("}\n");
     s
+}
+
+/// Quote a string literal for the textual form. Escapes `"`, `\`, and
+/// line/tab whitespace so even pathological argument names survive the
+/// round-trip (scope paths are printed raw in `//` trailers and carry
+/// the documented no-newline/no-edge-whitespace restriction instead).
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            _ => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 fn ref_name(f: &Func, v: ValueId) -> String {
@@ -85,9 +115,27 @@ mod tests {
         b.output(out);
         let s = super::print_func(&b.finish());
         assert!(s.contains("func @main"));
+        assert!(s.contains("%arg0: tensor<8x16xf32> {input, name = \"x\"}"));
         assert!(s.contains("dot %arg0, %arg1"));
         assert!(s.contains("broadcast_in_dim %arg2 {broadcast_dims = [1]}"));
         assert!(s.contains("tensor<8x64xf32>"));
         assert!(s.contains("return %2"));
+    }
+
+    #[test]
+    fn prints_arg_scopes_and_quoted_names() {
+        let mut b = GraphBuilder::new("scoped");
+        b.push_scope("dense_0");
+        let w = b.arg("dense_0/w", TensorType::f32(&[4, 4]), ArgKind::Parameter);
+        b.pop_scope();
+        let y = b.neg(w);
+        b.output(y);
+        let s = super::print_func(&b.finish());
+        assert!(
+            s.contains("{param, name = \"dense_0/w\", scope = \"dense_0\"}"),
+            "arg scope must be printed: {s}"
+        );
+        assert_eq!(super::quote("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(super::quote("a\nb\tc"), "\"a\\nb\\tc\"");
     }
 }

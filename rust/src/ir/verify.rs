@@ -108,7 +108,8 @@ pub fn infer_type(
                     return err(op, format!("reduce dim {d} out of range (rank {r})"));
                 }
             }
-            let out: Vec<i64> = (0..r).filter(|i| !dims.contains(i)).map(|i| ins[0].dims[i]).collect();
+            let out: Vec<i64> =
+                (0..r).filter(|i| !dims.contains(i)).map(|i| ins[0].dims[i]).collect();
             Ok(ins[0].with_dims(out))
         }
         OpKind::Broadcast { dims } => {
@@ -231,11 +232,22 @@ fn infer_dot(
 /// earlier than their users, node types matching `infer_type`, and output
 /// ids valid.
 pub fn verify(f: &Func) -> Result<(), IrError> {
+    for (ai, arg) in f.args.iter().enumerate() {
+        if arg.scope.0 as usize >= f.scopes.len() {
+            return Err(IrError::Verify {
+                node: usize::MAX,
+                msg: format!("argument {ai} ({}) has a bad scope id", arg.name),
+            });
+        }
+    }
     for (ni, node) in f.nodes.iter().enumerate() {
         let own_value = f.value_of_node(ni);
         for &inp in &node.inputs {
             if inp.index() >= f.num_values() {
-                return Err(IrError::Verify { node: ni, msg: format!("input {inp:?} out of range") });
+                return Err(IrError::Verify {
+                    node: ni,
+                    msg: format!("input {inp:?} out of range"),
+                });
             }
             if inp >= own_value {
                 return Err(IrError::Verify {
@@ -259,7 +271,10 @@ pub fn verify(f: &Func) -> Result<(), IrError> {
     }
     for &o in &f.outputs {
         if o.index() >= f.num_values() {
-            return Err(IrError::Verify { node: usize::MAX, msg: format!("output {o:?} out of range") });
+            return Err(IrError::Verify {
+                node: usize::MAX,
+                msg: format!("output {o:?} out of range"),
+            });
         }
     }
     Ok(())

@@ -3,8 +3,13 @@
 //! Subcommands:
 //!   stats        model-scale statistics vs. the paper's setup (§3)
 //!   gen-dataset  generate the ranker training set (best-strategy labels)
-//!   partition    run a Session tactic pipeline on a model and print the
-//!                partition plan (supports --pin / --shard constraints)
+//!   partition    run a Session tactic pipeline on a model (or a textual
+//!                program via --program f.pir) and print the partition
+//!                plan (supports --pin / --shard constraints)
+//!   parse        parse a textual-IR file (DESIGN.md §10): verify it and
+//!                check the print/parse round-trip, exit non-zero on any
+//!                mismatch (the corpus CI wall runs this)
+//!   print        print a built-in model in the textual IR form
 //!   serve        read JSONL partition requests from stdin, answer on
 //!                stdout through the plan service (--stdin-jsonl)
 //!   batch        answer a JSONL request file through the plan service
@@ -14,14 +19,14 @@
 //! Common flags: --layers N --budgets a,b,c --attempts N --seed S
 //!               --config path.json --out-dir results
 //! Partition flags: --pin axis[,axis]  --shard name:dim:axis[,...]
+//!                  --program file.pir
 //! Service flags:   --pool N --cache-mb N --out responses.jsonl
 
 use automap::coordinator::config as cfgfile;
 use automap::coordinator::figures::{self, FigureSetup};
+use automap::ir::{parse_func, print_func, Func};
 use automap::learner::ranker::TOP_K;
-use automap::models::graphnet::{build_graphnet, GraphNetConfig};
-use automap::models::mlp::{build_mlp, MlpConfig};
-use automap::models::transformer::{build_transformer, TransformerConfig};
+use automap::models::transformer::TransformerConfig;
 use automap::partir::mesh::Mesh;
 use automap::search::mcts::MctsConfig;
 use automap::service::{run_batch, serve_jsonl, PartitionRequest, PlanService, ServiceConfig};
@@ -31,7 +36,7 @@ use automap::util::cli::Args;
 const VALUE_FLAGS: &[&str] = &[
     "layers", "budgets", "attempts", "seed", "out", "out-dir", "count", "axis", "model",
     "budget", "filter", "ranker", "config", "d-model", "mesh", "pin", "shard", "pool",
-    "cache-mb",
+    "cache-mb", "program",
 ];
 const BOOL_FLAGS: &[&str] = &["paper", "grouping", "no-tying", "help", "stdin-jsonl"];
 
@@ -57,6 +62,8 @@ fn main() {
         "stats" => cmd_stats(&args),
         "gen-dataset" => cmd_gen_dataset(&args),
         "partition" => cmd_partition(&args),
+        "parse" => cmd_parse(&args),
+        "print" => cmd_print(&args),
         "serve" => cmd_serve(&args),
         "batch" => cmd_batch(&args),
         "fig6" | "fig7" => figure_cmd(&args, |s, d| figures::fig6_fig7(s, d).map(|_| ())),
@@ -82,7 +89,8 @@ fn main() {
 fn usage() {
     println!(
         "automap — reproduction of 'Automap: Towards Ergonomic Automated Parallelism'\n\
-         usage: automap <stats|gen-dataset|partition|serve|batch|fig6|fig7|fig8|fig9|all-figures> [flags]\n\
+         usage: automap <stats|gen-dataset|partition|parse|print|serve|batch|\n\
+                         fig6|fig7|fig8|fig9|all-figures> [flags]\n\
          flags: --layers N --budgets a,b,c --attempts N --seed S --paper\n\
                 --model mlp|transformer|graphnet --budget N --filter none|heuristic|learned\n\
                 --mesh model=4[,batch=2] --ranker artifacts/ranker.hlo.txt\n\
@@ -91,6 +99,11 @@ fn usage() {
                 --pin axis[,axis]          mark mesh axes manual (excluded from search)\n\
                 --shard name:dim:axis[,..] pre-shard arguments before search,\n\
                                            e.g. --shard x:0:batch,dense_0/w:1:model\n\
+                --program file.pir         partition a textual-IR program instead\n\
+                                           of a built-in model\n\
+         textual IR (DESIGN.md §10):\n\
+                parse file.pir             parse + verify + round-trip check\n\
+                print --model mlp [--out f.pir]   emit a built-in model as text\n\
          plan service (one JSON request per line; see README 'Serving partition plans'):\n\
                 serve --stdin-jsonl [--pool N] [--cache-mb N]\n\
                 batch requests.jsonl [--pool N] [--cache-mb N] [--out responses.jsonl]"
@@ -123,6 +136,56 @@ fn cmd_gen_dataset(args: &Args) -> anyhow::Result<()> {
     }
     std::fs::write(&out, j.to_string())?;
     println!("wrote {out} in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Build a built-in model's `Func` (shared by partition/print; same
+/// name→model map as the service, via `models::build_by_name`).
+fn build_model_func(model: &str, layers: usize) -> anyhow::Result<Func> {
+    automap::models::build_by_name(model, layers)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}' (want mlp|transformer|graphnet)"))
+}
+
+fn cmd_parse(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("parse needs a file.pir path"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let f = parse_func(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    // Round-trip wall: the printed form must re-parse to the same
+    // function. `f` is already verified by parse_func.
+    let printed = print_func(&f);
+    let g = parse_func(&printed)
+        .map_err(|e| anyhow::anyhow!("{path}: printed form failed to re-parse: {e}"))?;
+    if g != f {
+        anyhow::bail!("{path}: round-trip mismatch — parse(print(parse(text))) != parse(text)");
+    }
+    println!(
+        "{path}: ok — func @{}: {} args, {} nodes, {} outputs, {} scopes",
+        f.name,
+        f.num_args(),
+        f.num_nodes(),
+        f.outputs.len(),
+        f.scopes.len()
+    );
+    Ok(())
+}
+
+fn cmd_print(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_str("model", "transformer");
+    // Same default depth as `partition`, so print → partition --program
+    // reproduces exactly what partition --model would plan.
+    let f = build_model_func(&model, args.get_usize("layers", 4)?)?;
+    let text = print_func(&f);
+    match args.get("out") {
+        Some(p) => {
+            std::fs::write(p, &text)?;
+            println!("wrote {p}");
+        }
+        None => print!("{text}"),
+    }
     Ok(())
 }
 
@@ -195,16 +258,24 @@ fn cmd_partition(args: &Args) -> anyhow::Result<()> {
         },
         other => anyhow::bail!("unknown filter '{other}'"),
     };
-    let func = match model_kind.as_str() {
-        "mlp" => build_mlp(&MlpConfig::small()).func,
-        "graphnet" => build_graphnet(&GraphNetConfig::small()).func,
-        "transformer" => {
-            build_transformer(&TransformerConfig::tiny(args.get_usize("layers", 4)?)).func
+    let (label, func) = match args.get("program") {
+        Some(path) => {
+            // Same rule as the service wire schema: pick one source.
+            if args.get("model").is_some() {
+                anyhow::bail!("--model and --program are mutually exclusive");
+            }
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+            let f = parse_func(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            (format!("@{path}"), f)
         }
-        other => anyhow::bail!("unknown model '{other}'"),
+        None => {
+            let f = build_model_func(&model_kind, args.get_usize("layers", 4)?)?;
+            (model_kind.clone(), f)
+        }
     };
     println!(
-        "partitioning {model_kind}: {} args, {} ops, mesh {}",
+        "partitioning {label}: {} args, {} ops, mesh {}",
         func.num_args(),
         func.num_nodes(),
         mesh.describe()

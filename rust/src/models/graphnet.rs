@@ -52,7 +52,11 @@ pub fn build_graphnet(cfg: &GraphNetConfig) -> GraphNetModel {
     let target = b.arg("target", TensorType::f32(&[n, f]), ArgKind::Input);
 
     let mut params = Vec::new();
-    let decl = |b: &mut GraphBuilder, params: &mut Vec<ValueId>, scope: &str, name: &str, dims: &[i64]| {
+    let decl = |b: &mut GraphBuilder,
+                params: &mut Vec<ValueId>,
+                scope: &str,
+                name: &str,
+                dims: &[i64]| {
         b.push_scope(scope);
         let id = b.arg(format!("{scope}/{name}"), TensorType::f32(dims), ArgKind::Parameter);
         b.pop_scope();
@@ -74,7 +78,12 @@ pub fn build_graphnet(cfg: &GraphNetConfig) -> GraphNetModel {
         round_params.push((ew1, eb1, ew2, eb2, nw1, nb1, nw2, nb2));
     }
 
-    let mlp2 = |b: &mut GraphBuilder, x: ValueId, w1: ValueId, b1: ValueId, w2: ValueId, b2: ValueId| {
+    let mlp2 = |b: &mut GraphBuilder,
+                x: ValueId,
+                w1: ValueId,
+                b1: ValueId,
+                w2: ValueId,
+                b2: ValueId| {
         let h = b.matmul(x, w1);
         let hty = b.ty(h).clone();
         let b1b = b.broadcast_to(b1, hty);

@@ -12,3 +12,19 @@ pub use graphnet::{build_graphnet, GraphNetConfig, GraphNetModel};
 pub use megatron::{check, reference_evaluation, reference_state, MegatronVerdict};
 pub use mlp::{build_mlp, MlpConfig, MlpModel};
 pub use transformer::{build_transformer, TransformerConfig, TransformerModel};
+
+/// Build a built-in model by its request/CLI name (`mlp` | `graphnet` |
+/// `transformer`); `layers` applies to the transformer only and is
+/// clamped to >= 1. The single source of truth for the name→model map —
+/// the service (`PartitionRequest::build_func`) and the CLI
+/// (`partition`/`print`) both resolve through it.
+pub fn build_by_name(name: &str, layers: usize) -> Option<crate::ir::Func> {
+    match name {
+        "mlp" => Some(build_mlp(&MlpConfig::small()).func),
+        "graphnet" => Some(build_graphnet(&GraphNetConfig::small()).func),
+        "transformer" => {
+            Some(build_transformer(&TransformerConfig::tiny(layers.max(1))).func)
+        }
+        _ => None,
+    }
+}

@@ -106,7 +106,12 @@ pub fn build_transformer(cfg: &TransformerConfig) -> TransformerModel {
 
     // ---- argument declarations (all before the first node) -------------
     let mut params: Vec<ValueId> = Vec::new();
-    let decl = |b: &mut GraphBuilder, params: &mut Vec<ValueId>, scope: &str, name: &str, dims: &[i64]| -> ParamDecl {
+    let decl = |b: &mut GraphBuilder,
+                params: &mut Vec<ValueId>,
+                scope: &str,
+                name: &str,
+                dims: &[i64]|
+     -> ParamDecl {
         if !scope.is_empty() {
             b.push_scope(scope);
         }
@@ -178,7 +183,12 @@ pub fn build_transformer(cfg: &TransformerConfig) -> TransformerModel {
     let pos_b = b.broadcast(pos, vec![1, 2], xty.clone());
     let mut x = b.add(x_tok, pos_b); // residual stream [B,S,D]
 
-    let dot_proj = DotDims { lhs_batch: vec![], rhs_batch: vec![], lhs_contract: vec![2], rhs_contract: vec![0] };
+    let dot_proj = DotDims {
+        lhs_batch: vec![],
+        rhs_batch: vec![],
+        lhs_contract: vec![2],
+        rhs_contract: vec![0],
+    };
 
     for l in 0..cfg.layers {
         let lp = &layers[l];
@@ -249,7 +259,12 @@ pub fn build_transformer(cfg: &TransformerConfig) -> TransformerModel {
 
     // ---- loss (tied-embedding LM head + softmax cross-entropy) ----------
     let xf = b.layer_norm(x, lnf_g, lnf_b);
-    let logits_d = DotDims { lhs_batch: vec![], rhs_batch: vec![], lhs_contract: vec![2], rhs_contract: vec![1] };
+    let logits_d = DotDims {
+        lhs_batch: vec![],
+        rhs_batch: vec![],
+        lhs_contract: vec![2],
+        rhs_contract: vec![1],
+    };
     let logits = b.dot(logits_d, xf, embed); // [B,S,V]
     let mx = b.reduce_max(logits, vec![2]);
     let lty = b.ty(logits).clone();

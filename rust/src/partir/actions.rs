@@ -206,7 +206,8 @@ mod tests {
         let dm = DistMap::new(&f, &mesh);
         let st = DecisionState::default();
         let model = mesh.axis_by_name("model").unwrap();
-        assert!(action_valid(&f, &mesh, &dm, &st, &Action::Tile { v: ValueId(0), dim: 1, axis: model }));
+        let tile = Action::Tile { v: ValueId(0), dim: 1, axis: model };
+        assert!(action_valid(&f, &mesh, &dm, &st, &tile));
         // 3 and 5 are not divisible by 2 or 4
         assert!(tile_actions_for(&f, &mesh, &dm, &st, ValueId(1)).is_empty());
     }
@@ -218,7 +219,8 @@ mod tests {
         let mut st = DecisionState::default();
         st.atomic.insert(ValueId(0));
         let model = mesh.axis_by_name("model").unwrap();
-        assert!(!action_valid(&f, &mesh, &dm, &st, &Action::Tile { v: ValueId(0), dim: 0, axis: model }));
+        let tile_d0_model = Action::Tile { v: ValueId(0), dim: 0, axis: model };
+        assert!(!action_valid(&f, &mesh, &dm, &st, &tile_d0_model));
     }
 
     #[test]
@@ -229,9 +231,12 @@ mod tests {
         let model = mesh.axis_by_name("model").unwrap();
         let batch = mesh.axis_by_name("batch").unwrap();
         dm.set(0, model, 1);
-        assert!(!action_valid(&f, &mesh, &dm, &st, &Action::Tile { v: ValueId(0), dim: 0, axis: model }));
-        assert!(!action_valid(&f, &mesh, &dm, &st, &Action::Tile { v: ValueId(0), dim: 1, axis: batch }));
-        assert!(action_valid(&f, &mesh, &dm, &st, &Action::Tile { v: ValueId(0), dim: 0, axis: batch }));
+        let tile_d0_model = Action::Tile { v: ValueId(0), dim: 0, axis: model };
+        assert!(!action_valid(&f, &mesh, &dm, &st, &tile_d0_model));
+        let tile_d1_batch = Action::Tile { v: ValueId(0), dim: 1, axis: batch };
+        assert!(!action_valid(&f, &mesh, &dm, &st, &tile_d1_batch));
+        let tile_d0_batch = Action::Tile { v: ValueId(0), dim: 0, axis: batch };
+        assert!(action_valid(&f, &mesh, &dm, &st, &tile_d0_batch));
     }
 
     #[test]

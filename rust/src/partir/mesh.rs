@@ -42,37 +42,58 @@ impl Mesh {
 
     /// Parse the CLI/request syntax `name=size[,name=size]`, e.g.
     /// `"batch=2,model=4"`. Axis order in the spec is mesh order.
+    ///
+    /// Diagnostics name the offending token with its 1-based column and
+    /// an expected/found pair, matching the textual-IR parser's style
+    /// (`ir::parser`), so `serve`/`batch` reject bad requests with
+    /// errors the sender can act on.
     pub fn parse(spec: &str) -> Result<Mesh, String> {
         let mut axes: Vec<(String, i64)> = Vec::new();
+        let mut offset = 0usize;
         for part in spec.split(',') {
-            let part = part.trim();
-            if part.is_empty() {
+            let part_start = offset;
+            offset += part.len() + 1; // +1 for the ',' split away
+            let trimmed = part.trim();
+            if trimmed.is_empty() {
                 continue;
             }
-            let (name, size) = part
-                .split_once('=')
-                .ok_or_else(|| format!("bad mesh spec '{part}' (want name=size)"))?;
-            let size: i64 = size
-                .trim()
-                .parse()
-                .map_err(|_| format!("bad mesh spec '{part}': size is not an integer"))?;
-            if size < 1 {
-                return Err(format!("bad mesh spec '{part}': size must be >= 1"));
+            // 1-based column of the first non-space char of this part.
+            let col = part_start + (part.len() - part.trim_start().len()) + 1;
+            let err = |msg: String| format!("mesh spec '{spec}': at column {col}: {msg}");
+            let Some((name, size)) = trimmed.split_once('=') else {
+                return Err(err(format!(
+                    "expected 'name=size', found '{trimmed}' (missing '=')"
+                )));
+            };
+            let name = name.trim();
+            let size_s = size.trim();
+            if name.is_empty() {
+                return Err(err(format!("expected axis name before '=', found '{trimmed}'")));
             }
-            let name = name.trim().to_string();
+            let size: i64 = size_s.parse().map_err(|_| {
+                err(format!("expected integer size after '{name}=', found '{size_s}'"))
+            })?;
+            if size < 1 {
+                return Err(err(format!("axis \"{name}\": size must be >= 1, found {size}")));
+            }
             // Duplicate names would make axis_by_name silently resolve
             // only the first, so a --pin/manual_axes on the duplicate
             // would leave its twin searchable.
             if axes.iter().any(|(n, _)| *n == name) {
-                return Err(format!("bad mesh spec '{spec}': duplicate axis \"{name}\""));
+                return Err(err(format!("duplicate axis \"{name}\"")));
             }
-            axes.push((name, size));
+            axes.push((name.to_string(), size));
         }
         if axes.is_empty() {
-            return Err(format!("empty mesh spec '{spec}'"));
+            return Err(format!(
+                "mesh spec '{spec}': expected 'name=size[,name=size]', found no axes"
+            ));
         }
         if axes.len() > MAX_AXES {
-            return Err(format!("mesh spec '{spec}': at most {MAX_AXES} axes supported"));
+            return Err(format!(
+                "mesh spec '{spec}': at most {MAX_AXES} axes supported, found {}",
+                axes.len()
+            ));
         }
         let named: Vec<(&str, i64)> = axes.iter().map(|(n, s)| (n.as_str(), *s)).collect();
         Ok(Mesh::new(&named))
@@ -154,5 +175,22 @@ mod tests {
         assert!(Mesh::parse("batch=0").is_err());
         assert!(Mesh::parse("a=2,b=2,c=2,d=2,e=2").is_err());
         assert!(Mesh::parse("model=2,model=4").is_err(), "duplicate axis names rejected");
+    }
+
+    #[test]
+    fn parse_errors_carry_position_and_expected_found() {
+        let e = Mesh::parse("batch").unwrap_err();
+        assert!(e.contains("column 1") && e.contains("expected 'name=size'"), "{e}");
+        assert!(e.contains("found 'batch'"), "{e}");
+        let e = Mesh::parse("batch=2, model=x").unwrap_err();
+        assert!(e.contains("column 10"), "{e}");
+        assert!(e.contains("expected integer size after 'model='"), "{e}");
+        assert!(e.contains("found 'x'"), "{e}");
+        let e = Mesh::parse("batch=2,batch=4").unwrap_err();
+        assert!(e.contains("column 9") && e.contains("duplicate axis \"batch\""), "{e}");
+        let e = Mesh::parse("m=0").unwrap_err();
+        assert!(e.contains("size must be >= 1, found 0"), "{e}");
+        let e = Mesh::parse("=4").unwrap_err();
+        assert!(e.contains("expected axis name before '='"), "{e}");
     }
 }

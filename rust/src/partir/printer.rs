@@ -31,7 +31,8 @@ pub fn print_partir(f: &Func, mesh: &Mesh, dm: &DistMap, atomic: &AtomicSet) -> 
             for (axis, dim) in tilings {
                 writeln!(
                     s,
-                    "  // %arg{i} ({}): partir.tile {dim} \"{}\" (%r : !partir.range<{}>) {{ partir.slice {dim} %arg{i}[%r] }}",
+                    "  // %arg{i} ({}): partir.tile {dim} \"{}\" (%r : !partir.range<{}>) \
+                     {{ partir.slice {dim} %arg{i}[%r] }}",
                     a.name,
                     mesh.name(axis),
                     mesh.size(axis)

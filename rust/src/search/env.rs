@@ -341,7 +341,12 @@ impl<'a> RewriteEnv<'a> {
         if self.options.auto_infer_rest {
             let mut dm = ep.dm.clone();
             let mut stats = PropStats::default();
-            self.program.prop.infer_rest(&self.program.func, &self.program.mesh, &mut dm, &mut stats);
+            self.program.prop.infer_rest(
+                &self.program.func,
+                &self.program.mesh,
+                &mut dm,
+                &mut stats,
+            );
             evaluate(self.program, &dm, &self.device, &self.weights)
         } else {
             evaluate(self.program, &ep.dm, &self.device, &self.weights)
@@ -464,8 +469,13 @@ mod tests {
     fn eval_memo_skips_repeat_terminal_states() {
         let (program, device) = env_for(1, SearchOptions::default());
         let wl = RewriteEnv::default_worklist(&program);
-        let env =
-            RewriteEnv::new(&program, device, CostWeights::default(), SearchOptions::default(), &wl);
+        let env = RewriteEnv::new(
+            &program,
+            device,
+            CostWeights::default(),
+            SearchOptions::default(),
+            &wl,
+        );
         let mut memo = EvalMemo::new();
 
         // Two episodes that stop immediately share a terminal state.
@@ -506,8 +516,13 @@ mod tests {
     fn stop_ends_episode_and_reward_is_normalised() {
         let (program, device) = env_for(1, SearchOptions::default());
         let wl = RewriteEnv::default_worklist(&program);
-        let env =
-            RewriteEnv::new(&program, device, CostWeights::default(), SearchOptions::default(), &wl);
+        let env = RewriteEnv::new(
+            &program,
+            device,
+            CostWeights::default(),
+            SearchOptions::default(),
+            &wl,
+        );
         let mut ep = env.reset();
         env.step(&mut ep, EnvAction::Stop);
         assert!(ep.done);

@@ -284,6 +284,28 @@ mod tests {
     }
 
     #[test]
+    fn textual_round_trip_preserves_structure_and_fingerprint() {
+        use crate::ir::{parse_func, print_func};
+        use crate::models::graphnet::{build_graphnet, GraphNetConfig};
+        use crate::models::transformer::{build_transformer, TransformerConfig};
+        for f in [
+            build_mlp(&MlpConfig::small()).func,
+            build_transformer(&TransformerConfig::tiny(2)).func,
+            build_graphnet(&GraphNetConfig::small()).func,
+        ] {
+            let name = f.name.clone();
+            let g = parse_func(&print_func(&f))
+                .unwrap_or_else(|e| panic!("printed {name} must parse: {e}"));
+            assert_eq!(g, f, "parse(print(f)) != f for {name}");
+            assert_eq!(
+                func_fingerprint(&g),
+                func_fingerprint(&f),
+                "fingerprint must survive the textual round-trip for {name}"
+            );
+        }
+    }
+
+    #[test]
     fn hex_form_is_fixed_width() {
         assert_eq!(Fingerprint(0xab).hex(), "00000000000000ab");
         assert_eq!(Fingerprint(u64::MAX).hex(), "ffffffffffffffff");

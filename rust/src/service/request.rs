@@ -10,6 +10,22 @@
 //!  "filter": "heuristic", "top_k": 25, "layers": 4}
 //! ```
 //!
+//! Instead of naming a built-in `"model"`, a request may carry an
+//! arbitrary program in the textual IR form (DESIGN.md §10) under
+//! `"program"`: either the program text inline, or `"@path/to/f.pir"`
+//! to read it from a file (resolved against the service's working
+//! directory). The program is parsed and verified before planning, and
+//! the request fingerprint is computed over the *parsed* structure, so
+//! a program request and an equivalent built-in-model request share a
+//! cache line. `"model"` and `"program"` are mutually exclusive.
+//!
+//! Trust note: `@path` is read with the service process's own
+//! filesystem privileges, and parse diagnostics echo a short prefix of
+//! whatever was read (expected/found messages). The serve/batch front
+//! ends take requests from stdin or an operator-named file — treat
+//! request authorship as operator-trusted, and prefer inline
+//! `"program"` text when relaying requests from anyone else.
+//!
 //! Only `id` is required; everything else has defaults. Response:
 //!
 //! ```json
@@ -24,9 +40,6 @@
 use super::executor::PlanJob;
 use crate::cost::composite::CostWeights;
 use crate::ir::Func;
-use crate::models::graphnet::{build_graphnet, GraphNetConfig};
-use crate::models::mlp::{build_mlp, MlpConfig};
-use crate::models::transformer::{build_transformer, TransformerConfig};
 use crate::partir::mesh::Mesh;
 use crate::search::env::SearchOptions;
 use crate::search::mcts::MctsConfig;
@@ -39,8 +52,11 @@ use anyhow::{anyhow, bail, Context, Result};
 #[derive(Debug, Clone, PartialEq)]
 pub struct PartitionRequest {
     pub id: String,
-    /// `mlp` | `transformer` | `graphnet`.
+    /// `mlp` | `transformer` | `graphnet` (ignored when `program` is set).
     pub model: String,
+    /// Arbitrary program in textual IR form: inline text, or `@path`
+    /// to a `.pir` file. Mutually exclusive with an explicit `model`.
+    pub program: Option<String>,
     /// Transformer depth (ignored by the other models).
     pub layers: usize,
     /// Mesh spec, `"name=size[,name=size]"`.
@@ -62,6 +78,7 @@ impl Default for PartitionRequest {
         PartitionRequest {
             id: String::new(),
             model: "transformer".to_string(),
+            program: None,
             layers: 2,
             mesh: "model=4".to_string(),
             pin: Vec::new(),
@@ -127,12 +144,25 @@ impl PartitionRequest {
                 }
             }
         };
-        let get_usize =
-            |key: &str, def: usize| -> Result<usize> { get_uint(key, def as u64).map(|x| x as usize) };
+        let get_usize = |key: &str, def: usize| -> Result<usize> {
+            get_uint(key, def as u64).map(|x| x as usize)
+        };
         let seed = get_uint("seed", d.seed)?;
+        let program = j
+            .get("program")
+            .map(|v| {
+                v.as_str()
+                    .map(str::to_string)
+                    .context("'program' must be a string (inline text or '@file.pir')")
+            })
+            .transpose()?;
+        if program.is_some() && j.get("model").is_some() {
+            bail!("request has both 'model' and 'program'; they are mutually exclusive");
+        }
         Ok(PartitionRequest {
             id,
             model: get_str("model", &d.model)?,
+            program,
             layers: get_usize("layers", d.layers)?,
             mesh: get_str("mesh", &d.mesh)?,
             pin: str_list(j, "pin")?,
@@ -153,9 +183,15 @@ impl PartitionRequest {
 
     pub fn to_json(&self) -> Json {
         let strs = |xs: &[String]| Json::Arr(xs.iter().map(|s| Json::str(s.clone())).collect());
+        // `model` and `program` are mutually exclusive on the wire, so
+        // emit whichever one this request actually uses.
+        let source = match &self.program {
+            Some(p) => ("program", Json::str(p.clone())),
+            None => ("model", Json::str(self.model.clone())),
+        };
         Json::obj(vec![
             ("id", Json::str(self.id.clone())),
-            ("model", Json::str(self.model.clone())),
+            source,
             ("layers", Json::num(self.layers as f64)),
             ("mesh", Json::str(self.mesh.clone())),
             ("pin", strs(&self.pin)),
@@ -169,11 +205,16 @@ impl PartitionRequest {
     }
 
     fn build_func(&self) -> Result<Func> {
-        Ok(match self.model.as_str() {
-            "mlp" => build_mlp(&MlpConfig::small()).func,
-            "graphnet" => build_graphnet(&GraphNetConfig::small()).func,
-            "transformer" => build_transformer(&TransformerConfig::tiny(self.layers.max(1))).func,
-            other => bail!("unknown model '{other}' (want mlp|transformer|graphnet)"),
+        if let Some(src) = &self.program {
+            let text = match src.strip_prefix('@') {
+                Some(path) => std::fs::read_to_string(path)
+                    .map_err(|e| anyhow!("reading program file '{path}': {e}"))?,
+                None => src.clone(),
+            };
+            return crate::ir::parser::parse_func(&text).map_err(|e| anyhow!("program: {e}"));
+        }
+        crate::models::build_by_name(&self.model, self.layers).ok_or_else(|| {
+            anyhow!("unknown model '{}' (want mlp|transformer|graphnet)", self.model)
         })
     }
 
@@ -334,6 +375,55 @@ mod tests {
         assert!(PartitionRequest::parse_line("{\"id\":\"x\",\"budget\":2.7}").is_err());
         assert!(PartitionRequest::parse_line("{\"id\":\"x\",\"seed\":1e17}").is_err());
         assert!(PartitionRequest::parse_line("{\"id\":\"x\",\"seed\":9007199254740992}").is_ok());
+    }
+
+    #[test]
+    fn program_requests_parse_build_and_round_trip() {
+        let text = crate::ir::printer::print_func(
+            &crate::models::mlp::build_mlp(&crate::models::mlp::MlpConfig::small()).func,
+        );
+        let j = Json::obj(vec![
+            ("id", Json::str("p1".to_string())),
+            ("program", Json::str(text.clone())),
+            ("mesh", Json::str("model=4".to_string())),
+        ]);
+        let r = PartitionRequest::from_json(&parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(r.program.as_deref(), Some(text.as_str()));
+        let job = r.build_job(&JobDefaults::default()).unwrap();
+        assert_eq!(job.func.name, "mlp_update");
+        // The parsed program fingerprints identically to the built-in
+        // model it was printed from (the acceptance criterion that lets
+        // external frontends share the cache with built-in requests).
+        let model_req = PartitionRequest {
+            id: "m1".into(),
+            model: "mlp".into(),
+            mesh: "model=4".into(),
+            ..Default::default()
+        };
+        let model_job = model_req.build_job(&JobDefaults::default()).unwrap();
+        assert_eq!(job.fingerprint(), model_job.fingerprint());
+        // Wire round-trip: to_json emits 'program' (not 'model').
+        let back = PartitionRequest::from_json(&parse(&r.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn program_requests_reject_conflicts_and_bad_programs() {
+        let both = "{\"id\":\"x\",\"model\":\"mlp\",\"program\":\"func @f() -> () { return }\"}";
+        let e = PartitionRequest::parse_line(both).unwrap_err();
+        assert!(e.to_string().contains("mutually exclusive"), "{e}");
+        assert!(PartitionRequest::parse_line("{\"id\":\"x\",\"program\":3}").is_err());
+        // A malformed program fails at build time with a positioned error.
+        let r = PartitionRequest::parse_line("{\"id\":\"x\",\"program\":\"func nope\"}").unwrap();
+        let e = r.build_job(&JobDefaults::default()).unwrap_err();
+        assert!(e.to_string().contains("line 1"), "{e}");
+        // A missing @file fails with the path in the message.
+        let line = "{\"id\":\"x\",\"program\":\"@/no/such.pir\"}";
+        let e = PartitionRequest::parse_line(line)
+            .unwrap()
+            .build_job(&JobDefaults::default())
+            .unwrap_err();
+        assert!(e.to_string().contains("/no/such.pir"), "{e}");
     }
 
     #[test]

@@ -457,6 +457,24 @@ mod tests {
     }
 
     #[test]
+    fn program_requests_share_the_cache_with_equivalent_model_requests() {
+        let svc = tiny_service();
+        let a = svc.handle(&req("a", 1));
+        assert!(a.error.is_none(), "{:?}", a.error);
+        // The same program, submitted as text by an "external frontend".
+        let text = crate::ir::print_func(
+            &crate::models::mlp::build_mlp(&crate::models::mlp::MlpConfig::small()).func,
+        );
+        let r = PartitionRequest { program: Some(text), model: String::new(), ..req("b", 1) };
+        let b = svc.handle(&r);
+        assert!(b.error.is_none(), "{:?}", b.error);
+        assert_eq!(a.fingerprint, b.fingerprint, "parsed program must fingerprint identically");
+        assert!(b.cached, "program request must hit the model request's cache line");
+        assert_eq!(a.plan_json, b.plan_json);
+        assert_eq!(svc.searches_run(), 1);
+    }
+
+    #[test]
     fn malformed_requests_become_error_responses() {
         let svc = tiny_service();
         let resp = svc.handle_line("{\"id\":\"x\",\"model\":\"resnet\"}");

@@ -179,7 +179,9 @@ impl PartitionPlan {
             cost: num(e, "cost")?,
         };
         let mut mesh_axes = Vec::new();
-        for m in j.get("mesh").and_then(|v| v.as_arr()).ok_or_else(|| anyhow!("plan missing 'mesh'"))? {
+        let mesh_arr =
+            j.get("mesh").and_then(|v| v.as_arr()).ok_or_else(|| anyhow!("plan missing 'mesh'"))?;
+        for m in mesh_arr {
             let name = m.get("axis").and_then(|v| v.as_str()).context("mesh axis missing name")?;
             let size = m.get("size").and_then(|v| v.as_f64()).context("mesh axis missing size")?;
             mesh_axes.push((name.to_string(), size as i64));

@@ -122,6 +122,15 @@ impl Session {
         }
     }
 
+    /// Build a session from the textual IR form (DESIGN.md §10) — the
+    /// entry point for external frontends that submit programs as text
+    /// rather than through [`crate::ir::GraphBuilder`]. The text is
+    /// parsed *and verified*; parse errors carry line/column positions.
+    pub fn from_text(src: &str, mesh: Mesh) -> Result<Session> {
+        let func = crate::ir::parser::parse_func(src).map_err(|e| anyhow!("{e}"))?;
+        Ok(Session::new(func, mesh))
+    }
+
     /// One-shot entry point for service workers (DESIGN.md §9): build a
     /// session, run a tactic pipeline, return the plan. Each executor
     /// worker thread calls this with its own cloned `Func`/`Mesh`, so no
@@ -465,6 +474,29 @@ mod tests {
         assert_eq!(back.input_specs, plan.input_specs);
         assert_eq!(back.eval.collectives, plan.eval.collectives);
         assert_eq!(back.decisions, plan.decisions);
+    }
+
+    #[test]
+    fn sessions_build_from_textual_programs() {
+        let text = crate::ir::printer::print_func(&build_mlp(&MlpConfig::small()).func);
+        let mut s = Session::from_text(&text, Mesh::new(&[("batch", 2), ("model", 4)])).unwrap();
+        // The parsed program keeps its argument names, so name-addressed
+        // manual constraints work exactly as for the built-in models.
+        let plan = s
+            .run(&[
+                Tactic::Manual {
+                    constraints: vec![ShardingConstraint::new("x", 0, "batch")],
+                    manual_axes: vec!["batch".to_string()],
+                },
+                Tactic::InferRest,
+                Tactic::Lower,
+            ])
+            .unwrap();
+        let x = plan.input_specs.iter().find(|sp| sp.name == "x").unwrap();
+        assert!(x.tiled_on("batch"));
+        // Parse errors surface with positions.
+        let err = Session::from_text("func nope", Mesh::new(&[("m", 2)])).unwrap_err();
+        assert!(err.to_string().contains("line 1"), "{err}");
     }
 
     #[test]

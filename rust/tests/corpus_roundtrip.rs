@@ -1,0 +1,58 @@
+//! The golden-corpus wall (tier-1 twin of the CI `corpus-roundtrip`
+//! step): every `configs/corpus/*.pir` must parse, verify, and satisfy
+//! `parse(print(parse(text))) == parse(text)`, and the corpus as a whole
+//! must exercise every op kind — so any grammar or printer change that
+//! breaks the public textual format fails here before it ships.
+
+use automap::ir::{parse_func, print_func, OpKind};
+
+fn corpus_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../configs/corpus")
+}
+
+#[test]
+fn every_corpus_file_parses_verifies_and_round_trips() {
+    let dir = corpus_dir();
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("corpus dir {}: {e}", dir.display()))
+        .map(|e| e.expect("corpus entry").path())
+        .filter(|p| p.extension().is_some_and(|x| x == "pir"))
+        .collect();
+    files.sort();
+    assert!(files.len() >= 5, "corpus must not shrink (found {} files)", files.len());
+
+    let mut seen = vec![false; OpKind::NUM_KINDS];
+    for p in &files {
+        let text = std::fs::read_to_string(p).expect("corpus file readable");
+        let f = parse_func(&text).unwrap_or_else(|e| panic!("{}: {e}", p.display()));
+        let g = parse_func(&print_func(&f))
+            .unwrap_or_else(|e| panic!("{}: printed form failed to re-parse: {e}", p.display()));
+        assert_eq!(g, f, "{}: round-trip mismatch", p.display());
+        for n in &f.nodes {
+            seen[n.op.kind_id()] = true;
+        }
+    }
+    let missing: Vec<usize> = (0..OpKind::NUM_KINDS).filter(|&k| !seen[k]).collect();
+    assert!(missing.is_empty(), "corpus must exercise every op kind; missing ids {missing:?}");
+}
+
+#[test]
+fn corpus_covers_the_edge_cases_the_grammar_promises() {
+    let read = |name: &str| {
+        let p = corpus_dir().join(name);
+        let text = std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("{name}: {e}"));
+        parse_func(&text).unwrap_or_else(|e| panic!("{name}: {e}"))
+    };
+    let zero = read("zero_arg.pir");
+    assert_eq!(zero.num_args(), 0);
+    assert_eq!(zero.outputs.len(), 2);
+
+    let scoped = read("scoped.pir");
+    assert_eq!(scoped.scope_path(scoped.args[1].scope), "enc/dense_0");
+    let last = scoped.nodes.last().expect("nodes");
+    assert_eq!(scoped.scope_path(last.scope), "enc/act");
+
+    let scalars = read("scalars.pir");
+    assert_eq!(scalars.args[0].ty.rank(), 0, "scalar tensor<f32> arg");
+    assert_eq!(scalars.args[2].name, "adam.m");
+}

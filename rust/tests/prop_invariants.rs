@@ -15,7 +15,8 @@
 use automap::cost::liveness::peak_memory;
 use automap::ir::autodiff::gradients;
 use automap::ir::interp::{eval, eval_all, Tensor};
-use automap::ir::{ArgKind, GraphBuilder, TensorType, ValueId};
+use automap::ir::{parse_func, print_func};
+use automap::ir::{ArgKind, CmpDir, DType, DotDims, GraphBuilder, TensorType, ValueId};
 use automap::partir::actions::{Action, DecisionState};
 use automap::partir::dist::DistMap;
 use automap::partir::mesh::{AxisId, Mesh};
@@ -71,6 +72,132 @@ fn random_program(rng: &mut Rng) -> automap::ir::Func {
     let last = *vals.last().unwrap();
     b.output(last);
     b.finish()
+}
+
+/// Random program exercising every op kind, 0–4 arguments of every
+/// kind, and nested scopes — food for the textual round-trip property.
+fn random_rich_program(rng: &mut Rng) -> automap::ir::Func {
+    let mut b = GraphBuilder::new(format!("rich_{}", rng.gen_range(1000)));
+    let kinds = [ArgKind::Input, ArgKind::Parameter, ArgKind::OptState, ArgKind::Constant];
+    let n_args = rng.gen_range(5);
+    let mut pool: Vec<ValueId> = Vec::new();
+    for i in 0..n_args {
+        let scoped = rng.gen_bool(0.5);
+        if scoped {
+            b.push_scope(&format!("blk_{i}"));
+        }
+        pool.push(b.arg(
+            format!("a{i}/w.{i}"),
+            TensorType::f32(&[4, 8]),
+            kinds[rng.gen_range(4)],
+        ));
+        if scoped {
+            b.pop_scope();
+        }
+    }
+    // With zero args the pool seeds from constants instead.
+    b.push_scope(&format!("outer_{}", rng.gen_range(3)));
+    pool.push(b.constant(rng.gen_f64() - 0.5, TensorType::f32(&[4, 8])));
+    pool.push(b.iota(rng.gen_range(2), TensorType::f32(&[4, 8])));
+    let pick = |rng: &mut Rng, pool: &[ValueId]| *rng.choose(pool);
+
+    // Elementwise backbone (all [4,8], so any pool member composes).
+    let x = pick(rng, &pool);
+    let y = pick(rng, &pool);
+    let e = b.add(x, y);
+    let e = b.sub(e, pick(rng, &pool));
+    let e = b.mul(e, pick(rng, &pool));
+    let e = b.div(e, pick(rng, &pool));
+    let e = b.max(e, pick(rng, &pool));
+    let e = b.min(e, pick(rng, &pool));
+    b.push_scope("unary");
+    let e = b.neg(e);
+    let e = b.exp(e);
+    let e = b.log(e);
+    let e = b.tanh(e);
+    let e = b.abs(e);
+    let e = b.sqrt(e);
+    let e = b.rsqrt(e);
+    b.pop_scope();
+    let dirs = [CmpDir::Lt, CmpDir::Le, CmpDir::Gt, CmpDir::Ge, CmpDir::Eq, CmpDir::Ne];
+    let cmp = b.compare(dirs[rng.gen_range(6)], e, pick(rng, &pool));
+    let sel = b.select(cmp, e, pick(rng, &pool));
+    let cv = b.convert(sel, DType::BF16);
+    let cv = b.convert(cv, DType::F32);
+
+    // Structured ops.
+    let table = b.constant(0.25, TensorType::f32(&[10, 8]));
+    let dot = DotDims {
+        lhs_batch: vec![],
+        rhs_batch: vec![],
+        lhs_contract: vec![1],
+        rhs_contract: vec![1],
+    };
+    let d = b.dot(dot, cv, table);
+    let rs = b.reduce_sum(d, vec![1]);
+    let rm = b.reduce_max(d, vec![0]);
+    let bc = b.broadcast(rs, vec![0], TensorType::f32(&[4, 10]));
+    let rsh = b.reshape(bc, &[40]);
+    let tp = b.transpose(d, vec![1, 0]);
+    let idsf = b.iota(0, TensorType::f32(&[6]));
+    let ids = b.convert(idsf, DType::I32);
+    let g = b.gather(table, ids);
+    let ss = b.segment_sum(g, ids, 7);
+    b.pop_scope();
+
+    b.output(rsh);
+    b.output(tp);
+    b.output(ss);
+    if rng.gen_bool(0.5) {
+        b.output(rm);
+    }
+    if rng.gen_bool(0.3) {
+        b.output(pick(rng, &pool));
+    }
+    b.finish()
+}
+
+#[test]
+fn prop_parse_print_round_trip_is_exact() {
+    check("parse_print_roundtrip", 40, 0x17, |rng| {
+        let f = random_rich_program(rng);
+        automap::ir::verify::verify(&f).map_err(|e| e.to_string())?;
+        let text = print_func(&f);
+        let g = parse_func(&text).map_err(|e| format!("{e}\nsource:\n{text}"))?;
+        if g != f {
+            return Err(format!("parse(print(f)) != f\nsource:\n{text}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parser_never_panics_and_positions_errors() {
+    check("parser_corruption", 80, 0x18, |rng| {
+        let f = random_rich_program(rng);
+        let text = print_func(&f);
+        let lines = text.lines().count();
+        // Truncation at a random char boundary: the parser must reject
+        // (or accept a still-complete prefix) without panicking, and any
+        // error must carry a plausible 1-based position.
+        let mut cut = rng.gen_range(text.len());
+        while !text.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        if let Err(e) = parse_func(&text[..cut]) {
+            if e.line < 1 || e.col < 1 || e.line > lines + 1 {
+                return Err(format!("implausible position {}:{} ({lines} lines)", e.line, e.col));
+            }
+        }
+        // Single-byte mutation: never a panic (outcome may be either).
+        let mut bytes = text.clone().into_bytes();
+        let at = rng.gen_range(bytes.len());
+        bytes[at] = b"Z#%9"[rng.gen_range(4)];
+        if let Ok(mutated) = String::from_utf8(bytes) {
+            let _ = parse_func(&mutated);
+        }
+        Ok(())
+    });
 }
 
 #[test]
