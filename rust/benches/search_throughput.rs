@@ -26,6 +26,16 @@ fn main() {
         "BENCH search_throughput/cache_hit median_ns={:.0} probes={}",
         report.cache_hit_median_ns, report.cache_probes
     );
+    println!("BENCH search_throughput/step      median_ns={:.0}", report.step_median_ns);
+    println!("BENCH search_throughput/eval      median_ns={:.0}", report.eval_median_ns);
+    println!("BENCH search_throughput/stealing  rounds={} steals={}", report.rounds, report.steals);
+    if let Some(b) = report.baseline_single_episodes_per_sec {
+        println!(
+            "BENCH search_throughput/baseline  episodes_per_sec={:.0} improvement={:.2}x",
+            b,
+            report.single_episodes_per_sec / b.max(1e-9)
+        );
+    }
     let path = write_report(&report).expect("writing BENCH_search.json failed");
     println!("wrote {}", path.display());
 }

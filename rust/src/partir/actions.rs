@@ -42,9 +42,21 @@ impl Action {
 /// hot path (`is_atomic` inside `action_valid`, called for every
 /// candidate action of every MCTS step) is O(1) instead of the O(n)
 /// `Vec::contains` scan it replaced.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Default)]
 pub struct AtomicSet {
     bits: Vec<u64>,
+}
+
+/// Manual impl so `clone_from` reuses the existing word buffer — the
+/// MCTS episode loop resets its scratch episode this way (DESIGN.md §8).
+impl Clone for AtomicSet {
+    fn clone(&self) -> AtomicSet {
+        AtomicSet { bits: self.bits.clone() }
+    }
+
+    fn clone_from(&mut self, src: &AtomicSet) {
+        self.bits.clone_from(&src.bits);
+    }
 }
 
 /// Equality is by membership: trailing zero words (from pre-sizing via
@@ -113,10 +125,23 @@ impl From<&[ValueId]> for AtomicSet {
 
 /// The decision state of one search episode: explicit actions taken plus
 /// the atomic set. The derived `DistMap` is recomputed by the env.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Default)]
 pub struct DecisionState {
     pub actions: Vec<Action>,
     pub atomic: AtomicSet,
+}
+
+/// Manual impl so `clone_from` reuses the action vector and atomic
+/// bitmap allocations on the episode-reset hot path.
+impl Clone for DecisionState {
+    fn clone(&self) -> DecisionState {
+        DecisionState { actions: self.actions.clone(), atomic: self.atomic.clone() }
+    }
+
+    fn clone_from(&mut self, src: &DecisionState) {
+        self.actions.clone_from(&src.actions);
+        self.atomic.clone_from(&src.atomic);
+    }
 }
 
 impl DecisionState {

@@ -38,6 +38,19 @@ impl PartirProgram {
             .collect()
     }
 
+    /// The stuck-node set of a settled (forward-fixpoint) distribution
+    /// map: one status-collection pass, reported once per node in
+    /// ascending order. `dm` is not modified — every map produced by
+    /// [`PartirProgram::apply`] or a search-env step is a fixpoint, so
+    /// the pass assigns nothing.
+    pub fn stuck_set(&self, dm: &DistMap) -> Vec<u32> {
+        let mut scratch = dm.clone();
+        let mut stats = PropStats::default();
+        self.prop.forward(&self.func, &self.mesh, &mut scratch, &mut stats);
+        debug_assert_eq!(&scratch, dm, "stuck_set expects a forward-fixpoint map");
+        stats.stuck_nodes
+    }
+
     /// Apply a decision sequence: replay explicit actions with forward
     /// propagation after each, exactly as the search env does.
     pub fn apply(&self, state: &DecisionState) -> (DistMap, PropStats) {

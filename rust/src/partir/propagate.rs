@@ -11,11 +11,24 @@
 //! This is the single hottest code path in the system: it runs after
 //! every MCTS action over programs with up to ~100k values. Rules are
 //! precomputed per node; the sweep itself is allocation-free.
+//!
+//! Two sweep forms exist (DESIGN.md §8):
+//!   * [`Propagator::forward`] — the full pass over every node, the
+//!     reference semantics used by replay ([`super::program`]);
+//!   * [`Propagator::forward_from`] — the incremental pass the search
+//!     env uses per action: only nodes reachable from the dirty-value
+//!     frontier are re-swept, in the same ascending-index order the full
+//!     pass uses, so starting from a forward-fixpoint map the result is
+//!     bit-identical to the full pass (debug cross-check in
+//!     `search/env.rs`; property + corpus tests in
+//!     `tests/prop_invariants.rs`).
 
 use super::dist::{DistMap, UNKNOWN};
 use super::mesh::{AxisId, Mesh};
 use super::registry::{rule_for, OpRule};
 use crate::ir::{Func, TensorType, ValueId};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Precomputed propagation context for one program (immutable during search).
 pub struct Propagator {
@@ -27,6 +40,9 @@ pub struct Propagator {
     pub global_bytes: Vec<i64>,
     /// Global element count per value.
     pub global_elems: Vec<i64>,
+    /// Consumer node indices per value — the fan-out edges the
+    /// incremental sweep follows from a dirty value.
+    users: Vec<Vec<u32>>,
 }
 
 /// Result of a propagation sweep.
@@ -36,6 +52,154 @@ pub struct PropStats {
     pub stuck_nodes: Vec<u32>,
     /// Number of value-axis assignments made.
     pub assigned: usize,
+}
+
+/// Outcome of sweeping one node ([`Propagator::forward_node`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NodeSweep {
+    /// The node's output distribution changed (consumers must re-sweep).
+    pub changed: bool,
+    /// Propagation is stuck at this node w.r.t. the current map.
+    pub stuck: bool,
+    /// Value-axis assignments made at this node.
+    pub assigned: u32,
+}
+
+/// Persistent stuck-node set for incremental sweeps: a bitmap plus a
+/// member count, updated per visited node so the search env never has
+/// to re-derive stuckness with a full pass. Semantics: "the set a fresh
+/// full forward pass over the current map would report".
+#[derive(Debug, Default)]
+pub struct StuckSet {
+    bits: Vec<u64>,
+    count: usize,
+}
+
+impl StuckSet {
+    pub fn with_capacity(num_nodes: usize) -> StuckSet {
+        StuckSet { bits: vec![0; (num_nodes + 63) / 64], count: 0 }
+    }
+
+    #[inline]
+    pub fn insert(&mut self, ni: u32) {
+        let (word, bit) = (ni as usize / 64, ni as usize % 64);
+        if word >= self.bits.len() {
+            self.bits.resize(word + 1, 0);
+        }
+        if self.bits[word] >> bit & 1 == 0 {
+            self.bits[word] |= 1u64 << bit;
+            self.count += 1;
+        }
+    }
+
+    #[inline]
+    pub fn remove(&mut self, ni: u32) {
+        let (word, bit) = (ni as usize / 64, ni as usize % 64);
+        if word < self.bits.len() && self.bits[word] >> bit & 1 == 1 {
+            self.bits[word] &= !(1u64 << bit);
+            self.count -= 1;
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, ni: u32) -> bool {
+        self.bits
+            .get(ni as usize / 64)
+            .map_or(false, |w| w >> (ni as usize % 64) & 1 == 1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.bits.iter_mut().for_each(|w| *w = 0);
+        self.count = 0;
+    }
+
+    /// Replace the membership with `nodes` (duplicates tolerated).
+    pub fn rebuild(&mut self, nodes: &[u32]) {
+        self.clear();
+        for &n in nodes {
+            self.insert(n);
+        }
+    }
+
+    /// Members in ascending node order (the full pass's report order).
+    pub fn to_sorted_vec(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.count);
+        for (wi, &w) in self.bits.iter().enumerate() {
+            if w == 0 {
+                continue;
+            }
+            for b in 0..64 {
+                if w >> b & 1 == 1 {
+                    out.push((wi * 64 + b) as u32);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Clone for StuckSet {
+    fn clone(&self) -> StuckSet {
+        StuckSet { bits: self.bits.clone(), count: self.count }
+    }
+
+    fn clone_from(&mut self, src: &StuckSet) {
+        self.bits.clone_from(&src.bits);
+        self.count = src.count;
+    }
+}
+
+/// Reusable pending-node queue for the incremental sweep: a min-heap of
+/// dirty node indices plus an in-queue bitmap so a node is swept at most
+/// once per position. Drained empty by every [`Propagator::forward_from`]
+/// call, so clones never copy queue contents.
+#[derive(Debug, Default)]
+pub struct FrontierScratch {
+    heap: BinaryHeap<Reverse<u32>>,
+    queued: Vec<bool>,
+}
+
+impl FrontierScratch {
+    pub fn with_capacity(num_nodes: usize) -> FrontierScratch {
+        FrontierScratch { heap: BinaryHeap::with_capacity(64), queued: vec![false; num_nodes] }
+    }
+
+    #[inline]
+    fn push(&mut self, ni: u32) {
+        let i = ni as usize;
+        if i >= self.queued.len() {
+            self.queued.resize(i + 1, false);
+        }
+        if !self.queued[i] {
+            self.queued[i] = true;
+            self.heap.push(Reverse(ni));
+        }
+    }
+}
+
+impl Clone for FrontierScratch {
+    fn clone(&self) -> FrontierScratch {
+        // The queue is empty between sweeps (invariant), so a clone only
+        // needs a same-sized all-false bitmap.
+        FrontierScratch {
+            heap: BinaryHeap::with_capacity(64),
+            queued: vec![false; self.queued.len()],
+        }
+    }
+
+    fn clone_from(&mut self, src: &FrontierScratch) {
+        self.heap.clear();
+        self.queued.clear();
+        self.queued.resize(src.queued.len(), false);
+    }
 }
 
 impl Propagator {
@@ -58,7 +222,13 @@ impl Propagator {
         let global_elems = (0..f.num_values())
             .map(|v| f.value_type(ValueId(v as u32)).num_elements())
             .collect();
-        Propagator { rules, dims, global_bytes, global_elems }
+        let mut users = vec![Vec::new(); f.num_values()];
+        for (ni, node) in f.nodes.iter().enumerate() {
+            for &inp in &node.inputs {
+                users[inp.index()].push(ni as u32);
+            }
+        }
+        Propagator { rules, dims, global_bytes, global_elems, users }
     }
 
     /// Global dims of a value (borrowed; avoids re-walking the Func).
@@ -72,86 +242,154 @@ impl Propagator {
         self.dims[v][dim] % size == 0
     }
 
+    /// Sweep one node across all axes: the shared body of the full and
+    /// incremental forward passes. A node's outcome is a pure function
+    /// of the current map at its inputs and output, so re-sweeping an
+    /// unchanged node is a no-op — the property both the full-pass
+    /// fixpoint argument and the incremental sweep rest on.
+    #[inline]
+    pub fn forward_node(&self, f: &Func, mesh: &Mesh, dm: &mut DistMap, ni: usize) -> NodeSweep {
+        let node = &f.nodes[ni];
+        let rule = &self.rules[ni];
+        let out_v = f.num_args() + ni;
+        let num_axes = mesh.num_axes();
+        let mut sweep = NodeSweep::default();
+        for a in 0..num_axes {
+            let axis = AxisId(a);
+            let asize = mesh.size(axis);
+            if asize == 1 {
+                continue;
+            }
+            // Reduced-tie hit on this axis?
+            let mut reduced_hit = false;
+            let mut reduced_conflict = false;
+            for group in &rule.reduced_ties {
+                let mut any = false;
+                let mut all = true;
+                for &(oi, od) in group {
+                    let iv = node.inputs[oi].index();
+                    if dm.d[iv][a] == od as u8 {
+                        any = true;
+                    } else {
+                        all = false;
+                    }
+                }
+                if any {
+                    reduced_hit = true;
+                    if !all && group.len() > 1 {
+                        // only one side of a contraction is tiled:
+                        // lowering must slice/gather — mark stuck.
+                        reduced_conflict = true;
+                    }
+                }
+            }
+            // Output-dim candidate from operand tilings.
+            let mut cand: Option<usize> = None;
+            let mut conflict = false;
+            for (od, ties) in rule.out_ties.iter().enumerate() {
+                for &(oi, idim) in ties {
+                    let iv = node.inputs[oi].index();
+                    if dm.d[iv][a] == idim as u8 {
+                        match cand {
+                            None => cand = Some(od),
+                            Some(c) if c != od => conflict = true,
+                            _ => {}
+                        }
+                    }
+                }
+            }
+            let pre_set = dm.d[out_v][a] != UNKNOWN;
+            match (cand, reduced_hit) {
+                (Some(od), rh) => {
+                    if !pre_set
+                        && self.divisible(out_v, od, asize)
+                        && !dm.dim_taken(out_v, axis, od)
+                    {
+                        dm.set(out_v, axis, od);
+                        sweep.assigned += 1;
+                        sweep.changed = true;
+                    } else if !pre_set {
+                        conflict = true;
+                    }
+                    if rh || conflict || reduced_conflict {
+                        sweep.stuck = true;
+                    }
+                }
+                (None, true) => {
+                    // Pure contraction tiling: output replicated on this
+                    // axis, all-reduce inserted at lowering.
+                    if reduced_conflict {
+                        sweep.stuck = true;
+                    }
+                }
+                (None, false) => {
+                    if conflict {
+                        sweep.stuck = true;
+                    }
+                }
+            }
+        }
+        sweep
+    }
+
     /// Forward sweep: one pass in topological order, all axes at once.
     /// Pre-assigned output dists (explicit actions on internal nodes) are
-    /// never overwritten.
+    /// never overwritten. Stuck nodes are reported once per node, in
+    /// ascending order.
     pub fn forward(&self, f: &Func, mesh: &Mesh, dm: &mut DistMap, stats: &mut PropStats) {
-        let num_axes = mesh.num_axes();
-        for (ni, node) in f.nodes.iter().enumerate() {
-            let rule = &self.rules[ni];
-            let out_v = f.num_args() + ni;
-            for a in 0..num_axes {
-                let axis = AxisId(a);
-                let asize = mesh.size(axis);
-                if asize == 1 {
-                    continue;
-                }
-                // Reduced-tie hit on this axis?
-                let mut reduced_hit = false;
-                let mut reduced_conflict = false;
-                for group in &rule.reduced_ties {
-                    let mut any = false;
-                    let mut all = true;
-                    for &(oi, od) in group {
-                        let iv = node.inputs[oi].index();
-                        if dm.d[iv][a] == od as u8 {
-                            any = true;
-                        } else {
-                            all = false;
-                        }
-                    }
-                    if any {
-                        reduced_hit = true;
-                        if !all && group.len() > 1 {
-                            // only one side of a contraction is tiled:
-                            // lowering must slice/gather — mark stuck.
-                            reduced_conflict = true;
-                        }
-                    }
-                }
-                // Output-dim candidate from operand tilings.
-                let mut cand: Option<usize> = None;
-                let mut conflict = false;
-                for (od, ties) in rule.out_ties.iter().enumerate() {
-                    for &(oi, idim) in ties {
-                        let iv = node.inputs[oi].index();
-                        if dm.d[iv][a] == idim as u8 {
-                            match cand {
-                                None => cand = Some(od),
-                                Some(c) if c != od => conflict = true,
-                                _ => {}
-                            }
-                        }
-                    }
-                }
-                let pre_set = dm.d[out_v][a] != UNKNOWN;
-                match (cand, reduced_hit) {
-                    (Some(od), rh) => {
-                        if !pre_set
-                            && self.divisible(out_v, od, asize)
-                            && !dm.dim_taken(out_v, axis, od)
-                        {
-                            dm.set(out_v, axis, od);
-                            stats.assigned += 1;
-                        } else if !pre_set {
-                            conflict = true;
-                        }
-                        if rh || conflict || reduced_conflict {
-                            stats.stuck_nodes.push(ni as u32);
-                        }
-                    }
-                    (None, true) => {
-                        // Pure contraction tiling: output replicated on this
-                        // axis, all-reduce inserted at lowering.
-                        if reduced_conflict {
-                            stats.stuck_nodes.push(ni as u32);
-                        }
-                    }
-                    (None, false) => {
-                        if conflict {
-                            stats.stuck_nodes.push(ni as u32);
-                        }
-                    }
+        for ni in 0..f.num_nodes() {
+            let sweep = self.forward_node(f, mesh, dm, ni);
+            stats.assigned += sweep.assigned as usize;
+            if sweep.stuck {
+                stats.stuck_nodes.push(ni as u32);
+            }
+        }
+    }
+
+    /// Mark everything that depends on `v` dirty: its consumers, and —
+    /// when `v` is a node result — its producing node (whose `pre_set`
+    /// view changed).
+    #[inline]
+    pub fn seed_dirty(&self, f: &Func, scratch: &mut FrontierScratch, v: ValueId) {
+        if let Some(ni) = f.node_of(v) {
+            scratch.push(ni as u32);
+        }
+        for &ni in &self.users[v.index()] {
+            scratch.push(ni);
+        }
+    }
+
+    /// Incremental forward sweep from the dirty frontier seeded via
+    /// [`Propagator::seed_dirty`] (DESIGN.md §8): pending nodes are
+    /// processed in ascending index order — exactly the order the full
+    /// pass visits them — and every changed output re-queues its
+    /// consumers. `stuck` is maintained as the stuck set w.r.t. the
+    /// resulting map (visited nodes update their status; unvisited nodes
+    /// keep theirs, which is unchanged because their inputs are).
+    /// Starting from a forward-fixpoint map this is bit-identical to a
+    /// full [`Propagator::forward`] pass.
+    pub fn forward_from(
+        &self,
+        f: &Func,
+        mesh: &Mesh,
+        dm: &mut DistMap,
+        stuck: &mut StuckSet,
+        assigned: &mut usize,
+        scratch: &mut FrontierScratch,
+    ) {
+        while let Some(Reverse(ni)) = scratch.heap.pop() {
+            scratch.queued[ni as usize] = false;
+            let sweep = self.forward_node(f, mesh, dm, ni as usize);
+            *assigned += sweep.assigned as usize;
+            if sweep.stuck {
+                stuck.insert(ni);
+            } else {
+                stuck.remove(ni);
+            }
+            if sweep.changed {
+                let out_v = f.num_args() + ni as usize;
+                for &nj in &self.users[out_v] {
+                    scratch.push(nj);
                 }
             }
         }
@@ -199,6 +437,30 @@ impl Propagator {
     pub fn infer_rest(&self, f: &Func, mesh: &Mesh, dm: &mut DistMap, stats: &mut PropStats) {
         for _ in 0..3 {
             let n = self.backward(f, mesh, dm);
+            self.forward(f, mesh, dm, stats);
+            if n == 0 {
+                break;
+            }
+        }
+    }
+
+    /// [`Propagator::infer_rest`], but `stats.stuck_nodes` reports only
+    /// the FINAL forward pass's stuck set — the settled status w.r.t.
+    /// the resulting map — instead of the union across iterations.
+    /// The search env uses this form so its incremental stuck set stays
+    /// consistent after an infer-rest action; `assigned` still
+    /// accumulates across iterations. The map mutations are identical
+    /// to `infer_rest` (same sweep sequence).
+    pub fn infer_rest_settle(
+        &self,
+        f: &Func,
+        mesh: &Mesh,
+        dm: &mut DistMap,
+        stats: &mut PropStats,
+    ) {
+        for _ in 0..3 {
+            let n = self.backward(f, mesh, dm);
+            stats.stuck_nodes.clear();
             self.forward(f, mesh, dm, stats);
             if n == 0 {
                 break;
@@ -342,6 +604,82 @@ mod tests {
         p.forward(&f, &mesh, &mut dm, &mut st);
         assert_eq!(dm.get(1, AxisId(0)), Some(2)); // merged dim tiled
         assert!(st.stuck_nodes.is_empty());
+    }
+
+    #[test]
+    fn incremental_forward_matches_full_pass_on_fig2() {
+        let (f, mesh) = fig2();
+        let p = Propagator::new(&f);
+        let ax = AxisId(0);
+        // Reference: explicit set + full pass.
+        let mut full = DistMap::new(&f, &mesh);
+        full.set(1, ax, 1);
+        let mut st = PropStats::default();
+        p.forward(&f, &mesh, &mut full, &mut st);
+        // Incremental: same explicit set, dirty frontier = {w}.
+        let mut inc = DistMap::new(&f, &mesh);
+        let mut stuck = StuckSet::with_capacity(f.num_nodes());
+        let mut scratch = FrontierScratch::with_capacity(f.num_nodes());
+        let mut assigned = 0usize;
+        inc.set(1, ax, 1);
+        p.seed_dirty(&f, &mut scratch, ValueId(1));
+        p.forward_from(&f, &mesh, &mut inc, &mut stuck, &mut assigned, &mut scratch);
+        assert_eq!(inc, full);
+        assert_eq!(stuck.to_sorted_vec(), st.stuck_nodes);
+        assert_eq!(assigned, st.assigned);
+
+        // A second decision re-sweeps only the affected region and still
+        // matches a fresh full pass over the whole map.
+        full.set(0, ax, 0);
+        let mut st2 = PropStats::default();
+        let mut full2 = full.clone();
+        p.forward(&f, &mesh, &mut full2, &mut st2);
+        inc.set(0, ax, 0);
+        p.seed_dirty(&f, &mut scratch, ValueId(0));
+        p.forward_from(&f, &mesh, &mut inc, &mut stuck, &mut assigned, &mut scratch);
+        assert_eq!(inc, full2);
+        assert_eq!(stuck.to_sorted_vec(), st2.stuck_nodes);
+    }
+
+    #[test]
+    fn stuck_set_insert_remove_rebuild() {
+        let mut s = StuckSet::with_capacity(10);
+        assert!(s.is_empty());
+        s.insert(3);
+        s.insert(70); // past pre-sized capacity: grows
+        s.insert(3); // duplicate insert is a no-op
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(3) && s.contains(70) && !s.contains(4));
+        assert_eq!(s.to_sorted_vec(), vec![3, 70]);
+        s.remove(3);
+        s.remove(3); // duplicate remove is a no-op
+        assert_eq!(s.len(), 1);
+        s.rebuild(&[5, 1, 5]);
+        assert_eq!(s.to_sorted_vec(), vec![1, 5]);
+        s.clear();
+        assert!(s.is_empty() && !s.contains(1));
+    }
+
+    #[test]
+    fn infer_rest_settle_reports_final_pass_stuck_and_same_map() {
+        let (f, mesh) = fig2();
+        let p = Propagator::new(&f);
+        let ax = AxisId(0);
+        let mut a = DistMap::new(&f, &mesh);
+        a.set(1, ax, 1);
+        let mut sa = PropStats::default();
+        p.forward(&f, &mesh, &mut a, &mut sa);
+        let mut b = a.clone();
+        let mut sb = PropStats::default();
+        p.infer_rest(&f, &mesh, &mut a, &mut sa);
+        p.infer_rest_settle(&f, &mesh, &mut b, &mut sb);
+        assert_eq!(a, b, "settle variant must mutate the map identically");
+        // The settled stuck list equals one status pass over the result.
+        let mut probe = b.clone();
+        let mut sp = PropStats::default();
+        p.forward(&f, &mesh, &mut probe, &mut sp);
+        assert_eq!(probe, b, "infer_rest must end on a forward fixpoint");
+        assert_eq!(sb.stuck_nodes, sp.stuck_nodes);
     }
 
     #[test]

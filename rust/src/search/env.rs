@@ -14,11 +14,12 @@
 use crate::cost::composite::{evaluate, CostWeights, Evaluation};
 use crate::ir::{ArgKind, ValueId};
 use crate::partir::actions::{action_valid, Action, DecisionState};
-use crate::partir::dist::DistMap;
+use crate::partir::dist::{DistMap, UNKNOWN};
 use crate::partir::mesh::AxisId;
 use crate::partir::program::PartirProgram;
-use crate::partir::propagate::PropStats;
+use crate::partir::propagate::{FrontierScratch, PropStats, StuckSet};
 use crate::sim::device::Device;
+use std::collections::HashMap;
 
 /// Search options.
 #[derive(Debug, Clone)]
@@ -87,22 +88,55 @@ pub fn role_key(name: &str) -> String {
     out
 }
 
+/// Default [`EvalMemo`] entry cap: ~32k evaluations (a few MB) covers
+/// every realistic per-request budget while bounding a runaway one.
+pub const EVAL_MEMO_DEFAULT_CAP: usize = 32_768;
+
 /// Per-search-run memo of terminal-state evaluations, keyed by
 /// [`RewriteEnv::state_fingerprint`]. Scoped to one search run (one
 /// program + mesh + device + weights), so entries never need
-/// invalidation; size is bounded by the episode budget.
-#[derive(Debug, Default)]
+/// invalidation. Size is bounded by an entry cap with LRU-ish batch
+/// eviction: entries carry a last-use tick, and when the cap is hit the
+/// least-recently-used half is dropped in one deterministic sweep (so a
+/// fixed seed still reproduces identical hit counts). Also owns the
+/// scratch map the auto-infer-rest evaluation path reuses, so a memo
+/// miss costs zero fresh allocations.
+#[derive(Debug)]
 pub struct EvalMemo {
-    map: std::collections::HashMap<u64, Evaluation>,
+    map: HashMap<u64, (Evaluation, u64)>,
+    cap: usize,
+    tick: u64,
     /// Total evaluation requests routed through the memo.
     pub lookups: usize,
     /// Requests answered from the memo (full cost pipeline skipped).
     pub hits: usize,
+    /// Entries dropped by cap eviction.
+    pub evictions: usize,
+    /// Reused infer-rest scratch map (lazily sized to the program).
+    scratch_dm: Option<DistMap>,
+}
+
+impl Default for EvalMemo {
+    fn default() -> Self {
+        EvalMemo::new()
+    }
 }
 
 impl EvalMemo {
     pub fn new() -> EvalMemo {
-        EvalMemo::default()
+        EvalMemo::with_cap(EVAL_MEMO_DEFAULT_CAP)
+    }
+
+    pub fn with_cap(cap: usize) -> EvalMemo {
+        EvalMemo {
+            map: HashMap::new(),
+            cap: cap.max(2),
+            tick: 0,
+            lookups: 0,
+            hits: 0,
+            evictions: 0,
+            scratch_dm: None,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -112,16 +146,80 @@ impl EvalMemo {
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
+
+    fn insert(&mut self, key: u64, eval: Evaluation) {
+        if self.map.len() >= self.cap {
+            // LRU-ish batch eviction: drop the least-recently-used half
+            // (median-tick split; ticks are unique, so deterministic).
+            let mut ticks: Vec<u64> = self.map.values().map(|(_, t)| *t).collect();
+            let mid = ticks.len() / 2;
+            let (_, median, _) = ticks.select_nth_unstable(mid);
+            let median = *median;
+            let before = self.map.len();
+            self.map.retain(|_, (_, t)| *t >= median);
+            self.evictions += before - self.map.len();
+        }
+        self.tick += 1;
+        self.map.insert(key, (eval, self.tick));
+    }
 }
 
 /// One search episode's mutable state.
-#[derive(Clone)]
 pub struct Episode {
     pub state: DecisionState,
     pub dm: DistMap,
-    pub stats: PropStats,
+    /// Stuck-node set w.r.t. `dm`, maintained incrementally.
+    pub stuck: StuckSet,
+    /// Total value-axis assignments made by propagation so far.
+    pub assigned: usize,
     pub decisions: usize,
     pub done: bool,
+    /// The previous action was `InferRest` (an immediate repeat would be
+    /// a no-op, so `legal_actions` stops offering it).
+    pub last_infer_rest: bool,
+    /// Reusable dirty-frontier queue for incremental sweeps.
+    scratch: FrontierScratch,
+}
+
+/// Manual impl so `clone_from` reuses every buffer: the MCTS episode
+/// loop resets its scratch episode from the root this way, making
+/// per-episode reset a set of memcpys instead of fresh allocations.
+impl Clone for Episode {
+    fn clone(&self) -> Episode {
+        Episode {
+            state: self.state.clone(),
+            dm: self.dm.clone(),
+            stuck: self.stuck.clone(),
+            assigned: self.assigned,
+            decisions: self.decisions,
+            done: self.done,
+            last_infer_rest: self.last_infer_rest,
+            scratch: self.scratch.clone(),
+        }
+    }
+
+    fn clone_from(&mut self, src: &Episode) {
+        self.state.clone_from(&src.state);
+        self.dm.d.clone_from(&src.dm.d);
+        self.dm.num_axes = src.dm.num_axes;
+        self.stuck.clone_from(&src.stuck);
+        self.assigned = src.assigned;
+        self.decisions = src.decisions;
+        self.done = src.done;
+        self.last_infer_rest = src.last_infer_rest;
+        self.scratch.clone_from(&src.scratch);
+    }
+}
+
+/// One statically valid tile candidate for a target: rank and
+/// divisibility are checked once at env construction, so the per-step
+/// legality filter only tests the dynamic parts (atomic set, axis free,
+/// dim not taken) against the episode's current map.
+#[derive(Debug, Clone, Copy)]
+struct CandidateTile {
+    action: EnvAction,
+    dim: u8,
+    axis: AxisId,
 }
 
 pub struct RewriteEnv<'a> {
@@ -131,13 +229,21 @@ pub struct RewriteEnv<'a> {
     pub options: SearchOptions,
     /// Decision targets (worklist entries / groups).
     pub targets: Vec<Target>,
+    /// Values an action on target `i` spreads to (group membership /
+    /// cross-layer tying resolved ONCE — the old code rebuilt role-key
+    /// strings for every arg on every step).
+    expanded: Vec<Vec<ValueId>>,
+    /// Statically valid tile candidates per target.
+    candidates: Vec<Vec<CandidateTile>>,
     /// Decisions every episode starts from (user constraints pinned by a
     /// `Session`'s `Manual` tactic; empty for an unconstrained search).
     pub seed: DecisionState,
     /// The seed replayed once with propagation; cloned into every
     /// episode so `reset` is a flat memcpy, not a re-propagation.
     seed_dm: DistMap,
-    seed_stats: PropStats,
+    seed_stuck: StuckSet,
+    seed_assigned: usize,
+    seed_last_infer: bool,
     /// Baseline cost for reward normalisation: the seed state's cost
     /// (fully replicated when the seed is empty).
     pub base_cost: f64,
@@ -168,23 +274,86 @@ impl<'a> RewriteEnv<'a> {
         worklist: &[ValueId],
         seed: DecisionState,
     ) -> RewriteEnv<'a> {
-        let mut targets: Vec<Target> = Vec::new();
+        let f = &program.func;
+        let mesh = &program.mesh;
         let tie = options.grouping || options.cross_layer_tying;
-        for &v in worklist {
-            let name = &program.func.args[v.index()].name;
-            let key = if tie { role_key(name) } else { name.clone() };
-            if options.grouping {
-                // one target per key, holding every member value
-                if let Some(t) = targets.iter_mut().find(|t| t.key == key) {
-                    t.values.push(v);
-                    continue;
+        // Role keys for every arg, computed ONCE (the old hot path
+        // rebuilt these strings per arg per step).
+        let keys: Vec<String> = (0..f.num_args())
+            .map(|i| if tie { role_key(&f.args[i].name) } else { f.args[i].name.clone() })
+            .collect();
+        let mut targets: Vec<Target> = Vec::new();
+        if options.grouping {
+            // One target per key (first-seen order), holding every member.
+            let mut by_key: HashMap<&str, usize> = HashMap::new();
+            for &v in worklist {
+                let key = keys[v.index()].as_str();
+                match by_key.get(key) {
+                    Some(&ti) => targets[ti].values.push(v),
+                    None => {
+                        by_key.insert(key, targets.len());
+                        targets.push(Target { key: key.to_string(), values: vec![v] });
+                    }
                 }
-                targets.push(Target { key, values: vec![v] });
-            } else {
-                targets.push(Target { key, values: vec![v] });
+            }
+        } else {
+            for &v in worklist {
+                targets.push(Target { key: keys[v.index()].clone(), values: vec![v] });
             }
         }
+        // Cross-layer tying expansion, resolved once: role key -> every
+        // non-OptState arg sharing it.
+        let mut role_members: HashMap<&str, Vec<ValueId>> = HashMap::new();
+        if !options.grouping && options.cross_layer_tying {
+            for i in 0..f.num_args() {
+                if f.args[i].kind != ArgKind::OptState {
+                    role_members.entry(keys[i].as_str()).or_default().push(ValueId(i as u32));
+                }
+            }
+        }
+        let expanded: Vec<Vec<ValueId>> = targets
+            .iter()
+            .map(|t| {
+                if !options.grouping && options.cross_layer_tying {
+                    role_members.get(t.key.as_str()).cloned().unwrap_or_default()
+                } else {
+                    t.values.clone()
+                }
+            })
+            .collect();
+        // Static tile candidates: rank + divisibility per representative
+        // value, against the searchable axes (fixed for the env's life).
+        let candidates: Vec<Vec<CandidateTile>> = targets
+            .iter()
+            .enumerate()
+            .map(|(ti, t)| {
+                let v = t.values[0];
+                let ty = f.value_type(v);
+                let mut out = Vec::new();
+                for axis in mesh.searchable_axes() {
+                    for dim in 0..ty.rank() {
+                        if ty.dims[dim] % mesh.size(axis) == 0 {
+                            out.push(CandidateTile {
+                                action: EnvAction::Tile {
+                                    target: ti as u32,
+                                    dim: dim as u8,
+                                    axis: axis.0 as u8,
+                                },
+                                dim: dim as u8,
+                                axis,
+                            });
+                        }
+                    }
+                }
+                out
+            })
+            .collect();
         let (seed_dm, seed_stats) = program.apply(&seed);
+        let mut seed_stuck = StuckSet::with_capacity(f.num_nodes());
+        for &n in &program.stuck_set(&seed_dm) {
+            seed_stuck.insert(n);
+        }
+        let seed_last_infer = matches!(seed.actions.last(), Some(Action::InferRest));
         let base = evaluate(program, &seed_dm, &device, &weights);
         RewriteEnv {
             program,
@@ -192,9 +361,13 @@ impl<'a> RewriteEnv<'a> {
             weights,
             options,
             targets,
+            expanded,
+            candidates,
             seed,
             seed_dm,
-            seed_stats,
+            seed_stuck,
+            seed_assigned: seed_stats.assigned,
+            seed_last_infer,
             base_cost: base.cost,
         }
     }
@@ -220,83 +393,94 @@ impl<'a> RewriteEnv<'a> {
         Episode {
             state,
             dm: self.seed_dm.clone(),
-            stats: self.seed_stats.clone(),
+            stuck: self.seed_stuck.clone(),
+            assigned: self.seed_assigned,
             decisions: 0,
             done: false,
+            last_infer_rest: self.seed_last_infer,
+            scratch: FrontierScratch::with_capacity(self.program.func.num_nodes()),
         }
     }
 
-    /// The values affected by acting on `target` (group + tying expansion).
-    fn expand_target(&self, target: u32) -> Vec<ValueId> {
-        let t = &self.targets[target as usize];
-        if self.options.grouping {
-            return t.values.clone();
-        }
-        if self.options.cross_layer_tying {
-            // spread to every arg sharing the role key
-            let f = &self.program.func;
-            return (0..f.num_args())
-                .filter(|&i| {
-                    f.args[i].kind != ArgKind::OptState && role_key(&f.args[i].name) == t.key
-                })
-                .map(|i| ValueId(i as u32))
-                .collect();
-        }
-        t.values.clone()
-    }
-
-    /// Legal actions in `ep`'s current state.
-    pub fn legal_actions(&self, ep: &Episode) -> Vec<EnvAction> {
-        let mut out = Vec::new();
+    /// Legal actions in `ep`'s current state, filtered from the
+    /// precomputed candidate table into a caller-provided buffer — no
+    /// string work, no allocation (the buffer is reused across calls).
+    /// `InferRest` is only offered when the previous action wasn't one
+    /// (a consecutive repeat is a no-op that would burn a decision and
+    /// bloat the branching factor).
+    pub fn legal_actions_into(&self, ep: &Episode, out: &mut Vec<EnvAction>) {
+        out.clear();
         if ep.done || ep.decisions >= self.options.max_decisions {
-            return out;
+            return;
         }
-        let f = &self.program.func;
-        let mesh = &self.program.mesh;
         for (ti, t) in self.targets.iter().enumerate() {
             let v = t.values[0];
-            let rank = f.value_type(v).rank();
-            for axis in mesh.searchable_axes() {
-                for dim in 0..rank {
-                    let a = Action::Tile { v, dim, axis };
-                    if action_valid(f, mesh, &ep.dm, &ep.state, &a) {
-                        out.push(EnvAction::Tile {
-                            target: ti as u32,
-                            dim: dim as u8,
-                            axis: axis.0 as u8,
-                        });
-                    }
+            if ep.state.is_atomic(v) {
+                continue;
+            }
+            let row = &ep.dm.d[v.index()];
+            for c in &self.candidates[ti] {
+                if row[c.axis.0] == UNKNOWN && !ep.dm.dim_taken(v.index(), c.axis, c.dim as usize) {
+                    out.push(c.action);
                 }
             }
         }
-        out.push(EnvAction::InferRest);
+        if !ep.last_infer_rest {
+            out.push(EnvAction::InferRest);
+        }
         out.push(EnvAction::Stop);
+    }
+
+    /// Allocating convenience form of [`RewriteEnv::legal_actions_into`].
+    pub fn legal_actions(&self, ep: &Episode) -> Vec<EnvAction> {
+        let mut out = Vec::new();
+        self.legal_actions_into(ep, &mut out);
         out
     }
 
-    /// Apply an action in place (incremental propagation).
+    /// Apply an action in place. Tile actions propagate incrementally
+    /// from the dirty-value frontier (the values the action touched)
+    /// instead of re-sweeping the whole program; a debug build
+    /// cross-checks every incremental sweep against the full pass.
     pub fn step(&self, ep: &mut Episode, a: EnvAction) {
         let f = &self.program.func;
         let mesh = &self.program.mesh;
+        let prop = &self.program.prop;
         match a {
             EnvAction::Tile { target, dim, axis } => {
                 let axis = AxisId(axis as usize);
-                for v in self.expand_target(target) {
-                    let act = Action::Tile { v, dim: dim as usize, axis };
+                let dim = dim as usize;
+                for &v in &self.expanded[target as usize] {
+                    let act = Action::Tile { v, dim, axis };
                     if action_valid(f, mesh, &ep.dm, &ep.state, &act) {
-                        ep.dm.set(v.index(), axis, dim as usize);
+                        ep.dm.set(v.index(), axis, dim);
                         ep.state.actions.push(act);
+                        prop.seed_dirty(f, &mut ep.scratch, v);
                     }
                 }
-                ep.stats.stuck_nodes.clear();
-                self.program.prop.forward(f, mesh, &mut ep.dm, &mut ep.stats);
+                #[cfg(debug_assertions)]
+                let check_dm = ep.dm.clone();
+                prop.forward_from(
+                    f,
+                    mesh,
+                    &mut ep.dm,
+                    &mut ep.stuck,
+                    &mut ep.assigned,
+                    &mut ep.scratch,
+                );
+                #[cfg(debug_assertions)]
+                self.check_incremental(check_dm, ep);
                 ep.decisions += 1;
+                ep.last_infer_rest = false;
             }
             EnvAction::InferRest => {
-                ep.stats.stuck_nodes.clear();
-                self.program.prop.infer_rest(f, mesh, &mut ep.dm, &mut ep.stats);
+                let mut stats = PropStats::default();
+                prop.infer_rest_settle(f, mesh, &mut ep.dm, &mut stats);
+                ep.assigned += stats.assigned;
+                ep.stuck.rebuild(&stats.stuck_nodes);
                 ep.state.actions.push(Action::InferRest);
                 ep.decisions += 1;
+                ep.last_infer_rest = true;
             }
             EnvAction::Stop => {
                 ep.done = true;
@@ -305,6 +489,21 @@ impl<'a> RewriteEnv<'a> {
         if ep.decisions >= self.options.max_decisions {
             ep.done = true;
         }
+    }
+
+    /// Debug-build cross-check: the incremental sweep must be
+    /// bit-identical to a full forward pass from the same post-action
+    /// map, both in the distribution map and in the stuck set.
+    #[cfg(debug_assertions)]
+    fn check_incremental(&self, mut full_dm: DistMap, ep: &Episode) {
+        let mut stats = PropStats::default();
+        self.program.prop.forward(&self.program.func, &self.program.mesh, &mut full_dm, &mut stats);
+        assert_eq!(full_dm, ep.dm, "incremental forward diverged from the full pass (dm)");
+        assert_eq!(
+            stats.stuck_nodes,
+            ep.stuck.to_sorted_vec(),
+            "incremental stuck set diverged from the full pass"
+        );
     }
 
     /// Canonical fingerprint of an episode's decision state: a stable
@@ -323,16 +522,30 @@ impl<'a> RewriteEnv<'a> {
 
     /// Like [`RewriteEnv::evaluate_episode`], but consults `memo` first:
     /// MCTS revisits of an identical terminal distribution skip the
-    /// lower + liveness + roofline pipeline entirely.
+    /// lower + liveness + roofline pipeline entirely. Misses reuse the
+    /// memo's scratch map for the auto-infer-rest pass, so the steady
+    /// state allocates nothing.
     pub fn evaluate_episode_memo(&self, ep: &Episode, memo: &mut EvalMemo) -> Evaluation {
         let key = self.state_fingerprint(ep);
         memo.lookups += 1;
-        if let Some(e) = memo.map.get(&key) {
+        memo.tick += 1;
+        let tick = memo.tick;
+        if let Some((e, t)) = memo.map.get_mut(&key) {
             memo.hits += 1;
+            *t = tick; // touch for LRU-ish eviction
             return e.clone();
         }
-        let e = self.evaluate_episode(ep);
-        memo.map.insert(key, e.clone());
+        let e = if self.options.auto_infer_rest {
+            let dm = memo.scratch_dm.get_or_insert_with(|| ep.dm.clone());
+            dm.d.clone_from(&ep.dm.d);
+            dm.num_axes = ep.dm.num_axes;
+            let mut stats = PropStats::default();
+            self.program.prop.infer_rest(&self.program.func, &self.program.mesh, dm, &mut stats);
+            evaluate(self.program, dm, &self.device, &self.weights)
+        } else {
+            evaluate(self.program, &ep.dm, &self.device, &self.weights)
+        };
+        memo.insert(key, e.clone());
         e
     }
 
@@ -510,6 +723,103 @@ mod tests {
         let _ = env.evaluate_episode_memo(&ep3, &mut memo);
         assert_eq!(memo.hits, 1);
         assert_eq!(memo.len(), 2);
+    }
+
+    #[test]
+    fn consecutive_infer_rest_is_not_offered() {
+        let (program, device) = env_for(1, SearchOptions::default());
+        let wl = RewriteEnv::default_worklist(&program);
+        let env = RewriteEnv::new(
+            &program,
+            device,
+            CostWeights::default(),
+            SearchOptions::default(),
+            &wl,
+        );
+        let mut ep = env.reset();
+        assert!(env.legal_actions(&ep).contains(&EnvAction::InferRest));
+        env.step(&mut ep, EnvAction::InferRest);
+        let acts = env.legal_actions(&ep);
+        assert!(
+            !acts.contains(&EnvAction::InferRest),
+            "a repeated infer-rest is a no-op and must not burn a decision"
+        );
+        assert!(acts.contains(&EnvAction::Stop));
+        // A tile decision re-arms it.
+        if let Some(tile) = acts.iter().find(|a| matches!(a, EnvAction::Tile { .. })) {
+            env.step(&mut ep, *tile);
+            assert!(env.legal_actions(&ep).contains(&EnvAction::InferRest));
+        }
+    }
+
+    #[test]
+    fn legal_actions_into_matches_allocating_form_and_reuses_buffer() {
+        let (program, device) = env_for(2, SearchOptions::default());
+        let wl = RewriteEnv::default_worklist(&program);
+        let env = RewriteEnv::new(
+            &program,
+            device,
+            CostWeights::default(),
+            SearchOptions::default(),
+            &wl,
+        );
+        let mut ep = env.reset();
+        let mut buf = Vec::new();
+        for _ in 0..4 {
+            env.legal_actions_into(&ep, &mut buf);
+            assert_eq!(buf, env.legal_actions(&ep));
+            if buf.is_empty() {
+                break;
+            }
+            let a = buf[0];
+            env.step(&mut ep, a);
+        }
+    }
+
+    #[test]
+    fn eval_memo_cap_evicts_lru_half_deterministically() {
+        let (program, device) = env_for(1, SearchOptions::default());
+        let wl = RewriteEnv::default_worklist(&program);
+        let env = RewriteEnv::new(
+            &program,
+            device,
+            CostWeights::default(),
+            SearchOptions::default(),
+            &wl,
+        );
+        // Distinct terminal states: episodes with 0..n different first
+        // tile actions.
+        let mut eps = Vec::new();
+        let base = env.reset();
+        let acts: Vec<EnvAction> = env
+            .legal_actions(&base)
+            .into_iter()
+            .filter(|a| matches!(a, EnvAction::Tile { .. }))
+            .collect();
+        assert!(acts.len() >= 6, "need enough distinct actions: {}", acts.len());
+        for &a in acts.iter().take(6) {
+            let mut ep = env.reset();
+            env.step(&mut ep, a);
+            env.step(&mut ep, EnvAction::Stop);
+            eps.push(ep);
+        }
+        let mut memo = EvalMemo::with_cap(4);
+        for ep in &eps {
+            let _ = env.evaluate_episode_memo(ep, &mut memo);
+        }
+        assert!(memo.len() <= 4, "cap must bound the memo: {}", memo.len());
+        assert!(memo.evictions > 0);
+        // The most recent entry survived eviction and still hits.
+        let hits_before = memo.hits;
+        let _ = env.evaluate_episode_memo(&eps[5], &mut memo);
+        assert_eq!(memo.hits, hits_before + 1);
+        // Determinism: an identical second run sees identical counters.
+        let mut memo2 = EvalMemo::with_cap(4);
+        for ep in &eps {
+            let _ = env.evaluate_episode_memo(ep, &mut memo2);
+        }
+        assert_eq!(memo2.len(), memo.len(), "eviction must be deterministic");
+        assert_eq!(memo2.evictions, memo.evictions);
     }
 
     #[test]

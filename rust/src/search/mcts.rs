@@ -5,6 +5,16 @@
 //! One *episode* = one tree walk (selection → expansion → random rollout
 //! → backprop). The search returns the best terminal solution seen across
 //! all episodes, which is what Figures 6–9 score.
+//!
+//! The searcher is persistent: [`Mcts::run_episodes`] can be called
+//! repeatedly and the tree, RNG stream, and evaluation memo carry over —
+//! this is what lets the service executor run episodes in rounds and
+//! steal budget between trees (DESIGN.md §9) without touching the
+//! statistics. The per-episode loop is allocation-free in the steady
+//! state: the scratch episode is reset with buffer-reusing `clone_from`,
+//! the selection path and rollout action list are reused vectors, and
+//! the best solution is kept in place (cloned into only on strict
+//! improvement).
 
 use super::env::{Episode, EnvAction, EvalMemo, RewriteEnv};
 use crate::cost::composite::Evaluation;
@@ -50,29 +60,64 @@ impl Default for MctsConfig {
     }
 }
 
+/// Kept-in-place best solution (cloned into, not reallocated).
+struct Best {
+    state: DecisionState,
+    eval: Evaluation,
+    reward: f64,
+    episode: usize,
+}
+
 pub struct Mcts<'e, 'p> {
     env: &'e RewriteEnv<'p>,
     cfg: MctsConfig,
     nodes: Vec<Node>,
+    rng: Rng,
+    memo: EvalMemo,
+    root: u32,
+    /// The root episode, built once — every episode resets from it with
+    /// a buffer-reusing copy instead of a fresh `env.reset()`.
+    root_ep: Episode,
+    /// Scratch episode reused across the whole run.
+    ep: Episode,
+    /// Scratch selection path and rollout action list.
+    path: Vec<u32>,
+    acts: Vec<EnvAction>,
+    episodes_run: usize,
+    best: Option<Best>,
+}
+
+/// Create a node for `ep`'s state (free function so callers can hold
+/// disjoint borrows of the searcher's fields).
+fn push_node(nodes: &mut Vec<Node>, env: &RewriteEnv, ep: &Episode, rng: &mut Rng) -> u32 {
+    let mut untried = env.legal_actions(ep);
+    rng.shuffle(&mut untried);
+    let terminal = untried.is_empty();
+    nodes.push(Node { visits: 0, total_reward: 0.0, children: Vec::new(), untried, terminal });
+    (nodes.len() - 1) as u32
 }
 
 impl<'e, 'p> Mcts<'e, 'p> {
-    pub fn new(env: &'e RewriteEnv<'p>, cfg: MctsConfig) -> Self {
-        Mcts { env, cfg, nodes: Vec::with_capacity(1024) }
-    }
-
-    fn make_node(&mut self, ep: &Episode, rng: &mut Rng) -> u32 {
-        let mut untried = self.env.legal_actions(ep);
-        rng.shuffle(&mut untried);
-        let terminal = untried.is_empty();
-        self.nodes.push(Node {
-            visits: 0,
-            total_reward: 0.0,
-            children: Vec::new(),
-            untried,
-            terminal,
-        });
-        (self.nodes.len() - 1) as u32
+    pub fn new(env: &'e RewriteEnv<'p>, cfg: MctsConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut nodes = Vec::with_capacity(1024);
+        let root_ep = env.reset();
+        let root = push_node(&mut nodes, env, &root_ep, &mut rng);
+        let ep = root_ep.clone();
+        Mcts {
+            env,
+            cfg,
+            nodes,
+            rng,
+            memo: EvalMemo::new(),
+            root,
+            root_ep,
+            ep,
+            path: Vec::with_capacity(32),
+            acts: Vec::new(),
+            episodes_run: 0,
+            best: None,
+        }
     }
 
     fn ucb_select(&self, id: u32) -> Option<(EnvAction, u32)> {
@@ -95,30 +140,26 @@ impl<'e, 'p> Mcts<'e, 'p> {
         best
     }
 
-    /// Run `budget` episodes; return the best solution found.
-    pub fn run(&mut self, budget: usize, seed: u64) -> SearchResult {
-        let mut rng = Rng::new(seed);
-        let mut memo = EvalMemo::new();
-        let root_ep = self.env.reset();
-        let root = self.make_node(&root_ep, &mut rng);
-
-        let mut best: Option<SearchResult> = None;
-        for episode in 1..=budget {
-            let mut ep = self.env.reset();
-            let mut path: Vec<u32> = vec![root];
-            let mut node = root;
+    /// Run `n` more episodes, continuing the existing tree and streams.
+    pub fn run_episodes(&mut self, n: usize) {
+        for _ in 0..n {
+            self.episodes_run += 1;
+            self.ep.clone_from(&self.root_ep);
+            self.path.clear();
+            self.path.push(self.root);
+            let mut node = self.root;
 
             // Selection: descend while fully expanded.
             loop {
-                let n = &self.nodes[node as usize];
-                if n.terminal || !n.untried.is_empty() {
+                let nd = &self.nodes[node as usize];
+                if nd.terminal || !nd.untried.is_empty() {
                     break;
                 }
                 match self.ucb_select(node) {
                     Some((a, cid)) => {
-                        self.env.step(&mut ep, a);
+                        self.env.step(&mut self.ep, a);
                         node = cid;
-                        path.push(node);
+                        self.path.push(node);
                     }
                     None => break,
                 }
@@ -127,65 +168,94 @@ impl<'e, 'p> Mcts<'e, 'p> {
             // Expansion: try one untried action.
             if !self.nodes[node as usize].terminal {
                 if let Some(a) = self.nodes[node as usize].untried.pop() {
-                    self.env.step(&mut ep, a);
-                    let child = self.make_node(&ep, &mut rng);
+                    self.env.step(&mut self.ep, a);
+                    let child = push_node(&mut self.nodes, self.env, &self.ep, &mut self.rng);
                     self.nodes[node as usize].children.push((a, child));
                     node = child;
-                    path.push(node);
+                    self.path.push(node);
                 }
             }
 
-            // Rollout: random policy to terminal.
-            while !ep.done {
-                let acts = self.env.legal_actions(&ep);
-                if acts.is_empty() {
+            // Rollout: random policy to terminal, legality filtered into
+            // the reused scratch buffer.
+            while !self.ep.done {
+                self.env.legal_actions_into(&self.ep, &mut self.acts);
+                if self.acts.is_empty() {
                     break;
                 }
-                if rng.gen_f64() < self.cfg.rollout_stop_prob {
-                    self.env.step(&mut ep, EnvAction::Stop);
+                if self.rng.gen_f64() < self.cfg.rollout_stop_prob {
+                    self.env.step(&mut self.ep, EnvAction::Stop);
                     break;
                 }
-                let a = *rng.choose(&acts);
-                self.env.step(&mut ep, a);
+                let a = *self.rng.choose(&self.acts);
+                self.env.step(&mut self.ep, a);
             }
 
             // Evaluate + backprop. Revisited terminal states hit the memo
             // and skip the lower + liveness + roofline pipeline.
-            let eval = self.env.evaluate_episode_memo(&ep, &mut memo);
+            let eval = self.env.evaluate_episode_memo(&self.ep, &mut self.memo);
             let reward = self.env.reward(&eval);
-            for &nid in &path {
-                let n = &mut self.nodes[nid as usize];
-                n.visits += 1;
-                n.total_reward += reward;
+            for &nid in &self.path {
+                let nd = &mut self.nodes[nid as usize];
+                nd.visits += 1;
+                nd.total_reward += reward;
             }
 
-            let better = match &best {
+            // Cheap pre-check first; clone the state only on strict
+            // improvement, into the existing buffers.
+            let improved = match &self.best {
                 None => true,
-                Some(b) => reward > b.best_reward,
+                Some(b) => reward > b.reward,
             };
-            if better {
-                best = Some(SearchResult {
-                    best_state: ep.state.clone(),
-                    best_eval: eval,
-                    best_reward: reward,
-                    episodes_to_best: episode,
-                    episodes_run: episode,
-                    eval_lookups: 0,
-                    eval_memo_hits: 0,
-                });
+            if improved {
+                let episode = self.episodes_run;
+                match self.best.take() {
+                    Some(mut b) => {
+                        b.state.clone_from(&self.ep.state);
+                        b.eval = eval;
+                        b.reward = reward;
+                        b.episode = episode;
+                        self.best = Some(b);
+                    }
+                    None => {
+                        self.best =
+                            Some(Best { state: self.ep.state.clone(), eval, reward, episode });
+                    }
+                }
             }
         }
-        let mut r = best.expect("budget must be >= 1");
-        r.episodes_run = budget;
-        r.eval_lookups = memo.lookups;
-        r.eval_memo_hits = memo.hits;
-        r
+    }
+
+    /// Episodes run so far across all `run_episodes` calls.
+    pub fn episodes_run(&self) -> usize {
+        self.episodes_run
+    }
+
+    /// Best reward so far (`-inf` before the first episode).
+    pub fn best_reward(&self) -> f64 {
+        self.best.as_ref().map(|b| b.reward).unwrap_or(f64::NEG_INFINITY)
+    }
+
+    /// Snapshot the best solution found so far.
+    pub fn result(&self) -> SearchResult {
+        let b = self.best.as_ref().expect("budget must be >= 1");
+        SearchResult {
+            best_state: b.state.clone(),
+            best_eval: b.eval.clone(),
+            best_reward: b.reward,
+            episodes_to_best: b.episode,
+            episodes_run: self.episodes_run,
+            eval_lookups: self.memo.lookups,
+            eval_memo_hits: self.memo.hits,
+        }
     }
 }
 
 /// Convenience wrapper: one full search.
 pub fn search(env: &RewriteEnv, budget: usize, seed: u64, cfg: MctsConfig) -> SearchResult {
-    Mcts::new(env, cfg).run(budget, seed)
+    let mut m = Mcts::new(env, cfg, seed);
+    m.run_episodes(budget);
+    m.result()
 }
 
 #[cfg(test)]
@@ -240,6 +310,37 @@ mod tests {
         assert_eq!(a.best_reward, b.best_reward);
         assert_eq!(a.episodes_to_best, b.episodes_to_best);
         assert_eq!(a.eval_memo_hits, b.eval_memo_hits);
+    }
+
+    #[test]
+    fn chunked_runs_equal_one_shot_runs() {
+        // The round-based executor depends on this: running 50 episodes
+        // as 5 x 10 continues the same tree/RNG/memo and lands on the
+        // same best solution as one 50-episode call.
+        let program = mlp_env_program();
+        let wl = RewriteEnv::default_worklist(&program);
+        let env = RewriteEnv::new(
+            &program,
+            Device::tpu_v3(),
+            CostWeights::default(),
+            SearchOptions::default(),
+            &wl,
+        );
+        let one_shot = search(&env, 50, 9, MctsConfig::default());
+        let mut m = Mcts::new(&env, MctsConfig::default(), 9);
+        for _ in 0..5 {
+            m.run_episodes(10);
+        }
+        let chunked = m.result();
+        assert_eq!(one_shot.best_reward, chunked.best_reward);
+        assert_eq!(one_shot.episodes_to_best, chunked.episodes_to_best);
+        assert_eq!(one_shot.eval_lookups, chunked.eval_lookups);
+        assert_eq!(one_shot.eval_memo_hits, chunked.eval_memo_hits);
+        assert_eq!(
+            one_shot.best_state.actions,
+            chunked.best_state.actions,
+            "chunked episodes must replay the identical action stream"
+        );
     }
 
     #[test]

@@ -1,30 +1,48 @@
-//! Root-parallel MCTS executor (DESIGN.md §9): one partition request
-//! fans out to `K` worker threads, each running an independent seeded
-//! search over its own session, and the best evaluation wins.
+//! Root-parallel MCTS executor with deterministic work stealing
+//! (DESIGN.md §9): one partition request fans out to `K` worker trees
+//! over ONE shared environment, episodes run in fixed rounds with a
+//! barrier between them, and trees that stop improving forfeit their
+//! remaining budget to the best tree.
 //!
 //! Root parallelism (independent trees, merged at the end) was chosen
 //! over tree parallelism (one shared tree) because episodes are cheap
 //! and the tree is tiny — sharing it would serialise on a lock for no
 //! statistical gain, whereas independent trees with distinct RNG streams
-//! explore *more* of the space per wall-clock second.
+//! explore *more* of the space per wall-clock second. Workers share one
+//! immutable program/propagator/env by reference (scoped threads)
+//! instead of the K full `Func`/`Mesh`/`Propagator` clones the previous
+//! design paid per request.
 //!
-//! Determinism: worker `w` searches with [`worker_seed`]`(seed, w)`, the
-//! merge compares costs with a strict `<` so the lowest-indexed worker
-//! wins ties, and the winning plan's `wall_seconds` is zeroed (wall time
-//! is reported separately on [`ExecutorReport`]). A fixed `(seed, K)`
-//! therefore reproduces the same best plan — byte-identical JSON — on
-//! every run.
+//! Determinism: the round schedule is a pure function of
+//! `(seed, K, budget)` — round size derives from `budget`, worker `w`
+//! searches with [`worker_seed`]`(seed, w)`, rounds are fork-join
+//! barriers (no cross-thread mutable state), and the steal decisions
+//! after each barrier depend only on the deterministic per-tree best
+//! rewards. The merge compares costs with a strict `<` so the
+//! lowest-indexed worker wins ties, and the winning plan's
+//! `wall_seconds` is zeroed (wall time is reported separately on
+//! [`ExecutorReport`]). A fixed `(seed, K)` therefore reproduces the
+//! same best plan — byte-identical JSON — on every run, regardless of
+//! how the OS interleaves the worker threads.
 
-use crate::cost::composite::CostWeights;
+use crate::cost::composite::{evaluate, CostWeights};
 use crate::ir::Func;
 use crate::partir::mesh::Mesh;
-use crate::search::env::SearchOptions;
-use crate::search::mcts::MctsConfig;
+use crate::search::env::{RewriteEnv, SearchOptions};
+use crate::search::mcts::{Mcts, MctsConfig, SearchResult};
 use crate::search::worker_seed;
 use crate::service::fingerprint::{request_fingerprint, Fingerprint};
 use crate::session::{PartitionPlan, Session, Tactic};
 use crate::sim::device::Device;
 use anyhow::{anyhow, Result};
+
+/// Target number of barrier rounds a full-budget tree runs (the round
+/// size is `budget / STEAL_ROUNDS`, rounded up).
+pub const STEAL_ROUNDS: usize = 8;
+
+/// Consecutive no-improvement rounds after which a non-leading tree
+/// forfeits its remaining budget to the leader.
+pub const STALL_ROUNDS: usize = 2;
 
 /// One fully-resolved unit of work: everything a worker needs to run a
 /// search, plus the executor fan-out configuration.
@@ -51,10 +69,20 @@ pub struct ExecutorReport {
     pub plan: PartitionPlan,
     /// Index of the worker whose plan won.
     pub winner: usize,
-    /// Final cost per worker, in worker order.
+    /// Final PLAN cost per worker (its best state replayed through
+    /// infer-rest + lowering), in worker order — the quantity the merge
+    /// ranks on, so `plan.eval.cost == worker_costs[winner]` always.
     pub worker_costs: Vec<f64>,
-    /// Total episodes run across all workers (`K * budget`).
+    /// Episodes actually run per worker — work stealing moves budget
+    /// between trees, so these differ when forfeiture fired; they always
+    /// sum to `episodes_total`.
+    pub worker_episodes: Vec<usize>,
+    /// Total episodes run across all workers (`K * budget`, conserved).
     pub episodes_total: usize,
+    /// Barrier rounds executed.
+    pub rounds: usize,
+    /// Budget-forfeiture events (stalled tree → leader).
+    pub steals: usize,
     /// Measured wall time of the whole fan-out.
     pub wall_seconds: f64,
 }
@@ -76,72 +104,140 @@ impl PlanJob {
         )
     }
 
-    /// The tactic pipeline worker `w` runs.
-    fn worker_tactics(&self, w: usize) -> Vec<Tactic> {
-        let mut tactics = self.pre_tactics.clone();
-        tactics.push(Tactic::Search {
-            budget: self.budget,
-            seed: worker_seed(self.seed, w),
-            mcts: self.mcts.clone(),
-        });
-        tactics.push(Tactic::InferRest);
-        tactics.push(Tactic::Lower);
-        tactics
-    }
-
-    /// Run the job: `K` scoped worker threads, each with a fresh session
-    /// (own program, propagator, and RNG stream), merged by best cost.
+    /// Run the job: pre-tactics replayed once on a session whose program
+    /// all `K` workers share immutably, then round-based root-parallel
+    /// search with stall forfeiture, then ONE plan assembly from the
+    /// winning tree.
     pub fn run(&self) -> Result<ExecutorReport> {
         let t0 = std::time::Instant::now();
         let k = self.workers.max(1);
-        let mut slots: Vec<Option<Result<PartitionPlan>>> = Vec::new();
-        slots.resize_with(k, || None);
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..k)
-                .map(|w| {
-                    let job = &*self;
-                    scope.spawn(move || {
-                        let tactics = job.worker_tactics(w);
-                        Session::plan_for(
-                            job.func.clone(),
-                            job.mesh.clone(),
-                            job.device.clone(),
-                            job.weights.clone(),
-                            job.options.clone(),
-                            &tactics,
-                        )
-                    })
-                })
-                .collect();
-            for (w, h) in handles.into_iter().enumerate() {
-                slots[w] = Some(
-                    h.join().unwrap_or_else(|_| Err(anyhow!("search worker {w} panicked"))),
-                );
-            }
-        });
+        let budget = self.budget.max(1);
+        let round_size = budget.div_ceil(STEAL_ROUNDS);
 
+        let mut session = Session::with_options(
+            self.func.clone(),
+            self.mesh.clone(),
+            self.device.clone(),
+            self.weights.clone(),
+            self.options.clone(),
+        );
+        for t in &self.pre_tactics {
+            session.apply(t)?;
+        }
+        let worklist = session.resolved_worklist();
+        let seed_state = session.state().clone();
+
+        let mut rounds = 0usize;
+        let mut steals = 0usize;
+        let (results, worker_episodes, targets) = {
+            let env = RewriteEnv::with_seed(
+                &session.program,
+                self.device.clone(),
+                self.weights.clone(),
+                self.options.clone(),
+                &worklist,
+                seed_state,
+            );
+            let mut searchers: Vec<Mcts> = (0..k)
+                .map(|w| Mcts::new(&env, self.mcts.clone(), worker_seed(self.seed, w)))
+                .collect();
+            let mut remaining = vec![budget; k];
+            let mut best_so_far = vec![f64::NEG_INFINITY; k];
+            let mut stall = vec![0usize; k];
+            loop {
+                let quotas: Vec<usize> = remaining.iter().map(|&r| r.min(round_size)).collect();
+                if quotas.iter().all(|&q| q == 0) {
+                    break;
+                }
+                rounds += 1;
+                // Fork-join round: each live tree runs its quota on its
+                // own thread; no shared mutable state, so scheduling
+                // cannot change any result.
+                let ok = std::thread::scope(|scope| {
+                    let mut handles = Vec::with_capacity(k);
+                    for (m, &q) in searchers.iter_mut().zip(&quotas) {
+                        if q == 0 {
+                            continue;
+                        }
+                        handles.push(scope.spawn(move || m.run_episodes(q)));
+                    }
+                    handles.into_iter().all(|h| h.join().is_ok())
+                });
+                if !ok {
+                    return Err(anyhow!("search worker panicked"));
+                }
+                // Barrier bookkeeping: improvement deltas + stall counts.
+                for w in 0..k {
+                    if quotas[w] == 0 {
+                        continue;
+                    }
+                    remaining[w] -= quotas[w];
+                    let br = searchers[w].best_reward();
+                    if br > best_so_far[w] {
+                        best_so_far[w] = br;
+                        stall[w] = 0;
+                    } else {
+                        stall[w] += 1;
+                    }
+                }
+                // Leader = best reward so far, ties to the lowest index.
+                let mut leader = 0usize;
+                for w in 1..k {
+                    if best_so_far[w] > best_so_far[leader] {
+                        leader = w;
+                    }
+                }
+                // Stalled non-leaders forfeit their remaining budget to
+                // the leader (budget is conserved, never dropped).
+                for w in 0..k {
+                    if w != leader && stall[w] >= STALL_ROUNDS && remaining[w] > 0 {
+                        remaining[leader] += remaining[w];
+                        remaining[w] = 0;
+                        steals += 1;
+                    }
+                }
+            }
+            let results: Vec<SearchResult> = searchers.iter().map(|m| m.result()).collect();
+            let episodes: Vec<usize> = searchers.iter().map(|m| m.episodes_run()).collect();
+            (results, episodes, env.targets.len())
+        };
+
+        // Rank workers by the cost of the PLAN each tree would produce
+        // (replay + infer-rest + lower), not the search-time eval: with
+        // `auto_infer_rest` disabled the two differ, and the merge must
+        // never pick a tree whose final plan is worse than a rival's.
+        // With auto-infer on (the service default) these costs equal the
+        // search evals bit-for-bit.
         let mut worker_costs = Vec::with_capacity(k);
-        let mut best: Option<(usize, PartitionPlan)> = None;
-        for (w, slot) in slots.into_iter().enumerate() {
-            let plan = slot.expect("worker slot filled")?;
-            worker_costs.push(plan.eval.cost);
-            let better = match &best {
-                None => true,
-                // Strict `<`: ties go to the lowest worker index, which
-                // keeps the merge deterministic.
-                Some((_, b)) => plan.eval.cost < b.eval.cost,
-            };
-            if better {
-                best = Some((w, plan));
+        for r in &results {
+            let (mut dm, mut stats) = session.program.apply(&r.best_state);
+            session.program.prop.infer_rest(
+                &session.program.func,
+                &session.program.mesh,
+                &mut dm,
+                &mut stats,
+            );
+            worker_costs.push(evaluate(&session.program, &dm, &self.device, &self.weights).cost);
+        }
+        // Strict `<`: ties go to the lowest worker index, which keeps
+        // the merge deterministic.
+        let mut winner = 0usize;
+        for w in 1..k {
+            if worker_costs[w] < worker_costs[winner] {
+                winner = w;
             }
         }
-        let (winner, mut plan) = best.expect("k >= 1 workers");
+        session.adopt_search_result(&results[winner], targets, worklist.len());
+        let mut plan = session.run(&[Tactic::InferRest, Tactic::Lower])?;
         plan.wall_seconds = 0.0;
         Ok(ExecutorReport {
             plan,
             winner,
             worker_costs,
-            episodes_total: k * self.budget,
+            worker_episodes,
+            episodes_total: k * budget,
+            rounds,
+            steals,
             wall_seconds: t0.elapsed().as_secs_f64(),
         })
     }
@@ -178,12 +274,19 @@ mod tests {
         let b = j.run().unwrap();
         assert_eq!(a.winner, b.winner);
         assert_eq!(a.worker_costs, b.worker_costs);
+        assert_eq!(a.worker_episodes, b.worker_episodes);
+        assert_eq!((a.rounds, a.steals), (b.rounds, b.steals));
         assert_eq!(
             a.plan.to_json().to_string(),
             b.plan.to_json().to_string(),
             "root-parallel executor must be deterministic for fixed (seed, K)"
         );
         assert_eq!(a.episodes_total, 4 * 60);
+        assert_eq!(
+            a.worker_episodes.iter().sum::<usize>(),
+            a.episodes_total,
+            "work stealing must conserve the total budget"
+        );
     }
 
     #[test]
@@ -194,6 +297,7 @@ mod tests {
         assert_eq!(r.plan.eval.cost, min);
         assert_eq!(r.plan.wall_seconds, 0.0, "plan wall time is zeroed for determinism");
         assert!(r.wall_seconds > 0.0);
+        assert!(r.rounds >= 1);
     }
 
     #[test]

@@ -2,15 +2,29 @@
 //! and the tier-1 smoke test, so `BENCH_search.json` at the repo root is
 //! produced by whichever ran last with the same schema.
 //!
-//! Two numbers matter for the service (DESIGN.md §9):
+//! Numbers that matter for the service (DESIGN.md §8/§9):
 //!   * root-parallel scaling — episodes/sec with `K` workers vs one;
-//!   * cache-hit latency — how fast a repeat request is served.
+//!   * eval-pipeline timings — median ns of one env step (incremental
+//!     propagation) and one terminal evaluation (infer-rest + lower +
+//!     liveness + roofline), the two per-episode building blocks;
+//!   * cache-hit latency — how fast a repeat request is served;
+//!   * the work-stealing schedule the multi-worker run settled on.
+//!
+//! When `configs/perf_floor.json` is present its recorded baseline is
+//! copied into the report, so the JSON carries both the pre-overhaul
+//! number and the current one — the perf trajectory in one document.
 
 use super::executor::PlanJob;
 use super::request::{JobDefaults, PartitionRequest};
 use super::server::{PlanService, ServiceConfig};
+use crate::cost::composite::CostWeights;
+use crate::partir::mesh::Mesh;
+use crate::partir::program::PartirProgram;
+use crate::search::env::{EnvAction, RewriteEnv, SearchOptions};
+use crate::sim::device::Device;
 use crate::util::json::Json;
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
+use std::hint::black_box;
 use std::time::Instant;
 
 /// Measurement configuration.
@@ -25,17 +39,25 @@ pub struct ThroughputConfig {
     pub reps: usize,
     /// Repeat requests timed against the cache.
     pub cache_probes: usize,
+    /// Samples for the per-step / per-eval micro timings.
+    pub micro_samples: usize,
 }
 
 impl ThroughputConfig {
     /// Quick profile for the tier-1 smoke test (a few seconds).
     pub fn quick() -> ThroughputConfig {
-        ThroughputConfig { budget: 800, workers: 4, reps: 3, cache_probes: 50 }
+        ThroughputConfig { budget: 800, workers: 4, reps: 3, cache_probes: 50, micro_samples: 64 }
     }
 
     /// Fuller profile for `cargo bench`.
     pub fn full() -> ThroughputConfig {
-        ThroughputConfig { budget: 2000, workers: 4, reps: 5, cache_probes: 500 }
+        ThroughputConfig {
+            budget: 2000,
+            workers: 4,
+            reps: 5,
+            cache_probes: 500,
+            micro_samples: 256,
+        }
     }
 }
 
@@ -50,6 +72,16 @@ pub struct ThroughputReport {
     pub speedup: f64,
     pub cache_hit_median_ns: f64,
     pub cache_probes: usize,
+    /// Median ns of one tile step (incremental propagation included).
+    pub step_median_ns: f64,
+    /// Median ns of one terminal evaluation (full cost pipeline).
+    pub eval_median_ns: f64,
+    /// Barrier rounds / steal events of the best multi-worker run.
+    pub rounds: usize,
+    pub steals: usize,
+    /// Pre-overhaul episodes/sec recorded in `configs/perf_floor.json`
+    /// (absent when the file is missing or unreadable).
+    pub baseline_single_episodes_per_sec: Option<f64>,
 }
 
 fn bench_job(workers: usize, budget: usize) -> PlanJob {
@@ -69,22 +101,93 @@ fn bench_job(workers: usize, budget: usize) -> PlanJob {
     req.build_job(&JobDefaults::default()).expect("bench request is well-formed")
 }
 
-/// Best-of-`reps` episodes/sec for a `workers`-way executor run.
-fn episodes_per_sec(workers: usize, budget: usize, reps: usize) -> Result<f64> {
+/// Best-of-`reps` episodes/sec for a `workers`-way executor run, plus
+/// the (deterministic) round/steal schedule it ran.
+fn episodes_per_sec(workers: usize, budget: usize, reps: usize) -> Result<(f64, usize, usize)> {
     let job = bench_job(workers, budget);
     let mut best = 0.0f64;
+    let mut rounds = 0usize;
+    let mut steals = 0usize;
     for _ in 0..reps.max(1) {
         let report = job.run()?;
         let eps = report.episodes_total as f64 / report.wall_seconds.max(1e-9);
-        best = best.max(eps);
+        if eps > best {
+            best = eps;
+            rounds = report.rounds;
+            steals = report.steals;
+        }
     }
-    Ok(best)
+    Ok((best, rounds, steals))
+}
+
+fn median(mut samples: Vec<f64>) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("no NaN timings"));
+    samples[samples.len() / 2]
+}
+
+/// Median ns of one env tile step and one terminal evaluation on the
+/// bench program (tiny transformer, `model=4`).
+fn micro_timings(samples: usize) -> Result<(f64, f64)> {
+    let func = crate::models::build_by_name("transformer", 2).context("builtin transformer")?;
+    let program = PartirProgram::new(func, Mesh::parse("model=4").map_err(|e| anyhow!("{e}"))?);
+    let wl = RewriteEnv::default_worklist(&program);
+    let env = RewriteEnv::new(
+        &program,
+        Device::tpu_v3(),
+        CostWeights::default(),
+        SearchOptions::default(),
+        &wl,
+    );
+    let root = env.reset();
+    let tile = env
+        .legal_actions(&root)
+        .into_iter()
+        .find(|a| matches!(a, EnvAction::Tile { .. }))
+        .context("bench program must offer a tile action")?;
+    let n = samples.max(8);
+    let mut step_samples = Vec::with_capacity(n);
+    let mut ep = root.clone();
+    for _ in 0..n {
+        ep.clone_from(&root);
+        let t0 = Instant::now();
+        env.step(&mut ep, tile);
+        step_samples.push(t0.elapsed().as_nanos() as f64);
+        black_box(ep.decisions);
+    }
+    // Terminal evaluation on the stepped episode (uncached path).
+    env.step(&mut ep, EnvAction::Stop);
+    let mut eval_samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        let eval = env.evaluate_episode(&ep);
+        eval_samples.push(t0.elapsed().as_nanos() as f64);
+        black_box(eval.cost);
+    }
+    Ok((median(step_samples), median(eval_samples)))
+}
+
+/// Repo root (one level above the crate manifest).
+fn repo_root() -> Result<std::path::PathBuf> {
+    Ok(std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .context("crate dir has a parent")?
+        .to_path_buf())
+}
+
+/// The pre-overhaul baseline recorded next to the advisory floor, if
+/// the config exists.
+fn load_baseline() -> Option<f64> {
+    let path = repo_root().ok()?.join("configs/perf_floor.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = crate::util::json::parse(&text).ok()?;
+    j.get("baseline_single_episodes_per_sec")?.as_f64()
 }
 
 /// Run the full measurement.
 pub fn measure(cfg: &ThroughputConfig) -> Result<ThroughputReport> {
-    let single = episodes_per_sec(1, cfg.budget, cfg.reps)?;
-    let multi = episodes_per_sec(cfg.workers, cfg.budget, cfg.reps)?;
+    let (single, _, _) = episodes_per_sec(1, cfg.budget, cfg.reps)?;
+    let (multi, rounds, steals) = episodes_per_sec(cfg.workers, cfg.budget, cfg.reps)?;
+    let (step_median_ns, eval_median_ns) = micro_timings(cfg.micro_samples)?;
 
     // Cache-hit latency: prime the service with one search, then time
     // repeat requests (all hits).
@@ -110,8 +213,7 @@ pub fn measure(cfg: &ThroughputConfig) -> Result<ThroughputReport> {
         assert!(r.cached, "probe request must be a cache hit");
         samples.push(dt);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).expect("no NaN timings"));
-    let cache_hit_median_ns = samples[samples.len() / 2];
+    let cache_hit_median_ns = median(samples);
 
     Ok(ThroughputReport {
         budget: cfg.budget,
@@ -121,12 +223,17 @@ pub fn measure(cfg: &ThroughputConfig) -> Result<ThroughputReport> {
         speedup: multi / single.max(1e-9),
         cache_hit_median_ns,
         cache_probes: cfg.cache_probes,
+        step_median_ns,
+        eval_median_ns,
+        rounds,
+        steals,
+        baseline_single_episodes_per_sec: load_baseline(),
     })
 }
 
 impl ThroughputReport {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("bench", Json::str("search_throughput")),
             ("budget_per_worker", Json::num(self.budget as f64)),
             ("workers", Json::num(self.workers as f64)),
@@ -135,16 +242,38 @@ impl ThroughputReport {
             ("speedup", Json::Num(self.speedup)),
             ("cache_hit_median_ns", Json::Num(self.cache_hit_median_ns)),
             ("cache_probes", Json::num(self.cache_probes as f64)),
-        ])
+            ("step_median_ns", Json::Num(self.step_median_ns)),
+            ("eval_median_ns", Json::Num(self.eval_median_ns)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("steals", Json::num(self.steals as f64)),
+            // Debug builds run the per-step incremental-vs-full
+            // cross-check inside env.step, so their step/eps numbers are
+            // NOT comparable to release ones — readers (and the CI floor
+            // check) must key off this flag.
+            ("debug_build", Json::Bool(cfg!(debug_assertions))),
+        ];
+        if let Some(b) = self.baseline_single_episodes_per_sec {
+            fields.push(("baseline_single_episodes_per_sec", Json::Num(b)));
+            fields.push((
+                "improvement_over_baseline",
+                Json::Num(self.single_episodes_per_sec / b.max(1e-9)),
+            ));
+        }
+        Json::obj(fields)
     }
 
     pub fn describe(&self) -> String {
         format!(
-            "single {:.0} eps/s | {} workers {:.0} eps/s ({:.2}x) | cache hit median {:.1}us",
+            "single {:.0} eps/s | {} workers {:.0} eps/s ({:.2}x, {} rounds, {} steals) | \
+             step {:.1}us eval {:.1}us | cache hit median {:.1}us",
             self.single_episodes_per_sec,
             self.workers,
             self.multi_episodes_per_sec,
             self.speedup,
+            self.rounds,
+            self.steals,
+            self.step_median_ns / 1e3,
+            self.eval_median_ns / 1e3,
             self.cache_hit_median_ns / 1e3
         )
     }
@@ -153,10 +282,7 @@ impl ThroughputReport {
 /// Write the report to `BENCH_search.json` at the repo root (one level
 /// above the crate manifest), returning the path written.
 pub fn write_report(report: &ThroughputReport) -> Result<std::path::PathBuf> {
-    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .parent()
-        .context("crate dir has a parent")?
-        .join("BENCH_search.json");
+    let path = repo_root()?.join("BENCH_search.json");
     std::fs::write(&path, report.to_json().pretty()).context("writing BENCH_search.json")?;
     Ok(path)
 }

@@ -131,10 +131,10 @@ impl Session {
         Ok(Session::new(func, mesh))
     }
 
-    /// One-shot entry point for service workers (DESIGN.md §9): build a
-    /// session, run a tactic pipeline, return the plan. Each executor
-    /// worker thread calls this with its own cloned `Func`/`Mesh`, so no
-    /// session state is ever shared across threads.
+    /// One-shot convenience entry point: build a session, run a tactic
+    /// pipeline, return the plan. (The root-parallel executor no longer
+    /// goes through this — it shares ONE session across its workers and
+    /// adopts the winning search result; see `service::executor`.)
     pub fn plan_for(
         func: Func,
         mesh: Mesh,
@@ -163,6 +163,48 @@ impl Session {
     /// The stage/decision trace accumulated so far.
     pub fn trace(&self) -> &[String] {
         &self.trace
+    }
+
+    /// The worklist a `Search` tactic would run over right now: the
+    /// `Filter` tactic's selection if one ran, the default worklist
+    /// otherwise. The root-parallel executor uses this to build ONE
+    /// shared environment instead of one per worker.
+    pub fn resolved_worklist(&self) -> Vec<ValueId> {
+        match &self.worklist {
+            Some(wl) => wl.clone(),
+            None => RewriteEnv::default_worklist(&self.program),
+        }
+    }
+
+    /// Adopt a search result produced by an external driver (the
+    /// root-parallel executor) over an environment seeded with this
+    /// session's current state: append the new decisions to the trace,
+    /// replay the winning state into the session buffers, and record the
+    /// bookkeeping exactly as [`Tactic::Search`] would have.
+    pub fn adopt_search_result(
+        &mut self,
+        result: &crate::search::SearchResult,
+        targets: usize,
+        worklist_size: usize,
+    ) {
+        let prior_actions = self.state.actions.len();
+        for a in result.best_state.actions.iter().skip(prior_actions) {
+            if matches!(a, Action::Tile { .. }) {
+                self.decisions += 1;
+            }
+            let line = format!("search: {}", a.describe(&self.program.func, &self.program.mesh));
+            self.trace.push(line);
+        }
+        self.state = result.best_state.clone();
+        self.program.apply_into(&self.state, &mut self.dm, &mut self.stats);
+        self.episodes_to_best = result.episodes_to_best;
+        self.targets = targets;
+        self.worklist_size = worklist_size;
+        self.trace.push(format!(
+            "search: {} episodes over {} targets, best at episode {}",
+            result.episodes_run, targets, result.episodes_to_best
+        ));
+        self.last_eval = None;
     }
 
     /// Drop all decisions and pipeline state — including manual-axis
@@ -295,10 +337,7 @@ impl Session {
     }
 
     fn apply_search(&mut self, budget: usize, seed: u64, mcts: &MctsConfig) -> Result<()> {
-        let worklist = match &self.worklist {
-            Some(wl) => wl.clone(),
-            None => RewriteEnv::default_worklist(&self.program),
-        };
+        let worklist = self.resolved_worklist();
         self.worklist_size = worklist.len();
         let prior_actions = self.state.actions.len();
         let result = {

@@ -1,0 +1,114 @@
+//! Acceptance tests for the deterministic work-stealing executor
+//! (DESIGN.md §9): fixed `(seed, K)` reproduces byte-identical plan
+//! JSON across repeated runs — for both a single tree and a 4-way
+//! fan-out, whatever the OS makes of the thread interleaving — and
+//! stalled trees actually forfeit budget to the leader.
+
+use automap::cost::composite::CostWeights;
+use automap::models::mlp::{build_mlp, MlpConfig};
+use automap::partir::mesh::Mesh;
+use automap::search::env::SearchOptions;
+use automap::search::mcts::MctsConfig;
+use automap::service::executor::{PlanJob, STALL_ROUNDS};
+use automap::session::{ShardingConstraint, Tactic};
+use automap::sim::device::Device;
+
+fn job(workers: usize, seed: u64, budget: usize) -> PlanJob {
+    PlanJob {
+        func: build_mlp(&MlpConfig::small()).func,
+        mesh: Mesh::new(&[("batch", 2), ("model", 4)]),
+        device: Device::tpu_v3(),
+        weights: CostWeights::default(),
+        options: SearchOptions::default(),
+        pre_tactics: vec![Tactic::Manual {
+            constraints: vec![ShardingConstraint::new("x", 0, "batch")],
+            manual_axes: vec!["batch".to_string()],
+        }],
+        budget,
+        seed,
+        workers,
+        mcts: MctsConfig::default(),
+    }
+}
+
+#[test]
+fn byte_identical_plans_across_runs_for_k1_and_k4() {
+    for k in [1usize, 4] {
+        let j = job(k, 11, 240);
+        let a = j.run().unwrap();
+        let b = j.run().unwrap();
+        assert_eq!(
+            a.plan.to_json().to_string(),
+            b.plan.to_json().to_string(),
+            "K={k}: plan JSON must be byte-identical across runs"
+        );
+        assert_eq!(a.winner, b.winner, "K={k}");
+        assert_eq!(a.worker_costs, b.worker_costs, "K={k}");
+        assert_eq!(a.worker_episodes, b.worker_episodes, "K={k}");
+        assert_eq!((a.rounds, a.steals), (b.rounds, b.steals), "K={k}");
+        assert_eq!(a.worker_episodes.iter().sum::<usize>(), k * 240, "K={k}");
+    }
+    // A single tree has nobody to steal from.
+    assert_eq!(job(1, 11, 240).run().unwrap().steals, 0);
+}
+
+#[test]
+fn stalled_trees_forfeit_budget_to_the_leader() {
+    // A program whose dims (7, 5) are indivisible by every mesh-axis
+    // size offers NO legal tile actions, so every episode's reward is
+    // exactly the baseline 0.0: round 1 improves each tree from -inf,
+    // and no strict improvement is ever possible again. All non-leader
+    // trees therefore stall deterministically — after STALL_ROUNDS
+    // no-improvement rounds they forfeit to worker 0 (the reward tie
+    // goes to the lowest index) — independent of search stochasticity.
+    let budget = 400usize;
+    let j = PlanJob {
+        func: build_mlp(&MlpConfig { batch: 7, dims: vec![5, 7, 5], training: false }).func,
+        mesh: Mesh::new(&[("model", 4)]),
+        device: Device::tpu_v3(),
+        weights: CostWeights::default(),
+        options: SearchOptions::default(),
+        pre_tactics: vec![],
+        budget,
+        seed: 7,
+        workers: 4,
+        mcts: MctsConfig::default(),
+    };
+    let r = j.run().unwrap();
+    assert_eq!(
+        r.worker_episodes.iter().sum::<usize>(),
+        r.episodes_total,
+        "steals move budget, they never create or drop it"
+    );
+    assert_eq!(r.episodes_total, 4 * budget);
+    assert!(r.rounds > STALL_ROUNDS, "enough rounds to observe stalling: {}", r.rounds);
+    assert_eq!(r.steals, 3, "every non-leader tree forfeits exactly once");
+    let max = *r.worker_episodes.iter().max().unwrap();
+    let min = *r.worker_episodes.iter().min().unwrap();
+    assert!(
+        max > budget && min < budget,
+        "forfeited budget must be re-run by the leader: episodes={:?}",
+        r.worker_episodes
+    );
+    // Forfeiture fires right after the stall threshold: a stalled tree
+    // ran exactly (1 improvement round + STALL_ROUNDS stalled rounds)
+    // of episodes before handing the rest over.
+    let round_size = budget.div_ceil(automap::service::executor::STEAL_ROUNDS);
+    assert_eq!(min, (1 + STALL_ROUNDS) * round_size);
+    // The reassigned budget still produces the winner by minimum cost.
+    let min_cost = r.worker_costs.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert_eq!(r.worker_costs[r.winner], min_cost);
+}
+
+#[test]
+fn stealing_schedule_is_a_function_of_seed_k_budget() {
+    // Same (K, budget), different seed: schedules may differ, but each
+    // is reproducible; and budget conservation holds for every seed.
+    for seed in [1u64, 2, 3] {
+        let a = job(4, seed, 160).run().unwrap();
+        let b = job(4, seed, 160).run().unwrap();
+        assert_eq!(a.worker_episodes, b.worker_episodes, "seed={seed}");
+        assert_eq!(a.steals, b.steals, "seed={seed}");
+        assert_eq!(a.worker_episodes.iter().sum::<usize>(), 4 * 160, "seed={seed}");
+    }
+}

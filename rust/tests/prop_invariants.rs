@@ -275,8 +275,69 @@ fn prop_incremental_episode_equals_replay() {
         if replayed != ep.dm {
             return Err("incremental episode dm != full replay dm".into());
         }
+        // The incrementally maintained stuck set must equal the settled
+        // status of the final map.
+        if ep.stuck.to_sorted_vec() != program.stuck_set(&ep.dm) {
+            return Err("incremental stuck set != settled full-pass stuck set".into());
+        }
         Ok(())
     });
+}
+
+/// Incremental forward propagation vs full replay over the committed
+/// golden corpus (every op kind, nested scopes, zero-arg programs) —
+/// the acceptance wall for the dirty-frontier fast path. In debug
+/// builds every `env.step` additionally self-checks against a full
+/// pass, so this drives both the external and internal equivalence.
+#[test]
+fn corpus_incremental_propagation_equals_replay() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/../configs/corpus");
+    let mut checked = 0usize;
+    for entry in std::fs::read_dir(dir).expect("corpus dir") {
+        let path = entry.unwrap().path();
+        if path.extension().map(|e| e != "pir").unwrap_or(true) {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let f = parse_func(&text).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let program = PartirProgram::new(f, Mesh::new(&[("batch", 2), ("model", 4)]));
+        let wl = RewriteEnv::default_worklist(&program);
+        if wl.is_empty() {
+            continue; // zero-arg corpus program: no decision targets
+        }
+        let env = RewriteEnv::new(
+            &program,
+            automap::sim::device::Device::tpu_v3(),
+            automap::cost::composite::CostWeights::default(),
+            SearchOptions { cross_layer_tying: false, ..Default::default() },
+            &wl,
+        );
+        let mut rng = Rng::new(0xD00D + wl.len() as u64);
+        for _attempt in 0..8 {
+            let mut ep = env.reset();
+            for _ in 0..5 {
+                let acts = env.legal_actions(&ep);
+                if acts.is_empty() {
+                    break;
+                }
+                let a = *rng.choose(&acts);
+                env.step(&mut ep, a);
+                let (replayed, _) = program.apply(&ep.state);
+                assert_eq!(replayed, ep.dm, "{}: dm diverged", path.display());
+                assert_eq!(
+                    ep.stuck.to_sorted_vec(),
+                    program.stuck_set(&ep.dm),
+                    "{}: stuck set diverged",
+                    path.display()
+                );
+                if ep.done {
+                    break;
+                }
+            }
+            checked += 1;
+        }
+    }
+    assert!(checked > 0, "golden corpus must contain checkable programs");
 }
 
 #[test]

@@ -44,6 +44,13 @@ fn throughput_smoke_scales_and_writes_bench_json() {
         report.cache_hit_median_ns
     );
 
+    // The per-episode building blocks are measured and sane: one step
+    // and one evaluation each cost something, and an episode (a handful
+    // of steps + eval) is far more expensive than a single step.
+    assert!(report.step_median_ns > 0.0);
+    assert!(report.eval_median_ns > 0.0);
+    assert!(report.rounds >= 1, "the multi-worker run must report its round schedule");
+
     let path = write_report(&report).expect("writing BENCH_search.json failed");
     let text = std::fs::read_to_string(&path).unwrap();
     let j = automap::util::json::parse(&text).unwrap();
@@ -51,5 +58,13 @@ fn throughput_smoke_scales_and_writes_bench_json() {
     // Positive, not >1: on a single hardware thread (guarded above) a
     // 4-worker run can legitimately be slower than single-worker.
     assert!(j.get("speedup").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j.get("step_median_ns").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j.get("eval_median_ns").unwrap().as_f64().unwrap() > 0.0);
+    // configs/perf_floor.json is committed, so the report must carry the
+    // pre-overhaul baseline alongside the current number.
+    assert!(
+        j.get("baseline_single_episodes_per_sec").is_some(),
+        "baseline from configs/perf_floor.json missing from the report"
+    );
     println!("search throughput: {}", report.describe());
 }
