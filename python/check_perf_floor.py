@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Perf-floor gate for the search hot path (CI perf-smoke step).
+
+Reads the freshly benchmarked ``BENCH_search.json`` at the repo root and
+the committed floors in ``configs/perf_floor.json`` and fails (exit 1)
+when the release-build measurements breach them:
+
+* ``single_episodes_per_sec``  must stay ABOVE  ``floor_single_episodes_per_sec``
+* ``step_median_ns``           must stay BELOW  ``max_step_median_ns``
+* ``eval_median_ns``  (ledger) must stay BELOW  ``max_eval_median_ns``
+* ``eval_ledger_speedup``      must stay ABOVE  ``min_eval_ledger_speedup``
+
+The floors are deliberately generous — shared CI runners are noisy and
+the gate exists to catch catastrophic regressions (an accidentally
+quadratic sweep, a lost cache), not 10% wobble. Debug-build reports
+(``debug_build: true``) are never gated: debug builds cross-check every
+ledger evaluation against the full pipeline, which makes their timings
+incomparable by construction; the breach is reported as a warning only.
+
+Usage: python3 python/check_perf_floor.py [bench_json] [floor_json]
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    bench_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_search.json"
+    floor_path = sys.argv[2] if len(sys.argv) > 2 else "configs/perf_floor.json"
+    bench = json.load(open(bench_path))
+    floor = json.load(open(floor_path))
+
+    advisory = bool(bench.get("debug_build", False))
+    breaches = []
+
+    def above(metric, floor_key):
+        got = bench.get(metric)
+        want = floor.get(floor_key)
+        if got is None or want is None:
+            breaches.append(f"{metric}: missing from report or floor config")
+            return
+        print(f"perf floor: {metric} = {got:.2f} (must be >= {want:.2f})")
+        if got < want:
+            breaches.append(f"{metric} {got:.2f} below the floor {want:.2f}")
+
+    def below(metric, ceil_key):
+        got = bench.get(metric)
+        want = floor.get(ceil_key)
+        if got is None or want is None:
+            breaches.append(f"{metric}: missing from report or floor config")
+            return
+        print(f"perf floor: {metric} = {got:.0f} (must be <= {want:.0f})")
+        if got > want:
+            breaches.append(f"{metric} {got:.0f} above the ceiling {want:.0f}")
+
+    above("single_episodes_per_sec", "floor_single_episodes_per_sec")
+    below("step_median_ns", "max_step_median_ns")
+    below("eval_median_ns", "max_eval_median_ns")
+    above("eval_ledger_speedup", "min_eval_ledger_speedup")
+
+    base = bench.get("baseline_single_episodes_per_sec")
+    eps = bench.get("single_episodes_per_sec")
+    if base and eps:
+        print(f"perf floor: {eps / base:.2f}x over the pre-overhaul baseline {base:.0f} eps/s")
+
+    if not breaches:
+        print("perf floor: all checks passed")
+        return 0
+    if advisory:
+        for b in breaches:
+            print(f"::warning title=perf floor (debug build, advisory)::{b}")
+        return 0
+    for b in breaches:
+        print(f"::error title=perf floor::{b}")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

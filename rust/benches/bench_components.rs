@@ -5,7 +5,7 @@
 //!     cargo bench --offline  (hand-rolled harness; criterion is not
 //!     available offline — see DESIGN.md §3)
 
-use automap::cost::composite::{evaluate, CostWeights};
+use automap::cost::composite::{evaluate, CostLedger, CostWeights};
 use automap::cost::liveness::peak_memory;
 use automap::learner::features::featurize;
 use automap::models::transformer::{build_transformer, TransformerConfig};
@@ -65,6 +65,21 @@ fn main() {
             black_box(
                 evaluate(&program, &dm_done, &Device::tpu_v3(), &CostWeights::default()).cost,
             );
+        });
+        // Incremental ledger refresh hopping between two maps one
+        // decision apart — the episode-loop evaluation pattern.
+        let st_partial = DecisionState {
+            actions: st.actions[..st.actions.len() - 1].to_vec(),
+            atomic: Default::default(),
+        };
+        let (dm_partial, _) = program.apply(&st_partial);
+        let mut ledger =
+            CostLedger::new(&program, &dm_done, Device::tpu_v3(), CostWeights::default());
+        let mut flip = false;
+        b.bench(&format!("ledger_refresh/{layers}L"), || {
+            flip = !flip;
+            let target = if flip { &dm_partial } else { &dm_done };
+            black_box(ledger.refresh(&program, target).cost);
         });
 
         // Featurization (learner input).

@@ -15,19 +15,28 @@ fn main() {
     let cfg = ThroughputConfig::full();
     let report = measure(&cfg).expect("throughput measurement failed");
     println!(
-        "BENCH search_throughput/single    episodes_per_sec={:.0}",
-        report.single_episodes_per_sec
+        "BENCH search_throughput/single    episodes_per_sec={:.0} evals_per_sec={:.0}",
+        report.single_episodes_per_sec, report.single_evals_per_sec
     );
     println!(
-        "BENCH search_throughput/workers{}  episodes_per_sec={:.0} speedup={:.2}x",
-        report.workers, report.multi_episodes_per_sec, report.speedup
+        "BENCH search_throughput/workers{}  episodes_per_sec={:.0} evals_per_sec={:.0} \
+         speedup={:.2}x",
+        report.workers, report.multi_episodes_per_sec, report.multi_evals_per_sec, report.speedup
     );
     println!(
         "BENCH search_throughput/cache_hit median_ns={:.0} probes={}",
         report.cache_hit_median_ns, report.cache_probes
     );
     println!("BENCH search_throughput/step      median_ns={:.0}", report.step_median_ns);
-    println!("BENCH search_throughput/eval      median_ns={:.0}", report.eval_median_ns);
+    println!(
+        "BENCH search_throughput/eval      ledger_median_ns={:.0} full_median_ns={:.0} \
+         ledger_speedup={:.2}x",
+        report.eval_median_ns, report.eval_full_median_ns, report.eval_ledger_speedup
+    );
+    println!(
+        "BENCH search_throughput/caches    eval_memo_hit_rate={:.2} ledger_reuse_rate={:.2}",
+        report.eval_memo_hit_rate, report.ledger_reuse_rate
+    );
     println!("BENCH search_throughput/stealing  rounds={} steals={}", report.rounds, report.steals);
     if let Some(b) = report.baseline_single_episodes_per_sec {
         println!(

@@ -6,13 +6,14 @@
 //! Megatron-optimality is *emergent*: it is the minimum-collective
 //! strategy that fits device memory. Nothing here pattern-matches it.
 
-use super::liveness::MemoryEstimate;
+use super::liveness::{LivenessTimeline, MemoryEstimate};
 use crate::partir::dist::DistMap;
 use crate::partir::program::PartirProgram;
+use crate::partir::propagate::PropStats;
 use crate::sim::device::Device;
-use crate::sim::exec::{estimate, RuntimeEstimate};
-use crate::spmd::collectives::CollectiveStats;
-use crate::spmd::lower::lower;
+use crate::sim::exec::{estimate, node_term, NodeTerm, RuntimeEstimate};
+use crate::spmd::collectives::{collective_seconds, Collective, CollectiveKind, CollectiveStats};
+use crate::spmd::lower::{lower, lower_node_into};
 
 /// Weights for the composite objective.
 #[derive(Debug, Clone)]
@@ -34,7 +35,7 @@ impl Default for CostWeights {
 }
 
 /// Full evaluation of one partitioning solution.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Evaluation {
     pub memory: MemoryEstimate,
     pub runtime: RuntimeEstimate,
@@ -51,12 +52,274 @@ pub fn evaluate(p: &PartirProgram, dm: &DistMap, dev: &Device, w: &CostWeights) 
         super::liveness::peak_memory_cached(&p.func, &p.mesh, dm, &p.prop.global_bytes);
     let runtime = estimate(&sp, dev);
     let collectives = CollectiveStats::from_collectives(&sp.collectives);
-    let overflow = (memory.peak_bytes - dev.hbm_bytes).max(0) as f64;
+    combine(memory, runtime, collectives, dev.hbm_bytes, w)
+}
+
+/// Fold the three model outputs into the composite objective — the ONE
+/// definition of the cost formula, shared by [`evaluate`] and
+/// [`CostLedger`]: the ledger's bit-identity guarantee rests on there
+/// being no second copy to drift.
+fn combine(
+    memory: MemoryEstimate,
+    runtime: RuntimeEstimate,
+    collectives: CollectiveStats,
+    hbm_bytes: i64,
+    w: &CostWeights,
+) -> Evaluation {
+    let overflow = (memory.peak_bytes - hbm_bytes).max(0) as f64;
     let cost = w.mem_overflow * overflow
         + w.comm_bytes * collectives.total_bytes() as f64
         + w.runtime * runtime.total_seconds()
         + w.mem_bytes * memory.peak_bytes as f64;
     Evaluation { fits_memory: overflow == 0.0, memory, runtime, collectives, cost }
+}
+
+/// One cached collective of one node: what the lowering emitted plus its
+/// precomputed α-β ring seconds (the device is fixed for a ledger's
+/// life, so the seconds never go stale).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct CollectiveTerm {
+    kind: CollectiveKind,
+    bytes: i64,
+    seconds: f64,
+}
+
+/// Per-node cost ledger: [`evaluate`] decomposed into per-node
+/// contributions — each node's lowered collectives
+/// ([`lower_node_into`]), its roofline term ([`node_term`]), and its
+/// values' resident sizes in a maintained [`LivenessTimeline`] — all
+/// keyed to one tracked distribution map.
+///
+/// [`CostLedger::refresh`] re-costs only the nodes whose operand/result
+/// rows differ from the tracked map (found by a flat row diff, which
+/// subsumes the search env's dirty-value frontier and also covers the
+/// assignments an auto infer-rest pass makes), then re-aggregates:
+/// integer quantities (collective counts/bytes, liveness deltas) are
+/// maintained by exact deltas, float quantities are re-summed over the
+/// cached per-node terms in exactly the order the full pipeline sums
+/// them. Evaluation therefore drops from O(nodes × axes × operands)
+/// with three allocating passes to O(changed nodes) + one flat re-sum.
+///
+/// **Exactness (the delta-fixpoint argument, DESIGN.md §8):** every
+/// per-node term is a pure function of the distribution rows of that
+/// node's operands and result plus immutable program tables. A node
+/// outside the diff has all of those rows unchanged, so its cached term
+/// is bit-identical to what a fresh computation would produce; a node
+/// inside the diff is recomputed by the same functions the full
+/// pipeline uses. Aggregation order is the full pipeline's order, so
+/// the sums — and the composite cost — are bit-identical, not merely
+/// close. Debug builds assert this against [`evaluate`] on every ledger
+/// evaluation (`search/env.rs`), and `tests/ledger_equivalence.rs`
+/// pins it over randomized episodes, the golden corpus, and all
+/// built-in models.
+#[derive(Debug, Clone)]
+pub struct CostLedger {
+    device: Device,
+    weights: CostWeights,
+    /// The map the cached terms describe.
+    dm: DistMap,
+    /// Per-node roofline terms.
+    terms: Vec<NodeTerm>,
+    /// Per-node lowered collectives (emission order preserved).
+    coll: Vec<Vec<CollectiveTerm>>,
+    /// Maintained liveness intervals + resident argument bytes.
+    live: LivenessTimeline,
+    /// Scratch: values whose rows changed in the current refresh.
+    changed: Vec<u32>,
+    /// Scratch: dirty-node list + membership bitmap.
+    dirty: Vec<u32>,
+    dirty_bits: Vec<bool>,
+    /// Scratch for [`lower_node_into`].
+    justified: Vec<(usize, usize)>,
+    lowered: Vec<Collective>,
+    /// Scratch map for the auto-infer-rest evaluation target.
+    infer_dm: DistMap,
+    /// Refresh calls served.
+    pub refreshes: usize,
+    /// Node terms recomputed across all refreshes (the dirty work).
+    pub nodes_recomputed: usize,
+    /// Node terms served from the ledger across all refreshes.
+    pub nodes_reused: usize,
+}
+
+impl CostLedger {
+    /// Build a ledger describing `dm` (every term computed once).
+    pub fn new(
+        p: &PartirProgram,
+        dm: &DistMap,
+        device: Device,
+        weights: CostWeights,
+    ) -> CostLedger {
+        let n = p.func.num_nodes();
+        let live = LivenessTimeline::new(&p.func, &p.mesh, dm, &p.prop.global_bytes);
+        let mut ledger = CostLedger {
+            device,
+            weights,
+            dm: dm.clone(),
+            terms: vec![NodeTerm::default(); n],
+            coll: vec![Vec::new(); n],
+            live,
+            changed: Vec::new(),
+            dirty: Vec::new(),
+            dirty_bits: vec![false; n],
+            justified: Vec::new(),
+            lowered: Vec::new(),
+            infer_dm: DistMap { d: Vec::new(), num_axes: 0 },
+            refreshes: 0,
+            nodes_recomputed: 0,
+            nodes_reused: 0,
+        };
+        for ni in 0..n {
+            ledger.recompute_node(p, ni);
+        }
+        ledger
+    }
+
+    /// Re-cost node `ni` against the tracked map.
+    fn recompute_node(&mut self, p: &PartirProgram, ni: usize) {
+        self.terms[ni] = node_term(&p.func, &p.mesh, &p.prop, &self.dm, &self.device, ni);
+        self.lowered.clear();
+        lower_node_into(
+            &p.func,
+            &p.mesh,
+            &p.prop,
+            &self.dm,
+            ni,
+            &mut self.justified,
+            &mut self.lowered,
+        );
+        let terms = &mut self.coll[ni];
+        terms.clear();
+        for c in &self.lowered {
+            terms.push(CollectiveTerm {
+                kind: c.kind,
+                bytes: c.bytes,
+                seconds: collective_seconds(c, &p.mesh, self.device.ici_bw, self.device.alpha),
+            });
+        }
+    }
+
+    /// Bring the ledger to `target` and evaluate it: diff the tracked
+    /// map against `target`, re-cost only the nodes a changed value
+    /// touches, re-aggregate. Bit-identical to
+    /// `evaluate(p, target, device, weights)`.
+    pub fn refresh(&mut self, p: &PartirProgram, target: &DistMap) -> Evaluation {
+        debug_assert_eq!(self.dm.d.len(), target.d.len(), "ledger bound to a different program");
+        self.refreshes += 1;
+        self.changed.clear();
+        for v in 0..self.dm.d.len() {
+            if self.dm.d[v] != target.d[v] {
+                self.changed.push(v as u32);
+                self.dm.d[v] = target.d[v];
+            }
+        }
+        self.dm.num_axes = target.num_axes;
+        // Re-point changed values' liveness intervals and mark every
+        // node whose operand or result rows moved. The scratch vectors
+        // are moved out while iterated (borrow discipline) and moved
+        // back, so their capacity is kept across refreshes.
+        let num_args = p.func.num_args();
+        let changed = std::mem::take(&mut self.changed);
+        for &v in &changed {
+            let v = v as usize;
+            self.live.set_value(v, self.dm.local_bytes(v, p.prop.global_bytes[v], &p.mesh));
+            if v >= num_args {
+                self.mark_dirty((v - num_args) as u32);
+            }
+            for &ni in p.prop.users_of(v) {
+                self.mark_dirty(ni);
+            }
+        }
+        self.changed = changed;
+        let dirty = std::mem::take(&mut self.dirty);
+        for &ni in &dirty {
+            self.recompute_node(p, ni as usize);
+            self.dirty_bits[ni as usize] = false;
+        }
+        self.nodes_recomputed += dirty.len();
+        self.nodes_reused += p.func.num_nodes() - dirty.len();
+        self.dirty = dirty;
+        self.dirty.clear();
+        self.aggregate()
+    }
+
+    #[inline]
+    fn mark_dirty(&mut self, ni: u32) {
+        if !self.dirty_bits[ni as usize] {
+            self.dirty_bits[ni as usize] = true;
+            self.dirty.push(ni);
+        }
+    }
+
+    /// Evaluate `dm` through the ledger, optionally running the
+    /// auto-infer-rest pass into ledger-owned scratch first (the same
+    /// pass the full evaluation path runs on a terminal episode).
+    pub fn evaluate_map(
+        &mut self,
+        p: &PartirProgram,
+        dm: &DistMap,
+        infer_rest: bool,
+    ) -> Evaluation {
+        if !infer_rest {
+            return self.refresh(p, dm);
+        }
+        // Move the scratch out so `refresh` can borrow `self` mutably.
+        let empty = DistMap { d: Vec::new(), num_axes: 0 };
+        let mut target = std::mem::replace(&mut self.infer_dm, empty);
+        if target.d.len() == dm.d.len() {
+            target.d.clone_from(&dm.d);
+            target.num_axes = dm.num_axes;
+        } else {
+            target = dm.clone();
+        }
+        let mut stats = PropStats::default();
+        p.prop.infer_rest(&p.func, &p.mesh, &mut target, &mut stats);
+        let e = self.refresh(p, &target);
+        self.infer_dm = target;
+        e
+    }
+
+    /// Aggregate the cached terms into a full [`Evaluation`], in exactly
+    /// the order the one-shot pipeline accumulates: roofline terms by
+    /// ascending node, collective seconds in emission order, liveness
+    /// peak by the maintained-delta scan.
+    fn aggregate(&self) -> Evaluation {
+        let mut runtime = RuntimeEstimate::default();
+        let mut collectives = CollectiveStats::default();
+        for (t, cs) in self.terms.iter().zip(&self.coll) {
+            runtime.add_node_term(t);
+            for c in cs {
+                collectives.add(c.kind, c.bytes);
+                runtime.collective_seconds += c.seconds;
+            }
+        }
+        combine(self.live.peak(), runtime, collectives, self.device.hbm_bytes, &self.weights)
+    }
+
+    /// Stable digest of every cached term (float bits included) — lets
+    /// tests prove a ledger maintained across a whole episode holds the
+    /// same state as one rebuilt from scratch on the final map.
+    pub fn terms_digest(&self) -> u64 {
+        let mut h = crate::util::hash::Fnv64::new();
+        h.usize(self.dm.num_axes);
+        for row in &self.dm.d {
+            h.bytes(row);
+        }
+        for t in &self.terms {
+            h.f64(t.compute_seconds).f64(t.memory_seconds).f64(t.flops);
+        }
+        for cs in &self.coll {
+            h.usize(cs.len());
+            for c in cs {
+                h.byte(matches!(c.kind, CollectiveKind::AllReduce) as u8)
+                    .i64(c.bytes)
+                    .f64(c.seconds);
+            }
+        }
+        let mem = self.live.peak();
+        h.i64(mem.peak_bytes).i64(mem.arg_bytes).usize(mem.peak_node);
+        h.finish()
+    }
 }
 
 #[cfg(test)]
@@ -104,6 +367,82 @@ mod tests {
         assert!(e1.fits_memory, "peak={} limit={}", e1.memory.peak_bytes, dev.hbm_bytes);
         assert!(e1.cost < e0.cost);
         assert_eq!(e1.collectives.all_reduce_count, 1);
+    }
+
+    #[test]
+    fn ledger_refresh_is_bit_identical_to_full_evaluate() {
+        let p = big_prog();
+        let dev = tiny_device();
+        let w = CostWeights::default();
+        let dm0 = crate::partir::dist::DistMap::new(&p.func, &p.mesh);
+        let mut ledger = CostLedger::new(&p, &dm0, dev.clone(), w.clone());
+        // Walk through three maps (replicated → megatron → bad) and
+        // compare every incremental refresh against the full pipeline.
+        let states = [
+            vec![],
+            vec![
+                Action::Tile { v: ValueId(1), dim: 1, axis: AxisId(0) },
+                Action::Tile { v: ValueId(2), dim: 0, axis: AxisId(0) },
+            ],
+            vec![
+                Action::Tile { v: ValueId(1), dim: 0, axis: AxisId(0) },
+                Action::Tile { v: ValueId(2), dim: 1, axis: AxisId(0) },
+            ],
+        ];
+        for actions in states {
+            let st = DecisionState { actions, atomic: Default::default() };
+            let (dm, _) = p.apply(&st);
+            let inc = ledger.refresh(&p, &dm);
+            let full = evaluate(&p, &dm, &dev, &w);
+            assert_eq!(inc, full);
+            assert_eq!(inc.cost.to_bits(), full.cost.to_bits(), "cost must match to the bit");
+        }
+        assert!(ledger.nodes_reused > 0, "the ledger must actually reuse terms");
+    }
+
+    #[test]
+    fn ledger_counts_reuse_and_recompute() {
+        let p = big_prog();
+        let dm0 = crate::partir::dist::DistMap::new(&p.func, &p.mesh);
+        let mut ledger = CostLedger::new(&p, &dm0, tiny_device(), CostWeights::default());
+        // Refreshing onto the identical map recomputes nothing.
+        let _ = ledger.refresh(&p, &dm0);
+        assert_eq!(ledger.refreshes, 1);
+        assert_eq!(ledger.nodes_recomputed, 0);
+        assert_eq!(ledger.nodes_reused, p.func.num_nodes());
+        // One decision dirties only the touched region.
+        let st = DecisionState {
+            actions: vec![Action::Tile { v: ValueId(1), dim: 1, axis: AxisId(0) }],
+            atomic: Default::default(),
+        };
+        let (dm, _) = p.apply(&st);
+        let _ = ledger.refresh(&p, &dm);
+        assert!(ledger.nodes_recomputed >= 1);
+        assert!(ledger.nodes_recomputed < p.func.num_nodes());
+    }
+
+    #[test]
+    fn ledger_digest_matches_a_fresh_rebuild() {
+        let p = big_prog();
+        let dev = tiny_device();
+        let w = CostWeights::default();
+        let dm0 = crate::partir::dist::DistMap::new(&p.func, &p.mesh);
+        let mut ledger = CostLedger::new(&p, &dm0, dev.clone(), w.clone());
+        let st = DecisionState {
+            actions: vec![
+                Action::Tile { v: ValueId(1), dim: 1, axis: AxisId(0) },
+                Action::Tile { v: ValueId(2), dim: 0, axis: AxisId(0) },
+            ],
+            atomic: Default::default(),
+        };
+        let (dm, _) = p.apply(&st);
+        let _ = ledger.refresh(&p, &dm);
+        let fresh = CostLedger::new(&p, &dm, dev, w);
+        assert_eq!(
+            ledger.terms_digest(),
+            fresh.terms_digest(),
+            "a maintained ledger must hold the same terms as a scratch rebuild"
+        );
     }
 
     #[test]

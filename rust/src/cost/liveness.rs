@@ -12,7 +12,7 @@ use crate::ir::Func;
 use crate::partir::dist::DistMap;
 use crate::partir::mesh::Mesh;
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct MemoryEstimate {
     /// Peak simultaneous per-device bytes.
     pub peak_bytes: i64,
@@ -38,43 +38,102 @@ pub fn peak_memory(f: &Func, mesh: &Mesh, dm: &DistMap) -> MemoryEstimate {
 /// `[t0, t1]`; peak = max prefix sum of interval deltas — no nested
 /// free-lists.
 pub fn peak_memory_cached(f: &Func, mesh: &Mesh, dm: &DistMap, bytes: &[i64]) -> MemoryEstimate {
-    let num_args = f.num_args();
-    let end = f.num_nodes();
-    // Last use per value (node index); outputs pinned to the end.
-    let mut last_use: Vec<u32> = vec![0; f.num_values()];
-    for (ni, node) in f.nodes.iter().enumerate() {
-        for &inp in &node.inputs {
-            last_use[inp.index()] = ni as u32;
+    LivenessTimeline::new(f, mesh, dm, bytes).peak()
+}
+
+/// The liveness interval timeline held mutable: per-value local sizes,
+/// the allocate/free delta track, and the resident argument total. The
+/// cost ledger keeps one of these per episode and, after an action,
+/// re-points only the *changed* values' intervals; the peak is then
+/// re-scanned over the maintained deltas.
+///
+/// All quantities are `i64` sums, so delta maintenance is exact: a
+/// timeline updated value-by-value holds bit-identical state to one
+/// rebuilt from scratch over the same map, and [`LivenessTimeline::peak`]
+/// runs the same scan [`peak_memory_cached`] always ran.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LivenessTimeline {
+    /// Last use per value (node index); outputs pinned past the end.
+    last_use: Vec<u32>,
+    /// Per-device local bytes per value under the tracked distribution.
+    local: Vec<i64>,
+    /// `delta[t]` = bytes allocated at t minus bytes freed entering t.
+    delta: Vec<i64>,
+    arg_bytes: i64,
+    num_args: usize,
+}
+
+impl LivenessTimeline {
+    pub fn new(f: &Func, mesh: &Mesh, dm: &DistMap, bytes: &[i64]) -> LivenessTimeline {
+        let num_args = f.num_args();
+        let end = f.num_nodes();
+        // Last use per value (node index); outputs pinned to the end.
+        let mut last_use: Vec<u32> = vec![0; f.num_values()];
+        for (ni, node) in f.nodes.iter().enumerate() {
+            for &inp in &node.inputs {
+                last_use[inp.index()] = ni as u32;
+            }
         }
-    }
-    for &o in &f.outputs {
-        last_use[o.index()] = end as u32;
+        for &o in &f.outputs {
+            last_use[o.index()] = end as u32;
+        }
+
+        let local: Vec<i64> =
+            (0..f.num_values()).map(|v| dm.local_bytes(v, bytes[v], mesh)).collect();
+        let arg_bytes: i64 = local[..num_args].iter().sum();
+
+        let mut delta: Vec<i64> = vec![0; end + 1];
+        for ni in 0..end {
+            let v = num_args + ni;
+            let s = local[v];
+            delta[ni] += s;
+            let free_at = last_use[v] as usize + 1;
+            if free_at <= end {
+                delta[free_at] -= s;
+            }
+        }
+        LivenessTimeline { last_use, local, delta, arg_bytes, num_args }
     }
 
-    let arg_bytes: i64 = (0..num_args).map(|i| dm.local_bytes(i, bytes[i], mesh)).sum();
-
-    // delta[t] = bytes allocated at t minus bytes freed entering t.
-    let mut delta: Vec<i64> = vec![0; end + 1];
-    for ni in 0..end {
-        let v = num_args + ni;
-        let s = dm.local_bytes(v, bytes[v], mesh);
-        delta[ni] += s;
-        let free_at = last_use[v] as usize + 1;
+    /// Re-point value `v`'s interval to a new local size (its
+    /// distribution row changed): arguments adjust the resident total,
+    /// node results adjust their allocate/free deltas by the difference.
+    #[inline]
+    pub fn set_value(&mut self, v: usize, new_local: i64) {
+        let diff = new_local - self.local[v];
+        if diff == 0 {
+            return;
+        }
+        self.local[v] = new_local;
+        if v < self.num_args {
+            self.arg_bytes += diff;
+            return;
+        }
+        let end = self.delta.len() - 1;
+        let ni = v - self.num_args;
+        self.delta[ni] += diff;
+        let free_at = self.last_use[v] as usize + 1;
         if free_at <= end {
-            delta[free_at] -= s;
+            self.delta[free_at] -= diff;
         }
     }
-    let mut current = arg_bytes;
-    let mut peak = arg_bytes;
-    let mut peak_node = 0usize;
-    for (ni, &d) in delta.iter().enumerate().take(end) {
-        current += d;
-        if current > peak {
-            peak = current;
-            peak_node = ni;
+
+    /// Scan the maintained deltas for the peak — the same max-prefix-sum
+    /// pass the one-shot path runs, so the result is identical.
+    pub fn peak(&self) -> MemoryEstimate {
+        let end = self.delta.len() - 1;
+        let mut current = self.arg_bytes;
+        let mut peak = self.arg_bytes;
+        let mut peak_node = 0usize;
+        for (ni, &d) in self.delta.iter().enumerate().take(end) {
+            current += d;
+            if current > peak {
+                peak = current;
+                peak_node = ni;
+            }
         }
+        MemoryEstimate { peak_bytes: peak, arg_bytes: self.arg_bytes, peak_node }
     }
-    MemoryEstimate { peak_bytes: peak, arg_bytes, peak_node }
 }
 
 #[cfg(test)]
@@ -118,6 +177,33 @@ mod tests {
         let m = peak_memory(&p.func, &p.mesh, &dm);
         // everything tiled 4-ways except the scalar sum
         assert_eq!(m.peak_bytes, (4096 * 3) / 4);
+    }
+
+    #[test]
+    fn timeline_updates_match_rebuild() {
+        // Maintain a timeline across a distribution change and compare
+        // against one rebuilt from scratch: state and peak identical.
+        let p = chain();
+        let dm0 = DistMap::new(&p.func, &p.mesh);
+        let bytes: Vec<i64> = (0..p.func.num_values())
+            .map(|v| p.func.value_type(ValueId(v as u32)).byte_size())
+            .collect();
+        let mut live = LivenessTimeline::new(&p.func, &p.mesh, &dm0, &bytes);
+        assert_eq!(live.peak(), peak_memory(&p.func, &p.mesh, &dm0));
+
+        let st = DecisionState {
+            actions: vec![Action::Tile { v: ValueId(0), dim: 0, axis: AxisId(0) }],
+            atomic: Default::default(),
+        };
+        let (dm, _) = p.apply(&st);
+        for v in 0..p.func.num_values() {
+            if dm.d[v] != dm0.d[v] {
+                live.set_value(v, dm.local_bytes(v, bytes[v], &p.mesh));
+            }
+        }
+        let rebuilt = LivenessTimeline::new(&p.func, &p.mesh, &dm, &bytes);
+        assert_eq!(live, rebuilt, "maintained timeline must equal a fresh build");
+        assert_eq!(live.peak(), peak_memory(&p.func, &p.mesh, &dm));
     }
 
     #[test]

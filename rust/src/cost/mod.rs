@@ -5,5 +5,5 @@
 pub mod composite;
 pub mod liveness;
 
-pub use composite::{evaluate, CostWeights, Evaluation};
-pub use liveness::{peak_memory, MemoryEstimate};
+pub use composite::{evaluate, CostLedger, CostWeights, Evaluation};
+pub use liveness::{peak_memory, LivenessTimeline, MemoryEstimate};

@@ -237,6 +237,14 @@ impl Propagator {
         &self.dims[v]
     }
 
+    /// Consumer node indices of a value — the fan-out edges both the
+    /// incremental propagation sweep and the cost ledger's dirty-node
+    /// marking follow.
+    #[inline]
+    pub fn users_of(&self, v: usize) -> &[u32] {
+        &self.users[v]
+    }
+
     #[inline]
     fn divisible(&self, v: usize, dim: usize, size: i64) -> bool {
         self.dims[v][dim] % size == 0

@@ -11,7 +11,7 @@
 //!     groups expose a single decision set per repeated block, shrinking
 //!     the action space itself.
 
-use crate::cost::composite::{evaluate, CostWeights, Evaluation};
+use crate::cost::composite::{evaluate, CostLedger, CostWeights, Evaluation};
 use crate::ir::{ArgKind, ValueId};
 use crate::partir::actions::{action_valid, Action, DecisionState};
 use crate::partir::dist::{DistMap, UNKNOWN};
@@ -179,11 +179,25 @@ pub struct Episode {
     pub last_infer_rest: bool,
     /// Reusable dirty-frontier queue for incremental sweeps.
     scratch: FrontierScratch,
+    /// Per-episode cost ledger (attached by
+    /// [`RewriteEnv::attach_ledger`]; `None` until then). The ledger is
+    /// evaluation *scratch*, not episode identity: its cached terms
+    /// describe whatever map it last evaluated, and a refresh re-syncs
+    /// it to any target exactly — so `Clone` never copies it (see the
+    /// impl below) and a stale ledger is never wrong, only less warm.
+    pub ledger: Option<Box<CostLedger>>,
 }
 
 /// Manual impl so `clone_from` reuses every buffer: the MCTS episode
 /// loop resets its scratch episode from the root this way, making
 /// per-episode reset a set of memcpys instead of fresh allocations.
+///
+/// The cost ledger deliberately does NOT propagate through `Clone`:
+/// `clone` starts without one and `clone_from` keeps the destination's
+/// ledger untouched. Copying it would memcpy every per-node term on
+/// every episode reset for nothing — the ledger re-syncs itself by
+/// diffing at the next evaluation, and its answers are bit-identical
+/// whatever state it starts from.
 impl Clone for Episode {
     fn clone(&self) -> Episode {
         Episode {
@@ -195,6 +209,7 @@ impl Clone for Episode {
             done: self.done,
             last_infer_rest: self.last_infer_rest,
             scratch: self.scratch.clone(),
+            ledger: None,
         }
     }
 
@@ -208,6 +223,7 @@ impl Clone for Episode {
         self.done = src.done;
         self.last_infer_rest = src.last_infer_rest;
         self.scratch.clone_from(&src.scratch);
+        // self.ledger intentionally kept (see the impl-level comment).
     }
 }
 
@@ -399,6 +415,23 @@ impl<'a> RewriteEnv<'a> {
             done: false,
             last_infer_rest: self.seed_last_infer,
             scratch: FrontierScratch::with_capacity(self.program.func.num_nodes()),
+            ledger: None,
+        }
+    }
+
+    /// Attach a cost ledger to `ep` (no-op when one is already there):
+    /// subsequent [`RewriteEnv::evaluate_episode_ledger`] and memo-miss
+    /// evaluations run incrementally instead of re-lowering the whole
+    /// program. Built from the seed map so the first evaluation already
+    /// diffs, not rebuilds.
+    pub fn attach_ledger(&self, ep: &mut Episode) {
+        if ep.ledger.is_none() {
+            ep.ledger = Some(Box::new(CostLedger::new(
+                self.program,
+                &self.seed_dm,
+                self.device.clone(),
+                self.weights.clone(),
+            )));
         }
     }
 
@@ -520,12 +553,18 @@ impl<'a> RewriteEnv<'a> {
         h.finish()
     }
 
-    /// Like [`RewriteEnv::evaluate_episode`], but consults `memo` first:
-    /// MCTS revisits of an identical terminal distribution skip the
-    /// lower + liveness + roofline pipeline entirely. Misses reuse the
-    /// memo's scratch map for the auto-infer-rest pass, so the steady
-    /// state allocates nothing.
-    pub fn evaluate_episode_memo(&self, ep: &Episode, memo: &mut EvalMemo) -> Evaluation {
+    /// Like [`RewriteEnv::evaluate_episode`], but tiered: the memo is
+    /// probed first (an identical terminal distribution costs one hash),
+    /// and a miss is answered by the episode's incremental cost ledger
+    /// when one is attached — only then does the full lower + liveness +
+    /// roofline pipeline run. The memo is thus the second-level cache
+    /// over the ledger, which is itself the fast path over the full
+    /// pipeline. Ledger answers are bit-identical to full ones (debug
+    /// builds assert it on every miss), so the tiering can never change
+    /// a search result. Ledger-less misses reuse the memo's scratch map
+    /// for the auto-infer-rest pass, so the steady state allocates
+    /// nothing either way.
+    pub fn evaluate_episode_memo(&self, ep: &mut Episode, memo: &mut EvalMemo) -> Evaluation {
         let key = self.state_fingerprint(ep);
         memo.lookups += 1;
         memo.tick += 1;
@@ -535,7 +574,9 @@ impl<'a> RewriteEnv<'a> {
             *t = tick; // touch for LRU-ish eviction
             return e.clone();
         }
-        let e = if self.options.auto_infer_rest {
+        let e = if ep.ledger.is_some() {
+            self.ledger_evaluation(ep)
+        } else if self.options.auto_infer_rest {
             let dm = memo.scratch_dm.get_or_insert_with(|| ep.dm.clone());
             dm.d.clone_from(&ep.dm.d);
             dm.num_axes = ep.dm.num_axes;
@@ -546,6 +587,34 @@ impl<'a> RewriteEnv<'a> {
             evaluate(self.program, &ep.dm, &self.device, &self.weights)
         };
         memo.insert(key, e.clone());
+        e
+    }
+
+    /// Evaluate a terminal episode through its cost ledger (attached on
+    /// demand): O(changed nodes) instead of a full re-lowering, with the
+    /// same auto-infer-rest semantics as [`RewriteEnv::evaluate_episode`]
+    /// and a bit-identical result.
+    pub fn evaluate_episode_ledger(&self, ep: &mut Episode) -> Evaluation {
+        self.attach_ledger(ep);
+        self.ledger_evaluation(ep)
+    }
+
+    /// The shared ledger evaluation path (`ep.ledger` must be attached).
+    /// Debug builds cross-check every answer against the full pipeline,
+    /// to the bit.
+    fn ledger_evaluation(&self, ep: &mut Episode) -> Evaluation {
+        let ledger = ep.ledger.as_mut().expect("ledger_evaluation needs an attached ledger");
+        let e = ledger.evaluate_map(self.program, &ep.dm, self.options.auto_infer_rest);
+        #[cfg(debug_assertions)]
+        {
+            let full = self.evaluate_episode(ep);
+            assert_eq!(e, full, "ledger evaluation diverged from the full pipeline");
+            assert_eq!(
+                e.cost.to_bits(),
+                full.cost.to_bits(),
+                "ledger cost must match the full pipeline to the bit"
+            );
+        }
         e
     }
 
@@ -698,8 +767,8 @@ mod tests {
         env.step(&mut ep2, EnvAction::Stop);
         assert_eq!(env.state_fingerprint(&ep1), env.state_fingerprint(&ep2));
 
-        let e1 = env.evaluate_episode_memo(&ep1, &mut memo);
-        let e2 = env.evaluate_episode_memo(&ep2, &mut memo);
+        let e1 = env.evaluate_episode_memo(&mut ep1, &mut memo);
+        let e2 = env.evaluate_episode_memo(&mut ep2, &mut memo);
         assert_eq!(memo.lookups, 2);
         assert_eq!(memo.hits, 1);
         assert_eq!(memo.len(), 1);
@@ -720,7 +789,7 @@ mod tests {
         env.step(&mut ep3, tile);
         env.step(&mut ep3, EnvAction::Stop);
         assert_ne!(env.state_fingerprint(&ep3), env.state_fingerprint(&ep1));
-        let _ = env.evaluate_episode_memo(&ep3, &mut memo);
+        let _ = env.evaluate_episode_memo(&mut ep3, &mut memo);
         assert_eq!(memo.hits, 1);
         assert_eq!(memo.len(), 2);
     }
@@ -804,18 +873,18 @@ mod tests {
             eps.push(ep);
         }
         let mut memo = EvalMemo::with_cap(4);
-        for ep in &eps {
+        for ep in &mut eps {
             let _ = env.evaluate_episode_memo(ep, &mut memo);
         }
         assert!(memo.len() <= 4, "cap must bound the memo: {}", memo.len());
         assert!(memo.evictions > 0);
         // The most recent entry survived eviction and still hits.
         let hits_before = memo.hits;
-        let _ = env.evaluate_episode_memo(&eps[5], &mut memo);
+        let _ = env.evaluate_episode_memo(&mut eps[5], &mut memo);
         assert_eq!(memo.hits, hits_before + 1);
         // Determinism: an identical second run sees identical counters.
         let mut memo2 = EvalMemo::with_cap(4);
-        for ep in &eps {
+        for ep in &mut eps {
             let _ = env.evaluate_episode_memo(ep, &mut memo2);
         }
         assert_eq!(memo2.len(), memo.len(), "eviction must be deterministic");

@@ -44,6 +44,13 @@ pub struct SearchResult {
     pub eval_lookups: usize,
     /// Evaluations served from the per-run memo (cost pipeline skipped).
     pub eval_memo_hits: usize,
+    /// Memo misses answered by the incremental cost ledger.
+    pub ledger_refreshes: usize,
+    /// Node cost terms served from the ledger across those refreshes
+    /// (the work the full pipeline would have redone).
+    pub ledger_nodes_reused: usize,
+    /// Node cost terms the ledger had to recompute (the dirty frontier).
+    pub ledger_nodes_recomputed: usize,
 }
 
 /// MCTS hyperparameters.
@@ -103,7 +110,12 @@ impl<'e, 'p> Mcts<'e, 'p> {
         let mut nodes = Vec::with_capacity(1024);
         let root_ep = env.reset();
         let root = push_node(&mut nodes, env, &root_ep, &mut rng);
-        let ep = root_ep.clone();
+        let mut ep = root_ep.clone();
+        // The scratch episode carries the run's cost ledger: memo misses
+        // evaluate incrementally (O(changed nodes)) instead of
+        // re-lowering the whole program. Bit-identical results, so this
+        // cannot change which plan a seed produces.
+        env.attach_ledger(&mut ep);
         Mcts {
             env,
             cfg,
@@ -191,9 +203,10 @@ impl<'e, 'p> Mcts<'e, 'p> {
                 self.env.step(&mut self.ep, a);
             }
 
-            // Evaluate + backprop. Revisited terminal states hit the memo
-            // and skip the lower + liveness + roofline pipeline.
-            let eval = self.env.evaluate_episode_memo(&self.ep, &mut self.memo);
+            // Evaluate + backprop. Revisited terminal states hit the
+            // memo; fresh ones refresh the episode's cost ledger — the
+            // full lower + liveness + roofline pipeline runs for neither.
+            let eval = self.env.evaluate_episode_memo(&mut self.ep, &mut self.memo);
             let reward = self.env.reward(&eval);
             for &nid in &self.path {
                 let nd = &mut self.nodes[nid as usize];
@@ -236,9 +249,24 @@ impl<'e, 'p> Mcts<'e, 'p> {
         self.best.as_ref().map(|b| b.reward).unwrap_or(f64::NEG_INFINITY)
     }
 
+    /// Normalised entropy of the root's child visit counts — the tree's
+    /// "temperature". 1.0 = visits spread uniformly (still exploring or
+    /// nothing to distinguish), → 0.0 = visits concentrated on one child
+    /// (converged). The executor's stall detector watches this signal
+    /// *stop moving* between rounds (DESIGN.md §9): a tree whose
+    /// temperature has flattened is either converged or flat, and in
+    /// both cases its marginal episodes teach nothing.
+    pub fn root_visit_entropy(&self) -> f64 {
+        let root = &self.nodes[self.root as usize];
+        visit_entropy_of(root.children.iter().map(|&(_, cid)| self.nodes[cid as usize].visits))
+    }
+
     /// Snapshot the best solution found so far.
     pub fn result(&self) -> SearchResult {
         let b = self.best.as_ref().expect("budget must be >= 1");
+        let ledger = self.ep.ledger.as_ref();
+        let (ledger_refreshes, ledger_nodes_reused, ledger_nodes_recomputed) =
+            ledger.map(|l| (l.refreshes, l.nodes_reused, l.nodes_recomputed)).unwrap_or((0, 0, 0));
         SearchResult {
             best_state: b.state.clone(),
             best_eval: b.eval.clone(),
@@ -247,8 +275,31 @@ impl<'e, 'p> Mcts<'e, 'p> {
             episodes_run: self.episodes_run,
             eval_lookups: self.memo.lookups,
             eval_memo_hits: self.memo.hits,
+            ledger_refreshes,
+            ledger_nodes_reused,
+            ledger_nodes_recomputed,
         }
     }
+}
+
+/// Normalised Shannon entropy of a visit-count distribution: `H / ln n`
+/// over the positive counts, 0.0 for fewer than two children or no
+/// visits. Deterministic for deterministic visit counts, which keeps the
+/// executor's entropy-based stall decisions reproducible.
+pub fn visit_entropy_of(visits: impl Iterator<Item = u32>) -> f64 {
+    let counts: Vec<u32> = visits.collect();
+    let total: u64 = counts.iter().map(|&v| v as u64).sum();
+    if counts.len() < 2 || total == 0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &v in &counts {
+        if v > 0 {
+            let p = v as f64 / total as f64;
+            h -= p * p.ln();
+        }
+    }
+    h / (counts.len() as f64).ln()
 }
 
 /// Convenience wrapper: one full search.
@@ -336,6 +387,9 @@ mod tests {
         assert_eq!(one_shot.episodes_to_best, chunked.episodes_to_best);
         assert_eq!(one_shot.eval_lookups, chunked.eval_lookups);
         assert_eq!(one_shot.eval_memo_hits, chunked.eval_memo_hits);
+        assert_eq!(one_shot.ledger_refreshes, chunked.ledger_refreshes);
+        assert_eq!(one_shot.ledger_nodes_reused, chunked.ledger_nodes_reused);
+        assert_eq!(one_shot.ledger_nodes_recomputed, chunked.ledger_nodes_recomputed);
         assert_eq!(
             one_shot.best_state.actions,
             chunked.best_state.actions,
@@ -362,6 +416,60 @@ mod tests {
         // test proves a memoized answer equals a fresh evaluation.)
         assert!(res.eval_memo_hits > 0, "expected memo hits in 300 episodes");
         assert!(res.eval_memo_hits < res.eval_lookups);
+        // Every memo miss is a ledger refresh — the full pipeline never
+        // runs inside the episode loop — and the refreshes reuse cached
+        // node terms.
+        assert_eq!(res.ledger_refreshes, res.eval_lookups - res.eval_memo_hits);
+        assert!(res.ledger_nodes_reused > 0, "ledger must reuse some node terms");
+    }
+
+    #[test]
+    fn visit_entropy_is_normalised_and_deterministic() {
+        // Degenerate inputs pin the boundary conventions.
+        assert_eq!(visit_entropy_of(std::iter::empty()), 0.0);
+        assert_eq!(visit_entropy_of([7u32].into_iter()), 0.0);
+        assert_eq!(visit_entropy_of([0, 0].into_iter()), 0.0);
+        // Uniform visits = maximum temperature, exactly 1.0.
+        let uniform = visit_entropy_of([5u32, 5, 5, 5].into_iter());
+        assert!((uniform - 1.0).abs() < 1e-12, "uniform entropy {uniform}");
+        // Concentration cools the tree monotonically.
+        let mild = visit_entropy_of([8u32, 4, 2, 2].into_iter());
+        let sharp = visit_entropy_of([1000u32, 1, 1, 1].into_iter());
+        assert!(mild < uniform && sharp < mild, "{sharp} < {mild} < {uniform}");
+        assert!(sharp > 0.0 && sharp < 0.05);
+        // Zero-visit children count toward n (they are still candidate
+        // arms), so a one-hot distribution over many arms is cold.
+        assert!(visit_entropy_of([10u32, 0, 0, 0].into_iter()) == 0.0);
+        // Deterministic: same counts, same bits.
+        assert_eq!(
+            visit_entropy_of([8u32, 4, 2, 2].into_iter()).to_bits(),
+            visit_entropy_of([8u32, 4, 2, 2].into_iter()).to_bits()
+        );
+    }
+
+    #[test]
+    fn root_visit_entropy_reflects_the_tree() {
+        let program = mlp_env_program();
+        let wl = RewriteEnv::default_worklist(&program);
+        let env = RewriteEnv::new(
+            &program,
+            Device::tpu_v3(),
+            CostWeights::default(),
+            SearchOptions::default(),
+            &wl,
+        );
+        let m = Mcts::new(&env, MctsConfig::default(), 5);
+        assert_eq!(m.root_visit_entropy(), 0.0, "an unexpanded root has no temperature");
+        let mut m = m;
+        m.run_episodes(200);
+        let h = m.root_visit_entropy();
+        assert!((0.0..=1.0).contains(&h), "entropy must be normalised: {h}");
+        assert!(h > 0.0, "200 episodes must expand and visit several children");
+        // Reproducible for a fixed seed (the executor's stall decisions
+        // depend on it).
+        let mut m2 = Mcts::new(&env, MctsConfig::default(), 5);
+        m2.run_episodes(200);
+        assert_eq!(h.to_bits(), m2.root_visit_entropy().to_bits());
     }
 
     #[test]

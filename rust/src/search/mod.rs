@@ -13,7 +13,7 @@ pub mod mcts;
 
 pub use env::{EnvAction, Episode, EvalMemo, RewriteEnv, SearchOptions};
 pub use experiment::{run_sweep, BudgetRow, ExperimentConfig};
-pub use mcts::{search, Mcts, MctsConfig, SearchResult};
+pub use mcts::{search, visit_entropy_of, Mcts, MctsConfig, SearchResult};
 
 /// Derive worker `w`'s RNG seed from a request seed. Uses two rounds of
 /// splitmix-style mixing so consecutive workers get uncorrelated streams,

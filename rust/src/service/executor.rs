@@ -1,8 +1,9 @@
 //! Root-parallel MCTS executor with deterministic work stealing
 //! (DESIGN.md §9): one partition request fans out to `K` worker trees
 //! over ONE shared environment, episodes run in fixed rounds with a
-//! barrier between them, and trees that stop improving forfeit their
-//! remaining budget to the best tree.
+//! barrier between them, and trees whose root visit-count entropy (the
+//! tree's "temperature") stops moving forfeit their remaining budget to
+//! the best tree.
 //!
 //! Root parallelism (independent trees, merged at the end) was chosen
 //! over tree parallelism (one shared tree) because episodes are cheap
@@ -40,9 +41,24 @@ use anyhow::{anyhow, Result};
 /// size is `budget / STEAL_ROUNDS`, rounded up).
 pub const STEAL_ROUNDS: usize = 8;
 
-/// Consecutive no-improvement rounds after which a non-leading tree
+/// Consecutive flat-temperature rounds after which a non-leading tree
 /// forfeits its remaining budget to the leader.
 pub const STALL_ROUNDS: usize = 2;
+
+/// Minimum movement of a tree's root visit-count entropy (its
+/// "temperature", [`Mcts::root_visit_entropy`]) between consecutive
+/// barriers for the tree to count as still searching. A healthy tree
+/// keeps re-shaping its root distribution — cooling as visits
+/// concentrate on the emerging winner, or warming as expansion uncovers
+/// new arms. A tree whose temperature moved less than this AND whose
+/// best reward did not improve is either converged (concentrated and
+/// stable) or flat (uniform and stable, no signal to chase); in both
+/// cases its marginal episodes teach nothing and the budget is better
+/// spent by the leader. (The reward guard matters when the root has
+/// fewer than two arms — entropy is constant 0.0 there — and late in
+/// long budgets where per-round entropy movement decays as O(1/visits):
+/// a tree still strictly improving must never forfeit.)
+pub const STALL_ENTROPY_EPS: f64 = 1e-3;
 
 /// One fully-resolved unit of work: everything a worker needs to run a
 /// search, plus the executor fan-out configuration.
@@ -85,6 +101,17 @@ pub struct ExecutorReport {
     pub steals: usize,
     /// Measured wall time of the whole fan-out.
     pub wall_seconds: f64,
+    /// Terminal-state evaluations requested across all workers.
+    pub eval_lookups: usize,
+    /// Evaluations served by the per-tree memos (first-level cache).
+    pub eval_memo_hits: usize,
+    /// Memo misses answered by the incremental cost ledgers.
+    pub ledger_refreshes: usize,
+    /// Node cost terms served from the ledgers (work the full pipeline
+    /// would have redone).
+    pub ledger_nodes_reused: usize,
+    /// Node cost terms the ledgers recomputed (the dirty frontier).
+    pub ledger_nodes_recomputed: usize,
 }
 
 impl PlanJob {
@@ -143,6 +170,13 @@ impl PlanJob {
                 .collect();
             let mut remaining = vec![budget; k];
             let mut best_so_far = vec![f64::NEG_INFINITY; k];
+            // Tree-temperature stall detector: per-tree root visit
+            // entropy at the previous barrier (NaN = no reading yet) and
+            // the count of consecutive barriers it failed to move by
+            // STALL_ENTROPY_EPS. Entropy is a pure function of the
+            // tree's deterministic visit counts, so the stall schedule
+            // stays a pure function of (seed, K, budget).
+            let mut prev_entropy = vec![f64::NAN; k];
             let mut stall = vec![0usize; k];
             loop {
                 let quotas: Vec<usize> = remaining.iter().map(|&r| r.min(round_size)).collect();
@@ -166,19 +200,31 @@ impl PlanJob {
                 if !ok {
                     return Err(anyhow!("search worker panicked"));
                 }
-                // Barrier bookkeeping: improvement deltas + stall counts.
+                // Barrier bookkeeping: leader rewards + temperature
+                // movement. The first reading of a tree's entropy never
+                // counts as a stall (there is nothing to compare it to),
+                // and a strict best-reward improvement always resets the
+                // counter — an improving tree must never forfeit, even
+                // when its root temperature cannot move (see
+                // STALL_ENTROPY_EPS).
                 for w in 0..k {
                     if quotas[w] == 0 {
                         continue;
                     }
                     remaining[w] -= quotas[w];
-                    let br = searchers[w].best_reward();
-                    if br > best_so_far[w] {
-                        best_so_far[w] = br;
+                    let improved = searchers[w].best_reward() > best_so_far[w];
+                    if improved {
+                        best_so_far[w] = searchers[w].best_reward();
+                    }
+                    let h = searchers[w].root_visit_entropy();
+                    let moved = prev_entropy[w].is_nan()
+                        || (h - prev_entropy[w]).abs() >= STALL_ENTROPY_EPS;
+                    if moved || improved {
                         stall[w] = 0;
                     } else {
                         stall[w] += 1;
                     }
+                    prev_entropy[w] = h;
                 }
                 // Leader = best reward so far, ties to the lowest index.
                 let mut leader = 0usize;
@@ -239,6 +285,11 @@ impl PlanJob {
             rounds,
             steals,
             wall_seconds: t0.elapsed().as_secs_f64(),
+            eval_lookups: results.iter().map(|r| r.eval_lookups).sum(),
+            eval_memo_hits: results.iter().map(|r| r.eval_memo_hits).sum(),
+            ledger_refreshes: results.iter().map(|r| r.ledger_refreshes).sum(),
+            ledger_nodes_reused: results.iter().map(|r| r.ledger_nodes_reused).sum(),
+            ledger_nodes_recomputed: results.iter().map(|r| r.ledger_nodes_recomputed).sum(),
         })
     }
 }
@@ -298,6 +349,23 @@ mod tests {
         assert_eq!(r.plan.wall_seconds, 0.0, "plan wall time is zeroed for determinism");
         assert!(r.wall_seconds > 0.0);
         assert!(r.rounds >= 1);
+    }
+
+    #[test]
+    fn report_surfaces_memo_and_ledger_counters() {
+        let r = job(4, 3).run().unwrap();
+        // One evaluation per episode, routed through the memos.
+        assert_eq!(r.eval_lookups, r.episodes_total);
+        assert!(r.eval_memo_hits < r.eval_lookups);
+        // Every memo miss was answered by a ledger refresh, and the
+        // ledgers actually reused cached node terms (how many depends on
+        // how far apart consecutive terminal states land).
+        assert_eq!(r.ledger_refreshes, r.eval_lookups - r.eval_memo_hits);
+        assert!(r.ledger_nodes_reused > 0, "ledger must reuse some node terms");
+        // Deterministic alongside everything else.
+        let r2 = job(4, 3).run().unwrap();
+        assert_eq!(r.eval_memo_hits, r2.eval_memo_hits);
+        assert_eq!(r.ledger_nodes_recomputed, r2.ledger_nodes_recomputed);
     }
 
     #[test]

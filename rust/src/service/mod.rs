@@ -31,6 +31,6 @@ pub mod throughput;
 pub use cache::{CacheStats, PlanCache};
 pub use executor::{ExecutorReport, PlanJob};
 pub use fingerprint::{func_fingerprint, request_fingerprint, Fingerprint};
-pub use request::{JobDefaults, PartitionRequest, PlanResponse};
+pub use request::{JobDefaults, PartitionRequest, PlanResponse, SearchStats};
 pub use server::{run_batch, serve_jsonl, PlanService, ServeSummary, ServiceConfig};
 pub use throughput::{measure, ThroughputConfig, ThroughputReport};

@@ -274,6 +274,65 @@ impl Default for JobDefaults {
     }
 }
 
+/// Cache-effectiveness statistics of the search a response ran:
+/// attached to freshly searched responses so memo and ledger hit rates
+/// are observable per request (cache/dedup hits return the stored plan
+/// and omit them — they ran no search to report on). Deterministic for
+/// a fixed `(seed, K, budget)`, like everything else the executor does.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchStats {
+    /// Episodes run across all workers.
+    pub episodes: usize,
+    /// Barrier rounds / budget-forfeiture events of the fan-out.
+    pub rounds: usize,
+    pub steals: usize,
+    /// Terminal-state evaluations requested / served by the eval memos.
+    pub eval_lookups: usize,
+    pub eval_memo_hits: usize,
+    /// Node cost terms the ledgers reused vs recomputed on memo misses.
+    pub ledger_nodes_reused: usize,
+    pub ledger_nodes_recomputed: usize,
+}
+
+impl SearchStats {
+    pub fn from_report(r: &crate::service::executor::ExecutorReport) -> SearchStats {
+        SearchStats {
+            episodes: r.episodes_total,
+            rounds: r.rounds,
+            steals: r.steals,
+            eval_lookups: r.eval_lookups,
+            eval_memo_hits: r.eval_memo_hits,
+            ledger_nodes_reused: r.ledger_nodes_reused,
+            ledger_nodes_recomputed: r.ledger_nodes_recomputed,
+        }
+    }
+
+    /// Fraction of evaluations served by the memos.
+    pub fn memo_hit_rate(&self) -> f64 {
+        crate::util::stats::fraction(self.eval_memo_hits as u64, self.eval_lookups as u64)
+    }
+
+    /// Fraction of node cost terms the ledgers served from cache.
+    pub fn ledger_reuse_rate(&self) -> f64 {
+        let total = self.ledger_nodes_reused + self.ledger_nodes_recomputed;
+        crate::util::stats::fraction(self.ledger_nodes_reused as u64, total as u64)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("episodes", Json::num(self.episodes as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("steals", Json::num(self.steals as f64)),
+            ("eval_lookups", Json::num(self.eval_lookups as f64)),
+            ("eval_memo_hits", Json::num(self.eval_memo_hits as f64)),
+            ("eval_memo_hit_rate", Json::Num(self.memo_hit_rate())),
+            ("ledger_nodes_reused", Json::num(self.ledger_nodes_reused as f64)),
+            ("ledger_nodes_recomputed", Json::num(self.ledger_nodes_recomputed as f64)),
+            ("ledger_reuse_rate", Json::Num(self.ledger_reuse_rate())),
+        ])
+    }
+}
+
 /// One response line. Exactly one of `plan_json` / `error` is set.
 #[derive(Debug, Clone)]
 pub struct PlanResponse {
@@ -286,6 +345,9 @@ pub struct PlanResponse {
     pub dedup: bool,
     /// The serialised `PartitionPlan` (byte-identical across cache hits).
     pub plan_json: Option<String>,
+    /// Search-cache statistics — present exactly when this response ran
+    /// the search itself (never on cache hits, dedup waits, or errors).
+    pub search: Option<SearchStats>,
     pub error: Option<String>,
 }
 
@@ -297,6 +359,7 @@ impl PlanResponse {
             cached: false,
             dedup: false,
             plan_json: None,
+            search: None,
             error: Some(msg),
         }
     }
@@ -314,6 +377,9 @@ impl PlanResponse {
             (Some(p), _) => {
                 fields.push(("cached", Json::Bool(self.cached)));
                 fields.push(("dedup", Json::Bool(self.dedup)));
+                if let Some(s) = &self.search {
+                    fields.push(("search", s.to_json()));
+                }
                 let mut line = Json::obj(fields).to_string();
                 debug_assert!(line.ends_with('}'), "compact object form");
                 line.pop();
@@ -454,6 +520,7 @@ mod tests {
             cached: true,
             dedup: false,
             plan_json: Some("{\"decisions\":3}".into()),
+            search: None,
             error: None,
         };
         let line = ok.to_json_line();
@@ -461,9 +528,53 @@ mod tests {
         assert_eq!(j.get("id").unwrap().as_str(), Some("r"));
         assert_eq!(j.get("cached").unwrap().as_bool(), Some(true));
         assert_eq!(j.get("plan").unwrap().get("decisions").unwrap().as_usize(), Some(3));
+        assert!(j.get("search").is_none(), "cache hits carry no search stats");
         let err = PlanResponse::error("e", "", "boom".into());
         let j = parse(&err.to_json_line()).unwrap();
         assert_eq!(j.get("error").unwrap().as_str(), Some("boom"));
         assert!(j.get("fingerprint").is_none());
+    }
+
+    #[test]
+    fn fresh_responses_render_search_stats_with_rates() {
+        let stats = SearchStats {
+            episodes: 120,
+            rounds: 8,
+            steals: 1,
+            eval_lookups: 120,
+            eval_memo_hits: 30,
+            ledger_nodes_reused: 900,
+            ledger_nodes_recomputed: 100,
+        };
+        assert!((stats.memo_hit_rate() - 0.25).abs() < 1e-12);
+        assert!((stats.ledger_reuse_rate() - 0.9).abs() < 1e-12);
+        let resp = PlanResponse {
+            id: "r".into(),
+            fingerprint: "00ff".into(),
+            cached: false,
+            dedup: false,
+            plan_json: Some("{\"decisions\":3}".into()),
+            search: Some(stats),
+            error: None,
+        };
+        let j = parse(&resp.to_json_line()).unwrap();
+        let s = j.get("search").expect("fresh response carries search stats");
+        assert_eq!(s.get("eval_lookups").unwrap().as_usize(), Some(120));
+        assert_eq!(s.get("eval_memo_hits").unwrap().as_usize(), Some(30));
+        assert!((s.get("ledger_reuse_rate").unwrap().as_f64().unwrap() - 0.9).abs() < 1e-12);
+        // The plan document still round-trips untouched after the splice.
+        assert_eq!(j.get("plan").unwrap().get("decisions").unwrap().as_usize(), Some(3));
+        // Degenerate stats never divide by zero.
+        let empty = SearchStats {
+            episodes: 0,
+            rounds: 0,
+            steals: 0,
+            eval_lookups: 0,
+            eval_memo_hits: 0,
+            ledger_nodes_reused: 0,
+            ledger_nodes_recomputed: 0,
+        };
+        assert_eq!(empty.memo_hit_rate(), 0.0);
+        assert_eq!(empty.ledger_reuse_rate(), 0.0);
     }
 }

@@ -20,7 +20,7 @@
 //! `searches` counter is exact, which the batch acceptance test pins.
 
 use super::cache::{CacheStats, PlanCache};
-use super::request::{JobDefaults, PartitionRequest, PlanResponse};
+use super::request::{JobDefaults, PartitionRequest, PlanResponse, SearchStats};
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -79,6 +79,12 @@ pub struct PlanService {
     inflight: Mutex<HashMap<u64, Arc<Inflight>>>,
     searches: AtomicU64,
     dedup_served: AtomicU64,
+    // Search-cache effectiveness aggregates across every search this
+    // service ran (mirrors the per-response `search` stats object).
+    eval_lookups: AtomicU64,
+    eval_memo_hits: AtomicU64,
+    ledger_nodes_reused: AtomicU64,
+    ledger_nodes_recomputed: AtomicU64,
 }
 
 impl PlanService {
@@ -89,6 +95,10 @@ impl PlanService {
             inflight: Mutex::new(HashMap::new()),
             searches: AtomicU64::new(0),
             dedup_served: AtomicU64::new(0),
+            eval_lookups: AtomicU64::new(0),
+            eval_memo_hits: AtomicU64::new(0),
+            ledger_nodes_reused: AtomicU64::new(0),
+            ledger_nodes_recomputed: AtomicU64::new(0),
         }
     }
 
@@ -113,6 +123,17 @@ impl PlanService {
         self.cache.stats()
     }
 
+    /// Aggregate search-cache counters over every search this service
+    /// ran: (eval lookups, memo hits, ledger nodes reused, recomputed).
+    pub fn search_cache_counters(&self) -> (u64, u64, u64, u64) {
+        (
+            self.eval_lookups.load(Ordering::Relaxed),
+            self.eval_memo_hits.load(Ordering::Relaxed),
+            self.ledger_nodes_reused.load(Ordering::Relaxed),
+            self.ledger_nodes_recomputed.load(Ordering::Relaxed),
+        )
+    }
+
     /// Handle one parsed request end to end.
     pub fn handle(&self, req: &PartitionRequest) -> PlanResponse {
         let job = match req.build_job(&self.defaults) {
@@ -129,6 +150,7 @@ impl PlanService {
                 cached: true,
                 dedup: false,
                 plan_json: Some(plan_json),
+                search: None,
                 error: None,
             };
         }
@@ -147,6 +169,7 @@ impl PlanService {
                     cached: true,
                     dedup: false,
                     plan_json: Some(plan_json),
+                    search: None,
                     error: None,
                 };
             } else {
@@ -168,6 +191,7 @@ impl PlanService {
                         cached: true,
                         dedup: true,
                         plan_json: Some(plan_json),
+                        search: None,
                         error: None,
                     }
                 }
@@ -182,25 +206,34 @@ impl PlanService {
         self.searches.fetch_add(1, Ordering::Relaxed);
         let outcome = match job.run() {
             Ok(report) => {
+                let stats = SearchStats::from_report(&report);
+                self.eval_lookups.fetch_add(stats.eval_lookups as u64, Ordering::Relaxed);
+                self.eval_memo_hits.fetch_add(stats.eval_memo_hits as u64, Ordering::Relaxed);
+                self.ledger_nodes_reused
+                    .fetch_add(stats.ledger_nodes_reused as u64, Ordering::Relaxed);
+                self.ledger_nodes_recomputed
+                    .fetch_add(stats.ledger_nodes_recomputed as u64, Ordering::Relaxed);
                 let plan_json = report.plan.to_json().to_string();
                 self.cache.put(fp, plan_json.clone());
-                Ok(plan_json)
+                Ok((plan_json, stats))
             }
             Err(e) => Err(format!("{e:#}")),
         };
         // Publish order: cache first (above), then clear the in-flight
         // entry, then wake waiters — latecomers either find the entry
-        // (and wait) or re-probe the cache and hit.
+        // (and wait) or re-probe the cache and hit. Waiters get the plan
+        // only; the search stats belong to the request that ran it.
         self.inflight.lock().expect("inflight table poisoned").remove(&fp.0);
-        entry.publish(outcome.clone());
+        entry.publish(outcome.clone().map(|(plan_json, _)| plan_json));
 
         match outcome {
-            Ok(plan_json) => PlanResponse {
+            Ok((plan_json, stats)) => PlanResponse {
                 id: req.id.clone(),
                 fingerprint: hex,
                 cached: false,
                 dedup: false,
                 plan_json: Some(plan_json),
+                search: Some(stats),
                 error: None,
             },
             Err(e) => PlanResponse::error(&req.id, &hex, e),
@@ -279,18 +312,39 @@ pub struct ServeSummary {
     pub cache_hits: u64,
     pub dedup_served: u64,
     pub wall_seconds: f64,
+    /// Terminal-state evaluations the run's searches requested / served
+    /// from the eval memos.
+    pub eval_lookups: u64,
+    pub eval_memo_hits: u64,
+    /// Node cost terms the run's ledgers reused vs recomputed.
+    pub ledger_nodes_reused: u64,
+    pub ledger_nodes_recomputed: u64,
 }
 
 impl ServeSummary {
+    /// Fraction of evaluations served by the eval memos.
+    pub fn memo_hit_rate(&self) -> f64 {
+        crate::util::stats::fraction(self.eval_memo_hits, self.eval_lookups)
+    }
+
+    /// Fraction of node cost terms served from the ledgers.
+    pub fn ledger_reuse_rate(&self) -> f64 {
+        let total = self.ledger_nodes_reused + self.ledger_nodes_recomputed;
+        crate::util::stats::fraction(self.ledger_nodes_reused, total)
+    }
+
     pub fn describe(&self) -> String {
         format!(
-            "{} requests: {} searches, {} cache hits, {} in-flight dedups, {} errors in {:.2}s",
+            "{} requests: {} searches, {} cache hits, {} in-flight dedups, {} errors in {:.2}s \
+             (eval memo {:.0}% hit, ledger {:.0}% reuse)",
             self.requests,
             self.searches,
             self.cache_hits,
             self.dedup_served,
             self.errors,
-            self.wall_seconds
+            self.wall_seconds,
+            100.0 * self.memo_hit_rate(),
+            100.0 * self.ledger_reuse_rate()
         )
     }
 }
@@ -307,6 +361,7 @@ pub fn run_batch(
     let searches0 = service.searches_run();
     let hits0 = service.cache.stats().hits;
     let dedup0 = service.dedup_served();
+    let sc0 = service.search_cache_counters();
 
     let queue: BoundedQueue<usize> = BoundedQueue::new(queue_bound);
     let results: Mutex<Vec<Option<PlanResponse>>> = Mutex::new(vec![None; requests.len()]);
@@ -331,6 +386,7 @@ pub fn run_batch(
         .into_iter()
         .map(|r| r.expect("every request handled"))
         .collect();
+    let sc1 = service.search_cache_counters();
     let summary = ServeSummary {
         requests: responses.len(),
         errors: responses.iter().filter(|r| r.error.is_some()).count(),
@@ -338,6 +394,10 @@ pub fn run_batch(
         cache_hits: service.cache.stats().hits - hits0,
         dedup_served: service.dedup_served() - dedup0,
         wall_seconds: t0.elapsed().as_secs_f64(),
+        eval_lookups: sc1.0 - sc0.0,
+        eval_memo_hits: sc1.1 - sc0.1,
+        ledger_nodes_reused: sc1.2 - sc0.2,
+        ledger_nodes_recomputed: sc1.3 - sc0.3,
     };
     (responses, summary)
 }
@@ -355,6 +415,7 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
     let searches0 = service.searches_run();
     let hits0 = service.cache.stats().hits;
     let dedup0 = service.dedup_served();
+    let sc0 = service.search_cache_counters();
     let requests = std::sync::atomic::AtomicU64::new(0);
     let errors = std::sync::atomic::AtomicU64::new(0);
 
@@ -398,6 +459,7 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
     if let Some(e) = io_err.into_inner().expect("io_err poisoned") {
         return Err(e);
     }
+    let sc1 = service.search_cache_counters();
     Ok(ServeSummary {
         requests: requests.load(Ordering::Relaxed) as usize,
         errors: errors.load(Ordering::Relaxed) as usize,
@@ -405,6 +467,10 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
         cache_hits: service.cache.stats().hits - hits0,
         dedup_served: service.dedup_served() - dedup0,
         wall_seconds: t0.elapsed().as_secs_f64(),
+        eval_lookups: sc1.0 - sc0.0,
+        eval_memo_hits: sc1.1 - sc0.1,
+        ledger_nodes_reused: sc1.2 - sc0.2,
+        ledger_nodes_recomputed: sc1.3 - sc0.3,
     })
 }
 
@@ -440,6 +506,17 @@ mod tests {
         assert_eq!(svc.searches_run(), 1);
         assert_eq!(a.plan_json, b.plan_json, "cache hit must be byte-identical");
         assert_eq!(a.fingerprint, b.fingerprint);
+        // The request that ran the search reports its cache stats; the
+        // cache hit (which ran nothing) does not.
+        let stats = a.search.as_ref().expect("fresh response must carry search stats");
+        assert!(stats.eval_lookups > 0);
+        assert!(stats.ledger_nodes_reused > 0);
+        assert!(b.search.is_none());
+        let (lookups, hits, reused, recomputed) = svc.search_cache_counters();
+        assert_eq!(lookups, stats.eval_lookups as u64);
+        assert_eq!(hits, stats.eval_memo_hits as u64);
+        assert_eq!(reused, stats.ledger_nodes_reused as u64);
+        assert_eq!(recomputed, stats.ledger_nodes_recomputed as u64);
     }
 
     #[test]
@@ -499,6 +576,11 @@ mod tests {
         assert_eq!(summary.searches, 2, "two unique fingerprints");
         assert_eq!(summary.cache_hits + summary.dedup_served, 4);
         assert_eq!(summary.errors, 0);
+        // The summary aggregates the two searches' cache effectiveness.
+        assert!(summary.eval_lookups > 0);
+        assert!((0.0..=1.0).contains(&summary.memo_hit_rate()));
+        assert!((0.0..=1.0).contains(&summary.ledger_reuse_rate()));
+        assert!(summary.ledger_nodes_reused > 0);
     }
 
     #[test]

@@ -3,10 +3,14 @@
 //! produced by whichever ran last with the same schema.
 //!
 //! Numbers that matter for the service (DESIGN.md §8/§9):
-//!   * root-parallel scaling — episodes/sec with `K` workers vs one;
+//!   * root-parallel scaling — episodes/sec (and evaluations/sec) with
+//!     `K` workers vs one;
 //!   * eval-pipeline timings — median ns of one env step (incremental
-//!     propagation) and one terminal evaluation (infer-rest + lower +
-//!     liveness + roofline), the two per-episode building blocks;
+//!     propagation) and one terminal evaluation, measured both through
+//!     the incremental cost ledger (the production path) and through
+//!     the full infer-rest + lower + liveness + roofline pipeline (the
+//!     reference it must beat);
+//!   * eval-memo hit rate and ledger term-reuse rate of the search runs;
 //!   * cache-hit latency — how fast a repeat request is served;
 //!   * the work-stealing schedule the multi-worker run settled on.
 //!
@@ -23,6 +27,7 @@ use crate::partir::program::PartirProgram;
 use crate::search::env::{EnvAction, RewriteEnv, SearchOptions};
 use crate::sim::device::Device;
 use crate::util::json::Json;
+use crate::util::stats::fraction;
 use anyhow::{anyhow, Context, Result};
 use std::hint::black_box;
 use std::time::Instant;
@@ -70,12 +75,27 @@ pub struct ThroughputReport {
     pub multi_episodes_per_sec: f64,
     /// `multi / single` episodes-per-second ratio.
     pub speedup: f64,
+    /// Terminal evaluations per second (one per episode; the quantity
+    /// the search budget actually buys).
+    pub single_evals_per_sec: f64,
+    pub multi_evals_per_sec: f64,
     pub cache_hit_median_ns: f64,
     pub cache_probes: usize,
     /// Median ns of one tile step (incremental propagation included).
     pub step_median_ns: f64,
-    /// Median ns of one terminal evaluation (full cost pipeline).
+    /// Median ns of one terminal evaluation on the production path:
+    /// the incremental cost ledger (infer-rest + diff + re-cost + re-sum).
     pub eval_median_ns: f64,
+    /// Median ns of the same evaluation through the full pipeline
+    /// (infer-rest + lower + liveness + roofline from scratch).
+    pub eval_full_median_ns: f64,
+    /// `eval_full_median_ns / eval_median_ns` — how much the ledger
+    /// buys per memo-missing evaluation.
+    pub eval_ledger_speedup: f64,
+    /// Eval-memo hit rate / ledger term-reuse rate of the multi-worker
+    /// search run.
+    pub eval_memo_hit_rate: f64,
+    pub ledger_reuse_rate: f64,
     /// Barrier rounds / steal events of the best multi-worker run.
     pub rounds: usize,
     pub steals: usize,
@@ -101,23 +121,47 @@ fn bench_job(workers: usize, budget: usize) -> PlanJob {
     req.build_job(&JobDefaults::default()).expect("bench request is well-formed")
 }
 
-/// Best-of-`reps` episodes/sec for a `workers`-way executor run, plus
-/// the (deterministic) round/steal schedule it ran.
-fn episodes_per_sec(workers: usize, budget: usize, reps: usize) -> Result<(f64, usize, usize)> {
+/// One executor run's throughput measurements (best of `reps`).
+struct RunMeasure {
+    episodes_per_sec: f64,
+    evals_per_sec: f64,
+    rounds: usize,
+    steals: usize,
+    memo_hit_rate: f64,
+    ledger_reuse_rate: f64,
+}
+
+/// Best-of-`reps` episodes/sec (and evaluations/sec) for a
+/// `workers`-way executor run, plus the (deterministic) round/steal
+/// schedule and search-cache rates it ran.
+fn run_throughput(workers: usize, budget: usize, reps: usize) -> Result<RunMeasure> {
     let job = bench_job(workers, budget);
-    let mut best = 0.0f64;
-    let mut rounds = 0usize;
-    let mut steals = 0usize;
+    let mut best = RunMeasure {
+        episodes_per_sec: 0.0,
+        evals_per_sec: 0.0,
+        rounds: 0,
+        steals: 0,
+        memo_hit_rate: 0.0,
+        ledger_reuse_rate: 0.0,
+    };
     for _ in 0..reps.max(1) {
         let report = job.run()?;
-        let eps = report.episodes_total as f64 / report.wall_seconds.max(1e-9);
-        if eps > best {
-            best = eps;
-            rounds = report.rounds;
-            steals = report.steals;
+        let wall = report.wall_seconds.max(1e-9);
+        let eps = report.episodes_total as f64 / wall;
+        if eps > best.episodes_per_sec {
+            let terms = report.ledger_nodes_reused + report.ledger_nodes_recomputed;
+            let memo_hit_rate = fraction(report.eval_memo_hits as u64, report.eval_lookups as u64);
+            best = RunMeasure {
+                episodes_per_sec: eps,
+                evals_per_sec: report.eval_lookups as f64 / wall,
+                rounds: report.rounds,
+                steals: report.steals,
+                memo_hit_rate,
+                ledger_reuse_rate: fraction(report.ledger_nodes_reused as u64, terms as u64),
+            };
         }
     }
-    Ok((best, rounds, steals))
+    Ok(best)
 }
 
 fn median(mut samples: Vec<f64>) -> f64 {
@@ -125,9 +169,21 @@ fn median(mut samples: Vec<f64>) -> f64 {
     samples[samples.len() / 2]
 }
 
-/// Median ns of one env tile step and one terminal evaluation on the
-/// bench program (tiny transformer, `model=4`).
-fn micro_timings(samples: usize) -> Result<(f64, f64)> {
+/// Median ns of one env tile step and one terminal evaluation — the
+/// latter through both the full pipeline and the incremental cost
+/// ledger — on the bench program (tiny transformer, `model=4`).
+/// Returns `(step, eval_full, eval_ledger)`.
+///
+/// The ledger is timed on the pattern the episode loop actually
+/// produces: alternating between two *adjacent* terminal states (same
+/// prefix, one extra decision), so every refresh pays a real diff +
+/// re-cost of the decision's dirty region, not an empty no-op diff.
+/// NOTE: debug builds cross-check every ledger evaluation against the
+/// full pipeline inside `evaluate_episode_ledger`, so their ledger
+/// numbers are slower than the full path by construction — release
+/// numbers are the meaningful ones (the `debug_build` flag in
+/// `BENCH_search.json` marks this).
+fn micro_timings(samples: usize) -> Result<(f64, f64, f64)> {
     let func = crate::models::build_by_name("transformer", 2).context("builtin transformer")?;
     let program = PartirProgram::new(func, Mesh::parse("model=4").map_err(|e| anyhow!("{e}"))?);
     let wl = RewriteEnv::default_worklist(&program);
@@ -154,16 +210,52 @@ fn micro_timings(samples: usize) -> Result<(f64, f64)> {
         step_samples.push(t0.elapsed().as_nanos() as f64);
         black_box(ep.decisions);
     }
-    // Terminal evaluation on the stepped episode (uncached path).
+    // Terminal evaluation on the stepped episode, full-pipeline path.
     env.step(&mut ep, EnvAction::Stop);
-    let mut eval_samples = Vec::with_capacity(n);
+    let mut full_samples = Vec::with_capacity(n);
     for _ in 0..n {
         let t0 = Instant::now();
         let eval = env.evaluate_episode(&ep);
-        eval_samples.push(t0.elapsed().as_nanos() as f64);
+        full_samples.push(t0.elapsed().as_nanos() as f64);
         black_box(eval.cost);
     }
-    Ok((median(step_samples), median(eval_samples)))
+    // Ledger path: two adjacent terminal states share one ledger, which
+    // hops between them so every evaluation re-syncs across one
+    // decision's worth of changed values.
+    let mut ep_a = env.reset();
+    env.step(&mut ep_a, tile);
+    let mut ep_b = ep_a.clone();
+    // Hard requirement, like the first tile above: without a second
+    // distinct decision the two states are identical, every refresh
+    // diffs zero values, and the "ledger" median would time a no-op —
+    // vacuously passing the blocking CI speedup gate.
+    let second = env
+        .legal_actions(&ep_b)
+        .into_iter()
+        .find(|a| matches!(a, EnvAction::Tile { .. }))
+        .context("bench program must offer a second tile action for the ledger timing")?;
+    env.step(&mut ep_b, second);
+    env.step(&mut ep_a, EnvAction::Stop);
+    env.step(&mut ep_b, EnvAction::Stop);
+    env.attach_ledger(&mut ep_a);
+    black_box(env.evaluate_episode_ledger(&mut ep_a).cost); // warm build
+    let mut ledger_samples = Vec::with_capacity(n);
+    for i in 0..n {
+        if i % 2 == 0 {
+            ep_b.ledger = ep_a.ledger.take();
+            let t0 = Instant::now();
+            let eval = env.evaluate_episode_ledger(&mut ep_b);
+            ledger_samples.push(t0.elapsed().as_nanos() as f64);
+            black_box(eval.cost);
+        } else {
+            ep_a.ledger = ep_b.ledger.take();
+            let t0 = Instant::now();
+            let eval = env.evaluate_episode_ledger(&mut ep_a);
+            ledger_samples.push(t0.elapsed().as_nanos() as f64);
+            black_box(eval.cost);
+        }
+    }
+    Ok((median(step_samples), median(full_samples), median(ledger_samples)))
 }
 
 /// Repo root (one level above the crate manifest).
@@ -185,9 +277,9 @@ fn load_baseline() -> Option<f64> {
 
 /// Run the full measurement.
 pub fn measure(cfg: &ThroughputConfig) -> Result<ThroughputReport> {
-    let (single, _, _) = episodes_per_sec(1, cfg.budget, cfg.reps)?;
-    let (multi, rounds, steals) = episodes_per_sec(cfg.workers, cfg.budget, cfg.reps)?;
-    let (step_median_ns, eval_median_ns) = micro_timings(cfg.micro_samples)?;
+    let single = run_throughput(1, cfg.budget, cfg.reps)?;
+    let multi = run_throughput(cfg.workers, cfg.budget, cfg.reps)?;
+    let (step_median_ns, eval_full_median_ns, eval_median_ns) = micro_timings(cfg.micro_samples)?;
 
     // Cache-hit latency: prime the service with one search, then time
     // repeat requests (all hits).
@@ -218,15 +310,21 @@ pub fn measure(cfg: &ThroughputConfig) -> Result<ThroughputReport> {
     Ok(ThroughputReport {
         budget: cfg.budget,
         workers: cfg.workers,
-        single_episodes_per_sec: single,
-        multi_episodes_per_sec: multi,
-        speedup: multi / single.max(1e-9),
+        single_episodes_per_sec: single.episodes_per_sec,
+        multi_episodes_per_sec: multi.episodes_per_sec,
+        speedup: multi.episodes_per_sec / single.episodes_per_sec.max(1e-9),
+        single_evals_per_sec: single.evals_per_sec,
+        multi_evals_per_sec: multi.evals_per_sec,
         cache_hit_median_ns,
         cache_probes: cfg.cache_probes,
         step_median_ns,
         eval_median_ns,
-        rounds,
-        steals,
+        eval_full_median_ns,
+        eval_ledger_speedup: eval_full_median_ns / eval_median_ns.max(1e-9),
+        eval_memo_hit_rate: multi.memo_hit_rate,
+        ledger_reuse_rate: multi.ledger_reuse_rate,
+        rounds: multi.rounds,
+        steals: multi.steals,
         baseline_single_episodes_per_sec: load_baseline(),
     })
 }
@@ -240,10 +338,16 @@ impl ThroughputReport {
             ("single_episodes_per_sec", Json::Num(self.single_episodes_per_sec)),
             ("multi_episodes_per_sec", Json::Num(self.multi_episodes_per_sec)),
             ("speedup", Json::Num(self.speedup)),
+            ("single_evals_per_sec", Json::Num(self.single_evals_per_sec)),
+            ("multi_evals_per_sec", Json::Num(self.multi_evals_per_sec)),
             ("cache_hit_median_ns", Json::Num(self.cache_hit_median_ns)),
             ("cache_probes", Json::num(self.cache_probes as f64)),
             ("step_median_ns", Json::Num(self.step_median_ns)),
             ("eval_median_ns", Json::Num(self.eval_median_ns)),
+            ("eval_full_median_ns", Json::Num(self.eval_full_median_ns)),
+            ("eval_ledger_speedup", Json::Num(self.eval_ledger_speedup)),
+            ("eval_memo_hit_rate", Json::Num(self.eval_memo_hit_rate)),
+            ("ledger_reuse_rate", Json::Num(self.ledger_reuse_rate)),
             ("rounds", Json::num(self.rounds as f64)),
             ("steals", Json::num(self.steals as f64)),
             // Debug builds run the per-step incremental-vs-full
@@ -264,9 +368,11 @@ impl ThroughputReport {
 
     pub fn describe(&self) -> String {
         format!(
-            "single {:.0} eps/s | {} workers {:.0} eps/s ({:.2}x, {} rounds, {} steals) | \
-             step {:.1}us eval {:.1}us | cache hit median {:.1}us",
+            "single {:.0} eps/s ({:.0} evals/s) | {} workers {:.0} eps/s ({:.2}x, {} rounds, \
+             {} steals) | step {:.1}us eval ledger {:.1}us vs full {:.1}us ({:.2}x) | \
+             memo {:.0}% hit, ledger {:.0}% reuse | cache hit median {:.1}us",
             self.single_episodes_per_sec,
+            self.single_evals_per_sec,
             self.workers,
             self.multi_episodes_per_sec,
             self.speedup,
@@ -274,6 +380,10 @@ impl ThroughputReport {
             self.steals,
             self.step_median_ns / 1e3,
             self.eval_median_ns / 1e3,
+            self.eval_full_median_ns / 1e3,
+            self.eval_ledger_speedup,
+            100.0 * self.eval_memo_hit_rate,
+            100.0 * self.ledger_reuse_rate,
             self.cache_hit_median_ns / 1e3
         )
     }

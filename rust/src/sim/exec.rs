@@ -8,10 +8,11 @@ use super::device::Device;
 use crate::ir::{Func, OpKind};
 use crate::partir::dist::DistMap;
 use crate::partir::mesh::Mesh;
+use crate::partir::propagate::Propagator;
 use crate::spmd::collectives::collective_seconds;
 use crate::spmd::lower::SpmdProgram;
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RuntimeEstimate {
     pub compute_seconds: f64,
     pub memory_seconds: f64,
@@ -24,6 +25,18 @@ pub struct RuntimeEstimate {
 impl RuntimeEstimate {
     pub fn total_seconds(&self) -> f64 {
         self.op_seconds + self.collective_seconds
+    }
+
+    /// Fold one node's roofline term in — the single accumulation
+    /// definition the full pass ([`estimate`]) and the cost ledger's
+    /// re-aggregation share, so both perform the identical sequence of
+    /// additions per accumulator.
+    #[inline]
+    pub fn add_node_term(&mut self, t: &NodeTerm) {
+        self.compute_seconds += t.compute_seconds;
+        self.memory_seconds += t.memory_seconds;
+        self.op_seconds += t.compute_seconds.max(t.memory_seconds);
+        self.total_flops += t.flops;
     }
 }
 
@@ -61,58 +74,81 @@ pub fn node_bytes(f: &Func, mesh: &Mesh, dm: &DistMap, ni: usize) -> f64 {
     b
 }
 
-/// Estimate the per-step runtime of a lowered SPMD program.
-///
-/// Allocation-free hot path (EXPERIMENTS.md §Perf opt 2): local element
-/// counts come from the Propagator's precomputed global tables divided by
-/// the tiled axis sizes, instead of materialising local dim vectors.
-pub fn estimate(p: &SpmdProgram, dev: &Device) -> RuntimeEstimate {
-    let mut est = RuntimeEstimate::default();
-    let prop = p.prop;
-    let num_args = p.func.num_args();
+/// One node's contribution to the roofline estimate: the per-node term
+/// the cost ledger caches. A term is a pure function of the node's
+/// operand/result distribution rows (plus the immutable program tables),
+/// so a cached term is bit-identical to a freshly computed one whenever
+/// those rows are unchanged.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NodeTerm {
+    pub compute_seconds: f64,
+    pub memory_seconds: f64,
+    pub flops: f64,
+}
+
+/// Compute node `ni`'s roofline term under `dm` — exactly the per-node
+/// body of [`estimate`], factored out so the ledger and the full pass
+/// share one definition (EXPERIMENTS.md §Perf opt 2: local element
+/// counts come from the Propagator's precomputed global tables divided
+/// by the tiled axis sizes, no local dim vectors materialised).
+pub fn node_term(
+    f: &Func,
+    mesh: &Mesh,
+    prop: &Propagator,
+    dm: &DistMap,
+    dev: &Device,
+    ni: usize,
+) -> NodeTerm {
+    let num_args = f.num_args();
     // local element count without allocating
     let local_elems = |v: usize| -> f64 {
         let mut e = prop.global_elems[v] as f64;
-        for a in 0..p.dm.num_axes {
-            if p.dm.d[v][a] != crate::partir::dist::UNKNOWN {
-                e /= p.mesh.size(crate::partir::mesh::AxisId(a)) as f64;
+        for a in 0..dm.num_axes {
+            if dm.d[v][a] != crate::partir::dist::UNKNOWN {
+                e /= mesh.size(crate::partir::mesh::AxisId(a)) as f64;
             }
         }
         e
     };
-    let local_bytes_of = |v: usize| -> f64 {
-        p.dm.local_bytes(v, prop.global_bytes[v], p.mesh) as f64
-    };
-    for (ni, node) in p.func.nodes.iter().enumerate() {
-        let out_v = num_args + ni;
-        let fl = match &node.op {
-            OpKind::Dot(d) => {
-                let lhs = node.inputs[0].index();
-                let mut k = 1f64;
-                for &c in &d.lhs_contract {
-                    let mut extent = prop.dims_of(lhs)[c] as f64;
-                    for a in 0..p.dm.num_axes {
-                        if p.dm.d[lhs][a] == c as u8 {
-                            extent /= p.mesh.size(crate::partir::mesh::AxisId(a)) as f64;
-                        }
+    let local_bytes_of = |v: usize| -> f64 { dm.local_bytes(v, prop.global_bytes[v], mesh) as f64 };
+    let node = &f.nodes[ni];
+    let out_v = num_args + ni;
+    let fl = match &node.op {
+        OpKind::Dot(d) => {
+            let lhs = node.inputs[0].index();
+            let mut k = 1f64;
+            for &c in &d.lhs_contract {
+                let mut extent = prop.dims_of(lhs)[c] as f64;
+                for a in 0..dm.num_axes {
+                    if dm.d[lhs][a] == c as u8 {
+                        extent /= mesh.size(crate::partir::mesh::AxisId(a)) as f64;
                     }
-                    k *= extent;
                 }
-                2.0 * local_elems(out_v) * k
+                k *= extent;
             }
-            OpKind::Reduce { .. } => local_elems(node.inputs[0].index()),
-            op => local_elems(out_v) * op.flops_per_output(),
-        };
-        let mut by = local_bytes_of(out_v);
-        for &inp in &node.inputs {
-            by += local_bytes_of(inp.index());
+            2.0 * local_elems(out_v) * k
         }
-        let tc = fl / dev.flops;
-        let tm = by / dev.hbm_bw;
-        est.compute_seconds += tc;
-        est.memory_seconds += tm;
-        est.op_seconds += tc.max(tm);
-        est.total_flops += fl;
+        OpKind::Reduce { .. } => local_elems(node.inputs[0].index()),
+        op => local_elems(out_v) * op.flops_per_output(),
+    };
+    let mut by = local_bytes_of(out_v);
+    for &inp in &node.inputs {
+        by += local_bytes_of(inp.index());
+    }
+    NodeTerm { compute_seconds: fl / dev.flops, memory_seconds: by / dev.hbm_bw, flops: fl }
+}
+
+/// Estimate the per-step runtime of a lowered SPMD program.
+///
+/// Accumulation order (ascending node index, collectives in emission
+/// order) is part of the contract: the cost ledger re-aggregates cached
+/// [`NodeTerm`]s in this exact order, which is what makes its float
+/// sums bit-identical to this full pass.
+pub fn estimate(p: &SpmdProgram, dev: &Device) -> RuntimeEstimate {
+    let mut est = RuntimeEstimate::default();
+    for ni in 0..p.func.num_nodes() {
+        let t = node_term(p.func, p.mesh, p.prop, p.dm, dev, ni);
+        est.add_node_term(&t);
     }
     for c in &p.collectives {
         est.collective_seconds += collective_seconds(c, p.mesh, dev.ici_bw, dev.alpha);

@@ -38,18 +38,27 @@ impl CollectiveStats {
     pub fn from_collectives(cs: &[Collective]) -> CollectiveStats {
         let mut s = CollectiveStats::default();
         for c in cs {
-            match c.kind {
-                CollectiveKind::AllReduce => {
-                    s.all_reduce_count += 1;
-                    s.all_reduce_bytes += c.bytes;
-                }
-                CollectiveKind::AllGather => {
-                    s.all_gather_count += 1;
-                    s.all_gather_bytes += c.bytes;
-                }
-            }
+            s.add(c.kind, c.bytes);
         }
         s
+    }
+
+    /// Fold one collective into the aggregate. Counts and bytes are
+    /// integers, so accumulation order cannot change the result — the
+    /// per-node cost ledger relies on this when it re-aggregates cached
+    /// node stats.
+    #[inline]
+    pub fn add(&mut self, kind: CollectiveKind, bytes: i64) {
+        match kind {
+            CollectiveKind::AllReduce => {
+                self.all_reduce_count += 1;
+                self.all_reduce_bytes += bytes;
+            }
+            CollectiveKind::AllGather => {
+                self.all_gather_count += 1;
+                self.all_gather_bytes += bytes;
+            }
+        }
     }
 
     pub fn total_count(&self) -> usize {

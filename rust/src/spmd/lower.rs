@@ -41,86 +41,108 @@ pub fn lower<'a>(
     dm: &'a DistMap,
 ) -> SpmdProgram<'a> {
     let mut collectives = Vec::new();
-    for (ni, node) in f.nodes.iter().enumerate() {
-        let rule = &prop.rules[ni];
-        let out_v = f.num_args() + ni;
-        for a in 0..mesh.num_axes() {
-            let axis = AxisId(a);
-            let n = mesh.size(axis);
-            if n == 1 {
+    let mut justified: Vec<(usize, usize)> = Vec::new();
+    for ni in 0..f.num_nodes() {
+        lower_node_into(f, mesh, prop, dm, ni, &mut justified, &mut collectives);
+    }
+    SpmdProgram { func: f, mesh, dm, prop, collectives }
+}
+
+/// Lower ONE node: append the collectives node `ni` requires under `dm`
+/// to `out`, in the same order the full [`lower`] pass emits them (per
+/// axis: the all-reduce first, then the gathers). A node's collectives
+/// are a pure function of the distribution rows of its operands and its
+/// result, which is what lets the cost ledger
+/// ([`crate::cost::composite::CostLedger`]) cache them per node and
+/// re-lower only nodes whose rows changed. `justified` is caller-owned
+/// scratch (cleared per axis) so the hot path allocates nothing.
+pub fn lower_node_into(
+    f: &Func,
+    mesh: &Mesh,
+    prop: &Propagator,
+    dm: &DistMap,
+    ni: usize,
+    justified: &mut Vec<(usize, usize)>,
+    out: &mut Vec<Collective>,
+) {
+    let node = &f.nodes[ni];
+    let rule = &prop.rules[ni];
+    let out_v = f.num_args() + ni;
+    for a in 0..mesh.num_axes() {
+        let axis = AxisId(a);
+        let n = mesh.size(axis);
+        if n == 1 {
+            continue;
+        }
+        // Track which operand tilings are justified on this axis.
+        // (operand_slot, dim) pairs that participate in a full
+        // contraction or match the result tiling are free.
+        justified.clear();
+
+        // 1. Contractions.
+        let mut all_reduce_emitted = false;
+        for group in &rule.reduced_ties {
+            let tiled: Vec<&(usize, usize)> = group
+                .iter()
+                .filter(|&&(oi, od)| dm.d[node.inputs[oi].index()][a] == od as u8)
+                .collect();
+            if tiled.is_empty() {
                 continue;
             }
-            // Track which operand tilings are justified on this axis.
-            // (operand_slot, dim) pairs that participate in a full
-            // contraction or match the result tiling are free.
-            let mut justified: Vec<(usize, usize)> = Vec::new();
-
-            // 1. Contractions.
-            let mut all_reduce_emitted = false;
-            for group in &rule.reduced_ties {
-                let tiled: Vec<&(usize, usize)> = group
-                    .iter()
-                    .filter(|&&(oi, od)| dm.d[node.inputs[oi].index()][a] == od as u8)
-                    .collect();
-                if tiled.is_empty() {
-                    continue;
+            if tiled.len() == group.len() {
+                // Fully tiled contraction: result is a partial sum.
+                justified.extend(group.iter().copied());
+                if !all_reduce_emitted && dm.get(out_v, axis).is_none() {
+                    out.push(Collective {
+                        kind: CollectiveKind::AllReduce,
+                        axis,
+                        node: ni,
+                        bytes: dm.local_bytes(out_v, prop.global_bytes[out_v], mesh),
+                    });
+                    all_reduce_emitted = true;
                 }
-                if tiled.len() == group.len() {
-                    // Fully tiled contraction: result is a partial sum.
-                    justified.extend(group.iter().copied());
-                    if !all_reduce_emitted && dm.get(out_v, axis).is_none() {
-                        collectives.push(Collective {
-                            kind: CollectiveKind::AllReduce,
-                            axis,
-                            node: ni,
-                            bytes: dm.local_bytes(out_v, prop.global_bytes[out_v], mesh),
-                        });
-                        all_reduce_emitted = true;
-                    }
-                    // If the result is ALSO tiled on this axis (explicit
-                    // internal decision), the partial-sum shards do not
-                    // line up: fall through to gathering below by not
-                    // justifying. Revert in that case.
-                    if dm.get(out_v, axis).is_some() {
-                        for g in group {
-                            justified.retain(|j| j != g);
-                        }
-                    }
-                }
-                // Partially tiled groups: tiled members stay unjustified
-                // and will be gathered below.
-            }
-
-            // 2. Result-compatible tilings.
-            if let Some(od) = dm.get(out_v, axis) {
-                if od < rule.out_ties.len() {
-                    for &(oi, idim) in &rule.out_ties[od] {
-                        if dm.d[node.inputs[oi].index()][a] == idim as u8 {
-                            justified.push((oi, idim));
-                        }
+                // If the result is ALSO tiled on this axis (explicit
+                // internal decision), the partial-sum shards do not
+                // line up: fall through to gathering below by not
+                // justifying. Revert in that case.
+                if dm.get(out_v, axis).is_some() {
+                    for g in group {
+                        justified.retain(|j| j != g);
                     }
                 }
             }
+            // Partially tiled groups: tiled members stay unjustified
+            // and will be gathered below.
+        }
 
-            // 3. Gather every remaining tiled operand.
-            for (oi, &iv) in node.inputs.iter().enumerate() {
-                let ivx = iv.index();
-                if let Some(idim) = dm.get(ivx, axis) {
-                    if !justified.contains(&(oi, idim)) {
-                        let local = dm.local_bytes(ivx, prop.global_bytes[ivx], mesh);
-                        collectives.push(Collective {
-                            kind: CollectiveKind::AllGather,
-                            axis,
-                            node: ni,
-                            // global payload on the gathered axis
-                            bytes: local * n,
-                        });
+        // 2. Result-compatible tilings.
+        if let Some(od) = dm.get(out_v, axis) {
+            if od < rule.out_ties.len() {
+                for &(oi, idim) in &rule.out_ties[od] {
+                    if dm.d[node.inputs[oi].index()][a] == idim as u8 {
+                        justified.push((oi, idim));
                     }
                 }
             }
         }
+
+        // 3. Gather every remaining tiled operand.
+        for (oi, &iv) in node.inputs.iter().enumerate() {
+            let ivx = iv.index();
+            if let Some(idim) = dm.get(ivx, axis) {
+                if !justified.contains(&(oi, idim)) {
+                    let local = dm.local_bytes(ivx, prop.global_bytes[ivx], mesh);
+                    out.push(Collective {
+                        kind: CollectiveKind::AllGather,
+                        axis,
+                        node: ni,
+                        // global payload on the gathered axis
+                        bytes: local * n,
+                    });
+                }
+            }
+        }
     }
-    SpmdProgram { func: f, mesh, dm, prop, collectives }
 }
 
 #[cfg(test)]

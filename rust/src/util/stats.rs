@@ -33,6 +33,13 @@ pub fn median(xs: &[f64]) -> f64 {
     quantile(xs, 0.5)
 }
 
+/// `part / whole` as a fraction, 0.0 when `whole` is 0 — the one
+/// definition of a hit/reuse rate shared by the search-cache counters
+/// (`SearchStats`, `ServeSummary`, the throughput report).
+pub fn fraction(part: u64, whole: u64) -> f64 {
+    part as f64 / whole.max(1) as f64
+}
+
 /// Fraction of values satisfying a predicate — used for success rates.
 pub fn rate<T, F: Fn(&T) -> bool>(xs: &[T], pred: F) -> f64 {
     if xs.is_empty() {
@@ -79,6 +86,14 @@ mod tests {
         assert!((std_dev(&xs) - (2.0f64).sqrt()).abs() < 1e-12);
         assert_eq!(quantile(&xs, 0.0), 1.0);
         assert_eq!(quantile(&xs, 1.0), 5.0);
+    }
+
+    #[test]
+    fn fraction_handles_zero_denominator() {
+        assert_eq!(fraction(3, 4), 0.75);
+        assert_eq!(fraction(0, 10), 0.0);
+        assert_eq!(fraction(0, 0), 0.0);
+        assert_eq!(fraction(5, 5), 1.0);
     }
 
     #[test]

@@ -55,12 +55,14 @@ fn byte_identical_plans_across_runs_for_k1_and_k4() {
 #[test]
 fn stalled_trees_forfeit_budget_to_the_leader() {
     // A program whose dims (7, 5) are indivisible by every mesh-axis
-    // size offers NO legal tile actions, so every episode's reward is
-    // exactly the baseline 0.0: round 1 improves each tree from -inf,
-    // and no strict improvement is ever possible again. All non-leader
-    // trees therefore stall deterministically — after STALL_ROUNDS
-    // no-improvement rounds they forfeit to worker 0 (the reward tie
-    // goes to the lowest index) — independent of search stochasticity.
+    // size offers NO legal tile actions: every tree's root has exactly
+    // the InferRest/Stop children, every reward is the baseline 0.0,
+    // and UCT alternates the two visits — so each tree's root
+    // visit-count entropy pins to ~1.0 from the first barrier onwards.
+    // A flat, unmoving temperature is precisely a stall under the
+    // tree-temperature detector: after STALL_ROUNDS flat rounds every
+    // non-leader (the reward tie makes worker 0 leader) forfeits,
+    // deterministically, independent of search stochasticity.
     let budget = 400usize;
     let j = PlanJob {
         func: build_mlp(&MlpConfig { batch: 7, dims: vec![5, 7, 5], training: false }).func,
@@ -91,13 +93,50 @@ fn stalled_trees_forfeit_budget_to_the_leader() {
         r.worker_episodes
     );
     // Forfeiture fires right after the stall threshold: a stalled tree
-    // ran exactly (1 improvement round + STALL_ROUNDS stalled rounds)
-    // of episodes before handing the rest over.
+    // ran exactly (1 first-reading round + STALL_ROUNDS flat rounds)
+    // of episodes before handing the rest over (the first temperature
+    // reading never counts as a stall — nothing to compare it to).
     let round_size = budget.div_ceil(automap::service::executor::STEAL_ROUNDS);
     assert_eq!(min, (1 + STALL_ROUNDS) * round_size);
     // The reassigned budget still produces the winner by minimum cost.
     let min_cost = r.worker_costs.iter().cloned().fold(f64::INFINITY, f64::min);
     assert_eq!(r.worker_costs[r.winner], min_cost);
+}
+
+#[test]
+fn entropy_stall_signal_pins_forfeiture_schedule() {
+    // Same flat-temperature construction, different shape/mesh/K: dims
+    // {5, 7, 11} are indivisible by a 2-way axis, so each tree's root
+    // temperature freezes immediately and the entropy detector must
+    // forfeit every non-leader exactly once, right after the stall
+    // threshold. Pins the schedule arithmetic of the new signal.
+    let budget = 200usize;
+    let j = PlanJob {
+        func: build_mlp(&MlpConfig { batch: 5, dims: vec![7, 11, 7], training: false }).func,
+        mesh: Mesh::new(&[("model", 2)]),
+        device: Device::tpu_v3(),
+        weights: CostWeights::default(),
+        options: SearchOptions::default(),
+        pre_tactics: vec![],
+        budget,
+        seed: 13,
+        workers: 3,
+        mcts: MctsConfig::default(),
+    };
+    let r = j.run().unwrap();
+    let round_size = budget.div_ceil(automap::service::executor::STEAL_ROUNDS);
+    assert_eq!(r.steals, 2, "both non-leaders forfeit exactly once");
+    assert_eq!(r.worker_episodes.iter().sum::<usize>(), 3 * budget, "budget conserved");
+    let min = *r.worker_episodes.iter().min().unwrap();
+    assert_eq!(
+        min,
+        (1 + STALL_ROUNDS) * round_size,
+        "forfeiture fires right after STALL_ROUNDS flat-temperature rounds"
+    );
+    // Reproducible run-to-run, like every other schedule decision.
+    let r2 = j.run().unwrap();
+    assert_eq!(r.worker_episodes, r2.worker_episodes);
+    assert_eq!(r.steals, r2.steals);
 }
 
 #[test]

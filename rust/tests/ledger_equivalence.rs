@@ -1,0 +1,228 @@
+//! Acceptance wall for the incremental cost ledger (DESIGN.md §8):
+//! ledger evaluation must be BIT-identical to the full
+//! lower + liveness + roofline pipeline — over randomized episodes on
+//! every committed golden-corpus program and every built-in model, with
+//! auto-infer-rest both on and off — and a ledger maintained across a
+//! whole episode must hold exactly the state of one rebuilt from
+//! scratch on the final map (no drift, ever).
+//!
+//! In debug builds `RewriteEnv` additionally self-checks every ledger
+//! evaluation against the full pipeline, so this file drives both the
+//! external and the internal equivalence.
+
+use automap::cost::composite::{CostLedger, CostWeights};
+use automap::ir::parse_func;
+use automap::partir::mesh::Mesh;
+use automap::partir::program::PartirProgram;
+use automap::search::env::{EnvAction, RewriteEnv, SearchOptions};
+use automap::search::mcts::{search, MctsConfig};
+use automap::sim::device::Device;
+use automap::util::rng::Rng;
+
+/// Every program the wall runs over: the committed golden corpus plus
+/// the three built-in models, each paired with a 2-axis mesh.
+fn wall_programs() -> Vec<(String, PartirProgram)> {
+    let mut out = Vec::new();
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/../configs/corpus");
+    let mut paths: Vec<_> = std::fs::read_dir(dir)
+        .expect("corpus dir")
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().map(|e| e == "pir").unwrap_or(false))
+        .collect();
+    paths.sort();
+    for path in paths {
+        let text = std::fs::read_to_string(&path).unwrap();
+        let f = parse_func(&text).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let name = path.file_name().unwrap().to_string_lossy().into_owned();
+        out.push((name, PartirProgram::new(f, Mesh::new(&[("batch", 2), ("model", 4)]))));
+    }
+    for model in ["mlp", "transformer", "graphnet"] {
+        let f = automap::models::build_by_name(model, 2).expect("builtin model");
+        out.push((
+            model.to_string(),
+            PartirProgram::new(f, Mesh::new(&[("batch", 2), ("model", 4)])),
+        ));
+    }
+    out
+}
+
+fn assert_bit_identical(
+    name: &str,
+    inc: &automap::cost::composite::Evaluation,
+    full: &automap::cost::composite::Evaluation,
+) {
+    assert_eq!(inc, full, "{name}: ledger evaluation diverged from the full pipeline");
+    assert_eq!(
+        inc.cost.to_bits(),
+        full.cost.to_bits(),
+        "{name}: cost must match the full pipeline to the bit"
+    );
+    assert_eq!(
+        inc.runtime.collective_seconds.to_bits(),
+        full.runtime.collective_seconds.to_bits(),
+        "{name}: collective seconds must match to the bit"
+    );
+    assert_eq!(
+        inc.runtime.op_seconds.to_bits(),
+        full.runtime.op_seconds.to_bits(),
+        "{name}: op seconds must match to the bit"
+    );
+}
+
+#[test]
+fn randomized_ledger_vs_full_evaluate_over_corpus_and_models() {
+    let mut checked = 0usize;
+    for (name, program) in wall_programs() {
+        let wl = RewriteEnv::default_worklist(&program);
+        if wl.is_empty() {
+            continue; // zero-arg corpus program: no decision targets
+        }
+        for auto_infer in [true, false] {
+            let env = RewriteEnv::new(
+                &program,
+                Device::tpu_v3(),
+                CostWeights::default(),
+                SearchOptions {
+                    cross_layer_tying: false,
+                    auto_infer_rest: auto_infer,
+                    ..Default::default()
+                },
+                &wl,
+            );
+            let mut rng = Rng::new(0xBEEF + wl.len() as u64);
+            for _attempt in 0..6 {
+                let mut ep = env.reset();
+                for _ in 0..5 {
+                    let acts = env.legal_actions(&ep);
+                    if acts.is_empty() {
+                        break;
+                    }
+                    let a = *rng.choose(&acts);
+                    env.step(&mut ep, a);
+                    // Evaluate mid-episode too: the ledger must track
+                    // arbitrary maps, not just terminal ones.
+                    let inc = env.evaluate_episode_ledger(&mut ep);
+                    let full = env.evaluate_episode(&ep);
+                    assert_bit_identical(&name, &inc, &full);
+                    checked += 1;
+                    if ep.done {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    assert!(checked > 50, "wall must exercise plenty of evaluations: {checked}");
+}
+
+#[test]
+fn ledger_maintained_across_an_episode_matches_a_scratch_rebuild() {
+    for (name, program) in wall_programs() {
+        let wl = RewriteEnv::default_worklist(&program);
+        if wl.is_empty() {
+            continue;
+        }
+        let env = RewriteEnv::new(
+            &program,
+            Device::tpu_v3(),
+            CostWeights::default(),
+            SearchOptions { cross_layer_tying: false, ..Default::default() },
+            &wl,
+        );
+        let mut rng = Rng::new(0xC0FFEE);
+        let mut ep = env.reset();
+        // A full episode with an evaluation after every action keeps
+        // the ledger hopping between inferred maps.
+        for _ in 0..8 {
+            let acts = env.legal_actions(&ep);
+            if acts.is_empty() {
+                break;
+            }
+            let a = *rng.choose(&acts);
+            env.step(&mut ep, a);
+            let _ = env.evaluate_episode_ledger(&mut ep);
+            if ep.done {
+                break;
+            }
+        }
+        // Corruption check: rebuild a fresh ledger on the exact map the
+        // maintained one last evaluated; every cached term (float bits
+        // included) and the liveness state must be identical.
+        let maintained = ep.ledger.take().expect("episode carries the ledger");
+        let mut probe = ep.dm.clone();
+        if env.options.auto_infer_rest {
+            let mut stats = automap::partir::propagate::PropStats::default();
+            program.prop.infer_rest(&program.func, &program.mesh, &mut probe, &mut stats);
+        }
+        let fresh = CostLedger::new(&program, &probe, Device::tpu_v3(), CostWeights::default());
+        assert_eq!(
+            maintained.terms_digest(),
+            fresh.terms_digest(),
+            "{name}: maintained ledger drifted from a scratch rebuild"
+        );
+    }
+}
+
+#[test]
+fn search_results_replay_to_the_same_cost_through_the_full_pipeline() {
+    // The ledger sits inside the episode loop, so pin end-to-end that a
+    // search's reported best evaluation equals replaying its decision
+    // state through the untouched full pipeline — i.e. the ledger
+    // changed nothing about what the search reports.
+    let f = automap::models::build_by_name("mlp", 2).unwrap();
+    let program = PartirProgram::new(f, Mesh::new(&[("model", 4)]));
+    let wl = RewriteEnv::default_worklist(&program);
+    let env = RewriteEnv::new(
+        &program,
+        Device::tpu_v3(),
+        CostWeights::default(),
+        SearchOptions::default(),
+        &wl,
+    );
+    let res = search(&env, 120, 9, MctsConfig::default());
+    let (mut dm, mut stats) = program.apply(&res.best_state);
+    program.prop.infer_rest(&program.func, &program.mesh, &mut dm, &mut stats);
+    let replayed = automap::cost::composite::evaluate(
+        &program,
+        &dm,
+        &Device::tpu_v3(),
+        &CostWeights::default(),
+    );
+    assert_eq!(res.best_eval, replayed);
+    assert_eq!(res.best_eval.cost.to_bits(), replayed.cost.to_bits());
+    // And the ledger was actually in play.
+    assert!(res.ledger_refreshes > 0);
+    assert_eq!(res.ledger_refreshes, res.eval_lookups - res.eval_memo_hits);
+}
+
+#[test]
+fn ledger_answers_memo_misses_without_changing_memo_semantics() {
+    let f = automap::models::build_by_name("transformer", 1).unwrap();
+    let program = PartirProgram::new(f, Mesh::new(&[("model", 4)]));
+    let wl = RewriteEnv::default_worklist(&program);
+    let env = RewriteEnv::new(
+        &program,
+        Device::tpu_v3(),
+        CostWeights::default(),
+        SearchOptions::default(),
+        &wl,
+    );
+    let mut memo = automap::search::env::EvalMemo::new();
+    let mut ep = env.reset();
+    env.attach_ledger(&mut ep);
+    env.step(&mut ep, EnvAction::Stop);
+    let miss = env.evaluate_episode_memo(&mut ep, &mut memo);
+    assert_eq!(memo.lookups, 1);
+    assert_eq!(memo.hits, 0);
+    let lr = ep.ledger.as_ref().unwrap().refreshes;
+    assert_eq!(lr, 1, "the miss must be answered by one ledger refresh");
+    // A repeat of the same terminal state hits the memo: the ledger is
+    // the second tier, never consulted on a hit.
+    let hit = env.evaluate_episode_memo(&mut ep, &mut memo);
+    assert_eq!(memo.hits, 1);
+    assert_eq!(ep.ledger.as_ref().unwrap().refreshes, 1);
+    assert_eq!(miss, hit);
+    // And both equal the reference pipeline, to the bit.
+    let full = env.evaluate_episode(&ep);
+    assert_bit_identical("memo-tier", &miss, &full);
+}

@@ -45,10 +45,17 @@ fn throughput_smoke_scales_and_writes_bench_json() {
     );
 
     // The per-episode building blocks are measured and sane: one step
-    // and one evaluation each cost something, and an episode (a handful
-    // of steps + eval) is far more expensive than a single step.
+    // and one evaluation each cost something, through both eval paths.
+    // No ledger-vs-full speed bar here: debug builds cross-check every
+    // ledger evaluation against the full pipeline, which inverts the
+    // ratio by construction (the release perf-smoke bench enforces it).
     assert!(report.step_median_ns > 0.0);
     assert!(report.eval_median_ns > 0.0);
+    assert!(report.eval_full_median_ns > 0.0);
+    assert!(report.eval_ledger_speedup > 0.0);
+    assert!(report.single_evals_per_sec > 0.0);
+    assert!((0.0..=1.0).contains(&report.eval_memo_hit_rate));
+    assert!((0.0..=1.0).contains(&report.ledger_reuse_rate));
     assert!(report.rounds >= 1, "the multi-worker run must report its round schedule");
 
     let path = write_report(&report).expect("writing BENCH_search.json failed");
@@ -60,6 +67,11 @@ fn throughput_smoke_scales_and_writes_bench_json() {
     assert!(j.get("speedup").unwrap().as_f64().unwrap() > 0.0);
     assert!(j.get("step_median_ns").unwrap().as_f64().unwrap() > 0.0);
     assert!(j.get("eval_median_ns").unwrap().as_f64().unwrap() > 0.0);
+    // The ledger-vs-full comparison the perf floor check keys on.
+    assert!(j.get("eval_full_median_ns").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j.get("eval_ledger_speedup").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j.get("single_evals_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j.get("ledger_reuse_rate").is_some());
     // configs/perf_floor.json is committed, so the report must carry the
     // pre-overhaul baseline alongside the current number.
     assert!(
