@@ -1,0 +1,11 @@
+func @pipeline(%arg0: tensor<8x16xf32> {input, name = "x"}, %arg1: tensor<16x32xf32> {param, name = "w1"}, %arg2: tensor<32x32xf32> {param, name = "w2"}, %arg3: tensor<32x16xf32> {param, name = "w3"}, %arg4: tensor<16x8xf32> {param, name = "w4"})
+    -> (tensor<8x8xf32>) {
+  %0 = dot %arg0, %arg1 {batch = []x[], contract = [1]x[0]} : tensor<8x32xf32>
+  %1 = tanh %0 : tensor<8x32xf32>
+  %2 = dot %1, %arg2 {batch = []x[], contract = [1]x[0]} : tensor<8x32xf32>
+  %3 = tanh %2 : tensor<8x32xf32>
+  %4 = dot %3, %arg3 {batch = []x[], contract = [1]x[0]} : tensor<8x16xf32>
+  %5 = tanh %4 : tensor<8x16xf32>
+  %6 = dot %5, %arg4 {batch = []x[], contract = [1]x[0]} : tensor<8x8xf32>
+  return %6
+}

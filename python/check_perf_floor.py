@@ -9,6 +9,7 @@ when the release-build measurements breach them:
 * ``step_median_ns``           must stay BELOW  ``max_step_median_ns``
 * ``eval_median_ns``  (ledger) must stay BELOW  ``max_eval_median_ns``
 * ``eval_ledger_speedup``      must stay ABOVE  ``min_eval_ledger_speedup``
+* ``schedule_sim_median_ns``   must stay BELOW  ``max_schedule_sim_median_ns``
 
 The floors are deliberately generous — shared CI runners are noisy and
 the gate exists to catch catastrophic regressions (an accidentally
@@ -57,6 +58,7 @@ def main() -> int:
     below("step_median_ns", "max_step_median_ns")
     below("eval_median_ns", "max_eval_median_ns")
     above("eval_ledger_speedup", "min_eval_ledger_speedup")
+    below("schedule_sim_median_ns", "max_schedule_sim_median_ns")
 
     base = bench.get("baseline_single_episodes_per_sec")
     eps = bench.get("single_episodes_per_sec")

@@ -79,7 +79,7 @@ fn main() {
         b.bench(&format!("ledger_refresh/{layers}L"), || {
             flip = !flip;
             let target = if flip { &dm_partial } else { &dm_done };
-            black_box(ledger.refresh(&program, target).cost);
+            black_box(ledger.refresh(&program, target, None).cost);
         });
 
         // Featurization (learner input).
@@ -116,6 +116,17 @@ fn main() {
         seed += 1;
         black_box(search(&env, 50, seed, MctsConfig::default()).best_reward);
     });
+
+    // 1F1B schedule simulation (the per-evaluation term the pipeline
+    // tactic adds; DESIGN.md §11).
+    for k in [4usize, 8] {
+        let stage = vec![1e-3; k];
+        let xfer = vec![1e-5; k - 1];
+        let m = 2 * k;
+        b.bench(&format!("schedule_sim/{k}stage"), || {
+            black_box(automap::pipeline::simulate_1f1b(&stage, &xfer, m).bubble_fraction);
+        });
+    }
 
     // Ranker inference through PJRT (needs `make artifacts`).
     let g = featurize(&program.func, &program.mesh);

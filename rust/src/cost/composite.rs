@@ -7,9 +7,11 @@
 //! strategy that fits device memory. Nothing here pattern-matches it.
 
 use super::liveness::{LivenessTimeline, MemoryEstimate};
+use crate::ir::ArgKind;
 use crate::partir::dist::DistMap;
 use crate::partir::program::PartirProgram;
 use crate::partir::propagate::PropStats;
+use crate::pipeline::{boundary_transfers, simulate_1f1b, PipelineSpec};
 use crate::sim::device::Device;
 use crate::sim::exec::{estimate, node_term, NodeTerm, RuntimeEstimate};
 use crate::spmd::collectives::{collective_seconds, Collective, CollectiveKind, CollectiveStats};
@@ -34,6 +36,25 @@ impl Default for CostWeights {
     }
 }
 
+/// Pipeline-specific terms of a pipelined evaluation (DESIGN.md §11):
+/// the 1F1B schedule outcome, the point-to-point transfer bill, and the
+/// per-stage liveness ceiling that replaces the flat peak in the cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineEval {
+    pub stages: usize,
+    pub microbatches: usize,
+    /// The cut vector this evaluation priced.
+    pub cuts: Vec<u32>,
+    /// Warm-up/drain idle fraction of the 1F1B schedule.
+    pub bubble_fraction: f64,
+    /// End-to-end 1F1B makespan (replaces the flat runtime in the cost).
+    pub makespan_seconds: f64,
+    /// Total send/recv seconds across all boundary hops and microbatches.
+    pub send_recv_seconds: f64,
+    /// Max over stages of resident weights + in-flight activations.
+    pub max_stage_peak_bytes: i64,
+}
+
 /// Full evaluation of one partitioning solution.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Evaluation {
@@ -42,17 +63,53 @@ pub struct Evaluation {
     pub collectives: CollectiveStats,
     pub fits_memory: bool,
     pub cost: f64,
+    /// `Some` iff the evaluation priced a pipeline configuration.
+    pub pipeline: Option<PipelineEval>,
 }
 
 /// Evaluate a distribution map end to end: lower to SPMD, run the
 /// liveness, communication and runtime models, combine.
 pub fn evaluate(p: &PartirProgram, dm: &DistMap, dev: &Device, w: &CostWeights) -> Evaluation {
+    evaluate_pipelined(p, dm, dev, w, None)
+}
+
+/// [`evaluate`], optionally composed with a pipeline configuration: the
+/// SPMD models run unchanged (their aggregates stay bit-identical to the
+/// flat path and still appear in `memory`/`runtime`/`collectives`), and
+/// when `pipe` is `Some` the per-node terms are additionally binned into
+/// stages and priced through the 1F1B schedule simulator — the cost then
+/// uses the makespan and the per-stage liveness ceiling instead of the
+/// flat totals.
+pub fn evaluate_pipelined(
+    p: &PartirProgram,
+    dm: &DistMap,
+    dev: &Device,
+    w: &CostWeights,
+    pipe: Option<&PipelineSpec>,
+) -> Evaluation {
     let sp = lower(&p.func, &p.mesh, &p.prop, dm);
     let memory =
         super::liveness::peak_memory_cached(&p.func, &p.mesh, dm, &p.prop.global_bytes);
     let runtime = estimate(&sp, dev);
-    let collectives = CollectiveStats::from_collectives(&sp.collectives);
-    combine(memory, runtime, collectives, dev.hbm_bytes, w)
+    let mut collectives = CollectiveStats::from_collectives(&sp.collectives);
+    let spec = match pipe {
+        None => return combine(memory, runtime, collectives, dev.hbm_bytes, w),
+        Some(spec) => spec,
+    };
+    // Per-node terms exactly as the ledger caches them — same shared
+    // function, so the pipeline pricing below is bit-identical to the
+    // ledger's re-aggregation of its cached terms.
+    let n = p.func.num_nodes();
+    let mut terms = vec![NodeTerm::default(); n];
+    let mut coll: Vec<Vec<CollectiveTerm>> = vec![Vec::new(); n];
+    let mut justified = Vec::new();
+    let mut lowered = Vec::new();
+    for ni in 0..n {
+        terms[ni] =
+            node_cost_terms(p, dm, dev, ni, &mut justified, &mut lowered, &mut coll[ni]);
+    }
+    let pe = pipeline_terms(p, dm, dev, &terms, &coll, spec, &mut collectives);
+    combine_pipelined(memory, runtime, collectives, pe, dev.hbm_bytes, w)
 }
 
 /// Fold the three model outputs into the composite objective — the ONE
@@ -71,7 +128,35 @@ fn combine(
         + w.comm_bytes * collectives.total_bytes() as f64
         + w.runtime * runtime.total_seconds()
         + w.mem_bytes * memory.peak_bytes as f64;
-    Evaluation { fits_memory: overflow == 0.0, memory, runtime, collectives, cost }
+    Evaluation { fits_memory: overflow == 0.0, memory, runtime, collectives, cost, pipeline: None }
+}
+
+/// Pipelined counterpart of [`combine`] — again the ONE definition, so
+/// [`evaluate_pipelined`] and the ledger cannot drift: the effective
+/// peak is the per-stage liveness ceiling and the effective runtime is
+/// the 1F1B makespan, while `memory`/`runtime` keep the flat SPMD
+/// aggregates for inspection.
+fn combine_pipelined(
+    memory: MemoryEstimate,
+    runtime: RuntimeEstimate,
+    collectives: CollectiveStats,
+    pipe: PipelineEval,
+    hbm_bytes: i64,
+    w: &CostWeights,
+) -> Evaluation {
+    let overflow = (pipe.max_stage_peak_bytes - hbm_bytes).max(0) as f64;
+    let cost = w.mem_overflow * overflow
+        + w.comm_bytes * collectives.total_bytes() as f64
+        + w.runtime * pipe.makespan_seconds
+        + w.mem_bytes * pipe.max_stage_peak_bytes as f64;
+    Evaluation {
+        fits_memory: overflow == 0.0,
+        memory,
+        runtime,
+        collectives,
+        cost,
+        pipeline: Some(pipe),
+    }
 }
 
 /// One cached collective of one node: what the lowering emitted plus its
@@ -82,6 +167,125 @@ struct CollectiveTerm {
     kind: CollectiveKind,
     bytes: i64,
     seconds: f64,
+}
+
+/// Compute node `ni`'s cached cost terms — roofline [`NodeTerm`] plus
+/// lowered collectives with precomputed seconds — into `out`. The ONE
+/// per-node recompute shared by [`CostLedger`] and the pipelined full
+/// path in [`evaluate_pipelined`]; both therefore hold bit-identical
+/// term tables for the same map.
+fn node_cost_terms(
+    p: &PartirProgram,
+    dm: &DistMap,
+    dev: &Device,
+    ni: usize,
+    justified: &mut Vec<(usize, usize)>,
+    lowered: &mut Vec<Collective>,
+    out: &mut Vec<CollectiveTerm>,
+) -> NodeTerm {
+    let t = node_term(&p.func, &p.mesh, &p.prop, dm, dev, ni);
+    lowered.clear();
+    lower_node_into(&p.func, &p.mesh, &p.prop, dm, ni, justified, lowered);
+    out.clear();
+    for c in lowered.iter() {
+        out.push(CollectiveTerm {
+            kind: c.kind,
+            bytes: c.bytes,
+            seconds: collective_seconds(c, &p.mesh, dev.ici_bw, dev.alpha),
+        });
+    }
+    t
+}
+
+/// Price a pipeline configuration from per-node cost terms (DESIGN.md
+/// §11). Inputs are the tables [`node_cost_terms`] produces, so the full
+/// path and the ledger feed bit-identical data through this single
+/// definition:
+///
+/// - per-stage busy seconds = Σ over the stage's nodes of
+///   `max(compute, memory) + intra-stage collective seconds`;
+/// - boundary hops from [`boundary_transfers`], each priced as `M`
+///   point-to-point transfers of `bytes/M` (`α + (bytes/M)/ici_bw` per
+///   microbatch) and folded into `collectives` as send/recv pairs;
+/// - the 1F1B simulator turns stage/transfer seconds into makespan and
+///   bubble;
+/// - per-stage peak = resident parameter/opt-state bytes (placed at the
+///   argument's first consumer) + `min(M, K - s)` in-flight microbatch
+///   activation slices (1F1B keeps at most that many alive on stage s).
+fn pipeline_terms(
+    p: &PartirProgram,
+    dm: &DistMap,
+    dev: &Device,
+    terms: &[NodeTerm],
+    coll: &[Vec<CollectiveTerm>],
+    spec: &PipelineSpec,
+    collectives: &mut CollectiveStats,
+) -> PipelineEval {
+    let k = spec.stages();
+    let m = spec.microbatches.max(1);
+    let num_args = p.func.num_args();
+    // Per-stage busy seconds and full-batch activation bytes, nodes
+    // ascending (the deterministic accumulation order of the contract).
+    let mut stage_seconds = vec![0.0f64; k];
+    let mut act_bytes = vec![0i64; k];
+    for (ni, t) in terms.iter().enumerate() {
+        let s = spec.stage_of(ni);
+        let mut secs = t.compute_seconds.max(t.memory_seconds);
+        for c in &coll[ni] {
+            secs += c.seconds;
+        }
+        stage_seconds[s] += secs;
+        let out_v = num_args + ni;
+        act_bytes[s] += dm.local_bytes(out_v, p.prop.global_bytes[out_v], &p.mesh);
+    }
+    // Parameter / optimiser-state residency: bytes land on the stage of
+    // the argument's first consumer, which holds them all schedule long.
+    let mut weight_bytes = vec![0i64; k];
+    let mut placed = vec![false; num_args];
+    for (ni, node) in p.func.nodes.iter().enumerate() {
+        let s = spec.stage_of(ni);
+        for &inp in &node.inputs {
+            let v = inp.index();
+            if v < num_args && !placed[v] {
+                placed[v] = true;
+                if matches!(p.func.args[v].kind, ArgKind::Parameter | ArgKind::OptState) {
+                    weight_bytes[s] += dm.local_bytes(v, p.prop.global_bytes[v], &p.mesh);
+                }
+            }
+        }
+    }
+    // Cross-stage hops: M microbatched point-to-point transfers each.
+    // Stats record the send/recv pair (M ops per side, full local bytes
+    // crossing in total); the schedule sees the per-microbatch seconds.
+    let mut xfer = vec![0.0f64; k.saturating_sub(1)];
+    let mut send_recv_seconds = 0.0f64;
+    for t in boundary_transfers(&p.func, spec) {
+        let bytes = dm.local_bytes(t.value, p.prop.global_bytes[t.value], &p.mesh);
+        let per_mb = dev.alpha + (bytes as f64 / m as f64) / dev.ici_bw;
+        xfer[t.boundary] += per_mb;
+        send_recv_seconds += m as f64 * per_mb;
+        collectives.send_count += m;
+        collectives.send_bytes += bytes;
+        collectives.recv_count += m;
+        collectives.recv_bytes += bytes;
+    }
+    let sched = simulate_1f1b(&stage_seconds, &xfer, m);
+    // Per-stage liveness ceiling (integer arithmetic, order-free).
+    let mut max_stage_peak = 0i64;
+    for s in 0..k {
+        let inflight = m.min(k - s) as i64;
+        let peak = weight_bytes[s] + inflight * (act_bytes[s] / m as i64);
+        max_stage_peak = max_stage_peak.max(peak);
+    }
+    PipelineEval {
+        stages: k,
+        microbatches: m,
+        cuts: spec.cuts.clone(),
+        bubble_fraction: sched.bubble_fraction,
+        makespan_seconds: sched.makespan_seconds,
+        send_recv_seconds,
+        max_stage_peak_bytes: max_stage_peak,
+    }
 }
 
 /// Per-node cost ledger: [`evaluate`] decomposed into per-node
@@ -175,35 +379,34 @@ impl CostLedger {
         ledger
     }
 
-    /// Re-cost node `ni` against the tracked map.
+    /// Re-cost node `ni` against the tracked map (the shared
+    /// [`node_cost_terms`] definition).
     fn recompute_node(&mut self, p: &PartirProgram, ni: usize) {
-        self.terms[ni] = node_term(&p.func, &p.mesh, &p.prop, &self.dm, &self.device, ni);
-        self.lowered.clear();
-        lower_node_into(
-            &p.func,
-            &p.mesh,
-            &p.prop,
+        self.terms[ni] = node_cost_terms(
+            p,
             &self.dm,
+            &self.device,
             ni,
             &mut self.justified,
             &mut self.lowered,
+            &mut self.coll[ni],
         );
-        let terms = &mut self.coll[ni];
-        terms.clear();
-        for c in &self.lowered {
-            terms.push(CollectiveTerm {
-                kind: c.kind,
-                bytes: c.bytes,
-                seconds: collective_seconds(c, &p.mesh, self.device.ici_bw, self.device.alpha),
-            });
-        }
     }
 
     /// Bring the ledger to `target` and evaluate it: diff the tracked
     /// map against `target`, re-cost only the nodes a changed value
     /// touches, re-aggregate. Bit-identical to
-    /// `evaluate(p, target, device, weights)`.
-    pub fn refresh(&mut self, p: &PartirProgram, target: &DistMap) -> Evaluation {
+    /// `evaluate_pipelined(p, target, device, weights, pipe)` — the
+    /// pipeline terms, when requested, are re-priced from the cached
+    /// per-node tables through the same shared [`pipeline_terms`]
+    /// definition (stage cuts don't change any per-node term, so a cut
+    /// move costs only the O(nodes) re-aggregation, never a re-lower).
+    pub fn refresh(
+        &mut self,
+        p: &PartirProgram,
+        target: &DistMap,
+        pipe: Option<&PipelineSpec>,
+    ) -> Evaluation {
         debug_assert_eq!(self.dm.d.len(), target.d.len(), "ledger bound to a different program");
         self.refreshes += 1;
         self.changed.clear();
@@ -240,7 +443,7 @@ impl CostLedger {
         self.nodes_reused += p.func.num_nodes() - dirty.len();
         self.dirty = dirty;
         self.dirty.clear();
-        self.aggregate()
+        self.aggregate_with(p, pipe)
     }
 
     #[inline]
@@ -259,9 +462,10 @@ impl CostLedger {
         p: &PartirProgram,
         dm: &DistMap,
         infer_rest: bool,
+        pipe: Option<&PipelineSpec>,
     ) -> Evaluation {
         if !infer_rest {
-            return self.refresh(p, dm);
+            return self.refresh(p, dm, pipe);
         }
         // Move the scratch out so `refresh` can borrow `self` mutably.
         let empty = DistMap { d: Vec::new(), num_axes: 0 };
@@ -274,7 +478,7 @@ impl CostLedger {
         }
         let mut stats = PropStats::default();
         p.prop.infer_rest(&p.func, &p.mesh, &mut target, &mut stats);
-        let e = self.refresh(p, &target);
+        let e = self.refresh(p, &target, pipe);
         self.infer_dm = target;
         e
     }
@@ -282,8 +486,10 @@ impl CostLedger {
     /// Aggregate the cached terms into a full [`Evaluation`], in exactly
     /// the order the one-shot pipeline accumulates: roofline terms by
     /// ascending node, collective seconds in emission order, liveness
-    /// peak by the maintained-delta scan.
-    fn aggregate(&self) -> Evaluation {
+    /// peak by the maintained segment tree. With a pipeline spec the
+    /// cached tables additionally flow through the shared
+    /// [`pipeline_terms`] + [`combine_pipelined`] pair.
+    fn aggregate_with(&self, p: &PartirProgram, pipe: Option<&PipelineSpec>) -> Evaluation {
         let mut runtime = RuntimeEstimate::default();
         let mut collectives = CollectiveStats::default();
         for (t, cs) in self.terms.iter().zip(&self.coll) {
@@ -293,7 +499,29 @@ impl CostLedger {
                 runtime.collective_seconds += c.seconds;
             }
         }
-        combine(self.live.peak(), runtime, collectives, self.device.hbm_bytes, &self.weights)
+        let memory = self.live.peak();
+        match pipe {
+            None => combine(memory, runtime, collectives, self.device.hbm_bytes, &self.weights),
+            Some(spec) => {
+                let pe = pipeline_terms(
+                    p,
+                    &self.dm,
+                    &self.device,
+                    &self.terms,
+                    &self.coll,
+                    spec,
+                    &mut collectives,
+                );
+                combine_pipelined(
+                    memory,
+                    runtime,
+                    collectives,
+                    pe,
+                    self.device.hbm_bytes,
+                    &self.weights,
+                )
+            }
+        }
     }
 
     /// Stable digest of every cached term (float bits included) — lets
@@ -311,9 +539,13 @@ impl CostLedger {
         for cs in &self.coll {
             h.usize(cs.len());
             for c in cs {
-                h.byte(matches!(c.kind, CollectiveKind::AllReduce) as u8)
-                    .i64(c.bytes)
-                    .f64(c.seconds);
+                let kind = match c.kind {
+                    CollectiveKind::AllReduce => 0u8,
+                    CollectiveKind::AllGather => 1,
+                    CollectiveKind::Send => 2,
+                    CollectiveKind::Recv => 3,
+                };
+                h.byte(kind).i64(c.bytes).f64(c.seconds);
             }
         }
         let mem = self.live.peak();
@@ -392,7 +624,7 @@ mod tests {
         for actions in states {
             let st = DecisionState { actions, atomic: Default::default() };
             let (dm, _) = p.apply(&st);
-            let inc = ledger.refresh(&p, &dm);
+            let inc = ledger.refresh(&p, &dm, None);
             let full = evaluate(&p, &dm, &dev, &w);
             assert_eq!(inc, full);
             assert_eq!(inc.cost.to_bits(), full.cost.to_bits(), "cost must match to the bit");
@@ -406,7 +638,7 @@ mod tests {
         let dm0 = crate::partir::dist::DistMap::new(&p.func, &p.mesh);
         let mut ledger = CostLedger::new(&p, &dm0, tiny_device(), CostWeights::default());
         // Refreshing onto the identical map recomputes nothing.
-        let _ = ledger.refresh(&p, &dm0);
+        let _ = ledger.refresh(&p, &dm0, None);
         assert_eq!(ledger.refreshes, 1);
         assert_eq!(ledger.nodes_recomputed, 0);
         assert_eq!(ledger.nodes_reused, p.func.num_nodes());
@@ -416,7 +648,7 @@ mod tests {
             atomic: Default::default(),
         };
         let (dm, _) = p.apply(&st);
-        let _ = ledger.refresh(&p, &dm);
+        let _ = ledger.refresh(&p, &dm, None);
         assert!(ledger.nodes_recomputed >= 1);
         assert!(ledger.nodes_recomputed < p.func.num_nodes());
     }
@@ -436,13 +668,46 @@ mod tests {
             atomic: Default::default(),
         };
         let (dm, _) = p.apply(&st);
-        let _ = ledger.refresh(&p, &dm);
+        let _ = ledger.refresh(&p, &dm, None);
         let fresh = CostLedger::new(&p, &dm, dev, w);
         assert_eq!(
             ledger.terms_digest(),
             fresh.terms_digest(),
             "a maintained ledger must hold the same terms as a scratch rebuild"
         );
+    }
+
+    #[test]
+    fn pipelined_evaluation_prices_bubble_sends_and_stays_ledger_identical() {
+        let p = big_prog();
+        let dev = tiny_device();
+        let w = CostWeights::default();
+        // 3 nodes (matmul, gelu, matmul) → 3 single-node stages.
+        let spec = PipelineSpec { axis: 0, microbatches: 4, cuts: vec![1, 2] };
+        let dm = crate::partir::dist::DistMap::new(&p.func, &p.mesh);
+        let e = evaluate_pipelined(&p, &dm, &dev, &w, Some(&spec));
+        let pe = e.pipeline.as_ref().expect("pipelined evaluation carries terms");
+        assert_eq!((pe.stages, pe.microbatches), (3, 4));
+        assert_eq!(pe.cuts, vec![1, 2]);
+        assert!(pe.bubble_fraction > 0.0 && pe.bubble_fraction < 1.0, "{}", pe.bubble_fraction);
+        assert!(pe.makespan_seconds > 0.0);
+        assert!(pe.send_recv_seconds > 0.0);
+        assert!(pe.max_stage_peak_bytes > 0);
+        // Two boundary hops, M sends/recvs each.
+        assert_eq!(e.collectives.send_count, 8);
+        assert_eq!(e.collectives.recv_count, 8);
+        assert!(e.collectives.send_bytes > 0);
+        assert_eq!(e.collectives.send_bytes, e.collectives.recv_bytes);
+        // The flat evaluation is untouched by the pipeline terms.
+        let flat = evaluate(&p, &dm, &dev, &w);
+        assert_eq!(e.memory, flat.memory);
+        assert_eq!(e.runtime, flat.runtime);
+        assert!(flat.pipeline.is_none());
+        // Ledger path is bit-identical with pipeline terms too.
+        let mut ledger = CostLedger::new(&p, &dm, dev.clone(), w.clone());
+        let inc = ledger.refresh(&p, &dm, Some(&spec));
+        assert_eq!(inc, e);
+        assert_eq!(inc.cost.to_bits(), e.cost.to_bits(), "cost must match to the bit");
     }
 
     #[test]

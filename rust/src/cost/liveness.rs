@@ -41,16 +41,45 @@ pub fn peak_memory_cached(f: &Func, mesh: &Mesh, dm: &DistMap, bytes: &[i64]) ->
     LivenessTimeline::new(f, mesh, dm, bytes).peak()
 }
 
+/// One segment-tree node over the delta track: the segment's total sum,
+/// the maximum over its nonempty prefix sums, and the leftmost leaf
+/// index achieving that maximum (matching the strict-greater linear
+/// scan's first-occurrence tie-break).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct SegNode {
+    sum: i64,
+    maxp: i64,
+    arg: u32,
+}
+
+/// Identity padding: contributes nothing to sums and never wins a
+/// prefix-max comparison (`saturating_add` keeps `i64::MIN` absorbing).
+const SEG_PAD: SegNode = SegNode { sum: 0, maxp: i64::MIN, arg: 0 };
+
+#[inline]
+fn seg_combine(l: SegNode, r: SegNode) -> SegNode {
+    let cand = l.sum.saturating_add(r.maxp);
+    if l.maxp >= cand {
+        SegNode { sum: l.sum + r.sum, maxp: l.maxp, arg: l.arg }
+    } else {
+        SegNode { sum: l.sum + r.sum, maxp: cand, arg: r.arg }
+    }
+}
+
 /// The liveness interval timeline held mutable: per-value local sizes,
 /// the allocate/free delta track, and the resident argument total. The
 /// cost ledger keeps one of these per episode and, after an action,
-/// re-points only the *changed* values' intervals; the peak is then
-/// re-scanned over the maintained deltas.
+/// re-points only the *changed* values' intervals.
 ///
-/// All quantities are `i64` sums, so delta maintenance is exact: a
-/// timeline updated value-by-value holds bit-identical state to one
-/// rebuilt from scratch over the same map, and [`LivenessTimeline::peak`]
-/// runs the same scan [`peak_memory_cached`] always ran.
+/// The peak (max prefix sum of the deltas) is maintained in a segment
+/// tree over `delta[0..num_nodes]`: each `set_value` is at most two
+/// O(log n) point updates, and [`LivenessTimeline::peak`] reads the
+/// root in O(1) — no full re-scan on the search hot path.
+///
+/// All quantities are `i64` sums, so delta maintenance is exact, and
+/// every tree node is a pure function of its leaves: a timeline updated
+/// value-by-value holds bit-identical state (tree included) to one
+/// rebuilt from scratch over the same map.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LivenessTimeline {
     /// Last use per value (node index); outputs pinned past the end.
@@ -59,6 +88,11 @@ pub struct LivenessTimeline {
     local: Vec<i64>,
     /// `delta[t]` = bytes allocated at t minus bytes freed entering t.
     delta: Vec<i64>,
+    /// Segment tree over `delta[0..num_nodes]` (1-based heap layout,
+    /// leaves at `seg_size..`; `delta[num_nodes]` is past every scan
+    /// point and stays outside the tree).
+    tree: Vec<SegNode>,
+    seg_size: usize,
     arg_bytes: i64,
     num_args: usize,
 }
@@ -92,7 +126,29 @@ impl LivenessTimeline {
                 delta[free_at] -= s;
             }
         }
-        LivenessTimeline { last_use, local, delta, arg_bytes, num_args }
+        let seg_size = end.max(1).next_power_of_two();
+        let mut tree = vec![SEG_PAD; 2 * seg_size];
+        for (i, &d) in delta.iter().enumerate().take(end) {
+            tree[seg_size + i] = SegNode { sum: d, maxp: d, arg: i as u32 };
+        }
+        for i in (1..seg_size).rev() {
+            tree[i] = seg_combine(tree[2 * i], tree[2 * i + 1]);
+        }
+        LivenessTimeline { last_use, local, delta, tree, seg_size, arg_bytes, num_args }
+    }
+
+    /// Re-derive leaf `i` from the delta track and recombine its
+    /// ancestors (O(log n)).
+    #[inline]
+    fn seg_update(&mut self, i: usize) {
+        let d = self.delta[i];
+        let mut p = self.seg_size + i;
+        self.tree[p] = SegNode { sum: d, maxp: d, arg: i as u32 };
+        p >>= 1;
+        while p >= 1 {
+            self.tree[p] = seg_combine(self.tree[2 * p], self.tree[2 * p + 1]);
+            p >>= 1;
+        }
     }
 
     /// Re-point value `v`'s interval to a new local size (its
@@ -112,27 +168,36 @@ impl LivenessTimeline {
         let end = self.delta.len() - 1;
         let ni = v - self.num_args;
         self.delta[ni] += diff;
+        self.seg_update(ni);
         let free_at = self.last_use[v] as usize + 1;
         if free_at <= end {
             self.delta[free_at] -= diff;
+            // `delta[end]` sits past every scan point; it has no leaf.
+            if free_at < end {
+                self.seg_update(free_at);
+            }
         }
     }
 
-    /// Scan the maintained deltas for the peak — the same max-prefix-sum
-    /// pass the one-shot path runs, so the result is identical.
+    /// Read the maintained peak: `arg_bytes` plus the tree root's max
+    /// prefix sum when positive — exactly what the strict-greater linear
+    /// scan over `delta[0..num_nodes]` produced, leftmost tie-break
+    /// included, now in O(1).
     pub fn peak(&self) -> MemoryEstimate {
-        let end = self.delta.len() - 1;
-        let mut current = self.arg_bytes;
-        let mut peak = self.arg_bytes;
-        let mut peak_node = 0usize;
-        for (ni, &d) in self.delta.iter().enumerate().take(end) {
-            current += d;
-            if current > peak {
-                peak = current;
-                peak_node = ni;
+        let root = self.tree[1];
+        if root.maxp > 0 {
+            MemoryEstimate {
+                peak_bytes: self.arg_bytes + root.maxp,
+                arg_bytes: self.arg_bytes,
+                peak_node: root.arg as usize,
+            }
+        } else {
+            MemoryEstimate {
+                peak_bytes: self.arg_bytes,
+                arg_bytes: self.arg_bytes,
+                peak_node: 0,
             }
         }
-        MemoryEstimate { peak_bytes: peak, arg_bytes: self.arg_bytes, peak_node }
     }
 }
 
@@ -204,6 +269,36 @@ mod tests {
         let rebuilt = LivenessTimeline::new(&p.func, &p.mesh, &dm, &bytes);
         assert_eq!(live, rebuilt, "maintained timeline must equal a fresh build");
         assert_eq!(live.peak(), peak_memory(&p.func, &p.mesh, &dm));
+    }
+
+    #[test]
+    fn segment_tree_tracks_repeated_updates_and_degenerate_peaks() {
+        // y = neg(x): one leaf in the tree, free slot pinned past the end.
+        let mut b = GraphBuilder::new("one");
+        let x = b.arg("x", TensorType::f32(&[64]), ArgKind::Input);
+        let y = b.neg(x);
+        b.output(y);
+        let p = PartirProgram::new(b.finish(), Mesh::new(&[("s", 2)]));
+        let dm = DistMap::new(&p.func, &p.mesh);
+        let bytes: Vec<i64> = (0..p.func.num_values())
+            .map(|v| p.func.value_type(ValueId(v as u32)).byte_size())
+            .collect();
+        let mut live = LivenessTimeline::new(&p.func, &p.mesh, &dm, &bytes);
+        let m = live.peak();
+        assert_eq!(m.peak_bytes, 256 + 256);
+        assert_eq!(m.peak_node, 0);
+        // Shrink the only node buffer to zero: the max prefix sum is no
+        // longer positive, so the peak falls back to the resident args.
+        live.set_value(1, 0);
+        assert_eq!(live.peak(), MemoryEstimate { peak_bytes: 256, arg_bytes: 256, peak_node: 0 });
+        // Grow it back through several updates; every intermediate state
+        // must equal a scratch rebuild (tree included — derived PartialEq).
+        for sz in [8i64, 1024, 256] {
+            live.set_value(1, sz);
+            assert_eq!(live.peak().peak_bytes, 256 + sz);
+        }
+        let rebuilt = LivenessTimeline::new(&p.func, &p.mesh, &dm, &bytes);
+        assert_eq!(live, rebuilt);
     }
 
     #[test]

@@ -21,6 +21,7 @@ pub mod cost;
 pub mod learner;
 pub mod models;
 pub mod partir;
+pub mod pipeline;
 pub mod runtime;
 pub mod search;
 pub mod service;

@@ -36,7 +36,7 @@ use automap::util::cli::Args;
 const VALUE_FLAGS: &[&str] = &[
     "layers", "budgets", "attempts", "seed", "out", "out-dir", "count", "axis", "model",
     "budget", "filter", "ranker", "config", "d-model", "mesh", "pin", "shard", "pool",
-    "cache-mb", "program",
+    "cache-mb", "program", "pipeline",
 ];
 const BOOL_FLAGS: &[&str] = &["paper", "grouping", "no-tying", "help", "stdin-jsonl"];
 
@@ -101,6 +101,9 @@ fn usage() {
                                            e.g. --shard x:0:batch,dense_0/w:1:model\n\
                 --program file.pir         partition a textual-IR program instead\n\
                                            of a built-in model\n\
+                --pipeline stages=K[,microbatches=M][,axis=N]\n\
+                                           cut the program into K pipeline stages and\n\
+                                           price them through the 1F1B schedule (DESIGN.md §11)\n\
          textual IR (DESIGN.md §10):\n\
                 parse file.pir             parse + verify + round-trip check\n\
                 print --model mlp [--out f.pir]   emit a built-in model as text\n\
@@ -248,8 +251,31 @@ fn cmd_batch(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_partition(args: &Args) -> anyhow::Result<()> {
     let model_kind = args.get_str("model", "transformer");
-    let mesh = Mesh::parse(&args.get_str("mesh", "model=4"))
+    let mut mesh = Mesh::parse(&args.get_str("mesh", "model=4"))
         .map_err(|e| anyhow::anyhow!("{e}"))?;
+    // --pipeline stages=K[,microbatches=M][,axis=N]: appends a dedicated
+    // (non-searchable) mesh axis when the spec doesn't already name one.
+    let pipeline = match args.get("pipeline") {
+        None => None,
+        Some(s) => {
+            let flag = automap::pipeline::parse_pipeline_flag(s)?;
+            if !mesh.axes.iter().any(|a| a.name == flag.axis) {
+                if mesh.axes.len() >= automap::partir::mesh::MAX_AXES {
+                    anyhow::bail!(
+                        "mesh is full ({} axes); cannot add pipeline axis '{}'",
+                        mesh.axes.len(),
+                        flag.axis
+                    );
+                }
+                mesh.axes.push(automap::partir::mesh::Axis {
+                    name: flag.axis.clone(),
+                    size: flag.stages as i64,
+                    searchable: false,
+                });
+            }
+            Some(flag)
+        }
+    };
     let ranker = match args.get_str("filter", "heuristic").as_str() {
         "none" => RankerSpec::None,
         "heuristic" => RankerSpec::Heuristic,
@@ -298,6 +324,13 @@ fn cmd_partition(args: &Args) -> anyhow::Result<()> {
     let mut tactics = Vec::new();
     if !manual_axes.is_empty() || !constraints.is_empty() {
         tactics.push(Tactic::Manual { constraints, manual_axes });
+    }
+    if let Some(flag) = pipeline {
+        tactics.push(Tactic::Pipeline {
+            axis: flag.axis,
+            stages: flag.stages,
+            microbatches: flag.microbatches,
+        });
     }
     tactics.push(Tactic::Filter { ranker, top_k: TOP_K });
     tactics.push(Tactic::Search {

@@ -1,0 +1,23 @@
+//! Inter-operator pipeline parallelism (DESIGN.md §11): a stage
+//! partitioner that cuts a [`crate::ir::Func`] into K contiguous stages
+//! over a dedicated mesh axis, and a 1F1B schedule simulator that prices
+//! microbatched execution — warm-up/drain bubble included — from the
+//! same per-node roofline terms the SPMD cost model produces.
+//!
+//! This is the second level of the two-level parallelism hierarchy
+//! (inter-op stages × intra-op SPMD tiles): stage-cut positions are
+//! search actions alongside tile actions, cross-stage activation
+//! transfers are priced as `Send`/`Recv` collectives
+//! ([`crate::spmd::collectives`]), and the composite evaluation
+//! ([`crate::cost::composite::evaluate_pipelined`]) replaces the flat
+//! runtime/memory terms with the 1F1B makespan and per-stage liveness
+//! ceilings.
+
+pub mod partition;
+pub mod schedule;
+
+pub use partition::{
+    balanced_cuts, boundary_transfers, parse_pipeline_flag, stage_weights, BoundaryTransfer,
+    PipelineFlag, PipelineSpec,
+};
+pub use schedule::{simulate_1f1b, ScheduleResult};

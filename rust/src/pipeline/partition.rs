@@ -1,0 +1,368 @@
+//! Stage partitioner (DESIGN.md §11): cut a topologically-ordered
+//! [`Func`] into K contiguous node intervals ("stages") over a dedicated
+//! mesh axis.
+//!
+//! Nodes are stored in topological order (the builder only lets a node
+//! reference already-created values), so ANY strictly increasing cut
+//! vector yields a valid acyclic stage assignment — which is what makes
+//! cut positions cheap search actions: moving a cut never needs a
+//! legality re-check, only a re-price.
+//!
+//! The balance score is the classic parameter+FLOP load per stage:
+//! matmuls are weighted `2·N·K·M`, everything else by its output element
+//! count, and parameter/optimiser-state bytes count toward the stage of
+//! their first use (that stage holds the weights resident). The greedy
+//! prefix-sum split lands each cut at the first node where the running
+//! weight crosses the stage's even share — the seed the search then
+//! refines with `CutMove` actions.
+
+use crate::ir::{ArgKind, Func, OpKind, ValueId};
+use anyhow::{bail, Result};
+
+/// A resolved pipeline configuration: the mesh axis carrying the stages,
+/// the microbatch count, and the cut positions. `cuts[i]` is the node
+/// index that STARTS stage `i+1`; strictly increasing, each in
+/// `1..num_nodes`. The stage of node `ni` is the number of cuts `<= ni`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PipelineSpec {
+    /// Mesh axis index the stages are laid out over.
+    pub axis: usize,
+    /// Microbatch count `M` for the 1F1B schedule.
+    pub microbatches: usize,
+    /// Stage-cut node indices, strictly increasing.
+    pub cuts: Vec<u32>,
+}
+
+impl PipelineSpec {
+    pub fn stages(&self) -> usize {
+        self.cuts.len() + 1
+    }
+
+    /// Stage index of node `ni` (number of cuts at or before it).
+    pub fn stage_of(&self, ni: usize) -> usize {
+        // cuts is sorted; partition_point = first cut > ni.
+        self.cuts.partition_point(|&c| (c as usize) <= ni)
+    }
+}
+
+/// Per-node balance weight: FLOPs for matmuls (2·out_elems·contract),
+/// output element count for everything else, plus the bytes of any
+/// parameter/optimiser-state argument first consumed by this node.
+fn node_weight(f: &Func, ni: usize, first_use: &[Option<u32>]) -> f64 {
+    let node = &f.nodes[ni];
+    let out_elems = node.ty.num_elements() as f64;
+    let flops = match &node.op {
+        OpKind::Dot(d) => {
+            let lhs_dims = dims_of(f, node.inputs[0]);
+            let k: f64 = d.lhs_contract.iter().map(|&c| lhs_dims[c] as f64).product();
+            2.0 * out_elems * k
+        }
+        _ => out_elems,
+    };
+    let mut param_bytes = 0.0;
+    for (ai, arg) in f.args.iter().enumerate() {
+        if first_use[ai] == Some(ni as u32)
+            && matches!(arg.kind, ArgKind::Parameter | ArgKind::OptState)
+        {
+            param_bytes += arg.ty.byte_size() as f64;
+        }
+    }
+    flops + param_bytes
+}
+
+fn dims_of(f: &Func, v: ValueId) -> &[i64] {
+    if v.index() < f.num_args() {
+        &f.args[v.index()].ty.dims
+    } else {
+        &f.nodes[v.index() - f.num_args()].ty.dims
+    }
+}
+
+/// First consuming node per argument (`None` = unused).
+fn arg_first_use(f: &Func) -> Vec<Option<u32>> {
+    let mut first = vec![None; f.num_args()];
+    for (ni, node) in f.nodes.iter().enumerate() {
+        for &inp in &node.inputs {
+            let i = inp.index();
+            if i < f.num_args() && first[i].is_none() {
+                first[i] = Some(ni as u32);
+            }
+        }
+    }
+    first
+}
+
+/// Greedy balanced interval cut: `k - 1` strictly increasing cut points
+/// over the node weights' prefix sums, each at the first node where the
+/// running weight reaches that stage's even share. Deterministic.
+/// Returns fewer cuts when the program has fewer than `k` nodes.
+pub fn balanced_cuts(f: &Func, k: usize) -> Vec<u32> {
+    let n = f.num_nodes();
+    if k <= 1 || n < 2 {
+        return Vec::new();
+    }
+    let k = k.min(n);
+    let first_use = arg_first_use(f);
+    let w: Vec<f64> = (0..n).map(|ni| node_weight(f, ni, &first_use)).collect();
+    let total: f64 = w.iter().sum();
+    let mut cuts = Vec::with_capacity(k - 1);
+    let mut acc = 0.0;
+    for (ni, &wi) in w.iter().enumerate() {
+        acc += wi;
+        let j = cuts.len() + 1; // next cut index (1-based share)
+        if j < k && acc >= total * j as f64 / k as f64 {
+            // Cut AFTER ni; keep room so every later stage is non-empty.
+            let cut = ((ni + 1) as u32).min((n - (k - j)) as u32);
+            let lo = cuts.last().map_or(1, |&c: &u32| c + 1);
+            cuts.push(cut.max(lo));
+        }
+    }
+    // Degenerate weight distributions (all mass on the last node) can
+    // leave cuts unplaced; pad from the tail, keeping them increasing.
+    while cuts.len() < k - 1 {
+        let j = cuts.len() + 1;
+        let cut = ((n - (k - j)) as u32).max(cuts.last().map_or(1, |&c| c + 1));
+        cuts.push(cut);
+    }
+    cuts
+}
+
+/// Per-stage balance weights under a cut vector (for traces and tests).
+pub fn stage_weights(f: &Func, cuts: &[u32]) -> Vec<f64> {
+    let first_use = arg_first_use(f);
+    let mut out = vec![0.0; cuts.len() + 1];
+    let spec = PipelineSpec { axis: 0, microbatches: 1, cuts: cuts.to_vec() };
+    for ni in 0..f.num_nodes() {
+        out[spec.stage_of(ni)] += node_weight(f, ni, &first_use);
+    }
+    out
+}
+
+/// One cross-stage activation transfer: value `value` must hop the
+/// boundary between stages `boundary` and `boundary + 1` to reach a
+/// consumer. Values are forwarded stage to stage (a value consumed in
+/// stages 1 and 3 crosses boundaries 0, 1, and 2 exactly once each).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BoundaryTransfer {
+    /// Value id crossing the boundary.
+    pub value: usize,
+    /// Boundary index (between stage `boundary` and `boundary + 1`).
+    pub boundary: usize,
+    /// Consumer node that pulled the value across.
+    pub node: usize,
+}
+
+/// Enumerate every boundary crossing under `spec`, deterministically
+/// (nodes ascending, inputs in operand order). Node results start at
+/// their producer's stage; arguments are resident at the stage of their
+/// first use (no transfer for the first consumer). Each value is
+/// forwarded at most once per boundary — later consumers reuse the
+/// already-transferred copy.
+pub fn boundary_transfers(f: &Func, spec: &PipelineSpec) -> Vec<BoundaryTransfer> {
+    let num_args = f.num_args();
+    let mut out = Vec::new();
+    if spec.cuts.is_empty() {
+        return out;
+    }
+    // Highest stage each value has reached so far (usize::MAX = not yet
+    // placed; for args that means "resident wherever first used").
+    let mut at: Vec<usize> = vec![usize::MAX; f.num_values()];
+    for (ni, node) in f.nodes.iter().enumerate() {
+        let cs = spec.stage_of(ni);
+        for &inp in &node.inputs {
+            let v = inp.index();
+            if at[v] == usize::MAX {
+                debug_assert!(v < num_args, "node results are placed at production");
+                at[v] = cs;
+                continue;
+            }
+            let from = at[v];
+            for b in from..cs {
+                out.push(BoundaryTransfer { value: v, boundary: b, node: ni });
+            }
+            if cs > from {
+                at[v] = cs;
+            }
+        }
+        at[num_args + ni] = cs;
+    }
+    out
+}
+
+/// Parsed `--pipeline stages=K[,microbatches=M][,axis=NAME]` flag.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PipelineFlag {
+    pub stages: usize,
+    pub microbatches: usize,
+    pub axis: String,
+}
+
+/// Parse the CLI / request pipeline flag. `stages` is required;
+/// `microbatches` defaults to `2 * stages` (a common 1F1B choice that
+/// keeps the bubble under a third); `axis` defaults to `"pipe"`.
+pub fn parse_pipeline_flag(s: &str) -> Result<PipelineFlag> {
+    let mut stages: Option<usize> = None;
+    let mut microbatches: Option<usize> = None;
+    let mut axis = "pipe".to_string();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (key, val) = match part.split_once('=') {
+            Some(kv) => kv,
+            None => bail!("pipeline flag: expected key=value, found '{part}'"),
+        };
+        match key.trim() {
+            "stages" => {
+                let v: usize = val.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("pipeline flag: stages must be a positive integer, found '{val}'")
+                })?;
+                if v == 0 {
+                    bail!("pipeline flag: stages must be >= 1");
+                }
+                stages = Some(v);
+            }
+            "microbatches" => {
+                let v: usize = val.trim().parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "pipeline flag: microbatches must be a positive integer, found '{val}'"
+                    )
+                })?;
+                if v == 0 {
+                    bail!("pipeline flag: microbatches must be >= 1");
+                }
+                microbatches = Some(v);
+            }
+            "axis" => {
+                let v = val.trim();
+                if v.is_empty() {
+                    bail!("pipeline flag: axis name must be non-empty");
+                }
+                axis = v.to_string();
+            }
+            other => bail!("pipeline flag: unknown key '{other}' (expected stages/microbatches/axis)"),
+        }
+    }
+    let stages = match stages {
+        Some(s) => s,
+        None => bail!("pipeline flag: 'stages=K' is required"),
+    };
+    Ok(PipelineFlag { stages, microbatches: microbatches.unwrap_or(2 * stages), axis })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ArgKind, GraphBuilder, TensorType};
+
+    /// x -> neg -> exp -> neg -> exp chain with a param consumed by the
+    /// middle node.
+    fn chain() -> Func {
+        let mut b = GraphBuilder::new("chain");
+        let x = b.arg("x", TensorType::f32(&[8, 16]), ArgKind::Input);
+        let w = b.arg("w", TensorType::f32(&[16, 16]), ArgKind::Parameter);
+        let a = b.neg(x);
+        let c = b.exp(a);
+        let d = b.matmul(c, w);
+        let e = b.neg(d);
+        let f2 = b.exp(e);
+        b.output(f2);
+        b.finish()
+    }
+
+    #[test]
+    fn stage_of_counts_cuts() {
+        let spec = PipelineSpec { axis: 0, microbatches: 4, cuts: vec![2, 4] };
+        assert_eq!(spec.stages(), 3);
+        assert_eq!(spec.stage_of(0), 0);
+        assert_eq!(spec.stage_of(1), 0);
+        assert_eq!(spec.stage_of(2), 1);
+        assert_eq!(spec.stage_of(3), 1);
+        assert_eq!(spec.stage_of(4), 2);
+        assert_eq!(spec.stage_of(9), 2);
+    }
+
+    #[test]
+    fn balanced_cuts_are_strictly_increasing_and_cover_all_stages() {
+        let f = chain();
+        for k in [1usize, 2, 3, 4, 5] {
+            let cuts = balanced_cuts(&f, k);
+            let k_eff = k.min(f.num_nodes());
+            assert_eq!(cuts.len(), k_eff.saturating_sub(1), "k={k}");
+            for w in cuts.windows(2) {
+                assert!(w[0] < w[1], "cuts must be strictly increasing: {cuts:?}");
+            }
+            if let (Some(&first), Some(&last)) = (cuts.first(), cuts.last()) {
+                assert!(first >= 1 && (last as usize) < f.num_nodes(), "{cuts:?}");
+            }
+            // Every stage is non-empty by construction.
+            let sw = stage_weights(&f, &cuts);
+            assert_eq!(sw.len(), k_eff);
+            assert!(sw.iter().all(|&w| w > 0.0), "k={k}: {sw:?}");
+        }
+    }
+
+    #[test]
+    fn balanced_cuts_prefer_even_weight() {
+        let f = chain();
+        let cuts = balanced_cuts(&f, 2);
+        let sw = stage_weights(&f, &cuts);
+        let total: f64 = sw.iter().sum();
+        // The matmul dominates; the greedy split must not put everything
+        // in one stage.
+        assert!(sw.iter().all(|&w| w < 0.95 * total), "{sw:?}");
+    }
+
+    #[test]
+    fn boundary_transfers_forward_values_once_per_boundary() {
+        let f = chain();
+        // Cut between every node: 5 stages.
+        let spec = PipelineSpec { axis: 0, microbatches: 2, cuts: vec![1, 2, 3, 4] };
+        let xfers = boundary_transfers(&f, &spec);
+        // Chain program: each node's result crosses exactly the one
+        // boundary to its consumer; args are resident at first use.
+        assert_eq!(xfers.len(), 4, "{xfers:?}");
+        for (b, x) in xfers.iter().enumerate() {
+            assert_eq!(x.boundary, b);
+        }
+        // No cuts, no transfers.
+        let none = PipelineSpec { axis: 0, microbatches: 2, cuts: vec![] };
+        assert!(boundary_transfers(&f, &none).is_empty());
+    }
+
+    #[test]
+    fn skip_connections_hop_every_intermediate_boundary() {
+        let mut b = GraphBuilder::new("skip");
+        let x = b.arg("x", TensorType::f32(&[8]), ArgKind::Input);
+        let a = b.neg(x);
+        let c = b.exp(a);
+        let d = b.neg(c);
+        let e = b.add(a, d); // consumes stage-0 value in stage 3
+        b.output(e);
+        let f = b.finish();
+        let spec = PipelineSpec { axis: 0, microbatches: 2, cuts: vec![1, 2, 3] };
+        let xfers = boundary_transfers(&f, &spec);
+        // a (value of node 0) crosses boundary 0 (to node 1) and then
+        // boundaries 1, 2 (forwarded to node 3); c crosses 1; d crosses 2.
+        let a_hops: Vec<usize> = xfers
+            .iter()
+            .filter(|t| t.value == f.num_args())
+            .map(|t| t.boundary)
+            .collect();
+        assert_eq!(a_hops, vec![0, 1, 2], "{xfers:?}");
+    }
+
+    #[test]
+    fn flag_parses_with_defaults_and_rejects_junk() {
+        let p = parse_pipeline_flag("stages=4").unwrap();
+        assert_eq!(p, PipelineFlag { stages: 4, microbatches: 8, axis: "pipe".into() });
+        let p = parse_pipeline_flag("stages=2,microbatches=16,axis=stage").unwrap();
+        assert_eq!(p, PipelineFlag { stages: 2, microbatches: 16, axis: "stage".into() });
+        assert!(parse_pipeline_flag("").is_err(), "stages required");
+        assert!(parse_pipeline_flag("stages=0").is_err());
+        assert!(parse_pipeline_flag("stages=4,microbatches=0").is_err());
+        assert!(parse_pipeline_flag("bogus=1").is_err());
+        assert!(parse_pipeline_flag("stages").is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! 1F1B pipeline schedule simulator (DESIGN.md §11).
+//!
+//! Given per-stage busy seconds (for the FULL batch), per-boundary
+//! transfer seconds (per microbatch), and a microbatch count `M`, the
+//! simulator prices the steady-state one-forward-one-backward schedule:
+//! each stage processes its `M` microbatches in order, a microbatch
+//! reaches stage `s+1` only after stage `s` finished it and its
+//! activations crossed the boundary, and the warm-up/drain bubble falls
+//! out of the recurrence rather than being bolted on.
+//!
+//! The recurrence is the standard O(K·M)-time, O(K)-memory DP:
+//!
+//! ```text
+//! finish[s] after microbatch m:
+//!     arrive = (s == 0) ? 0 : finish[s-1] + xfer[s-1]
+//!     finish[s] = max(arrive, finish[s]) + t[s]
+//! ```
+//!
+//! where `t[s]` is the per-microbatch stage time (`stage_seconds[s]/M`).
+//! On uniform stages with zero transfer cost the resulting bubble
+//! fraction is exactly the closed form `(K-1)/(M+K-1)` — pinned by a
+//! unit test below and by the acceptance criteria in
+//! `tests/session_pipeline.rs`.
+
+/// Result of one 1F1B simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduleResult {
+    /// End-to-end seconds for all `M` microbatches through all stages.
+    pub makespan_seconds: f64,
+    /// Fraction of the `K · makespan` stage-seconds that is idle:
+    /// `1 - M·Σt[s] / (K·makespan)`. Zero for `K = 1`; exactly
+    /// `(K-1)/(M+K-1)` on uniform stages with free transfers.
+    pub bubble_fraction: f64,
+    /// Per-microbatch busy seconds per stage (`stage_seconds[s]/M`),
+    /// the `t[s]` the DP ran on.
+    pub stage_microbatch_seconds: Vec<f64>,
+}
+
+/// Simulate a 1F1B schedule.
+///
+/// * `stage_seconds[s]` — busy seconds of stage `s` for the FULL batch
+///   (compute + intra-stage collectives, from the roofline model).
+/// * `xfer_seconds[s]` — seconds one microbatch's activations take to
+///   cross the boundary between stages `s` and `s+1`
+///   (`len = stages - 1`; pass `&[]` for a single stage).
+/// * `microbatches` — `M`, clamped to at least 1.
+pub fn simulate_1f1b(
+    stage_seconds: &[f64],
+    xfer_seconds: &[f64],
+    microbatches: usize,
+) -> ScheduleResult {
+    let k = stage_seconds.len();
+    if k == 0 {
+        return ScheduleResult {
+            makespan_seconds: 0.0,
+            bubble_fraction: 0.0,
+            stage_microbatch_seconds: Vec::new(),
+        };
+    }
+    debug_assert_eq!(xfer_seconds.len(), k - 1, "one transfer term per boundary");
+    let m = microbatches.max(1);
+    let t: Vec<f64> = stage_seconds.iter().map(|&s| s / m as f64).collect();
+
+    let mut finish = vec![0.0f64; k];
+    for _mb in 0..m {
+        for s in 0..k {
+            let arrive = if s == 0 { 0.0 } else { finish[s - 1] + xfer_seconds[s - 1] };
+            finish[s] = arrive.max(finish[s]) + t[s];
+        }
+    }
+    let makespan = finish[k - 1];
+    let busy: f64 = t.iter().sum::<f64>() * m as f64;
+    let bubble = if makespan > 0.0 && k > 1 {
+        (1.0 - busy / (k as f64 * makespan)).max(0.0)
+    } else {
+        0.0
+    };
+    ScheduleResult {
+        makespan_seconds: makespan,
+        bubble_fraction: bubble,
+        stage_microbatch_seconds: t,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_stages_match_the_closed_form_bubble() {
+        // (K-1)/(M+K-1): small-integer float arithmetic, so the DP and
+        // the closed form agree to full precision.
+        for (k, m) in [(4usize, 8usize), (2, 4), (8, 16), (4, 1)] {
+            let r = simulate_1f1b(&vec![1.0; k], &vec![0.0; k - 1], m);
+            let closed = (k - 1) as f64 / (m + k - 1) as f64;
+            assert!(
+                (r.bubble_fraction - closed).abs() < 1e-12,
+                "K={k} M={m}: got {} want {closed}",
+                r.bubble_fraction
+            );
+            // Uniform makespan is (M + K - 1) per-microbatch slots.
+            let slot = 1.0 / m as f64;
+            assert!((r.makespan_seconds - (m + k - 1) as f64 * slot).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_stage_degenerates_to_the_flat_runtime() {
+        let r = simulate_1f1b(&[0.125], &[], 8);
+        assert_eq!(r.bubble_fraction, 0.0);
+        assert!((r.makespan_seconds - 0.125).abs() < 1e-15, "M microbatches of total/M");
+        let r1 = simulate_1f1b(&[0.125], &[], 1);
+        assert_eq!(r1.makespan_seconds, 0.125);
+    }
+
+    #[test]
+    fn transfers_stretch_the_makespan() {
+        let free = simulate_1f1b(&[1.0, 1.0], &[0.0], 4);
+        let paid = simulate_1f1b(&[1.0, 1.0], &[0.1], 4);
+        assert!(paid.makespan_seconds > free.makespan_seconds);
+        assert!(paid.bubble_fraction > free.bubble_fraction);
+    }
+
+    #[test]
+    fn imbalance_is_priced_by_the_slowest_stage() {
+        // The slow stage serialises: makespan >= M * t_slow.
+        let r = simulate_1f1b(&[1.0, 3.0, 1.0], &[0.0, 0.0], 6);
+        assert!(r.makespan_seconds >= 6.0 * (3.0 / 6.0));
+        let balanced = simulate_1f1b(&[5.0 / 3.0; 3], &[0.0, 0.0], 6);
+        assert!(
+            balanced.makespan_seconds < r.makespan_seconds,
+            "same total work, balanced cuts must win"
+        );
+    }
+
+    #[test]
+    fn more_microbatches_shrink_the_bubble() {
+        let few = simulate_1f1b(&[1.0; 4], &[0.0; 3], 4);
+        let many = simulate_1f1b(&[1.0; 4], &[0.0; 3], 32);
+        assert!(many.bubble_fraction < few.bubble_fraction);
+    }
+
+    #[test]
+    fn empty_input_is_harmless() {
+        let r = simulate_1f1b(&[], &[], 4);
+        assert_eq!(r.makespan_seconds, 0.0);
+        assert_eq!(r.bubble_fraction, 0.0);
+    }
+}

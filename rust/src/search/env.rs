@@ -11,13 +11,14 @@
 //!     groups expose a single decision set per repeated block, shrinking
 //!     the action space itself.
 
-use crate::cost::composite::{evaluate, CostLedger, CostWeights, Evaluation};
+use crate::cost::composite::{evaluate, evaluate_pipelined, CostLedger, CostWeights, Evaluation};
 use crate::ir::{ArgKind, ValueId};
 use crate::partir::actions::{action_valid, Action, DecisionState};
 use crate::partir::dist::{DistMap, UNKNOWN};
 use crate::partir::mesh::AxisId;
 use crate::partir::program::PartirProgram;
 use crate::partir::propagate::{FrontierScratch, PropStats, StuckSet};
+use crate::pipeline::PipelineSpec;
 use crate::sim::device::Device;
 use std::collections::HashMap;
 
@@ -59,8 +60,25 @@ pub struct Target {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum EnvAction {
     Tile { target: u32, dim: u8, axis: u8 },
+    /// Move stage-cut `boundary` by `delta` strides (DESIGN.md §11) —
+    /// only offered when a pipeline is active. Cuts stay strictly
+    /// between their neighbours, so every move keeps the stage
+    /// assignment valid without a legality re-check.
+    CutMove { boundary: u8, delta: i8 },
     InferRest,
     Stop,
+}
+
+/// Active pipeline configuration for a search (see
+/// [`RewriteEnv::set_pipeline`]): the spec whose cuts seed every
+/// episode, and the node-index stride one `CutMove` action travels.
+#[derive(Debug, Clone)]
+pub struct PipelineContext {
+    pub spec: PipelineSpec,
+    /// Stride of one cut move: `max(1, nodes / (8 * stages))`, so a
+    /// handful of moves can traverse a stage interval without flooding
+    /// the branching factor with single-node steps.
+    pub stride: usize,
 }
 
 /// Strip per-layer indices from a scope-qualified argument name so that
@@ -168,6 +186,10 @@ impl EvalMemo {
 pub struct Episode {
     pub state: DecisionState,
     pub dm: DistMap,
+    /// Stage-cut positions (empty unless the env has a pipeline).
+    /// Cut moves mutate these, never the distribution map — a cut is
+    /// an inter-op choice layered over the intra-op tiling.
+    pub cuts: Vec<u32>,
     /// Stuck-node set w.r.t. `dm`, maintained incrementally.
     pub stuck: StuckSet,
     /// Total value-axis assignments made by propagation so far.
@@ -203,6 +225,7 @@ impl Clone for Episode {
         Episode {
             state: self.state.clone(),
             dm: self.dm.clone(),
+            cuts: self.cuts.clone(),
             stuck: self.stuck.clone(),
             assigned: self.assigned,
             decisions: self.decisions,
@@ -217,6 +240,7 @@ impl Clone for Episode {
         self.state.clone_from(&src.state);
         self.dm.d.clone_from(&src.dm.d);
         self.dm.num_axes = src.dm.num_axes;
+        self.cuts.clone_from(&src.cuts);
         self.stuck.clone_from(&src.stuck);
         self.assigned = src.assigned;
         self.decisions = src.decisions;
@@ -263,6 +287,8 @@ pub struct RewriteEnv<'a> {
     /// Baseline cost for reward normalisation: the seed state's cost
     /// (fully replicated when the seed is empty).
     pub base_cost: f64,
+    /// Active pipeline (None = pure SPMD search).
+    pub pipeline: Option<PipelineContext>,
 }
 
 impl<'a> RewriteEnv<'a> {
@@ -385,7 +411,32 @@ impl<'a> RewriteEnv<'a> {
             seed_assigned: seed_stats.assigned,
             seed_last_infer,
             base_cost: base.cost,
+            pipeline: None,
         }
+    }
+
+    /// Activate a pipeline for this search: every episode starts from
+    /// `spec.cuts`, `CutMove` actions become legal alongside tile
+    /// actions, and evaluation routes through the 1F1B pricing. The
+    /// reward baseline is re-normalised against the pipelined seed cost
+    /// (the flat cost is not comparable to a makespan-based one).
+    pub fn set_pipeline(&mut self, spec: PipelineSpec) {
+        let n = self.program.func.num_nodes();
+        let stride = (n / (8 * spec.stages())).max(1);
+        let base =
+            evaluate_pipelined(self.program, &self.seed_dm, &self.device, &self.weights, Some(&spec));
+        self.base_cost = base.cost;
+        self.pipeline = Some(PipelineContext { spec, stride });
+    }
+
+    /// The episode's pipeline spec — the env's axis/microbatch config
+    /// with the episode's CURRENT cut vector (None when no pipeline).
+    fn episode_spec(&self, ep: &Episode) -> Option<PipelineSpec> {
+        self.pipeline.as_ref().map(|p| PipelineSpec {
+            axis: p.spec.axis,
+            microbatches: p.spec.microbatches,
+            cuts: ep.cuts.clone(),
+        })
     }
 
     /// Default worklist: every function argument except optimiser state
@@ -409,6 +460,7 @@ impl<'a> RewriteEnv<'a> {
         Episode {
             state,
             dm: self.seed_dm.clone(),
+            cuts: self.pipeline.as_ref().map(|p| p.spec.cuts.clone()).unwrap_or_default(),
             stuck: self.seed_stuck.clone(),
             assigned: self.seed_assigned,
             decisions: 0,
@@ -455,6 +507,22 @@ impl<'a> RewriteEnv<'a> {
             for c in &self.candidates[ti] {
                 if row[c.axis.0] == UNKNOWN && !ep.dm.dim_taken(v.index(), c.axis, c.dim as usize) {
                     out.push(c.action);
+                }
+            }
+        }
+        if let Some(p) = &self.pipeline {
+            // Cut moves: shift one boundary by ±stride, staying strictly
+            // between its neighbours (stages never empty out).
+            let n = self.program.func.num_nodes() as i64;
+            let stride = p.stride as i64;
+            for (b, &c) in ep.cuts.iter().enumerate() {
+                let prev = if b == 0 { 0 } else { ep.cuts[b - 1] as i64 };
+                let next = if b + 1 == ep.cuts.len() { n } else { ep.cuts[b + 1] as i64 };
+                for delta in [-1i8, 1] {
+                    let nc = c as i64 + delta as i64 * stride;
+                    if nc > prev && nc < next {
+                        out.push(EnvAction::CutMove { boundary: b as u8, delta });
+                    }
                 }
             }
         }
@@ -506,6 +574,26 @@ impl<'a> RewriteEnv<'a> {
                 ep.decisions += 1;
                 ep.last_infer_rest = false;
             }
+            EnvAction::CutMove { boundary, delta } => {
+                let p = self.pipeline.as_ref().expect("CutMove requires an active pipeline");
+                let b = boundary as usize;
+                let nc = (ep.cuts[b] as i64 + delta as i64 * p.stride as i64) as u32;
+                #[cfg(debug_assertions)]
+                {
+                    let prev = if b == 0 { 0 } else { ep.cuts[b - 1] };
+                    let next = if b + 1 == ep.cuts.len() {
+                        self.program.func.num_nodes() as u32
+                    } else {
+                        ep.cuts[b + 1]
+                    };
+                    debug_assert!(nc > prev && nc < next, "illegal cut move {nc} in ({prev},{next})");
+                }
+                ep.cuts[b] = nc;
+                // The distribution map is untouched: a cut move re-bins
+                // per-node terms, it never re-tiles a value.
+                ep.decisions += 1;
+                ep.last_infer_rest = false;
+            }
             EnvAction::InferRest => {
                 let mut stats = PropStats::default();
                 prop.infer_rest_settle(f, mesh, &mut ep.dm, &mut stats);
@@ -550,6 +638,15 @@ impl<'a> RewriteEnv<'a> {
         for row in &ep.dm.d {
             h.bytes(row);
         }
+        if let Some(p) = &self.pipeline {
+            // Pipelined evaluation is a function of (map, cuts, M, axis):
+            // fold the extra inputs so the memo stays sound. Without a
+            // pipeline the fingerprint is unchanged (same keys as ever).
+            h.usize(p.spec.axis).usize(p.spec.microbatches).usize(ep.cuts.len());
+            for &c in &ep.cuts {
+                h.u64(c as u64);
+            }
+        }
         h.finish()
     }
 
@@ -577,14 +674,16 @@ impl<'a> RewriteEnv<'a> {
         let e = if ep.ledger.is_some() {
             self.ledger_evaluation(ep)
         } else if self.options.auto_infer_rest {
+            let spec = self.episode_spec(ep);
             let dm = memo.scratch_dm.get_or_insert_with(|| ep.dm.clone());
             dm.d.clone_from(&ep.dm.d);
             dm.num_axes = ep.dm.num_axes;
             let mut stats = PropStats::default();
             self.program.prop.infer_rest(&self.program.func, &self.program.mesh, dm, &mut stats);
-            evaluate(self.program, dm, &self.device, &self.weights)
+            evaluate_pipelined(self.program, dm, &self.device, &self.weights, spec.as_ref())
         } else {
-            evaluate(self.program, &ep.dm, &self.device, &self.weights)
+            let spec = self.episode_spec(ep);
+            evaluate_pipelined(self.program, &ep.dm, &self.device, &self.weights, spec.as_ref())
         };
         memo.insert(key, e.clone());
         e
@@ -603,8 +702,10 @@ impl<'a> RewriteEnv<'a> {
     /// Debug builds cross-check every answer against the full pipeline,
     /// to the bit.
     fn ledger_evaluation(&self, ep: &mut Episode) -> Evaluation {
+        let spec = self.episode_spec(ep);
         let ledger = ep.ledger.as_mut().expect("ledger_evaluation needs an attached ledger");
-        let e = ledger.evaluate_map(self.program, &ep.dm, self.options.auto_infer_rest);
+        let e =
+            ledger.evaluate_map(self.program, &ep.dm, self.options.auto_infer_rest, spec.as_ref());
         #[cfg(debug_assertions)]
         {
             let full = self.evaluate_episode(ep);
@@ -620,6 +721,7 @@ impl<'a> RewriteEnv<'a> {
 
     /// Evaluate a terminal episode (applies auto infer-rest if enabled).
     pub fn evaluate_episode(&self, ep: &Episode) -> Evaluation {
+        let spec = self.episode_spec(ep);
         if self.options.auto_infer_rest {
             let mut dm = ep.dm.clone();
             let mut stats = PropStats::default();
@@ -629,9 +731,9 @@ impl<'a> RewriteEnv<'a> {
                 &mut dm,
                 &mut stats,
             );
-            evaluate(self.program, &dm, &self.device, &self.weights)
+            evaluate_pipelined(self.program, &dm, &self.device, &self.weights, spec.as_ref())
         } else {
-            evaluate(self.program, &ep.dm, &self.device, &self.weights)
+            evaluate_pipelined(self.program, &ep.dm, &self.device, &self.weights, spec.as_ref())
         }
     }
 
@@ -889,6 +991,47 @@ mod tests {
         }
         assert_eq!(memo2.len(), memo.len(), "eviction must be deterministic");
         assert_eq!(memo2.evictions, memo.evictions);
+    }
+
+    #[test]
+    fn cut_moves_respect_neighbours_and_enter_the_fingerprint() {
+        let (program, device) = env_for(2, SearchOptions::default());
+        let wl = RewriteEnv::default_worklist(&program);
+        let mut env = RewriteEnv::new(
+            &program,
+            device,
+            CostWeights::default(),
+            SearchOptions::default(),
+            &wl,
+        );
+        let cuts = crate::pipeline::balanced_cuts(&program.func, 4);
+        env.set_pipeline(PipelineSpec { axis: 0, microbatches: 8, cuts: cuts.clone() });
+        let mut ep = env.reset();
+        assert_eq!(ep.cuts, cuts, "episodes start from the seed cuts");
+        let f0 = env.state_fingerprint(&ep);
+        let acts = env.legal_actions(&ep);
+        let cut_move = acts
+            .iter()
+            .find(|a| matches!(a, EnvAction::CutMove { .. }))
+            .copied()
+            .expect("cut moves must be offered alongside tile actions");
+        assert!(acts.iter().any(|a| matches!(a, EnvAction::Tile { .. })));
+        env.step(&mut ep, cut_move);
+        assert_eq!(ep.decisions, 1);
+        assert_ne!(ep.cuts, cuts);
+        for w in ep.cuts.windows(2) {
+            assert!(w[0] < w[1], "cuts stay strictly increasing: {:?}", ep.cuts);
+        }
+        assert!((*ep.cuts.last().unwrap() as usize) < program.func.num_nodes());
+        assert_ne!(env.state_fingerprint(&ep), f0, "cut positions are episode identity");
+        // Pipelined evaluation flows through all three paths identically.
+        let full = env.evaluate_episode(&ep);
+        assert!(full.pipeline.is_some());
+        let ledgered = env.evaluate_episode_ledger(&mut ep);
+        assert_eq!(ledgered, full);
+        let mut memo = EvalMemo::new();
+        let memoed = env.evaluate_episode_memo(&mut ep, &mut memo);
+        assert_eq!(memoed.cost.to_bits(), full.cost.to_bits());
     }
 
     #[test]

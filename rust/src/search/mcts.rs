@@ -35,6 +35,9 @@ struct Node {
 #[derive(Clone)]
 pub struct SearchResult {
     pub best_state: DecisionState,
+    /// Stage-cut boundaries of the best episode (empty unless the env
+    /// has a pipeline context; see `RewriteEnv::set_pipeline`).
+    pub best_cuts: Vec<u32>,
     pub best_eval: Evaluation,
     pub best_reward: f64,
     /// Episode index (1-based) at which the best solution was found.
@@ -70,6 +73,7 @@ impl Default for MctsConfig {
 /// Kept-in-place best solution (cloned into, not reallocated).
 struct Best {
     state: DecisionState,
+    cuts: Vec<u32>,
     eval: Evaluation,
     reward: f64,
     episode: usize,
@@ -225,14 +229,20 @@ impl<'e, 'p> Mcts<'e, 'p> {
                 match self.best.take() {
                     Some(mut b) => {
                         b.state.clone_from(&self.ep.state);
+                        b.cuts.clone_from(&self.ep.cuts);
                         b.eval = eval;
                         b.reward = reward;
                         b.episode = episode;
                         self.best = Some(b);
                     }
                     None => {
-                        self.best =
-                            Some(Best { state: self.ep.state.clone(), eval, reward, episode });
+                        self.best = Some(Best {
+                            state: self.ep.state.clone(),
+                            cuts: self.ep.cuts.clone(),
+                            eval,
+                            reward,
+                            episode,
+                        });
                     }
                 }
             }
@@ -269,6 +279,7 @@ impl<'e, 'p> Mcts<'e, 'p> {
             ledger.map(|l| (l.refreshes, l.nodes_reused, l.nodes_recomputed)).unwrap_or((0, 0, 0));
         SearchResult {
             best_state: b.state.clone(),
+            best_cuts: b.cuts.clone(),
             best_eval: b.eval.clone(),
             best_reward: b.reward,
             episodes_to_best: b.episode,

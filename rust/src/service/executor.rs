@@ -26,9 +26,10 @@
 //! same best plan — byte-identical JSON — on every run, regardless of
 //! how the OS interleaves the worker threads.
 
-use crate::cost::composite::{evaluate, CostWeights};
+use crate::cost::composite::{evaluate_pipelined, CostWeights};
 use crate::ir::Func;
 use crate::partir::mesh::Mesh;
+use crate::pipeline::PipelineSpec;
 use crate::search::env::{RewriteEnv, SearchOptions};
 use crate::search::mcts::{Mcts, MctsConfig, SearchResult};
 use crate::search::worker_seed;
@@ -153,11 +154,14 @@ impl PlanJob {
         }
         let worklist = session.resolved_worklist();
         let seed_state = session.state().clone();
+        // A `Pipeline` pre-tactic leaves its spec on the session; every
+        // worker tree then searches stage-cut moves alongside tile moves.
+        let pipe_spec = session.pipeline_spec().cloned();
 
         let mut rounds = 0usize;
         let mut steals = 0usize;
         let (results, worker_episodes, targets) = {
-            let env = RewriteEnv::with_seed(
+            let mut env = RewriteEnv::with_seed(
                 &session.program,
                 self.device.clone(),
                 self.weights.clone(),
@@ -165,6 +169,10 @@ impl PlanJob {
                 &worklist,
                 seed_state,
             );
+            if let Some(spec) = &pipe_spec {
+                env.set_pipeline(spec.clone());
+            }
+            let env = env;
             let mut searchers: Vec<Mcts> = (0..k)
                 .map(|w| Mcts::new(&env, self.mcts.clone(), worker_seed(self.seed, w)))
                 .collect();
@@ -263,7 +271,21 @@ impl PlanJob {
                 &mut dm,
                 &mut stats,
             );
-            worker_costs.push(evaluate(&session.program, &dm, &self.device, &self.weights).cost);
+            // Each tree may have refined the stage cuts differently; its
+            // plan must be priced through ITS schedule, not the seed's.
+            let spec = pipe_spec
+                .as_ref()
+                .map(|s| PipelineSpec { cuts: r.best_cuts.clone(), ..s.clone() });
+            worker_costs.push(
+                evaluate_pipelined(
+                    &session.program,
+                    &dm,
+                    &self.device,
+                    &self.weights,
+                    spec.as_ref(),
+                )
+                .cost,
+            );
         }
         // Strict `<`: ties go to the lowest worker index, which keeps
         // the merge deterministic.

@@ -171,6 +171,12 @@ fn hash_tactic(h: &mut Fnv64, t: &Tactic) {
             h.u64(*seed);
             hash_mcts(h, mcts);
         }
+        Tactic::Pipeline { axis, stages, microbatches } => {
+            h.str("pipeline");
+            h.str(axis);
+            h.usize(*stages);
+            h.usize(*microbatches);
+        }
         Tactic::InferRest => {
             h.str("infer-rest");
         }

@@ -67,6 +67,10 @@ pub struct PartitionRequest {
     pub shard: Vec<String>,
     /// Worklist filter: `none` | `heuristic`.
     pub filter: String,
+    /// Pipeline-parallelism flag, `"stages=K[,microbatches=M][,axis=N]"`
+    /// (empty = no pipeline tactic). The named axis is appended to the
+    /// mesh with size `K` when absent, marked non-searchable.
+    pub pipeline: String,
     pub top_k: usize,
     pub budget: usize,
     pub seed: u64,
@@ -84,6 +88,7 @@ impl Default for PartitionRequest {
             pin: Vec::new(),
             shard: Vec::new(),
             filter: "none".to_string(),
+            pipeline: String::new(),
             top_k: crate::learner::ranker::TOP_K,
             budget: 300,
             seed: 0,
@@ -168,6 +173,7 @@ impl PartitionRequest {
             pin: str_list(j, "pin")?,
             shard: str_list(j, "shard")?,
             filter: get_str("filter", &d.filter)?,
+            pipeline: get_str("pipeline", &d.pipeline)?,
             top_k: get_usize("top_k", d.top_k)?,
             budget: get_usize("budget", d.budget)?.max(1),
             seed,
@@ -189,7 +195,7 @@ impl PartitionRequest {
             Some(p) => ("program", Json::str(p.clone())),
             None => ("model", Json::str(self.model.clone())),
         };
-        Json::obj(vec![
+        let mut fields = vec![
             ("id", Json::str(self.id.clone())),
             source,
             ("layers", Json::num(self.layers as f64)),
@@ -201,7 +207,11 @@ impl PartitionRequest {
             ("budget", Json::num(self.budget as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("workers", Json::num(self.workers as f64)),
-        ])
+        ];
+        if !self.pipeline.is_empty() {
+            fields.push(("pipeline", Json::str(self.pipeline.clone())));
+        }
+        Json::obj(fields)
     }
 
     fn build_func(&self) -> Result<Func> {
@@ -222,7 +232,7 @@ impl PartitionRequest {
     /// service's device/cost/search configuration.
     pub fn build_job(&self, defaults: &JobDefaults) -> Result<PlanJob> {
         let func = self.build_func()?;
-        let mesh = Mesh::parse(&self.mesh).map_err(|e| anyhow!("{e}"))?;
+        let mut mesh = Mesh::parse(&self.mesh).map_err(|e| anyhow!("{e}"))?;
         let mut pre_tactics = Vec::new();
         if !self.pin.is_empty() || !self.shard.is_empty() {
             let constraints = self
@@ -231,6 +241,31 @@ impl PartitionRequest {
                 .map(|s| ShardingConstraint::parse(s))
                 .collect::<Result<Vec<_>>>()?;
             pre_tactics.push(Tactic::Manual { constraints, manual_axes: self.pin.clone() });
+        }
+        if !self.pipeline.is_empty() {
+            let flag = crate::pipeline::parse_pipeline_flag(&self.pipeline)?;
+            // Give the pipeline tactic a dedicated mesh axis when the
+            // request's mesh spec doesn't already name one.
+            if !mesh.axes.iter().any(|a| a.name == flag.axis) {
+                if mesh.axes.len() >= crate::partir::mesh::MAX_AXES {
+                    bail!(
+                        "mesh '{}' is full ({} axes); cannot add pipeline axis '{}'",
+                        self.mesh,
+                        mesh.axes.len(),
+                        flag.axis
+                    );
+                }
+                mesh.axes.push(crate::partir::mesh::Axis {
+                    name: flag.axis.clone(),
+                    size: flag.stages as i64,
+                    searchable: false,
+                });
+            }
+            pre_tactics.push(Tactic::Pipeline {
+                axis: flag.axis,
+                stages: flag.stages,
+                microbatches: flag.microbatches,
+            });
         }
         match self.filter.as_str() {
             "none" => {}
@@ -292,10 +327,16 @@ pub struct SearchStats {
     /// Node cost terms the ledgers reused vs recomputed on memo misses.
     pub ledger_nodes_reused: usize,
     pub ledger_nodes_recomputed: usize,
+    /// Pipeline-parallel shape of the winning plan (0/0/0.0 when the
+    /// request ran no `Pipeline` tactic).
+    pub stages: usize,
+    pub microbatches: usize,
+    pub bubble_fraction: f64,
 }
 
 impl SearchStats {
     pub fn from_report(r: &crate::service::executor::ExecutorReport) -> SearchStats {
+        let pe = r.plan.eval.pipeline.as_ref();
         SearchStats {
             episodes: r.episodes_total,
             rounds: r.rounds,
@@ -304,6 +345,9 @@ impl SearchStats {
             eval_memo_hits: r.eval_memo_hits,
             ledger_nodes_reused: r.ledger_nodes_reused,
             ledger_nodes_recomputed: r.ledger_nodes_recomputed,
+            stages: pe.map(|p| p.stages).unwrap_or(0),
+            microbatches: pe.map(|p| p.microbatches).unwrap_or(0),
+            bubble_fraction: pe.map(|p| p.bubble_fraction).unwrap_or(0.0),
         }
     }
 
@@ -319,7 +363,7 @@ impl SearchStats {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("episodes", Json::num(self.episodes as f64)),
             ("rounds", Json::num(self.rounds as f64)),
             ("steals", Json::num(self.steals as f64)),
@@ -329,7 +373,13 @@ impl SearchStats {
             ("ledger_nodes_reused", Json::num(self.ledger_nodes_reused as f64)),
             ("ledger_nodes_recomputed", Json::num(self.ledger_nodes_recomputed as f64)),
             ("ledger_reuse_rate", Json::Num(self.ledger_reuse_rate())),
-        ])
+        ];
+        if self.stages > 0 {
+            fields.push(("stages", Json::num(self.stages as f64)));
+            fields.push(("microbatches", Json::num(self.microbatches as f64)));
+            fields.push(("bubble_fraction", Json::Num(self.bubble_fraction)));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -513,6 +563,39 @@ mod tests {
     }
 
     #[test]
+    fn pipeline_requests_extend_the_mesh_and_round_trip() {
+        let line = "{\"id\":\"p\",\"model\":\"mlp\",\"mesh\":\"model=4\",\
+                    \"pipeline\":\"stages=2,microbatches=4\"}";
+        let r = PartitionRequest::parse_line(line).unwrap();
+        assert_eq!(r.pipeline, "stages=2,microbatches=4");
+        let job = r.build_job(&JobDefaults::default()).unwrap();
+        // The default "pipe" axis is appended, sized by the stage count
+        // and excluded from the tile search.
+        let pipe = job.mesh.axes.iter().find(|a| a.name == "pipe").expect("pipe axis added");
+        assert_eq!(pipe.size, 2);
+        assert!(!pipe.searchable);
+        assert!(matches!(
+            job.pre_tactics.as_slice(),
+            [Tactic::Pipeline { stages: 2, microbatches: 4, .. }]
+        ));
+        // Wire round-trip keeps the flag; plain requests omit the key.
+        let back = PartitionRequest::from_json(&parse(&r.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, r);
+        let plain = PartitionRequest { id: "q".into(), ..Default::default() };
+        assert!(parse(&plain.to_json().to_string()).unwrap().get("pipeline").is_none());
+        // A full mesh cannot grow a pipeline axis.
+        let full = PartitionRequest {
+            mesh: "a=2,b=2,c=2,d=2".into(),
+            ..r.clone()
+        };
+        let e = full.build_job(&JobDefaults::default()).unwrap_err();
+        assert!(e.to_string().contains("pipeline axis"), "{e}");
+        // A bad flag fails at build time, not parse time.
+        let bad = PartitionRequest { pipeline: "microbatches=4".into(), ..r };
+        assert!(bad.build_job(&JobDefaults::default()).is_err());
+    }
+
+    #[test]
     fn response_lines_render_plan_or_error() {
         let ok = PlanResponse {
             id: "r".into(),
@@ -545,6 +628,9 @@ mod tests {
             eval_memo_hits: 30,
             ledger_nodes_reused: 900,
             ledger_nodes_recomputed: 100,
+            stages: 4,
+            microbatches: 8,
+            bubble_fraction: 0.272727,
         };
         assert!((stats.memo_hit_rate() - 0.25).abs() < 1e-12);
         assert!((stats.ledger_reuse_rate() - 0.9).abs() < 1e-12);
@@ -573,8 +659,15 @@ mod tests {
             eval_memo_hits: 0,
             ledger_nodes_reused: 0,
             ledger_nodes_recomputed: 0,
+            stages: 0,
+            microbatches: 0,
+            bubble_fraction: 0.0,
         };
         assert_eq!(empty.memo_hit_rate(), 0.0);
         assert_eq!(empty.ledger_reuse_rate(), 0.0);
+        // Non-pipelined stats omit the pipeline keys entirely.
+        let j = parse(&empty.to_json().to_string()).unwrap();
+        assert!(j.get("stages").is_none());
+        assert!(j.get("bubble_fraction").is_none());
     }
 }

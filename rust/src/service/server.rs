@@ -85,6 +85,11 @@ pub struct PlanService {
     eval_memo_hits: AtomicU64,
     ledger_nodes_reused: AtomicU64,
     ledger_nodes_recomputed: AtomicU64,
+    // Pipeline-parallel observability: searches whose winning plan ran a
+    // `Pipeline` tactic, and their summed 1F1B bubble fractions in
+    // microunits (1e-6; integer so it can live in an atomic).
+    pipelined_searches: AtomicU64,
+    bubble_micros: AtomicU64,
 }
 
 impl PlanService {
@@ -99,6 +104,8 @@ impl PlanService {
             eval_memo_hits: AtomicU64::new(0),
             ledger_nodes_reused: AtomicU64::new(0),
             ledger_nodes_recomputed: AtomicU64::new(0),
+            pipelined_searches: AtomicU64::new(0),
+            bubble_micros: AtomicU64::new(0),
         }
     }
 
@@ -131,6 +138,15 @@ impl PlanService {
             self.eval_memo_hits.load(Ordering::Relaxed),
             self.ledger_nodes_reused.load(Ordering::Relaxed),
             self.ledger_nodes_recomputed.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Pipeline-parallel counters: (searches whose winning plan was
+    /// pipelined, summed bubble fractions in microunits).
+    pub fn pipelined_counters(&self) -> (u64, u64) {
+        (
+            self.pipelined_searches.load(Ordering::Relaxed),
+            self.bubble_micros.load(Ordering::Relaxed),
         )
     }
 
@@ -213,6 +229,11 @@ impl PlanService {
                     .fetch_add(stats.ledger_nodes_reused as u64, Ordering::Relaxed);
                 self.ledger_nodes_recomputed
                     .fetch_add(stats.ledger_nodes_recomputed as u64, Ordering::Relaxed);
+                if stats.stages > 0 {
+                    self.pipelined_searches.fetch_add(1, Ordering::Relaxed);
+                    self.bubble_micros
+                        .fetch_add((stats.bubble_fraction * 1e6) as u64, Ordering::Relaxed);
+                }
                 let plan_json = report.plan.to_json().to_string();
                 self.cache.put(fp, plan_json.clone());
                 Ok((plan_json, stats))
@@ -319,9 +340,20 @@ pub struct ServeSummary {
     /// Node cost terms the run's ledgers reused vs recomputed.
     pub ledger_nodes_reused: u64,
     pub ledger_nodes_recomputed: u64,
+    /// Searches in this run whose winning plan was pipelined, and their
+    /// summed 1F1B bubble fractions in microunits (1e-6).
+    pub pipelined_searches: u64,
+    pub bubble_micros: u64,
 }
 
 impl ServeSummary {
+    /// Mean 1F1B bubble fraction over the run's pipelined searches.
+    pub fn mean_bubble_fraction(&self) -> f64 {
+        if self.pipelined_searches == 0 {
+            return 0.0;
+        }
+        (self.bubble_micros as f64 / 1e6) / self.pipelined_searches as f64
+    }
     /// Fraction of evaluations served by the eval memos.
     pub fn memo_hit_rate(&self) -> f64 {
         crate::util::stats::fraction(self.eval_memo_hits, self.eval_lookups)
@@ -334,7 +366,7 @@ impl ServeSummary {
     }
 
     pub fn describe(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} requests: {} searches, {} cache hits, {} in-flight dedups, {} errors in {:.2}s \
              (eval memo {:.0}% hit, ledger {:.0}% reuse)",
             self.requests,
@@ -345,7 +377,15 @@ impl ServeSummary {
             self.wall_seconds,
             100.0 * self.memo_hit_rate(),
             100.0 * self.ledger_reuse_rate()
-        )
+        );
+        if self.pipelined_searches > 0 {
+            s.push_str(&format!(
+                ", {} pipelined (mean bubble {:.1}%)",
+                self.pipelined_searches,
+                100.0 * self.mean_bubble_fraction()
+            ));
+        }
+        s
     }
 }
 
@@ -362,6 +402,7 @@ pub fn run_batch(
     let hits0 = service.cache.stats().hits;
     let dedup0 = service.dedup_served();
     let sc0 = service.search_cache_counters();
+    let pp0 = service.pipelined_counters();
 
     let queue: BoundedQueue<usize> = BoundedQueue::new(queue_bound);
     let results: Mutex<Vec<Option<PlanResponse>>> = Mutex::new(vec![None; requests.len()]);
@@ -387,6 +428,7 @@ pub fn run_batch(
         .map(|r| r.expect("every request handled"))
         .collect();
     let sc1 = service.search_cache_counters();
+    let pp1 = service.pipelined_counters();
     let summary = ServeSummary {
         requests: responses.len(),
         errors: responses.iter().filter(|r| r.error.is_some()).count(),
@@ -398,6 +440,8 @@ pub fn run_batch(
         eval_memo_hits: sc1.1 - sc0.1,
         ledger_nodes_reused: sc1.2 - sc0.2,
         ledger_nodes_recomputed: sc1.3 - sc0.3,
+        pipelined_searches: pp1.0 - pp0.0,
+        bubble_micros: pp1.1 - pp0.1,
     };
     (responses, summary)
 }
@@ -416,6 +460,7 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
     let hits0 = service.cache.stats().hits;
     let dedup0 = service.dedup_served();
     let sc0 = service.search_cache_counters();
+    let pp0 = service.pipelined_counters();
     let requests = std::sync::atomic::AtomicU64::new(0);
     let errors = std::sync::atomic::AtomicU64::new(0);
 
@@ -460,6 +505,7 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
         return Err(e);
     }
     let sc1 = service.search_cache_counters();
+    let pp1 = service.pipelined_counters();
     Ok(ServeSummary {
         requests: requests.load(Ordering::Relaxed) as usize,
         errors: errors.load(Ordering::Relaxed) as usize,
@@ -471,6 +517,8 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
         eval_memo_hits: sc1.1 - sc0.1,
         ledger_nodes_reused: sc1.2 - sc0.2,
         ledger_nodes_recomputed: sc1.3 - sc0.3,
+        pipelined_searches: pp1.0 - pp0.0,
+        bubble_micros: pp1.1 - pp0.1,
     })
 }
 
@@ -581,6 +629,28 @@ mod tests {
         assert!((0.0..=1.0).contains(&summary.memo_hit_rate()));
         assert!((0.0..=1.0).contains(&summary.ledger_reuse_rate()));
         assert!(summary.ledger_nodes_reused > 0);
+    }
+
+    #[test]
+    fn pipelined_requests_surface_in_stats_and_summary() {
+        let svc = tiny_service();
+        let r = PartitionRequest {
+            pipeline: "stages=2,microbatches=4".to_string(),
+            mesh: "model=2".to_string(),
+            ..req("p", 4)
+        };
+        let (responses, summary) = run_batch(&svc, std::slice::from_ref(&r), 1, 2);
+        assert!(responses[0].error.is_none(), "{:?}", responses[0].error);
+        let stats = responses[0].search.as_ref().expect("fresh response");
+        assert_eq!((stats.stages, stats.microbatches), (2, 4));
+        assert!(stats.bubble_fraction > 0.0, "a 2-stage 1F1B schedule has a warm-up bubble");
+        assert_eq!(summary.pipelined_searches, 1);
+        assert!(summary.bubble_micros > 0);
+        assert!(summary.describe().contains("pipelined"), "{}", summary.describe());
+        // Non-pipelined runs keep the old summary wording.
+        let (_, plain) = run_batch(&svc, &[req("q", 5)], 1, 2);
+        assert_eq!(plain.pipelined_searches, 0);
+        assert!(!plain.describe().contains("pipelined"));
     }
 
     #[test]

@@ -96,6 +96,11 @@ pub struct ThroughputReport {
     /// search run.
     pub eval_memo_hit_rate: f64,
     pub ledger_reuse_rate: f64,
+    /// Median ns of one 1F1B schedule simulation (8 stages, 16
+    /// microbatches) — the term the pipeline tactic adds to every
+    /// episode evaluation, so it must stay microscopic next to
+    /// `eval_median_ns`.
+    pub schedule_sim_median_ns: f64,
     /// Barrier rounds / steal events of the best multi-worker run.
     pub rounds: usize,
     pub steals: usize,
@@ -258,6 +263,22 @@ fn micro_timings(samples: usize) -> Result<(f64, f64, f64)> {
     Ok((median(step_samples), median(full_samples), median(ledger_samples)))
 }
 
+/// Median ns of one 1F1B schedule simulation on the shape the pipeline
+/// tactic prices per episode evaluation (8 stages, 16 microbatches).
+fn schedule_sim_timing(samples: usize) -> f64 {
+    let stage = vec![1.25e-3; 8];
+    let xfer = vec![2.0e-5; 7];
+    let n = samples.max(8);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        let r = crate::pipeline::simulate_1f1b(&stage, &xfer, 16);
+        out.push(t0.elapsed().as_nanos() as f64);
+        black_box(r.bubble_fraction);
+    }
+    median(out)
+}
+
 /// Repo root (one level above the crate manifest).
 fn repo_root() -> Result<std::path::PathBuf> {
     Ok(std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -323,6 +344,7 @@ pub fn measure(cfg: &ThroughputConfig) -> Result<ThroughputReport> {
         eval_ledger_speedup: eval_full_median_ns / eval_median_ns.max(1e-9),
         eval_memo_hit_rate: multi.memo_hit_rate,
         ledger_reuse_rate: multi.ledger_reuse_rate,
+        schedule_sim_median_ns: schedule_sim_timing(cfg.micro_samples),
         rounds: multi.rounds,
         steals: multi.steals,
         baseline_single_episodes_per_sec: load_baseline(),
@@ -348,6 +370,7 @@ impl ThroughputReport {
             ("eval_ledger_speedup", Json::Num(self.eval_ledger_speedup)),
             ("eval_memo_hit_rate", Json::Num(self.eval_memo_hit_rate)),
             ("ledger_reuse_rate", Json::Num(self.ledger_reuse_rate)),
+            ("schedule_sim_median_ns", Json::Num(self.schedule_sim_median_ns)),
             ("rounds", Json::num(self.rounds as f64)),
             ("steals", Json::num(self.steals as f64)),
             // Debug builds run the per-step incremental-vs-full
@@ -370,7 +393,8 @@ impl ThroughputReport {
         format!(
             "single {:.0} eps/s ({:.0} evals/s) | {} workers {:.0} eps/s ({:.2}x, {} rounds, \
              {} steals) | step {:.1}us eval ledger {:.1}us vs full {:.1}us ({:.2}x) | \
-             memo {:.0}% hit, ledger {:.0}% reuse | cache hit median {:.1}us",
+             memo {:.0}% hit, ledger {:.0}% reuse | schedule sim {:.2}us | \
+             cache hit median {:.1}us",
             self.single_episodes_per_sec,
             self.single_evals_per_sec,
             self.workers,
@@ -384,6 +408,7 @@ impl ThroughputReport {
             self.eval_ledger_speedup,
             100.0 * self.eval_memo_hit_rate,
             100.0 * self.ledger_reuse_rate,
+            self.schedule_sim_median_ns / 1e3,
             self.cache_hit_median_ns / 1e3
         )
     }

@@ -3,7 +3,7 @@
 //! the decision trace — serialisable to/from JSON via `util::json` so
 //! plans can be cached, diffed, and shipped between tools.
 
-use crate::cost::composite::Evaluation;
+use crate::cost::composite::{Evaluation, PipelineEval};
 use crate::cost::liveness::MemoryEstimate;
 use crate::sim::exec::RuntimeEstimate;
 use crate::spmd::collectives::CollectiveStats;
@@ -95,6 +95,43 @@ impl PartitionPlan {
         let specs = |xs: &[ShardSpec]| Json::Arr(xs.iter().map(|s| s.to_json()).collect());
         let c = &self.eval.collectives;
         let r = &self.eval.runtime;
+        let mut eval_fields = vec![
+            ("peak_memory_bytes", Json::num(self.eval.memory.peak_bytes as f64)),
+            ("arg_bytes", Json::num(self.eval.memory.arg_bytes as f64)),
+            ("peak_node", Json::num(self.eval.memory.peak_node as f64)),
+            ("fits_memory", Json::Bool(self.eval.fits_memory)),
+            ("cost", Json::Num(self.eval.cost)),
+            ("all_reduces", Json::num(c.all_reduce_count as f64)),
+            ("all_reduce_bytes", Json::num(c.all_reduce_bytes as f64)),
+            ("all_gathers", Json::num(c.all_gather_count as f64)),
+            ("all_gather_bytes", Json::num(c.all_gather_bytes as f64)),
+            ("sends", Json::num(c.send_count as f64)),
+            ("send_bytes", Json::num(c.send_bytes as f64)),
+            ("recvs", Json::num(c.recv_count as f64)),
+            ("recv_bytes", Json::num(c.recv_bytes as f64)),
+            ("compute_seconds", Json::Num(r.compute_seconds)),
+            ("memory_seconds", Json::Num(r.memory_seconds)),
+            ("op_seconds", Json::Num(r.op_seconds)),
+            ("collective_seconds", Json::Num(r.collective_seconds)),
+            ("total_flops", Json::Num(r.total_flops)),
+        ];
+        if let Some(pe) = &self.eval.pipeline {
+            eval_fields.push((
+                "pipeline",
+                Json::obj(vec![
+                    ("stages", Json::num(pe.stages as f64)),
+                    ("microbatches", Json::num(pe.microbatches as f64)),
+                    (
+                        "cuts",
+                        Json::Arr(pe.cuts.iter().map(|&c| Json::num(c as f64)).collect()),
+                    ),
+                    ("bubble_fraction", Json::Num(pe.bubble_fraction)),
+                    ("makespan_seconds", Json::Num(pe.makespan_seconds)),
+                    ("send_recv_seconds", Json::Num(pe.send_recv_seconds)),
+                    ("max_stage_peak_bytes", Json::num(pe.max_stage_peak_bytes as f64)),
+                ]),
+            ));
+        }
         Json::obj(vec![
             (
                 "mesh",
@@ -112,25 +149,7 @@ impl PartitionPlan {
             ),
             ("inputs", specs(&self.input_specs)),
             ("outputs", specs(&self.output_specs)),
-            (
-                "eval",
-                Json::obj(vec![
-                    ("peak_memory_bytes", Json::num(self.eval.memory.peak_bytes as f64)),
-                    ("arg_bytes", Json::num(self.eval.memory.arg_bytes as f64)),
-                    ("peak_node", Json::num(self.eval.memory.peak_node as f64)),
-                    ("fits_memory", Json::Bool(self.eval.fits_memory)),
-                    ("cost", Json::Num(self.eval.cost)),
-                    ("all_reduces", Json::num(c.all_reduce_count as f64)),
-                    ("all_reduce_bytes", Json::num(c.all_reduce_bytes as f64)),
-                    ("all_gathers", Json::num(c.all_gather_count as f64)),
-                    ("all_gather_bytes", Json::num(c.all_gather_bytes as f64)),
-                    ("compute_seconds", Json::Num(r.compute_seconds)),
-                    ("memory_seconds", Json::Num(r.memory_seconds)),
-                    ("op_seconds", Json::Num(r.op_seconds)),
-                    ("collective_seconds", Json::Num(r.collective_seconds)),
-                    ("total_flops", Json::Num(r.total_flops)),
-                ]),
-            ),
+            ("eval", Json::obj(eval_fields)),
             ("decisions", Json::num(self.decisions as f64)),
             ("episodes_to_best", Json::num(self.episodes_to_best as f64)),
             ("worklist_size", Json::num(self.worklist_size as f64)),
@@ -152,7 +171,33 @@ impl PartitionPlan {
         let num = |obj: &Json, key: &str| -> Result<f64> {
             obj.get(key).and_then(|v| v.as_f64()).ok_or_else(|| anyhow!("plan missing '{key}'"))
         };
+        // Lenient: plans written before the pipeline subsystem carry
+        // neither point-to-point stats nor a "pipeline" object.
+        let opt = |obj: &Json, key: &str| -> f64 {
+            obj.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0)
+        };
         let e = j.get("eval").ok_or_else(|| anyhow!("plan missing 'eval'"))?;
+        let pipeline = match e.get("pipeline") {
+            None => None,
+            Some(p) => {
+                let cuts = p
+                    .get("cuts")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("pipeline eval missing 'cuts'"))?
+                    .iter()
+                    .map(|c| c.as_f64().map(|f| f as u32).context("bad pipeline cut"))
+                    .collect::<Result<Vec<u32>>>()?;
+                Some(PipelineEval {
+                    stages: num(p, "stages")? as usize,
+                    microbatches: num(p, "microbatches")? as usize,
+                    cuts,
+                    bubble_fraction: num(p, "bubble_fraction")?,
+                    makespan_seconds: num(p, "makespan_seconds")?,
+                    send_recv_seconds: num(p, "send_recv_seconds")?,
+                    max_stage_peak_bytes: num(p, "max_stage_peak_bytes")? as i64,
+                })
+            }
+        };
         let eval = Evaluation {
             memory: MemoryEstimate {
                 peak_bytes: num(e, "peak_memory_bytes")? as i64,
@@ -171,12 +216,17 @@ impl PartitionPlan {
                 all_reduce_bytes: num(e, "all_reduce_bytes")? as i64,
                 all_gather_count: num(e, "all_gathers")? as usize,
                 all_gather_bytes: num(e, "all_gather_bytes")? as i64,
+                send_count: opt(e, "sends") as usize,
+                send_bytes: opt(e, "send_bytes") as i64,
+                recv_count: opt(e, "recvs") as usize,
+                recv_bytes: opt(e, "recv_bytes") as i64,
             },
             fits_memory: e
                 .get("fits_memory")
                 .and_then(|v| v.as_bool())
                 .ok_or_else(|| anyhow!("plan missing 'fits_memory'"))?,
             cost: num(e, "cost")?,
+            pipeline,
         };
         let mut mesh_axes = Vec::new();
         let mesh_arr =
@@ -243,9 +293,22 @@ mod tests {
                     all_reduce_bytes: 4096,
                     all_gather_count: 1,
                     all_gather_bytes: 512,
+                    send_count: 16,
+                    send_bytes: 2048,
+                    recv_count: 16,
+                    recv_bytes: 2048,
                 },
                 fits_memory: true,
                 cost: 0.0030000001,
+                pipeline: Some(PipelineEval {
+                    stages: 4,
+                    microbatches: 8,
+                    cuts: vec![3, 7, 11],
+                    bubble_fraction: 0.2727272727,
+                    makespan_seconds: 0.0041,
+                    send_recv_seconds: 0.0002,
+                    max_stage_peak_bytes: 98765432,
+                }),
             },
             decisions: 7,
             episodes_to_best: 42,
@@ -288,7 +351,31 @@ mod tests {
                 plan.eval.runtime.collective_seconds
             );
             assert_eq!(back.eval.runtime.total_flops, plan.eval.runtime.total_flops);
+            assert_eq!(back.eval.pipeline, plan.eval.pipeline);
         }
+    }
+
+    #[test]
+    fn pre_pipeline_plans_still_parse() {
+        // Drop the new keys to simulate a plan cached before the
+        // pipeline subsystem existed.
+        let j = sample_plan().to_json();
+        let mut root = match j {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        let mut e = match root.remove("eval").unwrap() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        for key in ["sends", "send_bytes", "recvs", "recv_bytes", "pipeline"] {
+            e.remove(key);
+        }
+        root.insert("eval".to_string(), Json::Obj(e));
+        let back = PartitionPlan::from_json(&Json::Obj(root)).unwrap();
+        assert_eq!(back.eval.collectives.send_count, 0);
+        assert_eq!(back.eval.collectives.recv_bytes, 0);
+        assert!(back.eval.pipeline.is_none());
     }
 
     #[test]

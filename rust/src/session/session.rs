@@ -4,7 +4,7 @@
 
 use super::plan::{PartitionPlan, ShardSpec};
 use super::tactic::{RankerSpec, ShardingConstraint, Tactic};
-use crate::cost::composite::{evaluate, CostWeights, Evaluation};
+use crate::cost::composite::{evaluate_pipelined, CostWeights, Evaluation};
 use crate::ir::{Func, ValueId};
 use crate::learner::features::featurize;
 use crate::learner::ranker::{top_k_decisions, HeuristicRanker, PjrtRanker, Ranker};
@@ -13,6 +13,7 @@ use crate::partir::dist::DistMap;
 use crate::partir::mesh::Mesh;
 use crate::partir::program::PartirProgram;
 use crate::partir::propagate::PropStats;
+use crate::pipeline::{balanced_cuts, PipelineSpec};
 use crate::search::env::{RewriteEnv, SearchOptions};
 use crate::search::mcts::{search, MctsConfig};
 use crate::sim::device::Device;
@@ -68,6 +69,10 @@ pub struct Session {
     /// undo `Manual` tactics' manual-axis markings.
     initial_searchable: Vec<bool>,
     worklist: Option<Vec<ValueId>>,
+    /// Active pipeline configuration (set by `Tactic::Pipeline`): the
+    /// stage axis, microbatch count, and the current cut vector —
+    /// refined in place when a later `Search` tactic moves cuts.
+    pipeline: Option<PipelineSpec>,
     trace: Vec<String>,
     decisions: usize,
     episodes_to_best: usize,
@@ -113,6 +118,7 @@ impl Session {
             },
             initial_searchable,
             worklist: None,
+            pipeline: None,
             trace: Vec::new(),
             decisions: 0,
             episodes_to_best: 0,
@@ -160,6 +166,11 @@ impl Session {
         &self.dm
     }
 
+    /// The active pipeline configuration, if a `Pipeline` tactic ran.
+    pub fn pipeline_spec(&self) -> Option<&PipelineSpec> {
+        self.pipeline.as_ref()
+    }
+
     /// The stage/decision trace accumulated so far.
     pub fn trace(&self) -> &[String] {
         &self.trace
@@ -196,6 +207,12 @@ impl Session {
             self.trace.push(line);
         }
         self.state = result.best_state.clone();
+        if let Some(spec) = &mut self.pipeline {
+            if spec.cuts != result.best_cuts {
+                self.trace.push(format!("search: stage cuts refined to {:?}", result.best_cuts));
+                spec.cuts = result.best_cuts.clone();
+            }
+        }
         self.program.apply_into(&self.state, &mut self.dm, &mut self.stats);
         self.episodes_to_best = result.episodes_to_best;
         self.targets = targets;
@@ -224,6 +241,7 @@ impl Session {
             atomic: crate::partir::actions::AtomicSet::with_capacity(num_values),
         };
         self.worklist = None;
+        self.pipeline = None;
         self.trace.clear();
         self.decisions = 0;
         self.episodes_to_best = 0;
@@ -252,6 +270,9 @@ impl Session {
             }
             Tactic::Filter { ranker, top_k } => self.apply_filter(ranker, *top_k),
             Tactic::Search { budget, seed, mcts } => self.apply_search(*budget, *seed, mcts),
+            Tactic::Pipeline { axis, stages, microbatches } => {
+                self.apply_pipeline(axis, *stages, *microbatches)
+            }
             Tactic::InferRest => {
                 self.apply_infer_rest();
                 Ok(())
@@ -327,6 +348,36 @@ impl Session {
         Ok(())
     }
 
+    /// `Tactic::Pipeline`: resolve the stage axis, exclude it from the
+    /// SPMD search (it carries whole stages, not tiles), and seed the
+    /// cut vector with the balanced interval split — the position a
+    /// later `Search` tactic refines via cut-move actions.
+    fn apply_pipeline(&mut self, axis: &str, stages: usize, microbatches: usize) -> Result<()> {
+        let ax = self.resolve_axis(axis)?;
+        if stages == 0 {
+            bail!("pipeline: stages must be >= 1");
+        }
+        if microbatches == 0 {
+            bail!("pipeline: microbatches must be >= 1");
+        }
+        let n = self.program.func.num_nodes();
+        if stages > n {
+            bail!("pipeline: {stages} stages over a {n}-node program");
+        }
+        self.program.mesh.axes[ax.0].searchable = false;
+        let cuts = balanced_cuts(&self.program.func, stages);
+        let spec = PipelineSpec { axis: ax.0, microbatches, cuts };
+        self.trace.push(format!(
+            "pipeline: {} stages over axis \"{axis}\" ({} microbatches), seed cuts {:?}",
+            spec.stages(),
+            microbatches,
+            spec.cuts
+        ));
+        self.pipeline = Some(spec);
+        self.last_eval = None;
+        Ok(())
+    }
+
     fn apply_filter(&mut self, ranker: &RankerSpec, top_k: usize) -> Result<()> {
         let full = RewriteEnv::default_worklist(&self.program).len();
         let (wl, label) = resolve_worklist(&self.program, ranker, top_k)?;
@@ -341,7 +392,7 @@ impl Session {
         self.worklist_size = worklist.len();
         let prior_actions = self.state.actions.len();
         let result = {
-            let env = RewriteEnv::with_seed(
+            let mut env = RewriteEnv::with_seed(
                 &self.program,
                 self.device.clone(),
                 self.weights.clone(),
@@ -349,6 +400,9 @@ impl Session {
                 &worklist,
                 self.state.clone(),
             );
+            if let Some(spec) = &self.pipeline {
+                env.set_pipeline(spec.clone());
+            }
             self.targets = env.targets.len();
             search(&env, budget, seed, mcts.clone())
         };
@@ -361,6 +415,12 @@ impl Session {
             self.trace.push(line);
         }
         self.state = result.best_state;
+        if let Some(spec) = &mut self.pipeline {
+            if spec.cuts != result.best_cuts {
+                self.trace.push(format!("search: stage cuts refined to {:?}", result.best_cuts));
+                spec.cuts = result.best_cuts;
+            }
+        }
         self.program.apply_into(&self.state, &mut self.dm, &mut self.stats);
         self.trace.push(format!(
             "search: {budget} episodes over {} targets, best at episode {}",
@@ -388,7 +448,13 @@ impl Session {
     }
 
     fn apply_lower(&mut self) {
-        let eval = evaluate(&self.program, &self.dm, &self.device, &self.weights);
+        let eval = evaluate_pipelined(
+            &self.program,
+            &self.dm,
+            &self.device,
+            &self.weights,
+            self.pipeline.as_ref(),
+        );
         self.trace.push(format!(
             "lower: {} all-reduces + {} all-gathers ({} moved), peak {} (fits={})",
             eval.collectives.all_reduce_count,
@@ -397,6 +463,17 @@ impl Session {
             fmt_bytes(eval.memory.peak_bytes as f64),
             eval.fits_memory
         ));
+        if let Some(pe) = &eval.pipeline {
+            self.trace.push(format!(
+                "lower: 1F1B {}x{} bubble {:.1}%, {} sends ({}), stage peak {}",
+                pe.stages,
+                pe.microbatches,
+                pe.bubble_fraction * 100.0,
+                eval.collectives.send_count,
+                fmt_bytes(eval.collectives.send_bytes as f64),
+                fmt_bytes(pe.max_stage_peak_bytes as f64)
+            ));
+        }
         self.last_eval = Some(eval);
     }
 
@@ -404,7 +481,13 @@ impl Session {
     fn plan(&mut self, wall_seconds: f64) -> PartitionPlan {
         let eval = match self.last_eval.clone() {
             Some(e) => e,
-            None => evaluate(&self.program, &self.dm, &self.device, &self.weights),
+            None => evaluate_pipelined(
+                &self.program,
+                &self.dm,
+                &self.device,
+                &self.weights,
+                self.pipeline.as_ref(),
+            ),
         };
         let f = &self.program.func;
         let mesh = &self.program.mesh;
@@ -506,7 +589,7 @@ mod tests {
     #[test]
     fn pipeline_produces_serialisable_plan() {
         let mut s = batch_model_session();
-        let plan = s.run(&Tactic::default_pipeline(100, 3)).unwrap();
+        let plan = s.run(&Tactic::default_stack(100, 3)).unwrap();
         let j = plan.to_json();
         let back =
             PartitionPlan::from_json(&crate::util::json::parse(&j.pretty()).unwrap()).unwrap();
@@ -536,6 +619,29 @@ mod tests {
         // Parse errors surface with positions.
         let err = Session::from_text("func nope", Mesh::new(&[("m", 2)])).unwrap_err();
         assert!(err.to_string().contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn pipeline_tactic_seeds_cuts_and_prices_the_schedule() {
+        let m = build_mlp(&MlpConfig::small());
+        let mut s = Session::new(m.func, Mesh::new(&[("pipe", 2), ("model", 4)]));
+        let plan = s
+            .run(&[Tactic::pipeline("pipe", 2), Tactic::InferRest, Tactic::Lower])
+            .unwrap();
+        let spec = s.pipeline_spec().expect("pipeline tactic must persist");
+        assert_eq!(spec.stages(), 2);
+        assert_eq!(spec.microbatches, 4);
+        assert!(!s.mesh().axes[0].searchable, "stage axis is excluded from SPMD search");
+        let pe = plan.eval.pipeline.as_ref().expect("plan eval carries pipeline terms");
+        assert_eq!((pe.stages, pe.microbatches), (2, 4));
+        assert!(pe.makespan_seconds > 0.0);
+        assert!(plan.eval.collectives.send_count > 0, "stage boundary must move activations");
+        assert!(plan.trace.iter().any(|t| t.starts_with("pipeline:")), "{:?}", plan.trace);
+        // Unknown axis or impossible stage counts fail loudly.
+        s.reset();
+        assert!(s.pipeline_spec().is_none(), "reset clears the pipeline");
+        assert!(s.run(&[Tactic::pipeline("nope", 2)]).is_err());
+        assert!(s.run(&[Tactic::pipeline("pipe", 10_000)]).is_err());
     }
 
     #[test]

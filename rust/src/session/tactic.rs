@@ -64,6 +64,11 @@ pub enum Tactic {
     /// MCTS over the (possibly filtered) worklist, seeded with every
     /// decision taken so far.
     Search { budget: usize, seed: u64, mcts: MctsConfig },
+    /// Cut the program into `stages` contiguous intervals over mesh axis
+    /// `axis` and price execution through the 1F1B schedule simulator
+    /// (DESIGN.md §11). Seeds balanced cuts; a later `Search` tactic
+    /// refines them with cut-move actions alongside tile actions.
+    Pipeline { axis: String, stages: usize, microbatches: usize },
     /// Infer tilings of the remaining values from the decided ones.
     InferRest,
     /// Lower to SPMD and record the cost evaluation + collective summary.
@@ -97,15 +102,29 @@ impl Tactic {
         Tactic::Search { budget, seed, mcts: MctsConfig::default() }
     }
 
-    /// The standard pipeline: heuristic filter → search → infer-rest →
-    /// lower. Prepend a `Manual` tactic to constrain it.
-    pub fn default_pipeline(budget: usize, seed: u64) -> Vec<Tactic> {
+    /// `Pipeline` with the common 1F1B microbatch default (`2 * stages`).
+    pub fn pipeline(axis: &str, stages: usize) -> Tactic {
+        Tactic::Pipeline { axis: axis.to_string(), stages, microbatches: 2 * stages }
+    }
+
+    /// The standard tactic stack: heuristic filter → search → infer-rest
+    /// → lower. Prepend a `Manual` tactic to constrain it.
+    ///
+    /// (Renamed from `default_pipeline` — "pipeline" now means the
+    /// inter-op parallelism tactic, not the tactic sequence.)
+    pub fn default_stack(budget: usize, seed: u64) -> Vec<Tactic> {
         vec![
             Tactic::filter(RankerSpec::Heuristic),
             Tactic::search(budget, seed),
             Tactic::InferRest,
             Tactic::Lower,
         ]
+    }
+
+    /// Deprecated alias of [`Tactic::default_stack`].
+    #[deprecated(note = "renamed to `default_stack`; `Pipeline` is now a tactic")]
+    pub fn default_pipeline(budget: usize, seed: u64) -> Vec<Tactic> {
+        Tactic::default_stack(budget, seed)
     }
 }
 
@@ -133,6 +152,18 @@ mod tests {
             }
             _ => panic!("wrong tactic"),
         }
+        assert_eq!(Tactic::default_stack(10, 0).len(), 4);
+        match Tactic::pipeline("pipe", 4) {
+            Tactic::Pipeline { axis, stages, microbatches } => {
+                assert_eq!((axis.as_str(), stages, microbatches), ("pipe", 4, 8));
+            }
+            _ => panic!("wrong tactic"),
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn default_pipeline_alias_still_builds_the_stack() {
         assert_eq!(Tactic::default_pipeline(10, 0).len(), 4);
     }
 }

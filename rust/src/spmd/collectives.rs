@@ -12,6 +12,11 @@ pub enum CollectiveKind {
     AllReduce,
     /// Replicate a tiled value across an axis (distribution mismatch).
     AllGather,
+    /// Point-to-point send of a value to the next pipeline stage
+    /// (DESIGN.md §11); priced `α + bytes/bw`, no ring factor.
+    Send,
+    /// Point-to-point receive from the previous pipeline stage.
+    Recv,
 }
 
 /// One collective in the lowered SPMD program.
@@ -32,6 +37,10 @@ pub struct CollectiveStats {
     pub all_reduce_bytes: i64,
     pub all_gather_count: usize,
     pub all_gather_bytes: i64,
+    pub send_count: usize,
+    pub send_bytes: i64,
+    pub recv_count: usize,
+    pub recv_bytes: i64,
 }
 
 impl CollectiveStats {
@@ -58,29 +67,44 @@ impl CollectiveStats {
                 self.all_gather_count += 1;
                 self.all_gather_bytes += bytes;
             }
+            CollectiveKind::Send => {
+                self.send_count += 1;
+                self.send_bytes += bytes;
+            }
+            CollectiveKind::Recv => {
+                self.recv_count += 1;
+                self.recv_bytes += bytes;
+            }
         }
     }
 
     pub fn total_count(&self) -> usize {
-        self.all_reduce_count + self.all_gather_count
+        self.all_reduce_count + self.all_gather_count + self.send_count + self.recv_count
     }
     pub fn total_bytes(&self) -> i64 {
-        self.all_reduce_bytes + self.all_gather_bytes
+        self.all_reduce_bytes + self.all_gather_bytes + self.send_bytes + self.recv_bytes
     }
 }
 
-/// α-β ring cost of one collective on `mesh` (seconds).
+/// α-β cost of one collective on `mesh` (seconds). Ring formulas for
+/// the axis-wide collectives; point-to-point `α + bytes/bw` for
+/// send/recv (one hop, independent of the axis size — the axis only
+/// records which mesh dimension the stages are laid out over).
 pub fn collective_seconds(c: &Collective, mesh: &Mesh, link_bw: f64, alpha: f64) -> f64 {
+    let bytes = c.bytes as f64;
+    if matches!(c.kind, CollectiveKind::Send | CollectiveKind::Recv) {
+        return alpha + bytes / link_bw;
+    }
     let n = mesh.size(c.axis) as f64;
     if n <= 1.0 {
         return 0.0;
     }
-    let bytes = c.bytes as f64;
     match c.kind {
         // ring all-reduce: 2(n-1)/n * payload over the link + latency hops
         CollectiveKind::AllReduce => 2.0 * (n - 1.0) / n * bytes / link_bw + (n - 1.0) * alpha,
         // ring all-gather: (n-1)/n * full payload
         CollectiveKind::AllGather => (n - 1.0) / n * bytes / link_bw + (n - 1.0) * alpha,
+        CollectiveKind::Send | CollectiveKind::Recv => unreachable!("handled above"),
     }
 }
 
@@ -118,5 +142,25 @@ mod tests {
         let mesh1 = Mesh::new(&[("m", 1)]);
         let c1 = Collective { axis: AxisId(0), ..c };
         assert_eq!(collective_seconds(&c1, &mesh1, 70e9, 1e-6), 0.0);
+    }
+
+    #[test]
+    fn send_recv_are_point_to_point() {
+        let mesh = Mesh::new(&[("pipe", 4)]);
+        for kind in [CollectiveKind::Send, CollectiveKind::Recv] {
+            let c = Collective { kind, axis: AxisId(0), node: 0, bytes: 70_000 };
+            let t = collective_seconds(&c, &mesh, 70e9, 1e-6);
+            // α + bytes/bw, no (n-1) ring factor.
+            assert!((t - (1e-6 + 70_000.0 / 70e9)).abs() < 1e-15, "{t}");
+            // Point-to-point cost does not vanish on a size-1 axis.
+            let mesh1 = Mesh::new(&[("pipe", 1)]);
+            assert!(collective_seconds(&c, &mesh1, 70e9, 1e-6) > 0.0);
+        }
+        let mut s = CollectiveStats::default();
+        s.add(CollectiveKind::Send, 128);
+        s.add(CollectiveKind::Recv, 128);
+        assert_eq!((s.send_count, s.send_bytes, s.recv_count, s.recv_bytes), (1, 128, 1, 128));
+        assert_eq!(s.total_count(), 2);
+        assert_eq!(s.total_bytes(), 256);
     }
 }

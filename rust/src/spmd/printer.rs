@@ -33,6 +33,8 @@ pub fn print_spmd(p: &SpmdProgram) -> String {
             let kind = match c.kind {
                 CollectiveKind::AllReduce => "spmd.all_reduce",
                 CollectiveKind::AllGather => "spmd.all_gather",
+                CollectiveKind::Send => "spmd.send",
+                CollectiveKind::Recv => "spmd.recv",
             };
             writeln!(
                 s,

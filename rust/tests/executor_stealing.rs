@@ -53,6 +53,57 @@ fn byte_identical_plans_across_runs_for_k1_and_k4() {
 }
 
 #[test]
+fn pipelined_plans_are_byte_identical_across_runs_for_k1_and_k4() {
+    // The acceptance bar for composing the pipeline tactic with the
+    // work-stealing executor: a fixed (seed, K) reproduces the SAME
+    // pipelined plan JSON — stage cuts, bubble fraction, send/recv
+    // stats and all — run after run.
+    let pipelined = |workers: usize| PlanJob {
+        func: build_mlp(&MlpConfig::small()).func,
+        mesh: Mesh::new(&[("pipe", 2), ("batch", 2), ("model", 4)]),
+        device: Device::tpu_v3(),
+        weights: CostWeights::default(),
+        options: SearchOptions::default(),
+        pre_tactics: vec![
+            Tactic::Manual {
+                constraints: vec![ShardingConstraint::new("x", 0, "batch")],
+                manual_axes: vec!["batch".to_string()],
+            },
+            Tactic::Pipeline { axis: "pipe".to_string(), stages: 2, microbatches: 4 },
+        ],
+        budget: 120,
+        seed: 17,
+        workers,
+        mcts: MctsConfig::default(),
+    };
+    for k in [1usize, 4] {
+        let j = pipelined(k);
+        let a = j.run().unwrap();
+        let b = j.run().unwrap();
+        let a_json = a.plan.to_json().to_string();
+        assert_eq!(
+            a_json,
+            b.plan.to_json().to_string(),
+            "K={k}: pipelined plan JSON must be byte-identical across runs"
+        );
+        assert_eq!(a.winner, b.winner, "K={k}");
+        assert_eq!(a.worker_costs, b.worker_costs, "K={k}");
+        assert_eq!(a.worker_episodes, b.worker_episodes, "K={k}");
+        // The plan is actually pipelined: schedule terms present and
+        // point-to-point transfers priced.
+        let pe = a.plan.eval.pipeline.as_ref().expect("plan carries PipelineEval");
+        assert_eq!((pe.stages, pe.microbatches), (2, 4), "K={k}");
+        assert!(pe.bubble_fraction > 0.0, "K={k}: warm-up/drain bubble");
+        assert!(a.plan.eval.collectives.send_count > 0, "K={k}");
+        assert_eq!(
+            a.plan.eval.collectives.send_count, a.plan.eval.collectives.recv_count,
+            "K={k}: every send pairs with a recv"
+        );
+        assert!(a_json.contains("\"pipeline\""), "K={k}: plan JSON carries the pipeline object");
+    }
+}
+
+#[test]
 fn stalled_trees_forfeit_budget_to_the_leader() {
     // A program whose dims (7, 5) are indivisible by every mesh-axis
     // size offers NO legal tile actions: every tree's root has exactly

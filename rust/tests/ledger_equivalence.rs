@@ -14,6 +14,7 @@ use automap::cost::composite::{CostLedger, CostWeights};
 use automap::ir::parse_func;
 use automap::partir::mesh::Mesh;
 use automap::partir::program::PartirProgram;
+use automap::pipeline::{balanced_cuts, PipelineSpec};
 use automap::search::env::{EnvAction, RewriteEnv, SearchOptions};
 use automap::search::mcts::{search, MctsConfig};
 use automap::sim::device::Device;
@@ -113,6 +114,63 @@ fn randomized_ledger_vs_full_evaluate_over_corpus_and_models() {
         }
     }
     assert!(checked > 50, "wall must exercise plenty of evaluations: {checked}");
+}
+
+#[test]
+fn pipelined_ledger_vs_full_evaluate_stays_bit_identical() {
+    // Same wall as above, but with a 2-stage pipeline context: ledger
+    // answers must stay bit-identical when the schedule simulator and
+    // send/recv terms sit on top of the per-node terms, and cut moves
+    // must be part of the randomized action stream.
+    let mut checked = 0usize;
+    for (name, program) in wall_programs() {
+        let wl = RewriteEnv::default_worklist(&program);
+        if wl.is_empty() || program.func.num_nodes() < 2 {
+            continue;
+        }
+        let mut env = RewriteEnv::new(
+            &program,
+            Device::tpu_v3(),
+            CostWeights::default(),
+            SearchOptions { cross_layer_tying: false, ..Default::default() },
+            &wl,
+        );
+        env.set_pipeline(PipelineSpec {
+            axis: 0,
+            microbatches: 4,
+            cuts: balanced_cuts(&program.func, 2),
+        });
+        let env = env;
+        let mut rng = Rng::new(0xF1F1 + wl.len() as u64);
+        for _attempt in 0..4 {
+            let mut ep = env.reset();
+            for _ in 0..6 {
+                let acts = env.legal_actions(&ep);
+                if acts.is_empty() {
+                    break;
+                }
+                let a = *rng.choose(&acts);
+                env.step(&mut ep, a);
+                let inc = env.evaluate_episode_ledger(&mut ep);
+                let full = env.evaluate_episode(&ep);
+                assert_bit_identical(&name, &inc, &full);
+                let pe = inc.pipeline.as_ref().unwrap_or_else(|| {
+                    panic!("{name}: pipelined evaluation must carry PipelineEval")
+                });
+                assert_eq!(pe.stages, 2, "{name}");
+                assert_eq!(
+                    pe.bubble_fraction.to_bits(),
+                    full.pipeline.as_ref().unwrap().bubble_fraction.to_bits(),
+                    "{name}: bubble fraction must match to the bit"
+                );
+                checked += 1;
+                if ep.done {
+                    break;
+                }
+            }
+        }
+    }
+    assert!(checked > 30, "pipelined wall must exercise plenty of evaluations: {checked}");
 }
 
 #[test]

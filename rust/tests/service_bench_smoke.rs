@@ -54,6 +54,9 @@ fn throughput_smoke_scales_and_writes_bench_json() {
     assert!(report.eval_full_median_ns > 0.0);
     assert!(report.eval_ledger_speedup > 0.0);
     assert!(report.single_evals_per_sec > 0.0);
+    // The 1F1B schedule simulator is measured too (pipeline subsystem,
+    // DESIGN.md §11) — it sits on the pipelined evaluation hot path.
+    assert!(report.schedule_sim_median_ns > 0.0);
     assert!((0.0..=1.0).contains(&report.eval_memo_hit_rate));
     assert!((0.0..=1.0).contains(&report.ledger_reuse_rate));
     assert!(report.rounds >= 1, "the multi-worker run must report its round schedule");
@@ -71,6 +74,7 @@ fn throughput_smoke_scales_and_writes_bench_json() {
     assert!(j.get("eval_full_median_ns").unwrap().as_f64().unwrap() > 0.0);
     assert!(j.get("eval_ledger_speedup").unwrap().as_f64().unwrap() > 0.0);
     assert!(j.get("single_evals_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j.get("schedule_sim_median_ns").unwrap().as_f64().unwrap() > 0.0);
     assert!(j.get("ledger_reuse_rate").is_some());
     // configs/perf_floor.json is committed, so the report must carry the
     // pre-overhaul baseline alongside the current number.

@@ -1,0 +1,138 @@
+//! Golden acceptance tests for the pipeline-parallelism subsystem
+//! (DESIGN.md §11): the `Pipeline` tactic composed with `Search` must
+//! recover a legal 4-stage 1F1B cut with Megatron-style intra-stage
+//! sharding on the built-in transformer, the 1F1B simulator must match
+//! the closed-form bubble on uniform stages, and pipelined plans must
+//! serialise, round-trip, and reproduce byte-identically for a fixed
+//! seed.
+
+use automap::cost::composite::{evaluate_pipelined, CostWeights};
+use automap::models::transformer::{build_transformer, TransformerConfig};
+use automap::partir::dist::DistMap;
+use automap::partir::mesh::Mesh;
+use automap::partir::program::PartirProgram;
+use automap::pipeline::{balanced_cuts, simulate_1f1b, PipelineSpec};
+use automap::search::env::SearchOptions;
+use automap::session::{PartitionPlan, Session, Tactic};
+use automap::sim::device::Device;
+
+#[test]
+fn uniform_stage_bubble_matches_the_closed_form() {
+    // For K uniform stages and M microbatches with free transfers, the
+    // 1F1B bubble fraction is exactly (K-1)/(M+K-1).
+    for (k, m) in [(2usize, 4usize), (4, 8), (4, 12), (8, 8), (3, 1)] {
+        let stage = vec![1e-3; k];
+        let xfer = vec![0.0; k - 1];
+        let r = simulate_1f1b(&stage, &xfer, m);
+        let expect = (k - 1) as f64 / (m + k - 1) as f64;
+        assert!(
+            (r.bubble_fraction - expect).abs() < 1e-12,
+            "K={k} M={m}: bubble {} != closed form {expect}",
+            r.bubble_fraction
+        );
+        assert!(r.makespan_seconds > 0.0);
+    }
+}
+
+/// Run the full tactic stack with a 4-stage pipeline on the tiny
+/// transformer under memory pressure; returns the plan.
+fn pipelined_transformer_plan(budget: usize, seed: u64) -> PartitionPlan {
+    let model = build_transformer(&TransformerConfig::tiny(2));
+    let mesh = Mesh::new(&[("pipe", 4), ("model", 4)]);
+    let w = CostWeights::default();
+
+    // Memory pressure relative to the replicated-but-pipelined
+    // baseline: the per-stage peak of the seed cut must overflow, so
+    // the search has to shard weights on the model axis to fit.
+    let program = PartirProgram::new(model.func.clone(), mesh.clone());
+    let dm0 = DistMap::new(&program.func, &program.mesh);
+    let spec = PipelineSpec {
+        axis: 0,
+        microbatches: 8,
+        cuts: balanced_cuts(&program.func, 4),
+    };
+    let probe = evaluate_pipelined(&program, &dm0, &Device::tpu_v3(), &w, Some(&spec));
+    let stage_peak = probe.pipeline.as_ref().expect("probe is pipelined").max_stage_peak_bytes;
+    let device = Device { hbm_bytes: (stage_peak as f64 * 0.7) as i64, ..Device::tpu_v3() };
+
+    let mut session = Session::with_options(
+        model.func.clone(),
+        mesh,
+        device,
+        w,
+        SearchOptions::default(),
+    );
+    let mut tactics = vec![Tactic::pipeline("pipe", 4)];
+    tactics.extend(Tactic::default_stack(budget, seed));
+    session.run(&tactics).expect("pipelined tactic stack")
+}
+
+#[test]
+fn pipeline_tactic_recovers_four_balanced_stages_with_megatron_inside() {
+    let plan = pipelined_transformer_plan(1500, 3);
+    let pe = plan.eval.pipeline.as_ref().expect("plan must carry PipelineEval");
+
+    // A legal 4-stage cut: three strictly increasing boundaries, every
+    // stage non-empty, priced through the 1F1B simulator.
+    assert_eq!(pe.stages, 4);
+    assert_eq!(pe.microbatches, 8);
+    assert_eq!(pe.cuts.len(), 3);
+    assert!(pe.cuts.windows(2).all(|w| w[0] < w[1]), "cuts must increase: {:?}", pe.cuts);
+    assert!(pe.cuts[0] > 0, "first stage must be non-empty");
+    assert!(pe.bubble_fraction > 0.0 && pe.bubble_fraction < 1.0, "{}", pe.bubble_fraction);
+    assert!(pe.makespan_seconds > 0.0);
+    assert!(pe.send_recv_seconds > 0.0, "stage boundaries must price transfers");
+    assert!(pe.max_stage_peak_bytes > 0);
+
+    // Nonzero point-to-point traffic, symmetric by construction.
+    let c = &plan.eval.collectives;
+    assert!(c.send_count > 0, "{c:?}");
+    assert_eq!(c.send_count, c.recv_count, "{c:?}");
+    assert_eq!(c.send_bytes, c.recv_bytes, "{c:?}");
+
+    // Megatron-style intra-stage sharding: under stage-peak memory
+    // pressure the search must tile layer weights on the model axis.
+    assert!(
+        plan.input_specs
+            .iter()
+            .filter(|s| s.name.contains("/w") || s.name.contains("/attn/"))
+            .any(|s| s.tiled_on("model")),
+        "expected model-axis shardings on layer weights: {:?}",
+        plan.input_specs.iter().filter(|s| !s.replicated()).collect::<Vec<_>>()
+    );
+    // The pipeline axis is reserved for stages, never for tiling.
+    assert!(
+        plan.input_specs.iter().all(|s| !s.tiled_on("pipe")),
+        "the pipeline axis must stay out of the tile search"
+    );
+
+    // The trace records the tactic and the schedule summary.
+    assert!(plan.trace.iter().any(|t| t.starts_with("pipeline:")), "{:?}", plan.trace);
+    assert!(plan.trace.iter().any(|t| t.contains("1F1B")), "{:?}", plan.trace);
+
+    // The plan serialises and round-trips through util::json with the
+    // pipeline object intact.
+    let text = plan.to_json().pretty();
+    let back = PartitionPlan::from_json(&automap::util::json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.eval.pipeline, plan.eval.pipeline);
+    assert_eq!(back.eval.collectives, plan.eval.collectives);
+    assert_eq!(back.input_specs, plan.input_specs);
+}
+
+#[test]
+fn pipelined_plans_reproduce_byte_identically_for_a_fixed_seed() {
+    let a = pipelined_transformer_plan(300, 11);
+    let b = pipelined_transformer_plan(300, 11);
+    let (mut ja, mut jb) = (a.to_json(), b.to_json());
+    // Wall time is the only legitimately nondeterministic field.
+    for j in [&mut ja, &mut jb] {
+        if let automap::util::json::Json::Obj(m) = j {
+            m.remove("wall_seconds");
+        }
+    }
+    assert_eq!(
+        ja.to_string(),
+        jb.to_string(),
+        "fixed (seed, K) must reproduce the pipelined plan byte-identically"
+    );
+}
