@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Metrics-snapshot schema gate (CI batch-smoke step).
+
+Diffs a ``--metrics-out`` snapshot (from ``automap batch ... --metrics-out``
+or ``serve``) against the committed key sets in
+``configs/metrics_schema.json``:
+
+* every counter / gauge / histogram name in the schema must be present
+  in the snapshot (``register_service_metrics`` pre-registers them all,
+  so a missing key means the registration list regressed);
+* the snapshot must not carry names absent from the schema (a new
+  metric landed in rust/src/obs/metrics.rs without updating the schema
+  — dashboards keyed off the schema would silently miss it);
+* every histogram must carry the full field set
+  (count/sum/min/max/mean/p50/p90/p99);
+* the snapshot's ``requests`` telemetry section must be a list whose
+  entries carry id / fingerprint / latency_ms / timeline.
+
+Usage: python3 python/check_metrics_schema.py snapshot.json [schema.json]
+"""
+
+import json
+import sys
+
+
+def diff(kind, got, want, errors):
+    got, want = set(got), set(want)
+    for name in sorted(want - got):
+        errors.append(f"{kind}: '{name}' required by the schema but missing from the snapshot")
+    for name in sorted(got - want):
+        errors.append(f"{kind}: '{name}' in the snapshot but not in configs/metrics_schema.json")
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print("usage: check_metrics_schema.py snapshot.json [schema.json]")
+        return 2
+    snap = json.load(open(sys.argv[1]))
+    schema_path = sys.argv[2] if len(sys.argv) > 2 else "configs/metrics_schema.json"
+    schema = json.load(open(schema_path))
+
+    errors = []
+    for kind in ("counters", "gauges", "histograms"):
+        section = snap.get(kind)
+        if not isinstance(section, dict):
+            errors.append(f"{kind}: section missing from the snapshot")
+            continue
+        diff(kind, section.keys(), schema[kind], errors)
+
+    hist_fields = set(schema["histogram_fields"])
+    for name, h in (snap.get("histograms") or {}).items():
+        if not isinstance(h, dict) or set(h.keys()) != hist_fields:
+            got = sorted(h.keys()) if isinstance(h, dict) else type(h).__name__
+            errors.append(f"histogram '{name}': fields {got}, wanted {sorted(hist_fields)}")
+
+    requests = snap.get("requests")
+    if not isinstance(requests, list):
+        errors.append("requests: per-request telemetry section missing or not a list")
+    else:
+        for i, r in enumerate(requests):
+            missing = [k for k in ("id", "fingerprint", "latency_ms", "timeline") if k not in r]
+            if missing:
+                errors.append(f"requests[{i}]: missing fields {missing}")
+
+    if errors:
+        for e in errors:
+            print(f"::error title=metrics schema::{e}")
+        return 1
+    n_req = len(requests) if isinstance(requests, list) else 0
+    print(
+        f"metrics schema: ok — {len(snap.get('counters', {}))} counters, "
+        f"{len(snap.get('gauges', {}))} gauges, {len(snap.get('histograms', {}))} histograms, "
+        f"{n_req} request timelines"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

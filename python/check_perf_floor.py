@@ -18,11 +18,65 @@ quadratic sweep, a lost cache), not 10% wobble. Debug-build reports
 ledger evaluation against the full pipeline, which makes their timings
 incomparable by construction; the breach is reported as a warning only.
 
+Beyond the floors, the report must be *schema-valid and real*: every
+required key present with the right type, and the provenance field must
+not carry the committed "SEED VALUES, UNMEASURED" placeholder — a
+release gate that passes on numbers nobody measured is worse than no
+gate at all.
+
 Usage: python3 python/check_perf_floor.py [bench_json] [floor_json]
 """
 
 import json
 import sys
+
+# Full BENCH_search.json schema: key -> required type. The bench writer
+# (rust/src/service/throughput.rs ThroughputReport::to_json) and this
+# list must move together.
+REQUIRED_KEYS = {
+    "bench": str,
+    "budget_per_worker": (int, float),
+    "workers": (int, float),
+    "single_episodes_per_sec": (int, float),
+    "multi_episodes_per_sec": (int, float),
+    "speedup": (int, float),
+    "single_evals_per_sec": (int, float),
+    "multi_evals_per_sec": (int, float),
+    "cache_hit_median_ns": (int, float),
+    "cache_probes": (int, float),
+    "step_median_ns": (int, float),
+    "eval_median_ns": (int, float),
+    "eval_full_median_ns": (int, float),
+    "eval_ledger_speedup": (int, float),
+    "eval_memo_hit_rate": (int, float),
+    "ledger_reuse_rate": (int, float),
+    "schedule_sim_median_ns": (int, float),
+    "rounds": (int, float),
+    "steals": (int, float),
+    "debug_build": bool,
+    "provenance": str,
+}
+
+PLACEHOLDER_MARKER = "SEED VALUES, UNMEASURED"
+
+
+def check_schema(bench, breaches):
+    """Validate presence + type of every required key; return ok."""
+    ok = True
+    for key, want in REQUIRED_KEYS.items():
+        got = bench.get(key)
+        if got is None:
+            breaches.append(f"schema: required key '{key}' missing from report")
+            ok = False
+        elif not isinstance(got, want) or isinstance(got, bool) != (want is bool):
+            breaches.append(
+                f"schema: key '{key}' has type {type(got).__name__}, "
+                f"wanted {want.__name__ if isinstance(want, type) else 'number'}"
+            )
+            ok = False
+    if ok:
+        print(f"perf floor: schema ok ({len(REQUIRED_KEYS)} required keys present)")
+    return ok
 
 
 def main() -> int:
@@ -33,6 +87,16 @@ def main() -> int:
 
     advisory = bool(bench.get("debug_build", False))
     breaches = []
+
+    check_schema(bench, breaches)
+    provenance = bench.get("provenance", "")
+    if isinstance(provenance, str) and PLACEHOLDER_MARKER in provenance:
+        breaches.append(
+            f"provenance carries the '{PLACEHOLDER_MARKER}' placeholder — the bench "
+            "did not actually run; a release gate must never pass on seed numbers"
+        )
+    elif provenance:
+        print(f"perf floor: provenance: {provenance}")
 
     def above(metric, floor_key):
         got = bench.get(metric)

@@ -8,6 +8,7 @@
 
 use super::liveness::{LivenessTimeline, MemoryEstimate};
 use crate::ir::ArgKind;
+use crate::obs::recorder::recorder;
 use crate::partir::dist::DistMap;
 use crate::partir::program::PartirProgram;
 use crate::partir::propagate::PropStats;
@@ -223,9 +224,68 @@ fn pipeline_terms(
 ) -> PipelineEval {
     let k = spec.stages();
     let m = spec.microbatches.max(1);
+    let prof = stage_profile(p, dm, dev, terms, coll, spec);
+    // Stats record each hop's send/recv pair: M ops per side, the full
+    // local bytes crossing in total (integer adds, so folding them after
+    // the profile loop is exact).
+    for &(_, bytes) in &prof.transfers {
+        collectives.send_count += m;
+        collectives.send_bytes += bytes;
+        collectives.recv_count += m;
+        collectives.recv_bytes += bytes;
+    }
+    let sched = simulate_1f1b(&prof.stage_seconds, &prof.xfer, m);
+    // Per-stage liveness ceiling (integer arithmetic, order-free).
+    let mut max_stage_peak = 0i64;
+    for s in 0..k {
+        let inflight = m.min(k - s) as i64;
+        let peak = prof.weight_bytes[s] + inflight * (prof.act_bytes[s] / m as i64);
+        max_stage_peak = max_stage_peak.max(peak);
+    }
+    PipelineEval {
+        stages: k,
+        microbatches: m,
+        cuts: spec.cuts.clone(),
+        bubble_fraction: sched.bubble_fraction,
+        makespan_seconds: sched.makespan_seconds,
+        send_recv_seconds: prof.send_recv_seconds,
+        max_stage_peak_bytes: max_stage_peak,
+    }
+}
+
+/// Per-stage accumulation for one pipeline spec, computed from the
+/// per-node tables. The ONE accumulation behind [`pipeline_terms`] and
+/// [`stage_timeline`], so the traced schedule cannot drift from the
+/// priced one.
+struct StageProfile {
+    /// Busy seconds per stage for the FULL batch, nodes ascending (the
+    /// deterministic accumulation order of the contract).
+    stage_seconds: Vec<f64>,
+    /// Full-batch activation bytes resident per stage.
+    act_bytes: Vec<i64>,
+    /// Parameter / optimiser-state bytes per stage (placed at the
+    /// argument's first consumer, which holds them all schedule long).
+    weight_bytes: Vec<i64>,
+    /// Per-microbatch boundary transfer seconds (`len = stages - 1`).
+    xfer: Vec<f64>,
+    /// Total send/recv seconds across all hops and microbatches.
+    send_recv_seconds: f64,
+    /// `(boundary, full local bytes)` per cross-stage hop, for the
+    /// caller's collective-stats folding.
+    transfers: Vec<(usize, i64)>,
+}
+
+fn stage_profile(
+    p: &PartirProgram,
+    dm: &DistMap,
+    dev: &Device,
+    terms: &[NodeTerm],
+    coll: &[Vec<CollectiveTerm>],
+    spec: &PipelineSpec,
+) -> StageProfile {
+    let k = spec.stages();
+    let m = spec.microbatches.max(1);
     let num_args = p.func.num_args();
-    // Per-stage busy seconds and full-batch activation bytes, nodes
-    // ascending (the deterministic accumulation order of the contract).
     let mut stage_seconds = vec![0.0f64; k];
     let mut act_bytes = vec![0i64; k];
     for (ni, t) in terms.iter().enumerate() {
@@ -238,8 +298,6 @@ fn pipeline_terms(
         let out_v = num_args + ni;
         act_bytes[s] += dm.local_bytes(out_v, p.prop.global_bytes[out_v], &p.mesh);
     }
-    // Parameter / optimiser-state residency: bytes land on the stage of
-    // the argument's first consumer, which holds them all schedule long.
     let mut weight_bytes = vec![0i64; k];
     let mut placed = vec![false; num_args];
     for (ni, node) in p.func.nodes.iter().enumerate() {
@@ -254,38 +312,45 @@ fn pipeline_terms(
             }
         }
     }
-    // Cross-stage hops: M microbatched point-to-point transfers each.
-    // Stats record the send/recv pair (M ops per side, full local bytes
-    // crossing in total); the schedule sees the per-microbatch seconds.
+    // Cross-stage hops: M microbatched point-to-point transfers each;
+    // the schedule sees the per-microbatch seconds.
     let mut xfer = vec![0.0f64; k.saturating_sub(1)];
     let mut send_recv_seconds = 0.0f64;
+    let mut transfers = Vec::new();
     for t in boundary_transfers(&p.func, spec) {
         let bytes = dm.local_bytes(t.value, p.prop.global_bytes[t.value], &p.mesh);
         let per_mb = dev.alpha + (bytes as f64 / m as f64) / dev.ici_bw;
         xfer[t.boundary] += per_mb;
         send_recv_seconds += m as f64 * per_mb;
-        collectives.send_count += m;
-        collectives.send_bytes += bytes;
-        collectives.recv_count += m;
-        collectives.recv_bytes += bytes;
+        transfers.push((t.boundary, bytes));
     }
-    let sched = simulate_1f1b(&stage_seconds, &xfer, m);
-    // Per-stage liveness ceiling (integer arithmetic, order-free).
-    let mut max_stage_peak = 0i64;
-    for s in 0..k {
-        let inflight = m.min(k - s) as i64;
-        let peak = weight_bytes[s] + inflight * (act_bytes[s] / m as i64);
-        max_stage_peak = max_stage_peak.max(peak);
+    StageProfile { stage_seconds, act_bytes, weight_bytes, xfer, send_recv_seconds, transfers }
+}
+
+/// Tracing-only companion to [`evaluate_pipelined`]: the per-stage busy
+/// seconds and per-microbatch boundary transfer seconds the 1F1B
+/// simulator would run on for `(dm, spec)`. The executor calls this once
+/// per pipelined request — for the winning plan — to emit schedule
+/// slices into the flight recorder; it shares [`stage_profile`] and
+/// [`node_cost_terms`] with the pricing path, so the traced timeline is
+/// exactly the priced one.
+pub fn stage_timeline(
+    p: &PartirProgram,
+    dm: &DistMap,
+    dev: &Device,
+    spec: &PipelineSpec,
+) -> (Vec<f64>, Vec<f64>) {
+    let n = p.func.num_nodes();
+    let mut terms = vec![NodeTerm::default(); n];
+    let mut coll: Vec<Vec<CollectiveTerm>> = vec![Vec::new(); n];
+    let mut justified = Vec::new();
+    let mut lowered = Vec::new();
+    for ni in 0..n {
+        terms[ni] =
+            node_cost_terms(p, dm, dev, ni, &mut justified, &mut lowered, &mut coll[ni]);
     }
-    PipelineEval {
-        stages: k,
-        microbatches: m,
-        cuts: spec.cuts.clone(),
-        bubble_fraction: sched.bubble_fraction,
-        makespan_seconds: sched.makespan_seconds,
-        send_recv_seconds,
-        max_stage_peak_bytes: max_stage_peak,
-    }
+    let prof = stage_profile(p, dm, dev, &terms, &coll, spec);
+    (prof.stage_seconds, prof.xfer)
 }
 
 /// Per-node cost ledger: [`evaluate`] decomposed into per-node
@@ -408,6 +473,11 @@ impl CostLedger {
         pipe: Option<&PipelineSpec>,
     ) -> Evaluation {
         debug_assert_eq!(self.dm.d.len(), target.d.len(), "ledger bound to a different program");
+        // Flight-recorder gate: one relaxed atomic load when tracing is
+        // off; a timestamp read when on. The span itself is recorded in
+        // one shot at the end (`Complete`), when the reuse counts exist.
+        let rec = recorder();
+        let trace_start = if rec.enabled() { Some(rec.now_ns()) } else { None };
         self.refreshes += 1;
         self.changed.clear();
         for v in 0..self.dm.d.len() {
@@ -439,10 +509,21 @@ impl CostLedger {
             self.recompute_node(p, ni as usize);
             self.dirty_bits[ni as usize] = false;
         }
-        self.nodes_recomputed += dirty.len();
-        self.nodes_reused += p.func.num_nodes() - dirty.len();
+        let recomputed = dirty.len();
+        self.nodes_recomputed += recomputed;
+        self.nodes_reused += p.func.num_nodes() - recomputed;
         self.dirty = dirty;
         self.dirty.clear();
+        if let Some(start_ns) = trace_start {
+            let reused = (p.func.num_nodes() - recomputed) as i64;
+            rec.complete(
+                "ledger.refresh",
+                "ledger",
+                0,
+                start_ns,
+                &[("recomputed", recomputed as i64), ("reused", reused)],
+            );
+        }
         self.aggregate_with(p, pipe)
     }
 

@@ -20,6 +20,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod learner;
 pub mod models;
+pub mod obs;
 pub mod partir;
 pub mod pipeline;
 pub mod runtime;

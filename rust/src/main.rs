@@ -13,6 +13,8 @@
 //!   serve        read JSONL partition requests from stdin, answer on
 //!                stdout through the plan service (--stdin-jsonl)
 //!   batch        answer a JSONL request file through the plan service
+//!   explain      render a plan JSON (or a batch responses.jsonl) as a
+//!                human-readable partitioning narrative
 //!   fig6 / fig7 / fig8 / fig9   regenerate the paper's figures
 //!   all-figures  run every figure harness
 //!
@@ -21,12 +23,15 @@
 //! Partition flags: --pin axis[,axis]  --shard name:dim:axis[,...]
 //!                  --program file.pir
 //! Service flags:   --pool N --cache-mb N --out responses.jsonl
+//! Observability:   --trace out.json (Perfetto/chrome://tracing format)
+//!                  --metrics-out metrics.json (counter/histogram snapshot)
 
 use automap::coordinator::config as cfgfile;
 use automap::coordinator::figures::{self, FigureSetup};
 use automap::ir::{parse_func, print_func, Func};
 use automap::learner::ranker::TOP_K;
 use automap::models::transformer::TransformerConfig;
+use automap::obs::recorder::recorder;
 use automap::partir::mesh::Mesh;
 use automap::search::mcts::MctsConfig;
 use automap::service::{run_batch, serve_jsonl, PartitionRequest, PlanService, ServiceConfig};
@@ -36,7 +41,7 @@ use automap::util::cli::Args;
 const VALUE_FLAGS: &[&str] = &[
     "layers", "budgets", "attempts", "seed", "out", "out-dir", "count", "axis", "model",
     "budget", "filter", "ranker", "config", "d-model", "mesh", "pin", "shard", "pool",
-    "cache-mb", "program", "pipeline",
+    "cache-mb", "program", "pipeline", "trace", "metrics-out",
 ];
 const BOOL_FLAGS: &[&str] = &["paper", "grouping", "no-tying", "help", "stdin-jsonl"];
 
@@ -66,6 +71,7 @@ fn main() {
         "print" => cmd_print(&args),
         "serve" => cmd_serve(&args),
         "batch" => cmd_batch(&args),
+        "explain" => cmd_explain(&args),
         "fig6" | "fig7" => figure_cmd(&args, |s, d| figures::fig6_fig7(s, d).map(|_| ())),
         "fig8" => figure_cmd(&args, |s, d| figures::fig8(s, d).map(|_| ())),
         "fig9" => figure_cmd(&args, |s, d| figures::fig9(s, d).map(|_| ())),
@@ -89,7 +95,7 @@ fn main() {
 fn usage() {
     println!(
         "automap — reproduction of 'Automap: Towards Ergonomic Automated Parallelism'\n\
-         usage: automap <stats|gen-dataset|partition|parse|print|serve|batch|\n\
+         usage: automap <stats|gen-dataset|partition|parse|print|serve|batch|explain|\n\
                          fig6|fig7|fig8|fig9|all-figures> [flags]\n\
          flags: --layers N --budgets a,b,c --attempts N --seed S --paper\n\
                 --model mlp|transformer|graphnet --budget N --filter none|heuristic|learned\n\
@@ -108,8 +114,13 @@ fn usage() {
                 parse file.pir             parse + verify + round-trip check\n\
                 print --model mlp [--out f.pir]   emit a built-in model as text\n\
          plan service (one JSON request per line; see README 'Serving partition plans'):\n\
-                serve --stdin-jsonl [--pool N] [--cache-mb N]\n\
-                batch requests.jsonl [--pool N] [--cache-mb N] [--out responses.jsonl]"
+                serve --stdin-jsonl [--pool N] [--cache-mb N] [--metrics-out m.json]\n\
+                batch requests.jsonl [--pool N] [--cache-mb N] [--out responses.jsonl]\n\
+                      [--trace trace.json] [--metrics-out m.json]\n\
+         observability (DESIGN.md §12):\n\
+                partition ... --trace trace.json   record a Perfetto-loadable trace\n\
+                explain plan.json|responses.jsonl  narrate a plan: mesh, cost, shardings,\n\
+                                                   and the tactic timeline"
     );
 }
 
@@ -192,6 +203,38 @@ fn cmd_print(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `--trace out.json`: arm the global flight recorder before the work
+/// runs. Returns the output path so the caller can dump afterwards.
+fn arm_trace(args: &Args) -> Option<String> {
+    let path = args.get("trace")?.to_string();
+    recorder().clear();
+    recorder().enable();
+    Some(path)
+}
+
+/// Dump the recorded trace (chrome://tracing / Perfetto format) and
+/// disarm the recorder.
+fn write_trace(path: &str) -> anyhow::Result<()> {
+    recorder().disable();
+    std::fs::write(path, recorder().chrome_trace().to_string())?;
+    let dropped = recorder().dropped_events();
+    if dropped > 0 {
+        eprintln!("trace: ring buffers overflowed, {dropped} oldest events dropped");
+    }
+    println!("wrote trace {path}");
+    Ok(())
+}
+
+/// `--metrics-out m.json`: dump the process-wide metrics registry plus
+/// per-request telemetry (DESIGN.md §12).
+fn write_metrics(args: &Args) -> anyhow::Result<()> {
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(path, automap::obs::metrics_snapshot().pretty())?;
+        println!("wrote metrics {path}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if !args.get_bool("stdin-jsonl") {
         anyhow::bail!("serve reads JSONL requests from stdin; pass --stdin-jsonl to confirm");
@@ -205,6 +248,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let stdin = std::io::stdin();
     let summary = serve_jsonl(&svc, stdin.lock(), &stdout, pool)?;
     eprintln!("serve: {}", summary.describe());
+    write_metrics(args)?;
     Ok(())
 }
 
@@ -229,7 +273,12 @@ fn cmd_batch(args: &Args) -> anyhow::Result<()> {
         cache_bytes: args.get_usize("cache-mb", 64)? << 20,
         ..ServiceConfig::default()
     });
+    let trace = arm_trace(args);
     let (responses, summary) = run_batch(&svc, &requests, pool, 2 * pool.max(1));
+    if let Some(path) = &trace {
+        write_trace(path)?;
+    }
+    write_metrics(args)?;
     let mut out = String::new();
     for r in &responses {
         out.push_str(&r.to_json_line());
@@ -341,14 +390,70 @@ fn cmd_partition(args: &Args) -> anyhow::Result<()> {
     tactics.push(Tactic::InferRest);
     tactics.push(Tactic::Lower);
 
+    let trace = arm_trace(args);
     let mut session = Session::new(func, mesh);
     let plan = session.run(&tactics)?;
+    if let Some(path) = &trace {
+        write_trace(path)?;
+    }
     println!("{}", plan.to_json().pretty());
     if let Some(out) = args.get("out") {
         std::fs::write(out, plan.to_json().pretty())?;
         println!("wrote {out}");
     }
     Ok(())
+}
+
+/// `explain plan.json | responses.jsonl` — render the partitioning
+/// narrative (mesh, cost, shardings, tactic timeline) for a plan
+/// produced by `partition --out` or for each plan in a `batch --out`
+/// responses file.
+fn cmd_explain(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("explain needs a plan.json or responses.jsonl path"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    // A plan file is one (pretty-printed) JSON document; batch output is
+    // JSONL with one response per line. Try whole-file first.
+    if let Ok(doc) = automap::util::json::parse(&text) {
+        print!("{}", explain_doc(&doc).map_err(|e| anyhow::anyhow!("{path}: {e:#}"))?);
+        return Ok(());
+    }
+    let mut shown = 0usize;
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let doc = automap::util::json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{path}:{}: {e}", ln + 1))?;
+        if doc.get("plan").is_none() {
+            // Error responses carry no plan; note and move on.
+            if let Some(id) = doc.get("id").and_then(|j| j.as_str()) {
+                println!("== {id}: no plan (error response) ==\n");
+            }
+            continue;
+        }
+        if let Some(id) = doc.get("id").and_then(|j| j.as_str()) {
+            println!("== {id} ==");
+        }
+        print!("{}", explain_doc(&doc).map_err(|e| anyhow::anyhow!("{path}:{}: {e:#}", ln + 1))?);
+        println!();
+        shown += 1;
+    }
+    if shown == 0 {
+        anyhow::bail!("{path}: no plans found to explain");
+    }
+    Ok(())
+}
+
+/// Explain one JSON document: either a bare `PartitionPlan` or a plan
+/// service response wrapping one under a `plan` key.
+fn explain_doc(doc: &automap::util::json::Json) -> anyhow::Result<String> {
+    let plan_json = doc.get("plan").unwrap_or(doc);
+    let plan = automap::session::PartitionPlan::from_json(plan_json)?;
+    Ok(automap::obs::explain_plan(&plan))
 }
 
 fn figure_cmd(

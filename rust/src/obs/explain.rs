@@ -1,0 +1,116 @@
+//! `explain`: replay a partition plan's decision trace as a human-readable
+//! tactic/decision timeline (the CLI front-end for the PartIR-style
+//! trace-of-tactics abstraction — see PAPER.md and DESIGN.md §12).
+
+use crate::session::plan::PartitionPlan;
+use crate::util::stats::{fmt_bytes, fmt_secs};
+
+/// Render a plan (typically loaded back from the cache or a `partition`
+/// JSON dump) into an indented decision timeline with a cost summary.
+pub fn explain_plan(plan: &PartitionPlan) -> String {
+    let mut out = String::new();
+    let mesh: Vec<String> =
+        plan.mesh_axes.iter().map(|(name, size)| format!("{name}={size}")).collect();
+    out.push_str(&format!("plan over mesh [{}]\n", mesh.join(", ")));
+    out.push_str(&format!(
+        "  cost {:.3e}  ({} compute, {} collectives, peak {} {})\n",
+        plan.eval.cost,
+        fmt_secs(plan.eval.runtime.compute_seconds),
+        fmt_secs(plan.eval.runtime.collective_seconds),
+        fmt_bytes(plan.eval.memory.peak_bytes as f64),
+        if plan.eval.fits_memory { "fits" } else { "OVER BUDGET" },
+    ));
+    out.push_str(&format!(
+        "  {} decisions over {} targets ({} worklist), best at episode {}\n",
+        plan.decisions, plan.targets, plan.worklist_size, plan.episodes_to_best,
+    ));
+    if let Some(pe) = &plan.eval.pipeline {
+        out.push_str(&format!(
+            "  pipeline: {} stages x {} microbatches, cuts {:?}, bubble {:.1}%, makespan {}\n",
+            pe.stages,
+            pe.microbatches,
+            pe.cuts,
+            pe.bubble_fraction * 100.0,
+            fmt_secs(pe.makespan_seconds),
+        ));
+    }
+
+    out.push_str("\nsharding:\n");
+    for (label, specs) in [("in ", &plan.input_specs), ("out", &plan.output_specs)] {
+        for spec in specs.iter() {
+            let desc = if spec.replicated() {
+                "replicated".to_string()
+            } else {
+                spec.tilings
+                    .iter()
+                    .map(|(axis, dim)| format!("dim{dim}@{axis}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            };
+            out.push_str(&format!("  {label} {:<12} {desc}\n", spec.name));
+        }
+    }
+
+    out.push_str("\ntimeline:\n");
+    let mut last_phase = "";
+    for (i, line) in plan.trace.iter().enumerate() {
+        let (phase, detail) = match line.split_once(':') {
+            Some((p, d)) => (p.trim(), d.trim()),
+            None => ("", line.as_str()),
+        };
+        if phase != last_phase {
+            out.push_str(&format!("  [{phase}]\n"));
+            last_phase = phase;
+        }
+        out.push_str(&format!("    {i:>3}. {detail}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::composite::Evaluation;
+    use crate::session::plan::ShardSpec;
+
+    #[test]
+    fn explain_groups_trace_by_phase() {
+        let json = sample_plan().to_json();
+        let plan = PartitionPlan::from_json(&json).unwrap();
+        let text = explain_plan(&plan);
+        assert!(text.contains("plan over mesh [model=4]"));
+        assert!(text.contains("[manual]"));
+        assert!(text.contains("[search]"));
+        assert!(text.contains("tile w dim 1"));
+        assert!(text.contains("dim1@model"));
+    }
+
+    fn sample_plan() -> PartitionPlan {
+        PartitionPlan {
+            mesh_axes: vec![("model".to_string(), 4)],
+            input_specs: vec![
+                ShardSpec { name: "x".to_string(), tilings: vec![] },
+                ShardSpec { name: "w".to_string(), tilings: vec![("model".to_string(), 1)] },
+            ],
+            output_specs: vec![ShardSpec { name: "y".to_string(), tilings: vec![] }],
+            eval: Evaluation {
+                memory: Default::default(),
+                runtime: Default::default(),
+                collectives: Default::default(),
+                fits_memory: true,
+                cost: 1.0,
+                pipeline: None,
+            },
+            decisions: 1,
+            episodes_to_best: 3,
+            worklist_size: 2,
+            targets: 2,
+            wall_seconds: 0.0,
+            trace: vec![
+                "manual: shard x on batch".to_string(),
+                "search: tile w dim 1 on model".to_string(),
+                "search: keep y replicated".to_string(),
+            ],
+        }
+    }
+}

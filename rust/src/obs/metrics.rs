@@ -1,0 +1,356 @@
+//! Process-wide metrics registry: counters, gauges, and log-bucketed
+//! latency histograms with exact percentile extraction.
+//!
+//! Histograms bucket on powers of 2^(1/4) (four sub-buckets per octave), so
+//! any reported percentile is a bucket lower bound within ~19% of the true
+//! value, and values that are exact powers of two land on exact bucket
+//! boundaries — which is what `tests/obs_determinism.rs` pins. All state is
+//! atomic; recording never allocates or locks.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Monotonic event counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Signed instantaneous value (e.g. in-flight searches).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket 0 holds zeros; buckets `1 + 4e + s` hold values in
+/// `[2^(e + s/4), 2^(e + (s+1)/4))` for exponent `e` in 0..64.
+pub const NUM_BUCKETS: usize = 1 + 4 * 64;
+
+// 2^(1/4), 2^(2/4), 2^(3/4): sub-bucket thresholds within one octave.
+const C1: f64 = 1.189_207_115_002_721;
+const C2: f64 = std::f64::consts::SQRT_2;
+const C3: f64 = 1.681_792_830_507_429;
+
+/// Index of the bucket containing `v`.
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        return 0;
+    }
+    let e = 63 - v.leading_zeros() as usize;
+    let frac = v as f64 / (1u64 << e) as f64;
+    let sub = if frac >= C3 {
+        3
+    } else if frac >= C2 {
+        2
+    } else if frac >= C1 {
+        1
+    } else {
+        0
+    };
+    1 + 4 * e + sub
+}
+
+/// Lower bound of bucket `i` (0 for the zero bucket). Exact for integer
+/// exponents of 2 since `powf` with an integral argument is exact there.
+pub fn bucket_lower_bound(i: usize) -> f64 {
+    if i == 0 {
+        0.0
+    } else {
+        2f64.powf((i - 1) as f64 * 0.25)
+    }
+}
+
+/// Lock-free log-bucketed histogram (base 2^(1/4)).
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    buckets: Vec<AtomicU64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count(),
+            sum: self.sum(),
+            min: self.min.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+            counts: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+
+    /// Percentile straight off the live buckets (bucket lower bound).
+    pub fn percentile(&self, q: f64) -> f64 {
+        self.snapshot().percentile(q)
+    }
+}
+
+/// Point-in-time copy of a histogram, diffable for run-scoped percentiles.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    pub counts: Vec<u64>,
+}
+
+impl HistogramSnapshot {
+    /// Bucket-wise difference `self - earlier` (min/max are kept from
+    /// `self`: they cannot be un-merged, and run-scoped callers only read
+    /// percentiles off the diffed counts).
+    pub fn delta(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count - earlier.count,
+            sum: self.sum - earlier.sum,
+            min: self.min,
+            max: self.max,
+            counts: self.counts.iter().zip(&earlier.counts).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    /// Exact-rank percentile: the lower bound of the bucket holding the
+    /// `max(1, ceil(q * count))`-th smallest recorded value. Returns 0.0
+    /// for an empty histogram.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_lower_bound(i);
+            }
+        }
+        bucket_lower_bound(NUM_BUCKETS - 1)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let count = self.count;
+        let mean = if count == 0 { 0.0 } else { self.sum as f64 / count as f64 };
+        Json::obj(vec![
+            ("count", Json::num(count as f64)),
+            ("sum", Json::num(self.sum as f64)),
+            ("min", Json::num(if count == 0 { 0.0 } else { self.min as f64 })),
+            ("max", Json::num(self.max as f64)),
+            ("mean", Json::Num(mean)),
+            ("p50", Json::Num(self.percentile(0.50))),
+            ("p90", Json::Num(self.percentile(0.90))),
+            ("p99", Json::Num(self.percentile(0.99))),
+        ])
+    }
+}
+
+/// Registry of named metrics. Names are `&'static str` so registration is
+/// allocation-free; maps are sorted so snapshots have stable key order.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<&'static str, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<&'static str, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<&'static str, Arc<Histogram>>>,
+}
+
+static METRICS: OnceLock<Metrics> = OnceLock::new();
+
+/// The process-wide registry.
+pub fn metrics() -> &'static Metrics {
+    METRICS.get_or_init(Metrics::default)
+}
+
+impl Metrics {
+    pub fn counter(&self, name: &'static str) -> Arc<Counter> {
+        let mut map = self.counters.lock().unwrap();
+        Arc::clone(map.entry(name).or_default())
+    }
+
+    pub fn gauge(&self, name: &'static str) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().unwrap();
+        Arc::clone(map.entry(name).or_default())
+    }
+
+    pub fn histogram(&self, name: &'static str) -> Arc<Histogram> {
+        let mut map = self.histograms.lock().unwrap();
+        Arc::clone(map.entry(name).or_default())
+    }
+
+    /// JSON snapshot: `{"counters": {...}, "gauges": {...},
+    /// "histograms": {name: {count, sum, min, max, mean, p50, p90, p99}}}`.
+    pub fn snapshot(&self) -> Json {
+        let counters = self.counters.lock().unwrap();
+        let gauges = self.gauges.lock().unwrap();
+        let histograms = self.histograms.lock().unwrap();
+        let cj: Vec<(&str, Json)> =
+            counters.iter().map(|(k, v)| (*k, Json::num(v.get() as f64))).collect();
+        let gj: Vec<(&str, Json)> =
+            gauges.iter().map(|(k, v)| (*k, Json::num(v.get() as f64))).collect();
+        let hj: Vec<(&str, Json)> =
+            histograms.iter().map(|(k, v)| (*k, v.snapshot().to_json())).collect();
+        Json::obj(vec![
+            ("counters", Json::obj(cj)),
+            ("gauges", Json::obj(gj)),
+            ("histograms", Json::obj(hj)),
+        ])
+    }
+}
+
+/// Canonical metric names. `configs/metrics_schema.json` mirrors these lists;
+/// `python/check_metrics_schema.py` diffs serve snapshots against it, so new
+/// names must land in both places.
+pub mod names {
+    pub const SERVICE_REQUESTS: &str = "service.requests";
+    pub const SERVICE_ERRORS: &str = "service.errors";
+    pub const SERVICE_CACHE_HITS: &str = "service.cache_hits";
+    pub const SERVICE_CACHE_MISSES: &str = "service.cache_misses";
+    pub const SERVICE_DEDUP_SERVED: &str = "service.dedup_served";
+    pub const SERVICE_SEARCHES: &str = "service.searches";
+    pub const SEARCH_EPISODES: &str = "search.episodes";
+    pub const SEARCH_ROUNDS: &str = "search.rounds";
+    pub const SEARCH_STEALS: &str = "search.steals";
+    pub const EVAL_LOOKUPS: &str = "eval.lookups";
+    pub const EVAL_MEMO_HITS: &str = "eval.memo_hits";
+    pub const LEDGER_REFRESHES: &str = "ledger.refreshes";
+    pub const LEDGER_NODES_REUSED: &str = "ledger.nodes_reused";
+    pub const LEDGER_NODES_RECOMPUTED: &str = "ledger.nodes_recomputed";
+    pub const PIPELINE_SEARCHES: &str = "pipeline.searches";
+    pub const SERVICE_INFLIGHT_SEARCHES: &str = "service.inflight_searches";
+    pub const SERVICE_REQUEST_LATENCY_NS: &str = "service.request_latency_ns";
+    pub const SEARCH_RUN_NS: &str = "search.run_ns";
+
+    pub const ALL_COUNTERS: &[&str] = &[
+        SERVICE_REQUESTS,
+        SERVICE_ERRORS,
+        SERVICE_CACHE_HITS,
+        SERVICE_CACHE_MISSES,
+        SERVICE_DEDUP_SERVED,
+        SERVICE_SEARCHES,
+        SEARCH_EPISODES,
+        SEARCH_ROUNDS,
+        SEARCH_STEALS,
+        EVAL_LOOKUPS,
+        EVAL_MEMO_HITS,
+        LEDGER_REFRESHES,
+        LEDGER_NODES_REUSED,
+        LEDGER_NODES_RECOMPUTED,
+        PIPELINE_SEARCHES,
+    ];
+    pub const ALL_GAUGES: &[&str] = &[SERVICE_INFLIGHT_SEARCHES];
+    pub const ALL_HISTOGRAMS: &[&str] = &[SERVICE_REQUEST_LATENCY_NS, SEARCH_RUN_NS];
+}
+
+/// Pre-register every service metric so snapshot key sets are stable even
+/// before the first request touches a given path.
+pub fn register_service_metrics() {
+    let m = metrics();
+    for name in names::ALL_COUNTERS {
+        m.counter(name);
+    }
+    for name in names::ALL_GAUGES {
+        m.gauge(name);
+    }
+    for name in names::ALL_HISTOGRAMS {
+        m.histogram(name);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_places_powers_of_two_on_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 5);
+        assert_eq!(bucket_index(4), 9);
+        assert_eq!(bucket_index(1024), 1 + 4 * 10);
+        assert_eq!(bucket_lower_bound(bucket_index(1024)), 1024.0);
+    }
+
+    #[test]
+    fn percentile_is_exact_on_power_of_two_inputs() {
+        let h = Histogram::new();
+        for v in [1u64, 2, 4, 8] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.percentile(0.50), 2.0);
+        assert_eq!(s.percentile(0.90), 8.0);
+        assert_eq!(s.percentile(0.99), 8.0);
+        assert_eq!(s.count, 4);
+        assert_eq!(s.sum, 15);
+        assert_eq!(s.min, 1);
+        assert_eq!(s.max, 8);
+    }
+
+    #[test]
+    fn snapshot_delta_scopes_percentiles_to_a_run() {
+        let h = Histogram::new();
+        h.record(1_000_000);
+        let before = h.snapshot();
+        h.record(4);
+        h.record(4);
+        let after = h.snapshot();
+        let run = after.delta(&before);
+        assert_eq!(run.count, 2);
+        assert_eq!(run.percentile(0.50), 4.0);
+        assert_eq!(run.percentile(0.99), 4.0);
+    }
+}

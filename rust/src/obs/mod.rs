@@ -1,0 +1,33 @@
+//! Observability: flight-recorder tracing, a metrics registry, and search
+//! telemetry (DESIGN.md §12).
+//!
+//! Everything here is a pure side channel over the deterministic pipeline:
+//! enabling or disabling any of it leaves plan JSON byte-identical for a
+//! fixed (seed, K) — pinned by `tests/obs_determinism.rs`.
+
+pub mod explain;
+pub mod metrics;
+pub mod recorder;
+pub mod telemetry;
+
+pub use explain::explain_plan;
+pub use metrics::{metrics, register_service_metrics, Counter, Gauge, Histogram, HistogramSnapshot};
+pub use recorder::{recorder, EventKind, Recorder, SpanGuard};
+pub use telemetry::{telemetry, RequestTelemetry, RoundSample, TelemetryHub};
+
+use crate::util::json::Json;
+
+/// Combined metrics snapshot for `--metrics-out`: the registry (counters,
+/// gauges, histograms with p50/p90/p99) plus the per-request telemetry
+/// timelines retained by the hub.
+pub fn metrics_snapshot() -> Json {
+    let registry = metrics().snapshot();
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    for key in ["counters", "gauges", "histograms"] {
+        if let Some(section) = registry.get(key) {
+            fields.push((key, section.clone()));
+        }
+    }
+    fields.push(("requests", telemetry().to_json()));
+    Json::obj(fields)
+}

@@ -1,0 +1,530 @@
+//! Flight recorder: lock-striped, allocation-free span/event tracing.
+//!
+//! The recorder is a pure side channel (DESIGN.md §12): it never feeds back
+//! into search or evaluation state, so enabling it must leave plan JSON
+//! byte-identical for a fixed (seed, K). The hot-path contract is:
+//!
+//! - **Disabled path is one atomic load.** Every recording entry point starts
+//!   with `enabled()` — a `Relaxed` load of a single `AtomicBool` — and
+//!   returns immediately when tracing is off.
+//! - **No allocation or formatting while recording.** Events store
+//!   `&'static str` names/categories, integer nanosecond timestamps, and up
+//!   to two `(&'static str, i64)` args. Rings are pre-sized at thread
+//!   registration (`RING_CAPACITY` events); once full they overwrite the
+//!   oldest entries and count drops. JSON is only produced at export time.
+//! - **Lock striping.** Each thread owns its own ring behind its own mutex;
+//!   the global registry mutex is touched only at thread registration and
+//!   export, never per event.
+//!
+//! Export produces Chrome trace-event JSON (`chrome_trace()`) loadable in
+//! Perfetto, or one JSON object per line (`jsonl()`). RAII `SpanGuard`s push
+//! a `Begin` event at construction and an `End` at drop, so per-ring order
+//! is already a correct nesting order; export sanitizes the tail cases
+//! (ring-evicted begins, unclosed spans at export time).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Events retained per thread before the ring starts overwriting.
+pub const RING_CAPACITY: usize = 1 << 16;
+
+/// Maximum number of inline integer args per event.
+pub const MAX_ARGS: usize = 2;
+
+/// Virtual pid for wall-clock events (service, executor, ledger).
+pub const PID_WALL: u64 = 1;
+/// Virtual pid for simulated-time events (pipeline schedule slices).
+pub const PID_SIM: u64 = 2;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Span open (Chrome `ph:"B"`).
+    Begin,
+    /// Span close (Chrome `ph:"E"`).
+    End,
+    /// Point event (Chrome `ph:"i"`).
+    Instant,
+    /// Span recorded in one shot at its end with an explicit start time
+    /// (exported as an adjacent `B`/`E` pair).
+    Complete { start_ns: u64 },
+    /// Simulated-schedule interval: exported as `ph:"X"` on [`PID_SIM`]
+    /// with `tid = stage`, timestamps taken from the simulated clock.
+    Slice { stage: u32 },
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub kind: EventKind,
+    pub name: &'static str,
+    pub cat: &'static str,
+    /// Nanoseconds since the recorder epoch (simulated ns for slices).
+    pub ts_ns: u64,
+    /// For `Slice`: duration in simulated ns. Unused otherwise.
+    pub dur_ns: u64,
+    /// Request correlation id (0 = none).
+    pub req: u64,
+    pub args: [(&'static str, i64); MAX_ARGS],
+    pub num_args: u8,
+}
+
+/// Fixed-capacity overwrite-oldest event buffer. Pre-sized at registration;
+/// `push` never allocates.
+struct Ring {
+    buf: Vec<Event>,
+    /// Index of the slot the next push writes (wraps once full).
+    head: usize,
+    /// Total events ever pushed; `min(pushed, capacity)` are retained.
+    pushed: u64,
+}
+
+impl Ring {
+    fn new() -> Self {
+        Ring {
+            buf: Vec::with_capacity(RING_CAPACITY),
+            head: 0,
+            pushed: 0,
+        }
+    }
+
+    fn push(&mut self, ev: Event) {
+        if self.buf.len() < RING_CAPACITY {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+        }
+        self.head = (self.head + 1) % RING_CAPACITY;
+        self.pushed += 1;
+    }
+
+    fn dropped(&self) -> u64 {
+        self.pushed - self.buf.len() as u64
+    }
+
+    /// Events in push order (oldest first).
+    fn ordered(&self) -> Vec<Event> {
+        if self.buf.len() < RING_CAPACITY {
+            self.buf.clone()
+        } else {
+            let mut out = Vec::with_capacity(self.buf.len());
+            out.extend_from_slice(&self.buf[self.head..]);
+            out.extend_from_slice(&self.buf[..self.head]);
+            out
+        }
+    }
+
+    fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.pushed = 0;
+    }
+}
+
+/// One thread's stripe: a stable tid plus its own ring behind its own lock.
+struct ThreadLog {
+    tid: u64,
+    ring: Mutex<Ring>,
+}
+
+pub struct Recorder {
+    enabled: AtomicBool,
+    epoch: Instant,
+    next_tid: AtomicU64,
+    next_req: AtomicU64,
+    threads: Mutex<Vec<Arc<ThreadLog>>>,
+}
+
+thread_local! {
+    static LOCAL: std::cell::RefCell<Option<Arc<ThreadLog>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+static RECORDER: OnceLock<Recorder> = OnceLock::new();
+
+/// The process-wide recorder (created lazily, disabled by default).
+pub fn recorder() -> &'static Recorder {
+    RECORDER.get_or_init(|| Recorder {
+        enabled: AtomicBool::new(false),
+        epoch: Instant::now(),
+        next_tid: AtomicU64::new(1),
+        next_req: AtomicU64::new(1),
+        threads: Mutex::new(Vec::new()),
+    })
+}
+
+impl Recorder {
+    /// The one-atomic gate every recording entry point checks first.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn enable(&self) {
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn disable(&self) {
+        self.enabled.store(false, Ordering::Relaxed);
+    }
+
+    /// Drop all recorded events (rings stay registered and pre-sized).
+    pub fn clear(&self) {
+        let threads = self.threads.lock().unwrap();
+        for t in threads.iter() {
+            t.ring.lock().unwrap().clear();
+        }
+    }
+
+    /// Monotonic nanoseconds since the recorder epoch.
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Fresh request correlation id (never 0).
+    pub fn new_request_id(&self) -> u64 {
+        self.next_req.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// This thread's stripe, registering it on first use.
+    fn local(&'static self) -> Arc<ThreadLog> {
+        LOCAL.with(|slot| {
+            let mut slot = slot.borrow_mut();
+            if let Some(log) = slot.as_ref() {
+                return Arc::clone(log);
+            }
+            let log = Arc::new(ThreadLog {
+                tid: self.next_tid.fetch_add(1, Ordering::Relaxed),
+                ring: Mutex::new(Ring::new()),
+            });
+            self.threads.lock().unwrap().push(Arc::clone(&log));
+            *slot = Some(Arc::clone(&log));
+            log
+        })
+    }
+
+    #[inline]
+    fn push(&'static self, ev: Event) {
+        let log = self.local();
+        log.ring.lock().unwrap().push(ev);
+    }
+
+    /// Open a span; the returned guard records the matching end on drop.
+    /// When tracing is disabled this is a single atomic load.
+    #[inline]
+    pub fn span(&'static self, name: &'static str, cat: &'static str, req: u64) -> SpanGuard {
+        self.span_with_args(name, cat, req, &[])
+    }
+
+    #[inline]
+    pub fn span_with_args(
+        &'static self,
+        name: &'static str,
+        cat: &'static str,
+        req: u64,
+        args: &[(&'static str, i64)],
+    ) -> SpanGuard {
+        if !self.enabled() {
+            return SpanGuard { rec: None, name, cat, req };
+        }
+        self.push(make_event(EventKind::Begin, name, cat, self.now_ns(), 0, req, args));
+        SpanGuard { rec: Some(self), name, cat, req }
+    }
+
+    /// Point event.
+    #[inline]
+    pub fn instant(
+        &'static self,
+        name: &'static str,
+        cat: &'static str,
+        req: u64,
+        args: &[(&'static str, i64)],
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        self.push(make_event(EventKind::Instant, name, cat, self.now_ns(), 0, req, args));
+    }
+
+    /// Record a whole span in one shot, with a start time captured earlier
+    /// via [`Recorder::now_ns`]. Used where the span's args are only known
+    /// at the end (e.g. ledger refresh reuse counts).
+    #[inline]
+    pub fn complete(
+        &'static self,
+        name: &'static str,
+        cat: &'static str,
+        req: u64,
+        start_ns: u64,
+        args: &[(&'static str, i64)],
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let end = self.now_ns().max(start_ns);
+        self.push(make_event(EventKind::Complete { start_ns }, name, cat, end, 0, req, args));
+    }
+
+    /// Simulated-schedule interval (pipeline stage busy time). Timestamps
+    /// are simulated nanoseconds, rendered on their own virtual process.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn slice(
+        &'static self,
+        name: &'static str,
+        cat: &'static str,
+        req: u64,
+        stage: u32,
+        start_ns: u64,
+        dur_ns: u64,
+        args: &[(&'static str, i64)],
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        self.push(make_event(EventKind::Slice { stage }, name, cat, start_ns, dur_ns, req, args));
+    }
+
+    /// Total events evicted from full rings since the last clear.
+    pub fn dropped_events(&self) -> u64 {
+        let threads = self.threads.lock().unwrap();
+        threads.iter().map(|t| t.ring.lock().unwrap().dropped()).sum()
+    }
+
+    /// Flat export tokens: `(pid, tid, seq, event)` sorted for rendering.
+    /// `seq` preserves per-ring push order so B/E nesting survives equal
+    /// timestamps; orphan `End`s (their `Begin` was ring-evicted) are
+    /// dropped and unclosed `Begin`s get a synthetic end at the max
+    /// timestamp seen.
+    fn export_tokens(&self) -> Vec<(u64, u64, u64, Event)> {
+        let threads = self.threads.lock().unwrap();
+        let mut tokens: Vec<(u64, u64, u64, Event)> = Vec::new();
+        let mut max_ts = 0u64;
+        for t in threads.iter() {
+            let events = t.ring.lock().unwrap().ordered();
+            // Sanitize per ring: drop End events whose Begin was evicted.
+            let mut depth: i64 = 0;
+            let mut kept: Vec<Event> = Vec::with_capacity(events.len());
+            for ev in events {
+                match ev.kind {
+                    EventKind::Begin => {
+                        depth += 1;
+                        kept.push(ev);
+                    }
+                    EventKind::End => {
+                        if depth > 0 {
+                            depth -= 1;
+                            kept.push(ev);
+                        }
+                    }
+                    _ => kept.push(ev),
+                }
+                max_ts = max_ts.max(ev.ts_ns.saturating_add(ev.dur_ns));
+            }
+            for (seq, ev) in kept.into_iter().enumerate() {
+                let pid = match ev.kind {
+                    EventKind::Slice { .. } => PID_SIM,
+                    _ => PID_WALL,
+                };
+                let tid = match ev.kind {
+                    EventKind::Slice { stage } => stage as u64,
+                    _ => t.tid,
+                };
+                tokens.push((pid, tid, seq as u64, ev));
+            }
+        }
+        // Synthesize ends for spans still open at export (per wall tid).
+        let mut open: BTreeMap<u64, Vec<Event>> = BTreeMap::new();
+        for (pid, tid, _, ev) in &tokens {
+            if *pid != PID_WALL {
+                continue;
+            }
+            let stack = open.entry(*tid).or_default();
+            match ev.kind {
+                EventKind::Begin => stack.push(*ev),
+                EventKind::End => {
+                    stack.pop();
+                }
+                _ => {}
+            }
+        }
+        for (tid, stack) in open {
+            let base = tokens
+                .iter()
+                .filter(|(p, t, _, _)| *p == PID_WALL && *t == tid)
+                .map(|(_, _, s, _)| *s)
+                .max()
+                .unwrap_or(0);
+            for (i, b) in stack.into_iter().rev().enumerate() {
+                let mut end = b;
+                end.kind = EventKind::End;
+                end.ts_ns = max_ts;
+                end.num_args = 0;
+                tokens.push((PID_WALL, tid, base + 1 + i as u64, end));
+            }
+        }
+        tokens.sort_by(|a, b| {
+            let ka = (a.0, a.1, a.3.ts_ns, a.2);
+            let kb = (b.0, b.1, b.3.ts_ns, b.2);
+            ka.cmp(&kb)
+        });
+        tokens
+    }
+
+    /// Chrome trace-event JSON (the object form Perfetto accepts):
+    /// `{"traceEvents": [...], "displayTimeUnit": "ns"}`.
+    pub fn chrome_trace(&self) -> Json {
+        let events: Vec<Json> = self.export_tokens().into_iter().map(token_json).collect();
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::str("ns")),
+            ("droppedEvents", Json::num(self.dropped_events() as f64)),
+        ])
+    }
+
+    /// One Chrome trace-event object per line.
+    pub fn jsonl(&self) -> String {
+        let mut out = String::new();
+        for tok in self.export_tokens() {
+            out.push_str(&token_json(tok).to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[inline]
+fn make_event(
+    kind: EventKind,
+    name: &'static str,
+    cat: &'static str,
+    ts_ns: u64,
+    dur_ns: u64,
+    req: u64,
+    args: &[(&'static str, i64)],
+) -> Event {
+    let mut ev = Event {
+        kind,
+        name,
+        cat,
+        ts_ns,
+        dur_ns,
+        req,
+        args: [("", 0); MAX_ARGS],
+        num_args: args.len().min(MAX_ARGS) as u8,
+    };
+    for (i, &a) in args.iter().take(MAX_ARGS).enumerate() {
+        ev.args[i] = a;
+    }
+    ev
+}
+
+fn args_json(ev: &Event) -> Json {
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    if ev.req != 0 {
+        fields.push(("req", Json::num(ev.req as f64)));
+    }
+    for &(k, v) in ev.args.iter().take(ev.num_args as usize) {
+        fields.push((k, Json::num(v as f64)));
+    }
+    Json::obj(fields)
+}
+
+fn token_json((pid, tid, _seq, ev): (u64, u64, u64, Event)) -> Json {
+    let ph = match ev.kind {
+        EventKind::Begin => "B",
+        EventKind::End => "E",
+        EventKind::Instant => "i",
+        EventKind::Complete { .. } => "X",
+        EventKind::Slice { .. } => "X",
+    };
+    let ts_us = match ev.kind {
+        EventKind::Complete { start_ns } => start_ns as f64 / 1000.0,
+        _ => ev.ts_ns as f64 / 1000.0,
+    };
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("name", Json::str(ev.name)),
+        ("cat", Json::str(ev.cat)),
+        ("ph", Json::str(ph)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("ts", Json::Num(ts_us)),
+    ];
+    match ev.kind {
+        EventKind::Complete { start_ns } => {
+            fields.push(("dur", Json::Num((ev.ts_ns - start_ns) as f64 / 1000.0)));
+        }
+        EventKind::Slice { .. } => {
+            fields.push(("dur", Json::Num(ev.dur_ns as f64 / 1000.0)));
+        }
+        EventKind::Instant => {
+            fields.push(("s", Json::str("t")));
+        }
+        _ => {}
+    }
+    fields.push(("args", args_json(&ev)));
+    Json::obj(fields)
+}
+
+/// RAII span: records `Begin` at creation (via [`Recorder::span`]) and `End`
+/// at drop. Cheap no-op when tracing was disabled at creation.
+pub struct SpanGuard {
+    rec: Option<&'static Recorder>,
+    name: &'static str,
+    cat: &'static str,
+    req: u64,
+}
+
+impl SpanGuard {
+    /// Attach up to [`MAX_ARGS`] integer args to the closing `End` event.
+    pub fn end_with_args(mut self, args: &[(&'static str, i64)]) {
+        if let Some(rec) = self.rec.take() {
+            let now = rec.now_ns();
+            rec.push(make_event(EventKind::End, self.name, self.cat, now, 0, self.req, args));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(rec) = self.rec.take() {
+            let now = rec.now_ns();
+            rec.push(make_event(EventKind::End, self.name, self.cat, now, 0, self.req, &[]));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut ring = Ring::new();
+        for i in 0..(RING_CAPACITY as u64 + 10) {
+            ring.push(make_event(EventKind::Instant, "e", "t", i, 0, 0, &[]));
+        }
+        assert_eq!(ring.dropped(), 10);
+        let events = ring.ordered();
+        assert_eq!(events.len(), RING_CAPACITY);
+        assert_eq!(events[0].ts_ns, 10);
+        assert_eq!(events.last().unwrap().ts_ns, RING_CAPACITY as u64 + 9);
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let rec = recorder();
+        rec.disable();
+        rec.clear();
+        {
+            let _g = rec.span("noop", "test", 0);
+            rec.instant("noop", "test", 0, &[]);
+        }
+        let trace = rec.chrome_trace();
+        let events = trace.get("traceEvents").and_then(|j| j.as_arr()).unwrap();
+        assert!(events.is_empty());
+    }
+}

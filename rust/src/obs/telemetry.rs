@@ -1,0 +1,141 @@
+//! Search telemetry: per-request reward curves, entropy timelines, steal
+//! counts, and ledger reuse rates sampled at executor round barriers.
+//!
+//! Round samples are collected unconditionally — they are derived from
+//! already-deterministic search state, the executor takes at most
+//! `STEAL_ROUNDS` barriers per request, and sampling reads a handful of
+//! counters — so the timeline is available to `ServeSummary`/`--metrics-out`
+//! even when tracing is off, and cannot perturb determinism.
+
+use std::collections::VecDeque;
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Telemetry captured at one executor round barrier (across all workers).
+#[derive(Clone, Debug)]
+pub struct RoundSample {
+    pub round: usize,
+    /// Episodes completed so far (cumulative, all workers).
+    pub episodes: usize,
+    /// Best reward seen by any worker so far (f64::NEG_INFINITY if none).
+    pub best_reward: f64,
+    /// Mean root visit-count entropy across workers.
+    pub mean_entropy: f64,
+    /// Cumulative budget forfeitures up to this barrier.
+    pub steals: usize,
+    /// Ledger nodes_reused / (nodes_reused + nodes_recomputed) so far.
+    pub ledger_reuse_rate: f64,
+}
+
+impl RoundSample {
+    pub fn to_json(&self) -> Json {
+        let best = if self.best_reward.is_finite() { self.best_reward } else { 0.0 };
+        Json::obj(vec![
+            ("round", Json::num(self.round as f64)),
+            ("episodes", Json::num(self.episodes as f64)),
+            ("best_reward", Json::Num(best)),
+            ("entropy", Json::Num(self.mean_entropy)),
+            ("steals", Json::num(self.steals as f64)),
+            ("ledger_reuse_rate", Json::Num(self.ledger_reuse_rate)),
+        ])
+    }
+}
+
+/// One served request's telemetry, as retained by the hub.
+#[derive(Clone, Debug)]
+pub struct RequestTelemetry {
+    pub id: String,
+    pub fingerprint: u64,
+    pub latency_ns: u64,
+    pub cached: bool,
+    pub dedup: bool,
+    /// Empty for cache/dedup hits (no search ran for this request).
+    pub samples: Vec<RoundSample>,
+}
+
+impl RequestTelemetry {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("fingerprint", Json::str(format!("{:016x}", self.fingerprint))),
+            ("cached", Json::Bool(self.cached)),
+            ("dedup", Json::Bool(self.dedup)),
+            ("latency_ms", Json::Num(self.latency_ns as f64 / 1e6)),
+            ("timeline", Json::arr(self.samples.iter().map(|s| s.to_json()))),
+        ])
+    }
+}
+
+/// Retained per-request telemetry entries before the hub starts evicting
+/// the oldest (bounds memory under sustained serve traffic).
+pub const HUB_CAPACITY: usize = 256;
+
+/// Process-wide bounded store of recent request telemetry, drained into
+/// `--metrics-out` snapshots.
+#[derive(Default)]
+pub struct TelemetryHub {
+    entries: Mutex<VecDeque<RequestTelemetry>>,
+}
+
+static HUB: OnceLock<TelemetryHub> = OnceLock::new();
+
+pub fn telemetry() -> &'static TelemetryHub {
+    HUB.get_or_init(TelemetryHub::default)
+}
+
+impl TelemetryHub {
+    pub fn record(&self, entry: RequestTelemetry) {
+        let mut entries = self.entries.lock().unwrap();
+        if entries.len() == HUB_CAPACITY {
+            entries.pop_front();
+        }
+        entries.push_back(entry);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        self.entries.lock().unwrap().clear();
+    }
+
+    /// All retained entries, oldest first.
+    pub fn to_json(&self) -> Json {
+        let entries = self.entries.lock().unwrap();
+        Json::arr(entries.iter().map(|e| e.to_json()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(i: usize) -> RequestTelemetry {
+        RequestTelemetry {
+            id: format!("r{i}"),
+            fingerprint: i as u64,
+            latency_ns: 1_000_000,
+            cached: false,
+            dedup: false,
+            samples: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn hub_evicts_oldest_beyond_capacity() {
+        let hub = TelemetryHub::default();
+        for i in 0..(HUB_CAPACITY + 3) {
+            hub.record(entry(i));
+        }
+        assert_eq!(hub.len(), HUB_CAPACITY);
+        let j = hub.to_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr[0].get("id").and_then(|v| v.as_str()), Some("r3"));
+    }
+}

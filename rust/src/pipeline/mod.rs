@@ -20,4 +20,4 @@ pub use partition::{
     balanced_cuts, boundary_transfers, parse_pipeline_flag, stage_weights, BoundaryTransfer,
     PipelineFlag, PipelineSpec,
 };
-pub use schedule::{simulate_1f1b, ScheduleResult};
+pub use schedule::{simulate_1f1b, simulate_1f1b_slices, ScheduleResult, StageSlice};

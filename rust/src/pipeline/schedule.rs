@@ -36,6 +36,17 @@ pub struct ScheduleResult {
     pub stage_microbatch_seconds: Vec<f64>,
 }
 
+/// One stage's busy interval for one microbatch, in simulated seconds —
+/// the unit the flight recorder renders as a Perfetto `ph:"X"` slice
+/// (`rust/src/obs/recorder.rs`, `EventKind::Slice`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageSlice {
+    pub stage: usize,
+    pub microbatch: usize,
+    pub start_seconds: f64,
+    pub end_seconds: f64,
+}
+
 /// Simulate a 1F1B schedule.
 ///
 /// * `stage_seconds[s]` — busy seconds of stage `s` for the FULL batch
@@ -48,6 +59,35 @@ pub fn simulate_1f1b(
     stage_seconds: &[f64],
     xfer_seconds: &[f64],
     microbatches: usize,
+) -> ScheduleResult {
+    run_dp(stage_seconds, xfer_seconds, microbatches, |_, _, _, _| {})
+}
+
+/// [`simulate_1f1b`] that also returns every (stage, microbatch) busy
+/// interval. Tracing-only — the executor calls it once per pipelined
+/// request, for the winning plan, so the per-episode hot path never pays
+/// for slice materialisation.
+pub fn simulate_1f1b_slices(
+    stage_seconds: &[f64],
+    xfer_seconds: &[f64],
+    microbatches: usize,
+) -> (ScheduleResult, Vec<StageSlice>) {
+    let mut slices = Vec::with_capacity(stage_seconds.len() * microbatches.max(1));
+    let on_slice = |stage: usize, microbatch: usize, start: f64, end: f64| {
+        slices.push(StageSlice { stage, microbatch, start_seconds: start, end_seconds: end });
+    };
+    let result = run_dp(stage_seconds, xfer_seconds, microbatches, on_slice);
+    (result, slices)
+}
+
+/// The shared O(K·M) recurrence. `on_slice(stage, microbatch, start, end)`
+/// fires once per DP step with that microbatch's busy interval on that
+/// stage; `simulate_1f1b` passes a no-op closure, which inlines away.
+fn run_dp(
+    stage_seconds: &[f64],
+    xfer_seconds: &[f64],
+    microbatches: usize,
+    mut on_slice: impl FnMut(usize, usize, f64, f64),
 ) -> ScheduleResult {
     let k = stage_seconds.len();
     if k == 0 {
@@ -62,10 +102,12 @@ pub fn simulate_1f1b(
     let t: Vec<f64> = stage_seconds.iter().map(|&s| s / m as f64).collect();
 
     let mut finish = vec![0.0f64; k];
-    for _mb in 0..m {
+    for mb in 0..m {
         for s in 0..k {
             let arrive = if s == 0 { 0.0 } else { finish[s - 1] + xfer_seconds[s - 1] };
-            finish[s] = arrive.max(finish[s]) + t[s];
+            let start = arrive.max(finish[s]);
+            finish[s] = start + t[s];
+            on_slice(s, mb, start, finish[s]);
         }
     }
     let makespan = finish[k - 1];
@@ -145,5 +187,30 @@ mod tests {
         let r = simulate_1f1b(&[], &[], 4);
         assert_eq!(r.makespan_seconds, 0.0);
         assert_eq!(r.bubble_fraction, 0.0);
+    }
+
+    #[test]
+    fn slices_agree_with_the_plain_simulation() {
+        let stage = [1.0, 3.0, 1.0];
+        let xfer = [0.1, 0.2];
+        let plain = simulate_1f1b(&stage, &xfer, 6);
+        let (with_slices, slices) = simulate_1f1b_slices(&stage, &xfer, 6);
+        assert_eq!(plain, with_slices, "slice capture must not change the DP");
+        assert_eq!(slices.len(), 3 * 6, "one slice per (stage, microbatch)");
+        // Each slice spans exactly t[s]; per-stage slices never overlap;
+        // the last slice ends at the makespan.
+        for sl in &slices {
+            let t = with_slices.stage_microbatch_seconds[sl.stage];
+            assert!((sl.end_seconds - sl.start_seconds - t).abs() < 1e-12);
+        }
+        for s in 0..3 {
+            let mut per_stage: Vec<_> = slices.iter().filter(|x| x.stage == s).collect();
+            per_stage.sort_by(|a, b| a.microbatch.cmp(&b.microbatch));
+            for w in per_stage.windows(2) {
+                assert!(w[1].start_seconds >= w[0].end_seconds - 1e-12);
+            }
+        }
+        let last_end = slices.iter().map(|x| x.end_seconds).fold(0.0f64, f64::max);
+        assert!((last_end - with_slices.makespan_seconds).abs() < 1e-12);
     }
 }

@@ -271,6 +271,23 @@ impl<'e, 'p> Mcts<'e, 'p> {
         visit_entropy_of(root.children.iter().map(|&(_, cid)| self.nodes[cid as usize].visits))
     }
 
+    /// Evaluation-memo `(lookups, hits)` so far — a cheap counter read
+    /// for the executor's round-barrier telemetry samples, where the
+    /// clone-heavy [`Mcts::result`] would be wasteful.
+    pub fn memo_counters(&self) -> (usize, usize) {
+        (self.memo.lookups, self.memo.hits)
+    }
+
+    /// Ledger `(refreshes, nodes_reused, nodes_recomputed)` so far
+    /// (zeros when no ledger is attached). Same telemetry use as
+    /// [`Mcts::memo_counters`].
+    pub fn ledger_counters(&self) -> (usize, usize, usize) {
+        match self.ep.ledger.as_ref() {
+            Some(l) => (l.refreshes, l.nodes_reused, l.nodes_recomputed),
+            None => (0, 0, 0),
+        }
+    }
+
     /// Snapshot the best solution found so far.
     pub fn result(&self) -> SearchResult {
         let b = self.best.as_ref().expect("budget must be >= 1");

@@ -26,10 +26,12 @@
 //! same best plan — byte-identical JSON — on every run, regardless of
 //! how the OS interleaves the worker threads.
 
-use crate::cost::composite::{evaluate_pipelined, CostWeights};
+use crate::cost::composite::{evaluate_pipelined, stage_timeline, CostWeights};
 use crate::ir::Func;
+use crate::obs::recorder::recorder;
+use crate::obs::telemetry::RoundSample;
 use crate::partir::mesh::Mesh;
-use crate::pipeline::PipelineSpec;
+use crate::pipeline::{simulate_1f1b_slices, PipelineSpec};
 use crate::search::env::{RewriteEnv, SearchOptions};
 use crate::search::mcts::{Mcts, MctsConfig, SearchResult};
 use crate::search::worker_seed;
@@ -113,6 +115,11 @@ pub struct ExecutorReport {
     pub ledger_nodes_reused: usize,
     /// Node cost terms the ledgers recomputed (the dirty frontier).
     pub ledger_nodes_recomputed: usize,
+    /// One telemetry sample per barrier round (reward curve, entropy
+    /// timeline, cumulative steals, ledger reuse rate) — collected
+    /// unconditionally: it reads a handful of counters from
+    /// deterministic search state at most [`STEAL_ROUNDS`] times.
+    pub timeline: Vec<RoundSample>,
 }
 
 impl PlanJob {
@@ -141,6 +148,11 @@ impl PlanJob {
         let k = self.workers.max(1);
         let budget = self.budget.max(1);
         let round_size = budget.div_ceil(STEAL_ROUNDS);
+        // Span correlation id: the job fingerprint, so every worker's
+        // round spans group under the request that spawned them. Only
+        // computed when tracing is on (the fingerprint hash walks the
+        // program).
+        let req = if recorder().enabled() { self.fingerprint().0 } else { 0 };
 
         let mut session = Session::with_options(
             self.func.clone(),
@@ -160,6 +172,7 @@ impl PlanJob {
 
         let mut rounds = 0usize;
         let mut steals = 0usize;
+        let mut timeline: Vec<RoundSample> = Vec::with_capacity(STEAL_ROUNDS);
         let (results, worker_episodes, targets) = {
             let mut env = RewriteEnv::with_seed(
                 &session.program,
@@ -197,11 +210,19 @@ impl PlanJob {
                 // cannot change any result.
                 let ok = std::thread::scope(|scope| {
                     let mut handles = Vec::with_capacity(k);
-                    for (m, &q) in searchers.iter_mut().zip(&quotas) {
+                    for (w, (m, &q)) in searchers.iter_mut().zip(&quotas).enumerate() {
                         if q == 0 {
                             continue;
                         }
-                        handles.push(scope.spawn(move || m.run_episodes(q)));
+                        handles.push(scope.spawn(move || {
+                            let _round = recorder().span_with_args(
+                                "search.round",
+                                "search",
+                                req,
+                                &[("worker", w as i64), ("quota", q as i64)],
+                            );
+                            m.run_episodes(q)
+                        }));
                     }
                     handles.into_iter().all(|h| h.join().is_ok())
                 });
@@ -248,8 +269,43 @@ impl PlanJob {
                         remaining[leader] += remaining[w];
                         remaining[w] = 0;
                         steals += 1;
+                        recorder().instant(
+                            "search.steal",
+                            "search",
+                            req,
+                            &[("from", w as i64), ("to", leader as i64)],
+                        );
                     }
                 }
+                // Barrier telemetry sample (DESIGN.md §12): pure counter
+                // reads over deterministic search state, at most
+                // STEAL_ROUNDS times per request — collected whether or
+                // not tracing is on, and feeding nothing back.
+                let episodes: usize = searchers.iter().map(|m| m.episodes_run()).sum();
+                let best = best_so_far.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                let known: Vec<f64> =
+                    prev_entropy.iter().copied().filter(|h| !h.is_nan()).collect();
+                let mean_entropy = if known.is_empty() {
+                    0.0
+                } else {
+                    known.iter().sum::<f64>() / known.len() as f64
+                };
+                let (mut reused, mut recomputed) = (0usize, 0usize);
+                for m in searchers.iter() {
+                    let (_, r, c) = m.ledger_counters();
+                    reused += r;
+                    recomputed += c;
+                }
+                let denom = reused + recomputed;
+                let reuse_rate = if denom == 0 { 0.0 } else { reused as f64 / denom as f64 };
+                timeline.push(RoundSample {
+                    round: rounds,
+                    episodes,
+                    best_reward: best,
+                    mean_entropy,
+                    steals,
+                    ledger_reuse_rate: reuse_rate,
+                });
             }
             let results: Vec<SearchResult> = searchers.iter().map(|m| m.result()).collect();
             let episodes: Vec<usize> = searchers.iter().map(|m| m.episodes_run()).collect();
@@ -295,6 +351,36 @@ impl PlanJob {
                 winner = w;
             }
         }
+        // Tracing only: replay the WINNING plan's 1F1B schedule into the
+        // flight recorder as per-(stage, microbatch) slices on the
+        // simulated-time track. Once per pipelined request, never on the
+        // episode hot path; `stage_timeline` shares the pricing path's
+        // accumulation, so the traced schedule is exactly the priced one.
+        if let Some(spec0) = pipe_spec.as_ref().filter(|_| recorder().enabled()) {
+            let spec = PipelineSpec { cuts: results[winner].best_cuts.clone(), ..spec0.clone() };
+            let (mut dm, mut stats) = session.program.apply(&results[winner].best_state);
+            session.program.prop.infer_rest(
+                &session.program.func,
+                &session.program.mesh,
+                &mut dm,
+                &mut stats,
+            );
+            let (stage_seconds, xfer) = stage_timeline(&session.program, &dm, &self.device, &spec);
+            let m = spec.microbatches.max(1);
+            let (_, slices) = simulate_1f1b_slices(&stage_seconds, &xfer, m);
+            for sl in &slices {
+                let dur = ((sl.end_seconds - sl.start_seconds) * 1e9).max(0.0) as u64;
+                recorder().slice(
+                    "pipeline.stage",
+                    "pipeline",
+                    req,
+                    sl.stage as u32,
+                    (sl.start_seconds * 1e9) as u64,
+                    dur,
+                    &[("microbatch", sl.microbatch as i64)],
+                );
+            }
+        }
         session.adopt_search_result(&results[winner], targets, worklist.len());
         let mut plan = session.run(&[Tactic::InferRest, Tactic::Lower])?;
         plan.wall_seconds = 0.0;
@@ -312,6 +398,7 @@ impl PlanJob {
             ledger_refreshes: results.iter().map(|r| r.ledger_refreshes).sum(),
             ledger_nodes_reused: results.iter().map(|r| r.ledger_nodes_reused).sum(),
             ledger_nodes_recomputed: results.iter().map(|r| r.ledger_nodes_recomputed).sum(),
+            timeline,
         })
     }
 }
@@ -388,6 +475,29 @@ mod tests {
         let r2 = job(4, 3).run().unwrap();
         assert_eq!(r.eval_memo_hits, r2.eval_memo_hits);
         assert_eq!(r.ledger_nodes_recomputed, r2.ledger_nodes_recomputed);
+    }
+
+    #[test]
+    fn round_timeline_tracks_the_barriers() {
+        let r = job(4, 3).run().unwrap();
+        assert_eq!(r.timeline.len(), r.rounds, "one sample per barrier");
+        for w in r.timeline.windows(2) {
+            assert!(w[1].episodes >= w[0].episodes, "episode counts are cumulative");
+            assert!(w[1].best_reward >= w[0].best_reward, "best reward is monotone");
+            assert!(w[1].steals >= w[0].steals, "steal counts are cumulative");
+        }
+        let last = r.timeline.last().unwrap();
+        assert_eq!(last.episodes, r.episodes_total);
+        assert_eq!(last.steals, r.steals);
+        assert!(last.ledger_reuse_rate > 0.0 && last.ledger_reuse_rate <= 1.0);
+        // The timeline reads deterministic state, so it is reproducible.
+        let r2 = job(4, 3).run().unwrap();
+        assert_eq!(r.timeline.len(), r2.timeline.len());
+        for (a, b) in r.timeline.iter().zip(&r2.timeline) {
+            assert_eq!(a.episodes, b.episodes);
+            assert_eq!(a.best_reward, b.best_reward);
+            assert_eq!(a.mean_entropy, b.mean_entropy);
+        }
     }
 
     #[test]

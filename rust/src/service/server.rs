@@ -21,6 +21,10 @@
 
 use super::cache::{CacheStats, PlanCache};
 use super::request::{JobDefaults, PartitionRequest, PlanResponse, SearchStats};
+use crate::obs::metrics::{metrics, names, register_service_metrics, Histogram};
+use crate::obs::metrics::{Counter, Gauge, HistogramSnapshot};
+use crate::obs::recorder::recorder;
+use crate::obs::telemetry::{telemetry, RequestTelemetry, RoundSample};
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -71,6 +75,57 @@ impl Default for ServiceConfig {
     }
 }
 
+/// Cached handles into the process-global metrics registry
+/// (`obs::metrics`), resolved once at service construction so the
+/// request path never touches the registry lock.
+struct ServiceMetrics {
+    requests: Arc<Counter>,
+    errors: Arc<Counter>,
+    cache_hits: Arc<Counter>,
+    cache_misses: Arc<Counter>,
+    dedup_served: Arc<Counter>,
+    searches: Arc<Counter>,
+    episodes: Arc<Counter>,
+    rounds: Arc<Counter>,
+    steals: Arc<Counter>,
+    eval_lookups: Arc<Counter>,
+    eval_memo_hits: Arc<Counter>,
+    ledger_refreshes: Arc<Counter>,
+    ledger_nodes_reused: Arc<Counter>,
+    ledger_nodes_recomputed: Arc<Counter>,
+    pipelined: Arc<Counter>,
+    inflight_searches: Arc<Gauge>,
+    request_latency: Arc<Histogram>,
+    search_run: Arc<Histogram>,
+}
+
+impl ServiceMetrics {
+    fn new() -> ServiceMetrics {
+        register_service_metrics();
+        let m = metrics();
+        ServiceMetrics {
+            requests: m.counter(names::SERVICE_REQUESTS),
+            errors: m.counter(names::SERVICE_ERRORS),
+            cache_hits: m.counter(names::SERVICE_CACHE_HITS),
+            cache_misses: m.counter(names::SERVICE_CACHE_MISSES),
+            dedup_served: m.counter(names::SERVICE_DEDUP_SERVED),
+            searches: m.counter(names::SERVICE_SEARCHES),
+            episodes: m.counter(names::SEARCH_EPISODES),
+            rounds: m.counter(names::SEARCH_ROUNDS),
+            steals: m.counter(names::SEARCH_STEALS),
+            eval_lookups: m.counter(names::EVAL_LOOKUPS),
+            eval_memo_hits: m.counter(names::EVAL_MEMO_HITS),
+            ledger_refreshes: m.counter(names::LEDGER_REFRESHES),
+            ledger_nodes_reused: m.counter(names::LEDGER_NODES_REUSED),
+            ledger_nodes_recomputed: m.counter(names::LEDGER_NODES_RECOMPUTED),
+            pipelined: m.counter(names::PIPELINE_SEARCHES),
+            inflight_searches: m.gauge(names::SERVICE_INFLIGHT_SEARCHES),
+            request_latency: m.histogram(names::SERVICE_REQUEST_LATENCY_NS),
+            search_run: m.histogram(names::SEARCH_RUN_NS),
+        }
+    }
+}
+
 /// The partition-plan service: cache + in-flight dedup + executor.
 /// Shared by reference across front-end threads.
 pub struct PlanService {
@@ -79,6 +134,13 @@ pub struct PlanService {
     inflight: Mutex<HashMap<u64, Arc<Inflight>>>,
     searches: AtomicU64,
     dedup_served: AtomicU64,
+    // Metrics handles plus a SERVICE-OWNED end-to-end latency histogram:
+    // run summaries diff snapshots of the owned histogram, so parallel
+    // tests sharing the process-global registry cannot pollute a run's
+    // percentiles (the global `service.request_latency_ns` is still
+    // double-recorded for `--metrics-out` snapshots).
+    mx: ServiceMetrics,
+    latency: Histogram,
     // Search-cache effectiveness aggregates across every search this
     // service ran (mirrors the per-response `search` stats object).
     eval_lookups: AtomicU64,
@@ -106,7 +168,16 @@ impl PlanService {
             ledger_nodes_recomputed: AtomicU64::new(0),
             pipelined_searches: AtomicU64::new(0),
             bubble_micros: AtomicU64::new(0),
+            mx: ServiceMetrics::new(),
+            latency: Histogram::new(),
         }
+    }
+
+    /// Snapshot of this service's end-to-end request latency histogram
+    /// (nanoseconds). Run summaries diff two snapshots for run-scoped
+    /// percentiles.
+    pub fn latency_snapshot(&self) -> HistogramSnapshot {
+        self.latency.snapshot()
     }
 
     /// Searches actually executed (exact: dedup + double-check make
@@ -150,17 +221,56 @@ impl PlanService {
         )
     }
 
-    /// Handle one parsed request end to end.
+    /// Handle one parsed request end to end, wrapping the core lifecycle
+    /// in a `service.request` trace span and recording latency, metrics,
+    /// and per-request telemetry on every path.
     pub fn handle(&self, req: &PartitionRequest) -> PlanResponse {
+        let rec = recorder();
+        let trace_id = if rec.enabled() { rec.new_request_id() } else { 0 };
+        let span = rec.span("service.request", "service", trace_id);
+        let t0 = std::time::Instant::now();
+        let (resp, timeline) = self.handle_inner(req, trace_id);
+        let latency_ns = t0.elapsed().as_nanos() as u64;
+        drop(span);
+        self.latency.record(latency_ns);
+        self.mx.request_latency.record(latency_ns);
+        self.mx.requests.add(1);
+        if resp.error.is_some() {
+            self.mx.errors.add(1);
+        }
+        telemetry().record(RequestTelemetry {
+            id: resp.id.clone(),
+            fingerprint: u64::from_str_radix(&resp.fingerprint, 16).unwrap_or(0),
+            latency_ns,
+            cached: resp.cached && !resp.dedup,
+            dedup: resp.dedup,
+            samples: timeline,
+        });
+        resp
+    }
+
+    /// The request lifecycle proper. Returns the response plus the round
+    /// telemetry timeline when this request's thread led a search (empty
+    /// for cache hits, dedup waits, and errors).
+    fn handle_inner(
+        &self,
+        req: &PartitionRequest,
+        trace_id: u64,
+    ) -> (PlanResponse, Vec<RoundSample>) {
+        let rec = recorder();
         let job = match req.build_job(&self.defaults) {
             Ok(j) => j,
-            Err(e) => return PlanResponse::error(&req.id, "", format!("{e:#}")),
+            Err(e) => return (PlanResponse::error(&req.id, "", format!("{e:#}")), Vec::new()),
         };
         let fp = job.fingerprint();
         let hex = fp.hex();
 
-        if let Some(plan_json) = self.cache.get(fp) {
-            return PlanResponse {
+        let probe = rec.span("cache.probe", "service", trace_id);
+        let hit = self.cache.get(fp);
+        drop(probe);
+        if let Some(plan_json) = hit {
+            self.mx.cache_hits.add(1);
+            let resp = PlanResponse {
                 id: req.id.clone(),
                 fingerprint: hex,
                 cached: true,
@@ -169,6 +279,7 @@ impl PlanService {
                 search: None,
                 error: None,
             };
+            return (resp, Vec::new());
         }
 
         // Join an identical in-flight search, or become its leader. The
@@ -179,7 +290,8 @@ impl PlanService {
             if let Some(existing) = table.get(&fp.0) {
                 (existing.clone(), false)
             } else if let Some(plan_json) = self.cache.probe(fp) {
-                return PlanResponse {
+                self.mx.cache_hits.add(1);
+                let resp = PlanResponse {
                     id: req.id.clone(),
                     fingerprint: hex,
                     cached: true,
@@ -188,6 +300,7 @@ impl PlanService {
                     search: None,
                     error: None,
                 };
+                return (resp, Vec::new());
             } else {
                 let fresh = Arc::new(Inflight::new());
                 table.insert(fp.0, fresh.clone());
@@ -196,11 +309,15 @@ impl PlanService {
         };
 
         if !leader {
-            return match entry.wait() {
+            let wait = rec.span("dedup.wait", "service", trace_id);
+            let published = entry.wait();
+            drop(wait);
+            let resp = match published {
                 Ok(plan_json) => {
                     // Counted only on success, so served_without_search
                     // never includes requests that came back as errors.
                     self.dedup_served.fetch_add(1, Ordering::Relaxed);
+                    self.mx.dedup_served.add(1);
                     PlanResponse {
                         id: req.id.clone(),
                         fingerprint: hex,
@@ -217,11 +334,20 @@ impl PlanService {
                     resp
                 }
             };
+            return (resp, Vec::new());
         }
 
         self.searches.fetch_add(1, Ordering::Relaxed);
-        let outcome = match job.run() {
-            Ok(report) => {
+        self.mx.cache_misses.add(1);
+        self.mx.searches.add(1);
+        self.mx.inflight_searches.add(1);
+        let run_span = rec.span("search.run", "service", trace_id);
+        let run_result = job.run();
+        drop(run_span);
+        self.mx.inflight_searches.add(-1);
+        let mut timeline = Vec::new();
+        let outcome = match run_result {
+            Ok(mut report) => {
                 let stats = SearchStats::from_report(&report);
                 self.eval_lookups.fetch_add(stats.eval_lookups as u64, Ordering::Relaxed);
                 self.eval_memo_hits.fetch_add(stats.eval_memo_hits as u64, Ordering::Relaxed);
@@ -229,13 +355,26 @@ impl PlanService {
                     .fetch_add(stats.ledger_nodes_reused as u64, Ordering::Relaxed);
                 self.ledger_nodes_recomputed
                     .fetch_add(stats.ledger_nodes_recomputed as u64, Ordering::Relaxed);
+                self.mx.episodes.add(report.episodes_total as u64);
+                self.mx.rounds.add(report.rounds as u64);
+                self.mx.steals.add(report.steals as u64);
+                self.mx.eval_lookups.add(stats.eval_lookups as u64);
+                self.mx.eval_memo_hits.add(stats.eval_memo_hits as u64);
+                self.mx.ledger_refreshes.add(report.ledger_refreshes as u64);
+                self.mx.ledger_nodes_reused.add(stats.ledger_nodes_reused as u64);
+                self.mx.ledger_nodes_recomputed.add(stats.ledger_nodes_recomputed as u64);
+                self.mx.search_run.record((report.wall_seconds * 1e9) as u64);
                 if stats.stages > 0 {
                     self.pipelined_searches.fetch_add(1, Ordering::Relaxed);
                     self.bubble_micros
                         .fetch_add((stats.bubble_fraction * 1e6) as u64, Ordering::Relaxed);
+                    self.mx.pipelined.add(1);
                 }
+                timeline = std::mem::take(&mut report.timeline);
                 let plan_json = report.plan.to_json().to_string();
+                let publish = rec.span("cache.publish", "service", trace_id);
                 self.cache.put(fp, plan_json.clone());
+                drop(publish);
                 Ok((plan_json, stats))
             }
             Err(e) => Err(format!("{e:#}")),
@@ -247,7 +386,7 @@ impl PlanService {
         self.inflight.lock().expect("inflight table poisoned").remove(&fp.0);
         entry.publish(outcome.clone().map(|(plan_json, _)| plan_json));
 
-        match outcome {
+        let resp = match outcome {
             Ok((plan_json, stats)) => PlanResponse {
                 id: req.id.clone(),
                 fingerprint: hex,
@@ -258,7 +397,8 @@ impl PlanService {
                 error: None,
             },
             Err(e) => PlanResponse::error(&req.id, &hex, e),
-        }
+        };
+        (resp, timeline)
     }
 
     /// Parse and handle one JSONL line.
@@ -344,6 +484,12 @@ pub struct ServeSummary {
     /// summed 1F1B bubble fractions in microunits (1e-6).
     pub pipelined_searches: u64,
     pub bubble_micros: u64,
+    /// End-to-end per-request latency percentiles for THIS run, in
+    /// milliseconds — a snapshot diff of the service-owned histogram
+    /// (`obs::metrics::Histogram`), so a batch of mixed hot/cold
+    /// requests finally has a latency signal beyond `wall_seconds`.
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
 }
 
 impl ServeSummary {
@@ -378,6 +524,10 @@ impl ServeSummary {
             100.0 * self.memo_hit_rate(),
             100.0 * self.ledger_reuse_rate()
         );
+        s.push_str(&format!(
+            ", latency p50 {:.2}ms / p99 {:.2}ms",
+            self.latency_p50_ms, self.latency_p99_ms
+        ));
         if self.pipelined_searches > 0 {
             s.push_str(&format!(
                 ", {} pipelined (mean bubble {:.1}%)",
@@ -403,6 +553,7 @@ pub fn run_batch(
     let dedup0 = service.dedup_served();
     let sc0 = service.search_cache_counters();
     let pp0 = service.pipelined_counters();
+    let lat0 = service.latency_snapshot();
 
     let queue: BoundedQueue<usize> = BoundedQueue::new(queue_bound);
     let results: Mutex<Vec<Option<PlanResponse>>> = Mutex::new(vec![None; requests.len()]);
@@ -410,12 +561,14 @@ pub fn run_batch(
         for _ in 0..pool.max(1) {
             scope.spawn(|| {
                 while let Some(i) = queue.pop() {
+                    recorder().instant("queue.dequeue", "service", 0, &[("index", i as i64)]);
                     let resp = service.handle(&requests[i]);
                     results.lock().expect("results poisoned")[i] = Some(resp);
                 }
             });
         }
         for i in 0..requests.len() {
+            recorder().instant("queue.enqueue", "service", 0, &[("index", i as i64)]);
             queue.push(i);
         }
         queue.close();
@@ -429,6 +582,7 @@ pub fn run_batch(
         .collect();
     let sc1 = service.search_cache_counters();
     let pp1 = service.pipelined_counters();
+    let lat = service.latency_snapshot().delta(&lat0);
     let summary = ServeSummary {
         requests: responses.len(),
         errors: responses.iter().filter(|r| r.error.is_some()).count(),
@@ -442,6 +596,8 @@ pub fn run_batch(
         ledger_nodes_recomputed: sc1.3 - sc0.3,
         pipelined_searches: pp1.0 - pp0.0,
         bubble_micros: pp1.1 - pp0.1,
+        latency_p50_ms: lat.percentile(0.50) / 1e6,
+        latency_p99_ms: lat.percentile(0.99) / 1e6,
     };
     (responses, summary)
 }
@@ -461,6 +617,7 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
     let dedup0 = service.dedup_served();
     let sc0 = service.search_cache_counters();
     let pp0 = service.pipelined_counters();
+    let lat0 = service.latency_snapshot();
     let requests = std::sync::atomic::AtomicU64::new(0);
     let errors = std::sync::atomic::AtomicU64::new(0);
 
@@ -470,6 +627,7 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
         for _ in 0..pool.max(1) {
             scope.spawn(|| {
                 while let Some(line) = queue.pop() {
+                    recorder().instant("queue.dequeue", "service", 0, &[]);
                     let resp = service.handle_line(&line);
                     requests.fetch_add(1, Ordering::Relaxed);
                     if resp.error.is_some() {
@@ -496,6 +654,7 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
             if line.trim().is_empty() {
                 continue;
             }
+            recorder().instant("queue.enqueue", "service", 0, &[]);
             queue.push(line);
         }
         queue.close();
@@ -506,6 +665,7 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
     }
     let sc1 = service.search_cache_counters();
     let pp1 = service.pipelined_counters();
+    let lat = service.latency_snapshot().delta(&lat0);
     Ok(ServeSummary {
         requests: requests.load(Ordering::Relaxed) as usize,
         errors: errors.load(Ordering::Relaxed) as usize,
@@ -519,6 +679,8 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
         ledger_nodes_recomputed: sc1.3 - sc0.3,
         pipelined_searches: pp1.0 - pp0.0,
         bubble_micros: pp1.1 - pp0.1,
+        latency_p50_ms: lat.percentile(0.50) / 1e6,
+        latency_p99_ms: lat.percentile(0.99) / 1e6,
     })
 }
 

@@ -107,6 +107,33 @@ pub struct ThroughputReport {
     /// Pre-overhaul episodes/sec recorded in `configs/perf_floor.json`
     /// (absent when the file is missing or unreadable).
     pub baseline_single_episodes_per_sec: Option<f64>,
+    /// Where the numbers came from: `measured at <git-sha> (<profile>)`.
+    /// A real measurement always stamps this, so the committed
+    /// "SEED VALUES, UNMEASURED" placeholder can never masquerade as a
+    /// CI result (`python/check_perf_floor.py` hard-fails on it).
+    pub provenance: String,
+}
+
+/// Provenance string for a report produced by an actual run: the git
+/// commit (CI's `GITHUB_SHA`, else `git rev-parse`) plus the build
+/// profile, since debug and release numbers are not comparable.
+fn bench_provenance() -> String {
+    let sha = std::env::var("GITHUB_SHA")
+        .ok()
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .or_else(|| {
+            std::process::Command::new("git")
+                .args(["rev-parse", "--short=12", "HEAD"])
+                .output()
+                .ok()
+                .filter(|o| o.status.success())
+                .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+                .filter(|s| !s.is_empty())
+        })
+        .unwrap_or_else(|| "unknown".to_string());
+    let profile = if cfg!(debug_assertions) { "debug" } else { "release" };
+    format!("measured at {sha} ({profile})")
 }
 
 fn bench_job(workers: usize, budget: usize) -> PlanJob {
@@ -348,6 +375,7 @@ pub fn measure(cfg: &ThroughputConfig) -> Result<ThroughputReport> {
         rounds: multi.rounds,
         steals: multi.steals,
         baseline_single_episodes_per_sec: load_baseline(),
+        provenance: bench_provenance(),
     })
 }
 
@@ -378,6 +406,7 @@ impl ThroughputReport {
             // NOT comparable to release ones — readers (and the CI floor
             // check) must key off this flag.
             ("debug_build", Json::Bool(cfg!(debug_assertions))),
+            ("provenance", Json::str(self.provenance.clone())),
         ];
         if let Some(b) = self.baseline_single_episodes_per_sec {
             fields.push(("baseline_single_episodes_per_sec", Json::Num(b)));

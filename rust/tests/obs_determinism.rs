@@ -1,0 +1,174 @@
+//! Observability contract (DESIGN.md §12): the flight recorder is a pure
+//! side channel. Tracing on vs off must leave plan JSON byte-identical
+//! for a fixed (seed, K); exported traces must be well-formed Chrome
+//! trace-event JSON; histogram percentiles must be exact on bucket
+//! boundaries; and `--metrics-out` snapshots must match the committed
+//! schema in `configs/metrics_schema.json`.
+
+use std::sync::Mutex;
+
+use automap::obs::metrics::{bucket_index, bucket_lower_bound, Histogram};
+use automap::obs::recorder::recorder;
+use automap::service::{JobDefaults, PartitionRequest, PlanService, ServiceConfig};
+use automap::util::json::{parse, Json};
+
+/// Tests that toggle the process-global recorder hold this lock so their
+/// enable/clear/export windows never interleave.
+static RECORDER_LOCK: Mutex<()> = Mutex::new(());
+
+fn plan_json(workers: usize, budget: usize) -> String {
+    let req = PartitionRequest {
+        id: format!("det-{workers}"),
+        model: "transformer".to_string(),
+        layers: 2,
+        mesh: "model=4".to_string(),
+        budget,
+        seed: 42,
+        workers,
+        ..Default::default()
+    };
+    let job = req.build_job(&JobDefaults::default()).expect("well-formed request");
+    let report = job.run().expect("search runs");
+    report.plan.to_json().to_string()
+}
+
+#[test]
+fn tracing_on_vs_off_leaves_plan_json_byte_identical() {
+    let _g = RECORDER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let rec = recorder();
+    for workers in [1usize, 4] {
+        rec.disable();
+        let off = plan_json(workers, 60);
+        rec.clear();
+        rec.enable();
+        let on = plan_json(workers, 60);
+        rec.disable();
+        rec.clear();
+        assert_eq!(off, on, "K={workers}: tracing changed the plan bytes");
+        assert!(!off.is_empty());
+    }
+}
+
+#[test]
+fn histogram_percentiles_are_exact_on_bucket_boundaries() {
+    let h = Histogram::new();
+    for v in [1u64, 2, 4, 8] {
+        h.record(v);
+    }
+    // Exact ranks: p50 -> 2nd smallest (2), p90/p99 -> 4th smallest (8),
+    // and powers of two sit exactly on bucket lower bounds.
+    assert_eq!(h.percentile(0.50), 2.0);
+    assert_eq!(h.percentile(0.90), 8.0);
+    assert_eq!(h.percentile(0.99), 8.0);
+
+    // Non-boundary values report their bucket's lower bound: 1000 lives in
+    // [2^9.75, 2^10), so every percentile of a single-value histogram is
+    // exactly 2^9.75.
+    let h = Histogram::new();
+    h.record(1000);
+    assert_eq!(bucket_lower_bound(bucket_index(1000)), 2f64.powf(9.75));
+    assert_eq!(h.percentile(0.50), 2f64.powf(9.75));
+
+    // Monotonicity over a spread.
+    let h = Histogram::new();
+    for v in 1..=1000u64 {
+        h.record(v * 17);
+    }
+    let (p50, p90, p99) = (h.percentile(0.50), h.percentile(0.90), h.percentile(0.99));
+    assert!(0.0 < p50 && p50 <= p90 && p90 <= p99, "p50 {p50} p90 {p90} p99 {p99}");
+}
+
+fn smoke_request(id: &str) -> PartitionRequest {
+    PartitionRequest {
+        id: id.to_string(),
+        model: "mlp".to_string(),
+        mesh: "model=4".to_string(),
+        budget: 40,
+        seed: 7,
+        workers: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn exported_trace_events_are_well_formed() {
+    let _g = RECORDER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let rec = recorder();
+    rec.clear();
+    rec.enable();
+    let svc = PlanService::new(ServiceConfig::default());
+    let first = svc.handle(&smoke_request("t1"));
+    assert!(first.error.is_none(), "{:?}", first.error);
+    let second = svc.handle(&smoke_request("t1"));
+    assert!(second.cached, "repeat request must hit the plan cache");
+    let trace = rec.chrome_trace();
+    rec.disable();
+    rec.clear();
+
+    let events = trace.get("traceEvents").and_then(|j| j.as_arr()).expect("traceEvents array");
+    assert!(!events.is_empty(), "tracing a served request must record events");
+    // Every B has a matching E per (pid, tid) lane, in stack order; all
+    // events carry the required fields; phases are the exported subset.
+    let mut depth: std::collections::BTreeMap<(u64, u64), i64> = std::collections::BTreeMap::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(|j| j.as_str()).expect("ph");
+        let pid = ev.get("pid").and_then(|j| j.as_f64()).expect("pid") as u64;
+        let tid = ev.get("tid").and_then(|j| j.as_f64()).expect("tid") as u64;
+        assert!(ev.get("name").and_then(|j| j.as_str()).is_some(), "name missing");
+        assert!(ev.get("cat").and_then(|j| j.as_str()).is_some(), "cat missing");
+        assert!(ev.get("ts").and_then(|j| j.as_f64()).is_some(), "ts missing");
+        let d = depth.entry((pid, tid)).or_insert(0);
+        match ph {
+            "B" => *d += 1,
+            "E" => {
+                *d -= 1;
+                assert!(*d >= 0, "E without a matching B on pid={pid} tid={tid}");
+            }
+            "X" => {
+                let dur = ev.get("dur").and_then(|j| j.as_f64()).expect("X needs dur");
+                assert!(dur >= 0.0);
+            }
+            "i" => {}
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    for ((pid, tid), d) in depth {
+        assert_eq!(d, 0, "unbalanced spans on pid={pid} tid={tid}");
+    }
+}
+
+#[test]
+fn metrics_snapshot_matches_the_committed_schema() {
+    let svc = PlanService::new(ServiceConfig::default());
+    let resp = svc.handle(&smoke_request("m1"));
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    let snap = automap::obs::metrics_snapshot();
+
+    let schema_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../configs/metrics_schema.json");
+    let schema_text = std::fs::read_to_string(schema_path).expect("configs/metrics_schema.json");
+    let schema = parse(&schema_text).expect("schema parses");
+
+    let keys = |j: &Json, section: &str| -> Vec<String> {
+        match j.get(section) {
+            Some(Json::Obj(fields)) => fields.iter().map(|(k, _)| k.clone()).collect(),
+            Some(Json::Arr(items)) => {
+                items.iter().filter_map(|i| i.as_str()).map(str::to_string).collect()
+            }
+            _ => panic!("section {section} missing"),
+        }
+    };
+    for section in ["counters", "gauges", "histograms"] {
+        let mut got = keys(&snap, section);
+        let mut want = keys(&schema, section);
+        got.sort();
+        want.sort();
+        assert_eq!(got, want, "{section}: snapshot keys diverge from configs/metrics_schema.json");
+    }
+    // The request latency histogram saw at least the request above, and
+    // telemetry retained its timeline entry.
+    let hist = snap.get("histograms").and_then(|h| h.get("service.request_latency_ns")).unwrap();
+    assert!(hist.get("count").and_then(|j| j.as_f64()).unwrap() >= 1.0);
+    let requests = snap.get("requests").and_then(|j| j.as_arr()).expect("requests section");
+    assert!(!requests.is_empty(), "telemetry hub retained no request entries");
+}
