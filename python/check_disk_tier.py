@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""CI gate for the persistent plan-cache tier (DESIGN.md §13).
+
+Compares two `automap batch` response files produced by two *separate
+processes* sharing one `--cache-dir`:
+
+  pass 1 (cold log)  — populates the disk tier while searching;
+  pass 2 (fresh process, warm log) — must answer every request from the
+  persistent tier: zero errors, every response `"cached":true`, at least
+  one `"disk":true` hit, and the plan document byte-identical to pass
+  1's for every request id.
+
+Usage: python3 python/check_disk_tier.py pass1.jsonl pass2.jsonl
+"""
+
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    """id -> (raw line, parsed doc, raw plan substring)."""
+    out = {}
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            doc = json.loads(line)
+            rid = doc.get("id")
+            if rid is None:
+                sys.exit(f"{path}:{ln}: response without an id")
+            # The plan document is spliced in verbatim by the service;
+            # compare the raw bytes, not a re-serialisation.
+            idx = line.find(',"plan":')
+            plan_raw = line[idx:] if idx >= 0 else None
+            out[rid] = (line, doc, plan_raw)
+    return out
+
+
+def main(argv) -> int:
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    pass1, pass2 = load(argv[0]), load(argv[1])
+    if set(pass1) != set(pass2):
+        sys.exit(f"request ids differ between passes: {set(pass1) ^ set(pass2)}")
+    if not pass1:
+        sys.exit("no responses to compare")
+
+    failures = []
+    disk_hits = 0
+    for rid, (_, doc2, plan2) in sorted(pass2.items()):
+        if doc2.get("error"):
+            failures.append(f"{rid}: pass 2 errored: {doc2['error']}")
+            continue
+        if doc2.get("cached") is not True:
+            failures.append(f"{rid}: pass 2 ran a search (cached != true)")
+        if doc2.get("disk") is True:
+            disk_hits += 1
+        plan1 = pass1[rid][2]
+        if plan1 is None:
+            failures.append(f"{rid}: pass 1 carried no plan")
+        elif plan1 != plan2:
+            failures.append(f"{rid}: plan document differs between passes")
+
+    # Every unique fingerprint is absent from pass 2's fresh memory
+    # tier, so each one must be served from disk exactly once (repeat
+    # ids of the same fingerprint then hit the promoted memory entry).
+    unique_fps = len({d.get("fingerprint") for _, d, _ in pass2.values()})
+    if disk_hits < 1:
+        failures.append("pass 2 reported no disk-tier hits at all")
+    elif disk_hits != unique_fps:
+        failures.append(
+            f"expected one disk hit per unique fingerprint "
+            f"({unique_fps}), got {disk_hits}"
+        )
+
+    if failures:
+        print("check_disk_tier: FAIL")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(
+        f"check_disk_tier: ok — {len(pass2)} responses, {disk_hits} disk-tier "
+        f"hits over {unique_fps} unique fingerprints, plans byte-identical"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -10,6 +10,8 @@ when the release-build measurements breach them:
 * ``eval_median_ns``  (ledger) must stay BELOW  ``max_eval_median_ns``
 * ``eval_ledger_speedup``      must stay ABOVE  ``min_eval_ledger_speedup``
 * ``schedule_sim_median_ns``   must stay BELOW  ``max_schedule_sim_median_ns``
+* ``parse_median_ns``          must stay BELOW  ``max_parse_median_ns``
+* ``decode_median_ns``         must stay BELOW  ``max_decode_median_ns``
 
 The floors are deliberately generous — shared CI runners are noisy and
 the gate exists to catch catastrophic regressions (an accidentally
@@ -51,6 +53,9 @@ REQUIRED_KEYS = {
     "eval_memo_hit_rate": (int, float),
     "ledger_reuse_rate": (int, float),
     "schedule_sim_median_ns": (int, float),
+    "parse_median_ns": (int, float),
+    "decode_median_ns": (int, float),
+    "binary_load_speedup": (int, float),
     "rounds": (int, float),
     "steals": (int, float),
     "debug_build": bool,
@@ -123,6 +128,8 @@ def main() -> int:
     below("eval_median_ns", "max_eval_median_ns")
     above("eval_ledger_speedup", "min_eval_ledger_speedup")
     below("schedule_sim_median_ns", "max_schedule_sim_median_ns")
+    below("parse_median_ns", "max_parse_median_ns")
+    below("decode_median_ns", "max_decode_median_ns")
 
     base = bench.get("baseline_single_episodes_per_sec")
     eps = bench.get("single_episodes_per_sec")

@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Decoder corruption wall for pallas-bin (DESIGN.md §13).
+
+Feeds systematically corrupted `.pbp` blobs to `automap decode` and
+requires a clean, non-panicking rejection for every one: truncations at
+stepped lengths and deterministic single-bit flips over every committed
+golden. A panic (or an accidental accept of corrupt bytes) fails CI.
+
+Usage: python3 python/fuzz_pallas_bin.py <automap-binary> [golden.pbp ...]
+With no goldens named, fuzzes every configs/corpus/*.pbp.
+"""
+
+import pathlib
+import subprocess
+import sys
+import tempfile
+
+
+def run_decode(automap: str, blob: bytes, workdir: str) -> tuple[int, str]:
+    path = pathlib.Path(workdir) / "fuzz.pbp"
+    path.write_bytes(blob)
+    proc = subprocess.run(
+        [automap, "decode", str(path)],
+        capture_output=True,
+        text=True,
+        timeout=60,
+    )
+    return proc.returncode, proc.stderr + proc.stdout
+
+
+def fail(name: str, what: str, output: str) -> None:
+    print(f"FAIL {name}: {what}")
+    print(output[:2000])
+    sys.exit(1)
+
+
+def check_rejected(automap: str, blob: bytes, name: str, what: str, workdir: str):
+    code, output = run_decode(automap, blob, workdir)
+    if code == 0:
+        fail(name, f"{what}: corrupt input was ACCEPTED", output)
+    if "panicked" in output or "RUST_BACKTRACE" in output:
+        fail(name, f"{what}: decoder PANICKED instead of erroring", output)
+
+
+def main(argv) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    automap = argv[0]
+    goldens = [pathlib.Path(a) for a in argv[1:]]
+    if not goldens:
+        root = pathlib.Path(__file__).resolve().parent.parent
+        goldens = sorted((root / "configs" / "corpus").glob("*.pbp"))
+    if not goldens:
+        print("fuzz_pallas_bin: no .pbp goldens found", file=sys.stderr)
+        return 2
+
+    cases = 0
+    with tempfile.TemporaryDirectory() as workdir:
+        for g in goldens:
+            blob = g.read_bytes()
+            # The pristine golden must decode cleanly.
+            code, output = run_decode(automap, blob, workdir)
+            if code != 0:
+                fail(g.name, "pristine golden failed to decode", output)
+
+            # Truncations: every prefix boundary near the header, then
+            # stepped through the payload (all of them in Rust tests;
+            # stepped here to keep the subprocess count sane).
+            lengths = list(range(0, min(40, len(blob)))) + list(
+                range(40, len(blob), 11)
+            )
+            for n in lengths:
+                check_rejected(automap, blob[:n], g.name, f"truncate to {n}", workdir)
+                cases += 1
+
+            # Deterministic single-bit flips across the whole blob.
+            for i in range(0, len(blob), 5):
+                for bit in (0, 3, 7):
+                    mutated = bytearray(blob)
+                    mutated[i] ^= 1 << bit
+                    check_rejected(
+                        automap, bytes(mutated), g.name, f"flip byte {i} bit {bit}", workdir
+                    )
+                    cases += 1
+    print(f"fuzz_pallas_bin: ok — {cases} corrupt blobs over {len(goldens)} goldens, "
+          "all rejected cleanly")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

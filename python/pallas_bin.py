@@ -1,0 +1,549 @@
+#!/usr/bin/env python3
+"""Reference encoder for the pallas-bin program format (DESIGN.md §13).
+
+Parses the textual IR (DESIGN.md §10) and emits the exact bytes
+`rust/src/ir/binary.rs::encode_program` produces — byte for byte. Used
+to generate the committed `configs/corpus/*.pbp` goldens; CI proves the
+equivalence each run by re-encoding every corpus program with the Rust
+`automap encode` and `cmp`-ing against these goldens.
+
+Usage:
+    python3 python/pallas_bin.py file.pir [...]      # write siblings .pbp
+    python3 python/pallas_bin.py --check file.pir .. # verify, write nothing
+With no files, processes every configs/corpus/*.pir.
+"""
+
+import pathlib
+import struct
+import sys
+
+MAGIC = b"PLSB"
+FORMAT_VERSION = 1
+KIND_PROGRAM = 1
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+U64 = 0xFFFFFFFFFFFFFFFF
+
+DTYPE_TAGS = {"f32": 0, "bf16": 1, "i32": 2, "i1": 3}
+ARG_KIND_TAGS = {"param": 0, "opt_state": 1, "input": 2, "const": 3}
+CMP_TAGS = {"Lt": 0, "Le": 1, "Gt": 2, "Ge": 3, "Eq": 4, "Ne": 5}
+# Mirrors OpKind::kind_id (rust/src/ir/op.rs).
+OP_TAGS = {
+    "const": 0, "iota": 1, "add": 2, "sub": 3, "mul": 4, "div": 5,
+    "max": 6, "min": 7, "neg": 8, "exp": 9, "log": 10, "tanh": 11,
+    "rsqrt": 12, "sqrt": 13, "abs": 14, "compare": 15, "select": 16,
+    "convert": 17, "dot": 18, "reduce_sum": 19, "reduce_max": 20,
+    "broadcast_in_dim": 21, "reshape": 22, "transpose": 23,
+    "gather": 24, "segment_sum": 25,
+}
+SIMPLE_OPS = {
+    "add", "sub", "mul", "div", "max", "min", "neg", "exp", "log",
+    "tanh", "rsqrt", "sqrt", "abs", "select", "convert", "reshape",
+    "gather",
+}
+
+
+def fnv64(data: bytes) -> int:
+    h = FNV_OFFSET
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & U64
+    return h
+
+
+class ParseError(Exception):
+    pass
+
+
+class Parser:
+    """Cursor parser mirroring rust/src/ir/parser.rs (accepting subset)."""
+
+    def __init__(self, src: str):
+        self.src = src
+        self.pos = 0
+
+    def rest(self) -> str:
+        return self.src[self.pos:]
+
+    def peek(self):
+        return self.src[self.pos] if self.pos < len(self.src) else None
+
+    def bump(self):
+        c = self.peek()
+        if c is not None:
+            self.pos += 1
+        return c
+
+    def fail(self, msg: str):
+        line = self.src.count("\n", 0, self.pos) + 1
+        raise ParseError(f"line {line}: {msg}")
+
+    def skip_ws(self):
+        while self.peek() in (" ", "\t", "\n", "\r"):
+            self.bump()
+
+    def skip_inline_ws(self):
+        while self.peek() in (" ", "\t"):
+            self.bump()
+
+    def eat(self, c: str) -> bool:
+        if self.peek() == c:
+            self.bump()
+            return True
+        return False
+
+    def expect(self, c: str):
+        if not self.eat(c):
+            self.fail(f"expected '{c}', found {self.rest()[:12]!r}")
+
+    def eat_str(self, s: str) -> bool:
+        if self.rest().startswith(s):
+            self.pos += len(s)
+            return True
+        return False
+
+    def expect_kw(self, kw: str):
+        if not self.eat_str(kw):
+            self.fail(f"expected '{kw}', found {self.rest()[:12]!r}")
+
+    def ident(self) -> str:
+        c = self.peek()
+        if c is None or not (c.isascii() and (c.isalpha() or c == "_")):
+            self.fail(f"expected identifier, found {self.rest()[:12]!r}")
+        out = []
+        while True:
+            c = self.peek()
+            if c is not None and c.isascii() and (c.isalnum() or c in "_./-"):
+                out.append(c)
+                self.bump()
+            else:
+                return "".join(out)
+
+    def uint(self) -> int:
+        c = self.peek()
+        if c is None or not c.isdigit():
+            self.fail(f"expected integer, found {self.rest()[:12]!r}")
+        n = 0
+        while (c := self.peek()) is not None and c.isdigit():
+            n = n * 10 + int(c)
+            self.bump()
+        return n
+
+    def int_(self) -> int:
+        neg = self.eat("-")
+        n = self.uint()
+        return -n if neg else n
+
+    def float_(self) -> float:
+        out = []
+        while (c := self.peek()) is not None and (
+            (c.isascii() and c.isalnum()) or c in "+-."
+        ):
+            out.append(c)
+            self.bump()
+        try:
+            return float("".join(out))
+        except ValueError:
+            self.fail(f"expected float literal, found {''.join(out)!r}")
+
+    def quoted(self) -> str:
+        self.expect('"')
+        out = []
+        escapes = {'"': '"', "\\": "\\", "n": "\n", "t": "\t", "r": "\r"}
+        while True:
+            c = self.bump()
+            if c is None or c == "\n":
+                self.fail("unterminated string literal")
+            if c == '"':
+                return "".join(out)
+            if c == "\\":
+                e = self.bump()
+                if e not in escapes:
+                    self.fail(f"bad escape \\{e}")
+                out.append(escapes[e])
+            else:
+                out.append(c)
+
+    def uint_list(self):
+        self.expect("[")
+        xs = []
+        self.skip_inline_ws()
+        if self.eat("]"):
+            return xs
+        while True:
+            xs.append(self.uint())
+            self.skip_inline_ws()
+            if self.eat(","):
+                self.skip_inline_ws()
+            else:
+                self.expect("]")
+                return xs
+
+    def tensor_type(self):
+        self.expect_kw("tensor")
+        self.expect("<")
+        body = []
+        while True:
+            c = self.peek()
+            if c is None or c == "\n":
+                self.fail("unterminated tensor type")
+            self.bump()
+            if c == ">":
+                break
+            body.append(c)
+        pieces = "".join(body).split("x")
+        dtype, dims_s = pieces[-1], pieces[:-1]
+        if dtype not in DTYPE_TAGS:
+            self.fail(f"bad dtype '{dtype}'")
+        dims = []
+        for d in dims_s:
+            n = int(d)
+            if n <= 0:
+                self.fail(f"non-positive dimension {n}")
+            dims.append(n)
+        return (DTYPE_TAGS[dtype], dims)
+
+
+class Program:
+    def __init__(self, name: str):
+        self.name = name
+        self.scopes = [""]  # ScopeId 0 is the root
+        self.args = []      # (name, kind_tag, scope_id, ty)
+        self.nodes = []     # (op_tag, attrs_bytes, inputs, ty, scope_id)
+        self.outputs = []
+
+    def intern_scope(self, path: str) -> int:
+        if path in self.scopes:
+            return self.scopes.index(path)
+        self.scopes.append(path)
+        return len(self.scopes) - 1
+
+
+def parse_program(src: str) -> Program:
+    p = Parser(src)
+    p.skip_ws()
+    p.expect_kw("func")
+    p.skip_inline_ws()
+    p.expect("@")
+    prog = Program(p.ident())
+    p.skip_inline_ws()
+    p.expect("(")
+    p.skip_ws()
+    if p.peek() != ")":
+        while True:
+            parse_arg(p, prog)
+            p.skip_ws()
+            if p.eat(","):
+                p.skip_ws()
+            else:
+                break
+    p.expect(")")
+    p.skip_ws()
+    p.expect_kw("->")
+    p.skip_ws()
+    p.expect("(")
+    p.skip_ws()
+    if p.peek() != ")":
+        while True:
+            p.tensor_type()  # declared result types: checked by Rust, skipped here
+            p.skip_ws()
+            if p.eat(","):
+                p.skip_ws()
+            else:
+                break
+    p.expect(")")
+    p.skip_ws()
+    p.expect("{")
+    while True:
+        p.skip_ws()
+        if p.eat_str("return"):
+            break
+        if p.peek() == "%":
+            parse_node(p, prog)
+        else:
+            p.fail(f"expected node or return, found {p.rest()[:12]!r}")
+    p.skip_inline_ws()
+    while p.peek() == "%":
+        prog.outputs.append(value_ref(p, prog))
+        p.skip_inline_ws()
+        if p.eat(","):
+            p.skip_inline_ws()
+        else:
+            break
+    p.skip_ws()
+    p.expect("}")
+    p.skip_ws()
+    if p.peek() is not None:
+        p.fail("unexpected input after '}'")
+    return prog
+
+
+def value_ref(p: Parser, prog: Program) -> int:
+    p.expect("%")
+    c = p.peek()
+    if c is not None and c.isdigit():
+        n = p.uint()
+        if n >= len(prog.nodes):
+            p.fail(f"%{n} referenced before its definition")
+        return len(prog.args) + n
+    if not p.eat_str("arg"):
+        p.fail("expected %N or %argN")
+    n = p.uint()
+    if n >= len(prog.args):
+        p.fail(f"%arg{n} out of range")
+    return n
+
+
+def parse_arg(p: Parser, prog: Program):
+    p.expect("%")
+    if not p.eat_str("arg"):
+        p.fail("expected %argN")
+    n = p.uint()
+    if n != len(prog.args):
+        p.fail(f"arguments out of order: expected %arg{len(prog.args)}")
+    p.skip_inline_ws()
+    p.expect(":")
+    p.skip_inline_ws()
+    ty = p.tensor_type()
+    p.skip_inline_ws()
+    p.expect("{")
+    p.skip_inline_ws()
+    kind = p.ident()
+    if kind not in ARG_KIND_TAGS:
+        p.fail(f"bad arg kind '{kind}'")
+    name = None
+    scope = None
+    p.skip_inline_ws()
+    while p.eat(","):
+        p.skip_inline_ws()
+        key = p.ident()
+        p.skip_inline_ws()
+        p.expect("=")
+        p.skip_inline_ws()
+        val = p.quoted()
+        if key == "name" and name is None:
+            name = val
+        elif key == "scope" and scope is None:
+            scope = val
+        else:
+            p.fail(f"bad or duplicate arg attribute '{key}'")
+        p.skip_inline_ws()
+    p.expect("}")
+    scope_id = 0 if scope is None else prog.intern_scope(scope)
+    if name is None:
+        name = f"arg{n}"
+    prog.args.append((name, ARG_KIND_TAGS[kind], scope_id, ty))
+
+
+def attr_open(p: Parser, key: str):
+    p.skip_inline_ws()
+    p.expect("{")
+    p.skip_inline_ws()
+    p.expect_kw(key)
+    p.skip_inline_ws()
+    p.expect("=")
+    p.skip_inline_ws()
+
+
+def attr_close(p: Parser):
+    p.skip_inline_ws()
+    p.expect("}")
+
+
+def op_attrs(p: Parser, opname: str) -> bytes:
+    """Consume the op's attribute block and return its encoded bytes
+    (what binary.rs::encode_op writes after the tag)."""
+    if opname in SIMPLE_OPS:
+        if p.peek() == "{":
+            p.fail(f"op '{opname}' takes no attributes")
+        return b""
+    if opname == "const":
+        attr_open(p, "value")
+        v = p.float_()
+        attr_close(p)
+        return struct.pack("<d", v)
+    if opname == "iota":
+        attr_open(p, "dim")
+        d = p.uint()
+        attr_close(p)
+        return struct.pack("<Q", d)
+    if opname == "compare":
+        attr_open(p, "dir")
+        d = p.ident()
+        if d not in CMP_TAGS:
+            p.fail(f"bad compare dir '{d}'")
+        attr_close(p)
+        return struct.pack("<B", CMP_TAGS[d])
+    if opname == "dot":
+        attr_open(p, "batch")
+        lhs_b = p.uint_list()
+        p.expect("x")
+        rhs_b = p.uint_list()
+        p.skip_inline_ws()
+        p.expect(",")
+        p.skip_inline_ws()
+        p.expect_kw("contract")
+        p.skip_inline_ws()
+        p.expect("=")
+        p.skip_inline_ws()
+        lhs_c = p.uint_list()
+        p.expect("x")
+        rhs_c = p.uint_list()
+        attr_close(p)
+        return b"".join(enc_usizes(xs) for xs in (lhs_b, rhs_b, lhs_c, rhs_c))
+    if opname in ("reduce_sum", "reduce_max"):
+        attr_open(p, "dims")
+        dims = p.uint_list()
+        attr_close(p)
+        return enc_usizes(dims)
+    if opname == "broadcast_in_dim":
+        attr_open(p, "broadcast_dims")
+        dims = p.uint_list()
+        attr_close(p)
+        return enc_usizes(dims)
+    if opname == "transpose":
+        attr_open(p, "perm")
+        perm = p.uint_list()
+        attr_close(p)
+        return enc_usizes(perm)
+    if opname == "segment_sum":
+        attr_open(p, "num")
+        num = p.int_()
+        attr_close(p)
+        return struct.pack("<q", num)
+    p.fail(f"unknown op '{opname}'")
+
+
+def parse_node(p: Parser, prog: Program):
+    p.expect("%")
+    n = p.uint()
+    if n != len(prog.nodes):
+        p.fail(f"nodes out of order: expected %{len(prog.nodes)}")
+    p.skip_inline_ws()
+    p.expect("=")
+    p.skip_inline_ws()
+    opname = p.ident()
+    if opname not in OP_TAGS:
+        p.fail(f"unknown op '{opname}'")
+    inputs = []
+    p.skip_inline_ws()
+    while p.peek() == "%":
+        inputs.append(value_ref(p, prog))
+        p.skip_inline_ws()
+        if p.eat(","):
+            p.skip_inline_ws()
+            if p.peek() != "%":
+                p.fail("expected value id after ','")
+        else:
+            break
+    attrs = op_attrs(p, opname)
+    p.skip_inline_ws()
+    p.expect(":")
+    p.skip_inline_ws()
+    ty = p.tensor_type()
+    # Optional `// scope/path` trailer, to end of line.
+    p.skip_inline_ws()
+    scope_id = 0
+    if p.rest().startswith("//"):
+        p.bump()
+        p.bump()
+        p.skip_inline_ws()
+        path = []
+        while (c := p.peek()) is not None and c != "\n":
+            path.append(c)
+            p.bump()
+        path = "".join(path).rstrip()
+        if not path:
+            p.fail("empty scope path after '//'")
+        scope_id = prog.intern_scope(path)
+    prog.nodes.append((OP_TAGS[opname], attrs, inputs, ty, scope_id))
+
+
+# ---- encoding (mirrors binary.rs::Enc) ------------------------------------
+
+
+def enc_str(s: str) -> bytes:
+    b = s.encode("utf-8")
+    return struct.pack("<I", len(b)) + b
+
+
+def enc_usizes(xs) -> bytes:
+    return struct.pack("<I", len(xs)) + b"".join(struct.pack("<Q", x) for x in xs)
+
+
+def enc_ty(ty) -> bytes:
+    dtype_tag, dims = ty
+    out = struct.pack("<B", dtype_tag) + struct.pack("<I", len(dims))
+    return out + b"".join(struct.pack("<q", d) for d in dims)
+
+
+def encode_program(prog: Program) -> bytes:
+    e = [enc_str(prog.name), struct.pack("<I", len(prog.scopes))]
+    e += [enc_str(s) for s in prog.scopes]
+    e.append(struct.pack("<I", len(prog.args)))
+    for name, kind_tag, scope_id, ty in prog.args:
+        e.append(enc_str(name))
+        e.append(struct.pack("<B", kind_tag))
+        e.append(struct.pack("<I", scope_id))
+        e.append(enc_ty(ty))
+    e.append(struct.pack("<I", len(prog.nodes)))
+    for op_tag, attrs, inputs, ty, scope_id in prog.nodes:
+        e.append(struct.pack("<B", op_tag))
+        e.append(attrs)
+        e.append(struct.pack("<I", len(inputs)))
+        e += [struct.pack("<I", v) for v in inputs]
+        e.append(enc_ty(ty))
+        e.append(struct.pack("<I", scope_id))
+    e.append(struct.pack("<I", len(prog.outputs)))
+    e += [struct.pack("<I", v) for v in prog.outputs]
+    payload = b"".join(e)
+    header = (
+        MAGIC
+        + struct.pack("<H", FORMAT_VERSION)
+        + struct.pack("<H", KIND_PROGRAM)
+        + struct.pack("<Q", len(payload))
+        + struct.pack("<Q", fnv64(payload))
+        + b"\x00" * 8
+    )
+    return header + payload
+
+
+def main(argv) -> int:
+    check = "--check" in argv
+    files = [a for a in argv if not a.startswith("--")]
+    if not files:
+        root = pathlib.Path(__file__).resolve().parent.parent
+        files = sorted(str(p) for p in (root / "configs" / "corpus").glob("*.pir"))
+    if not files:
+        print("pallas_bin: no input files", file=sys.stderr)
+        return 2
+    failures = 0
+    for f in files:
+        src = pathlib.Path(f).read_text()
+        try:
+            blob = encode_program(parse_program(src))
+        except ParseError as e:
+            print(f"{f}: {e}", file=sys.stderr)
+            return 2
+        out = pathlib.Path(f).with_suffix(".pbp")
+        if check:
+            if not out.exists():
+                print(f"{f}: MISSING golden {out}")
+                failures += 1
+            elif out.read_bytes() != blob:
+                print(f"{f}: golden {out} is STALE (re-run pallas_bin.py)")
+                failures += 1
+            else:
+                print(f"{f}: golden in sync ({len(blob)} bytes)")
+        else:
+            out.write_bytes(blob)
+            print(f"wrote {out} ({len(blob)} bytes)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    # Sanity-pin the FNV vectors binary.rs pins (util/hash.rs).
+    assert fnv64(b"") == 0xCBF29CE484222325
+    assert fnv64(b"a") == 0xAF63DC4C8601EC8C
+    assert fnv64(b"foobar") == 0x85944171F73967E8
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,803 @@
+//! "pallas-bin": the versioned binary interchange format (`.pbp`) for
+//! programs and partition plans (DESIGN.md §13).
+//!
+//! The textual IR (§10) is the human frontend; this is the machine one —
+//! what replicas, caches, and CI artifacts ship instead of re-parsing
+//! text on every cold load. Layout:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  b"PLSB"
+//!      4     2  format version (u16 LE) — currently 1
+//!      6     2  kind    (u16 LE): 1 = program (Func), 2 = PartitionPlan
+//!      8     8  payload length (u64 LE)
+//!     16     8  payload integrity hash: FNV-1a 64 (util::hash, pinned)
+//!     24     8  reserved, must be zero
+//!     32     —  payload
+//! ```
+//!
+//! The 32-byte fixed header is mmap-friendly: a reader can classify and
+//! integrity-check a blob without decoding it. All integers are
+//! little-endian; floats travel as `f64::to_bits` so round-trips are
+//! bit-exact (`-0.0`, subnormals, and the canonical NaN survive).
+//!
+//! The decoder is total: every read is bounds-checked, counts are
+//! validated against the remaining payload before allocation, reserved
+//! bytes must be zero, trailing bytes are rejected, and decoded programs
+//! must pass [`crate::ir::verify::verify`]. Corrupt or version-skewed
+//! input yields a [`DecodeError`] naming what went wrong — never a panic.
+//!
+//! Version policy: the format version is bumped only for layout changes
+//! that old decoders cannot skip; a decoder rejects unknown versions with
+//! a diagnostic naming both the blob's version and its own.
+
+use std::fmt;
+
+use crate::cost::composite::{Evaluation, PipelineEval};
+use crate::cost::liveness::MemoryEstimate;
+use crate::ir::graph::{Arg, ArgKind, Func, Node, ScopeId, ValueId};
+use crate::ir::op::{CmpDir, DotDims, OpKind, ReduceKind};
+use crate::ir::types::{DType, TensorType};
+use crate::session::plan::{PartitionPlan, ShardSpec};
+use crate::sim::exec::RuntimeEstimate;
+use crate::spmd::collectives::CollectiveStats;
+use crate::util::hash::fnv64;
+
+/// File magic: "PaLlaS Binary".
+pub const MAGIC: [u8; 4] = *b"PLSB";
+/// Format version this build encodes and decodes.
+pub const FORMAT_VERSION: u16 = 1;
+/// Header size in bytes (fixed across versions by policy).
+pub const HEADER_LEN: usize = 32;
+/// Payload kind: a [`Func`] program.
+pub const KIND_PROGRAM: u16 = 1;
+/// Payload kind: a [`PartitionPlan`].
+pub const KIND_PLAN: u16 = 2;
+
+/// Decode failure: corrupt bytes, version skew, or a payload that does
+/// not verify. Carries a human-readable diagnostic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodeError {
+    pub msg: String,
+}
+
+impl DecodeError {
+    fn new(msg: impl Into<String>) -> DecodeError {
+        DecodeError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "pallas-bin decode error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+fn kind_name(kind: u16) -> &'static str {
+    match kind {
+        KIND_PROGRAM => "program",
+        KIND_PLAN => "partition plan",
+        _ => "unknown",
+    }
+}
+
+/// Does this byte slice start with the pallas-bin magic? (Used to sniff
+/// `@file.pbp` request payloads apart from textual IR.)
+pub fn is_pallas_bin(bytes: &[u8]) -> bool {
+    bytes.len() >= MAGIC.len() && bytes[..MAGIC.len()] == MAGIC
+}
+
+/// Payload kind of a framed blob, if the magic matches (no validation
+/// beyond the first 8 header bytes).
+pub fn sniff_kind(bytes: &[u8]) -> Option<u16> {
+    if !is_pallas_bin(bytes) || bytes.len() < 8 {
+        return None;
+    }
+    Some(u16::from_le_bytes([bytes[6], bytes[7]]))
+}
+
+// ---------------------------------------------------------------------------
+// Encoder
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i64(&mut self, v: i64) {
+        self.u64(v as u64);
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn count(&mut self, n: usize) {
+        self.u32(u32::try_from(n).expect("pallas-bin: count exceeds u32"));
+    }
+    fn str(&mut self, s: &str) {
+        self.count(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn usizes(&mut self, xs: &[usize]) {
+        self.count(xs.len());
+        for &x in xs {
+            self.u64(x as u64);
+        }
+    }
+    fn ty(&mut self, t: &TensorType) {
+        self.u8(dtype_tag(t.dtype));
+        self.count(t.dims.len());
+        for &d in &t.dims {
+            self.i64(d);
+        }
+    }
+}
+
+fn dtype_tag(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::BF16 => 1,
+        DType::I32 => 2,
+        DType::Bool => 3,
+    }
+}
+
+fn cmp_tag(d: CmpDir) -> u8 {
+    match d {
+        CmpDir::Lt => 0,
+        CmpDir::Le => 1,
+        CmpDir::Gt => 2,
+        CmpDir::Ge => 3,
+        CmpDir::Eq => 4,
+        CmpDir::Ne => 5,
+    }
+}
+
+fn encode_op(e: &mut Enc, op: &OpKind) {
+    e.u8(op.kind_id() as u8);
+    match op {
+        OpKind::Const { value } => e.f64(*value),
+        OpKind::Iota { dim } => e.u64(*dim as u64),
+        OpKind::Compare { dir } => e.u8(cmp_tag(*dir)),
+        OpKind::Dot(d) => {
+            e.usizes(&d.lhs_batch);
+            e.usizes(&d.rhs_batch);
+            e.usizes(&d.lhs_contract);
+            e.usizes(&d.rhs_contract);
+        }
+        OpKind::Reduce { dims, .. } => e.usizes(dims),
+        OpKind::Broadcast { dims } => e.usizes(dims),
+        OpKind::Transpose { perm } => e.usizes(perm),
+        OpKind::SegmentSum { num } => e.i64(*num),
+        _ => {}
+    }
+}
+
+/// Frame a payload with the 32-byte pallas-bin header.
+fn frame(kind: u16, payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&kind.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fnv64(&payload).to_le_bytes());
+    out.extend_from_slice(&[0u8; 8]);
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Encode a program. `decode_program(encode_program(f))` returns a `Func`
+/// equal to `f` — and stronger than structural equality: the scope intern
+/// table is carried verbatim, so even `ScopeId`s survive.
+pub fn encode_program(f: &Func) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.str(&f.name);
+    e.count(f.scopes.len());
+    for s in &f.scopes {
+        e.str(s);
+    }
+    e.count(f.args.len());
+    for a in &f.args {
+        e.str(&a.name);
+        e.u8(a.kind.kind_id() as u8);
+        e.u32(a.scope.0);
+        e.ty(&a.ty);
+    }
+    e.count(f.nodes.len());
+    for n in &f.nodes {
+        encode_op(&mut e, &n.op);
+        e.count(n.inputs.len());
+        for v in &n.inputs {
+            e.u32(v.0);
+        }
+        e.ty(&n.ty);
+        e.u32(n.scope.0);
+    }
+    e.count(f.outputs.len());
+    for o in &f.outputs {
+        e.u32(o.0);
+    }
+    frame(KIND_PROGRAM, e.buf)
+}
+
+/// Encode a partition plan. Floats are bit-exact, so
+/// `decode_plan(encode_plan(p)).to_json() == p.to_json()` byte for byte.
+pub fn encode_plan(p: &PartitionPlan) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.count(p.mesh_axes.len());
+    for (name, size) in &p.mesh_axes {
+        e.str(name);
+        e.i64(*size);
+    }
+    for specs in [&p.input_specs, &p.output_specs] {
+        e.count(specs.len());
+        for s in specs.iter() {
+            e.str(&s.name);
+            e.count(s.tilings.len());
+            for (axis, dim) in &s.tilings {
+                e.str(axis);
+                e.u64(*dim as u64);
+            }
+        }
+    }
+    let ev = &p.eval;
+    e.i64(ev.memory.peak_bytes);
+    e.i64(ev.memory.arg_bytes);
+    e.u64(ev.memory.peak_node as u64);
+    e.f64(ev.runtime.compute_seconds);
+    e.f64(ev.runtime.memory_seconds);
+    e.f64(ev.runtime.op_seconds);
+    e.f64(ev.runtime.collective_seconds);
+    e.f64(ev.runtime.total_flops);
+    let c = &ev.collectives;
+    e.u64(c.all_reduce_count as u64);
+    e.i64(c.all_reduce_bytes);
+    e.u64(c.all_gather_count as u64);
+    e.i64(c.all_gather_bytes);
+    e.u64(c.send_count as u64);
+    e.i64(c.send_bytes);
+    e.u64(c.recv_count as u64);
+    e.i64(c.recv_bytes);
+    e.u8(ev.fits_memory as u8);
+    e.f64(ev.cost);
+    match &ev.pipeline {
+        None => e.u8(0),
+        Some(pe) => {
+            e.u8(1);
+            e.u64(pe.stages as u64);
+            e.u64(pe.microbatches as u64);
+            e.count(pe.cuts.len());
+            for &cut in &pe.cuts {
+                e.u32(cut);
+            }
+            e.f64(pe.bubble_fraction);
+            e.f64(pe.makespan_seconds);
+            e.f64(pe.send_recv_seconds);
+            e.i64(pe.max_stage_peak_bytes);
+        }
+    }
+    e.u64(p.decisions as u64);
+    e.u64(p.episodes_to_best as u64);
+    e.u64(p.worklist_size as u64);
+    e.u64(p.targets as u64);
+    e.f64(p.wall_seconds);
+    e.count(p.trace.len());
+    for t in &p.trace {
+        e.str(t);
+    }
+    frame(KIND_PLAN, e.buf)
+}
+
+// ---------------------------------------------------------------------------
+// Decoder
+// ---------------------------------------------------------------------------
+
+struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+type DResult<T> = Result<T, DecodeError>;
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> DResult<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(DecodeError::new(format!(
+                "truncated payload: {what} at byte {} needs {n} bytes, {} left",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> DResult<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> DResult<u32> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> DResult<u64> {
+        let s = self.take(8, what)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn i64(&mut self, what: &str) -> DResult<i64> {
+        Ok(self.u64(what)? as i64)
+    }
+
+    fn f64(&mut self, what: &str) -> DResult<f64> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    /// Read an item count and sanity-check it against the remaining
+    /// payload (each item occupies at least `min_item_bytes`), so a
+    /// corrupt count cannot drive a huge allocation.
+    fn count(&mut self, min_item_bytes: usize, what: &str) -> DResult<usize> {
+        let n = self.u32(what)? as usize;
+        if n.saturating_mul(min_item_bytes) > self.remaining() {
+            return Err(DecodeError::new(format!(
+                "corrupt count: {n} {what} cannot fit in {} remaining payload bytes",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self, what: &str) -> DResult<String> {
+        let n = self.count(1, what)?;
+        let s = self.take(n, what)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| DecodeError::new(format!("{what}: invalid UTF-8 in string")))
+    }
+
+    fn usizes(&mut self, what: &str) -> DResult<Vec<usize>> {
+        let n = self.count(8, what)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64(what)? as usize);
+        }
+        Ok(out)
+    }
+
+    fn ty(&mut self, what: &str) -> DResult<TensorType> {
+        let dtype = match self.u8("dtype tag")? {
+            0 => DType::F32,
+            1 => DType::BF16,
+            2 => DType::I32,
+            3 => DType::Bool,
+            t => return Err(DecodeError::new(format!("{what}: unknown dtype tag {t}"))),
+        };
+        let rank = self.count(8, "dims")?;
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            let d = self.i64("dim")?;
+            if d <= 0 {
+                return Err(DecodeError::new(format!("{what}: non-positive dimension {d}")));
+            }
+            dims.push(d);
+        }
+        Ok(TensorType { dtype, dims })
+    }
+
+    fn done(&self, what: &str) -> DResult<()> {
+        if self.remaining() != 0 {
+            return Err(DecodeError::new(format!(
+                "{} trailing bytes after the {what} payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Validate the 32-byte header and return the payload slice.
+fn check_header(bytes: &[u8], want_kind: u16) -> DResult<&[u8]> {
+    if bytes.len() < HEADER_LEN {
+        return Err(DecodeError::new(format!(
+            "truncated header: {} bytes, need {HEADER_LEN}",
+            bytes.len()
+        )));
+    }
+    if bytes[..4] != MAGIC {
+        return Err(DecodeError::new(format!(
+            "bad magic {:02x}{:02x}{:02x}{:02x}, expected \"PLSB\" — not a pallas-bin file",
+            bytes[0], bytes[1], bytes[2], bytes[3]
+        )));
+    }
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    if version != FORMAT_VERSION {
+        return Err(DecodeError::new(format!(
+            "unsupported format version {version}; this decoder supports version {FORMAT_VERSION}"
+        )));
+    }
+    let kind = u16::from_le_bytes([bytes[6], bytes[7]]);
+    if kind != want_kind {
+        return Err(DecodeError::new(format!(
+            "kind mismatch: blob holds a {} (kind {kind}), expected a {} (kind {want_kind})",
+            kind_name(kind),
+            kind_name(want_kind)
+        )));
+    }
+    let mut len8 = [0u8; 8];
+    len8.copy_from_slice(&bytes[8..16]);
+    let payload_len = u64::from_le_bytes(len8);
+    let actual = (bytes.len() - HEADER_LEN) as u64;
+    if payload_len != actual {
+        return Err(DecodeError::new(format!(
+            "payload length mismatch: header pins {payload_len} bytes, file carries {actual}"
+        )));
+    }
+    if bytes[24..32].iter().any(|&b| b != 0) {
+        return Err(DecodeError::new("reserved header bytes are not zero".to_string()));
+    }
+    let mut hash8 = [0u8; 8];
+    hash8.copy_from_slice(&bytes[16..24]);
+    let pinned = u64::from_le_bytes(hash8);
+    let payload = &bytes[HEADER_LEN..];
+    let got = fnv64(payload);
+    if got != pinned {
+        return Err(DecodeError::new(format!(
+            "integrity hash mismatch: payload hashes to {got:016x}, header pins {pinned:016x}"
+        )));
+    }
+    Ok(payload)
+}
+
+fn decode_op(d: &mut Dec) -> DResult<OpKind> {
+    let tag = d.u8("op tag")?;
+    Ok(match tag {
+        0 => OpKind::Const { value: d.f64("const value")? },
+        1 => OpKind::Iota { dim: d.u64("iota dim")? as usize },
+        2 => OpKind::Add,
+        3 => OpKind::Sub,
+        4 => OpKind::Mul,
+        5 => OpKind::Div,
+        6 => OpKind::Max,
+        7 => OpKind::Min,
+        8 => OpKind::Neg,
+        9 => OpKind::Exp,
+        10 => OpKind::Log,
+        11 => OpKind::Tanh,
+        12 => OpKind::Rsqrt,
+        13 => OpKind::Sqrt,
+        14 => OpKind::Abs,
+        15 => {
+            let dir = match d.u8("compare dir")? {
+                0 => CmpDir::Lt,
+                1 => CmpDir::Le,
+                2 => CmpDir::Gt,
+                3 => CmpDir::Ge,
+                4 => CmpDir::Eq,
+                5 => CmpDir::Ne,
+                t => return Err(DecodeError::new(format!("unknown compare direction tag {t}"))),
+            };
+            OpKind::Compare { dir }
+        }
+        16 => OpKind::Select,
+        17 => OpKind::Convert,
+        18 => OpKind::Dot(DotDims {
+            lhs_batch: d.usizes("dot lhs_batch")?,
+            rhs_batch: d.usizes("dot rhs_batch")?,
+            lhs_contract: d.usizes("dot lhs_contract")?,
+            rhs_contract: d.usizes("dot rhs_contract")?,
+        }),
+        19 => OpKind::Reduce { kind: ReduceKind::Sum, dims: d.usizes("reduce dims")? },
+        20 => OpKind::Reduce { kind: ReduceKind::Max, dims: d.usizes("reduce dims")? },
+        21 => OpKind::Broadcast { dims: d.usizes("broadcast dims")? },
+        22 => OpKind::Reshape,
+        23 => OpKind::Transpose { perm: d.usizes("transpose perm")? },
+        24 => OpKind::Gather,
+        25 => OpKind::SegmentSum { num: d.i64("segment_sum num")? },
+        t => return Err(DecodeError::new(format!("unknown op tag {t}"))),
+    })
+}
+
+/// Decode a program blob. The result is verified (`ir::verify`) before it
+/// is returned, so a decoded `Func` is as trustworthy as a parsed one.
+pub fn decode_program(bytes: &[u8]) -> DResult<Func> {
+    let payload = check_header(bytes, KIND_PROGRAM)?;
+    let mut d = Dec::new(payload);
+    let name = d.str("function name")?;
+    let num_scopes = d.count(4, "scopes")?;
+    let mut scopes = Vec::with_capacity(num_scopes);
+    for _ in 0..num_scopes {
+        scopes.push(d.str("scope path")?);
+    }
+    if scopes.is_empty() {
+        return Err(DecodeError::new("empty scope table (scope 0 is the root)".to_string()));
+    }
+    let scope_ref = |d: &mut Dec, what: &str| -> DResult<ScopeId> {
+        let s = d.u32(what)?;
+        if s as usize >= num_scopes {
+            return Err(DecodeError::new(format!(
+                "{what}: scope id {s} out of range ({num_scopes} scopes)"
+            )));
+        }
+        Ok(ScopeId(s))
+    };
+    let num_args = d.count(10, "args")?;
+    let mut args = Vec::with_capacity(num_args);
+    for _ in 0..num_args {
+        let name = d.str("arg name")?;
+        let kind = match d.u8("arg kind")? {
+            0 => ArgKind::Parameter,
+            1 => ArgKind::OptState,
+            2 => ArgKind::Input,
+            3 => ArgKind::Constant,
+            t => return Err(DecodeError::new(format!("unknown arg kind tag {t}"))),
+        };
+        let scope = scope_ref(&mut d, "arg scope")?;
+        let ty = d.ty("arg type")?;
+        args.push(Arg { name, ty, kind, scope });
+    }
+    let num_nodes = d.count(11, "nodes")?;
+    let mut nodes = Vec::with_capacity(num_nodes);
+    for ni in 0..num_nodes {
+        let op = decode_op(&mut d)?;
+        let num_inputs = d.count(4, "node inputs")?;
+        let mut inputs = Vec::with_capacity(num_inputs);
+        for _ in 0..num_inputs {
+            let v = d.u32("input value id")?;
+            // Topological-order invariant: a node may only reference
+            // arguments or earlier nodes.
+            if v as usize >= num_args + ni {
+                return Err(DecodeError::new(format!(
+                    "node {ni}: input value id {v} is not an argument or earlier node"
+                )));
+            }
+            inputs.push(ValueId(v));
+        }
+        let ty = d.ty("node type")?;
+        let scope = scope_ref(&mut d, "node scope")?;
+        nodes.push(Node { op, inputs, ty, scope });
+    }
+    let num_outputs = d.count(4, "outputs")?;
+    let mut outputs = Vec::with_capacity(num_outputs);
+    for _ in 0..num_outputs {
+        let v = d.u32("output value id")?;
+        if v as usize >= num_args + num_nodes {
+            return Err(DecodeError::new(format!(
+                "output value id {v} out of range ({} values)",
+                num_args + num_nodes
+            )));
+        }
+        outputs.push(ValueId(v));
+    }
+    d.done("program")?;
+    let f = Func { name, args, nodes, outputs, scopes };
+    crate::ir::verify::verify(&f)
+        .map_err(|e| DecodeError::new(format!("decoded program fails verification: {e}")))?;
+    Ok(f)
+}
+
+/// Decode a partition-plan blob.
+pub fn decode_plan(bytes: &[u8]) -> DResult<PartitionPlan> {
+    let payload = check_header(bytes, KIND_PLAN)?;
+    let mut d = Dec::new(payload);
+    let num_axes = d.count(12, "mesh axes")?;
+    let mut mesh_axes = Vec::with_capacity(num_axes);
+    for _ in 0..num_axes {
+        let name = d.str("mesh axis name")?;
+        let size = d.i64("mesh axis size")?;
+        mesh_axes.push((name, size));
+    }
+    let mut specs = |label: &str| -> DResult<Vec<ShardSpec>> {
+        let n = d.count(8, label)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = d.str("spec name")?;
+            let nt = d.count(12, "tilings")?;
+            let mut tilings = Vec::with_capacity(nt);
+            for _ in 0..nt {
+                let axis = d.str("tiling axis")?;
+                let dim = d.u64("tiling dim")? as usize;
+                tilings.push((axis, dim));
+            }
+            out.push(ShardSpec { name, tilings });
+        }
+        Ok(out)
+    };
+    let input_specs = specs("input specs")?;
+    let output_specs = specs("output specs")?;
+    let memory = MemoryEstimate {
+        peak_bytes: d.i64("peak_bytes")?,
+        arg_bytes: d.i64("arg_bytes")?,
+        peak_node: d.u64("peak_node")? as usize,
+    };
+    let runtime = RuntimeEstimate {
+        compute_seconds: d.f64("compute_seconds")?,
+        memory_seconds: d.f64("memory_seconds")?,
+        op_seconds: d.f64("op_seconds")?,
+        collective_seconds: d.f64("collective_seconds")?,
+        total_flops: d.f64("total_flops")?,
+    };
+    let collectives = CollectiveStats {
+        all_reduce_count: d.u64("all_reduce_count")? as usize,
+        all_reduce_bytes: d.i64("all_reduce_bytes")?,
+        all_gather_count: d.u64("all_gather_count")? as usize,
+        all_gather_bytes: d.i64("all_gather_bytes")?,
+        send_count: d.u64("send_count")? as usize,
+        send_bytes: d.i64("send_bytes")?,
+        recv_count: d.u64("recv_count")? as usize,
+        recv_bytes: d.i64("recv_bytes")?,
+    };
+    let fits_memory = match d.u8("fits_memory")? {
+        0 => false,
+        1 => true,
+        t => return Err(DecodeError::new(format!("bad fits_memory flag {t}"))),
+    };
+    let cost = d.f64("cost")?;
+    let pipeline = match d.u8("pipeline flag")? {
+        0 => None,
+        1 => {
+            let stages = d.u64("pipeline stages")? as usize;
+            let microbatches = d.u64("pipeline microbatches")? as usize;
+            let nc = d.count(4, "pipeline cuts")?;
+            let mut cuts = Vec::with_capacity(nc);
+            for _ in 0..nc {
+                cuts.push(d.u32("pipeline cut")?);
+            }
+            Some(PipelineEval {
+                stages,
+                microbatches,
+                cuts,
+                bubble_fraction: d.f64("bubble_fraction")?,
+                makespan_seconds: d.f64("makespan_seconds")?,
+                send_recv_seconds: d.f64("send_recv_seconds")?,
+                max_stage_peak_bytes: d.i64("max_stage_peak_bytes")?,
+            })
+        }
+        t => return Err(DecodeError::new(format!("bad pipeline-present flag {t}"))),
+    };
+    let eval = Evaluation { memory, runtime, collectives, fits_memory, cost, pipeline };
+    let decisions = d.u64("decisions")? as usize;
+    let episodes_to_best = d.u64("episodes_to_best")? as usize;
+    let worklist_size = d.u64("worklist_size")? as usize;
+    let targets = d.u64("targets")? as usize;
+    let wall_seconds = d.f64("wall_seconds")?;
+    let nt = d.count(4, "trace")?;
+    let mut trace = Vec::with_capacity(nt);
+    for _ in 0..nt {
+        trace.push(d.str("trace line")?);
+    }
+    d.done("plan")?;
+    Ok(PartitionPlan {
+        mesh_axes,
+        input_specs,
+        output_specs,
+        eval,
+        decisions,
+        episodes_to_best,
+        worklist_size,
+        targets,
+        wall_seconds,
+        trace,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::graph::ROOT_SCOPE;
+
+    fn tiny() -> Func {
+        let mut f = Func::new("tiny");
+        let s = f.intern_scope("layer_0/dense");
+        f.args.push(Arg {
+            name: "x".into(),
+            ty: TensorType::f32(&[4, 8]),
+            kind: ArgKind::Input,
+            scope: ROOT_SCOPE,
+        });
+        f.args.push(Arg {
+            name: "w".into(),
+            ty: TensorType::f32(&[8, 2]),
+            kind: ArgKind::Parameter,
+            scope: s,
+        });
+        f.nodes.push(Node {
+            op: OpKind::Dot(DotDims::matmul(2)),
+            inputs: vec![ValueId(0), ValueId(1)],
+            ty: TensorType::f32(&[4, 2]),
+            scope: s,
+        });
+        f.nodes.push(Node {
+            op: OpKind::Tanh,
+            inputs: vec![ValueId(2)],
+            ty: TensorType::f32(&[4, 2]),
+            scope: ROOT_SCOPE,
+        });
+        f.outputs.push(ValueId(3));
+        f
+    }
+
+    #[test]
+    fn program_round_trips_exactly() {
+        let f = tiny();
+        let bytes = encode_program(&f);
+        assert!(is_pallas_bin(&bytes));
+        assert_eq!(sniff_kind(&bytes), Some(KIND_PROGRAM));
+        let back = decode_program(&bytes).unwrap();
+        assert_eq!(back, f);
+        // Stronger than structural equality: the intern table travels
+        // verbatim, ScopeIds included.
+        assert_eq!(back.scopes, f.scopes);
+        // Deterministic encoding.
+        assert_eq!(encode_program(&back), bytes);
+    }
+
+    #[test]
+    fn wrong_magic_names_the_format() {
+        let mut bytes = encode_program(&tiny());
+        bytes[0] = b'X';
+        let err = decode_program(&bytes).unwrap_err();
+        assert!(err.msg.contains("PLSB"), "{err}");
+    }
+
+    #[test]
+    fn version_skew_names_both_versions() {
+        let mut bytes = encode_program(&tiny());
+        bytes[4] = 7;
+        let err = decode_program(&bytes).unwrap_err();
+        assert!(err.msg.contains("version 7"), "{err}");
+        assert!(err.msg.contains(&format!("version {FORMAT_VERSION}")), "{err}");
+    }
+
+    #[test]
+    fn kind_mismatch_is_rejected() {
+        let mut bytes = encode_program(&tiny());
+        // Flip the kind field to "plan" and re-check: the header check
+        // runs before any payload decoding, so this must fail cleanly.
+        bytes[6] = KIND_PLAN as u8;
+        let err = decode_program(&bytes).unwrap_err();
+        assert!(err.msg.contains("kind"), "{err}");
+        assert!(err.msg.contains("partition plan"), "{err}");
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_detected() {
+        let f = tiny();
+        let bytes = encode_program(&f);
+        for i in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut c = bytes.clone();
+                c[i] ^= 1 << bit;
+                assert!(decode_program(&c).is_err(), "flip of byte {i} bit {bit} undetected");
+            }
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_detected() {
+        let bytes = encode_program(&tiny());
+        for n in 0..bytes.len() {
+            assert!(decode_program(&bytes[..n]).is_err(), "truncation to {n} bytes accepted");
+        }
+    }
+}

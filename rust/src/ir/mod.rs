@@ -4,6 +4,7 @@
 //! printer/parser pair that round-trips exactly (DESIGN.md §10).
 
 pub mod autodiff;
+pub mod binary;
 pub mod builder;
 pub mod dce;
 pub mod graph;
@@ -14,6 +15,7 @@ pub mod printer;
 pub mod types;
 pub mod verify;
 
+pub use binary::{decode_plan, decode_program, encode_plan, encode_program, DecodeError};
 pub use builder::GraphBuilder;
 pub use graph::{Arg, ArgKind, Func, Node, ScopeId, ValueId, ROOT_SCOPE};
 pub use op::{CmpDir, DotDims, OpKind, ReduceKind};

@@ -13,6 +13,10 @@
 //!   serve        read JSONL partition requests from stdin, answer on
 //!                stdout through the plan service (--stdin-jsonl)
 //!   batch        answer a JSONL request file through the plan service
+//!   encode       emit a program (.pir or --model) or a plan JSON in the
+//!                versioned pallas-bin binary form (DESIGN.md §13)
+//!   decode       decode a .pbp file back to textual IR / plan JSON,
+//!                optionally re-encoding to check byte-exactness (--check)
 //!   explain      render a plan JSON (or a batch responses.jsonl) as a
 //!                human-readable partitioning narrative
 //!   fig6 / fig7 / fig8 / fig9   regenerate the paper's figures
@@ -22,7 +26,8 @@
 //!               --config path.json --out-dir results
 //! Partition flags: --pin axis[,axis]  --shard name:dim:axis[,...]
 //!                  --program file.pir
-//! Service flags:   --pool N --cache-mb N --out responses.jsonl
+//! Service flags:   --pool N --cache-mb N --cache-dir .plan-cache
+//!                  --out responses.jsonl
 //! Observability:   --trace out.json (Perfetto/chrome://tracing format)
 //!                  --metrics-out metrics.json (counter/histogram snapshot)
 
@@ -41,9 +46,9 @@ use automap::util::cli::Args;
 const VALUE_FLAGS: &[&str] = &[
     "layers", "budgets", "attempts", "seed", "out", "out-dir", "count", "axis", "model",
     "budget", "filter", "ranker", "config", "d-model", "mesh", "pin", "shard", "pool",
-    "cache-mb", "program", "pipeline", "trace", "metrics-out",
+    "cache-mb", "cache-dir", "program", "pipeline", "trace", "metrics-out",
 ];
-const BOOL_FLAGS: &[&str] = &["paper", "grouping", "no-tying", "help", "stdin-jsonl"];
+const BOOL_FLAGS: &[&str] = &["paper", "grouping", "no-tying", "help", "stdin-jsonl", "check"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -71,6 +76,8 @@ fn main() {
         "print" => cmd_print(&args),
         "serve" => cmd_serve(&args),
         "batch" => cmd_batch(&args),
+        "encode" => cmd_encode(&args),
+        "decode" => cmd_decode(&args),
         "explain" => cmd_explain(&args),
         "fig6" | "fig7" => figure_cmd(&args, |s, d| figures::fig6_fig7(s, d).map(|_| ())),
         "fig8" => figure_cmd(&args, |s, d| figures::fig8(s, d).map(|_| ())),
@@ -95,8 +102,8 @@ fn main() {
 fn usage() {
     println!(
         "automap — reproduction of 'Automap: Towards Ergonomic Automated Parallelism'\n\
-         usage: automap <stats|gen-dataset|partition|parse|print|serve|batch|explain|\n\
-                         fig6|fig7|fig8|fig9|all-figures> [flags]\n\
+         usage: automap <stats|gen-dataset|partition|parse|print|serve|batch|encode|decode|\n\
+                         explain|fig6|fig7|fig8|fig9|all-figures> [flags]\n\
          flags: --layers N --budgets a,b,c --attempts N --seed S --paper\n\
                 --model mlp|transformer|graphnet --budget N --filter none|heuristic|learned\n\
                 --mesh model=4[,batch=2] --ranker artifacts/ranker.hlo.txt\n\
@@ -117,6 +124,13 @@ fn usage() {
                 serve --stdin-jsonl [--pool N] [--cache-mb N] [--metrics-out m.json]\n\
                 batch requests.jsonl [--pool N] [--cache-mb N] [--out responses.jsonl]\n\
                       [--trace trace.json] [--metrics-out m.json]\n\
+                both: --cache-dir .plan-cache   persistent plan-cache tier under the LRU\n\
+                      (append-only CRC-framed log; plans survive the process, DESIGN.md §13)\n\
+         binary interchange — pallas-bin (DESIGN.md §13):\n\
+                encode file.pir|plan.json [--out f.pbp]     program text or plan JSON -> binary\n\
+                encode --model mlp [--layers N] [--out f.pbp]\n\
+                decode file.pbp [--out f] [--check]         binary -> textual IR / plan JSON;\n\
+                                                            --check re-encodes and byte-compares\n\
          observability (DESIGN.md §12):\n\
                 partition ... --trace trace.json   record a Perfetto-loadable trace\n\
                 explain plan.json|responses.jsonl  narrate a plan: mesh, cost, shardings,\n\
@@ -203,6 +217,102 @@ fn cmd_print(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `encode [file.pir|plan.json] [--model m] [--out f.pbp]` — emit the
+/// versioned pallas-bin form (DESIGN.md §13). The input is sniffed by
+/// content: a leading `{` is a serialised `PartitionPlan`, anything
+/// else parses as textual IR. `--model` (with `--layers`) encodes a
+/// built-in model directly, no intermediate `.pir` file needed.
+fn cmd_encode(args: &Args) -> anyhow::Result<()> {
+    use automap::ir::binary;
+    let (bytes, default_out) = match args.positional.first() {
+        Some(path) => {
+            if args.get("model").is_some() {
+                anyhow::bail!("encode takes a file or --model, not both");
+            }
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+            let bytes = if text.trim_start().starts_with('{') {
+                let doc = automap::util::json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                let plan = automap::session::PartitionPlan::from_json(&doc)
+                    .map_err(|e| anyhow::anyhow!("{path}: {e:#}"))?;
+                binary::encode_plan(&plan)
+            } else {
+                let f = parse_func(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                binary::encode_program(&f)
+            };
+            let out = std::path::Path::new(path).with_extension("pbp");
+            (bytes, out.display().to_string())
+        }
+        None => {
+            let model = args.get_str("model", "transformer");
+            let f = build_model_func(&model, args.get_usize("layers", 4)?)?;
+            (binary::encode_program(&f), format!("{model}.pbp"))
+        }
+    };
+    let out = args.get_str("out", &default_out);
+    std::fs::write(&out, &bytes).map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+    println!("wrote {out} ({} bytes)", bytes.len());
+    Ok(())
+}
+
+/// `decode file.pbp [--out f] [--check]` — decode pallas-bin back to
+/// the textual form (program -> textual IR, plan -> pretty plan JSON).
+/// `--check` re-encodes the decoded value and byte-compares against the
+/// input, proving `encode(decode(bytes)) == bytes` for this file.
+fn cmd_decode(args: &Args) -> anyhow::Result<()> {
+    use automap::ir::binary;
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("decode needs a file.pbp path"))?;
+    let bytes = std::fs::read(path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let kind = binary::sniff_kind(&bytes);
+    let (text, reencoded, what) = match kind {
+        Some(binary::KIND_PROGRAM) => {
+            let f = binary::decode_program(&bytes).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            let text = print_func(&f);
+            let re = binary::encode_program(&f);
+            let what = format!(
+                "program @{}: {} args, {} nodes, {} outputs",
+                f.name,
+                f.num_args(),
+                f.num_nodes(),
+                f.outputs.len()
+            );
+            (text, re, what)
+        }
+        Some(binary::KIND_PLAN) => {
+            let plan = binary::decode_plan(&bytes).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            let mut text = plan.to_json().pretty();
+            text.push('\n');
+            let re = binary::encode_plan(&plan);
+            let what = format!("plan ({} decisions)", plan.decisions);
+            (text, re, what)
+        }
+        _ => {
+            // Not pallas-bin at all: decode_program produces the
+            // precise header diagnostic (bad magic / truncation).
+            let e = binary::decode_program(&bytes).unwrap_err();
+            anyhow::bail!("{path}: {e}");
+        }
+    };
+    if args.get_bool("check") {
+        if reencoded != bytes {
+            anyhow::bail!("{path}: re-encode mismatch — decode(bytes) did not round-trip");
+        }
+        eprintln!("{path}: check ok — re-encode is byte-identical ({} bytes)", bytes.len());
+    }
+    match args.get("out") {
+        Some(p) => {
+            std::fs::write(p, &text)?;
+            println!("decoded {what}; wrote {p}");
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
 /// `--trace out.json`: arm the global flight recorder before the work
 /// runs. Returns the output path so the caller can dump afterwards.
 fn arm_trace(args: &Args) -> Option<String> {
@@ -240,10 +350,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         anyhow::bail!("serve reads JSONL requests from stdin; pass --stdin-jsonl to confirm");
     }
     let pool = args.get_usize("pool", 2)?;
-    let svc = PlanService::new(ServiceConfig {
+    let svc = PlanService::try_new(ServiceConfig {
         cache_bytes: args.get_usize("cache-mb", 64)? << 20,
+        persist_path: args.get("cache-dir").map(std::path::PathBuf::from),
         ..ServiceConfig::default()
-    });
+    })?;
     let stdout = std::sync::Mutex::new(std::io::stdout());
     let stdin = std::io::stdin();
     let summary = serve_jsonl(&svc, stdin.lock(), &stdout, pool)?;
@@ -269,10 +380,11 @@ fn cmd_batch(args: &Args) -> anyhow::Result<()> {
         requests.push(req);
     }
     let pool = args.get_usize("pool", 2)?;
-    let svc = PlanService::new(ServiceConfig {
+    let svc = PlanService::try_new(ServiceConfig {
         cache_bytes: args.get_usize("cache-mb", 64)? << 20,
+        persist_path: args.get("cache-dir").map(std::path::PathBuf::from),
         ..ServiceConfig::default()
-    });
+    })?;
     let trace = arm_trace(args);
     let (responses, summary) = run_batch(&svc, &requests, pool, 2 * pool.max(1));
     if let Some(path) = &trace {

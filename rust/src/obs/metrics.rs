@@ -270,6 +270,11 @@ pub mod names {
     pub const LEDGER_NODES_REUSED: &str = "ledger.nodes_reused";
     pub const LEDGER_NODES_RECOMPUTED: &str = "ledger.nodes_recomputed";
     pub const PIPELINE_SEARCHES: &str = "pipeline.searches";
+    pub const PERSIST_DISK_HITS: &str = "persist.disk_hits";
+    pub const PERSIST_DISK_MISSES: &str = "persist.disk_misses";
+    pub const PERSIST_APPENDS: &str = "persist.appends";
+    pub const PERSIST_CORRUPT_RECORDS: &str = "persist.corrupt_records";
+    pub const PERSIST_COMPACTIONS: &str = "persist.compactions";
     pub const SERVICE_INFLIGHT_SEARCHES: &str = "service.inflight_searches";
     pub const SERVICE_REQUEST_LATENCY_NS: &str = "service.request_latency_ns";
     pub const SEARCH_RUN_NS: &str = "search.run_ns";
@@ -290,6 +295,11 @@ pub mod names {
         LEDGER_NODES_REUSED,
         LEDGER_NODES_RECOMPUTED,
         PIPELINE_SEARCHES,
+        PERSIST_DISK_HITS,
+        PERSIST_DISK_MISSES,
+        PERSIST_APPENDS,
+        PERSIST_CORRUPT_RECORDS,
+        PERSIST_COMPACTIONS,
     ];
     pub const ALL_GAUGES: &[&str] = &[SERVICE_INFLIGHT_SEARCHES];
     pub const ALL_HISTOGRAMS: &[&str] = &[SERVICE_REQUEST_LATENCY_NS, SEARCH_RUN_NS];

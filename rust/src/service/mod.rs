@@ -13,6 +13,9 @@
 //!   across value-id renumbering;
 //! * [`cache`] — sharded, lock-striped, byte-budgeted LRU of serialised
 //!   plans keyed by fingerprint;
+//! * [`persist`] — the durable tier under the LRU: an append-only,
+//!   CRC-framed, compacting log so plans survive the process (probe
+//!   order memory → disk → search; DESIGN.md §13);
 //! * [`executor`] — root-parallel MCTS fan-out (`K` workers, derived
 //!   seeds, deterministic best-cost merge);
 //! * [`request`] / [`server`] — JSONL request/response schema, in-flight
@@ -24,6 +27,7 @@
 pub mod cache;
 pub mod executor;
 pub mod fingerprint;
+pub mod persist;
 pub mod request;
 pub mod server;
 pub mod throughput;
@@ -31,6 +35,7 @@ pub mod throughput;
 pub use cache::{CacheStats, PlanCache};
 pub use executor::{ExecutorReport, PlanJob};
 pub use fingerprint::{func_fingerprint, request_fingerprint, Fingerprint};
+pub use persist::{DiskTier, DiskTierStats};
 pub use request::{JobDefaults, PartitionRequest, PlanResponse, SearchStats};
 pub use server::{run_batch, serve_jsonl, PlanService, ServeSummary, ServiceConfig};
 pub use throughput::{measure, ThroughputConfig, ThroughputReport};

@@ -1,0 +1,527 @@
+//! Persistent plan-cache tier (DESIGN.md §13): an append-only,
+//! CRC-framed log of `fingerprint → plan JSON` entries that sits under
+//! the sharded in-memory LRU ([`super::cache::PlanCache`]).
+//!
+//! Probe order in the service is memory → disk → search; publishes write
+//! through both tiers. The log outlives the process, which is what turns
+//! the cache from a per-process optimization into a fleet asset: replicas
+//! and CI runs warm from the same file (`actions/cache` carries it
+//! between workflow runs).
+//!
+//! On-disk layout (all integers little-endian):
+//!
+//! ```text
+//! file header (32 bytes, mmap-friendly fixed size):
+//!   0  4  magic b"PLOG"
+//!   4  2  log format version (u16) — currently 1
+//!   6  2  reserved, zero
+//!   8  8  generation (u64): bumped by each compaction
+//!  16 16  reserved, zero
+//! record (repeated until EOF):
+//!   0  4  payload length (u32)
+//!   4  4  CRC-32 (IEEE) of the payload
+//!   8  —  payload: fingerprint (u64) + plan JSON (UTF-8)
+//! ```
+//!
+//! Later records for the same fingerprint supersede earlier ones, so a
+//! `put` never rewrites in place. `open` scans the log, verifies every
+//! CRC, and truncates at the first corrupt record (counting it), so a
+//! torn tail from a killed process costs at most the entries behind it.
+//! When the superseded fraction crosses one half (and the log is past a
+//! minimum size), the tier compacts: live entries are rewritten to a
+//! fresh log with the generation bumped, fsynced, and renamed into place.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::obs::metrics::{metrics, names, Counter};
+use anyhow::{bail, Context, Result};
+
+/// Log file magic.
+pub const LOG_MAGIC: [u8; 4] = *b"PLOG";
+/// Log format version this build reads and writes.
+pub const LOG_VERSION: u16 = 1;
+/// Fixed log header size.
+pub const LOG_HEADER_LEN: u64 = 32;
+/// Per-record framing overhead (length + CRC).
+const RECORD_OVERHEAD: u64 = 8;
+/// Default minimum log size before compaction is considered.
+const DEFAULT_COMPACT_MIN_BYTES: u64 = 1 << 20;
+
+/// CRC-32 (IEEE 802.3, the zlib/PNG polynomial), table-driven.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = 0xffff_ffffu32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    c ^ 0xffff_ffff
+}
+
+/// Location of a live record's payload within the log.
+#[derive(Clone, Copy)]
+struct IndexEntry {
+    offset: u64,
+    len: u32,
+}
+
+struct State {
+    file: File,
+    index: HashMap<u64, IndexEntry>,
+    /// Write position (== file length).
+    tail: u64,
+    generation: u64,
+    /// Bytes occupied by live records, framing included.
+    live_bytes: u64,
+}
+
+/// Point-in-time counters and sizes for one tier instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DiskTierStats {
+    pub entries: usize,
+    pub generation: u64,
+    pub file_bytes: u64,
+    pub live_bytes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub appends: u64,
+    pub corrupt_records: u64,
+    pub compactions: u64,
+}
+
+/// Handles into the process-global metrics registry, resolved once.
+struct TierMetrics {
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    appends: Arc<Counter>,
+    corrupt: Arc<Counter>,
+    compactions: Arc<Counter>,
+}
+
+impl TierMetrics {
+    fn new() -> TierMetrics {
+        let m = metrics();
+        TierMetrics {
+            hits: m.counter(names::PERSIST_DISK_HITS),
+            misses: m.counter(names::PERSIST_DISK_MISSES),
+            appends: m.counter(names::PERSIST_APPENDS),
+            corrupt: m.counter(names::PERSIST_CORRUPT_RECORDS),
+            compactions: m.counter(names::PERSIST_COMPACTIONS),
+        }
+    }
+}
+
+/// The persistent tier: one append-only log plus an in-memory offset
+/// index rebuilt on open.
+pub struct DiskTier {
+    log_path: PathBuf,
+    state: Mutex<State>,
+    compact_min_bytes: u64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    appends: AtomicU64,
+    corrupt_records: AtomicU64,
+    compactions: AtomicU64,
+    mx: TierMetrics,
+}
+
+fn log_header(generation: u64) -> [u8; LOG_HEADER_LEN as usize] {
+    let mut h = [0u8; LOG_HEADER_LEN as usize];
+    h[..4].copy_from_slice(&LOG_MAGIC);
+    h[4..6].copy_from_slice(&LOG_VERSION.to_le_bytes());
+    h[8..16].copy_from_slice(&generation.to_le_bytes());
+    h
+}
+
+impl DiskTier {
+    /// Open (or create) the cache log inside `dir` with the default
+    /// compaction threshold.
+    pub fn open(dir: &Path) -> Result<DiskTier> {
+        Self::open_with(dir, DEFAULT_COMPACT_MIN_BYTES)
+    }
+
+    /// Open with an explicit minimum log size (bytes) before compaction
+    /// is considered — tests use a tiny threshold to force it.
+    pub fn open_with(dir: &Path, compact_min_bytes: u64) -> Result<DiskTier> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        let log_path = dir.join("plans.plog");
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(&log_path)
+            .with_context(|| format!("opening cache log {}", log_path.display()))?;
+        let mut buf = Vec::new();
+        file.read_to_end(&mut buf).context("reading cache log")?;
+
+        let mut corrupt = 0u64;
+        let generation;
+        let mut index = HashMap::new();
+        let tail;
+        if buf.is_empty() {
+            generation = 0;
+            file.write_all(&log_header(0)).context("writing cache log header")?;
+            file.flush()?;
+            tail = LOG_HEADER_LEN;
+        } else if buf.len() < LOG_HEADER_LEN as usize
+            || buf[..4] != LOG_MAGIC
+            || u16::from_le_bytes([buf[4], buf[5]]) != LOG_VERSION
+        {
+            // Unusable header (foreign file, version skew, torn create):
+            // count it and start over rather than guessing at framing.
+            corrupt += 1;
+            generation = 0;
+            file.set_len(0)?;
+            file.seek(SeekFrom::Start(0))?;
+            file.write_all(&log_header(0)).context("rewriting cache log header")?;
+            file.flush()?;
+            tail = LOG_HEADER_LEN;
+        } else {
+            let mut g8 = [0u8; 8];
+            g8.copy_from_slice(&buf[8..16]);
+            generation = u64::from_le_bytes(g8);
+            // Scan records; truncate at the first corrupt one.
+            let mut pos = LOG_HEADER_LEN as usize;
+            loop {
+                if pos == buf.len() {
+                    break;
+                }
+                if buf.len() - pos < RECORD_OVERHEAD as usize {
+                    corrupt += 1;
+                    break;
+                }
+                let len = read_u32_at(&buf, pos) as usize;
+                let crc = read_u32_at(&buf, pos + 4);
+                let start = pos + RECORD_OVERHEAD as usize;
+                if len < 8 || buf.len() - start < len {
+                    corrupt += 1;
+                    break;
+                }
+                let payload = &buf[start..start + len];
+                if crc32(payload) != crc {
+                    corrupt += 1;
+                    break;
+                }
+                let mut fp8 = [0u8; 8];
+                fp8.copy_from_slice(&payload[..8]);
+                let fp = u64::from_le_bytes(fp8);
+                index.insert(fp, IndexEntry { offset: start as u64, len: len as u32 });
+                pos = start + len;
+            }
+            if pos < buf.len() {
+                file.set_len(pos as u64)?;
+            }
+            file.seek(SeekFrom::Start(pos as u64))?;
+            tail = pos as u64;
+        }
+        let live_bytes: u64 = index.values().map(|e| RECORD_OVERHEAD + e.len as u64).sum();
+        let tier = DiskTier {
+            log_path,
+            state: Mutex::new(State { file, index, tail, generation, live_bytes }),
+            compact_min_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            appends: AtomicU64::new(0),
+            corrupt_records: AtomicU64::new(corrupt),
+            compactions: AtomicU64::new(0),
+            mx: TierMetrics::new(),
+        };
+        tier.mx.corrupt.add(corrupt);
+        Ok(tier)
+    }
+
+    pub fn log_path(&self) -> &Path {
+        &self.log_path
+    }
+
+    /// Look up a fingerprint. A corrupt payload read counts as corrupt
+    /// AND a miss; the caller falls through to search either way.
+    pub fn get(&self, fp: u64) -> Option<String> {
+        let mut st = self.state.lock().expect("disk tier poisoned");
+        let entry = match st.index.get(&fp) {
+            Some(e) => *e,
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.mx.misses.add(1);
+                return None;
+            }
+        };
+        match read_payload(&mut st.file, entry) {
+            Some(payload) if payload.len() >= 8 && payload[..8] == fp.to_le_bytes() => {
+                match String::from_utf8(payload[8..].to_vec()) {
+                    Ok(plan) => {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        self.mx.hits.add(1);
+                        Some(plan)
+                    }
+                    Err(_) => self.miss_corrupt(&mut st, fp),
+                }
+            }
+            _ => self.miss_corrupt(&mut st, fp),
+        }
+    }
+
+    fn miss_corrupt(&self, st: &mut State, fp: u64) -> Option<String> {
+        st.index.remove(&fp);
+        self.corrupt_records.fetch_add(1, Ordering::Relaxed);
+        self.mx.corrupt.add(1);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.mx.misses.add(1);
+        None
+    }
+
+    /// Append (or supersede) an entry and flush it to disk. Compacts when
+    /// over half the log is superseded and the log is past the minimum.
+    pub fn put(&self, fp: u64, plan_json: &str) -> Result<()> {
+        let mut st = self.state.lock().expect("disk tier poisoned");
+        let mut payload = Vec::with_capacity(8 + plan_json.len());
+        payload.extend_from_slice(&fp.to_le_bytes());
+        payload.extend_from_slice(plan_json.as_bytes());
+        let mut rec = Vec::with_capacity(RECORD_OVERHEAD as usize + payload.len());
+        rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        rec.extend_from_slice(&crc32(&payload).to_le_bytes());
+        rec.extend_from_slice(&payload);
+        let tail = st.tail;
+        st.file.seek(SeekFrom::Start(tail)).context("seeking cache log tail")?;
+        st.file.write_all(&rec).context("appending cache log record")?;
+        st.file.flush().context("flushing cache log")?;
+        let entry = IndexEntry { offset: tail + RECORD_OVERHEAD, len: payload.len() as u32 };
+        if let Some(old) = st.index.insert(fp, entry) {
+            st.live_bytes -= RECORD_OVERHEAD + old.len as u64;
+        }
+        st.live_bytes += rec.len() as u64;
+        st.tail += rec.len() as u64;
+        self.appends.fetch_add(1, Ordering::Relaxed);
+        self.mx.appends.add(1);
+        let total = st.tail - LOG_HEADER_LEN;
+        if total >= self.compact_min_bytes && st.live_bytes * 2 < total {
+            self.compact(&mut st)?;
+        }
+        Ok(())
+    }
+
+    /// Rewrite the log with live entries only, bumping the generation.
+    /// Crash-safe: the new log is fully written and fsynced under a temp
+    /// name before the rename; a crash leaves the old log intact.
+    fn compact(&self, st: &mut State) -> Result<()> {
+        let mut entries: Vec<(u64, Vec<u8>)> = Vec::with_capacity(st.index.len());
+        let mut fps: Vec<u64> = st.index.keys().copied().collect();
+        fps.sort_unstable();
+        for fp in fps {
+            let e = st.index[&fp];
+            let payload = read_payload(&mut st.file, e)
+                .with_context(|| format!("reading record {fp:016x} during compaction"))?;
+            entries.push((fp, payload));
+        }
+        let generation = st.generation + 1;
+        let tmp_path = self.log_path.with_extension("plog.tmp");
+        let mut tmp = File::create(&tmp_path)
+            .with_context(|| format!("creating {}", tmp_path.display()))?;
+        tmp.write_all(&log_header(generation))?;
+        let mut tail = LOG_HEADER_LEN;
+        let mut index = HashMap::with_capacity(entries.len());
+        for (fp, payload) in &entries {
+            tmp.write_all(&(payload.len() as u32).to_le_bytes())?;
+            tmp.write_all(&crc32(payload).to_le_bytes())?;
+            tmp.write_all(payload)?;
+            index.insert(
+                *fp,
+                IndexEntry { offset: tail + RECORD_OVERHEAD, len: payload.len() as u32 },
+            );
+            tail += RECORD_OVERHEAD + payload.len() as u64;
+        }
+        tmp.sync_all().context("fsyncing compacted cache log")?;
+        drop(tmp);
+        std::fs::rename(&tmp_path, &self.log_path).context("installing compacted cache log")?;
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&self.log_path)
+            .context("reopening compacted cache log")?;
+        *st = State { file, index, tail, generation, live_bytes: tail - LOG_HEADER_LEN };
+        self.compactions.fetch_add(1, Ordering::Relaxed);
+        self.mx.compactions.add(1);
+        Ok(())
+    }
+
+    pub fn stats(&self) -> DiskTierStats {
+        let st = self.state.lock().expect("disk tier poisoned");
+        DiskTierStats {
+            entries: st.index.len(),
+            generation: st.generation,
+            file_bytes: st.tail,
+            live_bytes: st.live_bytes,
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            appends: self.appends.load(Ordering::Relaxed),
+            corrupt_records: self.corrupt_records.load(Ordering::Relaxed),
+            compactions: self.compactions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+fn read_u32_at(buf: &[u8], pos: usize) -> u32 {
+    u32::from_le_bytes([buf[pos], buf[pos + 1], buf[pos + 2], buf[pos + 3]])
+}
+
+fn read_payload(file: &mut File, e: IndexEntry) -> Option<Vec<u8>> {
+    let mut payload = vec![0u8; e.len as usize];
+    file.seek(SeekFrom::Start(e.offset)).ok()?;
+    file.read_exact(&mut payload).ok()?;
+    Some(payload)
+}
+
+impl std::fmt::Debug for DiskTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        write!(
+            f,
+            "DiskTier({}, {} entries, gen {}, {} bytes)",
+            self.log_path.display(),
+            s.entries,
+            s.generation,
+            s.file_bytes
+        )
+    }
+}
+
+/// Validate a log header out-of-band (used by tooling/tests); returns the
+/// generation.
+pub fn read_log_generation(path: &Path) -> Result<u64> {
+    let mut h = [0u8; LOG_HEADER_LEN as usize];
+    let mut f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    f.read_exact(&mut h).context("log shorter than its fixed header")?;
+    if h[..4] != LOG_MAGIC {
+        bail!("bad log magic (expected \"PLOG\")");
+    }
+    let version = u16::from_le_bytes([h[4], h[5]]);
+    if version != LOG_VERSION {
+        bail!("unsupported log version {version}; this build supports version {LOG_VERSION}");
+    }
+    let mut g8 = [0u8; 8];
+    g8.copy_from_slice(&h[8..16]);
+    Ok(u64::from_le_bytes(g8))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("automap-persist-unit-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn put_get_and_supersede() {
+        let dir = temp_dir("putget");
+        let tier = DiskTier::open(&dir).unwrap();
+        assert_eq!(tier.get(1), None);
+        tier.put(1, "{\"v\":1}").unwrap();
+        tier.put(2, "{\"v\":2}").unwrap();
+        assert_eq!(tier.get(1).as_deref(), Some("{\"v\":1}"));
+        tier.put(1, "{\"v\":3}").unwrap();
+        assert_eq!(tier.get(1).as_deref(), Some("{\"v\":3}"), "later records supersede");
+        let s = tier.stats();
+        assert_eq!((s.entries, s.appends, s.hits, s.misses), (2, 3, 2, 1));
+        assert_eq!(s.corrupt_records, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_recovers_the_index() {
+        let dir = temp_dir("reopen");
+        {
+            let tier = DiskTier::open(&dir).unwrap();
+            tier.put(7, "{\"plan\":true}").unwrap();
+        }
+        let tier = DiskTier::open(&dir).unwrap();
+        assert_eq!(tier.get(7).as_deref(), Some("{\"plan\":true}"));
+        assert_eq!(tier.stats().corrupt_records, 0);
+        assert_eq!(read_log_generation(tier.log_path()).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_counted() {
+        let dir = temp_dir("torn");
+        let log = {
+            let tier = DiskTier::open(&dir).unwrap();
+            tier.put(1, "{\"keep\":true}").unwrap();
+            tier.log_path().to_path_buf()
+        };
+        // Simulate a crash mid-append: garbage after the good record.
+        let mut f = OpenOptions::new().append(true).open(&log).unwrap();
+        f.write_all(&[0xde, 0xad, 0xbe]).unwrap();
+        drop(f);
+        let tier = DiskTier::open(&dir).unwrap();
+        assert_eq!(tier.get(1).as_deref(), Some("{\"keep\":true}"));
+        assert_eq!(tier.stats().corrupt_records, 1);
+        // The truncation healed the log: a fresh open is clean.
+        drop(tier);
+        let tier = DiskTier::open(&dir).unwrap();
+        assert_eq!(tier.stats().corrupt_records, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_preserves_entries_and_bumps_generation() {
+        let dir = temp_dir("compact");
+        // Tiny threshold so rewriting the same key triggers compaction.
+        let tier = DiskTier::open_with(&dir, 64).unwrap();
+        for i in 0..20 {
+            tier.put(42, &format!("{{\"rev\":{i}}}")).unwrap();
+            tier.put(7, "{\"stable\":true}").unwrap();
+        }
+        let s = tier.stats();
+        assert!(s.compactions > 0, "superseded log must have compacted: {s:?}");
+        assert_eq!(s.entries, 2);
+        assert_eq!(tier.get(42).as_deref(), Some("{\"rev\":19}"));
+        assert_eq!(tier.get(7).as_deref(), Some("{\"stable\":true}"));
+        let gen = read_log_generation(tier.log_path()).unwrap();
+        assert!(gen >= 1, "compaction bumps the generation");
+        // Entries survive a reopen of the compacted log.
+        drop(tier);
+        let tier = DiskTier::open(&dir).unwrap();
+        assert_eq!(tier.get(42).as_deref(), Some("{\"rev\":19}"));
+        assert_eq!(tier.stats().generation, gen);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn foreign_file_is_reset_not_trusted() {
+        let dir = temp_dir("foreign");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("plans.plog"), b"not a log at all").unwrap();
+        let tier = DiskTier::open(&dir).unwrap();
+        assert_eq!(tier.stats().corrupt_records, 1);
+        tier.put(5, "{}").unwrap();
+        assert_eq!(tier.get(5).as_deref(), Some("{}"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -14,7 +14,10 @@
 //! arbitrary program in the textual IR form (DESIGN.md §10) under
 //! `"program"`: either the program text inline, or `"@path/to/f.pir"`
 //! to read it from a file (resolved against the service's working
-//! directory). The program is parsed and verified before planning, and
+//! directory). `@` files are sniffed by content: a pallas-bin header
+//! (DESIGN.md §13) selects binary decode — `"@path/to/f.pbp"` — and
+//! anything else is parsed as textual IR. The program is verified before
+//! planning, and
 //! the request fingerprint is computed over the *parsed* structure, so
 //! a program request and an equivalent built-in-model request share a
 //! cache line. `"model"` and `"program"` are mutually exclusive.
@@ -216,12 +219,23 @@ impl PartitionRequest {
 
     fn build_func(&self) -> Result<Func> {
         if let Some(src) = &self.program {
-            let text = match src.strip_prefix('@') {
-                Some(path) => std::fs::read_to_string(path)
-                    .map_err(|e| anyhow!("reading program file '{path}': {e}"))?,
-                None => src.clone(),
-            };
-            return crate::ir::parser::parse_func(&text).map_err(|e| anyhow!("program: {e}"));
+            // `@path` files are sniffed by content, not extension: a
+            // pallas-bin header means binary decode (`.pbp`), anything
+            // else is parsed as textual IR (`.pir`). Both spellings of
+            // the same program fingerprint identically because the
+            // fingerprint hashes the decoded structure.
+            if let Some(path) = src.strip_prefix('@') {
+                let bytes = std::fs::read(path)
+                    .map_err(|e| anyhow!("reading program file '{path}': {e}"))?;
+                if crate::ir::binary::is_pallas_bin(&bytes) {
+                    return crate::ir::binary::decode_program(&bytes)
+                        .map_err(|e| anyhow!("program '{path}': {e}"));
+                }
+                let text = String::from_utf8(bytes)
+                    .map_err(|e| anyhow!("program file '{path}' is not UTF-8: {e}"))?;
+                return crate::ir::parser::parse_func(&text).map_err(|e| anyhow!("program: {e}"));
+            }
+            return crate::ir::parser::parse_func(src).map_err(|e| anyhow!("program: {e}"));
         }
         crate::models::build_by_name(&self.model, self.layers).ok_or_else(|| {
             anyhow!("unknown model '{}' (want mlp|transformer|graphnet)", self.model)
@@ -393,6 +407,9 @@ pub struct PlanResponse {
     pub cached: bool,
     /// Served by waiting on another request's in-flight search.
     pub dedup: bool,
+    /// Served from the persistent disk tier (implies `cached`; the plan
+    /// was promoted back into the memory tier on the way out).
+    pub disk: bool,
     /// The serialised `PartitionPlan` (byte-identical across cache hits).
     pub plan_json: Option<String>,
     /// Search-cache statistics — present exactly when this response ran
@@ -408,6 +425,7 @@ impl PlanResponse {
             fingerprint: fingerprint.to_string(),
             cached: false,
             dedup: false,
+            disk: false,
             plan_json: None,
             search: None,
             error: Some(msg),
@@ -427,6 +445,11 @@ impl PlanResponse {
             (Some(p), _) => {
                 fields.push(("cached", Json::Bool(self.cached)));
                 fields.push(("dedup", Json::Bool(self.dedup)));
+                // Key present only for disk-tier hits: memory hits and
+                // fresh searches keep their pre-disk-tier wire shape.
+                if self.disk {
+                    fields.push(("disk", Json::Bool(true)));
+                }
                 if let Some(s) = &self.search {
                     fields.push(("search", s.to_json()));
                 }
@@ -524,6 +547,51 @@ mod tests {
     }
 
     #[test]
+    fn binary_program_files_are_sniffed_and_fingerprint_identically() {
+        let func = crate::models::mlp::build_mlp(&crate::models::mlp::MlpConfig::small()).func;
+        let path = std::env::temp_dir()
+            .join(format!("automap-request-pbp-{}.pbp", std::process::id()));
+        std::fs::write(&path, crate::ir::binary::encode_program(&func)).unwrap();
+        let bin_req = PartitionRequest {
+            id: "b1".into(),
+            program: Some(format!("@{}", path.display())),
+            ..Default::default()
+        };
+        let text_req = PartitionRequest {
+            id: "t1".into(),
+            program: Some(crate::ir::printer::print_func(&func)),
+            ..Default::default()
+        };
+        let model_req = PartitionRequest {
+            id: "m1".into(),
+            model: "mlp".into(),
+            ..Default::default()
+        };
+        let d = JobDefaults::default();
+        let bin_job = bin_req.build_job(&d).unwrap();
+        assert_eq!(bin_job.func.name, "mlp_update");
+        // All three spellings of the same program share one cache line.
+        assert_eq!(bin_job.fingerprint(), text_req.build_job(&d).unwrap().fingerprint());
+        assert_eq!(bin_job.fingerprint(), model_req.build_job(&d).unwrap().fingerprint());
+        std::fs::remove_file(&path).ok();
+        // A corrupt binary file fails with the path in the message.
+        let bad = std::env::temp_dir()
+            .join(format!("automap-request-pbp-bad-{}.pbp", std::process::id()));
+        let mut bytes = crate::ir::binary::encode_program(&func);
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&bad, &bytes).unwrap();
+        let req = PartitionRequest {
+            id: "x".into(),
+            program: Some(format!("@{}", bad.display())),
+            ..Default::default()
+        };
+        let e = req.build_job(&d).unwrap_err();
+        assert!(e.to_string().contains("pallas-bin decode error"), "{e}");
+        std::fs::remove_file(&bad).ok();
+    }
+
+    #[test]
     fn program_requests_reject_conflicts_and_bad_programs() {
         let both = "{\"id\":\"x\",\"model\":\"mlp\",\"program\":\"func @f() -> () { return }\"}";
         let e = PartitionRequest::parse_line(both).unwrap_err();
@@ -602,6 +670,7 @@ mod tests {
             fingerprint: "00ff".into(),
             cached: true,
             dedup: false,
+            disk: false,
             plan_json: Some("{\"decisions\":3}".into()),
             search: None,
             error: None,
@@ -639,6 +708,7 @@ mod tests {
             fingerprint: "00ff".into(),
             cached: false,
             dedup: false,
+            disk: false,
             plan_json: Some("{\"decisions\":3}".into()),
             search: Some(stats),
             error: None,

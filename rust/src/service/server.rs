@@ -7,7 +7,9 @@
 //!
 //! 1. resolve the request into a [`PlanJob`](super::executor::PlanJob)
 //!    and fingerprint it;
-//! 2. probe the plan cache — a hit is served immediately;
+//! 2. probe the plan cache — a hit is served immediately; on a memory
+//!    miss, probe the persistent disk tier (when configured) and promote
+//!    a hit into the memory tier (probe order memory → disk → search);
 //! 3. probe the in-flight table — if an identical search is already
 //!    running, wait for its result instead of starting another
 //!    (two concurrent duplicate requests run ONE search);
@@ -20,7 +22,9 @@
 //! `searches` counter is exact, which the batch acceptance test pins.
 
 use super::cache::{CacheStats, PlanCache};
+use super::persist::{DiskTier, DiskTierStats};
 use super::request::{JobDefaults, PartitionRequest, PlanResponse, SearchStats};
+use anyhow::Result;
 use crate::obs::metrics::{metrics, names, register_service_metrics, Histogram};
 use crate::obs::metrics::{Counter, Gauge, HistogramSnapshot};
 use crate::obs::recorder::recorder;
@@ -63,6 +67,9 @@ pub struct ServiceConfig {
     pub cache_shards: usize,
     /// Total cache byte budget across all shards.
     pub cache_bytes: usize,
+    /// Directory for the persistent plan-cache log (`plans.plog`,
+    /// DESIGN.md §13). `None` disables the disk tier.
+    pub persist_path: Option<std::path::PathBuf>,
 }
 
 impl Default for ServiceConfig {
@@ -71,6 +78,7 @@ impl Default for ServiceConfig {
             defaults: JobDefaults::default(),
             cache_shards: 8,
             cache_bytes: 64 << 20,
+            persist_path: None,
         }
     }
 }
@@ -130,6 +138,9 @@ impl ServiceMetrics {
 /// Shared by reference across front-end threads.
 pub struct PlanService {
     pub cache: PlanCache,
+    /// Persistent tier under the LRU (probe order memory → disk →
+    /// search); `None` when the service runs memory-only.
+    disk: Option<DiskTier>,
     defaults: JobDefaults,
     inflight: Mutex<HashMap<u64, Arc<Inflight>>>,
     searches: AtomicU64,
@@ -155,9 +166,24 @@ pub struct PlanService {
 }
 
 impl PlanService {
+    /// Infallible constructor for memory-only configs (the common case in
+    /// tests and embedding). Panics only if `persist_path` is set and the
+    /// cache log cannot be opened — use [`PlanService::try_new`] to
+    /// handle that.
     pub fn new(cfg: ServiceConfig) -> PlanService {
-        PlanService {
+        Self::try_new(cfg).expect("opening persistent plan-cache tier")
+    }
+
+    /// Construct the service, opening the persistent tier when
+    /// `persist_path` is configured.
+    pub fn try_new(cfg: ServiceConfig) -> Result<PlanService> {
+        let disk = match &cfg.persist_path {
+            Some(dir) => Some(DiskTier::open(dir)?),
+            None => None,
+        };
+        Ok(PlanService {
             cache: PlanCache::new(cfg.cache_shards, cfg.cache_bytes),
+            disk,
             defaults: cfg.defaults,
             inflight: Mutex::new(HashMap::new()),
             searches: AtomicU64::new(0),
@@ -170,7 +196,17 @@ impl PlanService {
             bubble_micros: AtomicU64::new(0),
             mx: ServiceMetrics::new(),
             latency: Histogram::new(),
-        }
+        })
+    }
+
+    /// Requests served from the persistent tier (0 when disabled).
+    pub fn disk_hits(&self) -> u64 {
+        self.disk.as_ref().map_or(0, |d| d.stats().hits)
+    }
+
+    /// Counters and sizes of the persistent tier, if one is attached.
+    pub fn disk_stats(&self) -> Option<DiskTierStats> {
+        self.disk.as_ref().map(|d| d.stats())
     }
 
     /// Snapshot of this service's end-to-end request latency histogram
@@ -275,11 +311,34 @@ impl PlanService {
                 fingerprint: hex,
                 cached: true,
                 dedup: false,
+                disk: false,
                 plan_json: Some(plan_json),
                 search: None,
                 error: None,
             };
             return (resp, Vec::new());
+        }
+
+        // Memory missed: probe the persistent tier. A hit is promoted to
+        // the memory tier so the next identical request never seeks.
+        if let Some(disk) = &self.disk {
+            let dprobe = rec.span("disk.probe", "service", trace_id);
+            let found = disk.get(fp.0);
+            drop(dprobe);
+            if let Some(plan_json) = found {
+                self.cache.put(fp, plan_json.clone());
+                let resp = PlanResponse {
+                    id: req.id.clone(),
+                    fingerprint: hex,
+                    cached: true,
+                    dedup: false,
+                    disk: true,
+                    plan_json: Some(plan_json),
+                    search: None,
+                    error: None,
+                };
+                return (resp, Vec::new());
+            }
         }
 
         // Join an identical in-flight search, or become its leader. The
@@ -296,6 +355,7 @@ impl PlanService {
                     fingerprint: hex,
                     cached: true,
                     dedup: false,
+                    disk: false,
                     plan_json: Some(plan_json),
                     search: None,
                     error: None,
@@ -323,6 +383,7 @@ impl PlanService {
                         fingerprint: hex,
                         cached: true,
                         dedup: true,
+                        disk: false,
                         plan_json: Some(plan_json),
                         search: None,
                         error: None,
@@ -374,6 +435,11 @@ impl PlanService {
                 let plan_json = report.plan.to_json().to_string();
                 let publish = rec.span("cache.publish", "service", trace_id);
                 self.cache.put(fp, plan_json.clone());
+                if let Some(disk) = &self.disk {
+                    // Write-through: a failed append degrades durability
+                    // but must never fail the request itself.
+                    let _ = disk.put(fp.0, &plan_json);
+                }
                 drop(publish);
                 Ok((plan_json, stats))
             }
@@ -392,6 +458,7 @@ impl PlanService {
                 fingerprint: hex,
                 cached: false,
                 dedup: false,
+                disk: false,
                 plan_json: Some(plan_json),
                 search: Some(stats),
                 error: None,
@@ -471,6 +538,9 @@ pub struct ServeSummary {
     pub errors: usize,
     pub searches: u64,
     pub cache_hits: u64,
+    /// Requests served from the persistent tier (DESIGN.md §13); always
+    /// 0 when the service runs without a cache dir.
+    pub disk_hits: u64,
     pub dedup_served: u64,
     pub wall_seconds: f64,
     /// Terminal-state evaluations the run's searches requested / served
@@ -528,6 +598,9 @@ impl ServeSummary {
             ", latency p50 {:.2}ms / p99 {:.2}ms",
             self.latency_p50_ms, self.latency_p99_ms
         ));
+        if self.disk_hits > 0 {
+            s.push_str(&format!(", {} disk-tier hits", self.disk_hits));
+        }
         if self.pipelined_searches > 0 {
             s.push_str(&format!(
                 ", {} pipelined (mean bubble {:.1}%)",
@@ -550,6 +623,7 @@ pub fn run_batch(
     let t0 = std::time::Instant::now();
     let searches0 = service.searches_run();
     let hits0 = service.cache.stats().hits;
+    let disk0 = service.disk_hits();
     let dedup0 = service.dedup_served();
     let sc0 = service.search_cache_counters();
     let pp0 = service.pipelined_counters();
@@ -588,6 +662,7 @@ pub fn run_batch(
         errors: responses.iter().filter(|r| r.error.is_some()).count(),
         searches: service.searches_run() - searches0,
         cache_hits: service.cache.stats().hits - hits0,
+        disk_hits: service.disk_hits() - disk0,
         dedup_served: service.dedup_served() - dedup0,
         wall_seconds: t0.elapsed().as_secs_f64(),
         eval_lookups: sc1.0 - sc0.0,
@@ -614,6 +689,7 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
     let t0 = std::time::Instant::now();
     let searches0 = service.searches_run();
     let hits0 = service.cache.stats().hits;
+    let disk0 = service.disk_hits();
     let dedup0 = service.dedup_served();
     let sc0 = service.search_cache_counters();
     let pp0 = service.pipelined_counters();
@@ -671,6 +747,7 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
         errors: errors.load(Ordering::Relaxed) as usize,
         searches: service.searches_run() - searches0,
         cache_hits: service.cache.stats().hits - hits0,
+        disk_hits: service.disk_hits() - disk0,
         dedup_served: service.dedup_served() - dedup0,
         wall_seconds: t0.elapsed().as_secs_f64(),
         eval_lookups: sc1.0 - sc0.0,

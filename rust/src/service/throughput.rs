@@ -101,6 +101,15 @@ pub struct ThroughputReport {
     /// episode evaluation, so it must stay microscopic next to
     /// `eval_median_ns`.
     pub schedule_sim_median_ns: f64,
+    /// Median ns to parse the bench program from textual IR — the cold
+    /// cost of a `@file.pir` request.
+    pub parse_median_ns: f64,
+    /// Median ns to decode the same program from pallas-bin — the cold
+    /// cost of a `@file.pbp` request (includes verification).
+    pub decode_median_ns: f64,
+    /// `parse_median_ns / decode_median_ns` — what the binary
+    /// interchange buys on cold program loads.
+    pub binary_load_speedup: f64,
     /// Barrier rounds / steal events of the best multi-worker run.
     pub rounds: usize,
     pub steals: usize,
@@ -306,6 +315,32 @@ fn schedule_sim_timing(samples: usize) -> f64 {
     median(out)
 }
 
+/// Median ns of a cold program load through both interchange formats
+/// on the bench program: `parse_func` over its printed textual IR vs
+/// `decode_program` over its pallas-bin encoding (DESIGN.md §13).
+/// Returns `(parse, decode)`.
+fn interchange_timings(samples: usize) -> Result<(f64, f64)> {
+    let func = crate::models::build_by_name("transformer", 2).context("builtin transformer")?;
+    let text = crate::ir::print_func(&func);
+    let bytes = crate::ir::binary::encode_program(&func);
+    let n = samples.max(8);
+    let mut parse_samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        let parsed = crate::ir::parse_func(&text).map_err(|e| anyhow!("{e}"))?;
+        parse_samples.push(t0.elapsed().as_nanos() as f64);
+        black_box(parsed.nodes.len());
+    }
+    let mut decode_samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        let decoded = crate::ir::binary::decode_program(&bytes).map_err(|e| anyhow!("{e}"))?;
+        decode_samples.push(t0.elapsed().as_nanos() as f64);
+        black_box(decoded.nodes.len());
+    }
+    Ok((median(parse_samples), median(decode_samples)))
+}
+
 /// Repo root (one level above the crate manifest).
 fn repo_root() -> Result<std::path::PathBuf> {
     Ok(std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -328,6 +363,7 @@ pub fn measure(cfg: &ThroughputConfig) -> Result<ThroughputReport> {
     let single = run_throughput(1, cfg.budget, cfg.reps)?;
     let multi = run_throughput(cfg.workers, cfg.budget, cfg.reps)?;
     let (step_median_ns, eval_full_median_ns, eval_median_ns) = micro_timings(cfg.micro_samples)?;
+    let (parse_median_ns, decode_median_ns) = interchange_timings(cfg.micro_samples)?;
 
     // Cache-hit latency: prime the service with one search, then time
     // repeat requests (all hits).
@@ -372,6 +408,9 @@ pub fn measure(cfg: &ThroughputConfig) -> Result<ThroughputReport> {
         eval_memo_hit_rate: multi.memo_hit_rate,
         ledger_reuse_rate: multi.ledger_reuse_rate,
         schedule_sim_median_ns: schedule_sim_timing(cfg.micro_samples),
+        parse_median_ns,
+        decode_median_ns,
+        binary_load_speedup: parse_median_ns / decode_median_ns.max(1e-9),
         rounds: multi.rounds,
         steals: multi.steals,
         baseline_single_episodes_per_sec: load_baseline(),
@@ -399,6 +438,9 @@ impl ThroughputReport {
             ("eval_memo_hit_rate", Json::Num(self.eval_memo_hit_rate)),
             ("ledger_reuse_rate", Json::Num(self.ledger_reuse_rate)),
             ("schedule_sim_median_ns", Json::Num(self.schedule_sim_median_ns)),
+            ("parse_median_ns", Json::Num(self.parse_median_ns)),
+            ("decode_median_ns", Json::Num(self.decode_median_ns)),
+            ("binary_load_speedup", Json::Num(self.binary_load_speedup)),
             ("rounds", Json::num(self.rounds as f64)),
             ("steals", Json::num(self.steals as f64)),
             // Debug builds run the per-step incremental-vs-full
@@ -423,6 +465,7 @@ impl ThroughputReport {
             "single {:.0} eps/s ({:.0} evals/s) | {} workers {:.0} eps/s ({:.2}x, {} rounds, \
              {} steals) | step {:.1}us eval ledger {:.1}us vs full {:.1}us ({:.2}x) | \
              memo {:.0}% hit, ledger {:.0}% reuse | schedule sim {:.2}us | \
+             cold load parse {:.1}us vs pallas-bin {:.1}us ({:.2}x) | \
              cache hit median {:.1}us",
             self.single_episodes_per_sec,
             self.single_evals_per_sec,
@@ -438,6 +481,9 @@ impl ThroughputReport {
             100.0 * self.eval_memo_hit_rate,
             100.0 * self.ledger_reuse_rate,
             self.schedule_sim_median_ns / 1e3,
+            self.parse_median_ns / 1e3,
+            self.decode_median_ns / 1e3,
+            self.binary_load_speedup,
             self.cache_hit_median_ns / 1e3
         )
     }

@@ -1,0 +1,241 @@
+//! The binary-interchange wall (tier-1 twin of the CI `binary-corpus`
+//! step): `decode(encode(x)) == x` exactly for every corpus program,
+//! every built-in model, and partition plans with and without pipeline
+//! state; committed `.pbp` goldens must match the live encoder byte for
+//! byte; version/magic/kind skew must fail with a named diagnostic; and
+//! corrupt bytes must error, never panic (DESIGN.md §13).
+
+use automap::cost::composite::{Evaluation, PipelineEval};
+use automap::cost::liveness::MemoryEstimate;
+use automap::ir::{binary, parse_func, print_func};
+use automap::service::func_fingerprint;
+use automap::session::{PartitionPlan, ShardSpec};
+use automap::sim::exec::RuntimeEstimate;
+use automap::spmd::collectives::CollectiveStats;
+use automap::util::json::parse;
+
+fn corpus_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../configs/corpus")
+}
+
+fn corpus_files() -> Vec<std::path::PathBuf> {
+    let dir = corpus_dir();
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("corpus dir {}: {e}", dir.display()))
+        .map(|e| e.expect("corpus entry").path())
+        .filter(|p| p.extension().is_some_and(|x| x == "pir"))
+        .collect();
+    files.sort();
+    assert!(files.len() >= 5, "corpus must not shrink (found {} files)", files.len());
+    files
+}
+
+#[test]
+fn every_corpus_program_round_trips_through_binary() {
+    for p in corpus_files() {
+        let text = std::fs::read_to_string(&p).expect("corpus file readable");
+        let f = parse_func(&text).unwrap_or_else(|e| panic!("{}: {e}", p.display()));
+        let bytes = binary::encode_program(&f);
+        let g = binary::decode_program(&bytes)
+            .unwrap_or_else(|e| panic!("{}: {e}", p.display()));
+        assert_eq!(g, f, "{}: decode(encode(f)) != f", p.display());
+        // The fingerprint is computed over the decoded structure, so
+        // binary and textual spellings share a cache line.
+        assert_eq!(func_fingerprint(&g), func_fingerprint(&f), "{}", p.display());
+        // Encoding is deterministic (goldens are byte-stable).
+        assert_eq!(binary::encode_program(&g), bytes, "{}", p.display());
+    }
+}
+
+#[test]
+fn committed_goldens_match_the_live_encoder_byte_for_byte() {
+    // Every corpus program ships with a committed `.pbp` golden; a
+    // codec change that redefines the byte format must bump the format
+    // version and regenerate them, never silently drift.
+    for p in corpus_files() {
+        let golden = p.with_extension("pbp");
+        let want = std::fs::read(&golden)
+            .unwrap_or_else(|e| panic!("missing golden {}: {e}", golden.display()));
+        let text = std::fs::read_to_string(&p).expect("corpus file readable");
+        let f = parse_func(&text).unwrap_or_else(|e| panic!("{}: {e}", p.display()));
+        assert_eq!(
+            binary::encode_program(&f),
+            want,
+            "{}: encoder output drifted from the committed golden",
+            golden.display()
+        );
+    }
+}
+
+#[test]
+fn built_in_models_round_trip_through_binary() {
+    for model in ["mlp", "transformer", "graphnet"] {
+        let f = automap::models::build_by_name(model, 2).expect("built-in model");
+        let bytes = binary::encode_program(&f);
+        let g = binary::decode_program(&bytes).unwrap_or_else(|e| panic!("{model}: {e}"));
+        assert_eq!(g, f, "{model}: decode(encode(f)) != f");
+        assert_eq!(func_fingerprint(&g), func_fingerprint(&f));
+    }
+}
+
+fn sample_plan(pipeline: bool) -> PartitionPlan {
+    PartitionPlan {
+        mesh_axes: vec![("batch".into(), 2), ("model".into(), 4)],
+        input_specs: vec![
+            ShardSpec { name: "tokens".into(), tilings: vec![("batch".into(), 0)] },
+            ShardSpec { name: "mask".into(), tilings: vec![] },
+        ],
+        output_specs: vec![ShardSpec {
+            name: "output_0".into(),
+            tilings: vec![("batch".into(), 0), ("model".into(), 1)],
+        }],
+        eval: Evaluation {
+            memory: MemoryEstimate { peak_bytes: 123456789, arg_bytes: 1024, peak_node: 17 },
+            runtime: RuntimeEstimate {
+                compute_seconds: 0.001,
+                memory_seconds: 0.0025,
+                op_seconds: 0.0025,
+                collective_seconds: 0.0005,
+                total_flops: 1.5e9,
+            },
+            collectives: CollectiveStats {
+                all_reduce_count: 8,
+                all_reduce_bytes: 4096,
+                all_gather_count: 1,
+                all_gather_bytes: 512,
+                send_count: 16,
+                send_bytes: 2048,
+                recv_count: 16,
+                recv_bytes: 2048,
+            },
+            fits_memory: true,
+            cost: 0.0030000001,
+            pipeline: pipeline.then(|| PipelineEval {
+                stages: 4,
+                microbatches: 8,
+                cuts: vec![3, 7, 11],
+                bubble_fraction: 0.2727272727,
+                makespan_seconds: 0.0041,
+                send_recv_seconds: 0.0002,
+                max_stage_peak_bytes: 98765432,
+            }),
+        },
+        decisions: 7,
+        episodes_to_best: 42,
+        worklist_size: 25,
+        targets: 23,
+        wall_seconds: 1.25,
+        trace: vec![
+            "manual: axis \"batch\" excluded from search".into(),
+            "search: tile w1 dim 1 on \"model\"".into(),
+        ],
+    }
+}
+
+#[test]
+fn plans_round_trip_through_binary_exactly() {
+    for pipelined in [false, true] {
+        let plan = sample_plan(pipelined);
+        let bytes = binary::encode_plan(&plan);
+        let back = binary::decode_plan(&bytes).expect("plan decodes");
+        // PartitionPlan carries f64s and no PartialEq; its serialised
+        // JSON is the canonical byte-exact spelling of the value.
+        assert_eq!(back.to_json().to_string(), plan.to_json().to_string());
+        assert_eq!(binary::encode_plan(&back), bytes, "re-encode is deterministic");
+    }
+}
+
+#[test]
+fn a_searched_plan_survives_binary_interchange() {
+    // Not a synthetic fixture: run a real (tiny) search and push its
+    // plan through the binary form.
+    let req = automap::service::PartitionRequest {
+        id: "bin".into(),
+        model: "mlp".into(),
+        mesh: "batch=2,model=4".into(),
+        budget: 40,
+        ..Default::default()
+    };
+    let svc = automap::service::PlanService::new(automap::service::ServiceConfig::default());
+    let resp = svc.handle(&req);
+    let plan_json = resp.plan_json.expect("search succeeded");
+    let plan = PartitionPlan::from_json(&parse(&plan_json).unwrap()).unwrap();
+    let back = binary::decode_plan(&binary::encode_plan(&plan)).unwrap();
+    assert_eq!(back.to_json().to_string(), plan.to_json().to_string());
+}
+
+#[test]
+fn version_magic_and_kind_skew_fail_with_named_diagnostics() {
+    let f = automap::models::build_by_name("mlp", 2).unwrap();
+    let good = binary::encode_program(&f);
+
+    let mut wrong_version = good.clone();
+    wrong_version[4] = 9; // format_version lives at offset 4 (LE u16)
+    let e = binary::decode_program(&wrong_version).unwrap_err().to_string();
+    assert!(e.contains("version 9"), "diagnostic must name the found version: {e}");
+    assert!(e.contains("version 1"), "diagnostic must name the supported version: {e}");
+
+    let mut wrong_magic = good.clone();
+    wrong_magic[0] = b'X';
+    let e = binary::decode_program(&wrong_magic).unwrap_err().to_string();
+    assert!(e.contains("PLSB"), "diagnostic must name the expected magic: {e}");
+
+    // A program blob is not a plan blob: kind confusion is an error,
+    // not a misparse.
+    let e = binary::decode_plan(&good).unwrap_err().to_string();
+    assert!(e.contains("program") && e.contains("plan"), "kind diagnostic: {e}");
+
+    // Pretty-printed textual IR is obviously not pallas-bin.
+    let e = binary::decode_program(print_func(&f).as_bytes()).unwrap_err().to_string();
+    assert!(e.contains("magic") || e.contains("truncated"), "{e}");
+}
+
+#[test]
+fn corrupt_binary_errors_cleanly_never_panics() {
+    let text = std::fs::read_to_string(corpus_dir().join("all_ops.pir")).unwrap();
+    let bytes = binary::encode_program(&parse_func(&text).unwrap());
+    // Every truncation point is either an error or (trivially, the
+    // full length) the original — never a panic, never a wrong accept.
+    for len in 0..bytes.len() {
+        assert!(binary::decode_program(&bytes[..len]).is_err(), "truncation at {len}");
+    }
+    // Bit flips anywhere in the blob are detected (the payload hash
+    // covers the body; explicit checks cover the header).
+    for i in (0..bytes.len()).step_by(7) {
+        for bit in 0..8 {
+            let mut c = bytes.clone();
+            c[i] ^= 1 << bit;
+            assert!(binary::decode_program(&c).is_err(), "flip byte {i} bit {bit}");
+        }
+    }
+}
+
+#[test]
+fn pre_binary_plan_json_still_parses() {
+    // A plan document serialised before pallas-bin existed (and before
+    // the pipeline subsystem): the JSON schema is pinned — adding the
+    // binary interchange must not invalidate old cached/shipped plans.
+    let legacy = r#"{
+      "mesh": [{"axis": "model", "size": 4}],
+      "inputs": [{"name": "x", "tilings": []},
+                 {"name": "w", "tilings": [{"axis": "model", "dim": 1}]}],
+      "outputs": [{"name": "output_0", "tilings": []}],
+      "eval": {"peak_memory_bytes": 4096, "arg_bytes": 512, "peak_node": 3,
+               "fits_memory": true, "cost": 0.25,
+               "all_reduces": 2, "all_reduce_bytes": 256,
+               "all_gathers": 1, "all_gather_bytes": 128,
+               "compute_seconds": 0.001, "memory_seconds": 0.002,
+               "op_seconds": 0.002, "collective_seconds": 0.0001,
+               "total_flops": 1000000.0},
+      "decisions": 2, "episodes_to_best": 5, "worklist_size": 4,
+      "targets": 4, "wall_seconds": 0.0,
+      "trace": ["search: tile w dim 1 on \"model\""]
+    }"#;
+    let plan = PartitionPlan::from_json(&parse(legacy).unwrap()).unwrap();
+    assert_eq!(plan.mesh_axes, vec![("model".to_string(), 4)]);
+    assert!(plan.eval.pipeline.is_none());
+    assert_eq!(plan.eval.collectives.send_count, 0, "lenient pre-pipeline default");
+    // And the legacy plan is encodable going forward.
+    let back = binary::decode_plan(&binary::encode_plan(&plan)).unwrap();
+    assert_eq!(back.to_json().to_string(), plan.to_json().to_string());
+}

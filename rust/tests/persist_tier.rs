@@ -1,0 +1,150 @@
+//! End-to-end tests for the persistent plan-cache tier (DESIGN.md §13):
+//! the ISSUE acceptance — a fresh process pointed at an existing cache
+//! log serves a previously searched fingerprint without running a
+//! search, byte-identically — plus torn-log recovery, write-through on
+//! publish, and memory-tier promotion of disk hits.
+
+use automap::service::{run_batch, PartitionRequest, PlanService, ServiceConfig};
+
+fn temp_cache_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("automap-persist-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn cfg(dir: &std::path::Path) -> ServiceConfig {
+    ServiceConfig { persist_path: Some(dir.to_path_buf()), ..ServiceConfig::default() }
+}
+
+fn mlp_request(id: &str, seed: u64) -> PartitionRequest {
+    PartitionRequest {
+        id: id.to_string(),
+        model: "mlp".to_string(),
+        mesh: "batch=2,model=4".to_string(),
+        budget: 40,
+        seed,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn acceptance_fresh_process_serves_from_disk_without_search() {
+    let dir = temp_cache_dir("acceptance");
+
+    // "Process" 1: a cold search, written through to the disk tier.
+    let first = {
+        let svc = PlanService::try_new(cfg(&dir)).unwrap();
+        let r = svc.handle(&mlp_request("warm", 7));
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(!r.cached && !r.disk);
+        assert_eq!(svc.searches_run(), 1);
+        let stats = svc.disk_stats().expect("disk tier configured");
+        assert_eq!(stats.appends, 1, "publish writes through to the log");
+        r
+    }; // service dropped — only the log file survives
+
+    // "Process" 2: same fingerprint, fresh memory tier. Must be served
+    // from disk, with zero searches and the byte-identical document.
+    let svc = PlanService::try_new(cfg(&dir)).unwrap();
+    let second = svc.handle(&mlp_request("cold", 7));
+    assert!(second.error.is_none(), "{:?}", second.error);
+    assert!(second.cached, "disk hits count as cached");
+    assert!(second.disk, "response is marked as a disk-tier hit");
+    assert!(!second.dedup);
+    assert_eq!(svc.searches_run(), 0, "no search may run on a disk hit");
+    assert_eq!(svc.disk_hits(), 1);
+    assert_eq!(second.fingerprint, first.fingerprint);
+    assert_eq!(
+        second.plan_json, first.plan_json,
+        "disk-served plan must be byte-identical to the searched one"
+    );
+
+    // The hit was promoted into the memory tier: the next probe is a
+    // plain memory hit, not another disk read.
+    let third = svc.handle(&mlp_request("hot", 7));
+    assert!(third.cached && !third.disk, "promotion makes the next hit a memory hit");
+    assert_eq!(svc.disk_hits(), 1, "disk tier was not probed again");
+    assert_eq!(third.plan_json, first.plan_json);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batch_summary_counts_disk_hits() {
+    let dir = temp_cache_dir("batch");
+    let requests: Vec<PartitionRequest> =
+        (0..3).map(|i| mlp_request(&format!("r{i}"), i as u64)).collect();
+
+    {
+        let svc = PlanService::try_new(cfg(&dir)).unwrap();
+        let (_, summary) = run_batch(&svc, &requests, 2, 4);
+        assert_eq!(summary.errors, 0);
+        assert_eq!(summary.searches, 3);
+        assert_eq!(summary.disk_hits, 0, "cold log, nothing to hit");
+    }
+
+    let svc = PlanService::try_new(cfg(&dir)).unwrap();
+    let (responses, summary) = run_batch(&svc, &requests, 2, 4);
+    assert_eq!(summary.errors, 0);
+    assert_eq!(summary.searches, 0, "warm log answers everything");
+    assert_eq!(summary.disk_hits, 3);
+    assert!(responses.iter().all(|r| r.cached && r.disk));
+    assert!(summary.describe().contains("3 disk-tier hits"), "{}", summary.describe());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_log_tail_is_recovered_and_intact_entries_still_serve() {
+    let dir = temp_cache_dir("torn");
+    let first = {
+        let svc = PlanService::try_new(cfg(&dir)).unwrap();
+        svc.handle(&mlp_request("a", 3))
+    };
+
+    // Simulate a crash mid-append: garbage after the valid record.
+    let log = dir.join("plans.plog");
+    let mut bytes = std::fs::read(&log).unwrap();
+    bytes.extend_from_slice(&[0xde, 0xad, 0xbe, 0xef, 0x01]);
+    std::fs::write(&log, &bytes).unwrap();
+
+    let svc = PlanService::try_new(cfg(&dir)).unwrap();
+    let r = svc.handle(&mlp_request("b", 3));
+    assert!(r.cached && r.disk, "the intact record still serves");
+    assert_eq!(r.plan_json, first.plan_json);
+    let stats = svc.disk_stats().unwrap();
+    assert_eq!(stats.corrupt_records, 1, "the torn tail is counted");
+    assert_eq!(stats.entries, 1);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn distinct_fingerprints_coexist_in_one_log() {
+    let dir = temp_cache_dir("multi");
+    let (a, b) = {
+        let svc = PlanService::try_new(cfg(&dir)).unwrap();
+        (svc.handle(&mlp_request("a", 1)), svc.handle(&mlp_request("b", 2)))
+    };
+    assert_ne!(a.fingerprint, b.fingerprint);
+
+    let svc = PlanService::try_new(cfg(&dir)).unwrap();
+    let a2 = svc.handle(&mlp_request("a2", 1));
+    let b2 = svc.handle(&mlp_request("b2", 2));
+    assert!(a2.disk && b2.disk);
+    assert_eq!(a2.plan_json, a.plan_json);
+    assert_eq!(b2.plan_json, b.plan_json);
+    assert_eq!(svc.searches_run(), 0);
+    assert_eq!(svc.disk_stats().unwrap().entries, 2);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unconfigured_service_has_no_disk_tier() {
+    let svc = PlanService::new(ServiceConfig::default());
+    assert!(svc.disk_stats().is_none());
+    assert_eq!(svc.disk_hits(), 0);
+    let r = svc.handle(&mlp_request("x", 5));
+    assert!(!r.disk, "no tier, no disk hits");
+}
