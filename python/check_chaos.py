@@ -1,0 +1,165 @@
+#!/usr/bin/env python3
+"""Chaos smoke wall for the fault-tolerant serving layer (DESIGN.md §14).
+
+Drives `automap batch` over the smoke corpus four times:
+
+  1. fault-free, twice      — both passes must exit 0 with zero errors,
+                              carry NO degraded/fallback markers, and be
+                              byte-identical per request id (the
+                              determinism contract);
+  2. worker panic storm     — PALLAS_FAILPOINTS=worker.panic=0.5 plus a
+                              1 ms deadline: the run must still exit 0,
+                              answer EVERY request with a plan, and
+                              label at least one response degraded;
+  3. disk fault storm       — read+write failpoints against a throwaway
+                              --cache-dir: faults degrade to misses and
+                              uncompacted logs, never to failures;
+  4. slow rounds + deadline — search.slow_round=1.0 with --deadline-ms:
+                              every cold search must stop at the gate
+                              and come back `"degraded":"deadline"`.
+
+Usage: python3 python/check_chaos.py <automap-binary> <requests.jsonl>
+Exit codes: 0 ok, 1 failures, 2 usage error.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+
+def run_batch(binary, corpus, out, failpoints=None, flags=()):
+    """Run one `automap batch` pass, returning the CompletedProcess."""
+    env = dict(os.environ)
+    env.pop("PALLAS_FAILPOINTS", None)
+    if failpoints:
+        env["PALLAS_FAILPOINTS"] = failpoints
+    cmd = [binary, "batch", corpus, "--pool", "1", "--out", out, *flags]
+    return subprocess.run(cmd, env=env, capture_output=True, text=True)
+
+
+def load(path):
+    """id -> (raw line, parsed doc)."""
+    out = {}
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            doc = json.loads(line)
+            rid = doc.get("id")
+            if rid is None:
+                sys.exit(f"{path}:{ln}: response without an id")
+            out[rid] = (line, doc)
+    return out
+
+
+def check_all_answered(name, responses, expected_ids, failures):
+    """Every corpus id present, zero errors, every response has a plan."""
+    if set(responses) != expected_ids:
+        failures.append(f"{name}: ids differ: {set(responses) ^ expected_ids}")
+        return
+    for rid, (_, doc) in sorted(responses.items()):
+        if doc.get("error"):
+            failures.append(f"{name}: {rid} errored: {doc['error']}")
+        elif "plan" not in doc:
+            failures.append(f"{name}: {rid} answered without a plan")
+
+
+def main(argv) -> int:
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    binary, corpus = argv
+    with open(corpus) as f:
+        expected_ids = {
+            json.loads(line)["id"] for line in f if line.strip()
+        }
+    if not expected_ids:
+        sys.exit(f"{corpus}: no requests")
+
+    failures = []
+    tmp = tempfile.mkdtemp(prefix="automap-chaos-")
+
+    # --- 1. The determinism contract: fault-free, twice, byte-equal. ---
+    passes = []
+    for i in (1, 2):
+        out = os.path.join(tmp, f"clean{i}.jsonl")
+        p = run_batch(binary, corpus, out)
+        if p.returncode != 0:
+            sys.exit(f"clean pass {i} exited {p.returncode}:\n{p.stderr}")
+        passes.append(load(out))
+    check_all_answered("clean", passes[0], expected_ids, failures)
+    for rid in sorted(expected_ids):
+        line1, line2 = passes[0][rid][0], passes[1][rid][0]
+        if line1 != line2:
+            failures.append(f"clean: {rid} differs between fault-free re-runs")
+        for key in ('"degraded"', '"fallback"', '"worker_panics"'):
+            if key in line1:
+                failures.append(f"clean: {rid} carries {key} with no faults armed")
+
+    # --- 2. Panic storm under a 1 ms deadline: degraded, never dropped. ---
+    out = os.path.join(tmp, "panic.jsonl")
+    p = run_batch(
+        binary, corpus, out,
+        failpoints="worker.panic=0.5@11",
+        flags=("--deadline-ms", "1"),
+    )
+    if p.returncode != 0:
+        failures.append(f"panic storm exited {p.returncode}:\n{p.stderr}")
+    else:
+        responses = load(out)
+        check_all_answered("panic", responses, expected_ids, failures)
+        degraded = sum(
+            1 for _, doc in responses.values() if doc.get("degraded")
+        )
+        if degraded == 0:
+            failures.append("panic: no response was labeled degraded")
+
+    # --- 3. Disk fault storm against a throwaway cache dir. ---
+    out = os.path.join(tmp, "disk.jsonl")
+    p = run_batch(
+        binary, corpus, out,
+        failpoints="disk.read_err=0.5@7,disk.write_err=0.5@8",
+        flags=("--cache-dir", os.path.join(tmp, "plan-cache")),
+    )
+    if p.returncode != 0:
+        failures.append(f"disk storm exited {p.returncode}:\n{p.stderr}")
+    else:
+        check_all_answered("disk", load(out), expected_ids, failures)
+
+    # --- 4. Slow rounds against a deadline: anytime plans, labeled. ---
+    out = os.path.join(tmp, "slow.jsonl")
+    p = run_batch(
+        binary, corpus, out,
+        failpoints="search.slow_round=1.0@3",
+        flags=("--deadline-ms", "10"),
+    )
+    if p.returncode != 0:
+        failures.append(f"slow-round storm exited {p.returncode}:\n{p.stderr}")
+    else:
+        responses = load(out)
+        check_all_answered("slow", responses, expected_ids, failures)
+        hits = sum(
+            1
+            for _, doc in responses.values()
+            if doc.get("degraded") == "deadline"
+        )
+        if hits == 0:
+            failures.append('slow: no response was labeled "degraded":"deadline"')
+
+    if failures:
+        print("check_chaos: FAIL")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(
+        f"check_chaos: ok — {len(expected_ids)} requests answered under every "
+        f"storm, fault-free passes byte-identical, degraded responses labeled"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -27,7 +27,8 @@
 //! Partition flags: --pin axis[,axis]  --shard name:dim:axis[,...]
 //!                  --program file.pir
 //! Service flags:   --pool N --cache-mb N --cache-dir .plan-cache
-//!                  --out responses.jsonl
+//!                  --out responses.jsonl --deadline-ms N --max-pending N
+//!                  (PALLAS_FAILPOINTS=name=prob[@seed] arms fault injection)
 //! Observability:   --trace out.json (Perfetto/chrome://tracing format)
 //!                  --metrics-out metrics.json (counter/histogram snapshot)
 
@@ -46,7 +47,8 @@ use automap::util::cli::Args;
 const VALUE_FLAGS: &[&str] = &[
     "layers", "budgets", "attempts", "seed", "out", "out-dir", "count", "axis", "model",
     "budget", "filter", "ranker", "config", "d-model", "mesh", "pin", "shard", "pool",
-    "cache-mb", "cache-dir", "program", "pipeline", "trace", "metrics-out",
+    "cache-mb", "cache-dir", "program", "pipeline", "trace", "metrics-out", "deadline-ms",
+    "max-pending",
 ];
 const BOOL_FLAGS: &[&str] = &["paper", "grouping", "no-tying", "help", "stdin-jsonl", "check"];
 
@@ -126,6 +128,14 @@ fn usage() {
                       [--trace trace.json] [--metrics-out m.json]\n\
                 both: --cache-dir .plan-cache   persistent plan-cache tier under the LRU\n\
                       (append-only CRC-framed log; plans survive the process, DESIGN.md §13)\n\
+         failure handling (DESIGN.md §14):\n\
+                --deadline-ms N     default per-request deadline; a search that hits it\n\
+                                    returns its best-so-far plan marked degraded:\"deadline\"\n\
+                --max-pending N     serve admission bound: arrivals beyond it are shed\n\
+                                    with a cached-or-fallback response (degraded:\"shed\")\n\
+                PALLAS_FAILPOINTS=name=prob[@seed],...   deterministic fault injection\n\
+                                    (worker.panic, disk.read_err, disk.write_err,\n\
+                                    search.slow_round)\n\
          binary interchange — pallas-bin (DESIGN.md §13):\n\
                 encode file.pir|plan.json [--out f.pbp]     program text or plan JSON -> binary\n\
                 encode --model mlp [--layers N] [--out f.pbp]\n\
@@ -349,15 +359,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if !args.get_bool("stdin-jsonl") {
         anyhow::bail!("serve reads JSONL requests from stdin; pass --stdin-jsonl to confirm");
     }
+    automap::util::failpoints::arm_from_env()?;
     let pool = args.get_usize("pool", 2)?;
+    let max_pending = args.get_usize("max-pending", 0)?;
     let svc = PlanService::try_new(ServiceConfig {
+        defaults: automap::service::JobDefaults {
+            deadline_ms: args.get_u64("deadline-ms", 0)?,
+            ..automap::service::JobDefaults::default()
+        },
         cache_bytes: args.get_usize("cache-mb", 64)? << 20,
         persist_path: args.get("cache-dir").map(std::path::PathBuf::from),
         ..ServiceConfig::default()
     })?;
     let stdout = std::sync::Mutex::new(std::io::stdout());
     let stdin = std::io::stdin();
-    let summary = serve_jsonl(&svc, stdin.lock(), &stdout, pool)?;
+    let summary = serve_jsonl(&svc, stdin.lock(), &stdout, pool, max_pending)?;
     eprintln!("serve: {}", summary.describe());
     write_metrics(args)?;
     Ok(())
@@ -379,8 +395,13 @@ fn cmd_batch(args: &Args) -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("{path}:{}: {e:#}", ln + 1))?;
         requests.push(req);
     }
+    automap::util::failpoints::arm_from_env()?;
     let pool = args.get_usize("pool", 2)?;
     let svc = PlanService::try_new(ServiceConfig {
+        defaults: automap::service::JobDefaults {
+            deadline_ms: args.get_u64("deadline-ms", 0)?,
+            ..automap::service::JobDefaults::default()
+        },
         cache_bytes: args.get_usize("cache-mb", 64)? << 20,
         persist_path: args.get("cache-dir").map(std::path::PathBuf::from),
         ..ServiceConfig::default()

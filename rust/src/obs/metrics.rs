@@ -275,7 +275,13 @@ pub mod names {
     pub const PERSIST_APPENDS: &str = "persist.appends";
     pub const PERSIST_CORRUPT_RECORDS: &str = "persist.corrupt_records";
     pub const PERSIST_COMPACTIONS: &str = "persist.compactions";
+    pub const PERSIST_QUARANTINED: &str = "persist.quarantined";
+    pub const SERVICE_DEADLINE_HITS: &str = "service.deadline_hits";
+    pub const SERVICE_SHED: &str = "service.shed";
+    pub const SERVICE_FALLBACK_PLANS: &str = "service.fallback_plans";
+    pub const SEARCH_WORKER_PANICS: &str = "search.worker_panics";
     pub const SERVICE_INFLIGHT_SEARCHES: &str = "service.inflight_searches";
+    pub const SERVICE_QUEUE_DEPTH: &str = "service.queue_depth";
     pub const SERVICE_REQUEST_LATENCY_NS: &str = "service.request_latency_ns";
     pub const SEARCH_RUN_NS: &str = "search.run_ns";
 
@@ -300,8 +306,13 @@ pub mod names {
         PERSIST_APPENDS,
         PERSIST_CORRUPT_RECORDS,
         PERSIST_COMPACTIONS,
+        PERSIST_QUARANTINED,
+        SERVICE_DEADLINE_HITS,
+        SERVICE_SHED,
+        SERVICE_FALLBACK_PLANS,
+        SEARCH_WORKER_PANICS,
     ];
-    pub const ALL_GAUGES: &[&str] = &[SERVICE_INFLIGHT_SEARCHES];
+    pub const ALL_GAUGES: &[&str] = &[SERVICE_INFLIGHT_SEARCHES, SERVICE_QUEUE_DEPTH];
     pub const ALL_HISTOGRAMS: &[&str] = &[SERVICE_REQUEST_LATENCY_NS, SEARCH_RUN_NS];
 }
 

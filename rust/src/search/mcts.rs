@@ -288,6 +288,16 @@ impl<'e, 'p> Mcts<'e, 'p> {
         }
     }
 
+    /// Snapshot the best solution found so far, or `None` when no
+    /// episode has completed (a deadline hit before the first round, or
+    /// a tree poisoned by a worker panic mid-episode). The executor
+    /// falls back to a pre-tactics + InferRest plan in that case
+    /// (DESIGN.md §14) instead of panicking here.
+    pub fn result_opt(&self) -> Option<SearchResult> {
+        self.best.as_ref()?;
+        Some(self.result())
+    }
+
     /// Snapshot the best solution found so far.
     pub fn result(&self) -> SearchResult {
         let b = self.best.as_ref().expect("budget must be >= 1");

@@ -38,11 +38,17 @@ use crate::search::worker_seed;
 use crate::service::fingerprint::{request_fingerprint, Fingerprint};
 use crate::session::{PartitionPlan, Session, Tactic};
 use crate::sim::device::Device;
-use anyhow::{anyhow, Result};
+use crate::util::failpoints::{failpoints, SEARCH_SLOW_ROUND, WORKER_PANIC};
+use anyhow::Result;
 
 /// Target number of barrier rounds a full-budget tree runs (the round
 /// size is `budget / STEAL_ROUNDS`, rounded up).
 pub const STEAL_ROUNDS: usize = 8;
+
+/// How long the [`SEARCH_SLOW_ROUND`] failpoint stalls a worker's round
+/// when it fires — long enough to trip millisecond deadlines in tests,
+/// short enough to keep chaos runs fast.
+pub const SLOW_ROUND_SLEEP_MS: u64 = 25;
 
 /// Consecutive flat-temperature rounds after which a non-leading tree
 /// forfeits its remaining budget to the leader.
@@ -79,6 +85,12 @@ pub struct PlanJob {
     /// Worker thread count `K` (clamped to >= 1).
     pub workers: usize,
     pub mcts: MctsConfig,
+    /// Soft wall-clock deadline for the whole fan-out, in milliseconds
+    /// (0 = none). Enforced at round barriers: a search past its
+    /// deadline stops and returns the best-so-far anytime plan instead
+    /// of blocking. NOT part of the fingerprint — the deadline shapes
+    /// how long we search, never which plan a completed search yields.
+    pub deadline_ms: u64,
 }
 
 /// Result of one root-parallel execution.
@@ -96,7 +108,9 @@ pub struct ExecutorReport {
     /// between trees, so these differ when forfeiture fired; they always
     /// sum to `episodes_total`.
     pub worker_episodes: Vec<usize>,
-    /// Total episodes run across all workers (`K * budget`, conserved).
+    /// Total episodes actually run across all workers. Equals
+    /// `K * budget` when no deadline hit and no worker panicked (budget
+    /// is conserved by stealing); smaller when the search was cut short.
     pub episodes_total: usize,
     /// Barrier rounds executed.
     pub rounds: usize,
@@ -120,6 +134,16 @@ pub struct ExecutorReport {
     /// unconditionally: it reads a handful of counters from
     /// deterministic search state at most [`STEAL_ROUNDS`] times.
     pub timeline: Vec<RoundSample>,
+    /// Worker trees poisoned by a panic (caught, excluded from the
+    /// merge; their budget was forfeited to the survivors).
+    pub worker_panics: usize,
+    /// The round loop stopped at a barrier because the deadline passed;
+    /// `plan` is the best-so-far anytime plan (or the fallback).
+    pub deadline_hit: bool,
+    /// No worker completed a single episode (deadline before round 1,
+    /// or every tree poisoned): `plan` is the guaranteed fallback —
+    /// pre-tactics + InferRest + Lower, no search decisions.
+    pub fallback: bool,
 }
 
 impl PlanJob {
@@ -139,6 +163,27 @@ impl PlanJob {
         )
     }
 
+    /// The guaranteed zero-search plan: pre-tactics + InferRest + Lower
+    /// on a fresh session. Served when a search cannot run at all — a
+    /// deadline that expired before the first round, every worker tree
+    /// poisoned by panics, or a shed request with no cached plan
+    /// (DESIGN.md §14). Always succeeds when the pre-tactics do.
+    pub fn fallback_plan(&self) -> Result<PartitionPlan> {
+        let mut session = Session::with_options(
+            self.func.clone(),
+            self.mesh.clone(),
+            self.device.clone(),
+            self.weights.clone(),
+            self.options.clone(),
+        );
+        for t in &self.pre_tactics {
+            session.apply(t)?;
+        }
+        let mut plan = session.run(&[Tactic::InferRest, Tactic::Lower])?;
+        plan.wall_seconds = 0.0;
+        Ok(plan)
+    }
+
     /// Run the job: pre-tactics replayed once on a session whose program
     /// all `K` workers share immutably, then round-based root-parallel
     /// search with stall forfeiture, then ONE plan assembly from the
@@ -148,6 +193,8 @@ impl PlanJob {
         let k = self.workers.max(1);
         let budget = self.budget.max(1);
         let round_size = budget.div_ceil(STEAL_ROUNDS);
+        let deadline =
+            (self.deadline_ms > 0).then(|| t0 + std::time::Duration::from_millis(self.deadline_ms));
         // Span correlation id: the job fingerprint, so every worker's
         // round spans group under the request that spawned them. Only
         // computed when tracing is on (the fingerprint hash walks the
@@ -172,6 +219,8 @@ impl PlanJob {
 
         let mut rounds = 0usize;
         let mut steals = 0usize;
+        let mut worker_panics = 0usize;
+        let mut deadline_hit = false;
         let mut timeline: Vec<RoundSample> = Vec::with_capacity(STEAL_ROUNDS);
         let (results, worker_episodes, targets) = {
             let mut env = RewriteEnv::with_seed(
@@ -199,48 +248,93 @@ impl PlanJob {
             // stays a pure function of (seed, K, budget).
             let mut prev_entropy = vec![f64::NAN; k];
             let mut stall = vec![0usize; k];
+            // Trees poisoned by a caught panic: excluded from quotas,
+            // leadership, and the final merge; their remaining budget is
+            // forfeited to the leader through the steal protocol.
+            let mut poisoned = vec![false; k];
             loop {
                 let quotas: Vec<usize> = remaining.iter().map(|&r| r.min(round_size)).collect();
                 if quotas.iter().all(|&q| q == 0) {
                     break;
                 }
+                // Deadline gate, checked only at barriers (after the
+                // exhausted-budget break, so a search that finished in
+                // time is never marked degraded): past the deadline the
+                // search stops and whatever the trees found so far
+                // becomes the anytime plan (DESIGN.md §14). A request
+                // that waited out its whole deadline in the queue stops
+                // here with zero rounds and gets the fallback plan.
+                if let Some(d) = deadline {
+                    if std::time::Instant::now() >= d {
+                        deadline_hit = true;
+                        break;
+                    }
+                }
                 rounds += 1;
                 // Fork-join round: each live tree runs its quota on its
                 // own thread; no shared mutable state, so scheduling
-                // cannot change any result.
-                let ok = std::thread::scope(|scope| {
+                // cannot change any result. Panics are caught per
+                // worker: the failpoint site key (round, worker) keeps
+                // injected fault schedules independent of thread
+                // interleaving, and `catch_unwind` turns a panic into a
+                // poisoned tree instead of a dead service.
+                let round_results: Vec<(usize, bool)> = std::thread::scope(|scope| {
                     let mut handles = Vec::with_capacity(k);
                     for (w, (m, &q)) in searchers.iter_mut().zip(&quotas).enumerate() {
                         if q == 0 {
                             continue;
                         }
-                        handles.push(scope.spawn(move || {
-                            let _round = recorder().span_with_args(
-                                "search.round",
-                                "search",
-                                req,
-                                &[("worker", w as i64), ("quota", q as i64)],
-                            );
-                            m.run_episodes(q)
-                        }));
+                        let site = ((rounds as u64) << 32) | w as u64;
+                        handles.push((
+                            w,
+                            scope.spawn(move || {
+                                let _round = recorder().span_with_args(
+                                    "search.round",
+                                    "search",
+                                    req,
+                                    &[("worker", w as i64), ("quota", q as i64)],
+                                );
+                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                    if failpoints().should_fail_at(WORKER_PANIC, site) {
+                                        panic!("failpoint {WORKER_PANIC} fired (worker {w})");
+                                    }
+                                    if failpoints().should_fail_at(SEARCH_SLOW_ROUND, site) {
+                                        std::thread::sleep(std::time::Duration::from_millis(
+                                            SLOW_ROUND_SLEEP_MS,
+                                        ));
+                                    }
+                                    m.run_episodes(q);
+                                }))
+                                .is_ok()
+                            }),
+                        ));
                     }
-                    handles.into_iter().all(|h| h.join().is_ok())
+                    handles.into_iter().map(|(w, h)| (w, h.join().unwrap_or(false))).collect()
                 });
-                if !ok {
-                    return Err(anyhow!("search worker panicked"));
-                }
                 // Barrier bookkeeping: leader rewards + temperature
                 // movement. The first reading of a tree's entropy never
                 // counts as a stall (there is nothing to compare it to),
                 // and a strict best-reward improvement always resets the
                 // counter — an improving tree must never forfeit, even
                 // when its root temperature cannot move (see
-                // STALL_ENTROPY_EPS).
-                for w in 0..k {
-                    if quotas[w] == 0 {
+                // STALL_ENTROPY_EPS). A worker that panicked this round
+                // is poisoned: its quota is consumed (the budget moves
+                // to the leader below) and its tree never re-enters the
+                // merge — a half-run episode may have left it mid-update.
+                for &(w, ok) in &round_results {
+                    remaining[w] -= quotas[w];
+                    if !ok {
+                        poisoned[w] = true;
+                        worker_panics += 1;
+                        best_so_far[w] = f64::NEG_INFINITY;
+                        recorder().instant(
+                            "search.worker_panic",
+                            "search",
+                            req,
+                            &[("worker", w as i64)],
+                        );
                         continue;
                     }
-                    remaining[w] -= quotas[w];
                     let improved = searchers[w].best_reward() > best_so_far[w];
                     if improved {
                         best_so_far[w] = searchers[w].best_reward();
@@ -255,17 +349,26 @@ impl PlanJob {
                     }
                     prev_entropy[w] = h;
                 }
-                // Leader = best reward so far, ties to the lowest index.
-                let mut leader = 0usize;
-                for w in 1..k {
+                // Leader = best reward among live trees, ties to the
+                // lowest index. With every tree poisoned there is no one
+                // left to search — fall through to the fallback plan.
+                let live: Vec<usize> = (0..k).filter(|&w| !poisoned[w]).collect();
+                let Some(&leader0) = live.first() else {
+                    break;
+                };
+                let mut leader = leader0;
+                for &w in &live {
                     if best_so_far[w] > best_so_far[leader] {
                         leader = w;
                     }
                 }
-                // Stalled non-leaders forfeit their remaining budget to
-                // the leader (budget is conserved, never dropped).
+                // Stalled non-leaders and poisoned trees forfeit their
+                // remaining budget to the leader (budget is conserved,
+                // never dropped — panic isolation rides the same steal
+                // protocol as stall forfeiture).
                 for w in 0..k {
-                    if w != leader && stall[w] >= STALL_ROUNDS && remaining[w] > 0 {
+                    let forfeits = poisoned[w] || stall[w] >= STALL_ROUNDS;
+                    if w != leader && forfeits && remaining[w] > 0 {
                         remaining[leader] += remaining[w];
                         remaining[w] = 0;
                         steals += 1;
@@ -307,7 +410,14 @@ impl PlanJob {
                     ledger_reuse_rate: reuse_rate,
                 });
             }
-            let results: Vec<SearchResult> = searchers.iter().map(|m| m.result()).collect();
+            // Poisoned trees never re-enter the merge; a live tree with
+            // no completed episode (deadline before its first round)
+            // has nothing to contribute either.
+            let results: Vec<Option<SearchResult>> = searchers
+                .iter()
+                .enumerate()
+                .map(|(w, m)| if poisoned[w] { None } else { m.result_opt() })
+                .collect();
             let episodes: Vec<usize> = searchers.iter().map(|m| m.episodes_run()).collect();
             (results, episodes, env.targets.len())
         };
@@ -317,9 +427,11 @@ impl PlanJob {
         // `auto_infer_rest` disabled the two differ, and the merge must
         // never pick a tree whose final plan is worse than a rival's.
         // With auto-infer on (the service default) these costs equal the
-        // search evals bit-for-bit.
-        let mut worker_costs = Vec::with_capacity(k);
-        for r in &results {
+        // search evals bit-for-bit. Trees excluded from the merge
+        // (poisoned, or no completed episode) rank at +inf.
+        let mut worker_costs = vec![f64::INFINITY; k];
+        for (w, r) in results.iter().enumerate() {
+            let Some(r) = r else { continue };
             let (mut dm, mut stats) = session.program.apply(&r.best_state);
             session.program.prop.infer_rest(
                 &session.program.func,
@@ -332,16 +444,14 @@ impl PlanJob {
             let spec = pipe_spec
                 .as_ref()
                 .map(|s| PipelineSpec { cuts: r.best_cuts.clone(), ..s.clone() });
-            worker_costs.push(
-                evaluate_pipelined(
-                    &session.program,
-                    &dm,
-                    &self.device,
-                    &self.weights,
-                    spec.as_ref(),
-                )
-                .cost,
-            );
+            worker_costs[w] = evaluate_pipelined(
+                &session.program,
+                &dm,
+                &self.device,
+                &self.weights,
+                spec.as_ref(),
+            )
+            .cost;
         }
         // Strict `<`: ties go to the lowest worker index, which keeps
         // the merge deterministic.
@@ -351,14 +461,18 @@ impl PlanJob {
                 winner = w;
             }
         }
+        let fallback = results[winner].is_none();
         // Tracing only: replay the WINNING plan's 1F1B schedule into the
         // flight recorder as per-(stage, microbatch) slices on the
         // simulated-time track. Once per pipelined request, never on the
         // episode hot path; `stage_timeline` shares the pricing path's
         // accumulation, so the traced schedule is exactly the priced one.
-        if let Some(spec0) = pipe_spec.as_ref().filter(|_| recorder().enabled()) {
-            let spec = PipelineSpec { cuts: results[winner].best_cuts.clone(), ..spec0.clone() };
-            let (mut dm, mut stats) = session.program.apply(&results[winner].best_state);
+        if let (Some(spec0), Some(win)) = (
+            pipe_spec.as_ref().filter(|_| recorder().enabled()),
+            results[winner].as_ref(),
+        ) {
+            let spec = PipelineSpec { cuts: win.best_cuts.clone(), ..spec0.clone() };
+            let (mut dm, mut stats) = session.program.apply(&win.best_state);
             session.program.prop.infer_rest(
                 &session.program.func,
                 &session.program.mesh,
@@ -381,15 +495,22 @@ impl PlanJob {
                 );
             }
         }
-        session.adopt_search_result(&results[winner], targets, worklist.len());
+        // With at least one surviving tree the winning result is adopted
+        // as usual; with none, the session holds exactly the pre-tactic
+        // state and InferRest + Lower alone synthesise the guaranteed
+        // fallback plan — zero search decisions, but always a plan.
+        if let Some(win) = results[winner].as_ref() {
+            session.adopt_search_result(win, targets, worklist.len());
+        }
         let mut plan = session.run(&[Tactic::InferRest, Tactic::Lower])?;
         plan.wall_seconds = 0.0;
+        let results: Vec<SearchResult> = results.into_iter().flatten().collect();
         Ok(ExecutorReport {
             plan,
             winner,
             worker_costs,
-            worker_episodes,
-            episodes_total: k * budget,
+            worker_episodes: worker_episodes.clone(),
+            episodes_total: worker_episodes.iter().sum(),
             rounds,
             steals,
             wall_seconds: t0.elapsed().as_secs_f64(),
@@ -399,6 +520,9 @@ impl PlanJob {
             ledger_nodes_reused: results.iter().map(|r| r.ledger_nodes_reused).sum(),
             ledger_nodes_recomputed: results.iter().map(|r| r.ledger_nodes_recomputed).sum(),
             timeline,
+            worker_panics,
+            deadline_hit,
+            fallback,
         })
     }
 }
@@ -424,6 +548,7 @@ mod tests {
             seed,
             workers,
             mcts: MctsConfig::default(),
+            deadline_ms: 0,
         }
     }
 
@@ -513,5 +638,68 @@ mod tests {
         let b = job(2, 2);
         assert_ne!(a.fingerprint(), b.fingerprint());
         assert_eq!(a.fingerprint(), job(2, 1).fingerprint());
+    }
+
+    #[test]
+    fn deadline_is_not_part_of_the_fingerprint() {
+        // The deadline shapes how long we search, never which plan a
+        // completed search yields — so it must share the cache line.
+        let mut d = job(2, 1);
+        d.deadline_ms = 5000;
+        assert_eq!(d.fingerprint(), job(2, 1).fingerprint());
+    }
+
+    #[test]
+    fn generous_deadline_changes_nothing() {
+        // A deadline the search beats easily must leave the plan
+        // byte-identical to the undeadlined run — the determinism
+        // contract (DESIGN.md §14) depends on it.
+        let a = job(4, 7).run().unwrap();
+        let mut j = job(4, 7);
+        j.deadline_ms = 600_000;
+        let b = j.run().unwrap();
+        assert!(!b.deadline_hit && !b.fallback && b.worker_panics == 0);
+        assert_eq!(a.plan.to_json().to_string(), b.plan.to_json().to_string());
+        assert_eq!(a.worker_episodes, b.worker_episodes);
+    }
+
+    #[test]
+    fn fallback_plan_needs_no_search_and_keeps_pins() {
+        let p = job(4, 7).fallback_plan().unwrap();
+        assert_eq!(p.wall_seconds, 0.0);
+        let x = p.input_specs.iter().find(|s| s.name == "x").unwrap();
+        assert!(x.tiled_on("batch"), "pre-tactic pin must survive the fallback path");
+        // Deterministic: the fallback is a pure function of the job.
+        let q = job(4, 7).fallback_plan().unwrap();
+        assert_eq!(p.to_json().to_string(), q.to_json().to_string());
+    }
+
+    #[test]
+    fn tight_deadline_returns_the_anytime_plan_not_an_error() {
+        // A budget far too large for a 1 ms deadline: the barrier gate
+        // must stop the search early and return the best-so-far plan —
+        // degraded, but a real plan, never a hang or an Err.
+        let mut j = job(4, 7);
+        j.budget = 100_000;
+        j.deadline_ms = 1;
+        let r = j.run().unwrap();
+        assert!(r.deadline_hit, "the gate must report the deadline");
+        assert!(r.rounds < STEAL_ROUNDS, "the search must have been cut short");
+        assert!(
+            r.episodes_total < 4 * j.budget,
+            "a deadline-hit run cannot have spent the whole budget"
+        );
+        if !r.fallback {
+            // At least one round completed somewhere: the anytime plan
+            // is a genuine merge over the surviving trees.
+            assert!(r.worker_costs[r.winner].is_finite());
+            assert_eq!(r.plan.eval.cost, r.worker_costs[r.winner]);
+        } else {
+            // Zero completed episodes: the guaranteed fallback.
+            assert_eq!(
+                r.plan.to_json().to_string(),
+                j.fallback_plan().unwrap().to_json().to_string()
+            );
+        }
     }
 }

@@ -39,6 +39,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::obs::metrics::{metrics, names, Counter};
+use crate::util::failpoints::{failpoints, DISK_READ_ERR, DISK_WRITE_ERR};
 use anyhow::{bail, Context, Result};
 
 /// Log file magic.
@@ -102,6 +103,8 @@ pub struct DiskTierStats {
     pub appends: u64,
     pub corrupt_records: u64,
     pub compactions: u64,
+    /// Irrecoverably corrupt logs moved aside on open (DESIGN.md §14).
+    pub quarantined: u64,
 }
 
 /// Handles into the process-global metrics registry, resolved once.
@@ -111,6 +114,7 @@ struct TierMetrics {
     appends: Arc<Counter>,
     corrupt: Arc<Counter>,
     compactions: Arc<Counter>,
+    quarantined: Arc<Counter>,
 }
 
 impl TierMetrics {
@@ -122,6 +126,7 @@ impl TierMetrics {
             appends: m.counter(names::PERSIST_APPENDS),
             corrupt: m.counter(names::PERSIST_CORRUPT_RECORDS),
             compactions: m.counter(names::PERSIST_COMPACTIONS),
+            quarantined: m.counter(names::PERSIST_QUARANTINED),
         }
     }
 }
@@ -137,6 +142,7 @@ pub struct DiskTier {
     appends: AtomicU64,
     corrupt_records: AtomicU64,
     compactions: AtomicU64,
+    quarantined: AtomicU64,
     mx: TierMetrics,
 }
 
@@ -172,6 +178,7 @@ impl DiskTier {
         file.read_to_end(&mut buf).context("reading cache log")?;
 
         let mut corrupt = 0u64;
+        let mut quarantined = 0u64;
         let generation;
         let mut index = HashMap::new();
         let tail;
@@ -185,12 +192,26 @@ impl DiskTier {
             || u16::from_le_bytes([buf[4], buf[5]]) != LOG_VERSION
         {
             // Unusable header (foreign file, version skew, torn create):
-            // count it and start over rather than guessing at framing.
-            corrupt += 1;
+            // QUARANTINE the file — move it aside under a name that
+            // records its claimed generation — and start a fresh log,
+            // rather than destroying the bytes (an operator or a newer
+            // build may still be able to read them) or refusing to
+            // serve (the service must come up; DESIGN.md §14).
+            drop(file);
+            let qpath = quarantine_path(&log_path, &buf);
+            std::fs::rename(&log_path, &qpath).with_context(|| {
+                format!("quarantining corrupt cache log to {}", qpath.display())
+            })?;
+            quarantined += 1;
+            file = OpenOptions::new()
+                .read(true)
+                .write(true)
+                .create(true)
+                .truncate(false)
+                .open(&log_path)
+                .with_context(|| format!("recreating cache log {}", log_path.display()))?;
             generation = 0;
-            file.set_len(0)?;
-            file.seek(SeekFrom::Start(0))?;
-            file.write_all(&log_header(0)).context("rewriting cache log header")?;
+            file.write_all(&log_header(0)).context("writing cache log header")?;
             file.flush()?;
             tail = LOG_HEADER_LEN;
         } else {
@@ -241,9 +262,11 @@ impl DiskTier {
             appends: AtomicU64::new(0),
             corrupt_records: AtomicU64::new(corrupt),
             compactions: AtomicU64::new(0),
+            quarantined: AtomicU64::new(quarantined),
             mx: TierMetrics::new(),
         };
         tier.mx.corrupt.add(corrupt);
+        tier.mx.quarantined.add(quarantined);
         Ok(tier)
     }
 
@@ -263,6 +286,15 @@ impl DiskTier {
                 return None;
             }
         };
+        // Injected transient read error (DESIGN.md §14): degrade to a
+        // plain miss WITHOUT dropping the index entry — the bytes on
+        // disk are fine, only this read failed — so the caller falls
+        // through to search and a later probe can still hit.
+        if failpoints().should_fail(DISK_READ_ERR) {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.mx.misses.add(1);
+            return None;
+        }
         match read_payload(&mut st.file, entry) {
             Some(payload) if payload.len() >= 8 && payload[..8] == fp.to_le_bytes() => {
                 match String::from_utf8(payload[8..].to_vec()) {
@@ -291,6 +323,11 @@ impl DiskTier {
     /// over half the log is superseded and the log is past the minimum.
     pub fn put(&self, fp: u64, plan_json: &str) -> Result<()> {
         let mut st = self.state.lock().expect("disk tier poisoned");
+        // Injected append error, raised BEFORE any state mutation so a
+        // failed put leaves the tier exactly as it was.
+        if failpoints().should_fail(DISK_WRITE_ERR) {
+            bail!("injected failpoint: {DISK_WRITE_ERR}");
+        }
         let mut payload = Vec::with_capacity(8 + plan_json.len());
         payload.extend_from_slice(&fp.to_le_bytes());
         payload.extend_from_slice(plan_json.as_bytes());
@@ -312,7 +349,12 @@ impl DiskTier {
         self.mx.appends.add(1);
         let total = st.tail - LOG_HEADER_LEN;
         if total >= self.compact_min_bytes && st.live_bytes * 2 < total {
-            self.compact(&mut st)?;
+            // A failed compaction degrades to an uncompacted-but-valid
+            // log, never a failed put: the append above already landed,
+            // `compact` mutates `st` only after the new log is fully
+            // installed, and the next put over the threshold retries
+            // (a stale .tmp is truncated by its `File::create`).
+            let _ = self.compact(&mut st);
         }
         Ok(())
     }
@@ -321,6 +363,11 @@ impl DiskTier {
     /// Crash-safe: the new log is fully written and fsynced under a temp
     /// name before the rename; a crash leaves the old log intact.
     fn compact(&self, st: &mut State) -> Result<()> {
+        // Injected compaction-write error, raised before the tmp file
+        // exists: the live log is untouched and stays generation N.
+        if failpoints().should_fail(DISK_WRITE_ERR) {
+            bail!("injected failpoint: {DISK_WRITE_ERR} (mid-compaction)");
+        }
         let mut entries: Vec<(u64, Vec<u8>)> = Vec::with_capacity(st.index.len());
         let mut fps: Vec<u64> = st.index.keys().copied().collect();
         fps.sort_unstable();
@@ -373,8 +420,34 @@ impl DiskTier {
             appends: self.appends.load(Ordering::Relaxed),
             corrupt_records: self.corrupt_records.load(Ordering::Relaxed),
             compactions: self.compactions.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
         }
     }
+}
+
+/// Where an unreadable log gets moved: `plans.plog.corrupt-<gen>`, with
+/// `<gen>` taken from the header when the magic still matches (version
+/// skew) and 0 otherwise (foreign bytes), plus a numeric suffix when a
+/// previous quarantine already claimed the name.
+fn quarantine_path(log_path: &Path, buf: &[u8]) -> PathBuf {
+    let gen = if buf.len() >= 16 && buf[..4] == LOG_MAGIC {
+        let mut g8 = [0u8; 8];
+        g8.copy_from_slice(&buf[8..16]);
+        u64::from_le_bytes(g8)
+    } else {
+        0
+    };
+    let base = log_path.with_extension(format!("plog.corrupt-{gen}"));
+    if !base.exists() {
+        return base;
+    }
+    for i in 1u32.. {
+        let p = log_path.with_extension(format!("plog.corrupt-{gen}.{i}"));
+        if !p.exists() {
+            return p;
+        }
+    }
+    unreachable!("u32 quarantine suffixes exhausted")
 }
 
 fn read_u32_at(buf: &[u8], pos: usize) -> u32 {
@@ -514,14 +587,50 @@ mod tests {
     }
 
     #[test]
-    fn foreign_file_is_reset_not_trusted() {
+    fn foreign_file_is_quarantined_not_trusted_or_destroyed() {
         let dir = temp_dir("foreign");
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("plans.plog"), b"not a log at all").unwrap();
         let tier = DiskTier::open(&dir).unwrap();
-        assert_eq!(tier.stats().corrupt_records, 1);
+        let s = tier.stats();
+        assert_eq!(s.quarantined, 1, "unreadable log must be quarantined");
+        assert_eq!(s.corrupt_records, 0, "quarantine is not a record-level event");
+        // The fresh log serves normally...
         tier.put(5, "{}").unwrap();
         assert_eq!(tier.get(5).as_deref(), Some("{}"));
+        // ...and the original bytes survive for forensics under the
+        // generation-stamped name (foreign bytes have no generation → 0).
+        let q = dir.join("plans.plog.corrupt-0");
+        assert_eq!(std::fs::read(&q).unwrap(), b"not a log at all");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn repeated_quarantines_never_collide() {
+        let dir = temp_dir("quarantine-twice");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("plans.plog"), b"garbage one").unwrap();
+        drop(DiskTier::open(&dir).unwrap());
+        std::fs::write(dir.join("plans.plog"), b"garbage two").unwrap();
+        let tier = DiskTier::open(&dir).unwrap();
+        assert_eq!(tier.stats().quarantined, 1, "per-open count");
+        assert_eq!(std::fs::read(dir.join("plans.plog.corrupt-0")).unwrap(), b"garbage one");
+        assert_eq!(std::fs::read(dir.join("plans.plog.corrupt-0.1")).unwrap(), b"garbage two");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_skewed_log_is_quarantined_under_its_generation() {
+        let dir = temp_dir("quarantine-skew");
+        std::fs::create_dir_all(&dir).unwrap();
+        // A well-formed header from an imaginary future format version,
+        // generation 9: the quarantine name must preserve the generation.
+        let mut h = log_header(9).to_vec();
+        h[4..6].copy_from_slice(&(LOG_VERSION + 1).to_le_bytes());
+        std::fs::write(dir.join("plans.plog"), &h).unwrap();
+        let tier = DiskTier::open(&dir).unwrap();
+        assert_eq!(tier.stats().quarantined, 1);
+        assert!(dir.join("plans.plog.corrupt-9").exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

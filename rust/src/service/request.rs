@@ -78,6 +78,11 @@ pub struct PartitionRequest {
     pub budget: usize,
     pub seed: u64,
     pub workers: usize,
+    /// Soft deadline for this request's search, in milliseconds
+    /// (0 = inherit the service default; the default's default is no
+    /// deadline). A deadline-hit search returns the best-so-far anytime
+    /// plan marked `"degraded":"deadline"` (DESIGN.md §14).
+    pub deadline_ms: u64,
 }
 
 impl Default for PartitionRequest {
@@ -96,6 +101,7 @@ impl Default for PartitionRequest {
             budget: 300,
             seed: 0,
             workers: 2,
+            deadline_ms: 0,
         }
     }
 }
@@ -181,6 +187,7 @@ impl PartitionRequest {
             budget: get_usize("budget", d.budget)?.max(1),
             seed,
             workers: get_usize("workers", d.workers)?.max(1),
+            deadline_ms: get_uint("deadline_ms", d.deadline_ms)?,
         })
     }
 
@@ -214,10 +221,15 @@ impl PartitionRequest {
         if !self.pipeline.is_empty() {
             fields.push(("pipeline", Json::str(self.pipeline.clone())));
         }
+        // Key present only when set, so pre-deadline requests keep their
+        // wire shape (and round-trip) unchanged.
+        if self.deadline_ms > 0 {
+            fields.push(("deadline_ms", Json::num(self.deadline_ms as f64)));
+        }
         Json::obj(fields)
     }
 
-    fn build_func(&self) -> Result<Func> {
+    fn build_func(&self, max_program_bytes: u64) -> Result<Func> {
         if let Some(src) = &self.program {
             // `@path` files are sniffed by content, not extension: a
             // pallas-bin header means binary decode (`.pbp`), anything
@@ -225,8 +237,7 @@ impl PartitionRequest {
             // the same program fingerprint identically because the
             // fingerprint hashes the decoded structure.
             if let Some(path) = src.strip_prefix('@') {
-                let bytes = std::fs::read(path)
-                    .map_err(|e| anyhow!("reading program file '{path}': {e}"))?;
+                let bytes = read_capped(path, max_program_bytes)?;
                 if crate::ir::binary::is_pallas_bin(&bytes) {
                     return crate::ir::binary::decode_program(&bytes)
                         .map_err(|e| anyhow!("program '{path}': {e}"));
@@ -245,7 +256,7 @@ impl PartitionRequest {
     /// Resolve the request into a runnable [`PlanJob`] under the
     /// service's device/cost/search configuration.
     pub fn build_job(&self, defaults: &JobDefaults) -> Result<PlanJob> {
-        let func = self.build_func()?;
+        let func = self.build_func(defaults.max_program_bytes)?;
         let mut mesh = Mesh::parse(&self.mesh).map_err(|e| anyhow!("{e}"))?;
         let mut pre_tactics = Vec::new();
         if !self.pin.is_empty() || !self.shard.is_empty() {
@@ -298,8 +309,29 @@ impl PartitionRequest {
             seed: self.seed,
             workers: self.workers,
             mcts: defaults.mcts.clone(),
+            deadline_ms: if self.deadline_ms > 0 { self.deadline_ms } else { defaults.deadline_ms },
         })
     }
+}
+
+/// Read a request-referenced file, refusing anything over `max_bytes`.
+/// The cap is enforced on the bytes actually read (`take`), not a
+/// pre-checked length, so a file growing between stat and read cannot
+/// slip past it — one oversized `@path` must never OOM the service.
+fn read_capped(path: &str, max_bytes: u64) -> Result<Vec<u8>> {
+    use std::io::Read;
+    let f = std::fs::File::open(path).map_err(|e| anyhow!("reading program file '{path}': {e}"))?;
+    let mut bytes = Vec::new();
+    f.take(max_bytes.saturating_add(1))
+        .read_to_end(&mut bytes)
+        .map_err(|e| anyhow!("reading program file '{path}': {e}"))?;
+    if bytes.len() as u64 > max_bytes {
+        bail!(
+            "request file cap: program file '{path}' exceeds the {max_bytes}-byte limit \
+             (raise JobDefaults::max_program_bytes to serve it)"
+        );
+    }
+    Ok(bytes)
 }
 
 /// Service-level configuration shared by every request: the device and
@@ -310,7 +342,16 @@ pub struct JobDefaults {
     pub weights: CostWeights,
     pub options: SearchOptions,
     pub mcts: MctsConfig,
+    /// Default search deadline in milliseconds for requests that carry
+    /// no `deadline_ms` of their own (0 = no deadline).
+    pub deadline_ms: u64,
+    /// Upper bound on `@path` request file reads (bytes); oversized
+    /// files are refused with a "request file cap" diagnostic.
+    pub max_program_bytes: u64,
 }
+
+/// Default `@path` request file cap: 64 MiB.
+pub const DEFAULT_MAX_PROGRAM_BYTES: u64 = 64 << 20;
 
 impl Default for JobDefaults {
     fn default() -> Self {
@@ -319,6 +360,8 @@ impl Default for JobDefaults {
             weights: CostWeights::default(),
             options: SearchOptions::default(),
             mcts: MctsConfig::default(),
+            deadline_ms: 0,
+            max_program_bytes: DEFAULT_MAX_PROGRAM_BYTES,
         }
     }
 }
@@ -346,6 +389,9 @@ pub struct SearchStats {
     pub stages: usize,
     pub microbatches: usize,
     pub bubble_fraction: f64,
+    /// Worker trees poisoned by a caught panic and excluded from the
+    /// merge (their budget was forfeited to the survivors).
+    pub worker_panics: usize,
 }
 
 impl SearchStats {
@@ -362,6 +408,7 @@ impl SearchStats {
             stages: pe.map(|p| p.stages).unwrap_or(0),
             microbatches: pe.map(|p| p.microbatches).unwrap_or(0),
             bubble_fraction: pe.map(|p| p.bubble_fraction).unwrap_or(0.0),
+            worker_panics: r.worker_panics,
         }
     }
 
@@ -393,6 +440,11 @@ impl SearchStats {
             fields.push(("microbatches", Json::num(self.microbatches as f64)));
             fields.push(("bubble_fraction", Json::Num(self.bubble_fraction)));
         }
+        // Fault-free responses keep their wire shape: the key appears
+        // only when a worker actually panicked.
+        if self.worker_panics > 0 {
+            fields.push(("worker_panics", Json::num(self.worker_panics as f64)));
+        }
         Json::obj(fields)
     }
 }
@@ -412,6 +464,14 @@ pub struct PlanResponse {
     pub disk: bool,
     /// The serialised `PartitionPlan` (byte-identical across cache hits).
     pub plan_json: Option<String>,
+    /// Degradation marker (DESIGN.md §14): `"deadline"` (anytime plan,
+    /// search cut short), `"panic"` (every worker tree poisoned —
+    /// fallback plan), or `"shed"` (admission control refused the
+    /// search; cached or fallback plan). `None` = full-quality plan.
+    /// Degraded plans are never cached, so a later request re-searches.
+    pub degraded: Option<String>,
+    /// The plan is the zero-search fallback (pre-tactics + InferRest).
+    pub fallback: bool,
     /// Search-cache statistics — present exactly when this response ran
     /// the search itself (never on cache hits, dedup waits, or errors).
     pub search: Option<SearchStats>,
@@ -427,6 +487,8 @@ impl PlanResponse {
             dedup: false,
             disk: false,
             plan_json: None,
+            degraded: None,
+            fallback: false,
             search: None,
             error: Some(msg),
         }
@@ -449,6 +511,15 @@ impl PlanResponse {
                 // fresh searches keep their pre-disk-tier wire shape.
                 if self.disk {
                     fields.push(("disk", Json::Bool(true)));
+                }
+                // Degradation markers appear only on degraded responses,
+                // keeping fault-free wire output byte-identical to the
+                // pre-failure-model service.
+                if let Some(d) = &self.degraded {
+                    fields.push(("degraded", Json::str(d.clone())));
+                }
+                if self.fallback {
+                    fields.push(("fallback", Json::Bool(true)));
                 }
                 if let Some(s) = &self.search {
                     fields.push(("search", s.to_json()));
@@ -664,6 +735,51 @@ mod tests {
     }
 
     #[test]
+    fn deadline_requests_round_trip_and_resolve_against_defaults() {
+        let r = PartitionRequest::parse_line("{\"id\":\"d\",\"deadline_ms\":250}").unwrap();
+        assert_eq!(r.deadline_ms, 250);
+        let back = PartitionRequest::from_json(&parse(&r.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, r);
+        // No-deadline requests keep their wire shape (no key at all).
+        let plain = PartitionRequest { id: "q".into(), ..Default::default() };
+        assert!(parse(&plain.to_json().to_string()).unwrap().get("deadline_ms").is_none());
+        // Per-request deadline wins; otherwise the service default.
+        let d = JobDefaults { deadline_ms: 900, ..Default::default() };
+        assert_eq!(r.build_job(&d).unwrap().deadline_ms, 250);
+        assert_eq!(plain.build_job(&d).unwrap().deadline_ms, 900);
+        // The deadline never reaches the fingerprint: a deadlined and an
+        // undeadlined spelling of the same request share a cache line.
+        assert_eq!(
+            plain.build_job(&d).unwrap().fingerprint(),
+            plain.build_job(&JobDefaults::default()).unwrap().fingerprint()
+        );
+        assert!(PartitionRequest::parse_line("{\"id\":\"d\",\"deadline_ms\":-1}").is_err());
+    }
+
+    #[test]
+    fn oversized_program_files_are_refused_by_the_cap() {
+        let path = std::env::temp_dir()
+            .join(format!("automap-request-cap-{}.pir", std::process::id()));
+        let text = crate::ir::printer::print_func(
+            &crate::models::mlp::build_mlp(&crate::models::mlp::MlpConfig::small()).func,
+        );
+        std::fs::write(&path, &text).unwrap();
+        let req = PartitionRequest {
+            id: "c".into(),
+            program: Some(format!("@{}", path.display())),
+            ..Default::default()
+        };
+        let mut d = JobDefaults { max_program_bytes: 16, ..Default::default() };
+        let e = req.build_job(&d).unwrap_err();
+        assert!(e.to_string().contains("request file cap"), "{e}");
+        assert!(e.to_string().contains("16-byte limit"), "{e}");
+        // At or under the cap the same file parses fine.
+        d.max_program_bytes = text.len() as u64;
+        assert!(req.build_job(&d).is_ok(), "exactly-at-cap file must be served");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn response_lines_render_plan_or_error() {
         let ok = PlanResponse {
             id: "r".into(),
@@ -672,6 +788,8 @@ mod tests {
             dedup: false,
             disk: false,
             plan_json: Some("{\"decisions\":3}".into()),
+            degraded: None,
+            fallback: false,
             search: None,
             error: None,
         };
@@ -700,6 +818,7 @@ mod tests {
             stages: 4,
             microbatches: 8,
             bubble_fraction: 0.272727,
+            worker_panics: 0,
         };
         assert!((stats.memo_hit_rate() - 0.25).abs() < 1e-12);
         assert!((stats.ledger_reuse_rate() - 0.9).abs() < 1e-12);
@@ -710,6 +829,8 @@ mod tests {
             dedup: false,
             disk: false,
             plan_json: Some("{\"decisions\":3}".into()),
+            degraded: None,
+            fallback: false,
             search: Some(stats),
             error: None,
         };
@@ -732,6 +853,7 @@ mod tests {
             stages: 0,
             microbatches: 0,
             bubble_fraction: 0.0,
+            worker_panics: 0,
         };
         assert_eq!(empty.memo_hit_rate(), 0.0);
         assert_eq!(empty.ledger_reuse_rate(), 0.0);

@@ -20,6 +20,12 @@
 //! entry, and would-be leaders re-probe the cache while holding the
 //! in-flight lock, so a fingerprint can never run two searches — the
 //! `searches` counter is exact, which the batch acceptance test pins.
+//!
+//! Under failure the service degrades rather than errors (DESIGN.md
+//! §14): deadline-hit and panic-salvaged plans come back marked
+//! `degraded` and are NEVER cached, and when the pending queue is full
+//! new arrivals are shed with a cached-or-fallback response instead of
+//! blocking the intake thread behind slow searches.
 
 use super::cache::{CacheStats, PlanCache};
 use super::persist::{DiskTier, DiskTierStats};
@@ -34,9 +40,11 @@ use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-/// Result slot one in-flight search publishes to its waiters.
+/// Result slot one in-flight search publishes to its waiters: the plan
+/// JSON plus its degraded marker, so a waiter that joined a search
+/// which later hit its deadline relays the degradation honestly.
 struct Inflight {
-    slot: Mutex<Option<Result<String, String>>>,
+    slot: Mutex<Option<Result<(String, Option<String>), String>>>,
     cv: Condvar,
 }
 
@@ -45,12 +53,12 @@ impl Inflight {
         Inflight { slot: Mutex::new(None), cv: Condvar::new() }
     }
 
-    fn publish(&self, r: Result<String, String>) {
+    fn publish(&self, r: Result<(String, Option<String>), String>) {
         *self.slot.lock().expect("inflight slot poisoned") = Some(r);
         self.cv.notify_all();
     }
 
-    fn wait(&self) -> Result<String, String> {
+    fn wait(&self) -> Result<(String, Option<String>), String> {
         let mut g = self.slot.lock().expect("inflight slot poisoned");
         while g.is_none() {
             g = self.cv.wait(g).expect("inflight slot poisoned");
@@ -70,6 +78,16 @@ pub struct ServiceConfig {
     /// Directory for the persistent plan-cache log (`plans.plog`,
     /// DESIGN.md §13). `None` disables the disk tier.
     pub persist_path: Option<std::path::PathBuf>,
+    /// Admission-control bound on the `serve_jsonl` pending queue;
+    /// arrivals beyond it are shed with a cached-or-fallback response
+    /// marked `degraded:"shed"`. `0` means `2 * pool` (the
+    /// pre-admission-control default).
+    pub max_pending: usize,
+    /// Failpoint spec (`"name=prob[@seed],..."`, see
+    /// [`crate::util::failpoints`]) armed at service construction — the
+    /// programmatic twin of the `PALLAS_FAILPOINTS` environment
+    /// variable. Arms the process-global registry.
+    pub failpoints: Option<String>,
 }
 
 impl Default for ServiceConfig {
@@ -79,6 +97,8 @@ impl Default for ServiceConfig {
             cache_shards: 8,
             cache_bytes: 64 << 20,
             persist_path: None,
+            max_pending: 0,
+            failpoints: None,
         }
     }
 }
@@ -102,7 +122,12 @@ struct ServiceMetrics {
     ledger_nodes_reused: Arc<Counter>,
     ledger_nodes_recomputed: Arc<Counter>,
     pipelined: Arc<Counter>,
+    deadline_hits: Arc<Counter>,
+    shed: Arc<Counter>,
+    fallback_plans: Arc<Counter>,
+    worker_panics: Arc<Counter>,
     inflight_searches: Arc<Gauge>,
+    queue_depth: Arc<Gauge>,
     request_latency: Arc<Histogram>,
     search_run: Arc<Histogram>,
 }
@@ -127,7 +152,12 @@ impl ServiceMetrics {
             ledger_nodes_reused: m.counter(names::LEDGER_NODES_REUSED),
             ledger_nodes_recomputed: m.counter(names::LEDGER_NODES_RECOMPUTED),
             pipelined: m.counter(names::PIPELINE_SEARCHES),
+            deadline_hits: m.counter(names::SERVICE_DEADLINE_HITS),
+            shed: m.counter(names::SERVICE_SHED),
+            fallback_plans: m.counter(names::SERVICE_FALLBACK_PLANS),
+            worker_panics: m.counter(names::SEARCH_WORKER_PANICS),
             inflight_searches: m.gauge(names::SERVICE_INFLIGHT_SEARCHES),
+            queue_depth: m.gauge(names::SERVICE_QUEUE_DEPTH),
             request_latency: m.histogram(names::SERVICE_REQUEST_LATENCY_NS),
             search_run: m.histogram(names::SEARCH_RUN_NS),
         }
@@ -163,6 +193,13 @@ pub struct PlanService {
     // microunits (1e-6; integer so it can live in an atomic).
     pipelined_searches: AtomicU64,
     bubble_micros: AtomicU64,
+    // Degraded-mode accounting (DESIGN.md §14): deadline-hit anytime
+    // plans, shed requests, poisoned search workers, and searches (or
+    // sheds) answered with the search-free fallback plan.
+    deadline_hits: AtomicU64,
+    shed: AtomicU64,
+    worker_panics: AtomicU64,
+    fallback_plans: AtomicU64,
 }
 
 impl PlanService {
@@ -177,6 +214,9 @@ impl PlanService {
     /// Construct the service, opening the persistent tier when
     /// `persist_path` is configured.
     pub fn try_new(cfg: ServiceConfig) -> Result<PlanService> {
+        if let Some(spec) = &cfg.failpoints {
+            crate::util::failpoints::failpoints().arm_spec(spec)?;
+        }
         let disk = match &cfg.persist_path {
             Some(dir) => Some(DiskTier::open(dir)?),
             None => None,
@@ -194,6 +234,10 @@ impl PlanService {
             ledger_nodes_recomputed: AtomicU64::new(0),
             pipelined_searches: AtomicU64::new(0),
             bubble_micros: AtomicU64::new(0),
+            deadline_hits: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
+            fallback_plans: AtomicU64::new(0),
             mx: ServiceMetrics::new(),
             latency: Histogram::new(),
         })
@@ -257,6 +301,17 @@ impl PlanService {
         )
     }
 
+    /// Degraded-mode counters (DESIGN.md §14): (deadline hits, shed
+    /// requests, worker panics, fallback plans).
+    pub fn degraded_counters(&self) -> (u64, u64, u64, u64) {
+        (
+            self.deadline_hits.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+            self.worker_panics.load(Ordering::Relaxed),
+            self.fallback_plans.load(Ordering::Relaxed),
+        )
+    }
+
     /// Handle one parsed request end to end, wrapping the core lifecycle
     /// in a `service.request` trace span and recording latency, metrics,
     /// and per-request telemetry on every path.
@@ -312,6 +367,8 @@ impl PlanService {
                 cached: true,
                 dedup: false,
                 disk: false,
+                degraded: None,
+                fallback: false,
                 plan_json: Some(plan_json),
                 search: None,
                 error: None,
@@ -333,6 +390,8 @@ impl PlanService {
                     cached: true,
                     dedup: false,
                     disk: true,
+                    degraded: None,
+                    fallback: false,
                     plan_json: Some(plan_json),
                     search: None,
                     error: None,
@@ -356,6 +415,8 @@ impl PlanService {
                     cached: true,
                     dedup: false,
                     disk: false,
+                    degraded: None,
+                    fallback: false,
                     plan_json: Some(plan_json),
                     search: None,
                     error: None,
@@ -373,7 +434,7 @@ impl PlanService {
             let published = entry.wait();
             drop(wait);
             let resp = match published {
-                Ok(plan_json) => {
+                Ok((plan_json, degraded)) => {
                     // Counted only on success, so served_without_search
                     // never includes requests that came back as errors.
                     self.dedup_served.fetch_add(1, Ordering::Relaxed);
@@ -384,6 +445,8 @@ impl PlanService {
                         cached: true,
                         dedup: true,
                         disk: false,
+                        degraded,
+                        fallback: false,
                         plan_json: Some(plan_json),
                         search: None,
                         error: None,
@@ -432,33 +495,66 @@ impl PlanService {
                     self.mx.pipelined.add(1);
                 }
                 timeline = std::mem::take(&mut report.timeline);
-                let plan_json = report.plan.to_json().to_string();
-                let publish = rec.span("cache.publish", "service", trace_id);
-                self.cache.put(fp, plan_json.clone());
-                if let Some(disk) = &self.disk {
-                    // Write-through: a failed append degrades durability
-                    // but must never fail the request itself.
-                    let _ = disk.put(fp.0, &plan_json);
+                // Degraded-mode accounting: a deadline hit wins the
+                // label (it is the cause even when it also forced the
+                // fallback plan); panics that poisoned every worker
+                // surface as `"panic"`.
+                let degraded: Option<String> = if report.deadline_hit {
+                    Some("deadline".to_string())
+                } else if report.fallback {
+                    Some("panic".to_string())
+                } else {
+                    None
+                };
+                if report.deadline_hit {
+                    self.deadline_hits.fetch_add(1, Ordering::Relaxed);
+                    self.mx.deadline_hits.add(1);
                 }
-                drop(publish);
-                Ok((plan_json, stats))
+                if report.fallback {
+                    self.fallback_plans.fetch_add(1, Ordering::Relaxed);
+                    self.mx.fallback_plans.add(1);
+                }
+                if report.worker_panics > 0 {
+                    self.worker_panics
+                        .fetch_add(report.worker_panics as u64, Ordering::Relaxed);
+                    self.mx.worker_panics.add(report.worker_panics as u64);
+                }
+                let plan_json = report.plan.to_json().to_string();
+                if degraded.is_none() {
+                    let publish = rec.span("cache.publish", "service", trace_id);
+                    self.cache.put(fp, plan_json.clone());
+                    if let Some(disk) = &self.disk {
+                        // Write-through: a failed append degrades
+                        // durability but must never fail the request.
+                        let _ = disk.put(fp.0, &plan_json);
+                    }
+                    drop(publish);
+                }
+                // Degraded plans are NEVER cached (memory or disk): the
+                // deadline is not part of the fingerprint, so a plan
+                // truncated by one request's budget must not be served
+                // as the canonical answer for the fingerprint.
+                Ok((plan_json, degraded, stats, report.fallback))
             }
             Err(e) => Err(format!("{e:#}")),
         };
         // Publish order: cache first (above), then clear the in-flight
         // entry, then wake waiters — latecomers either find the entry
         // (and wait) or re-probe the cache and hit. Waiters get the plan
-        // only; the search stats belong to the request that ran it.
+        // and its degraded marker; the search stats belong to the
+        // request that ran it.
         self.inflight.lock().expect("inflight table poisoned").remove(&fp.0);
-        entry.publish(outcome.clone().map(|(plan_json, _)| plan_json));
+        entry.publish(outcome.clone().map(|(plan_json, degraded, _, _)| (plan_json, degraded)));
 
         let resp = match outcome {
-            Ok((plan_json, stats)) => PlanResponse {
+            Ok((plan_json, degraded, stats, fallback)) => PlanResponse {
                 id: req.id.clone(),
                 fingerprint: hex,
                 cached: false,
                 dedup: false,
                 disk: false,
+                degraded,
+                fallback,
                 plan_json: Some(plan_json),
                 search: Some(stats),
                 error: None,
@@ -472,6 +568,99 @@ impl PlanService {
     pub fn handle_line(&self, line: &str) -> PlanResponse {
         match PartitionRequest::parse_line(line) {
             Ok(req) => self.handle(&req),
+            Err(e) => PlanResponse::error("", "", format!("{e:#}")),
+        }
+    }
+
+    /// Admission-control path: answer `req` WITHOUT entering the search
+    /// queue. Serves the cached plan when one exists (memory, then
+    /// disk), otherwise the search-free fallback plan — every answer is
+    /// marked `degraded:"shed"` so callers can tell the plan skipped
+    /// the search. Counted in requests/errors/latency like any other
+    /// request, but never runs or joins a search.
+    pub fn handle_shed(&self, req: &PartitionRequest) -> PlanResponse {
+        let t0 = std::time::Instant::now();
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        self.mx.shed.add(1);
+        let resp = self.handle_shed_inner(req);
+        let latency_ns = t0.elapsed().as_nanos() as u64;
+        self.latency.record(latency_ns);
+        self.mx.request_latency.record(latency_ns);
+        self.mx.requests.add(1);
+        if resp.error.is_some() {
+            self.mx.errors.add(1);
+        }
+        resp
+    }
+
+    fn handle_shed_inner(&self, req: &PartitionRequest) -> PlanResponse {
+        let job = match req.build_job(&self.defaults) {
+            Ok(j) => j,
+            Err(e) => return PlanResponse::error(&req.id, "", format!("{e:#}")),
+        };
+        let fp = job.fingerprint();
+        let hex = fp.hex();
+        if let Some(plan_json) = self.cache.get(fp) {
+            self.mx.cache_hits.add(1);
+            return PlanResponse {
+                id: req.id.clone(),
+                fingerprint: hex,
+                cached: true,
+                dedup: false,
+                disk: false,
+                degraded: Some("shed".to_string()),
+                fallback: false,
+                plan_json: Some(plan_json),
+                search: None,
+                error: None,
+            };
+        }
+        if let Some(disk) = &self.disk {
+            if let Some(plan_json) = disk.get(fp.0) {
+                self.cache.put(fp, plan_json.clone());
+                return PlanResponse {
+                    id: req.id.clone(),
+                    fingerprint: hex,
+                    cached: true,
+                    dedup: false,
+                    disk: true,
+                    degraded: Some("shed".to_string()),
+                    fallback: false,
+                    plan_json: Some(plan_json),
+                    search: None,
+                    error: None,
+                };
+            }
+        }
+        // Nothing cached anywhere: answer with the search-free fallback
+        // plan rather than block or error. It is NOT cached — the next
+        // uncontended request for this fingerprint runs a real search.
+        match job.fallback_plan() {
+            Ok(plan) => {
+                self.fallback_plans.fetch_add(1, Ordering::Relaxed);
+                self.mx.fallback_plans.add(1);
+                PlanResponse {
+                    id: req.id.clone(),
+                    fingerprint: hex,
+                    cached: false,
+                    dedup: false,
+                    disk: false,
+                    degraded: Some("shed".to_string()),
+                    fallback: true,
+                    plan_json: Some(plan.to_json().to_string()),
+                    search: None,
+                    error: None,
+                }
+            }
+            Err(e) => PlanResponse::error(&req.id, &hex, format!("{e:#}")),
+        }
+    }
+
+    /// Parse and shed one JSONL line (the queue-full path of
+    /// [`serve_jsonl`]).
+    pub fn handle_shed_line(&self, line: &str) -> PlanResponse {
+        match PartitionRequest::parse_line(line) {
+            Ok(req) => self.handle_shed(&req),
             Err(e) => PlanResponse::error("", "", format!("{e:#}")),
         }
     }
@@ -508,6 +697,19 @@ impl<T> BoundedQueue<T> {
         }
         st.items.push_back(item);
         self.not_empty.notify_one();
+    }
+
+    /// Non-blocking push: `Err(item)` when the queue is full or closed,
+    /// handing the item back so the caller can shed it instead of
+    /// waiting behind slow consumers.
+    fn try_push(&self, item: T) -> std::result::Result<(), T> {
+        let mut st = self.state.lock().expect("queue poisoned");
+        if st.closed || st.items.len() >= self.bound {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
     }
 
     fn pop(&self) -> Option<T> {
@@ -560,6 +762,14 @@ pub struct ServeSummary {
     /// requests finally has a latency signal beyond `wall_seconds`.
     pub latency_p50_ms: f64,
     pub latency_p99_ms: f64,
+    /// Degraded-mode accounting for this run (DESIGN.md §14): searches
+    /// stopped at their deadline, requests shed at admission, search
+    /// workers lost to panics, and requests answered with the
+    /// search-free fallback plan. All 0 on a healthy run.
+    pub deadline_hits: u64,
+    pub shed: u64,
+    pub worker_panics: u64,
+    pub fallback_plans: u64,
 }
 
 impl ServeSummary {
@@ -601,6 +811,18 @@ impl ServeSummary {
         if self.disk_hits > 0 {
             s.push_str(&format!(", {} disk-tier hits", self.disk_hits));
         }
+        if self.deadline_hits > 0 {
+            s.push_str(&format!(", {} deadline-hit", self.deadline_hits));
+        }
+        if self.shed > 0 {
+            s.push_str(&format!(", {} shed", self.shed));
+        }
+        if self.worker_panics > 0 {
+            s.push_str(&format!(", {} worker panics", self.worker_panics));
+        }
+        if self.fallback_plans > 0 {
+            s.push_str(&format!(", {} fallback plans", self.fallback_plans));
+        }
         if self.pipelined_searches > 0 {
             s.push_str(&format!(
                 ", {} pipelined (mean bubble {:.1}%)",
@@ -627,6 +849,7 @@ pub fn run_batch(
     let dedup0 = service.dedup_served();
     let sc0 = service.search_cache_counters();
     let pp0 = service.pipelined_counters();
+    let dg0 = service.degraded_counters();
     let lat0 = service.latency_snapshot();
 
     let queue: BoundedQueue<usize> = BoundedQueue::new(queue_bound);
@@ -635,6 +858,7 @@ pub fn run_batch(
         for _ in 0..pool.max(1) {
             scope.spawn(|| {
                 while let Some(i) = queue.pop() {
+                    service.mx.queue_depth.add(-1);
                     recorder().instant("queue.dequeue", "service", 0, &[("index", i as i64)]);
                     let resp = service.handle(&requests[i]);
                     results.lock().expect("results poisoned")[i] = Some(resp);
@@ -644,6 +868,7 @@ pub fn run_batch(
         for i in 0..requests.len() {
             recorder().instant("queue.enqueue", "service", 0, &[("index", i as i64)]);
             queue.push(i);
+            service.mx.queue_depth.add(1);
         }
         queue.close();
     });
@@ -656,6 +881,7 @@ pub fn run_batch(
         .collect();
     let sc1 = service.search_cache_counters();
     let pp1 = service.pipelined_counters();
+    let dg1 = service.degraded_counters();
     let lat = service.latency_snapshot().delta(&lat0);
     let summary = ServeSummary {
         requests: responses.len(),
@@ -673,18 +899,28 @@ pub fn run_batch(
         bubble_micros: pp1.1 - pp0.1,
         latency_p50_ms: lat.percentile(0.50) / 1e6,
         latency_p99_ms: lat.percentile(0.99) / 1e6,
+        deadline_hits: dg1.0 - dg0.0,
+        shed: dg1.1 - dg0.1,
+        worker_panics: dg1.2 - dg0.2,
+        fallback_plans: dg1.3 - dg0.3,
     };
     (responses, summary)
 }
 
 /// Stream JSONL requests from `input`, writing one response line per
 /// request to `out` as each completes (use the `id` field to correlate;
-/// completion order is not input order). Returns the run summary.
+/// completion order is not input order). `max_pending` bounds the
+/// pending queue for admission control: arrivals beyond it are answered
+/// inline on the intake thread via [`PlanService::handle_shed`]
+/// (`degraded:"shed"`) instead of blocking behind slow searches; `0`
+/// means `2 * pool`, under which intake blocks as before. Returns the
+/// run summary.
 pub fn serve_jsonl<R: BufRead, W: Write + Send>(
     service: &PlanService,
     input: R,
     out: &Mutex<W>,
     pool: usize,
+    max_pending: usize,
 ) -> std::io::Result<ServeSummary> {
     let t0 = std::time::Instant::now();
     let searches0 = service.searches_run();
@@ -693,29 +929,36 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
     let dedup0 = service.dedup_served();
     let sc0 = service.search_cache_counters();
     let pp0 = service.pipelined_counters();
+    let dg0 = service.degraded_counters();
     let lat0 = service.latency_snapshot();
     let requests = std::sync::atomic::AtomicU64::new(0);
     let errors = std::sync::atomic::AtomicU64::new(0);
 
-    let queue: BoundedQueue<String> = BoundedQueue::new(2 * pool.max(1));
+    let shedding = max_pending > 0;
+    let bound = if shedding { max_pending } else { 2 * pool.max(1) };
+    let queue: BoundedQueue<String> = BoundedQueue::new(bound);
     let io_err: Mutex<Option<std::io::Error>> = Mutex::new(None);
+    let write_line = |resp: &PlanResponse| {
+        let mut w = out.lock().expect("output poisoned");
+        if let Err(e) = writeln!(w, "{}", resp.to_json_line()) {
+            let mut slot = io_err.lock().expect("io_err poisoned");
+            if slot.is_none() {
+                *slot = Some(e);
+            }
+        }
+    };
     std::thread::scope(|scope| -> std::io::Result<()> {
         for _ in 0..pool.max(1) {
             scope.spawn(|| {
                 while let Some(line) = queue.pop() {
+                    service.mx.queue_depth.add(-1);
                     recorder().instant("queue.dequeue", "service", 0, &[]);
                     let resp = service.handle_line(&line);
                     requests.fetch_add(1, Ordering::Relaxed);
                     if resp.error.is_some() {
                         errors.fetch_add(1, Ordering::Relaxed);
                     }
-                    let mut w = out.lock().expect("output poisoned");
-                    if let Err(e) = writeln!(w, "{}", resp.to_json_line()) {
-                        let mut slot = io_err.lock().expect("io_err poisoned");
-                        if slot.is_none() {
-                            *slot = Some(e);
-                        }
-                    }
+                    write_line(&resp);
                 }
             });
         }
@@ -731,7 +974,25 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
                 continue;
             }
             recorder().instant("queue.enqueue", "service", 0, &[]);
-            queue.push(line);
+            if shedding {
+                match queue.try_push(line) {
+                    Ok(()) => service.mx.queue_depth.add(1),
+                    Err(line) => {
+                        // Queue full: shed at admission — answered from
+                        // cache or the fallback plan, never dropped.
+                        recorder().instant("queue.shed", "service", 0, &[]);
+                        let resp = service.handle_shed_line(&line);
+                        requests.fetch_add(1, Ordering::Relaxed);
+                        if resp.error.is_some() {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                        write_line(&resp);
+                    }
+                }
+            } else {
+                queue.push(line);
+                service.mx.queue_depth.add(1);
+            }
         }
         queue.close();
         Ok(())
@@ -741,6 +1002,7 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
     }
     let sc1 = service.search_cache_counters();
     let pp1 = service.pipelined_counters();
+    let dg1 = service.degraded_counters();
     let lat = service.latency_snapshot().delta(&lat0);
     Ok(ServeSummary {
         requests: requests.load(Ordering::Relaxed) as usize,
@@ -758,6 +1020,10 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
         bubble_micros: pp1.1 - pp0.1,
         latency_p50_ms: lat.percentile(0.50) / 1e6,
         latency_p99_ms: lat.percentile(0.99) / 1e6,
+        deadline_hits: dg1.0 - dg0.0,
+        shed: dg1.1 - dg0.1,
+        worker_panics: dg1.2 - dg0.2,
+        fallback_plans: dg1.3 - dg0.3,
     })
 }
 
@@ -901,7 +1167,7 @@ mod tests {
                      bad json\n";
         let out = Mutex::new(Vec::<u8>::new());
         let summary =
-            serve_jsonl(&svc, std::io::BufReader::new(input.as_bytes()), &out, 2).unwrap();
+            serve_jsonl(&svc, std::io::BufReader::new(input.as_bytes()), &out, 2, 0).unwrap();
         assert_eq!(summary.requests, 3, "blank lines are skipped");
         assert_eq!(summary.errors, 1);
         let text = String::from_utf8(out.into_inner().unwrap()).unwrap();
@@ -909,6 +1175,45 @@ mod tests {
         for line in text.lines() {
             assert!(crate::util::json::parse(line).is_ok(), "bad response line: {line}");
         }
+    }
+
+    #[test]
+    fn shed_requests_serve_cache_or_fallback_without_searching() {
+        let svc = tiny_service();
+        // Cold shed: nothing cached → the search-free fallback plan.
+        let a = svc.handle_shed(&req("cold", 9));
+        assert!(a.error.is_none(), "{:?}", a.error);
+        assert_eq!(a.degraded.as_deref(), Some("shed"));
+        assert!(a.fallback);
+        assert!(!a.cached);
+        assert!(a.plan_json.is_some());
+        assert_eq!(svc.searches_run(), 0, "shedding must never search");
+        // Warm shed: a real search first, then shed the same fingerprint.
+        let b = svc.handle(&req("warm", 10));
+        assert!(b.error.is_none(), "{:?}", b.error);
+        let c = svc.handle_shed(&req("warm2", 10));
+        assert_eq!(c.degraded.as_deref(), Some("shed"));
+        assert!(!c.fallback);
+        assert!(c.cached);
+        assert_eq!(c.plan_json, b.plan_json, "warm shed serves the cached plan");
+        let (_, shed, _, fallbacks) = svc.degraded_counters();
+        assert_eq!(shed, 2);
+        assert_eq!(fallbacks, 1);
+        // The fallback plan was NOT cached: a later unshed request for
+        // the cold fingerprint still runs its own search.
+        let d = svc.handle(&req("cold2", 9));
+        assert!(!d.cached, "fallback plans must never be cached");
+        assert_eq!(svc.searches_run(), 2);
+    }
+
+    #[test]
+    fn bounded_queue_try_push_sheds_when_full_or_closed() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        assert!(q.try_push(1).is_ok());
+        assert_eq!(q.try_push(2), Err(2), "full queue hands the item back");
+        assert_eq!(q.pop(), Some(1));
+        q.close();
+        assert_eq!(q.try_push(3), Err(3), "closed queue refuses new items");
     }
 
     #[test]

@@ -1,0 +1,282 @@
+//! Deterministic fault-injection harness (DESIGN.md §14).
+//!
+//! A **failpoint** is a named site in the code where a fault can be
+//! injected on demand: a worker thread panic, a disk read/write error,
+//! a slow search round. Production binaries carry the sites but they
+//! compile down to one relaxed atomic load when nothing is armed — the
+//! hot path never pays for the harness.
+//!
+//! Arming is textual (`PALLAS_FAILPOINTS=worker.panic=0.5@11`) or
+//! programmatic ([`Failpoints::arm`]). Every armed failpoint carries a
+//! probability and a seed, and each *draw* hashes
+//! `(seed, name, site-key)` through SplitMix64 — a pure function, so a
+//! fault schedule reproduces exactly across runs and across machines.
+//! Callers on concurrent paths pass an explicit site key
+//! ([`Failpoints::should_fail_at`]) so the schedule does not depend on
+//! thread interleaving; serial paths use the per-failpoint draw counter
+//! ([`Failpoints::should_fail`]).
+//!
+//! The registry is process-global ([`failpoints()`]) because faults
+//! must reach code (the disk tier, worker threads) that has no request
+//! context to thread a handle through. Tests that arm the global
+//! registry must serialise on a lock and disarm afterwards.
+
+use crate::util::hash::Fnv64;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Panic inside an MCTS worker thread at a round barrier.
+pub const WORKER_PANIC: &str = "worker.panic";
+/// I/O error on a disk-tier record read.
+pub const DISK_READ_ERR: &str = "disk.read_err";
+/// I/O error on a disk-tier append or compaction write.
+pub const DISK_WRITE_ERR: &str = "disk.write_err";
+/// Sleep [`SLOW_ROUND_SLEEP_MS`](crate::service::executor::SLOW_ROUND_SLEEP_MS)
+/// inside a worker's search round (exercises deadlines).
+pub const SEARCH_SLOW_ROUND: &str = "search.slow_round";
+
+/// Every failpoint the codebase defines. `arm_spec` rejects names
+/// outside this list so a typo in `PALLAS_FAILPOINTS` fails loudly
+/// instead of silently arming nothing.
+pub const ALL: &[&str] = &[WORKER_PANIC, DISK_READ_ERR, DISK_WRITE_ERR, SEARCH_SLOW_ROUND];
+
+struct Armed {
+    prob: f64,
+    seed: u64,
+    /// Serial-path draw counter (the site key when none is supplied).
+    draws: AtomicU64,
+    /// How many draws actually fired (for tests and diagnostics).
+    fired: AtomicU64,
+}
+
+/// A registry of armed failpoints. The process-global instance is
+/// [`failpoints()`]; tests construct private instances.
+#[derive(Default)]
+pub struct Failpoints {
+    /// Fast-path guard: `false` means NOTHING is armed and every
+    /// `should_fail*` call returns after one relaxed load.
+    any_armed: AtomicBool,
+    table: Mutex<HashMap<&'static str, Armed>>,
+}
+
+impl Failpoints {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Arm `name` to fire with probability `prob` under `seed`.
+    pub fn arm(&self, name: &str, prob: f64, seed: u64) -> anyhow::Result<()> {
+        let name = ALL
+            .iter()
+            .find(|&&n| n == name)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unknown failpoint \"{name}\" (known: {ALL:?})"))?;
+        if !(0.0..=1.0).contains(&prob) {
+            anyhow::bail!("failpoint \"{name}\": probability {prob} is outside [0, 1]");
+        }
+        let mut t = self.table.lock().unwrap();
+        t.insert(
+            name,
+            Armed { prob, seed, draws: AtomicU64::new(0), fired: AtomicU64::new(0) },
+        );
+        self.any_armed.store(true, Ordering::Release);
+        Ok(())
+    }
+
+    /// Arm from a spec string: `name=prob[@seed][,name=prob[@seed]]...`
+    /// (seed defaults to 0). Empty specs are a no-op.
+    pub fn arm_spec(&self, spec: &str) -> anyhow::Result<()> {
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (name, rest) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("failpoint spec \"{part}\": expected name=prob[@seed]"))?;
+            let (prob_s, seed_s) = match rest.split_once('@') {
+                Some((p, s)) => (p, Some(s)),
+                None => (rest, None),
+            };
+            let prob: f64 = prob_s
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("failpoint spec \"{part}\": bad probability \"{prob_s}\""))?;
+            let seed: u64 = match seed_s {
+                Some(s) => s
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("failpoint spec \"{part}\": bad seed \"{s}\""))?,
+                None => 0,
+            };
+            self.arm(name.trim(), prob, seed)?;
+        }
+        Ok(())
+    }
+
+    /// Disarm everything, restoring the one-atomic-load fast path.
+    pub fn disarm_all(&self) {
+        let mut t = self.table.lock().unwrap();
+        t.clear();
+        self.any_armed.store(false, Ordering::Release);
+    }
+
+    /// How many times `name` actually fired since it was armed.
+    pub fn fired(&self, name: &str) -> u64 {
+        if !self.any_armed.load(Ordering::Acquire) {
+            return 0;
+        }
+        let t = self.table.lock().unwrap();
+        t.get(name).map(|a| a.fired.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// Serial-path draw: the site key is the failpoint's own draw
+    /// counter. Deterministic only when calls to this failpoint happen
+    /// in a deterministic order (single-threaded paths).
+    pub fn should_fail(&self, name: &str) -> bool {
+        if !self.any_armed.load(Ordering::Relaxed) {
+            return false;
+        }
+        let t = self.table.lock().unwrap();
+        let Some(a) = t.get(name) else { return false };
+        let site = a.draws.fetch_add(1, Ordering::Relaxed);
+        Self::draw(a, name, site)
+    }
+
+    /// Concurrent-path draw: the caller supplies the site key (e.g.
+    /// `round << 32 | worker`), making the schedule independent of
+    /// thread interleaving.
+    pub fn should_fail_at(&self, name: &str, site: u64) -> bool {
+        if !self.any_armed.load(Ordering::Relaxed) {
+            return false;
+        }
+        let t = self.table.lock().unwrap();
+        let Some(a) = t.get(name) else { return false };
+        Self::draw(a, name, site)
+    }
+
+    fn draw(a: &Armed, name: &str, site: u64) -> bool {
+        if a.prob <= 0.0 {
+            return false;
+        }
+        let mut h = Fnv64::new();
+        h.bytes(name.as_bytes());
+        let mut z = a.seed ^ h.finish() ^ site.wrapping_mul(0x9e3779b97f4a7c15);
+        // SplitMix64 finaliser: full avalanche, so adjacent sites and
+        // seeds decorrelate.
+        z = z.wrapping_add(0x9e3779b97f4a7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^= z >> 31;
+        // Top 53 bits → uniform f64 in [0, 1).
+        let u = (z >> 11) as f64 / (1u64 << 53) as f64;
+        let fire = u < a.prob;
+        if fire {
+            a.fired.fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+}
+
+/// The process-global registry every instrumented site consults.
+pub fn failpoints() -> &'static Failpoints {
+    static GLOBAL: OnceLock<Failpoints> = OnceLock::new();
+    GLOBAL.get_or_init(Failpoints::new)
+}
+
+/// Arm the global registry from `PALLAS_FAILPOINTS`, if set. Called by
+/// the CLI entry points; library users call [`Failpoints::arm_spec`].
+pub fn arm_from_env() -> anyhow::Result<()> {
+    if let Ok(spec) = std::env::var("PALLAS_FAILPOINTS") {
+        failpoints().arm_spec(&spec)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_registry_never_fires() {
+        let fp = Failpoints::new();
+        assert!(!fp.should_fail(WORKER_PANIC));
+        assert!(!fp.should_fail_at(DISK_READ_ERR, 42));
+        assert_eq!(fp.fired(WORKER_PANIC), 0);
+    }
+
+    #[test]
+    fn draws_are_a_pure_function_of_seed_name_site() {
+        let a = Failpoints::new();
+        let b = Failpoints::new();
+        a.arm(WORKER_PANIC, 0.5, 11).unwrap();
+        b.arm(WORKER_PANIC, 0.5, 11).unwrap();
+        let sched_a: Vec<bool> = (0..64).map(|s| a.should_fail_at(WORKER_PANIC, s)).collect();
+        let sched_b: Vec<bool> = (0..64).map(|s| b.should_fail_at(WORKER_PANIC, s)).collect();
+        assert_eq!(sched_a, sched_b, "same (seed, name, site) ⇒ same schedule");
+        assert!(sched_a.iter().any(|&f| f), "p=0.5 over 64 sites must fire");
+        assert!(sched_a.iter().any(|&f| !f), "p=0.5 over 64 sites must also pass");
+    }
+
+    #[test]
+    fn different_seeds_and_names_decorrelate() {
+        let fp = Failpoints::new();
+        fp.arm(WORKER_PANIC, 0.5, 1).unwrap();
+        fp.arm(DISK_READ_ERR, 0.5, 1).unwrap();
+        let by_name: Vec<(bool, bool)> = (0..64)
+            .map(|s| (fp.should_fail_at(WORKER_PANIC, s), fp.should_fail_at(DISK_READ_ERR, s)))
+            .collect();
+        assert!(by_name.iter().any(|&(a, b)| a != b), "names must not share a schedule");
+        let fp2 = Failpoints::new();
+        fp2.arm(WORKER_PANIC, 0.5, 2).unwrap();
+        let differs = (0..64).any(|s| fp.should_fail_at(WORKER_PANIC, s) != fp2.should_fail_at(WORKER_PANIC, s));
+        assert!(differs, "seeds must not share a schedule");
+    }
+
+    #[test]
+    fn probability_extremes_are_exact() {
+        let fp = Failpoints::new();
+        fp.arm(DISK_WRITE_ERR, 1.0, 3).unwrap();
+        fp.arm(SEARCH_SLOW_ROUND, 0.0, 3).unwrap();
+        for s in 0..32 {
+            assert!(fp.should_fail_at(DISK_WRITE_ERR, s), "p=1 always fires");
+            assert!(!fp.should_fail_at(SEARCH_SLOW_ROUND, s), "p=0 never fires");
+        }
+        assert_eq!(fp.fired(DISK_WRITE_ERR), 32);
+        assert_eq!(fp.fired(SEARCH_SLOW_ROUND), 0);
+    }
+
+    #[test]
+    fn spec_strings_parse_and_reject_garbage() {
+        let fp = Failpoints::new();
+        fp.arm_spec("worker.panic=0.5@11, disk.read_err=0.25").unwrap();
+        assert!(fp.should_fail_at(WORKER_PANIC, 0) || !fp.should_fail_at(WORKER_PANIC, 0));
+        assert!(fp.arm_spec("no.such.failpoint=0.5").is_err());
+        assert!(fp.arm_spec("worker.panic").is_err());
+        assert!(fp.arm_spec("worker.panic=nope").is_err());
+        assert!(fp.arm_spec("worker.panic=0.5@nope").is_err());
+        assert!(fp.arm_spec("worker.panic=1.5").is_err());
+        fp.arm_spec("").unwrap();
+        fp.arm_spec(" , ").unwrap();
+    }
+
+    #[test]
+    fn serial_draws_advance_the_counter() {
+        let fp = Failpoints::new();
+        fp.arm(DISK_READ_ERR, 0.5, 9).unwrap();
+        let first: Vec<bool> = (0..32).map(|_| fp.should_fail(DISK_READ_ERR)).collect();
+        assert!(first.iter().any(|&f| f) && first.iter().any(|&f| !f));
+        // Counter-keyed draws match explicit-site draws over the same range.
+        let fp2 = Failpoints::new();
+        fp2.arm(DISK_READ_ERR, 0.5, 9).unwrap();
+        let keyed: Vec<bool> = (0..32).map(|s| fp2.should_fail_at(DISK_READ_ERR, s)).collect();
+        assert_eq!(first, keyed);
+    }
+
+    #[test]
+    fn disarm_restores_the_fast_path() {
+        let fp = Failpoints::new();
+        fp.arm(WORKER_PANIC, 1.0, 0).unwrap();
+        assert!(fp.should_fail_at(WORKER_PANIC, 0));
+        fp.disarm_all();
+        assert!(!fp.should_fail_at(WORKER_PANIC, 0));
+        assert_eq!(fp.fired(WORKER_PANIC), 0, "disarm clears fire counts");
+    }
+}

@@ -1,11 +1,13 @@
 //! Infrastructure substrates built from scratch because the crate
 //! registry is unreachable in this environment (DESIGN.md §3):
 //! PRNG (`rng`), JSON (`json`), CLI flags (`cli`), bench harness
-//! (`bench`), stable hashing (`hash`), property testing (`prop`), and
-//! descriptive stats (`stats`).
+//! (`bench`), stable hashing (`hash`), property testing (`prop`),
+//! descriptive stats (`stats`), and the deterministic fault-injection
+//! harness (`failpoints`, DESIGN.md §14).
 
 pub mod bench;
 pub mod cli;
+pub mod failpoints;
 pub mod hash;
 pub mod json;
 pub mod prop;

@@ -1,0 +1,354 @@
+//! Chaos acceptance for the fault-tolerant serving layer (DESIGN.md
+//! §14): deterministic fault injection via `util::failpoints` drives
+//! worker panics, disk faults, and slow search rounds through the full
+//! service stack, and the suite pins the headline guarantees — every
+//! request is answered (degraded, never dropped), degraded plans are
+//! never cached, and a fault schedule is an exact function of its seed
+//! (the same storm replays byte-identically).
+//!
+//! Every test arms the PROCESS-GLOBAL failpoint registry, so the suite
+//! serializes through one mutex and disarms around each body; no other
+//! test in this binary can observe the injected faults.
+
+use automap::service::{
+    run_batch, serve_jsonl, DiskTier, JobDefaults, PartitionRequest, PlanService, ServiceConfig,
+};
+use automap::util::failpoints::{
+    failpoints, DISK_READ_ERR, DISK_WRITE_ERR, SEARCH_SLOW_ROUND, WORKER_PANIC,
+};
+use std::sync::Mutex;
+
+static FP_LOCK: Mutex<()> = Mutex::new(());
+
+struct Disarm;
+
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        failpoints().disarm_all();
+    }
+}
+
+/// Run `body` with exclusive ownership of the global failpoint
+/// registry, disarmed on entry and (via the drop guard) on any exit.
+/// `_disarm` is declared after `_guard` so it drops FIRST: the
+/// registry is always clean before the mutex is released to the next
+/// test.
+fn with_failpoints<T>(body: impl FnOnce() -> T) -> T {
+    let _guard = FP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    failpoints().disarm_all();
+    let _disarm = Disarm;
+    body()
+}
+
+fn temp_cache_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("automap-chaos-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn req(id: &str, seed: u64) -> PartitionRequest {
+    PartitionRequest {
+        id: id.to_string(),
+        model: "mlp".to_string(),
+        mesh: "batch=2,model=2".to_string(),
+        budget: 60,
+        seed,
+        workers: 4,
+        ..Default::default()
+    }
+}
+
+/// In-code mirror of configs/service_smoke.jsonl (model variety, a
+/// constrained request, and a pipelined one), usable regardless of the
+/// test working directory.
+fn smoke_corpus() -> Vec<PartitionRequest> {
+    vec![
+        PartitionRequest {
+            pin: vec!["batch".to_string()],
+            shard: vec!["x:0:batch".to_string()],
+            ..req("smoke-mlp", 7)
+        },
+        PartitionRequest {
+            model: "transformer".to_string(),
+            layers: 2,
+            mesh: "model=4".to_string(),
+            budget: 80,
+            ..req("smoke-transformer", 3)
+        },
+        PartitionRequest {
+            model: "graphnet".to_string(),
+            mesh: "model=2".to_string(),
+            budget: 40,
+            ..req("smoke-graphnet", 5)
+        },
+        PartitionRequest {
+            model: "transformer".to_string(),
+            layers: 2,
+            mesh: "model=2".to_string(),
+            pipeline: "stages=2,microbatches=4".to_string(),
+            budget: 40,
+            ..req("smoke-pipeline", 3)
+        },
+    ]
+}
+
+/// The ISSUE acceptance: worker panics at 50% probability plus a 1 ms
+/// deadline over the smoke corpus — every request is still answered
+/// with a plan (anytime or fallback), zero errors, zero aborts.
+#[test]
+fn acceptance_panic_storm_with_tight_deadline_answers_every_request() {
+    with_failpoints(|| {
+        failpoints().arm(WORKER_PANIC, 0.5, 11).unwrap();
+        let svc = PlanService::new(ServiceConfig {
+            defaults: JobDefaults { deadline_ms: 1, ..JobDefaults::default() },
+            ..ServiceConfig::default()
+        });
+        let requests = smoke_corpus();
+        let (responses, summary) = run_batch(&svc, &requests, 2, 4);
+        assert_eq!(responses.len(), requests.len());
+        for r in &responses {
+            assert!(r.error.is_none(), "{}: {:?}", r.id, r.error);
+            assert!(r.plan_json.is_some(), "{}: every request must get a plan", r.id);
+        }
+        assert_eq!(summary.errors, 0);
+        assert!(
+            responses.iter().any(|r| r.degraded.is_some()),
+            "a 1ms deadline over cold searches must degrade something: {}",
+            summary.describe()
+        );
+        assert!(
+            summary.deadline_hits + summary.fallback_plans > 0,
+            "{}",
+            summary.describe()
+        );
+        // Degraded plans must not have been published to the cache.
+        for (r, q) in responses.iter().zip(&requests) {
+            if r.degraded.is_some() {
+                assert!(!r.cached, "{}: degraded responses are never cache hits", q.id);
+            }
+        }
+    });
+}
+
+/// The determinism contract: an armed fault schedule is a pure function
+/// of `(failpoint seed, round, worker)`, so rerunning the identical
+/// storm on a fresh service reproduces every response byte for byte.
+#[test]
+fn panic_storm_replays_byte_identically() {
+    with_failpoints(|| {
+        failpoints().arm(WORKER_PANIC, 0.5, 11).unwrap();
+        let run = || {
+            let svc = PlanService::new(ServiceConfig::default());
+            let requests = [req("a", 100), req("b", 101)];
+            let (responses, summary) = run_batch(&svc, &requests, 1, 2);
+            let lines: Vec<String> = responses.iter().map(|r| r.to_json_line()).collect();
+            (lines, summary)
+        };
+        let (first, s1) = run();
+        let (second, s2) = run();
+        assert_eq!(first, second, "same faultpoint seed, same storm, same bytes");
+        assert!(s1.worker_panics > 0, "seed 11 fires in round 1 for K=4");
+        assert_eq!(s1.worker_panics, s2.worker_panics);
+        for line in &first {
+            assert!(!line.contains("\"error\""), "panics degrade, they do not error: {line}");
+        }
+    });
+}
+
+/// Certain death for every worker: the merge has no live tree left, so
+/// the request is answered by the search-free fallback plan, labeled
+/// `degraded:"panic"` — and that plan is NOT cached.
+#[test]
+fn total_panic_storm_serves_the_fallback_plan() {
+    with_failpoints(|| {
+        failpoints().arm(WORKER_PANIC, 1.0, 1).unwrap();
+        let svc = PlanService::new(ServiceConfig::default());
+        let doomed = svc.handle(&req("doomed", 3));
+        assert!(doomed.error.is_none(), "{:?}", doomed.error);
+        assert_eq!(doomed.degraded.as_deref(), Some("panic"));
+        assert!(doomed.fallback);
+        assert!(doomed.plan_json.is_some());
+        let stats = doomed.search.as_ref().expect("the leader carries search stats");
+        assert_eq!(stats.worker_panics, 4, "all four workers poisoned in round 1");
+        // Lift the faults: the identical fingerprint still runs a real
+        // search, because the fallback plan was never published.
+        failpoints().disarm_all();
+        let clean = svc.handle(&req("retry", 3));
+        assert!(clean.error.is_none(), "{:?}", clean.error);
+        assert!(!clean.cached, "fallback plans must never be cached");
+        assert!(clean.degraded.is_none());
+        assert!(!clean.fallback);
+        assert_eq!(svc.searches_run(), 2);
+    });
+}
+
+/// A deadline hit mid-search returns the best-so-far anytime plan,
+/// labeled `degraded:"deadline"` — also never cached.
+#[test]
+fn deadline_hit_returns_anytime_plan_and_skips_the_cache() {
+    with_failpoints(|| {
+        failpoints().arm(SEARCH_SLOW_ROUND, 1.0, 0).unwrap();
+        let svc = PlanService::new(ServiceConfig {
+            defaults: JobDefaults { deadline_ms: 5, ..JobDefaults::default() },
+            ..ServiceConfig::default()
+        });
+        let slow = svc.handle(&req("slow", 21));
+        assert!(slow.error.is_none(), "{:?}", slow.error);
+        assert_eq!(slow.degraded.as_deref(), Some("deadline"));
+        assert!(!slow.fallback, "round 1 completed, so an anytime plan exists");
+        assert!(slow.plan_json.is_some());
+        let again = svc.handle(&req("slow-again", 21));
+        assert!(!again.cached, "deadline-degraded plans must never be cached");
+        assert_eq!(again.degraded.as_deref(), Some("deadline"));
+        assert_eq!(svc.searches_run(), 2);
+    });
+}
+
+/// Admission control: with one worker pinned down by slow rounds and a
+/// pending queue of one, overflow arrivals are shed — answered inline
+/// from cache or the fallback plan, labeled `degraded:"shed"`, never
+/// dropped and never an error.
+#[test]
+fn queue_overflow_sheds_instead_of_blocking() {
+    with_failpoints(|| {
+        failpoints().arm(SEARCH_SLOW_ROUND, 1.0, 0).unwrap();
+        let svc = PlanService::new(ServiceConfig::default());
+        let input: String = (0..6)
+            .map(|i| {
+                format!(
+                    "{{\"id\":\"s{i}\",\"model\":\"mlp\",\"mesh\":\"model=2\",\
+                     \"budget\":40,\"seed\":{i},\"workers\":1}}\n"
+                )
+            })
+            .collect();
+        let out = Mutex::new(Vec::<u8>::new());
+        let summary =
+            serve_jsonl(&svc, std::io::BufReader::new(input.as_bytes()), &out, 1, 1).unwrap();
+        assert_eq!(summary.requests, 6, "shed requests are still answered");
+        assert_eq!(summary.errors, 0);
+        assert!(summary.shed >= 1, "{}", summary.describe());
+        assert!(summary.describe().contains("shed"), "{}", summary.describe());
+        let text = String::from_utf8(out.into_inner().unwrap()).unwrap();
+        assert_eq!(text.lines().count(), 6, "one response line per request");
+        assert!(text.contains("\"degraded\":\"shed\""), "{text}");
+        for line in text.lines() {
+            assert!(automap::util::json::parse(line).is_ok(), "bad response line: {line}");
+        }
+    });
+}
+
+/// No faults armed: the full service path is byte-deterministic for a
+/// fixed (seed, K), for both the serial and the root-parallel executor
+/// — the wire shape carries no degraded/fallback/panic keys at all.
+#[test]
+fn fault_free_serving_is_byte_identical_for_k1_and_k4() {
+    with_failpoints(|| {
+        for workers in [1usize, 4] {
+            let serve = || {
+                let svc = PlanService::new(ServiceConfig::default());
+                let r = svc.handle(&PartitionRequest { workers, ..req("pin", 42) });
+                assert!(r.error.is_none(), "{:?}", r.error);
+                r.to_json_line()
+            };
+            let first = serve();
+            let second = serve();
+            assert_eq!(first, second, "K={workers}: fixed seed must replay identically");
+            for key in ["degraded", "fallback", "worker_panics"] {
+                assert!(
+                    !first.contains(key),
+                    "K={workers}: fault-free wire shape must omit '{key}': {first}"
+                );
+            }
+        }
+    });
+}
+
+/// Injected disk read errors degrade to a cache miss — transient, not
+/// corruption: the index entry survives and the very next probe hits.
+#[test]
+fn disk_read_faults_degrade_to_misses() {
+    with_failpoints(|| {
+        let dir = temp_cache_dir("read-fault");
+        let tier = DiskTier::open_with(&dir, 1 << 20).unwrap();
+        tier.put(7, "{\"plan\":true}").unwrap();
+        // Seed 9 at p=0.5: draw 0 fires, draw 1 passes.
+        failpoints().arm(DISK_READ_ERR, 0.5, 9).unwrap();
+        assert!(tier.get(7).is_none(), "injected read error must look like a miss");
+        assert_eq!(tier.get(7).as_deref(), Some("{\"plan\":true}"), "the entry survives");
+        let stats = tier.stats();
+        assert_eq!(stats.corrupt_records, 0, "injected read errors are not corruption");
+        assert_eq!(stats.entries, 1);
+        assert_eq!(failpoints().fired(DISK_READ_ERR), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+/// A write fault raised mid-compaction degrades to an uncompacted (but
+/// fully valid) log: the triggering put still succeeds, nothing is
+/// lost, and the next put over the threshold compacts normally.
+#[test]
+fn disk_write_fault_mid_compaction_never_loses_the_put() {
+    with_failpoints(|| {
+        let dir = temp_cache_dir("compact-fault");
+        // Build up garbage with compaction disabled (huge threshold):
+        // three superseded revisions of one key.
+        {
+            let tier = DiskTier::open_with(&dir, 1 << 20).unwrap();
+            for i in 0..3 {
+                tier.put(42, &format!("{{\"rev\":{i}}}")).unwrap();
+            }
+        }
+        // Reopen with a tiny threshold so the next put triggers
+        // compaction. Seed 7 at p=0.5: draw 0 (the put's own entry
+        // check) passes, draw 1 (the compaction check) fires.
+        let tier = DiskTier::open_with(&dir, 1).unwrap();
+        failpoints().arm(DISK_WRITE_ERR, 0.5, 7).unwrap();
+        tier.put(42, "{\"rev\":3}").unwrap();
+        assert_eq!(failpoints().fired(DISK_WRITE_ERR), 1, "the compaction draw fired");
+        let stats = tier.stats();
+        assert_eq!(tier.get(42).as_deref(), Some("{\"rev\":3}"), "the put itself landed");
+        assert_eq!(stats.compactions, 0, "the injected fault aborted the rewrite");
+        assert_eq!(stats.generation, 0, "a failed compaction keeps the old generation");
+        // Faults lifted: the next put retries compaction and wins.
+        failpoints().disarm_all();
+        tier.put(42, "{\"rev\":4}").unwrap();
+        let stats = tier.stats();
+        assert_eq!(stats.compactions, 1);
+        assert_eq!(stats.generation, 1);
+        assert_eq!(stats.entries, 1);
+        assert_eq!(tier.get(42).as_deref(), Some("{\"rev\":4}"));
+        // And a fresh open replays the compacted log cleanly.
+        drop(tier);
+        let tier = DiskTier::open_with(&dir, 1 << 20).unwrap();
+        assert_eq!(tier.stats().corrupt_records, 0);
+        assert_eq!(tier.get(42).as_deref(), Some("{\"rev\":4}"));
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+/// `ServiceConfig::failpoints` is the programmatic twin of
+/// `PALLAS_FAILPOINTS`: arming through the config is visible to the
+/// search, and a garbage spec fails construction loudly.
+#[test]
+fn service_config_arms_and_validates_failpoint_specs() {
+    with_failpoints(|| {
+        let svc = PlanService::try_new(ServiceConfig {
+            failpoints: Some(format!("{WORKER_PANIC}=1.0@5")),
+            ..ServiceConfig::default()
+        })
+        .unwrap();
+        let r = svc.handle(&req("cfg", 9));
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.degraded.as_deref(), Some("panic"));
+        let unknown = PlanService::try_new(ServiceConfig {
+            failpoints: Some("no.such.failpoint=0.5".to_string()),
+            ..ServiceConfig::default()
+        });
+        assert!(unknown.is_err(), "unknown failpoint names are rejected");
+        let out_of_range = PlanService::try_new(ServiceConfig {
+            failpoints: Some(format!("{WORKER_PANIC}=2.0")),
+            ..ServiceConfig::default()
+        });
+        assert!(out_of_range.is_err(), "probabilities outside [0,1] are rejected");
+    });
+}

@@ -28,6 +28,7 @@ fn job(workers: usize, seed: u64, budget: usize) -> PlanJob {
         seed,
         workers,
         mcts: MctsConfig::default(),
+        deadline_ms: 0,
     }
 }
 
@@ -75,6 +76,7 @@ fn pipelined_plans_are_byte_identical_across_runs_for_k1_and_k4() {
         seed: 17,
         workers,
         mcts: MctsConfig::default(),
+        deadline_ms: 0,
     };
     for k in [1usize, 4] {
         let j = pipelined(k);
@@ -126,6 +128,7 @@ fn stalled_trees_forfeit_budget_to_the_leader() {
         seed: 7,
         workers: 4,
         mcts: MctsConfig::default(),
+        deadline_ms: 0,
     };
     let r = j.run().unwrap();
     assert_eq!(
@@ -173,6 +176,7 @@ fn entropy_stall_signal_pins_forfeiture_schedule() {
         seed: 13,
         workers: 3,
         mcts: MctsConfig::default(),
+        deadline_ms: 0,
     };
     let r = j.run().unwrap();
     let round_size = budget.div_ceil(automap::service::executor::STEAL_ROUNDS);
