@@ -16,7 +16,12 @@ Drives `automap batch` over the smoke corpus four times:
                               uncompacted logs, never to failures;
   4. slow rounds + deadline — search.slow_round=1.0 with --deadline-ms:
                               every cold search must stop at the gate
-                              and come back `"degraded":"deadline"`.
+                              and come back `"degraded":"deadline"`;
+  5. sync failpoint storm   — corrupt frames, dropped connections, and
+                              torn snapshot publishes over `automap sync`
+                              (DESIGN.md §15): storm rounds must exit 0,
+                              and once the faults lift the two replica
+                              logs must still converge byte-identically.
 
 Usage: python3 python/check_chaos.py <automap-binary> <requests.jsonl>
 Exit codes: 0 ok, 1 failures, 2 usage error.
@@ -149,6 +154,53 @@ def main(argv) -> int:
         if hits == 0:
             failures.append('slow: no response was labeled "degraded":"deadline"')
 
+    # --- 5. Sync failpoint storm: degraded rounds, then convergence. ---
+    sync_storm = (
+        "sync.frame_corrupt=0.5@21,sync.conn_drop=0.3@22,sync.partial_write=0.3@23"
+    )
+    cache_a = os.path.join(tmp, "sync-cache-a")
+    cache_b = os.path.join(tmp, "sync-cache-b")
+    sync_dir = os.path.join(tmp, "sync-mailbox")
+    out = os.path.join(tmp, "sync-seed.jsonl")
+    p = run_batch(binary, corpus, out, flags=("--cache-dir", cache_a))
+    if p.returncode != 0:
+        failures.append(f"sync seed batch exited {p.returncode}:\n{p.stderr}")
+    else:
+        def run_sync(name, cache, failpoints=None):
+            env = dict(os.environ)
+            env.pop("PALLAS_FAILPOINTS", None)
+            if failpoints:
+                env["PALLAS_FAILPOINTS"] = failpoints
+            return subprocess.run(
+                [binary, "sync", "--cache-dir", cache,
+                 "--sync-dir", sync_dir, "--replica", name],
+                env=env, capture_output=True, text=True,
+            )
+
+        # Storm rounds: faults quarantine and retry, they never fail.
+        for name, cache in (("a", cache_a), ("b", cache_b), ("b", cache_b)):
+            p = run_sync(name, cache, failpoints=sync_storm)
+            if p.returncode != 0:
+                failures.append(
+                    f"sync storm on {name} exited {p.returncode}:\n{p.stderr}"
+                )
+        # Faults lifted: one clean round each must converge exactly.
+        for name, cache in (("a", cache_a), ("b", cache_b), ("a", cache_a)):
+            p = run_sync(name, cache)
+            if p.returncode != 0:
+                failures.append(
+                    f"clean sync on {name} exited {p.returncode}:\n{p.stderr}"
+                )
+        log_a = open(os.path.join(cache_a, "plans.plog"), "rb").read()
+        log_b = open(os.path.join(cache_b, "plans.plog"), "rb").read()
+        if len(log_a) <= 32:
+            failures.append("sync storm: replica A's plan log is empty")
+        if log_a != log_b:
+            failures.append(
+                f"sync storm: logs differ after clean rounds "
+                f"({len(log_a)} vs {len(log_b)} bytes)"
+            )
+
     if failures:
         print("check_chaos: FAIL")
         for f in failures:
@@ -156,7 +208,8 @@ def main(argv) -> int:
         return 1
     print(
         f"check_chaos: ok — {len(expected_ids)} requests answered under every "
-        f"storm, fault-free passes byte-identical, degraded responses labeled"
+        f"storm, fault-free passes byte-identical, degraded responses labeled, "
+        f"replica logs converged after the sync storm"
     )
     return 0
 

@@ -1,0 +1,149 @@
+#!/usr/bin/env python3
+"""CI gate for replica anti-entropy over the plan log (DESIGN.md §15).
+
+Two replicas share a sync "mailbox" directory but have separate plan
+logs. The wall pins the headline guarantee: after ONE sync round each,
+replica B serves replica A's entire corpus from disk — zero searches —
+and the two compacted `plans.plog` files are **byte-identical**.
+
+  1. replica A answers the corpus cold (`batch --cache-dir A`),
+     populating its plan log;
+  2. `automap sync` on A canonicalizes the log and publishes a snapshot
+     into the shared sync dir;
+  3. `automap sync` on B (empty log) pulls every plan from A's snapshot;
+  4. A's and B's `plans.plog` must now be byte-identical;
+  5. replica B answers the same corpus (`batch --cache-dir B`, fresh
+     process): zero errors, zero searches, every response cached, one
+     disk hit per unique fingerprint, and every plan document
+     byte-identical to replica A's response.
+
+Usage: python3 python/check_sync.py <automap-binary> <requests.jsonl>
+Exit codes: 0 ok, 1 failures, 2 usage error.
+"""
+
+import json
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+
+def run(cmd, failpoints=None):
+    env = dict(os.environ)
+    env.pop("PALLAS_FAILPOINTS", None)
+    if failpoints:
+        env["PALLAS_FAILPOINTS"] = failpoints
+    return subprocess.run(cmd, env=env, capture_output=True, text=True)
+
+
+def load(path):
+    """id -> (raw line, parsed doc, raw plan substring)."""
+    out = {}
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            doc = json.loads(line)
+            rid = doc.get("id")
+            if rid is None:
+                sys.exit(f"{path}:{ln}: response without an id")
+            idx = line.find(',"plan":')
+            out[rid] = (line, doc, line[idx:] if idx >= 0 else None)
+    return out
+
+
+def main(argv) -> int:
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    binary, corpus = argv
+    tmp = tempfile.mkdtemp(prefix="automap-sync-")
+    cache_a = os.path.join(tmp, "cache-a")
+    cache_b = os.path.join(tmp, "cache-b")
+    sync_dir = os.path.join(tmp, "sync")
+    failures = []
+
+    # --- 1. Replica A answers the corpus cold, populating its log. ---
+    resp_a = os.path.join(tmp, "a.jsonl")
+    p = run([binary, "batch", corpus, "--pool", "1",
+             "--cache-dir", cache_a, "--out", resp_a])
+    if p.returncode != 0:
+        sys.exit(f"replica A batch exited {p.returncode}:\n{p.stderr}")
+
+    # --- 2+3. One sync round each: A publishes, B pulls everything. ---
+    for name, cache in (("a", cache_a), ("b", cache_b)):
+        p = run([binary, "sync", "--cache-dir", cache,
+                 "--sync-dir", sync_dir, "--replica", name])
+        if p.returncode != 0:
+            sys.exit(f"sync on replica {name} exited {p.returncode}:\n{p.stderr}")
+        if "sync:" not in p.stdout:
+            failures.append(f"replica {name}: sync printed no report: {p.stdout!r}")
+
+    # --- 4. The replicated logs must be byte-identical. ---
+    log_a = open(os.path.join(cache_a, "plans.plog"), "rb").read()
+    log_b = open(os.path.join(cache_b, "plans.plog"), "rb").read()
+    if len(log_a) <= 32:
+        failures.append("replica A's plan log is empty after the batch pass")
+    if log_a != log_b:
+        failures.append(
+            f"plan logs differ after one sync round each "
+            f"({len(log_a)} vs {len(log_b)} bytes)"
+        )
+
+    # --- 5. Replica B serves the whole corpus from disk: no searches. ---
+    resp_b = os.path.join(tmp, "b.jsonl")
+    p = run([binary, "batch", corpus, "--pool", "1",
+             "--cache-dir", cache_b, "--out", resp_b])
+    if p.returncode != 0:
+        sys.exit(f"replica B batch exited {p.returncode}:\n{p.stderr}")
+    m = re.search(r"(\d+) searches", p.stdout)
+    if not m:
+        failures.append(f"replica B batch printed no summary: {p.stdout!r}")
+    elif m.group(1) != "0":
+        failures.append(f"replica B ran {m.group(1)} searches; expected 0")
+
+    a, b = load(resp_a), load(resp_b)
+    if set(a) != set(b):
+        sys.exit(f"request ids differ between replicas: {set(a) ^ set(b)}")
+    disk_hits = 0
+    for rid, (_, doc, plan_b) in sorted(b.items()):
+        if doc.get("error"):
+            failures.append(f"{rid}: replica B errored: {doc['error']}")
+            continue
+        if doc.get("cached") is not True:
+            failures.append(f"{rid}: replica B ran a search (cached != true)")
+        if doc.get("degraded"):
+            failures.append(f"{rid}: replica B degraded a synced plan")
+        if doc.get("disk") is True:
+            disk_hits += 1
+        plan_a = a[rid][2]
+        if plan_a is None:
+            failures.append(f"{rid}: replica A carried no plan")
+        elif plan_a != plan_b:
+            failures.append(f"{rid}: plan differs between replicas")
+
+    unique_fps = len({d.get("fingerprint") for _, d, _ in b.values()})
+    if disk_hits != unique_fps:
+        failures.append(
+            f"expected one disk hit per unique fingerprint "
+            f"({unique_fps}), got {disk_hits}"
+        )
+
+    if failures:
+        print("check_sync: FAIL")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(
+        f"check_sync: ok — {len(b)} responses served by replica B with zero "
+        f"searches after one sync round, logs byte-identical "
+        f"({len(log_a)} bytes), {disk_hits} disk hits over "
+        f"{unique_fps} unique fingerprints"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

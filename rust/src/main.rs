@@ -18,7 +18,11 @@
 //!   decode       decode a .pbp file back to textual IR / plan JSON,
 //!                optionally re-encoding to check byte-exactness (--check)
 //!   explain      render a plan JSON (or a batch responses.jsonl) as a
-//!                human-readable partitioning narrative
+//!                human-readable partitioning narrative (degradation
+//!                annotations included)
+//!   sync         run one replica anti-entropy round: publish this
+//!                replica's plan-log snapshot into --sync-dir and pull
+//!                missing plans from peer snapshots (DESIGN.md §15)
 //!   fig6 / fig7 / fig8 / fig9   regenerate the paper's figures
 //!   all-figures  run every figure harness
 //!
@@ -48,7 +52,7 @@ const VALUE_FLAGS: &[&str] = &[
     "layers", "budgets", "attempts", "seed", "out", "out-dir", "count", "axis", "model",
     "budget", "filter", "ranker", "config", "d-model", "mesh", "pin", "shard", "pool",
     "cache-mb", "cache-dir", "program", "pipeline", "trace", "metrics-out", "deadline-ms",
-    "max-pending",
+    "max-pending", "sync-dir", "sync-interval", "replica",
 ];
 const BOOL_FLAGS: &[&str] = &["paper", "grouping", "no-tying", "help", "stdin-jsonl", "check"];
 
@@ -81,6 +85,7 @@ fn main() {
         "encode" => cmd_encode(&args),
         "decode" => cmd_decode(&args),
         "explain" => cmd_explain(&args),
+        "sync" => cmd_sync(&args),
         "fig6" | "fig7" => figure_cmd(&args, |s, d| figures::fig6_fig7(s, d).map(|_| ())),
         "fig8" => figure_cmd(&args, |s, d| figures::fig8(s, d).map(|_| ())),
         "fig9" => figure_cmd(&args, |s, d| figures::fig9(s, d).map(|_| ())),
@@ -105,7 +110,7 @@ fn usage() {
     println!(
         "automap — reproduction of 'Automap: Towards Ergonomic Automated Parallelism'\n\
          usage: automap <stats|gen-dataset|partition|parse|print|serve|batch|encode|decode|\n\
-                         explain|fig6|fig7|fig8|fig9|all-figures> [flags]\n\
+                         explain|sync|fig6|fig7|fig8|fig9|all-figures> [flags]\n\
          flags: --layers N --budgets a,b,c --attempts N --seed S --paper\n\
                 --model mlp|transformer|graphnet --budget N --filter none|heuristic|learned\n\
                 --mesh model=4[,batch=2] --ranker artifacts/ranker.hlo.txt\n\
@@ -135,7 +140,14 @@ fn usage() {
                                     with a cached-or-fallback response (degraded:\"shed\")\n\
                 PALLAS_FAILPOINTS=name=prob[@seed],...   deterministic fault injection\n\
                                     (worker.panic, disk.read_err, disk.write_err,\n\
-                                    search.slow_round)\n\
+                                    search.slow_round, sync.frame_corrupt, sync.conn_drop,\n\
+                                    sync.partial_write)\n\
+         replica sync (DESIGN.md §15):\n\
+                sync --cache-dir .plan-cache --sync-dir /shared/sync [--replica NAME]\n\
+                                    one anti-entropy round: canonicalize + publish the\n\
+                                    local plan log, pull missing plans from peer snapshots\n\
+                serve ... --sync-dir DIR [--sync-interval SECS] [--replica NAME]\n\
+                                    background sync ticker while serving (0 = off)\n\
          binary interchange — pallas-bin (DESIGN.md §13):\n\
                 encode file.pir|plan.json [--out f.pbp]     program text or plan JSON -> binary\n\
                 encode --model mlp [--layers N] [--out f.pbp]\n\
@@ -144,7 +156,8 @@ fn usage() {
          observability (DESIGN.md §12):\n\
                 partition ... --trace trace.json   record a Perfetto-loadable trace\n\
                 explain plan.json|responses.jsonl  narrate a plan: mesh, cost, shardings,\n\
-                                                   and the tactic timeline"
+                                                   the tactic timeline, and any degradation\n\
+                                                   annotations (degraded/fallback/panics)"
     );
 }
 
@@ -369,6 +382,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         },
         cache_bytes: args.get_usize("cache-mb", 64)? << 20,
         persist_path: args.get("cache-dir").map(std::path::PathBuf::from),
+        sync_dir: args.get("sync-dir").map(std::path::PathBuf::from),
+        sync_interval_secs: args.get_u64("sync-interval", 0)?,
+        replica: args.get("replica").map(str::to_string),
         ..ServiceConfig::default()
     })?;
     let stdout = std::sync::Mutex::new(std::io::stdout());
@@ -582,11 +598,57 @@ fn cmd_explain(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Explain one JSON document: either a bare `PartitionPlan` or a plan
-/// service response wrapping one under a `plan` key.
+/// service response wrapping one under a `plan` key. Response wrappers
+/// carrying degradation annotations (DESIGN.md §14) get them rendered
+/// above the plan narrative so a degraded plan is never mistaken for a
+/// full-quality one.
 fn explain_doc(doc: &automap::util::json::Json) -> anyhow::Result<String> {
     let plan_json = doc.get("plan").unwrap_or(doc);
     let plan = automap::session::PartitionPlan::from_json(plan_json)?;
-    Ok(automap::obs::explain_plan(&plan))
+    let mut out = String::new();
+    if let Some(notes) = automap::obs::explain_degradation(doc) {
+        out.push_str(&notes);
+    }
+    out.push_str(&automap::obs::explain_plan(&plan));
+    Ok(out)
+}
+
+/// `sync --cache-dir DIR --sync-dir DIR [--replica NAME]` — run ONE
+/// anti-entropy round (DESIGN.md §15): canonicalize + publish the local
+/// plan log as a snapshot in the shared sync dir, then pull every plan
+/// a peer snapshot has that the local log lacks.
+fn cmd_sync(args: &Args) -> anyhow::Result<()> {
+    automap::util::failpoints::arm_from_env()?;
+    let cache_dir = args
+        .get("cache-dir")
+        .ok_or_else(|| anyhow::anyhow!("sync needs --cache-dir (the plan log to replicate)"))?;
+    let sync_dir = args
+        .get("sync-dir")
+        .ok_or_else(|| anyhow::anyhow!("sync needs --sync-dir (the shared mailbox dir)"))?;
+    let replica = match args.get("replica") {
+        Some(r) => r.to_string(),
+        None => format!("replica-{}", std::process::id()),
+    };
+    let tier = automap::service::DiskTier::open(std::path::Path::new(cache_dir))?;
+    let transport = automap::service::MailboxTransport::new(std::path::Path::new(sync_dir))?;
+    let report = automap::service::sync_once(&replica, &tier, &transport)?;
+    let stats = tier.stats();
+    println!(
+        "sync: replica {replica} saw {} peer(s): {} records pulled, {} conflicts, \
+         {} frames quarantined, {} retries, {} skipped ({} version-skewed); \
+         log now {} plans in {} bytes",
+        report.peers,
+        report.records_pulled,
+        report.conflicts,
+        report.frames_quarantined,
+        report.retries,
+        report.peers_skipped,
+        report.peer_skew,
+        stats.entries,
+        stats.file_bytes,
+    );
+    write_metrics(args)?;
+    Ok(())
 }
 
 fn figure_cmd(

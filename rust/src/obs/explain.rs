@@ -3,7 +3,48 @@
 //! trace-of-tactics abstraction — see PAPER.md and DESIGN.md §12).
 
 use crate::session::plan::PartitionPlan;
+use crate::util::json::Json;
 use crate::util::stats::{fmt_bytes, fmt_secs};
+
+/// Render the degradation annotations a plan-service response wrapper
+/// may carry (DESIGN.md §14) — the `degraded` marker, the `fallback`
+/// flag, and worker-panic counts from the search stats — as a block of
+/// `!` lines to print above the plan narrative. `None` when the
+/// response is a full-quality plan (so healthy output is unchanged).
+pub fn explain_degradation(doc: &Json) -> Option<String> {
+    let mut out = String::new();
+    if let Some(kind) = doc.get("degraded").and_then(Json::as_str) {
+        out.push_str(&match kind {
+            "deadline" => "! degraded: deadline hit — best-so-far anytime plan, not cached\n"
+                .to_string(),
+            "panic" => "! degraded: all search workers panicked — salvaged plan, not cached\n"
+                .to_string(),
+            "shed" => "! degraded: shed at admission — answered without a fresh search\n"
+                .to_string(),
+            other => format!("! degraded: {other}\n"),
+        });
+    }
+    if doc.get("fallback").and_then(Json::as_bool).unwrap_or(false) {
+        out.push_str("! fallback: zero-search plan (pre-tactics + InferRest only)\n");
+    }
+    let panics = doc
+        .get("search")
+        .and_then(|s| s.get("worker_panics"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    if panics > 0.0 {
+        out.push_str(&format!(
+            "! {} search worker{} panicked; surviving workers produced this plan\n",
+            panics as u64,
+            if panics as u64 == 1 { "" } else { "s" },
+        ));
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
 
 /// Render a plan (typically loaded back from the cache or a `partition`
 /// JSON dump) into an indented decision timeline with a cost summary.
@@ -72,6 +113,22 @@ mod tests {
     use super::*;
     use crate::cost::composite::Evaluation;
     use crate::session::plan::ShardSpec;
+
+    #[test]
+    fn explain_degradation_renders_response_annotations() {
+        let healthy = crate::util::json::parse(r#"{"id":"a","cached":true}"#).unwrap();
+        assert_eq!(explain_degradation(&healthy), None, "healthy responses add nothing");
+        let degraded = crate::util::json::parse(
+            r#"{"id":"b","degraded":"deadline","fallback":true,"search":{"worker_panics":2}}"#,
+        )
+        .unwrap();
+        let text = explain_degradation(&degraded).unwrap();
+        assert!(text.contains("deadline hit"));
+        assert!(text.contains("fallback"));
+        assert!(text.contains("2 search workers panicked"));
+        let shed = crate::util::json::parse(r#"{"degraded":"shed"}"#).unwrap();
+        assert!(explain_degradation(&shed).unwrap().contains("shed at admission"));
+    }
 
     #[test]
     fn explain_groups_trace_by_phase() {

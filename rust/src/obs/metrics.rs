@@ -280,6 +280,14 @@ pub mod names {
     pub const SERVICE_SHED: &str = "service.shed";
     pub const SERVICE_FALLBACK_PLANS: &str = "service.fallback_plans";
     pub const SEARCH_WORKER_PANICS: &str = "search.worker_panics";
+    pub const PERSIST_QUARANTINE_PRUNED: &str = "persist.quarantine_pruned";
+    pub const SYNC_ROUNDS: &str = "sync.rounds";
+    pub const SYNC_RECORDS_PULLED: &str = "sync.records_pulled";
+    pub const SYNC_FRAMES_QUARANTINED: &str = "sync.frames_quarantined";
+    pub const SYNC_CONFLICTS: &str = "sync.conflicts";
+    pub const SYNC_PEER_SKEW: &str = "sync.peer_skew";
+    pub const SYNC_RETRIES: &str = "sync.retries";
+    pub const SYNC_PEERS_SKIPPED: &str = "sync.peers_skipped";
     pub const SERVICE_INFLIGHT_SEARCHES: &str = "service.inflight_searches";
     pub const SERVICE_QUEUE_DEPTH: &str = "service.queue_depth";
     pub const SERVICE_REQUEST_LATENCY_NS: &str = "service.request_latency_ns";
@@ -311,6 +319,14 @@ pub mod names {
         SERVICE_SHED,
         SERVICE_FALLBACK_PLANS,
         SEARCH_WORKER_PANICS,
+        PERSIST_QUARANTINE_PRUNED,
+        SYNC_ROUNDS,
+        SYNC_RECORDS_PULLED,
+        SYNC_FRAMES_QUARANTINED,
+        SYNC_CONFLICTS,
+        SYNC_PEER_SKEW,
+        SYNC_RETRIES,
+        SYNC_PEERS_SKIPPED,
     ];
     pub const ALL_GAUGES: &[&str] = &[SERVICE_INFLIGHT_SEARCHES, SERVICE_QUEUE_DEPTH];
     pub const ALL_HISTOGRAMS: &[&str] = &[SERVICE_REQUEST_LATENCY_NS, SEARCH_RUN_NS];

@@ -10,7 +10,7 @@ pub mod metrics;
 pub mod recorder;
 pub mod telemetry;
 
-pub use explain::explain_plan;
+pub use explain::{explain_degradation, explain_plan};
 pub use metrics::{metrics, register_service_metrics, Counter, Gauge, Histogram, HistogramSnapshot};
 pub use recorder::{recorder, EventKind, Recorder, SpanGuard};
 pub use telemetry::{telemetry, RequestTelemetry, RoundSample, TelemetryHub};

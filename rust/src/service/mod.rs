@@ -22,7 +22,10 @@
 //!   dedup of identical concurrent searches, and a bounded work queue
 //!   over a thread pool (`automap serve --stdin-jsonl`, `automap batch`);
 //! * [`throughput`] — the episodes/sec + cache-latency measurement
-//!   behind `BENCH_search.json`.
+//!   behind `BENCH_search.json`;
+//! * [`sync`] — replica anti-entropy over the persistent tier: Merkle
+//!   digest diffing, CRC-framed delta pulls, and canonical compaction
+//!   so converged replicas hold byte-identical logs (DESIGN.md §15).
 
 pub mod cache;
 pub mod executor;
@@ -30,6 +33,7 @@ pub mod fingerprint;
 pub mod persist;
 pub mod request;
 pub mod server;
+pub mod sync;
 pub mod throughput;
 
 pub use cache::{CacheStats, PlanCache};
@@ -38,4 +42,5 @@ pub use fingerprint::{func_fingerprint, request_fingerprint, Fingerprint};
 pub use persist::{DiskTier, DiskTierStats};
 pub use request::{JobDefaults, PartitionRequest, PlanResponse, SearchStats};
 pub use server::{run_batch, serve_jsonl, PlanService, ServeSummary, ServiceConfig};
+pub use sync::{sync_once, InProcessTransport, MailboxTransport, SyncReport, SyncTransport};
 pub use throughput::{measure, ThroughputConfig, ThroughputReport};

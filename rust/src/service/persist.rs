@@ -30,6 +30,19 @@
 //! When the superseded fraction crosses one half (and the log is past a
 //! minimum size), the tier compacts: live entries are rewritten to a
 //! fresh log with the generation bumped, fsynced, and renamed into place.
+//!
+//! Logs past a size threshold are read through a memory map instead of
+//! being slurped into the heap (open-time scans and record probes both),
+//! with a buffered-read fallback on platforms without `mmap` and for
+//! records appended after the map was established. Results are identical
+//! either way — pinned by test.
+//!
+//! The replica sync layer (DESIGN.md §15) additionally needs: a live
+//! `(fingerprint, crc)` listing for digest trees ([`DiskTier::live_index`]),
+//! raw payload export ([`DiskTier::export_records`]), and a *canonical*
+//! compaction ([`DiskTier::compact_canonical`]) whose generation is a
+//! pure function of the live record set — so two replicas holding the
+//! same plans compact to byte-identical logs.
 
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
@@ -40,6 +53,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::obs::metrics::{metrics, names, Counter};
 use crate::util::failpoints::{failpoints, DISK_READ_ERR, DISK_WRITE_ERR};
+use crate::util::hash::Fnv64;
 use anyhow::{bail, Context, Result};
 
 /// Log file magic.
@@ -49,9 +63,99 @@ pub const LOG_VERSION: u16 = 1;
 /// Fixed log header size.
 pub const LOG_HEADER_LEN: u64 = 32;
 /// Per-record framing overhead (length + CRC).
-const RECORD_OVERHEAD: u64 = 8;
+pub(crate) const RECORD_OVERHEAD: u64 = 8;
 /// Default minimum log size before compaction is considered.
 const DEFAULT_COMPACT_MIN_BYTES: u64 = 1 << 20;
+/// Default log size above which reads go through a memory map instead
+/// of loading the whole file (or per-record buffered reads).
+const DEFAULT_MMAP_THRESHOLD: u64 = 4 << 20;
+/// How many quarantined files (`*.corrupt-*`) survive pruning.
+pub const MAX_QUARANTINES: usize = 4;
+
+/// Minimal read-only memory map over a file, with a raw-FFI `mmap` on
+/// unix (libc is already linked through std; no new crate) and a
+/// never-maps stub elsewhere so every caller keeps the buffered-read
+/// fallback path.
+#[cfg(unix)]
+mod mapped {
+    use std::ffi::c_void;
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    pub struct Mmap {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // The mapping is read-only and owned exclusively by the tier's
+    // mutex-guarded state; moving it across threads is safe.
+    unsafe impl Send for Mmap {}
+
+    impl Mmap {
+        /// Map the first `len` bytes of `file` read-only; `None` on an
+        /// empty file or any mapping failure (callers fall back to
+        /// buffered reads).
+        pub fn map(file: &File, len: u64) -> Option<Mmap> {
+            if len == 0 || len > usize::MAX as u64 {
+                return None;
+            }
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len as usize, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            if ptr as isize == -1 || ptr.is_null() {
+                None
+            } else {
+                Some(Mmap { ptr, len: len as usize })
+            }
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod mapped {
+    use std::fs::File;
+
+    pub struct Mmap {}
+
+    impl Mmap {
+        pub fn map(_file: &File, _len: u64) -> Option<Mmap> {
+            None
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            &[]
+        }
+    }
+}
+
+use mapped::Mmap;
 
 /// CRC-32 (IEEE 802.3, the zlib/PNG polynomial), table-driven.
 pub fn crc32(bytes: &[u8]) -> u32 {
@@ -74,11 +178,13 @@ pub fn crc32(bytes: &[u8]) -> u32 {
     c ^ 0xffff_ffff
 }
 
-/// Location of a live record's payload within the log.
+/// Location of a live record's payload within the log, plus its CRC so
+/// digest trees and sync diffs never have to touch the file.
 #[derive(Clone, Copy)]
 struct IndexEntry {
     offset: u64,
     len: u32,
+    crc: u32,
 }
 
 struct State {
@@ -89,6 +195,30 @@ struct State {
     generation: u64,
     /// Bytes occupied by live records, framing included.
     live_bytes: u64,
+    /// Read-only map over the log's first `map.len()` bytes, present
+    /// when the log crossed the mmap threshold at open/compaction time.
+    /// Records appended later sit beyond the map and fall back to
+    /// buffered reads; the map is rebuilt by the next compaction.
+    map: Option<Mmap>,
+}
+
+impl State {
+    /// Read one record payload, through the map when it covers the
+    /// record and via seek+read otherwise. Identical bytes either way.
+    fn read_payload(&mut self, e: IndexEntry) -> Option<Vec<u8>> {
+        if let Some(m) = &self.map {
+            let start = e.offset as usize;
+            let end = start.checked_add(e.len as usize)?;
+            let bytes = m.as_slice();
+            if end <= bytes.len() {
+                return Some(bytes[start..end].to_vec());
+            }
+        }
+        let mut payload = vec![0u8; e.len as usize];
+        self.file.seek(SeekFrom::Start(e.offset)).ok()?;
+        self.file.read_exact(&mut payload).ok()?;
+        Some(payload)
+    }
 }
 
 /// Point-in-time counters and sizes for one tier instance.
@@ -105,6 +235,8 @@ pub struct DiskTierStats {
     pub compactions: u64,
     /// Irrecoverably corrupt logs moved aside on open (DESIGN.md §14).
     pub quarantined: u64,
+    /// Old quarantine files deleted to cap quarantine growth.
+    pub quarantine_pruned: u64,
 }
 
 /// Handles into the process-global metrics registry, resolved once.
@@ -115,6 +247,7 @@ struct TierMetrics {
     corrupt: Arc<Counter>,
     compactions: Arc<Counter>,
     quarantined: Arc<Counter>,
+    quarantine_pruned: Arc<Counter>,
 }
 
 impl TierMetrics {
@@ -127,6 +260,7 @@ impl TierMetrics {
             corrupt: m.counter(names::PERSIST_CORRUPT_RECORDS),
             compactions: m.counter(names::PERSIST_COMPACTIONS),
             quarantined: m.counter(names::PERSIST_QUARANTINED),
+            quarantine_pruned: m.counter(names::PERSIST_QUARANTINE_PRUNED),
         }
     }
 }
@@ -137,12 +271,14 @@ pub struct DiskTier {
     log_path: PathBuf,
     state: Mutex<State>,
     compact_min_bytes: u64,
+    mmap_threshold: u64,
     hits: AtomicU64,
     misses: AtomicU64,
     appends: AtomicU64,
     corrupt_records: AtomicU64,
     compactions: AtomicU64,
     quarantined: AtomicU64,
+    quarantine_pruned: AtomicU64,
     mx: TierMetrics,
 }
 
@@ -164,6 +300,17 @@ impl DiskTier {
     /// Open with an explicit minimum log size (bytes) before compaction
     /// is considered — tests use a tiny threshold to force it.
     pub fn open_with(dir: &Path, compact_min_bytes: u64) -> Result<DiskTier> {
+        Self::open_with_opts(dir, compact_min_bytes, DEFAULT_MMAP_THRESHOLD)
+    }
+
+    /// Open with explicit compaction and mmap thresholds. Logs at or
+    /// above `mmap_threshold` bytes are scanned and probed through a
+    /// memory map instead of being slurped; results are identical.
+    pub fn open_with_opts(
+        dir: &Path,
+        compact_min_bytes: u64,
+        mmap_threshold: u64,
+    ) -> Result<DiskTier> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating cache dir {}", dir.display()))?;
         let log_path = dir.join("plans.plog");
@@ -174,99 +321,98 @@ impl DiskTier {
             .truncate(false)
             .open(&log_path)
             .with_context(|| format!("opening cache log {}", log_path.display()))?;
-        let mut buf = Vec::new();
-        file.read_to_end(&mut buf).context("reading cache log")?;
+        let file_len = file.metadata().context("statting cache log")?.len();
+
+        // Pick the scan source: a map for big logs, a slurp otherwise.
+        let mut map = if file_len >= mmap_threshold { Mmap::map(&file, file_len) } else { None };
+        let mut slurped = Vec::new();
+        let scan = match &map {
+            Some(m) => ScanOutcome::scan(m.as_slice()),
+            None => {
+                file.read_to_end(&mut slurped).context("reading cache log")?;
+                ScanOutcome::scan(&slurped)
+            }
+        };
 
         let mut corrupt = 0u64;
         let mut quarantined = 0u64;
+        let mut pruned = 0u64;
         let generation;
         let mut index = HashMap::new();
         let tail;
-        if buf.is_empty() {
-            generation = 0;
-            file.write_all(&log_header(0)).context("writing cache log header")?;
-            file.flush()?;
-            tail = LOG_HEADER_LEN;
-        } else if buf.len() < LOG_HEADER_LEN as usize
-            || buf[..4] != LOG_MAGIC
-            || u16::from_le_bytes([buf[4], buf[5]]) != LOG_VERSION
-        {
-            // Unusable header (foreign file, version skew, torn create):
-            // QUARANTINE the file — move it aside under a name that
-            // records its claimed generation — and start a fresh log,
-            // rather than destroying the bytes (an operator or a newer
-            // build may still be able to read them) or refusing to
-            // serve (the service must come up; DESIGN.md §14).
-            drop(file);
-            let qpath = quarantine_path(&log_path, &buf);
-            std::fs::rename(&log_path, &qpath).with_context(|| {
-                format!("quarantining corrupt cache log to {}", qpath.display())
-            })?;
-            quarantined += 1;
-            file = OpenOptions::new()
-                .read(true)
-                .write(true)
-                .create(true)
-                .truncate(false)
-                .open(&log_path)
-                .with_context(|| format!("recreating cache log {}", log_path.display()))?;
-            generation = 0;
-            file.write_all(&log_header(0)).context("writing cache log header")?;
-            file.flush()?;
-            tail = LOG_HEADER_LEN;
-        } else {
-            let mut g8 = [0u8; 8];
-            g8.copy_from_slice(&buf[8..16]);
-            generation = u64::from_le_bytes(g8);
-            // Scan records; truncate at the first corrupt one.
-            let mut pos = LOG_HEADER_LEN as usize;
-            loop {
-                if pos == buf.len() {
-                    break;
-                }
-                if buf.len() - pos < RECORD_OVERHEAD as usize {
-                    corrupt += 1;
-                    break;
-                }
-                let len = read_u32_at(&buf, pos) as usize;
-                let crc = read_u32_at(&buf, pos + 4);
-                let start = pos + RECORD_OVERHEAD as usize;
-                if len < 8 || buf.len() - start < len {
-                    corrupt += 1;
-                    break;
-                }
-                let payload = &buf[start..start + len];
-                if crc32(payload) != crc {
-                    corrupt += 1;
-                    break;
-                }
-                let mut fp8 = [0u8; 8];
-                fp8.copy_from_slice(&payload[..8]);
-                let fp = u64::from_le_bytes(fp8);
-                index.insert(fp, IndexEntry { offset: start as u64, len: len as u32 });
-                pos = start + len;
+        match scan {
+            ScanOutcome::Empty => {
+                map = None;
+                generation = 0;
+                file.write_all(&log_header(0)).context("writing cache log header")?;
+                file.flush()?;
+                tail = LOG_HEADER_LEN;
             }
-            if pos < buf.len() {
-                file.set_len(pos as u64)?;
+            ScanOutcome::BadHeader { header } => {
+                // Unusable header (foreign file, version skew, torn
+                // create): QUARANTINE the file — move it aside under a
+                // name that records its claimed generation — and start a
+                // fresh log, rather than destroying the bytes (an
+                // operator or a newer build may still be able to read
+                // them) or refusing to serve (the service must come up;
+                // DESIGN.md §14).
+                map = None;
+                drop(file);
+                let qpath = quarantine_path(&log_path, &header);
+                std::fs::rename(&log_path, &qpath).with_context(|| {
+                    format!("quarantining corrupt cache log to {}", qpath.display())
+                })?;
+                quarantined += 1;
+                // Cap quarantine growth: repeated corruption must never
+                // fill the disk, so only the newest few stay around.
+                pruned += prune_quarantines(dir, "plans.plog", MAX_QUARANTINES);
+                file = OpenOptions::new()
+                    .read(true)
+                    .write(true)
+                    .create(true)
+                    .truncate(false)
+                    .open(&log_path)
+                    .with_context(|| format!("recreating cache log {}", log_path.display()))?;
+                generation = 0;
+                file.write_all(&log_header(0)).context("writing cache log header")?;
+                file.flush()?;
+                tail = LOG_HEADER_LEN;
             }
-            file.seek(SeekFrom::Start(pos as u64))?;
-            tail = pos as u64;
+            ScanOutcome::Records { generation: g, index: idx, tail: t, corrupt: c } => {
+                generation = g;
+                index = idx;
+                corrupt = c;
+                if t < file_len {
+                    // Torn tail: truncating shrinks the file under any
+                    // live map, so drop it and remap the valid prefix.
+                    map = None;
+                    file.set_len(t)?;
+                    if t >= mmap_threshold {
+                        map = Mmap::map(&file, t);
+                    }
+                }
+                file.seek(SeekFrom::Start(t))?;
+                tail = t;
+            }
         }
         let live_bytes: u64 = index.values().map(|e| RECORD_OVERHEAD + e.len as u64).sum();
         let tier = DiskTier {
             log_path,
-            state: Mutex::new(State { file, index, tail, generation, live_bytes }),
+            state: Mutex::new(State { file, index, tail, generation, live_bytes, map }),
             compact_min_bytes,
+            mmap_threshold,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             appends: AtomicU64::new(0),
             corrupt_records: AtomicU64::new(corrupt),
             compactions: AtomicU64::new(0),
             quarantined: AtomicU64::new(quarantined),
+            quarantine_pruned: AtomicU64::new(pruned),
             mx: TierMetrics::new(),
         };
         tier.mx.corrupt.add(corrupt);
         tier.mx.quarantined.add(quarantined);
+        tier.mx.quarantine_pruned.add(pruned);
         Ok(tier)
     }
 
@@ -295,7 +441,7 @@ impl DiskTier {
             self.mx.misses.add(1);
             return None;
         }
-        match read_payload(&mut st.file, entry) {
+        match st.read_payload(entry) {
             Some(payload) if payload.len() >= 8 && payload[..8] == fp.to_le_bytes() => {
                 match String::from_utf8(payload[8..].to_vec()) {
                     Ok(plan) => {
@@ -331,15 +477,16 @@ impl DiskTier {
         let mut payload = Vec::with_capacity(8 + plan_json.len());
         payload.extend_from_slice(&fp.to_le_bytes());
         payload.extend_from_slice(plan_json.as_bytes());
+        let crc = crc32(&payload);
         let mut rec = Vec::with_capacity(RECORD_OVERHEAD as usize + payload.len());
         rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-        rec.extend_from_slice(&crc32(&payload).to_le_bytes());
+        rec.extend_from_slice(&crc.to_le_bytes());
         rec.extend_from_slice(&payload);
         let tail = st.tail;
         st.file.seek(SeekFrom::Start(tail)).context("seeking cache log tail")?;
         st.file.write_all(&rec).context("appending cache log record")?;
         st.file.flush().context("flushing cache log")?;
-        let entry = IndexEntry { offset: tail + RECORD_OVERHEAD, len: payload.len() as u32 };
+        let entry = IndexEntry { offset: tail + RECORD_OVERHEAD, len: payload.len() as u32, crc };
         if let Some(old) = st.index.insert(fp, entry) {
             st.live_bytes -= RECORD_OVERHEAD + old.len as u64;
         }
@@ -363,6 +510,14 @@ impl DiskTier {
     /// Crash-safe: the new log is fully written and fsynced under a temp
     /// name before the rename; a crash leaves the old log intact.
     fn compact(&self, st: &mut State) -> Result<()> {
+        let generation = st.generation + 1;
+        self.rewrite(st, generation)
+    }
+
+    /// Rewrite the log (live entries, fingerprint order, `generation` in
+    /// the header) via tmp+fsync+rename. Shared by threshold compaction
+    /// and the sync layer's canonical compaction.
+    fn rewrite(&self, st: &mut State, generation: u64) -> Result<()> {
         // Injected compaction-write error, raised before the tmp file
         // exists: the live log is untouched and stays generation N.
         if failpoints().should_fail(DISK_WRITE_ERR) {
@@ -373,11 +528,11 @@ impl DiskTier {
         fps.sort_unstable();
         for fp in fps {
             let e = st.index[&fp];
-            let payload = read_payload(&mut st.file, e)
+            let payload = st
+                .read_payload(e)
                 .with_context(|| format!("reading record {fp:016x} during compaction"))?;
             entries.push((fp, payload));
         }
-        let generation = st.generation + 1;
         let tmp_path = self.log_path.with_extension("plog.tmp");
         let mut tmp = File::create(&tmp_path)
             .with_context(|| format!("creating {}", tmp_path.display()))?;
@@ -385,12 +540,13 @@ impl DiskTier {
         let mut tail = LOG_HEADER_LEN;
         let mut index = HashMap::with_capacity(entries.len());
         for (fp, payload) in &entries {
+            let crc = crc32(payload);
             tmp.write_all(&(payload.len() as u32).to_le_bytes())?;
-            tmp.write_all(&crc32(payload).to_le_bytes())?;
+            tmp.write_all(&crc.to_le_bytes())?;
             tmp.write_all(payload)?;
             index.insert(
                 *fp,
-                IndexEntry { offset: tail + RECORD_OVERHEAD, len: payload.len() as u32 },
+                IndexEntry { offset: tail + RECORD_OVERHEAD, len: payload.len() as u32, crc },
             );
             tail += RECORD_OVERHEAD + payload.len() as u64;
         }
@@ -402,10 +558,78 @@ impl DiskTier {
             .write(true)
             .open(&self.log_path)
             .context("reopening compacted cache log")?;
-        *st = State { file, index, tail, generation, live_bytes: tail - LOG_HEADER_LEN };
+        let map = if tail >= self.mmap_threshold { Mmap::map(&file, tail) } else { None };
+        *st = State { file, index, tail, generation, live_bytes: tail - LOG_HEADER_LEN, map };
         self.compactions.fetch_add(1, Ordering::Relaxed);
         self.mx.compactions.add(1);
         Ok(())
+    }
+
+    /// Live `(fingerprint, payload CRC)` pairs in fingerprint order,
+    /// straight off the in-memory index — the raw material for the sync
+    /// layer's digest tree (DESIGN.md §15). No file I/O.
+    pub fn live_index(&self) -> Vec<(u64, u32)> {
+        let st = self.state.lock().expect("disk tier poisoned");
+        let mut out: Vec<(u64, u32)> = st.index.iter().map(|(fp, e)| (*fp, e.crc)).collect();
+        out.sort_unstable_by_key(|&(fp, _)| fp);
+        out
+    }
+
+    /// Raw payloads (fingerprint prefix + plan JSON) for the requested
+    /// fingerprints, in request order, skipping unknown or unreadable
+    /// records. Bypasses hit/miss accounting: this is the sync export
+    /// path, not a serving probe.
+    pub fn export_records(&self, fps: &[u64]) -> Vec<(u64, Vec<u8>)> {
+        let mut st = self.state.lock().expect("disk tier poisoned");
+        let mut out = Vec::with_capacity(fps.len());
+        for &fp in fps {
+            let Some(e) = st.index.get(&fp).copied() else { continue };
+            let Some(payload) = st.read_payload(e) else { continue };
+            if crc32(&payload) == e.crc && payload.len() >= 8 && payload[..8] == fp.to_le_bytes() {
+                out.push((fp, payload));
+            }
+        }
+        out
+    }
+
+    /// Digest of the live record set: a pure function of the sorted
+    /// `(fingerprint, crc, len)` triples (plus the count), independent of
+    /// append order, supersession history, and generation counters. Two
+    /// tiers holding the same plans have equal digests.
+    pub fn content_digest(&self) -> u64 {
+        let st = self.state.lock().expect("disk tier poisoned");
+        Self::digest_of(&st.index)
+    }
+
+    fn digest_of(index: &HashMap<u64, IndexEntry>) -> u64 {
+        let mut fps: Vec<u64> = index.keys().copied().collect();
+        fps.sort_unstable();
+        let mut h = Fnv64::new();
+        h.str("automap-plog-content-v1");
+        h.u64(fps.len() as u64);
+        for fp in fps {
+            let e = index[&fp];
+            h.u64(fp).u64(e.crc as u64).u64(e.len as u64);
+        }
+        h.finish()
+    }
+
+    /// Canonical compaction for the sync layer: rewrite the log with the
+    /// generation set to the content digest, so replicas that hold the
+    /// same live set produce byte-identical `plans.plog` files (same
+    /// header, same fingerprint-ordered records). A no-op when the log
+    /// is already in canonical form. Crash-safe like [`compact`]: the
+    /// rename either happens or the old log survives intact.
+    pub fn compact_canonical(&self) -> Result<()> {
+        let mut st = self.state.lock().expect("disk tier poisoned");
+        let digest = Self::digest_of(&st.index);
+        // Already canonical: the header carries the content digest and
+        // every byte of the record region is live (no superseded or
+        // duplicate records, which canonical rewrites never leave).
+        if st.generation == digest && st.live_bytes == st.tail - LOG_HEADER_LEN {
+            return Ok(());
+        }
+        self.rewrite(&mut st, digest)
     }
 
     pub fn stats(&self) -> DiskTierStats {
@@ -421,8 +645,101 @@ impl DiskTier {
             corrupt_records: self.corrupt_records.load(Ordering::Relaxed),
             compactions: self.compactions.load(Ordering::Relaxed),
             quarantined: self.quarantined.load(Ordering::Relaxed),
+            quarantine_pruned: self.quarantine_pruned.load(Ordering::Relaxed),
         }
     }
+}
+
+/// What an open-time scan of the log bytes found.
+enum ScanOutcome {
+    /// Zero-length file: brand-new log, write a fresh header.
+    Empty,
+    /// Unusable header; `header` holds the first bytes for quarantine
+    /// naming (claimed generation extraction).
+    BadHeader { header: Vec<u8> },
+    /// Valid header; records indexed up to `tail` (< file length when a
+    /// torn tail must be truncated), with `corrupt` counting the cut.
+    Records { generation: u64, index: HashMap<u64, IndexEntry>, tail: u64, corrupt: u64 },
+}
+
+impl ScanOutcome {
+    fn scan(buf: &[u8]) -> ScanOutcome {
+        if buf.is_empty() {
+            return ScanOutcome::Empty;
+        }
+        if buf.len() < LOG_HEADER_LEN as usize
+            || buf[..4] != LOG_MAGIC
+            || u16::from_le_bytes([buf[4], buf[5]]) != LOG_VERSION
+        {
+            return ScanOutcome::BadHeader { header: buf[..buf.len().min(16)].to_vec() };
+        }
+        let mut g8 = [0u8; 8];
+        g8.copy_from_slice(&buf[8..16]);
+        let generation = u64::from_le_bytes(g8);
+        // Scan records; truncate at the first corrupt one.
+        let mut corrupt = 0u64;
+        let mut index = HashMap::new();
+        let mut pos = LOG_HEADER_LEN as usize;
+        loop {
+            if pos == buf.len() {
+                break;
+            }
+            if buf.len() - pos < RECORD_OVERHEAD as usize {
+                corrupt += 1;
+                break;
+            }
+            let len = read_u32_at(buf, pos) as usize;
+            let crc = read_u32_at(buf, pos + 4);
+            let start = pos + RECORD_OVERHEAD as usize;
+            if len < 8 || buf.len() - start < len {
+                corrupt += 1;
+                break;
+            }
+            let payload = &buf[start..start + len];
+            if crc32(payload) != crc {
+                corrupt += 1;
+                break;
+            }
+            let mut fp8 = [0u8; 8];
+            fp8.copy_from_slice(&payload[..8]);
+            let fp = u64::from_le_bytes(fp8);
+            index.insert(fp, IndexEntry { offset: start as u64, len: len as u32, crc });
+            pos = start + len;
+        }
+        ScanOutcome::Records { generation, index, tail: pos as u64, corrupt }
+    }
+}
+
+/// Delete all but the `keep` newest `<stem>.corrupt-*` files in `dir`
+/// (newest by mtime, name-descending on ties), returning how many were
+/// removed. Shared by the plan-log quarantine and the sync-frame
+/// quarantine so neither can grow without bound.
+pub fn prune_quarantines(dir: &Path, stem: &str, keep: usize) -> u64 {
+    let prefix = format!("{stem}.corrupt-");
+    let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+    let mut found: Vec<(std::time::SystemTime, String, PathBuf)> = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !name.starts_with(&prefix) {
+            continue;
+        }
+        let mtime = entry
+            .metadata()
+            .and_then(|m| m.modified())
+            .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+        found.push((mtime, name, entry.path()));
+    }
+    if found.len() <= keep {
+        return 0;
+    }
+    found.sort_by(|a, b| b.0.cmp(&a.0).then_with(|| b.1.cmp(&a.1)));
+    let mut pruned = 0u64;
+    for (_, _, path) in found.drain(keep..) {
+        if std::fs::remove_file(&path).is_ok() {
+            pruned += 1;
+        }
+    }
+    pruned
 }
 
 /// Where an unreadable log gets moved: `plans.plog.corrupt-<gen>`, with
@@ -452,13 +769,6 @@ fn quarantine_path(log_path: &Path, buf: &[u8]) -> PathBuf {
 
 fn read_u32_at(buf: &[u8], pos: usize) -> u32 {
     u32::from_le_bytes([buf[pos], buf[pos + 1], buf[pos + 2], buf[pos + 3]])
-}
-
-fn read_payload(file: &mut File, e: IndexEntry) -> Option<Vec<u8>> {
-    let mut payload = vec![0u8; e.len as usize];
-    file.seek(SeekFrom::Start(e.offset)).ok()?;
-    file.read_exact(&mut payload).ok()?;
-    Some(payload)
 }
 
 impl std::fmt::Debug for DiskTier {
@@ -616,6 +926,129 @@ mod tests {
         assert_eq!(tier.stats().quarantined, 1, "per-open count");
         assert_eq!(std::fs::read(dir.join("plans.plog.corrupt-0")).unwrap(), b"garbage one");
         assert_eq!(std::fs::read(dir.join("plans.plog.corrupt-0.1")).unwrap(), b"garbage two");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mmap_reads_match_buffered_reads_exactly() {
+        let dir = temp_dir("mmap");
+        {
+            let tier = DiskTier::open(&dir).unwrap();
+            for i in 0u64..32 {
+                tier.put(i, &format!("{{\"plan\":{i}}}")).unwrap();
+            }
+            tier.put(3, "{\"plan\":\"superseded\"}").unwrap();
+        }
+        // Buffered open (threshold never reached) vs mapped open
+        // (threshold 1 byte): identical probes, identical live index.
+        let buffered = DiskTier::open_with_opts(&dir, 1 << 20, u64::MAX).unwrap();
+        let mapped = DiskTier::open_with_opts(&dir, 1 << 20, 1).unwrap();
+        assert_eq!(buffered.live_index(), mapped.live_index());
+        assert_eq!(buffered.content_digest(), mapped.content_digest());
+        for i in 0u64..32 {
+            assert_eq!(buffered.get(i), mapped.get(i), "fp {i} diverges under mmap");
+        }
+        assert_eq!(mapped.get(3).as_deref(), Some("{\"plan\":\"superseded\"}"));
+        // Appends past the map fall back to buffered reads transparently.
+        mapped.put(1000, "{\"fresh\":true}").unwrap();
+        assert_eq!(mapped.get(1000).as_deref(), Some("{\"fresh\":true}"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mmap_open_truncates_torn_tails_too() {
+        let dir = temp_dir("mmap-torn");
+        let log = {
+            let tier = DiskTier::open(&dir).unwrap();
+            tier.put(1, "{\"keep\":true}").unwrap();
+            tier.log_path().to_path_buf()
+        };
+        let mut f = OpenOptions::new().append(true).open(&log).unwrap();
+        f.write_all(&[0xde, 0xad]).unwrap();
+        drop(f);
+        let tier = DiskTier::open_with_opts(&dir, 1 << 20, 1).unwrap();
+        assert_eq!(tier.get(1).as_deref(), Some("{\"keep\":true}"));
+        assert_eq!(tier.stats().corrupt_records, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn quarantine_growth_is_capped() {
+        let dir = temp_dir("quarantine-cap");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut pruned_total = 0;
+        for i in 0..7u32 {
+            std::fs::write(dir.join("plans.plog"), format!("garbage {i}")).unwrap();
+            let tier = DiskTier::open(&dir).unwrap();
+            pruned_total += tier.stats().quarantine_pruned;
+        }
+        let corrupt: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".corrupt-"))
+            .collect();
+        assert_eq!(
+            corrupt.len(),
+            MAX_QUARANTINES,
+            "quarantines must be pruned to the cap: {corrupt:?}"
+        );
+        assert_eq!(pruned_total, 7 - MAX_QUARANTINES as u64, "every prune is counted");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn canonical_compaction_is_append_order_independent() {
+        let dir_a = temp_dir("canon-a");
+        let dir_b = temp_dir("canon-b");
+        let a = DiskTier::open(&dir_a).unwrap();
+        let b = DiskTier::open(&dir_b).unwrap();
+        // Same final live set, different append orders and histories.
+        a.put(10, "{\"p\":10}").unwrap();
+        a.put(20, "{\"old\":true}").unwrap();
+        a.put(30, "{\"p\":30}").unwrap();
+        a.put(20, "{\"p\":20}").unwrap();
+        b.put(30, "{\"p\":30}").unwrap();
+        b.put(20, "{\"p\":20}").unwrap();
+        b.put(10, "{\"p\":10}").unwrap();
+        assert_eq!(a.content_digest(), b.content_digest(), "digest ignores history");
+        a.compact_canonical().unwrap();
+        b.compact_canonical().unwrap();
+        let bytes_a = std::fs::read(a.log_path()).unwrap();
+        let bytes_b = std::fs::read(b.log_path()).unwrap();
+        assert_eq!(bytes_a, bytes_b, "canonical logs must be byte-identical");
+        assert_eq!(read_log_generation(a.log_path()).unwrap(), a.content_digest());
+        // Idempotent: a second canonical pass rewrites nothing.
+        let compactions = a.stats().compactions;
+        a.compact_canonical().unwrap();
+        assert_eq!(a.stats().compactions, compactions, "canonical form is a no-op");
+        // The canonical log still serves and reopens.
+        assert_eq!(a.get(20).as_deref(), Some("{\"p\":20}"));
+        drop(a);
+        let a = DiskTier::open(&dir_a).unwrap();
+        assert_eq!(a.get(10).as_deref(), Some("{\"p\":10}"));
+        let _ = std::fs::remove_dir_all(&dir_a);
+        let _ = std::fs::remove_dir_all(&dir_b);
+    }
+
+    #[test]
+    fn live_index_and_export_expose_the_live_set() {
+        let dir = temp_dir("export");
+        let tier = DiskTier::open(&dir).unwrap();
+        tier.put(5, "{\"p\":5}").unwrap();
+        tier.put(9, "{\"old\":9}").unwrap();
+        tier.put(9, "{\"p\":9}").unwrap();
+        let idx = tier.live_index();
+        assert_eq!(idx.len(), 2);
+        assert_eq!(idx[0].0, 5, "live_index is fingerprint-sorted");
+        assert_eq!(idx[1].0, 9);
+        let recs = tier.export_records(&[9, 5, 77]);
+        assert_eq!(recs.len(), 2, "unknown fingerprints are skipped");
+        assert_eq!(recs[0].0, 9);
+        assert_eq!(&recs[0].1[..8], &9u64.to_le_bytes());
+        assert_eq!(&recs[0].1[8..], b"{\"p\":9}");
+        let crc = idx.iter().find(|(fp, _)| *fp == 9).unwrap().1;
+        assert_eq!(crc, crc32(&recs[0].1), "index CRC matches the payload");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -88,6 +88,17 @@ pub struct ServiceConfig {
     /// programmatic twin of the `PALLAS_FAILPOINTS` environment
     /// variable. Arms the process-global registry.
     pub failpoints: Option<String>,
+    /// Shared "mailbox" directory for replica anti-entropy (DESIGN.md
+    /// §15). `None` disables sync; setting it requires `persist_path`
+    /// (the sync protocol replicates the persistent tier).
+    pub sync_dir: Option<std::path::PathBuf>,
+    /// Seconds between background anti-entropy rounds while serving.
+    /// `0` disables the ticker (the one-shot `automap sync` subcommand
+    /// still works against the same sync dir).
+    pub sync_interval_secs: u64,
+    /// Replica name for this process's snapshot in the sync dir.
+    /// `None` derives `replica-<pid>`.
+    pub replica: Option<String>,
 }
 
 impl Default for ServiceConfig {
@@ -99,6 +110,9 @@ impl Default for ServiceConfig {
             persist_path: None,
             max_pending: 0,
             failpoints: None,
+            sync_dir: None,
+            sync_interval_secs: 0,
+            replica: None,
         }
     }
 }
@@ -200,6 +214,14 @@ pub struct PlanService {
     shed: AtomicU64,
     worker_panics: AtomicU64,
     fallback_plans: AtomicU64,
+    // Replica anti-entropy (DESIGN.md §15): mailbox dir, ticker period,
+    // this replica's snapshot name, and per-service round accounting.
+    sync_dir: Option<std::path::PathBuf>,
+    sync_interval_secs: u64,
+    replica: String,
+    sync_rounds: AtomicU64,
+    sync_records_pulled: AtomicU64,
+    sync_frames_quarantined: AtomicU64,
 }
 
 impl PlanService {
@@ -221,6 +243,13 @@ impl PlanService {
             Some(dir) => Some(DiskTier::open(dir)?),
             None => None,
         };
+        if cfg.sync_dir.is_some() && disk.is_none() {
+            anyhow::bail!("replica sync replicates the persistent tier: --sync-dir requires --cache-dir");
+        }
+        let replica = cfg
+            .replica
+            .clone()
+            .unwrap_or_else(|| format!("replica-{}", std::process::id()));
         Ok(PlanService {
             cache: PlanCache::new(cfg.cache_shards, cfg.cache_bytes),
             disk,
@@ -238,9 +267,62 @@ impl PlanService {
             shed: AtomicU64::new(0),
             worker_panics: AtomicU64::new(0),
             fallback_plans: AtomicU64::new(0),
+            sync_dir: cfg.sync_dir,
+            sync_interval_secs: cfg.sync_interval_secs,
+            replica,
+            sync_rounds: AtomicU64::new(0),
+            sync_records_pulled: AtomicU64::new(0),
+            sync_frames_quarantined: AtomicU64::new(0),
             mx: ServiceMetrics::new(),
             latency: Histogram::new(),
         })
+    }
+
+    /// Whether a sync mailbox dir is configured (`--sync-dir`).
+    pub fn sync_configured(&self) -> bool {
+        self.sync_dir.is_some()
+    }
+
+    /// Background sync ticker period in seconds (`0` = no ticker).
+    pub fn sync_interval_secs(&self) -> u64 {
+        self.sync_interval_secs
+    }
+
+    /// This replica's snapshot name in the sync dir.
+    pub fn replica_name(&self) -> &str {
+        &self.replica
+    }
+
+    /// Run ONE anti-entropy round against the configured sync dir
+    /// (DESIGN.md §15): canonicalize the local log, publish a snapshot,
+    /// pull missing/superseded records from every peer snapshot, land
+    /// the merge via canonical compaction. Pulled plans become visible
+    /// to requests through the normal memory → disk probe order.
+    pub fn sync_once(&self) -> Result<super::sync::SyncReport> {
+        let disk = self.disk.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("replica sync requires a persistent tier (--cache-dir)")
+        })?;
+        let dir = self
+            .sync_dir
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("replica sync requires --sync-dir"))?;
+        let transport = super::sync::MailboxTransport::new(dir)?;
+        let report = super::sync::sync_once(&self.replica, disk, &transport)?;
+        self.sync_rounds.fetch_add(1, Ordering::Relaxed);
+        self.sync_records_pulled.fetch_add(report.records_pulled, Ordering::Relaxed);
+        self.sync_frames_quarantined
+            .fetch_add(report.frames_quarantined, Ordering::Relaxed);
+        Ok(report)
+    }
+
+    /// Replica-sync counters for this service: (rounds run, records
+    /// pulled, frames quarantined).
+    pub fn sync_counters(&self) -> (u64, u64, u64) {
+        (
+            self.sync_rounds.load(Ordering::Relaxed),
+            self.sync_records_pulled.load(Ordering::Relaxed),
+            self.sync_frames_quarantined.load(Ordering::Relaxed),
+        )
     }
 
     /// Requests served from the persistent tier (0 when disabled).
@@ -770,6 +852,12 @@ pub struct ServeSummary {
     pub shed: u64,
     pub worker_panics: u64,
     pub fallback_plans: u64,
+    /// Replica anti-entropy during this run (DESIGN.md §15): background
+    /// rounds the sync ticker completed, records pulled from peers, and
+    /// received frames quarantined as corrupt. All 0 without `--sync-dir`.
+    pub sync_rounds: u64,
+    pub sync_records_pulled: u64,
+    pub sync_frames_quarantined: u64,
 }
 
 impl ServeSummary {
@@ -830,6 +918,18 @@ impl ServeSummary {
                 100.0 * self.mean_bubble_fraction()
             ));
         }
+        if self.sync_rounds > 0 {
+            s.push_str(&format!(
+                ", {} sync rounds ({} records pulled)",
+                self.sync_rounds, self.sync_records_pulled
+            ));
+        }
+        if self.sync_frames_quarantined > 0 {
+            s.push_str(&format!(
+                ", {} sync frames quarantined",
+                self.sync_frames_quarantined
+            ));
+        }
         s
     }
 }
@@ -850,6 +950,7 @@ pub fn run_batch(
     let sc0 = service.search_cache_counters();
     let pp0 = service.pipelined_counters();
     let dg0 = service.degraded_counters();
+    let sy0 = service.sync_counters();
     let lat0 = service.latency_snapshot();
 
     let queue: BoundedQueue<usize> = BoundedQueue::new(queue_bound);
@@ -882,6 +983,7 @@ pub fn run_batch(
     let sc1 = service.search_cache_counters();
     let pp1 = service.pipelined_counters();
     let dg1 = service.degraded_counters();
+    let sy1 = service.sync_counters();
     let lat = service.latency_snapshot().delta(&lat0);
     let summary = ServeSummary {
         requests: responses.len(),
@@ -903,6 +1005,9 @@ pub fn run_batch(
         shed: dg1.1 - dg0.1,
         worker_panics: dg1.2 - dg0.2,
         fallback_plans: dg1.3 - dg0.3,
+        sync_rounds: sy1.0 - sy0.0,
+        sync_records_pulled: sy1.1 - sy0.1,
+        sync_frames_quarantined: sy1.2 - sy0.2,
     };
     (responses, summary)
 }
@@ -930,6 +1035,7 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
     let sc0 = service.search_cache_counters();
     let pp0 = service.pipelined_counters();
     let dg0 = service.degraded_counters();
+    let sy0 = service.sync_counters();
     let lat0 = service.latency_snapshot();
     let requests = std::sync::atomic::AtomicU64::new(0);
     let errors = std::sync::atomic::AtomicU64::new(0);
@@ -947,7 +1053,35 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
             }
         }
     };
+    // Background anti-entropy ticker (DESIGN.md §15): while serving,
+    // run a sync round every `sync_interval_secs`. Round failures are
+    // degradation, not errors — the next tick retries from scratch.
+    let ticker_stop = (Mutex::new(false), Condvar::new());
+    let stop_ticker = || {
+        *ticker_stop.0.lock().expect("sync ticker poisoned") = true;
+        ticker_stop.1.notify_all();
+    };
     std::thread::scope(|scope| -> std::io::Result<()> {
+        if service.sync_configured() && service.sync_interval_secs() > 0 {
+            let interval = std::time::Duration::from_secs(service.sync_interval_secs());
+            let (lock, cv) = &ticker_stop;
+            scope.spawn(move || {
+                let mut stopped = lock.lock().expect("sync ticker poisoned");
+                while !*stopped {
+                    let (g, timeout) =
+                        cv.wait_timeout(stopped, interval).expect("sync ticker poisoned");
+                    stopped = g;
+                    if *stopped {
+                        break;
+                    }
+                    if timeout.timed_out() {
+                        drop(stopped);
+                        let _ = service.sync_once();
+                        stopped = lock.lock().expect("sync ticker poisoned");
+                    }
+                }
+            });
+        }
         for _ in 0..pool.max(1) {
             scope.spawn(|| {
                 while let Some(line) = queue.pop() {
@@ -967,6 +1101,7 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
                 Ok(l) => l,
                 Err(e) => {
                     queue.close();
+                    stop_ticker();
                     return Err(e);
                 }
             };
@@ -995,6 +1130,7 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
             }
         }
         queue.close();
+        stop_ticker();
         Ok(())
     })?;
     if let Some(e) = io_err.into_inner().expect("io_err poisoned") {
@@ -1003,6 +1139,7 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
     let sc1 = service.search_cache_counters();
     let pp1 = service.pipelined_counters();
     let dg1 = service.degraded_counters();
+    let sy1 = service.sync_counters();
     let lat = service.latency_snapshot().delta(&lat0);
     Ok(ServeSummary {
         requests: requests.load(Ordering::Relaxed) as usize,
@@ -1024,6 +1161,9 @@ pub fn serve_jsonl<R: BufRead, W: Write + Send>(
         shed: dg1.1 - dg0.1,
         worker_panics: dg1.2 - dg0.2,
         fallback_plans: dg1.3 - dg0.3,
+        sync_rounds: sy1.0 - sy0.0,
+        sync_records_pulled: sy1.1 - sy0.1,
+        sync_frames_quarantined: sy1.2 - sy0.2,
     })
 }
 

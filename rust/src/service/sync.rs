@@ -1,0 +1,893 @@
+//! Replica anti-entropy over the persistent plan tier (DESIGN.md §15).
+//!
+//! The paper's fleet framing — plans as reusable artifacts amortized
+//! across many replicas serving shared model families — needs the local
+//! plan log (DESIGN.md §13) to flow *between* replicas. This module
+//! implements that exchange as an anti-entropy protocol:
+//!
+//! 1. **Summarize.** Each replica digests its live record set as a
+//!    two-level Merkle tree: 256 bucket digests over fingerprint ranges
+//!    (bucket = top byte of the fingerprint), rolled into one root. All
+//!    hashing is the same FNV-1a substrate the request fingerprints use
+//!    ([`crate::util::hash::Fnv64`]); no file I/O — digests come off the
+//!    in-memory `(fingerprint, crc)` index.
+//! 2. **Diff.** Equal roots mean nothing to do. Otherwise only the
+//!    differing buckets are listed, and only fingerprints that are
+//!    missing locally (or carry a different CRC) are requested.
+//! 3. **Pull.** Deltas arrive as length+CRC-framed record batches — the
+//!    PR 8 log framing verbatim, so a delta batch is a valid log tail.
+//!    Every frame is CRC-verified on receipt; corrupt or malformed
+//!    frames are QUARANTINED to `sync-frame.corrupt-*` files (pruned to
+//!    the same cap as log quarantines), never applied and never fatal.
+//! 4. **Merge + land.** Missing records append through the normal
+//!    `put` path (later-record-wins). A same-fingerprint CRC conflict —
+//!    which deterministic search should never produce, so it implies
+//!    corruption or version skew upstream — is resolved by a symmetric
+//!    tie-break (lexicographically smaller payload wins) so every
+//!    replica picks the same winner. The merged log then lands via
+//!    [`DiskTier::compact_canonical`]: tmp+fsync+rename with the
+//!    generation set to the content digest, so converged replicas hold
+//!    **byte-identical** `plans.plog` files and a crash at any point
+//!    leaves a valid log.
+//!
+//! Transport is a trait ([`SyncTransport`]) with two offline impls: a
+//! shared-directory **mailbox** ([`MailboxTransport`]) where replicas
+//! drop snapshot files for peers to pick up, and an in-process peer
+//! table ([`InProcessTransport`]) for tests. Version-skewed snapshots
+//! are skipped whole (counted in `sync.peer_skew`, never applied, never
+//! fatal); transient transport failures retry with capped deterministic
+//! backoff and then skip the peer for the round. The
+//! `sync.frame_corrupt` / `sync.conn_drop` / `sync.partial_write`
+//! failpoints make whole fault schedules replay byte-identically
+//! (serial counter-keyed draws; sync rounds are single-threaded).
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::persist::{crc32, prune_quarantines, DiskTier, MAX_QUARANTINES};
+use crate::obs::metrics::{metrics, names};
+use crate::util::failpoints::{failpoints, SYNC_CONN_DROP, SYNC_FRAME_CORRUPT, SYNC_PARTIAL_WRITE};
+use crate::util::hash::Fnv64;
+
+/// Snapshot file magic (the mailbox transport's on-disk format).
+pub const SYNC_MAGIC: [u8; 4] = *b"PSYN";
+/// Sync protocol / snapshot format version this build speaks. Peers on
+/// any other version are skipped whole (counted, never applied).
+pub const SYNC_VERSION: u16 = 1;
+/// Fingerprint ranges in the digest tree: bucket = `fp >> 56`.
+pub const BUCKETS: usize = 256;
+/// Fixed snapshot header size: magic + version + reserved + root + count.
+const SNAP_HEADER_LEN: usize = 24;
+/// Bytes per snapshot index row: fingerprint, crc, len, payload offset.
+const INDEX_ROW_LEN: usize = 24;
+/// Transport attempts per operation before the peer is skipped.
+const MAX_ATTEMPTS: u32 = 3;
+/// Deterministic backoff: `BASE << attempt` ms, capped.
+const BACKOFF_BASE_MS: u64 = 1;
+const BACKOFF_CAP_MS: u64 = 4;
+
+/// Two-level Merkle digest of a live record set.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DigestTree {
+    pub root: u64,
+    pub buckets: Vec<u64>,
+    pub count: u64,
+}
+
+/// Digest a fingerprint-sorted `(fingerprint, crc)` listing. Empty
+/// buckets digest to 0 so they compare (and skip) cheaply.
+pub fn digest_tree(live: &[(u64, u32)]) -> DigestTree {
+    let mut buckets = vec![0u64; BUCKETS];
+    let mut i = 0;
+    while i < live.len() {
+        let b = (live[i].0 >> 56) as usize;
+        let mut h = Fnv64::new();
+        h.str("automap-sync-bucket-v1");
+        let mut j = i;
+        while j < live.len() && (live[j].0 >> 56) as usize == b {
+            h.u64(live[j].0).u64(live[j].1 as u64);
+            j += 1;
+        }
+        buckets[b] = h.finish();
+        i = j;
+    }
+    let mut r = Fnv64::new();
+    r.str("automap-sync-root-v1");
+    r.u64(live.len() as u64);
+    for &d in &buckets {
+        r.u64(d);
+    }
+    DigestTree { root: r.finish(), buckets, count: live.len() as u64 }
+}
+
+/// What a peer advertises before any records move: protocol version and
+/// its digest tree.
+#[derive(Debug, Clone)]
+pub struct PeerSummary {
+    pub version: u16,
+    pub root: u64,
+    pub buckets: Vec<u64>,
+    pub count: u64,
+}
+
+/// How a replica reaches its peers. Implementations must be safe to
+/// retry: every method is idempotent from the protocol's view.
+pub trait SyncTransport {
+    /// Replica names visible to this transport (may include the caller).
+    fn peers(&self) -> Result<Vec<String>>;
+    /// A peer's digest-tree summary.
+    fn summary(&self, peer: &str) -> Result<PeerSummary>;
+    /// A peer's `(fingerprint, crc)` listing for one bucket.
+    fn bucket(&self, peer: &str, bucket: usize) -> Result<Vec<(u64, u32)>>;
+    /// Length+CRC-framed record batch for the requested fingerprints
+    /// (PR 8 log framing; unknown fingerprints are silently absent).
+    fn records(&self, peer: &str, fps: &[u64]) -> Result<Vec<u8>>;
+    /// Publish this replica's snapshot for peers to pull. Atomic: a
+    /// failed publish must leave the previous snapshot serving.
+    fn publish(&self, replica: &str, snapshot: &[u8]) -> Result<()>;
+}
+
+/// Frame records with the log framing: `[len u32 | crc u32 | payload]`.
+pub fn frame_records(records: &[(u64, Vec<u8>)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(records.iter().map(|(_, p)| 8 + p.len()).sum());
+    for (_, payload) in records {
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32(payload).to_le_bytes());
+        out.extend_from_slice(payload);
+    }
+    out
+}
+
+/// Encode a snapshot: header, bucket digest table, record index, then
+/// the framed records in fingerprint order.
+///
+/// ```text
+/// 0    4     magic b"PSYN"
+/// 4    2     protocol version (u16)
+/// 6    2     reserved, zero
+/// 8    8     root digest (u64)
+/// 16   8     record count (u64)
+/// 24   2048  bucket digests (256 × u64)
+/// 2072 24×n  index rows: fp u64, crc u32, len u32, payload offset u64
+/// ...        frames: [len u32 | crc u32 | payload] × n
+/// ```
+pub fn encode_snapshot(records: &[(u64, Vec<u8>)]) -> Vec<u8> {
+    let live: Vec<(u64, u32)> = records.iter().map(|(fp, p)| (*fp, crc32(p))).collect();
+    let tree = digest_tree(&live);
+    let mut out = Vec::new();
+    out.extend_from_slice(&SYNC_MAGIC);
+    out.extend_from_slice(&SYNC_VERSION.to_le_bytes());
+    out.extend_from_slice(&[0u8; 2]);
+    out.extend_from_slice(&tree.root.to_le_bytes());
+    out.extend_from_slice(&(records.len() as u64).to_le_bytes());
+    for &d in &tree.buckets {
+        out.extend_from_slice(&d.to_le_bytes());
+    }
+    let frames_base = SNAP_HEADER_LEN + BUCKETS * 8 + records.len() * INDEX_ROW_LEN;
+    let mut offset = frames_base as u64;
+    for ((fp, payload), (_, crc)) in records.iter().zip(&live) {
+        out.extend_from_slice(&fp.to_le_bytes());
+        out.extend_from_slice(&crc.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        // Offset of the payload (past its 8-byte frame header).
+        out.extend_from_slice(&(offset + 8).to_le_bytes());
+        offset += 8 + payload.len() as u64;
+    }
+    out.extend_from_slice(&frame_records(records));
+    out
+}
+
+/// Parsed snapshot header + index (frame bytes stay in `bytes`).
+pub struct Snapshot {
+    pub version: u16,
+    pub root: u64,
+    pub buckets: Vec<u64>,
+    /// `(fingerprint, crc, len, payload offset)` per record, fp order.
+    pub index: Vec<(u64, u32, u32, u64)>,
+}
+
+fn le_u16(b: &[u8], at: usize) -> u16 {
+    u16::from_le_bytes([b[at], b[at + 1]])
+}
+
+fn le_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+fn le_u64(b: &[u8], at: usize) -> u64 {
+    let mut x = [0u8; 8];
+    x.copy_from_slice(&b[at..at + 8]);
+    u64::from_le_bytes(x)
+}
+
+/// Parse a snapshot's header and index, bounds-checked. A version-skewed
+/// snapshot parses to just its version (empty tree) so the caller can
+/// count the skew; anything malformed is an error (the caller treats the
+/// peer as unreachable this round).
+pub fn parse_snapshot(bytes: &[u8]) -> Result<Snapshot> {
+    if bytes.len() < SNAP_HEADER_LEN || bytes[..4] != SYNC_MAGIC {
+        bail!("not a sync snapshot (bad magic or truncated header)");
+    }
+    let version = le_u16(bytes, 4);
+    if version != SYNC_VERSION {
+        return Ok(Snapshot { version, root: 0, buckets: Vec::new(), index: Vec::new() });
+    }
+    let root = le_u64(bytes, 8);
+    let count = le_u64(bytes, 16) as usize;
+    let buckets_end = SNAP_HEADER_LEN + BUCKETS * 8;
+    let index_end = count
+        .checked_mul(INDEX_ROW_LEN)
+        .and_then(|n| n.checked_add(buckets_end))
+        .unwrap_or(usize::MAX);
+    if bytes.len() < index_end {
+        bail!("sync snapshot truncated (declares {count} records)");
+    }
+    let buckets: Vec<u64> = (0..BUCKETS).map(|i| le_u64(bytes, SNAP_HEADER_LEN + i * 8)).collect();
+    let mut index = Vec::with_capacity(count);
+    for i in 0..count {
+        let at = buckets_end + i * INDEX_ROW_LEN;
+        index.push((le_u64(bytes, at), le_u32(bytes, at + 8), le_u32(bytes, at + 12), le_u64(bytes, at + 16)));
+    }
+    Ok(Snapshot { version, root, buckets, index })
+}
+
+/// Shared-directory "mailbox" transport: each replica publishes one
+/// `<name>.psyn` snapshot into the sync dir and pulls from every other
+/// snapshot there. Publishes are atomic (tmp + rename), so readers only
+/// ever see complete snapshots — a torn publish leaves the previous one
+/// serving.
+pub struct MailboxTransport {
+    dir: PathBuf,
+}
+
+impl MailboxTransport {
+    pub fn new(dir: &Path) -> Result<MailboxTransport> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating sync dir {}", dir.display()))?;
+        Ok(MailboxTransport { dir: dir.to_path_buf() })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn snapshot_path(&self, replica: &str) -> PathBuf {
+        self.dir.join(format!("{replica}.psyn"))
+    }
+
+    /// Read a peer's snapshot, with the connection-drop failpoint in
+    /// front (a dropped pull is an error the engine retries).
+    fn load(&self, peer: &str) -> Result<Vec<u8>> {
+        if failpoints().should_fail(SYNC_CONN_DROP) {
+            bail!("injected failpoint: {SYNC_CONN_DROP} (pulling from {peer})");
+        }
+        std::fs::read(self.snapshot_path(peer))
+            .with_context(|| format!("reading snapshot for peer {peer}"))
+    }
+}
+
+impl SyncTransport for MailboxTransport {
+    fn peers(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir).context("listing sync dir")?.flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if let Some(stem) = name.strip_suffix(".psyn") {
+                out.push(stem.to_string());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn summary(&self, peer: &str) -> Result<PeerSummary> {
+        let bytes = self.load(peer)?;
+        let snap = parse_snapshot(&bytes)?;
+        let count = snap.index.len() as u64;
+        Ok(PeerSummary { version: snap.version, root: snap.root, buckets: snap.buckets, count })
+    }
+
+    fn bucket(&self, peer: &str, bucket: usize) -> Result<Vec<(u64, u32)>> {
+        let bytes = self.load(peer)?;
+        let snap = parse_snapshot(&bytes)?;
+        Ok(snap
+            .index
+            .iter()
+            .filter(|(fp, _, _, _)| (*fp >> 56) as usize == bucket)
+            .map(|(fp, crc, _, _)| (*fp, *crc))
+            .collect())
+    }
+
+    fn records(&self, peer: &str, fps: &[u64]) -> Result<Vec<u8>> {
+        let bytes = self.load(peer)?;
+        let snap = parse_snapshot(&bytes)?;
+        let by_fp: HashMap<u64, (u64, u32)> =
+            snap.index.iter().map(|(fp, _, len, off)| (*fp, (*off, *len))).collect();
+        let mut out = Vec::new();
+        for fp in fps {
+            let Some(&(off, len)) = by_fp.get(fp) else { continue };
+            // The frame starts 8 bytes before its payload.
+            let start = (off as usize).saturating_sub(8);
+            let end = off as usize + len as usize;
+            if start + 8 != off as usize || end > bytes.len() {
+                bail!("snapshot for {peer} has an out-of-range frame for {fp:016x}");
+            }
+            out.extend_from_slice(&bytes[start..end]);
+        }
+        Ok(out)
+    }
+
+    fn publish(&self, replica: &str, snapshot: &[u8]) -> Result<()> {
+        let tmp = self.dir.join(format!("{replica}.psyn.tmp"));
+        // Injected torn publish: write a prefix of the snapshot and fail
+        // BEFORE the rename — the previous snapshot keeps serving, and
+        // the stale tmp is truncated by the next attempt's create.
+        if failpoints().should_fail(SYNC_PARTIAL_WRITE) {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            let _ = f.write_all(&snapshot[..snapshot.len() / 2]);
+            bail!("injected failpoint: {SYNC_PARTIAL_WRITE} (publishing {replica})");
+        }
+        let mut f =
+            File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(snapshot).context("writing sync snapshot")?;
+        f.sync_all().context("fsyncing sync snapshot")?;
+        drop(f);
+        std::fs::rename(&tmp, self.snapshot_path(replica))
+            .context("installing sync snapshot")?;
+        Ok(())
+    }
+}
+
+/// In-process transport for tests: peers are live [`DiskTier`]s in the
+/// same process; reads come straight off their indexes. Subject to the
+/// same connection-drop / partial-write failpoints as the mailbox so
+/// chaos schedules exercise identical protocol paths.
+#[derive(Default)]
+pub struct InProcessTransport {
+    tiers: std::collections::BTreeMap<String, std::sync::Arc<DiskTier>>,
+}
+
+impl InProcessTransport {
+    pub fn new() -> InProcessTransport {
+        InProcessTransport::default()
+    }
+
+    pub fn register(&mut self, name: &str, tier: std::sync::Arc<DiskTier>) {
+        self.tiers.insert(name.to_string(), tier);
+    }
+
+    fn tier(&self, peer: &str) -> Result<&DiskTier> {
+        if failpoints().should_fail(SYNC_CONN_DROP) {
+            bail!("injected failpoint: {SYNC_CONN_DROP} (pulling from {peer})");
+        }
+        self.tiers
+            .get(peer)
+            .map(|t| t.as_ref())
+            .ok_or_else(|| anyhow::anyhow!("unknown peer {peer}"))
+    }
+}
+
+impl SyncTransport for InProcessTransport {
+    fn peers(&self) -> Result<Vec<String>> {
+        Ok(self.tiers.keys().cloned().collect())
+    }
+
+    fn summary(&self, peer: &str) -> Result<PeerSummary> {
+        let tree = digest_tree(&self.tier(peer)?.live_index());
+        Ok(PeerSummary {
+            version: SYNC_VERSION,
+            root: tree.root,
+            buckets: tree.buckets,
+            count: tree.count,
+        })
+    }
+
+    fn bucket(&self, peer: &str, bucket: usize) -> Result<Vec<(u64, u32)>> {
+        Ok(self
+            .tier(peer)?
+            .live_index()
+            .into_iter()
+            .filter(|(fp, _)| (*fp >> 56) as usize == bucket)
+            .collect())
+    }
+
+    fn records(&self, peer: &str, fps: &[u64]) -> Result<Vec<u8>> {
+        Ok(frame_records(&self.tier(peer)?.export_records(fps)))
+    }
+
+    fn publish(&self, replica: &str, _snapshot: &[u8]) -> Result<()> {
+        // Peers read the live tier, so there is nothing to install — but
+        // the torn-publish failpoint still fires here so in-process
+        // chaos schedules cover the retry path.
+        if failpoints().should_fail(SYNC_PARTIAL_WRITE) {
+            bail!("injected failpoint: {SYNC_PARTIAL_WRITE} (publishing {replica})");
+        }
+        Ok(())
+    }
+}
+
+/// What one anti-entropy round did.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SyncReport {
+    /// Peers this round attempted to pull from (self excluded).
+    pub peers: u64,
+    /// Peers skipped after exhausted retries or version skew.
+    pub peers_skipped: u64,
+    /// Version-skewed peers (a subset of `peers_skipped`).
+    pub peer_skew: u64,
+    /// Remote records applied to the local log.
+    pub records_pulled: u64,
+    /// Same-fingerprint CRC conflicts resolved by the tie-break.
+    pub conflicts: u64,
+    /// Frames that failed CRC/UTF-8 verification and were quarantined.
+    pub frames_quarantined: u64,
+    /// Transport attempts that failed and were retried.
+    pub retries: u64,
+    /// Whether this round changed the local log.
+    pub changed: bool,
+}
+
+/// Retry `op` up to [`MAX_ATTEMPTS`] times with capped deterministic
+/// backoff, counting retries in the report. `None` means every attempt
+/// failed and the caller should skip this peer for the round.
+fn with_retries<T>(mut op: impl FnMut() -> Result<T>, report: &mut SyncReport) -> Option<T> {
+    for attempt in 0..MAX_ATTEMPTS {
+        match op() {
+            Ok(v) => return Some(v),
+            Err(_) => {
+                if attempt + 1 < MAX_ATTEMPTS {
+                    report.retries += 1;
+                    let ms = (BACKOFF_BASE_MS << attempt).min(BACKOFF_CAP_MS);
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Quarantine one received frame (or trailing garbage) next to the plan
+/// log, pruning old sync-frame quarantines to the shared cap.
+fn quarantine_frame(dir: &Path, frame: &[u8], report: &mut SyncReport) {
+    report.frames_quarantined += 1;
+    let mut h = Fnv64::new();
+    h.bytes(frame);
+    let tag = h.finish();
+    let mut path = dir.join(format!("sync-frame.corrupt-{tag:016x}"));
+    let mut i = 1u32;
+    while path.exists() {
+        path = dir.join(format!("sync-frame.corrupt-{tag:016x}.{i}"));
+        i += 1;
+    }
+    let _ = std::fs::write(&path, frame);
+    let pruned = prune_quarantines(dir, "sync-frame", MAX_QUARANTINES);
+    if pruned > 0 {
+        metrics().counter(names::PERSIST_QUARANTINE_PRUNED).add(pruned);
+    }
+}
+
+/// Best-effort snapshot publish with retries; a replica whose publish
+/// keeps failing still pulls normally (peers just see its last
+/// successful snapshot).
+fn publish_snapshot(
+    replica: &str,
+    tier: &DiskTier,
+    transport: &dyn SyncTransport,
+    report: &mut SyncReport,
+) {
+    let fps: Vec<u64> = tier.live_index().into_iter().map(|(fp, _)| fp).collect();
+    let snapshot = encode_snapshot(&tier.export_records(&fps));
+    let _ = with_retries(|| transport.publish(replica, &snapshot), report);
+}
+
+/// Run one anti-entropy round for `replica` against every peer the
+/// transport can see. On return the local log is in canonical form
+/// (fingerprint-ordered, content-digest generation), so replicas that
+/// hold the same plans hold byte-identical `plans.plog` files.
+pub fn sync_once(
+    replica: &str,
+    tier: &DiskTier,
+    transport: &dyn SyncTransport,
+) -> Result<SyncReport> {
+    let mut report = SyncReport::default();
+    tier.compact_canonical().context("canonicalizing local log before sync")?;
+    publish_snapshot(replica, tier, transport, &mut report);
+
+    let mut peers = transport.peers().context("listing sync peers")?;
+    peers.sort();
+    peers.dedup();
+    let quarantine_dir = tier
+        .log_path()
+        .parent()
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."));
+
+    let mut applied_any = false;
+    for peer in peers.iter().filter(|p| p.as_str() != replica) {
+        report.peers += 1;
+        let local_live = tier.live_index();
+        let local = digest_tree(&local_live);
+        let Some(summary) = with_retries(|| transport.summary(peer), &mut report) else {
+            report.peers_skipped += 1;
+            continue;
+        };
+        if summary.version != SYNC_VERSION {
+            // Version-skew policy: never apply, never fail. The peer's
+            // snapshot stays untouched for a build that can read it.
+            report.peer_skew += 1;
+            report.peers_skipped += 1;
+            continue;
+        }
+        if summary.root == local.root {
+            continue;
+        }
+        let local_idx: HashMap<u64, u32> = local_live.into_iter().collect();
+        let mut wanted: Vec<u64> = Vec::new();
+        let mut reachable = true;
+        for (b, (mine, theirs)) in local.buckets.iter().zip(&summary.buckets).enumerate() {
+            if mine == theirs {
+                continue;
+            }
+            match with_retries(|| transport.bucket(peer, b), &mut report) {
+                Some(listing) => {
+                    for (fp, crc) in listing {
+                        match local_idx.get(&fp) {
+                            None => wanted.push(fp),
+                            Some(&lc) if lc != crc => wanted.push(fp),
+                            _ => {}
+                        }
+                    }
+                }
+                None => {
+                    reachable = false;
+                    break;
+                }
+            }
+        }
+        if !reachable {
+            report.peers_skipped += 1;
+            continue;
+        }
+        if wanted.is_empty() {
+            continue;
+        }
+        wanted.sort_unstable();
+        wanted.dedup();
+        let Some(batch) = with_retries(|| transport.records(peer, &wanted), &mut report) else {
+            report.peers_skipped += 1;
+            continue;
+        };
+
+        // Walk the frames, verifying each before it can touch the log.
+        let mut pos = 0usize;
+        while pos < batch.len() {
+            if batch.len() - pos < 8 {
+                quarantine_frame(&quarantine_dir, &batch[pos..], &mut report);
+                break;
+            }
+            let len = le_u32(&batch, pos) as usize;
+            let crc = le_u32(&batch, pos + 4);
+            let start = pos + 8;
+            if len < 8 || batch.len() - start < len {
+                quarantine_frame(&quarantine_dir, &batch[pos..], &mut report);
+                break;
+            }
+            let mut payload = batch[start..start + len].to_vec();
+            let frame_end = start + len;
+            // Injected wire corruption: flip a payload byte so the CRC
+            // check below must catch (and quarantine) the frame.
+            if failpoints().should_fail(SYNC_FRAME_CORRUPT) {
+                let last = payload.len() - 1;
+                payload[last] ^= 0x40;
+            }
+            let plan = match std::str::from_utf8(&payload[8..]) {
+                Ok(p) if crc32(&payload) == crc => p.to_string(),
+                _ => {
+                    // Corrupt frame: quarantine the bytes as received
+                    // (framing included), skip, keep going. NEVER applied.
+                    let mut frame = Vec::with_capacity(8 + payload.len());
+                    frame.extend_from_slice(&batch[pos..start]);
+                    frame.extend_from_slice(&payload);
+                    quarantine_frame(&quarantine_dir, &frame, &mut report);
+                    pos = frame_end;
+                    continue;
+                }
+            };
+            let fp = le_u64(&payload, 0);
+            pos = frame_end;
+            match local_idx.get(&fp) {
+                Some(&lc) if lc == crc => {} // identical record, nothing to do
+                Some(_) => {
+                    // Conflicting record for a fingerprint deterministic
+                    // search should map to one plan: corruption or skew
+                    // upstream. Symmetric tie-break so every replica
+                    // converges on the same winner.
+                    report.conflicts += 1;
+                    let local_payload =
+                        tier.export_records(&[fp]).pop().map(|(_, p)| p);
+                    let remote_wins = match &local_payload {
+                        Some(lp) => payload < *lp,
+                        None => true,
+                    };
+                    if remote_wins && tier.put(fp, &plan).is_ok() {
+                        report.records_pulled += 1;
+                        applied_any = true;
+                    }
+                }
+                None => {
+                    // Missing record: apply through the normal append
+                    // path (later-record-wins; a failed put retries on
+                    // the next round — the digests still differ).
+                    if tier.put(fp, &plan).is_ok() {
+                        report.records_pulled += 1;
+                        applied_any = true;
+                    }
+                }
+            }
+        }
+    }
+
+    if applied_any {
+        tier.compact_canonical().context("canonicalizing local log after merge")?;
+        publish_snapshot(replica, tier, transport, &mut report);
+    }
+    report.changed = applied_any;
+
+    let m = metrics();
+    m.counter(names::SYNC_ROUNDS).add(1);
+    m.counter(names::SYNC_RECORDS_PULLED).add(report.records_pulled);
+    m.counter(names::SYNC_CONFLICTS).add(report.conflicts);
+    m.counter(names::SYNC_FRAMES_QUARANTINED).add(report.frames_quarantined);
+    m.counter(names::SYNC_PEER_SKEW).add(report.peer_skew);
+    m.counter(names::SYNC_RETRIES).add(report.retries);
+    m.counter(names::SYNC_PEERS_SKIPPED).add(report.peers_skipped);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    // Tests that arm the process-global failpoint registry serialize on
+    // this lock and disarm on exit (same idiom as tests/chaos_service.rs).
+    static FP_LOCK: Mutex<()> = Mutex::new(());
+
+    struct Disarm;
+
+    impl Drop for Disarm {
+        fn drop(&mut self) {
+            failpoints().disarm_all();
+        }
+    }
+
+    fn with_failpoints<T>(body: impl FnOnce() -> T) -> T {
+        let _guard = FP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        failpoints().disarm_all();
+        let _disarm = Disarm;
+        body()
+    }
+
+    fn temp_dir(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("automap-sync-unit-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn tier_with(dir: &Path, plans: &[(u64, &str)]) -> Arc<DiskTier> {
+        let tier = DiskTier::open(dir).unwrap();
+        for (fp, plan) in plans {
+            tier.put(*fp, plan).unwrap();
+        }
+        Arc::new(tier)
+    }
+
+    fn log_bytes(tier: &DiskTier) -> Vec<u8> {
+        std::fs::read(tier.log_path()).unwrap()
+    }
+
+    #[test]
+    fn digest_tree_separates_buckets_and_orders() {
+        let a = digest_tree(&[(1, 10), (2, 20)]);
+        let b = digest_tree(&[(1, 10), (2, 20)]);
+        assert_eq!(a, b, "pure function of the listing");
+        let c = digest_tree(&[(1, 10), (2, 21)]);
+        assert_ne!(a.root, c.root, "a CRC change must change the root");
+        assert_eq!(a.buckets[1], c.buckets[1], "unrelated buckets unchanged");
+        assert_ne!(a.buckets[0], c.buckets[0]);
+        // A fingerprint in a different range lands in a different bucket.
+        let hi = 7u64 << 56 | 3;
+        let d = digest_tree(&[(1, 10), (hi, 30)]);
+        assert_ne!(d.buckets[7], 0);
+        assert_eq!(d.buckets[7], digest_tree(&[(hi, 30)]).buckets[7]);
+    }
+
+    #[test]
+    fn snapshot_round_trips() {
+        let records: Vec<(u64, Vec<u8>)> = vec![
+            (5, [&5u64.to_le_bytes()[..], b"{\"p\":5}"].concat()),
+            (9, [&9u64.to_le_bytes()[..], b"{\"p\":9}"].concat()),
+        ];
+        let bytes = encode_snapshot(&records);
+        let snap = parse_snapshot(&bytes).unwrap();
+        assert_eq!(snap.version, SYNC_VERSION);
+        let live: Vec<(u64, u32)> = records.iter().map(|(fp, p)| (*fp, crc32(p))).collect();
+        let tree = digest_tree(&live);
+        assert_eq!(snap.root, tree.root);
+        assert_eq!(snap.buckets, tree.buckets);
+        assert_eq!(snap.index.len(), 2);
+        // The index offsets point at the exact payload bytes.
+        for ((fp, payload), (ifp, icrc, ilen, ioff)) in records.iter().zip(&snap.index) {
+            assert_eq!(fp, ifp);
+            assert_eq!(*icrc, crc32(payload));
+            assert_eq!(*ilen as usize, payload.len());
+            let at = *ioff as usize;
+            assert_eq!(&bytes[at..at + payload.len()], &payload[..]);
+        }
+        assert!(parse_snapshot(b"nonsense").is_err());
+        assert!(parse_snapshot(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn in_process_sync_converges_byte_identically() {
+        with_failpoints(|| {
+            let dir_a = temp_dir("inproc-a");
+            let dir_b = temp_dir("inproc-b");
+            // Disjoint + overlapping sets, plus one CRC conflict on fp 3.
+            let a = tier_with(&dir_a, &[(1, "{\"p\":1}"), (2, "{\"p\":2}"), (3, "{\"x\":1}")]);
+            let b = tier_with(&dir_b, &[(2, "{\"p\":2}"), (3, "{\"y\":2}"), (4, "{\"p\":4}")]);
+            let mut t = InProcessTransport::new();
+            t.register("a", a.clone());
+            t.register("b", b.clone());
+            let ra = sync_once("a", &a, &t).unwrap();
+            assert!(ra.changed);
+            assert_eq!(ra.conflicts, 1, "fp 3 differs across replicas");
+            let rb = sync_once("b", &b, &t).unwrap();
+            assert!(rb.changed);
+            assert_eq!(a.live_index(), b.live_index());
+            assert_eq!(log_bytes(&a), log_bytes(&b), "canonical logs must be byte-identical");
+            // The symmetric tie-break picked ONE fp-3 plan on both sides.
+            assert_eq!(a.get(3), b.get(3));
+            // A third round is a no-op: roots match.
+            let ra2 = sync_once("a", &a, &t).unwrap();
+            assert!(!ra2.changed);
+            assert_eq!(ra2.records_pulled, 0);
+            let _ = std::fs::remove_dir_all(&dir_a);
+            let _ = std::fs::remove_dir_all(&dir_b);
+        });
+    }
+
+    #[test]
+    fn mailbox_sync_converges_via_snapshot_files() {
+        with_failpoints(|| {
+            let dir_a = temp_dir("mail-a");
+            let dir_b = temp_dir("mail-b");
+            let sync_dir = temp_dir("mail-sync");
+            let a = tier_with(&dir_a, &[(10, "{\"p\":10}"), (11, "{\"p\":11}")]);
+            let b = tier_with(&dir_b, &[(12, "{\"p\":12}")]);
+            let t = MailboxTransport::new(&sync_dir).unwrap();
+            // A publishes; B pulls A's corpus; A pulls B's new record.
+            sync_once("a", &a, &t).unwrap();
+            let rb = sync_once("b", &b, &t).unwrap();
+            assert_eq!(rb.records_pulled, 2);
+            let ra = sync_once("a", &a, &t).unwrap();
+            assert_eq!(ra.records_pulled, 1);
+            assert_eq!(log_bytes(&a), log_bytes(&b));
+            assert_eq!(a.get(12).as_deref(), Some("{\"p\":12}"));
+            assert_eq!(b.get(10).as_deref(), Some("{\"p\":10}"));
+            let _ = std::fs::remove_dir_all(&dir_a);
+            let _ = std::fs::remove_dir_all(&dir_b);
+            let _ = std::fs::remove_dir_all(&sync_dir);
+        });
+    }
+
+    #[test]
+    fn version_skewed_snapshots_are_skipped_not_applied() {
+        with_failpoints(|| {
+            let dir_a = temp_dir("skew-a");
+            let sync_dir = temp_dir("skew-sync");
+            let a = tier_with(&dir_a, &[(1, "{\"p\":1}")]);
+            let t = MailboxTransport::new(&sync_dir).unwrap();
+            // A "future" replica's snapshot: valid magic, version + 1.
+            let mut snap = encode_snapshot(&[(
+                99,
+                [&99u64.to_le_bytes()[..], b"{\"future\":true}"].concat(),
+            )]);
+            snap[4..6].copy_from_slice(&(SYNC_VERSION + 1).to_le_bytes());
+            std::fs::write(sync_dir.join("future.psyn"), &snap).unwrap();
+            let r = sync_once("a", &a, &t).unwrap();
+            assert_eq!(r.peer_skew, 1);
+            assert_eq!(r.peers_skipped, 1);
+            assert_eq!(r.records_pulled, 0, "skewed records must never apply");
+            assert_eq!(a.get(99), None);
+            let _ = std::fs::remove_dir_all(&dir_a);
+            let _ = std::fs::remove_dir_all(&sync_dir);
+        });
+    }
+
+    #[test]
+    fn corrupt_frames_are_quarantined_never_applied_never_fatal() {
+        with_failpoints(|| {
+            let dir_a = temp_dir("corrupt-a");
+            let dir_b = temp_dir("corrupt-b");
+            let a = tier_with(&dir_a, &[(1, "{\"p\":1}"), (2, "{\"p\":2}")]);
+            let b = tier_with(&dir_b, &[]);
+            let mut t = InProcessTransport::new();
+            t.register("a", a.clone());
+            t.register("b", b.clone());
+            // Corrupt EVERY pulled frame: nothing applies, nothing fails.
+            failpoints().arm(SYNC_FRAME_CORRUPT, 1.0, 7).unwrap();
+            let r = sync_once("b", &b, &t).unwrap();
+            assert_eq!(r.records_pulled, 0);
+            assert_eq!(r.frames_quarantined, 2);
+            assert!(!r.changed);
+            assert_eq!(b.live_index().len(), 0, "corrupt frames must never be applied");
+            let quarantined: Vec<String> = std::fs::read_dir(&dir_b)
+                .unwrap()
+                .flatten()
+                .map(|e| e.file_name().to_string_lossy().into_owned())
+                .filter(|n| n.starts_with("sync-frame.corrupt-"))
+                .collect();
+            assert_eq!(quarantined.len(), 2, "{quarantined:?}");
+            // Disarm: the next round pulls both records cleanly.
+            failpoints().disarm_all();
+            let r2 = sync_once("b", &b, &t).unwrap();
+            assert_eq!(r2.records_pulled, 2);
+            // Canonicalize A (it has only been a peer so far) before the
+            // byte-compare; it holds nothing B doesn't.
+            let ra = sync_once("a", &a, &t).unwrap();
+            assert_eq!(ra.records_pulled, 0);
+            assert_eq!(log_bytes(&a), log_bytes(&b));
+            let _ = std::fs::remove_dir_all(&dir_a);
+            let _ = std::fs::remove_dir_all(&dir_b);
+        });
+    }
+
+    #[test]
+    fn torn_publish_leaves_previous_snapshot_serving() {
+        with_failpoints(|| {
+            let dir_a = temp_dir("torn-a");
+            let sync_dir = temp_dir("torn-sync");
+            let a = tier_with(&dir_a, &[(1, "{\"p\":1}")]);
+            let t = MailboxTransport::new(&sync_dir).unwrap();
+            sync_once("a", &a, &t).unwrap();
+            let before = std::fs::read(sync_dir.join("a.psyn")).unwrap();
+            // Every publish attempt tears: the old snapshot must survive.
+            a.put(2, "{\"p\":2}").unwrap();
+            failpoints().arm(SYNC_PARTIAL_WRITE, 1.0, 3).unwrap();
+            let r = sync_once("a", &a, &t).unwrap();
+            assert!(r.retries > 0, "torn publishes must be retried");
+            let after = std::fs::read(sync_dir.join("a.psyn")).unwrap();
+            assert_eq!(before, after, "a torn publish must not clobber the snapshot");
+            assert!(parse_snapshot(&after).is_ok());
+            let _ = std::fs::remove_dir_all(&dir_a);
+            let _ = std::fs::remove_dir_all(&sync_dir);
+        });
+    }
+
+    #[test]
+    fn dropped_connections_retry_then_skip_the_peer() {
+        with_failpoints(|| {
+            let dir_a = temp_dir("drop-a");
+            let dir_b = temp_dir("drop-b");
+            let a = tier_with(&dir_a, &[(1, "{\"p\":1}")]);
+            let b = tier_with(&dir_b, &[]);
+            let mut t = InProcessTransport::new();
+            t.register("a", a.clone());
+            t.register("b", b.clone());
+            failpoints().arm(SYNC_CONN_DROP, 1.0, 5).unwrap();
+            let r = sync_once("b", &b, &t).unwrap();
+            assert_eq!(r.peers_skipped, 1, "unreachable peer is skipped, not fatal");
+            assert!(r.retries > 0);
+            assert_eq!(b.live_index().len(), 0);
+            let _ = std::fs::remove_dir_all(&dir_a);
+            let _ = std::fs::remove_dir_all(&dir_b);
+        });
+    }
+}

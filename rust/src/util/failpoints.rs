@@ -35,11 +35,28 @@ pub const DISK_WRITE_ERR: &str = "disk.write_err";
 /// Sleep [`SLOW_ROUND_SLEEP_MS`](crate::service::executor::SLOW_ROUND_SLEEP_MS)
 /// inside a worker's search round (exercises deadlines).
 pub const SEARCH_SLOW_ROUND: &str = "search.slow_round";
+/// Corrupt a pulled sync frame in flight (anti-entropy, DESIGN.md §15):
+/// the frame must be quarantined, never applied and never fatal.
+pub const SYNC_FRAME_CORRUPT: &str = "sync.frame_corrupt";
+/// Drop the connection to a sync peer mid-pull: the round retries with
+/// capped deterministic backoff, then skips the peer.
+pub const SYNC_CONN_DROP: &str = "sync.conn_drop";
+/// Tear a sync snapshot publish partway through the write: the atomic
+/// tmp+rename publish must leave the previous snapshot serving.
+pub const SYNC_PARTIAL_WRITE: &str = "sync.partial_write";
 
 /// Every failpoint the codebase defines. `arm_spec` rejects names
 /// outside this list so a typo in `PALLAS_FAILPOINTS` fails loudly
 /// instead of silently arming nothing.
-pub const ALL: &[&str] = &[WORKER_PANIC, DISK_READ_ERR, DISK_WRITE_ERR, SEARCH_SLOW_ROUND];
+pub const ALL: &[&str] = &[
+    WORKER_PANIC,
+    DISK_READ_ERR,
+    DISK_WRITE_ERR,
+    SEARCH_SLOW_ROUND,
+    SYNC_FRAME_CORRUPT,
+    SYNC_CONN_DROP,
+    SYNC_PARTIAL_WRITE,
+];
 
 struct Armed {
     prob: f64,

@@ -1,0 +1,255 @@
+//! Convergence acceptance for the replica anti-entropy protocol
+//! (DESIGN.md §15): N in-process replicas seeded with disjoint and
+//! overlapping plan sets, synced in randomized interleavings — with and
+//! without failpoint storms — must all reach **byte-identical**
+//! canonical `plans.plog` files, with zero plans lost and zero
+//! corrupted frames applied. Storms replay byte-identically: re-arming
+//! the same failpoint seeds over the same schedule reproduces every
+//! round report and every final log byte.
+//!
+//! Like tests/chaos_service.rs, every test arms the PROCESS-GLOBAL
+//! failpoint registry, so the suite serializes on one mutex and
+//! disarms around each body.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use automap::service::persist::DiskTier;
+use automap::service::sync::{sync_once, InProcessTransport, SyncReport};
+use automap::util::failpoints::{
+    failpoints, SYNC_CONN_DROP, SYNC_FRAME_CORRUPT, SYNC_PARTIAL_WRITE,
+};
+use automap::util::rng::Rng;
+
+static FP_LOCK: Mutex<()> = Mutex::new(());
+
+struct Disarm;
+
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        failpoints().disarm_all();
+    }
+}
+
+fn with_failpoints<T>(body: impl FnOnce() -> T) -> T {
+    let _guard = FP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    failpoints().disarm_all();
+    let _disarm = Disarm;
+    body()
+}
+
+const N: usize = 4;
+
+fn temp_dir(tag: &str, i: usize) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("automap-syncconv-{}-{tag}-{i}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Deterministic plan body for a fingerprint (what a deterministic
+/// search would have produced identically on every replica).
+fn plan_for(fp: u64) -> String {
+    format!("{{\"plan\":{fp},\"cost\":{}}}", fp % 97)
+}
+
+/// A seeded fleet: every fingerprint lands on a random nonempty subset
+/// of replicas (some disjoint, some overlapping, identical bodies), plus
+/// two deliberate same-fingerprint conflicts whose bodies differ across
+/// replicas — the symmetric tie-break must pick ONE winner everywhere.
+struct Fleet {
+    dirs: Vec<PathBuf>,
+    tiers: Vec<Arc<DiskTier>>,
+    transport: InProcessTransport,
+    /// fp → every body some replica originally wrote for it. The
+    /// converged value must be drawn from this set (nothing invented,
+    /// nothing corrupted-but-applied) — and for conflicts, be its min.
+    expected: BTreeMap<u64, Vec<String>>,
+}
+
+fn build_fleet(tag: &str, seed: u64) -> Fleet {
+    let mut rng = Rng::new(seed);
+    let dirs: Vec<PathBuf> = (0..N).map(|i| temp_dir(tag, i)).collect();
+    let tiers: Vec<Arc<DiskTier>> =
+        dirs.iter().map(|d| Arc::new(DiskTier::open(d).unwrap())).collect();
+    let mut expected: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+    for k in 0..24u64 {
+        // Spread fingerprints across digest buckets (top byte varies).
+        let fp = (rng.next_u64() | 1).rotate_left((k * 11 % 64) as u32);
+        let subset = (rng.next_u64() % ((1 << N) - 1)) + 1; // nonempty
+        let body = plan_for(fp);
+        for (i, tier) in tiers.iter().enumerate() {
+            if subset & (1 << i) != 0 {
+                tier.put(fp, &body).unwrap();
+            }
+        }
+        expected.insert(fp, vec![body]);
+    }
+    for (c, fp) in [(0u8, 0xC0FFEE01u64), (1, 0xC0FFEE02)] {
+        let body_a = format!("{{\"conflict\":\"a{c}\"}}");
+        let body_b = format!("{{\"conflict\":\"b{c}\"}}");
+        tiers[c as usize].put(fp, &body_a).unwrap();
+        tiers[(c as usize + 1) % N].put(fp, &body_b).unwrap();
+        expected.insert(fp, vec![body_a, body_b]);
+    }
+    let mut transport = InProcessTransport::new();
+    for (i, tier) in tiers.iter().enumerate() {
+        transport.register(&format!("r{i}"), tier.clone());
+    }
+    Fleet { dirs, tiers, transport, expected }
+}
+
+impl Fleet {
+    fn sync(&self, i: usize) -> SyncReport {
+        sync_once(&format!("r{i}"), &self.tiers[i], &self.transport).unwrap()
+    }
+
+    fn logs(&self) -> Vec<Vec<u8>> {
+        self.tiers.iter().map(|t| std::fs::read(t.log_path()).unwrap()).collect()
+    }
+
+    fn converged(&self) -> bool {
+        let logs = self.logs();
+        logs.iter().all(|l| l == &logs[0])
+    }
+
+    /// Every expected fingerprint present on every replica, every body
+    /// drawn from what was originally written (zero lost, zero
+    /// invented), conflicts resolved to the lexicographic minimum.
+    fn assert_full_union(&self) {
+        for tier in &self.tiers {
+            for (fp, bodies) in &self.expected {
+                let got = tier.get(*fp).unwrap_or_else(|| {
+                    panic!("fp {fp:016x} lost on a replica (expected one of {bodies:?})")
+                });
+                assert!(
+                    bodies.contains(&got),
+                    "fp {fp:016x}: body {got:?} was never written by any replica"
+                );
+                if bodies.len() > 1 {
+                    let min = bodies.iter().min().unwrap();
+                    assert_eq!(&got, min, "fp {fp:016x}: conflict must resolve to the minimum");
+                }
+            }
+            assert_eq!(
+                tier.live_index().len(),
+                self.expected.len(),
+                "no extra fingerprints may appear"
+            );
+        }
+    }
+
+    fn cleanup(self) {
+        for d in &self.dirs {
+            let _ = std::fs::remove_dir_all(d);
+        }
+    }
+}
+
+/// Fault-free property: ANY random interleaving of sync calls reaches
+/// byte-identical logs on all replicas once every replica has synced at
+/// least once after the last change — and holds the full union.
+#[test]
+fn random_interleavings_converge_to_byte_identical_logs() {
+    with_failpoints(|| {
+        for trial in 0..3u64 {
+            let fleet = build_fleet(&format!("clean{trial}"), 1000 + trial);
+            let mut rng = Rng::new(42 + trial);
+            for _ in 0..12 {
+                fleet.sync((rng.next_u64() % N as u64) as usize);
+            }
+            // A final ordered pass: each replica pulls the settled union.
+            for i in 0..N {
+                fleet.sync(i);
+            }
+            assert!(fleet.converged(), "trial {trial}: logs differ after settling pass");
+            fleet.assert_full_union();
+            // Convergence is stable: another round changes nothing.
+            for i in 0..N {
+                let r = fleet.sync(i);
+                assert!(!r.changed, "trial {trial}: converged fleet must be a fixpoint");
+                assert_eq!(r.records_pulled, 0);
+            }
+            assert!(fleet.converged());
+            fleet.cleanup();
+        }
+    });
+}
+
+/// Storm schedule for the chaos trials: a fixed pseudo-random pick
+/// sequence, so the only nondeterminism candidate is the failpoints —
+/// which are seeded. Returns the per-step reports for replay pinning.
+fn run_storm(fleet: &Fleet, schedule_seed: u64, steps: usize) -> Vec<SyncReport> {
+    let mut rng = Rng::new(schedule_seed);
+    (0..steps).map(|_| fleet.sync((rng.next_u64() % N as u64) as usize)).collect()
+}
+
+/// Under a storm of corrupt frames, dropped connections, and torn
+/// snapshot publishes: no round is fatal, corrupt frames are quarantined
+/// and never applied, and once the faults lift the fleet still converges
+/// byte-identically with zero plans lost.
+#[test]
+fn failpoint_storms_never_corrupt_and_still_converge() {
+    with_failpoints(|| {
+        let fleet = build_fleet("storm", 77);
+        failpoints().arm(SYNC_FRAME_CORRUPT, 0.3, 101).unwrap();
+        failpoints().arm(SYNC_CONN_DROP, 0.2, 102).unwrap();
+        failpoints().arm(SYNC_PARTIAL_WRITE, 0.2, 103).unwrap();
+        let reports = run_storm(&fleet, 9, 20);
+        let quarantined: u64 = reports.iter().map(|r| r.frames_quarantined).sum();
+        let retries: u64 = reports.iter().map(|r| r.retries).sum();
+        assert!(quarantined > 0, "a 30% corrupt-frame storm must quarantine something");
+        assert!(retries > 0, "drops and torn publishes must drive retries");
+        // Mid-storm invariant: nothing corrupted-but-applied, ever.
+        for tier in &fleet.tiers {
+            for (fp, _) in tier.live_index() {
+                let got = tier.get(fp).expect("live entry readable");
+                let bodies = fleet.expected.get(&fp).unwrap_or_else(|| {
+                    panic!("fp {fp:016x} appeared out of nowhere mid-storm")
+                });
+                assert!(bodies.contains(&got), "fp {fp:016x}: corrupted frame applied");
+            }
+        }
+        // Faults lift: the fleet settles to the exact union.
+        failpoints().disarm_all();
+        for i in 0..N {
+            fleet.sync(i);
+        }
+        assert!(fleet.converged(), "post-storm settling pass must converge");
+        fleet.assert_full_union();
+        fleet.cleanup();
+    });
+}
+
+/// The determinism contract: the same fleet seed, the same schedule
+/// seed, and the same failpoint seeds replay the storm byte-identically
+/// — every per-round report and every final log byte matches.
+#[test]
+fn storms_replay_byte_identically() {
+    with_failpoints(|| {
+        let run = |tag: &str| {
+            // Re-arming resets each failpoint's serial draw counter, so
+            // both runs start from the identical schedule state.
+            failpoints().disarm_all();
+            failpoints().arm(SYNC_FRAME_CORRUPT, 0.25, 11).unwrap();
+            failpoints().arm(SYNC_CONN_DROP, 0.15, 12).unwrap();
+            failpoints().arm(SYNC_PARTIAL_WRITE, 0.15, 13).unwrap();
+            let fleet = build_fleet(tag, 5);
+            let reports = run_storm(&fleet, 31, 16);
+            failpoints().disarm_all();
+            for i in 0..N {
+                fleet.sync(i);
+            }
+            let logs = fleet.logs();
+            assert!(fleet.converged());
+            fleet.assert_full_union();
+            fleet.cleanup();
+            (reports, logs)
+        };
+        let (reports1, logs1) = run("replay1");
+        let (reports2, logs2) = run("replay2");
+        assert_eq!(reports1, reports2, "same seeds ⇒ same per-round reports");
+        assert_eq!(logs1, logs2, "same seeds ⇒ same final log bytes");
+    });
+}
